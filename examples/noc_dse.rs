@@ -1,0 +1,52 @@
+//! E4 — NoC topology design-space exploration demo (paper Sec. III).
+//!
+//! Runs the four exploration methods over the same candidate space and
+//! shows (a) they agree on the analytic optimum, (b) what the
+//! simulation-in-the-loop refinement adds, (c) the Pareto front the
+//! toolchain reports for cost/performance trade-offs.
+//!
+//! Run: `cargo run --release --example noc_dse`
+
+use std::time::Instant;
+
+use archytas::dse::{explore, ExploreConfig, ExploreMethod};
+use archytas::Result;
+
+fn main() -> Result<()> {
+    for nodes in [16usize, 32, 64] {
+        let cfg = ExploreConfig { min_nodes: nodes, max_area: 40.0, ..Default::default() };
+        println!("== DSE for >= {nodes} compute nodes ==");
+        for (name, method) in [
+            ("exhaustive", ExploreMethod::Exhaustive),
+            ("milp", ExploreMethod::Milp),
+            ("smt", ExploreMethod::Smt),
+            ("iterative-sim", ExploreMethod::IterativeSim),
+        ] {
+            let t0 = Instant::now();
+            let r = explore(&cfg, method)?;
+            let best = &r.candidates[r.best];
+            println!(
+                "  {name:<14} -> {:<12} est-lat {:>7.1}{}  area {:>6.1} mm²  [{} solver evals, {} sims, {:.1} ms]",
+                best.name,
+                best.est_latency,
+                best.sim_latency
+                    .map_or(String::new(), |l| format!(" (sim {l:.1})")),
+                best.area,
+                r.solver_evals,
+                r.sim_evals,
+                t0.elapsed().as_secs_f64() * 1e3,
+            );
+        }
+        let r = explore(&cfg, ExploreMethod::Exhaustive)?;
+        println!("  pareto front (est-lat, area, pJ/KiB):");
+        for &i in &r.front {
+            let c = &r.candidates[i];
+            println!(
+                "    {:<12} {:>8.1} {:>8.1} {:>8.0}",
+                c.name, c.est_latency, c.area, c.energy_per_kib
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

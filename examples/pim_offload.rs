@@ -1,0 +1,66 @@
+//! E3 — Processing-In-Memory offload study (paper Sec. IV).
+//!
+//! GEMV with DRAM-resident weights, two ways:
+//! * **fetch-to-core**: stream the whole weight matrix over the DRAM bus
+//!   and MAC on a core (the Von Neumann baseline of paper Sec. II);
+//! * **PIM**: issue bank-level MAC commands, moving only the result.
+//!
+//! Sweeps the footprint and prints the energy/latency ratios — the
+//! "bring the computation to the data" claim, quantified on the
+//! JEDEC-timing DRAM model.
+//!
+//! Run: `cargo run --release --example pim_offload`
+
+use archytas::dram::{DramKind, DramSim, DramTiming, PimCommand, Request};
+use archytas::Result;
+
+fn run_pair(kind: DramKind, mb: usize) -> Result<(f64, f64, f64, f64)> {
+    let t = DramTiming::new(kind);
+    let bytes = mb * 1024 * 1024;
+    // fetch-to-core: stream all weights
+    let mut fetch = DramSim::new(t);
+    for i in 0..(bytes / t.row_bytes) {
+        fetch.enqueue(Request::read((i * t.row_bytes) as u64, t.row_bytes));
+    }
+    let fs = fetch.run_to_drain();
+    // PIM: one MAC per 4 weight bytes, spread over banks
+    let mut pim = DramSim::new(t);
+    let macs = (bytes / 4) as u64 / t.banks as u64;
+    for b in 0..t.banks {
+        pim.enqueue(Request::pim((b * t.row_bytes) as u64, PimCommand::BankMac { macs }));
+    }
+    let ps = pim.run_to_drain();
+    Ok((
+        fs.cycles as f64,
+        ps.cycles as f64,
+        fs.metrics.total_energy_pj(),
+        ps.metrics.total_energy_pj(),
+    ))
+}
+
+fn main() -> Result<()> {
+    for kind in [DramKind::Ddr4_2400, DramKind::Lpddr4_3200, DramKind::Hbm2] {
+        println!("== {kind:?}: GEMV weight streaming vs in-bank PIM ==");
+        println!(
+            "  {:>6} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8}",
+            "MiB", "fetch cyc", "pim cyc", "speedup", "fetch nJ", "pim nJ", "saving"
+        );
+        for mb in [1usize, 4, 16, 64] {
+            let (fc, pc, fe, pe) = run_pair(kind, mb)?;
+            println!(
+                "  {:>6} {:>12.0} {:>12.0} {:>7.1}x {:>12.0} {:>12.0} {:>7.1}x",
+                mb,
+                fc,
+                pc,
+                fc / pc,
+                fe / 1e3,
+                pe / 1e3,
+                fe / pe
+            );
+            assert!(pe < fe, "PIM must win on energy for memory-bound GEMV");
+        }
+        println!();
+    }
+    println!("E3 PIM offload: OK (PIM wins energy at every footprint)");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! E6 — TAFFO-style precision tuning demo (paper Sec. V.C, Fig. 2).
+//!
+//! Sweeps the output-error budget and reports, per workload, how far the
+//! tuner narrows the graph, the *measured* error of the fixed-point
+//! simulation, and the estimated speedup / energy ratio on the NPU model.
+//!
+//! Run: `cargo run --release --example precision_tuning`
+
+use archytas::compiler::precision::{analyze_ranges, tune, Interval, TunerConfig};
+use archytas::ir::interp::Mat;
+use archytas::{workloads, Result};
+
+fn main() -> Result<()> {
+    let models: Vec<(&str, archytas::ir::Graph)> = vec![
+        ("mlp-256", workloads::mlp(8, 256, &[128, 64], 10, 0)?),
+        ("vit-tiny", workloads::vit(&workloads::VitParams::default(), 0)?),
+    ];
+    for (name, g) in models {
+        let shape = g.nodes[0].shape;
+        let mut rng = archytas::sim::Rng::new(42);
+        let calib = Mat::new(
+            shape,
+            (0..shape[0] * shape[1]).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+        )
+        .unwrap();
+        // Show the range analysis first (the hint-driven VRA stage).
+        let ranges = analyze_ranges(&g, &[Interval::new(-4.0, 4.0)])?;
+        let widest = ranges
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.max_abs().partial_cmp(&b.1.max_abs()).unwrap())
+            .unwrap();
+        println!("== {name}: {} nodes, widest range at node {} ({}) = [{:.1}, {:.1}] ==",
+            g.len(), widest.0, g.nodes[widest.0].name, widest.1.lo, widest.1.hi);
+        println!(
+            "  {:>8} {:>10} {:>10} {:>9} {:>10} {:>8}",
+            "budget", "narrowed", "meas-err", "speedup", "energy", "<=8bit"
+        );
+        for budget in [0.001f32, 0.01, 0.05, 0.2] {
+            let cfg = TunerConfig {
+                input_hints: vec![Interval::new(-4.0, 4.0)],
+                error_budget: budget,
+                words: vec![8, 16, 32],
+            };
+            let rep = tune(&g, &calib, &cfg)?;
+            let narrow8 = rep
+                .formats
+                .iter()
+                .flatten()
+                .filter(|f| f.word_bits() <= 8)
+                .count();
+            println!(
+                "  {:>8.3} {:>10} {:>10.4} {:>8.2}x {:>9.2}x {:>8}",
+                budget,
+                rep.narrowed,
+                rep.measured_rel_err,
+                rep.est_speedup,
+                rep.est_energy_ratio,
+                narrow8,
+            );
+            assert!(rep.measured_rel_err <= budget + 1e-6);
+        }
+        println!();
+    }
+    println!("E6 precision tuning: OK (all budgets honoured)");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//! 1. Execute an AOT-compiled JAX artifact through PJRT from Rust
+//!    (functional path — bit-compatible with the Python reference).
+//! 2. Build a heterogeneous fabric, compile an MLP onto it, and
+//!    co-simulate latency/energy (timing path).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts` once beforehand).
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::config::FabricConfig;
+use archytas::coordinator::cosim;
+use archytas::fabric::Fabric;
+use archytas::runtime::{Runtime, Tensor};
+use archytas::{workloads, Result};
+
+fn main() -> Result<()> {
+    // --- functional: run a JAX-lowered GEMM via PJRT --------------------
+    let rt = Runtime::open_default()?;
+    let mut rng = archytas::sim::Rng::new(7);
+    let x = Tensor::random(vec![64, 64], &mut rng);
+    let w = Tensor::random(vec![64, 64], &mut rng);
+    let y = rt.run("gemm_64", &[x, w])?;
+    println!("PJRT gemm_64: out shape {:?}, out[0][0..4] = {:?}",
+        y[0].dims(), &y[0].data()[..4]);
+
+    // And the whole ViT-tiny model, checked against its golden output.
+    let inputs = rt.registry().golden_inputs("vit_digital")?;
+    let want = rt.registry().golden_outputs("vit_digital")?;
+    let got = rt.run("vit_digital", &inputs)?;
+    println!(
+        "PJRT vit_digital: max|Δ| vs python golden = {:.2e}",
+        got[0].max_abs_diff(&want[0])?
+    );
+
+    // --- timing: compile + map + co-simulate an MLP on a fabric ---------
+    let cfg = FabricConfig::from_toml(&std::fs::read_to_string(
+        archytas::repo_root().join("configs/edge16.toml"),
+    )?)?;
+    let fabric = Fabric::build(cfg)?;
+    let g = workloads::mlp(8, 256, &[128, 64], 10, 0)?;
+    let mapping = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8)?;
+    let prog = lower(&g, &fabric, &mapping)?;
+    let rep = cosim(&fabric, &prog)?;
+    println!(
+        "co-sim mlp on {} ({} tiles, {:.1} mm²): {} cycles ({:.2} us), {:.1} nJ, util {:.0}%",
+        fabric.cfg.name,
+        fabric.tile_count(),
+        fabric.total_area().mm2,
+        rep.cycles,
+        rep.cycles as f64 / (fabric.cfg.freq_ghz * 1e9) * 1e6,
+        rep.metrics.total_energy_pj() / 1e3,
+        rep.mean_utilization() * 100.0
+    );
+    Ok(())
+}

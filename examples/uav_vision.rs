@@ -1,0 +1,162 @@
+//! E8 — the end-to-end driver (paper Sec. I use case: UAV vision).
+//!
+//! A drone's vision pipeline classifies synthetic 16x16 frames with the
+//! ViT-tiny model. All layers of the stack compose here:
+//!
+//! * **function**  — frames are served through the dynamic batcher
+//!   (`coordinator::serve`, worker threads + leader) and executed on the
+//!   AOT-compiled PJRT artifacts (L2 JAX model + L1 Pallas kernels,
+//!   lowered once by `make artifacts`); the digital / int8-NPU / analog
+//!   backend variants are compared for output agreement.
+//! * **timing**    — the same workload's IR graph is compiled (mapped +
+//!   lowered) onto the heterogeneous edge fabric and co-simulated for
+//!   latency/energy, per precision.
+//!
+//! Run: `cargo run --release --example uav_vision`
+//! Results are recorded in EXPERIMENTS.md §E8.
+
+use std::time::Instant;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::config::FabricConfig;
+use archytas::coordinator::serve::drive_server;
+use archytas::coordinator::{cosim, BatchServer};
+use archytas::fabric::Fabric;
+use archytas::runtime::{Runtime, Tensor};
+use archytas::{workloads, Result};
+
+const FRAME: usize = 16 * 16 * 3;
+const CLASSES: usize = 10;
+
+fn main() -> Result<()> {
+    let rt = Runtime::open_default()?;
+
+    // ------------------------------------------------------------------
+    // 1. Functional serving: batched inference over the PJRT artifacts.
+    // ------------------------------------------------------------------
+    println!("== UAV vision: batched serving over PJRT artifacts ==");
+    let spec = rt.registry().spec("vit_digital")?;
+    let batch = spec.inputs[0].dims[0]; // 4
+    let mut per_variant: Vec<(String, Vec<Vec<f32>>, f64, f64)> = Vec::new();
+    for variant in ["vit_digital", "vit_npu_int8", "vit_analog"] {
+        let exe = rt.executable(variant)?;
+        let server = BatchServer::new(FRAME, CLASSES, batch);
+        let t0 = Instant::now();
+        let (stats, outs) = drive_server(
+            &server,
+            4,  // camera threads
+            24, // frames each
+            |cam, idx| {
+                // deterministic synthetic frame
+                let mut rng = archytas::sim::Rng::new((cam * 7919 + idx) as u64);
+                (0..FRAME).map(|_| rng.normal() as f32).collect()
+            },
+            move |input| {
+                // reshape the (batch, 768) batch into the artifact's
+                // (batch, 16, 16, 3) frame tensor
+                let img = input.clone().reshape(vec![4, 16, 16, 3])?;
+                Ok(exe.run(&[img])?.remove(0))
+            },
+        )?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  {variant:<14} {:>4} frames  {:>3} batches (mean {:.2})  p50 {:>6.0} us  p99 {:>6.0} us  {:>7.0} fps",
+            stats.requests,
+            stats.batches,
+            stats.mean_batch(),
+            stats.p50_latency_us(),
+            stats.p99_latency_us(),
+            stats.throughput_rps(wall),
+        );
+        per_variant.push((
+            variant.to_string(),
+            outs,
+            stats.p50_latency_us(),
+            stats.throughput_rps(wall),
+        ));
+    }
+
+    // Cross-variant agreement: quantized/analog backends must track the
+    // f32 reference on argmax decisions (paper Sec. V.B claim).
+    let argmax = |row: &[f32]| -> usize {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    let reference: Vec<usize> = per_variant[0].1.iter().map(|r| argmax(r)).collect();
+    for (name, outs, _, _) in per_variant.iter().skip(1) {
+        let agree = outs
+            .iter()
+            .zip(&reference)
+            .filter(|(r, &c)| argmax(r) == c)
+            .count();
+        let pct = 100.0 * agree as f64 / reference.len() as f64;
+        println!("  top-1 agreement {name} vs digital: {agree}/{} ({pct:.0}%)", reference.len());
+        assert!(pct >= 75.0, "{name} diverged from the f32 reference");
+    }
+
+    // Bit-exactness vs the Python golden outputs (cross-language check).
+    let gold_in = rt.registry().golden_inputs("vit_digital")?;
+    let gold_out = rt.registry().golden_outputs("vit_digital")?;
+    let got = rt.run("vit_digital", &gold_in)?;
+    let delta = got[0].max_abs_diff(&gold_out[0])?;
+    println!("  golden check (rust PJRT vs python jax): max|Δ| = {delta:.2e}");
+    assert!(delta < 1e-4);
+
+    // ------------------------------------------------------------------
+    // 2. Timing co-simulation on the heterogeneous edge fabric.
+    // ------------------------------------------------------------------
+    println!("\n== UAV vision: fabric co-simulation (ViT-tiny, batch 4) ==");
+    let cfg = FabricConfig::from_toml(&std::fs::read_to_string(
+        archytas::repo_root().join("configs/edge16.toml"),
+    )?)?;
+    let fabric = Fabric::build(cfg)?;
+    let g = workloads::vit(&workloads::VitParams::default(), 0)?;
+    println!(
+        "  fabric {}: {} tiles, {:.1} mm²; model: {} nodes, {:.1} MMACs",
+        fabric.cfg.name,
+        fabric.tile_count(),
+        fabric.total_area().mm2,
+        g.len(),
+        g.total_macs() as f64 / 1e6
+    );
+    println!(
+        "  {:<10} {:>12} {:>10} {:>12} {:>8}",
+        "precision", "cycles", "us", "energy nJ", "util %"
+    );
+    for (name, p) in [
+        ("f32", Precision::F32),
+        ("int8", Precision::Int8),
+        ("analog", Precision::Analog),
+    ] {
+        let mapping = map_graph(&g, &fabric, MapStrategy::Greedy, p)?;
+        let prog = lower(&g, &fabric, &mapping)?;
+        let rep = cosim(&fabric, &prog)?;
+        println!(
+            "  {:<10} {:>12} {:>10.2} {:>12.1} {:>8.0}",
+            name,
+            rep.cycles,
+            rep.cycles as f64 / (fabric.cfg.freq_ghz * 1e9) * 1e6,
+            rep.metrics.total_energy_pj() / 1e3,
+            rep.mean_utilization() * 100.0
+        );
+    }
+
+    // Sanity tie between the halves: a PJRT forward really ran and the
+    // co-sim really scheduled every layer.
+    let mapping = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8)?;
+    let prog = lower(&g, &fabric, &mapping)?;
+    assert_eq!(prog.exec_steps(), (0..g.len())
+        .filter(|&id| archytas::compiler::mapper::node_compute(&g, id).is_some())
+        .count());
+    println!("\nE8 end-to-end: OK");
+    Ok(())
+}
+
+// Tensor reshape helper is on archytas::runtime::Tensor (used above).
+#[allow(unused)]
+fn _t(_: &Tensor) {}

@@ -1,0 +1,222 @@
+"""AOT compilation: lower every L2/L1 entry point to HLO text artifacts.
+
+This is the *only* place Python touches the deployment flow. `make
+artifacts` runs it once; afterwards the Rust coordinator is self-contained:
+it loads ``artifacts/*.hlo.txt`` through PJRT (rust/src/runtime/) and never
+imports Python.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+For every artifact we also emit golden input/output binaries (raw
+little-endian f32) so the Rust test-suite can assert bit-compatible
+numerics without a Python runtime, plus a mini-TOML manifest the Rust
+artifact registry parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import blocksparse, crossbar, qmatmul, ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    elides big literals as ``constant({...})``, which the downstream text
+    parser silently reads as *zeros* — every baked weight would be lost.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def _fmt_shape(arr) -> str:
+    dt = {"float32": "f32", "int32": "s32", "int8": "s8"}[str(arr.dtype)]
+    return f"{dt}[{','.join(str(d) for d in arr.shape)}]"
+
+
+def hlo_op_census(text: str) -> dict:
+    """Count HLO opcodes — the L2 perf gate (DESIGN.md §7) checks that each
+    model variant contains exactly the expected number of dots (no
+    recompute duplication)."""
+    census: dict = {}
+    for mm in re.finditer(r"=\s+[a-z0-9]+\[[^\]]*\][^\s]*\s+([a-z-]+)\(", text):
+        op = mm.group(1)
+        census[op] = census.get(op, 0) + 1
+    return census
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def artifact_table():
+    """name -> (fn, [example_input_arrays]). Weights are closed over and
+    baked as HLO constants; runtime inputs are f32 only (the xla-crate
+    Literal helpers on the Rust side are f32-oriented)."""
+    arts = {}
+
+    # --- plain GEMMs: the runtime's generic functional units -------------
+    for size in (64, 128, 256):
+        def gemm(x, w):
+            return (jnp.dot(x, w, preferred_element_type=jnp.float32),)
+
+        a = _rng(10 + size).standard_normal((size, size), np.float32)
+        b = _rng(11 + size).standard_normal((size, size), np.float32)
+        arts[f"gemm_{size}"] = (gemm, [a, b])
+
+    # --- L1 kernel artifacts (fixed shapes, baked weights) ---------------
+    wk = _rng(42).standard_normal((256, 128), np.float32)
+
+    wq_i8, ws = ref.quantize_int8(jnp.asarray(wk), axis=0)
+    ws_row = np.asarray(ws).reshape(1, -1)
+
+    def qmm(x):
+        return (qmatmul.qmatmul_dynamic(x, wq_i8, jnp.asarray(ws_row)),)
+
+    arts["kernel_qmatmul"] = (
+        qmm, [_rng(1).standard_normal((128, 256), np.float32)])
+
+    wq_an, _ = crossbar.program_array(jnp.asarray(wk), model.ANALOG_W_BITS)
+    lsb = crossbar.default_adc_lsb(
+        wq_an, model.ANALOG_X_ABSMAX, model.ANALOG_TILE_K,
+        model.ANALOG_ADC_BITS)
+    nt = 256 // model.ANALOG_TILE_K
+
+    def xbar(x, noise):
+        return (crossbar.crossbar_mvm(
+            x, wq_an, noise, jnp.full((1, 1), lsb, jnp.float32),
+            adc_bits=model.ANALOG_ADC_BITS, tile_k=model.ANALOG_TILE_K),)
+
+    arts["kernel_crossbar"] = (
+        xbar,
+        [_rng(2).standard_normal((128, 256), np.float32),
+         np.zeros((nt, 128, 128), np.float32)])
+
+    wsp = _rng(43).standard_normal((256, 128), np.float32)
+    # Make half the K-blocks per column tiny so 50% block-density is real.
+    wsp[::2, :] *= 1e-3
+    idx, vals = blocksparse.encode_blocksparse(
+        wsp, block_k=32, block_n=32, keep_density=0.5)
+
+    def bsp(x):
+        return (blocksparse.blocksparse_matmul(
+            x, idx, vals, block_k=32, block_n=32),)
+
+    arts["kernel_blocksparse"] = (
+        bsp, [_rng(3).standard_normal((128, 256), np.float32)])
+
+    # --- L2 model artifacts ----------------------------------------------
+    vit_cfg = model.ViTConfig()
+    x_img = _rng(4).standard_normal((4, 16, 16, 3), np.float32)
+    for kind in ("digital", "npu_int8", "analog"):
+        arts[f"vit_{kind}"] = (model.make_vit_fn(kind, vit_cfg), [x_img])
+
+    mlp_cfg = model.MlpConfig()
+    x_mlp = _rng(5).standard_normal((8, 256), np.float32)
+    for kind in ("digital", "npu_int8"):
+        arts[f"mlp_{kind}"] = (model.make_mlp_fn(kind, mlp_cfg), [x_mlp])
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def build(out_dir: str, stats: bool = False, only=None) -> None:
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+    manifest_lines = [
+        "# Auto-generated by python/compile/aot.py -- do not edit.", ""]
+    census_report = []
+
+    for name, (fn, inputs) in sorted(artifact_table().items()):
+        if only and name not in only:
+            continue
+        specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+
+        # Golden run (same jitted computation the HLO was lowered from).
+        outs = jax.jit(fn)(*[jnp.asarray(a) for a in inputs])
+        in_names, out_names = [], []
+        for i, a in enumerate(inputs):
+            p = f"golden/{name}.in{i}.bin"
+            np.asarray(a, dtype=a.dtype).tofile(os.path.join(out_dir, p))
+            in_names.append(p)
+        for i, o in enumerate(outs):
+            p = f"golden/{name}.out{i}.bin"
+            np.asarray(o).astype(np.float32).tofile(os.path.join(out_dir, p))
+            out_names.append(p)
+
+        manifest_lines += [
+            "[[artifact]]",
+            f'name = "{name}"',
+            f'hlo = "{name}.hlo.txt"',
+            "inputs = [" + ", ".join(f'"{_fmt_shape(a)}"' for a in inputs) + "]",
+            "outputs = [" + ", ".join(
+                f'"{_fmt_shape(np.asarray(o))}"' for o in outs) + "]",
+            "golden_in = [" + ", ".join(f'"{p}"' for p in in_names) + "]",
+            "golden_out = [" + ", ".join(f'"{p}"' for p in out_names) + "]",
+            "",
+        ]
+        census = hlo_op_census(text)
+        census_report.append((name, census))
+        dots = census.get("dot", 0)
+        print(f"  {name:24s} {len(text):>9d} chars  dot={dots}")
+
+    with open(os.path.join(out_dir, "manifest.toml"), "w") as f:
+        f.write("\n".join(manifest_lines))
+
+    if stats:
+        stats_path = os.path.join(out_dir, "hlo_stats.txt")
+        with open(stats_path, "w") as f:
+            for name, census in census_report:
+                f.write(f"[{name}]\n")
+                for op, cnt in sorted(census.items(), key=lambda kv: -kv[1]):
+                    f.write(f"  {op:24s} {cnt}\n")
+        print(f"wrote {stats_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--stats", action="store_true",
+                    help="also write an HLO opcode census")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="restrict to the named artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    build(args.out, stats=args.stats, only=args.only)
+    print(f"artifacts written to {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Block-ELL sparse matmul Pallas kernel (structured-sparsity path).
+
+Implements the structured (block-wise) sparsification of ARCHYTAS Sec. V.B
+("Pruning and sparsification for digital and analogue devices") and the
+Sec. III microarchitectural support for "tensor sparsification to maximize
+the utilization of compute units": the weight matrix is stored block-
+compressed so a sparse-capable CU only fetches and multiplies surviving
+blocks — data movement scales with density, which is exactly the PIM/NoC
+win the paper targets.
+
+Format (block-ELL): for each output block-column ``j`` a fixed number
+``ELL`` of slots; ``idx[j,e]`` is the contributing K-block-row (or -1 for
+padding) and ``vals[j,e]`` its dense (bk, bn) payload. Fixed ELL keeps the
+schedule static — the shape a systolic/MXU pipeline (and a crossbar
+macro) needs.
+
+TPU mapping: the kernel's inner loop issues one MXU-tile MAC per surviving
+block; padding slots multiply by a zero mask instead of branching, which
+is how a TPU (no divergent control flow) realises "skipping".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, vals_ref, o_ref, *, ell: int, block_k: int):
+    """Grid = (M/BM, N/bn). x block = full K row-panel; vals block = this
+    output column's ELL payloads."""
+    acc = jnp.zeros_like(o_ref)
+    for e in range(ell):  # static unroll: ELL is a compile-time constant
+        kb = idx_ref[0, e]
+        valid = kb >= 0
+        safe_kb = jnp.where(valid, kb, 0)
+        xs = pl.load(x_ref, (slice(None), pl.ds(safe_kb * block_k, block_k)))
+        prod = jnp.dot(xs, vals_ref[0, e],
+                       preferred_element_type=jnp.float32)
+        acc += jnp.where(valid, prod, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n", "bm"))
+def blocksparse_matmul(x, idx, vals, *, block_k=32, block_n=32, bm=128):
+    """out[M, NB*bn] = x[M,K] @ W where W is block-ELL encoded.
+
+    x: f32[M,K] (K multiple of block_k); idx: int32[NB, ELL];
+    vals: f32[NB, ELL, block_k, block_n].
+    """
+    m, k = x.shape
+    nb, ell = idx.shape
+    assert k % block_k == 0
+    assert vals.shape == (nb, ell, block_k, block_n), vals.shape
+    bm_ = min(bm, m)
+    pad_m = (-m) % bm_
+    xp = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mp = m + pad_m
+    n = nb * block_n
+    grid = (mp // bm_, nb)
+    out = pl.pallas_call(
+        functools.partial(_kernel, ell=ell, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, ell), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, ell, block_k, block_n), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp, idx, vals)
+    return out[:m]
+
+
+def encode_blocksparse(w, *, block_k=32, block_n=32, keep_density=None,
+                       threshold=None):
+    """Encode a dense K x N weight matrix into block-ELL form.
+
+    Blocks are ranked by Frobenius norm per output block-column; either the
+    top ``keep_density`` fraction (rounded up, >= 1) or all blocks above
+    ``threshold`` survive. ELL = max surviving blocks over columns (>= 1).
+    Returns (idx int32[NB, ELL], vals f32[NB, ELL, bk, bn]).
+    """
+    w = np.asarray(w, np.float32)
+    k, n = w.shape
+    assert k % block_k == 0 and n % block_n == 0, (w.shape, block_k, block_n)
+    kb, nb = k // block_k, n // block_n
+    # norms[j][kb] per output block-column
+    blocks = w.reshape(kb, block_k, nb, block_n).transpose(2, 0, 1, 3)
+    norms = np.sqrt((blocks ** 2).sum(axis=(2, 3)))  # (nb, kb)
+    keep_lists = []
+    for j in range(nb):
+        order = np.argsort(-norms[j], kind="stable")
+        if keep_density is not None:
+            cnt = max(1, int(np.ceil(keep_density * kb)))
+            keep = sorted(order[:cnt].tolist())
+        else:
+            thr = 0.0 if threshold is None else threshold
+            keep = sorted([int(i) for i in range(kb) if norms[j, i] > thr])
+        keep_lists.append(keep)
+    ell = max(1, max(len(kl) for kl in keep_lists))
+    idx = np.full((nb, ell), -1, np.int32)
+    vals = np.zeros((nb, ell, block_k, block_n), np.float32)
+    for j, kl in enumerate(keep_lists):
+        for e, kbi in enumerate(kl):
+            idx[j, e] = kbi
+            vals[j, e] = blocks[j, kbi]
+    return jnp.asarray(idx), jnp.asarray(vals)
+
+
+def density(idx):
+    """Fraction of non-padding slots (actual stored-block density)."""
+    idxn = np.asarray(idx)
+    return float((idxn >= 0).sum()) / idxn.size

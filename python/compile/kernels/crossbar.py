@@ -1,0 +1,121 @@
+"""Analog crossbar MVM Pallas kernel (NVM-PIM / photonic accelerator path).
+
+Functional model of the analog matrix-vector-multiply engines in the
+ARCHYTAS paper (Sec. II "Processing-In-Memory" with NVM, and the photonic
+"Processing-On-the-Flight" accelerator): weights live on a fixed-size
+analog array as discrete conductance (or attenuation) levels, activations
+are streamed through, and each array read-out passes through an ADC before
+digital accumulation. The three analog artefacts modelled:
+
+  1. weight quantization onto ``2**(w_bits-1)-1`` levels (done host-side
+     by ``program_array``; differential pairs give the sign),
+  2. additive Gaussian read noise per array read (shot/thermal noise;
+     pre-drawn by the caller so kernel and oracle are deterministic),
+  3. ADC quantization of every per-tile partial sum (the dominant analog
+     error + energy term; cf. ISAAC/PRIME-class designs).
+
+TPU mapping (DESIGN.md §4): one (TILE_K, BN) weight tile == one crossbar
+programming, held in VMEM; the grid's K axis sequences array reads exactly
+like the "program array, stream activations" schedule of the analog
+papers. WDM wavelength parallelism maps to the BN lane dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Crossbar array geometry: 128x128 arrays are the common NVM prototype
+# size (ISAAC, PUMA) and match the MXU tile.
+TILE_K = 128
+BM, BN = 128, 128
+
+
+def _kernel(x_ref, w_ref, noise_ref, lsb_ref, o_ref, *, nk: int, adc_bits: int):
+    """Grid = (M/BM, N/BN, K/TILE_K); one step = one analog array read."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Analog MVM on the programmed tile ...
+    partial = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    # ... corrupted by read noise ...
+    partial = partial + noise_ref[0]
+    # ... and digitized by the column ADCs before digital accumulation.
+    lsb = lsb_ref[0, 0]
+    lo = float(-(2 ** (adc_bits - 1)))
+    hi = float(2 ** (adc_bits - 1) - 1)
+    o_ref[...] += jnp.clip(jnp.round(partial / lsb), lo, hi) * lsb
+
+
+def program_array(w, w_bits: int):
+    """Host-side 'array programming': quantize dense float weights onto the
+    device's conductance levels. Returns (wq, level_scale)."""
+    return ref.quantize_levels(w, w_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "tile_k", "bm", "bn"))
+def crossbar_mvm(x, wq, noise, adc_lsb, *, adc_bits=8,
+                 tile_k=TILE_K, bm=BM, bn=BN):
+    """out[M,N] = sum_t ADC( x[:,tK] @ wq[tK,:] + noise[t] ).
+
+    x: f32[M,K]; wq: f32[K,N] level-quantized (``program_array``);
+    noise: f32[K/tile_k, M, N]; adc_lsb: f32[1,1]. M, N need not be
+    tile-aligned (zero padding is exact through dot+noise-free padding
+    lanes is avoided by padding noise with zeros too); K must be a
+    multiple of ``tile_k`` — the compiler pads weights at programming time.
+    """
+    m, k = x.shape
+    _, n = wq.shape
+    assert k % tile_k == 0, "pad K to the array height first"
+    nk = k // tile_k
+    bm_, bn_ = min(bm, m), min(bn, n)
+    pad_m = (-m) % bm_
+    pad_n = (-n) % bn_
+    xp = jnp.pad(x, ((0, pad_m), (0, 0)))
+    wp = jnp.pad(wq, ((0, 0), (0, pad_n)))
+    noisep = jnp.pad(noise, ((0, 0), (0, pad_m), (0, pad_n)))
+    mp, np_ = m + pad_m, n + pad_n
+    grid = (mp // bm_, np_ // bn_, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, adc_bits=adc_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bm_, bn_), lambda i, j, kk: (kk, i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, noisep, adc_lsb)
+    return out[:m, :n]
+
+
+def default_adc_lsb(wq, x_absmax=1.0, tile_k=TILE_K, adc_bits=8):
+    """Full-scale-calibrated ADC step: the largest partial sum a tile_k-row
+    array read can produce is ~ x_absmax * max|w| * tile_k; spread that
+    over the ADC code range. Returns a python float."""
+    wmax = float(jnp.max(jnp.abs(wq)))
+    fullscale = max(x_absmax * wmax * tile_k, 1e-12)
+    return fullscale / float(2 ** (adc_bits - 1))
+
+
+def make_noise(key, shape_mnk, sigma):
+    """Pre-draw the per-array-read Gaussian noise tensor.
+    shape_mnk = (K/tile_k, M, N); sigma in output units."""
+    return sigma * jax.random.normal(key, shape_mnk, jnp.float32)
+
+
+def vmem_bytes(bm=BM, bn=BN, tile_k=TILE_K):
+    """Analytic VMEM working set per grid step: f32 x-tile + weight tile +
+    noise tile + accumulator (DESIGN.md §7)."""
+    return 4 * (bm * tile_k + tile_k * bn + bm * bn + bm * bn + 1)

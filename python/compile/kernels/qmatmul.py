@@ -1,0 +1,120 @@
+"""INT8 quantized matmul Pallas kernel (the digital-NPU path).
+
+Models the integer MAC datapath of the digital NPU tiles in the ARCHYTAS
+Scalable Compute Fabric (paper Sec. III) and the "dynamic quantization"
+compiler technique of Sec. V.B: activations are quantized per-tensor,
+weights per-output-channel, the MAC array accumulates exactly in int32,
+and a single float rescale produces the output.
+
+TPU mapping (DESIGN.md §4): the (BM, BN) output tile is MXU-shaped; the
+grid's K axis streams (BM, BK)/(BK, BN) operand tiles through VMEM the way
+a PIM bank streams row-buffer-resident operands. ``interpret=True`` is
+mandatory on this image (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes: MXU-native 128 lanes; K tile sized so the working set
+# (BM*BK + BK*BN int8 + BM*BN f32) stays well under 16 MiB of VMEM.
+BM, BN, BK = 128, 128, 128
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, *, nk: int):
+    """Grid = (M/BM, N/BN, K/BK), K innermost (sequential on TPU)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Exact integer MAC. The f32 accumulator is exact for int8 products up
+    # to |acc| < 2^24; with K <= 1024, |acc| <= 127*127*1024 < 2^24. The
+    # guard lives in qmatmul() below.
+    prod = jnp.dot(
+        x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] += prod.astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _rescale():
+        o_ref[...] *= xs_ref[...] * ws_ref[...]
+
+
+def _pad_to(a, mult, axis, value=0):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul(x_q, w_q, x_scale, w_scale, *, bm=BM, bn=BN, bk=BK):
+    """out[M,N] = dequant(int8 x_q[M,K] @ int8 w_q[K,N]).
+
+    ``x_scale`` is f32[1,1] (per-tensor), ``w_scale`` f32[1,N] (per output
+    channel). Shapes need not be tile-aligned; inputs are zero-padded and
+    the result is sliced back (zero padding contributes exact zeros to the
+    integer accumulation).
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    assert k <= 1024, "f32 accumulator exactness bound (see kernel doc)"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(_pad_to(x_q, bm_, 0), bk_, 1)
+    wp = _pad_to(_pad_to(w_q, bk_, 0), bn_, 1)
+    wsp = _pad_to(w_scale, bn_, 1, value=1.0)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk_
+    grid = (mp // bm_, np_ // bn_, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, x_scale, wsp)
+    return out[:m, :n]
+
+
+def qmatmul_dynamic(x, w_q, w_scale, *, bm=BM, bn=BN, bk=BK):
+    """Dynamic-quantization entry point: float activations are quantized
+    on the fly (per-tensor symmetric), then dispatched to the int8 kernel.
+    This is the op the L2 model's ``npu_int8`` backend lowers to."""
+    x_q, x_scale = ref.quantize_int8(x)
+    return qmatmul(x_q, w_q, x_scale.reshape(1, 1), w_scale,
+                   bm=bm, bn=bn, bk=bk)
+
+
+def vmem_bytes(bm=BM, bn=BN, bk=BK):
+    """Analytic VMEM working-set estimate for one grid step (DESIGN.md §7):
+    int8 x-tile + int8 w-tile + f32 accumulator + scales."""
+    return bm * bk + bk * bn + 4 * bm * bn + 4 * (1 + bn)
+
+
+def mxu_utilization(m, n, k, bm=BM, bn=BN, bk=BK):
+    """Fraction of MXU lanes doing useful work given padding: useful MACs /
+    MACs issued over the padded grid."""
+    import math
+    mp = math.ceil(m / bm) * bm
+    np_ = math.ceil(n / bn) * bn
+    kp = math.ceil(k / bk) * bk
+    return (m * n * k) / float(mp * np_ * kp)

@@ -1,0 +1,150 @@
+"""Pure-jnp reference oracles for the ARCHYTAS Pallas kernels.
+
+Every kernel in this package has a bit-compatible oracle here. The pytest
+suite (and the hypothesis sweeps) assert ``assert_allclose(kernel, ref)``;
+this file is therefore the single source of truth for the kernels'
+semantics, including the analog-device artefacts (weight-level
+quantization, per-tile ADC read-out, additive read noise) that model the
+NVM-crossbar / photonic accelerators of the ARCHYTAS paper (Sec. II, V.B).
+
+Nothing in this file uses Pallas; it is plain jax.numpy so it runs on any
+backend and stays trivially auditable.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (shared by kernels, model and tests)
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x, axis=None):
+    """Symmetric INT8 quantization.
+
+    Returns ``(q, scale)`` with ``q`` int8 and ``x ~= q * scale``. ``axis``
+    selects per-axis (e.g. per-output-channel) scales; ``None`` gives one
+    global scale. Zero tensors get scale 1 to avoid division by zero.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_levels(w, bits: int):
+    """Quantize weights onto the discrete conductance levels of an analog
+    array (NVM crossbar or photonic attenuator mesh).
+
+    A ``bits``-bit device stores ``2**(bits-1) - 1`` positive levels (sign
+    is realised by differential device pairs). Returns the *dequantized*
+    float weights (what the analog array actually realises) plus the level
+    scale.
+    """
+    nlevels = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(w))
+    scale = jnp.where(amax > 0, amax / nlevels, 1.0)
+    wq = jnp.clip(jnp.round(w / scale), -nlevels, nlevels) * scale
+    return wq.astype(jnp.float32), scale.astype(jnp.float32)
+
+
+def adc_quantize(v, lsb, bits: int):
+    """Model an ADC read-out: round to ``lsb`` steps and clip to the
+    ``bits``-bit two's-complement code range."""
+    lo = float(-(2 ** (bits - 1)))
+    hi = float(2 ** (bits - 1) - 1)
+    return jnp.clip(jnp.round(v / lsb), lo, hi) * lsb
+
+
+# ---------------------------------------------------------------------------
+# Kernel oracles
+# ---------------------------------------------------------------------------
+
+
+def qmatmul_ref(x_q, w_q, x_scale, w_scale):
+    """INT8 matmul with exact integer accumulation and float dequantization.
+
+    x_q: int8[M,K], w_q: int8[K,N], x_scale: f32[1,1], w_scale: f32[1,N]
+    (per-output-channel). Matches kernels.qmatmul: the integer accumulation
+    is exact, so only the final float multiply rounds.
+    """
+    acc = jnp.dot(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def crossbar_ref(x, wq, *, adc_bits, adc_lsb, tile_k, noise=None):
+    """Analog crossbar / photonic MVM oracle.
+
+    ``wq`` is the already level-quantized weight matrix (see
+    :func:`quantize_levels`) -- what the analog array physically realises.
+    The K dimension is processed in ``tile_k``-row array tiles (one
+    crossbar programming each); every tile's analog partial sum is
+    perturbed by ``noise[t]`` (shot/thermal/read noise, pre-drawn by the
+    caller for determinism) and digitized by an ``adc_bits`` ADC with step
+    ``adc_lsb`` before the digital accumulator adds it up.
+
+    x: f32[M,K], wq: f32[K,N], noise: f32[K//tile_k, M, N] or None.
+    """
+    m, k = x.shape
+    _, n = wq.shape
+    assert k % tile_k == 0, "K must be a multiple of tile_k (pad first)"
+    nt = k // tile_k
+    out = jnp.zeros((m, n), jnp.float32)
+    for t in range(nt):
+        xs = x[:, t * tile_k:(t + 1) * tile_k]
+        ws = wq[t * tile_k:(t + 1) * tile_k, :]
+        partial = jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+        if noise is not None:
+            partial = partial + noise[t]
+        out = out + adc_quantize(partial, adc_lsb, adc_bits)
+    return out
+
+
+def blocksparse_ref(x, idx, vals, *, block_k, block_n):
+    """Block-ELL sparse matmul oracle.
+
+    Each output block-column ``j`` has ``ELL`` contributing weight blocks;
+    ``idx[j, e]`` names the K-block-row of slot ``e`` and ``vals[j, e]`` is
+    its ``(block_k, block_n)`` dense payload. Padding slots carry
+    ``idx == -1`` and must contribute nothing.
+
+    x: f32[M, K]; idx: int32[N/bn, ELL]; vals: f32[N/bn, ELL, bk, bn].
+    """
+    m = x.shape[0]
+    nb, ell = idx.shape
+    n = nb * block_n
+    out = np.zeros((m, n), np.float32)
+    xn = np.asarray(x)
+    idxn = np.asarray(idx)
+    valsn = np.asarray(vals)
+    for j in range(nb):
+        for e in range(ell):
+            kb = int(idxn[j, e])
+            if kb < 0:
+                continue
+            xs = xn[:, kb * block_k:(kb + 1) * block_k]
+            out[:, j * block_n:(j + 1) * block_n] += xs @ valsn[j, e]
+    return jnp.asarray(out)
+
+
+def dense_from_blocksparse(idx, vals, *, block_k, block_n, k):
+    """Reassemble the dense weight matrix encoded by a block-ELL pattern
+    (test helper; inverse of the encoder in kernels/blocksparse.py)."""
+    nb, ell = idx.shape
+    n = nb * block_n
+    w = np.zeros((k, n), np.float32)
+    idxn = np.asarray(idx)
+    valsn = np.asarray(vals)
+    for j in range(nb):
+        for e in range(ell):
+            kb = int(idxn[j, e])
+            if kb < 0:
+                continue
+            w[kb * block_k:(kb + 1) * block_k,
+              j * block_n:(j + 1) * block_n] = valsn[j, e]
+    return jnp.asarray(w)

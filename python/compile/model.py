@@ -1,0 +1,288 @@
+"""L2: JAX model definitions for the ARCHYTAS workloads.
+
+A ViT-tiny encoder (the paper's Sec. V.B headline workload class: Vision
+Transformers on edge devices) and an MLP classifier, each instantiable on
+three compute backends that mirror the fabric's CU types:
+
+  * ``digital``   — plain f32 matmuls (the GPP / digital-NPU fallback),
+  * ``npu_int8``  — dynamic INT8 quantization through the qmatmul Pallas
+                    kernel (digital NPU tile, Sec. V.B dynamic quantization),
+  * ``analog``    — the crossbar Pallas kernel with level-quantized
+                    weights, read noise and ADC read-out (NVM-PIM /
+                    photonic tile, Sec. II).
+
+Weights are generated deterministically from a seed and *baked into the
+lowered HLO as constants*; the AOT artifacts therefore take only the input
+batch, which is what the Rust coordinator feeds at runtime. Python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import crossbar, qmatmul, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    img: int = 16
+    patch: int = 4
+    in_chans: int = 3
+    dim: int = 64
+    depth: int = 2
+    heads: int = 4
+    mlp_ratio: int = 2
+    classes: int = 10
+
+    @property
+    def tokens(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.in_chans
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    inputs: int = 256
+    hidden: tuple = (128, 64)
+    classes: int = 10
+
+
+# Analog backend constants (kept in sync with rust/src/accel/pim_nvm.rs).
+ANALOG_W_BITS = 6
+ANALOG_ADC_BITS = 8
+ANALOG_TILE_K = 32
+ANALOG_NOISE_SIGMA = 0.0  # baked model is noise-free; noise swept in tests
+ANALOG_X_ABSMAX = 4.0  # post-LayerNorm activations; calibration constant
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation (deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out):
+    w = jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+    return w * (2.0 / (fan_in + fan_out)) ** 0.5
+
+
+def init_vit(cfg: ViTConfig, seed: int = 0):
+    """Returns a flat dict name -> array of all ViT parameters."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    params["embed/w"] = _dense_init(nxt(), cfg.patch_dim, cfg.dim)
+    params["embed/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+    params["pos"] = 0.02 * jax.random.normal(
+        nxt(), (cfg.tokens, cfg.dim), jnp.float32)
+    for i in range(cfg.depth):
+        p = f"block{i}/"
+        params[p + "ln1/g"] = jnp.ones((cfg.dim,), jnp.float32)
+        params[p + "ln1/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+        params[p + "qkv/w"] = _dense_init(nxt(), cfg.dim, 3 * cfg.dim)
+        params[p + "qkv/b"] = jnp.zeros((3 * cfg.dim,), jnp.float32)
+        params[p + "proj/w"] = _dense_init(nxt(), cfg.dim, cfg.dim)
+        params[p + "proj/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+        params[p + "ln2/g"] = jnp.ones((cfg.dim,), jnp.float32)
+        params[p + "ln2/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+        h = cfg.mlp_ratio * cfg.dim
+        params[p + "mlp1/w"] = _dense_init(nxt(), cfg.dim, h)
+        params[p + "mlp1/b"] = jnp.zeros((h,), jnp.float32)
+        params[p + "mlp2/w"] = _dense_init(nxt(), h, cfg.dim)
+        params[p + "mlp2/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+    params["ln_f/g"] = jnp.ones((cfg.dim,), jnp.float32)
+    params["ln_f/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+    params["head/w"] = _dense_init(nxt(), cfg.dim, cfg.classes)
+    params["head/b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return params
+
+
+def init_mlp(cfg: MlpConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    dims = (cfg.inputs,) + tuple(cfg.hidden) + (cfg.classes,)
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        params[f"fc{i}/w"] = _dense_init(sub, dims[i], dims[i + 1])
+        params[f"fc{i}/b"] = jnp.zeros((dims[i + 1],), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch: every weight matmul in the model funnels through here
+# ---------------------------------------------------------------------------
+
+
+def _quantize_int8_np(w):
+    """NumPy twin of ref.quantize_int8(axis=0). Weight preparation must run
+    on *concrete* arrays even while the model is being traced (weights are
+    closure constants; jnp ops on them would be staged and ConcretizationT.
+    errors would fire on the float() calls), hence NumPy."""
+    import numpy as np
+    w = np.asarray(w, np.float32)
+    amax = np.abs(w).max(axis=0, keepdims=True)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def _program_array_np(w, bits):
+    """NumPy twin of kernels.crossbar.program_array (see above)."""
+    import numpy as np
+    w = np.asarray(w, np.float32)
+    nlevels = 2 ** (bits - 1) - 1
+    amax = np.abs(w).max()
+    scale = np.float32(amax / nlevels if amax > 0 else 1.0)
+    wq = np.clip(np.round(w / scale), -nlevels, nlevels) * scale
+    return wq.astype(np.float32), scale
+
+
+class Backend:
+    """Maps ``x @ w`` onto one of the fabric's compute-unit types."""
+
+    def __init__(self, kind: str, noise_seed: int = 0,
+                 noise_sigma: float = ANALOG_NOISE_SIGMA):
+        assert kind in ("digital", "npu_int8", "analog"), kind
+        self.kind = kind
+        self.noise_sigma = noise_sigma
+        self._noise_key = jax.random.PRNGKey(noise_seed)
+        self._layer = 0
+
+    def matmul(self, x, w):
+        """x: f32[M,K] @ w: f32[K,N] on the selected CU type. ``w`` must be
+        a concrete (closure-constant) array; ``x`` may be traced."""
+        import numpy as np
+        self._layer += 1
+        if self.kind == "digital":
+            return jnp.dot(x, w, preferred_element_type=jnp.float32)
+        if self.kind == "npu_int8":
+            wq, ws = _quantize_int8_np(w)
+            return qmatmul.qmatmul_dynamic(
+                x, jnp.asarray(wq), jnp.asarray(ws.reshape(1, -1)))
+        # analog crossbar: pad K to the array height, program, stream.
+        m, k = x.shape
+        tile_k = ANALOG_TILE_K
+        pad_k = (-k) % tile_k
+        xp = jnp.pad(x, ((0, 0), (0, pad_k)))
+        wp = np.pad(np.asarray(w, np.float32), ((0, pad_k), (0, 0)))
+        wq, _ = _program_array_np(wp, ANALOG_W_BITS)
+        # ADC full-scale calibration: random-sign activations give partial
+        # sums ~ x_rms * w_rms * sqrt(tile_k); ANALOG_X_ABSMAX acts as the
+        # sigma multiplier. Out-of-range reads clip (ADC saturates), which
+        # the crossbar_ref oracle models identically.
+        w_rms = float(np.sqrt(np.mean(wq ** 2)) or 1e-12)
+        fullscale = max(ANALOG_X_ABSMAX * w_rms * float(np.sqrt(tile_k)), 1e-12)
+        lsb = fullscale / float(2 ** (ANALOG_ADC_BITS - 1))
+        nt = (k + pad_k) // tile_k
+        n = w.shape[1]
+        if self.noise_sigma > 0.0:
+            noise_key = jax.random.fold_in(self._noise_key, self._layer)
+            noise = crossbar.make_noise(
+                noise_key, (nt, m, n), self.noise_sigma * lsb)
+        else:
+            noise = jnp.zeros((nt, m, n), jnp.float32)
+        return crossbar.crossbar_mvm(
+            xp, jnp.asarray(wq), noise, jnp.full((1, 1), lsb, jnp.float32),
+            adc_bits=ANALOG_ADC_BITS, tile_k=tile_k)
+
+
+def _layernorm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def vit_forward(params, x, cfg: ViTConfig, backend: Backend):
+    """x: f32[B, img, img, chans] -> logits f32[B, classes]."""
+    b = x.shape[0]
+    p, t, d = cfg.patch, cfg.tokens, cfg.dim
+    g = cfg.img // p
+    # Patchify: (B, g, p, g, p, C) -> (B, T, p*p*C)
+    x = x.reshape(b, g, p, g, p, cfg.in_chans)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, t, cfg.patch_dim)
+    # Embed
+    x2 = x.reshape(b * t, cfg.patch_dim)
+    h = backend.matmul(x2, params["embed/w"]) + params["embed/b"]
+    h = h.reshape(b, t, d) + params["pos"]
+    for i in range(cfg.depth):
+        pfx = f"block{i}/"
+        # --- attention ---
+        z = _layernorm(h, params[pfx + "ln1/g"], params[pfx + "ln1/b"])
+        qkv = backend.matmul(z.reshape(b * t, d), params[pfx + "qkv/w"])
+        qkv = (qkv + params[pfx + "qkv/b"]).reshape(b, t, 3, cfg.heads,
+                                                    d // cfg.heads)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        q = q.transpose(0, 2, 1, 3)  # (B, H, T, dh)
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhtd,bhsd->bhts", q, k) / (d // cfg.heads) ** 0.5
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bhsd->bhtd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b * t, d)
+        o = backend.matmul(o, params[pfx + "proj/w"]) + params[pfx + "proj/b"]
+        h = h + o.reshape(b, t, d)
+        # --- MLP ---
+        z = _layernorm(h, params[pfx + "ln2/g"], params[pfx + "ln2/b"])
+        z2 = backend.matmul(z.reshape(b * t, d), params[pfx + "mlp1/w"])
+        z2 = _gelu(z2 + params[pfx + "mlp1/b"])
+        z2 = backend.matmul(z2, params[pfx + "mlp2/w"]) + params[pfx + "mlp2/b"]
+        h = h + z2.reshape(b, t, d)
+    h = _layernorm(h, params["ln_f/g"], params["ln_f/b"])
+    pooled = jnp.mean(h, axis=1)
+    return backend.matmul(pooled, params["head/w"]) + params["head/b"]
+
+
+def mlp_forward(params, x, cfg: MlpConfig, backend: Backend):
+    """x: f32[B, inputs] -> logits f32[B, classes]."""
+    h = x
+    n_layers = len(cfg.hidden) + 1
+    for i in range(n_layers):
+        h = backend.matmul(h, params[f"fc{i}/w"]) + params[f"fc{i}/b"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Jit-able entry points (weights closed over => baked into the HLO)
+# ---------------------------------------------------------------------------
+
+
+def make_vit_fn(kind: str, cfg: ViTConfig = ViTConfig(), seed: int = 0,
+                noise_sigma: float = ANALOG_NOISE_SIGMA):
+    params = init_vit(cfg, seed)
+
+    def fn(x):
+        return (vit_forward(params, x, cfg, Backend(kind, noise_sigma=noise_sigma)),)
+
+    return fn
+
+
+def make_mlp_fn(kind: str, cfg: MlpConfig = MlpConfig(), seed: int = 0):
+    params = init_mlp(cfg, seed)
+
+    def fn(x):
+        return (mlp_forward(params, x, cfg, Backend(kind)),)
+
+    return fn

@@ -1,0 +1,84 @@
+"""AOT pipeline tests: manifest consistency, golden files, HLO op census.
+
+These run against the checked-out source (no artifacts/ needed): a small
+subset is lowered into a tmpdir to validate the whole emit path.
+"""
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+SUBSET = ["gemm_64", "mlp_digital"]
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, stats=True, only=SUBSET)
+    return out
+
+
+class TestEmit:
+    def test_hlo_text_parses_as_hlo(self, built):
+        text = open(os.path.join(built, "gemm_64.hlo.txt")).read()
+        assert text.startswith("HloModule"), text[:80]
+        assert "dot(" in text
+
+    def test_manifest_lists_all(self, built):
+        man = open(os.path.join(built, "manifest.toml")).read()
+        for name in SUBSET:
+            assert f'name = "{name}"' in man
+        assert man.count("[[artifact]]") == len(SUBSET)
+
+    def test_manifest_shapes(self, built):
+        man = open(os.path.join(built, "manifest.toml")).read()
+        assert 'inputs = ["f32[64,64]", "f32[64,64]"]' in man
+        assert 'outputs = ["f32[8,10]"]' in man
+
+    def test_golden_roundtrip(self, built):
+        """Golden out must equal re-running the jitted fn on golden in."""
+        x = np.fromfile(os.path.join(built, "golden/gemm_64.in0.bin"),
+                        np.float32).reshape(64, 64)
+        w = np.fromfile(os.path.join(built, "golden/gemm_64.in1.bin"),
+                        np.float32).reshape(64, 64)
+        want = np.fromfile(os.path.join(built, "golden/gemm_64.out0.bin"),
+                           np.float32).reshape(64, 64)
+        got = np.asarray(jnp.dot(jnp.asarray(x), jnp.asarray(w)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_stats_file(self, built):
+        stats = open(os.path.join(built, "hlo_stats.txt")).read()
+        assert "[gemm_64]" in stats and "dot" in stats
+
+
+class TestCensus:
+    def test_census_counts_ops(self):
+        text = ("HloModule m\n"
+                "  %a = f32[2,2]{1,0} dot(x, y), lhs_contracting_dims={1}\n"
+                "  %b = f32[2,2]{1,0} add(a, a)\n"
+                "  %c = f32[2,2]{1,0} dot(b, y)\n")
+        c = aot.hlo_op_census(text)
+        assert c["dot"] == 2 and c["add"] == 1
+
+    def test_vit_digital_dot_budget(self):
+        """L2 perf gate (DESIGN.md §7): the digital ViT must lower to
+        exactly the analytic dot count — 10 weight matmuls + 2 einsums per
+        block — i.e. no XLA-visible recomputation."""
+        cfg = model.ViTConfig()
+        fn = model.make_vit_fn("digital", cfg)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((2, 16, 16, 3), jnp.float32))
+        census = aot.hlo_op_census(aot.to_hlo_text(lowered))
+        expected = (1 + cfg.depth * 4 + 1) + cfg.depth * 2  # matmuls+einsums
+        assert census.get("dot", 0) == expected, census
+
+    def test_fmt_shape(self):
+        assert aot._fmt_shape(np.zeros((2, 3), np.float32)) == "f32[2,3]"
+        assert aot._fmt_shape(np.zeros((4,), np.int32)) == "s32[4]"
+        assert aot._fmt_shape(np.zeros((1, 2), np.int8)) == "s8[1,2]"

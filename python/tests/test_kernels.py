@@ -1,0 +1,229 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes/parameters of every Pallas kernel against
+the pure-jnp oracles in kernels/ref.py, plus directed edge cases
+(tile-boundary shapes, zeros, padding slots, ADC saturation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blocksparse, crossbar, qmatmul, ref
+
+SET = dict(max_examples=20, deadline=None)
+
+
+def _randn(seed, shape):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(
+        shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+
+class TestQmatmul:
+    @settings(**SET)
+    @given(
+        m=st.integers(1, 70), k=st.integers(1, 96), n=st.integers(1, 70),
+        bm=st.sampled_from([16, 32]), bn=st.sampled_from([16, 32]),
+        bk=st.sampled_from([16, 32]), seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, k, n, bm, bn, bk, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        xq, xs = ref.quantize_int8(x)
+        wq, ws = ref.quantize_int8(w, axis=0)
+        got = qmatmul.qmatmul(xq, wq, xs.reshape(1, 1), ws.reshape(1, -1),
+                              bm=bm, bn=bn, bk=bk)
+        want = ref.qmatmul_ref(xq, wq, xs.reshape(1, 1), ws.reshape(1, -1))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_tile_exact_shapes(self):
+        x, w = _randn(0, (128, 128)), _randn(1, (128, 128))
+        xq, xs = ref.quantize_int8(x)
+        wq, ws = ref.quantize_int8(w, axis=0)
+        got = qmatmul.qmatmul(xq, wq, xs.reshape(1, 1), ws.reshape(1, -1))
+        want = ref.qmatmul_ref(xq, wq, xs.reshape(1, 1), ws.reshape(1, -1))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_zero_input_gives_zero(self):
+        xq = jnp.zeros((8, 32), jnp.int8)
+        wq = jnp.ones((32, 8), jnp.int8)
+        out = qmatmul.qmatmul(xq, wq, jnp.ones((1, 1)), jnp.ones((1, 8)),
+                              bm=8, bn=8, bk=32)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_dynamic_quantization_error_bound(self):
+        """Dynamic INT8 quantization must stay within the analytic error
+        bound: |err| <= K * (sx*|w|max + sw*|x|max + sx*sw) / 2 roughly; we
+        assert the practical relative bound used by the compiler."""
+        x, w = _randn(2, (64, 128)), _randn(3, (128, 64))
+        wq, ws = ref.quantize_int8(w, axis=0)
+        got = qmatmul.qmatmul_dynamic(x, wq, ws.reshape(1, -1))
+        want = jnp.dot(x, w)
+        denom = float(jnp.abs(want).max())
+        rel = float(jnp.abs(got - want).max()) / denom
+        assert rel < 0.02, rel
+
+    def test_accumulator_guard(self):
+        with pytest.raises(AssertionError):
+            qmatmul.qmatmul(jnp.zeros((4, 2048), jnp.int8),
+                            jnp.zeros((2048, 4), jnp.int8),
+                            jnp.ones((1, 1)), jnp.ones((1, 4)))
+
+    def test_vmem_estimate_under_budget(self):
+        assert qmatmul.vmem_bytes() < 16 * 1024 * 1024
+
+    def test_mxu_utilization(self):
+        assert qmatmul.mxu_utilization(128, 128, 128) == 1.0
+        assert qmatmul.mxu_utilization(129, 128, 128) < 0.6
+
+
+# ---------------------------------------------------------------------------
+# crossbar
+# ---------------------------------------------------------------------------
+
+
+class TestCrossbar:
+    @settings(**SET)
+    @given(
+        m=st.integers(1, 48), n=st.integers(1, 48),
+        kt=st.integers(1, 4), tile_k=st.sampled_from([16, 32]),
+        w_bits=st.integers(3, 8), adc_bits=st.integers(4, 10),
+        sigma=st.floats(0.0, 0.5), seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, n, kt, tile_k, w_bits, adc_bits, sigma, seed):
+        k = kt * tile_k
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        wq, _ = crossbar.program_array(w, w_bits)
+        lsb = crossbar.default_adc_lsb(
+            wq, float(jnp.abs(x).max()), tile_k, adc_bits)
+        noise = jnp.asarray(
+            (sigma * lsb * rng.standard_normal((kt, m, n))).astype(np.float32))
+        got = crossbar.crossbar_mvm(
+            x, wq, noise, jnp.full((1, 1), lsb, jnp.float32),
+            adc_bits=adc_bits, tile_k=tile_k, bm=16, bn=16)
+        want = ref.crossbar_ref(x, wq, adc_bits=adc_bits, adc_lsb=lsb,
+                                tile_k=tile_k, noise=noise)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_high_adc_resolution_converges_to_exact(self):
+        """With a fine ADC, many levels and no noise, the crossbar output
+        must converge to the exact float matmul."""
+        x, w = _randn(4, (16, 64)), _randn(5, (64, 16))
+        wq, _ = crossbar.program_array(w, 16)
+        lsb = crossbar.default_adc_lsb(wq, float(jnp.abs(x).max()), 32, 24)
+        noise = jnp.zeros((2, 16, 16), jnp.float32)
+        got = crossbar.crossbar_mvm(x, wq, noise,
+                                    jnp.full((1, 1), lsb, jnp.float32),
+                                    adc_bits=24, tile_k=32, bm=16, bn=16)
+        want = jnp.dot(x, w)
+        rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+        assert rel < 1e-3, rel
+
+    def test_adc_saturation_clips(self):
+        """Partial sums beyond ADC full scale must clip, not wrap."""
+        x = jnp.ones((4, 32), jnp.float32) * 10.0
+        w = jnp.ones((32, 4), jnp.float32)
+        wq, _ = crossbar.program_array(w, 6)
+        lsb = 0.01  # tiny step -> immediate saturation
+        noise = jnp.zeros((1, 4, 4), jnp.float32)
+        got = crossbar.crossbar_mvm(x, wq, noise,
+                                    jnp.full((1, 1), lsb, jnp.float32),
+                                    adc_bits=8, tile_k=32, bm=4, bn=4)
+        want = ref.crossbar_ref(x, wq, adc_bits=8, adc_lsb=lsb, tile_k=32,
+                                noise=noise)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert float(jnp.abs(got).max()) <= 127 * lsb * 1 + 1e-6
+
+    def test_quantize_levels_count(self):
+        w = jnp.linspace(-1, 1, 1001)
+        wq, scale = ref.quantize_levels(w, 4)
+        levels = np.unique(np.asarray(wq))
+        assert len(levels) <= 2 * (2 ** 3 - 1) + 1  # +/-7 levels + zero
+
+    def test_vmem_estimate_under_budget(self):
+        assert crossbar.vmem_bytes() < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# blocksparse
+# ---------------------------------------------------------------------------
+
+
+class TestBlocksparse:
+    @settings(**SET)
+    @given(
+        m=st.integers(1, 40), kb=st.integers(1, 6), nb=st.integers(1, 4),
+        bk=st.sampled_from([8, 16]), bn=st.sampled_from([8, 16]),
+        keep=st.floats(0.2, 1.0), seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, kb, nb, bk, bn, keep, seed):
+        rng = np.random.default_rng(seed)
+        k, n = kb * bk, nb * bn
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        idx, vals = blocksparse.encode_blocksparse(
+            w, block_k=bk, block_n=bn, keep_density=keep)
+        got = blocksparse.blocksparse_matmul(x, idx, vals,
+                                             block_k=bk, block_n=bn, bm=16)
+        want = ref.blocksparse_ref(x, idx, vals, block_k=bk, block_n=bn)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_full_density_equals_dense_matmul(self):
+        x = _randn(6, (24, 64))
+        w = np.asarray(_randn(7, (64, 32)))
+        idx, vals = blocksparse.encode_blocksparse(
+            w, block_k=16, block_n=16, keep_density=1.0)
+        assert blocksparse.density(idx) == 1.0
+        got = blocksparse.blocksparse_matmul(x, idx, vals,
+                                             block_k=16, block_n=16)
+        np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+    def test_padding_slots_contribute_nothing(self):
+        """idx == -1 slots must be exact no-ops even with garbage vals."""
+        x = _randn(8, (8, 32))
+        idx = jnp.asarray(np.array([[0, -1], [1, -1]], np.int32))
+        vals = np.random.default_rng(0).standard_normal(
+            (2, 2, 16, 16)).astype(np.float32)
+        got = blocksparse.blocksparse_matmul(
+            x, idx, jnp.asarray(vals), block_k=16, block_n=16, bm=8)
+        want = ref.blocksparse_ref(x, idx, jnp.asarray(vals),
+                                   block_k=16, block_n=16)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_encoder_roundtrip_dense(self):
+        """encode(keep=1.0) then dense reassembly must reproduce w."""
+        w = np.asarray(_randn(9, (48, 32)))
+        idx, vals = blocksparse.encode_blocksparse(
+            w, block_k=16, block_n=16, keep_density=1.0)
+        w2 = ref.dense_from_blocksparse(idx, vals, block_k=16, block_n=16,
+                                        k=48)
+        np.testing.assert_allclose(w2, w)
+
+    def test_encoder_threshold_drops_small_blocks(self):
+        w = np.zeros((32, 16), np.float32)
+        w[:16] = 5.0  # only the first K-block is significant
+        idx, vals = blocksparse.encode_blocksparse(
+            w, block_k=16, block_n=16, threshold=1.0)
+        assert idx.shape == (1, 1) and int(idx[0, 0]) == 0
+
+    def test_energy_proxy_scales_with_density(self):
+        """The stored-block count (what the fabric's sparse CU fetches)
+        must scale ~linearly with keep_density."""
+        w = np.asarray(_randn(10, (128, 64)))
+        d25 = blocksparse.encode_blocksparse(
+            w, block_k=16, block_n=16, keep_density=0.25)[0]
+        d100 = blocksparse.encode_blocksparse(
+            w, block_k=16, block_n=16, keep_density=1.0)[0]
+        stored25 = int((np.asarray(d25) >= 0).sum())
+        stored100 = int((np.asarray(d100) >= 0).sum())
+        assert stored25 * 4 == stored100

@@ -1,0 +1,138 @@
+"""L2 model tests: backend variants, shapes, determinism, accuracy gaps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _images(seed=0, batch=2):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((batch, 16, 16, 3)).astype(np.float32))
+
+
+def _mlp_in(seed=0, batch=4):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((batch, 256)).astype(np.float32))
+
+
+CFG = model.ViTConfig()
+
+
+class TestViT:
+    def test_output_shape(self):
+        x = _images()
+        for kind in ("digital", "npu_int8", "analog"):
+            (y,) = model.make_vit_fn(kind, CFG)(x)
+            assert y.shape == (2, CFG.classes), kind
+
+    def test_deterministic(self):
+        x = _images()
+        fn = model.make_vit_fn("digital", CFG)
+        (a,) = fn(x)
+        (b,) = fn(x)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_int8_close_to_digital(self):
+        """Dynamic INT8 must track f32 within a few percent — the paper's
+        Sec. V.B claim that quantization costs little accuracy."""
+        x = _images()
+        (yd,) = model.make_vit_fn("digital", CFG)(x)
+        (yq,) = model.make_vit_fn("npu_int8", CFG)(x)
+        scale = float(jnp.abs(yd).max())
+        rel = float(jnp.abs(yd - yq).max()) / scale
+        assert rel < 0.15, rel
+
+    def test_analog_close_to_digital(self):
+        x = _images()
+        (yd,) = model.make_vit_fn("digital", CFG)(x)
+        (ya,) = model.make_vit_fn("analog", CFG)(x)
+        scale = float(jnp.abs(yd).max())
+        rel = float(jnp.abs(yd - ya).max()) / scale
+        assert rel < 0.5, rel  # analog: w-levels + ADC, coarser
+
+    def test_analog_noise_degrades_gracefully(self):
+        """More read noise -> monotonically (on average) worse agreement
+        with the digital output; and zero-noise is the baked default."""
+        x = _images()
+        (yd,) = model.make_vit_fn("digital", CFG)(x)
+
+        def err(sig):
+            (y,) = model.make_vit_fn("analog", CFG, noise_sigma=sig)(x)
+            return float(jnp.abs(y - yd).mean())
+
+        e0, e2 = err(0.0), err(2.0)
+        assert e0 < e2, (e0, e2)
+
+    def test_same_seed_same_params(self):
+        p1 = model.init_vit(CFG, seed=7)
+        p2 = model.init_vit(CFG, seed=7)
+        for k in p1:
+            np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+    def test_different_seed_different_params(self):
+        p1 = model.init_vit(CFG, seed=0)
+        p2 = model.init_vit(CFG, seed=1)
+        assert float(jnp.abs(p1["embed/w"] - p2["embed/w"]).max()) > 0
+
+    def test_param_inventory(self):
+        p = model.init_vit(CFG)
+        # embed(2) + pos + blocks * (2 ln + qkv w/b + proj w/b + 2 ln +
+        # mlp1 w/b + mlp2 w/b = 12) + ln_f(2) + head(2)
+        assert len(p) == 2 + 1 + CFG.depth * 12 + 2 + 2
+
+    def test_batch_independence(self):
+        """Per-sample outputs must not depend on batchmates (pure fwd)."""
+        x = _images(batch=4)
+        fn = model.make_vit_fn("digital", CFG)
+        (full,) = fn(x)
+        # Use the same batch size with sample 0 repeated so shapes (and the
+        # lowered HLO) are identical, only batchmates differ.
+        x_rep = jnp.tile(x[0:1], (4, 1, 1, 1))
+        (rep,) = fn(x_rep)
+        np.testing.assert_allclose(np.asarray(full[0]), np.asarray(rep[0]),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestMLP:
+    def test_output_shape(self):
+        x = _mlp_in()
+        for kind in ("digital", "npu_int8"):
+            (y,) = model.make_mlp_fn(kind)(x)
+            assert y.shape == (4, 10)
+
+    def test_int8_close_to_digital(self):
+        x = _mlp_in()
+        (yd,) = model.make_mlp_fn("digital")(x)
+        (yq,) = model.make_mlp_fn("npu_int8")(x)
+        rel = float(jnp.abs(yd - yq).max() / jnp.abs(yd).max())
+        assert rel < 0.1, rel
+
+    def test_jit_matches_eager(self):
+        x = _mlp_in()
+        fn = model.make_mlp_fn("digital")
+        (eager,) = fn(x)
+        (jitted,) = jax.jit(fn)(x)
+        np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestBackendPrep:
+    def test_np_int8_matches_jnp(self):
+        from compile.kernels import ref
+        w = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (32, 16)).astype(np.float32))
+        qn, sn = model._quantize_int8_np(w)
+        qj, sj = ref.quantize_int8(w, axis=0)
+        np.testing.assert_array_equal(qn, np.asarray(qj))
+        np.testing.assert_allclose(sn, np.asarray(sj).reshape(1, -1), rtol=1e-7)
+
+    def test_np_levels_matches_jnp(self):
+        from compile.kernels import ref
+        w = jnp.asarray(np.random.default_rng(1).standard_normal(
+            (32, 16)).astype(np.float32))
+        wn, _ = model._program_array_np(w, 6)
+        wj, _ = ref.quantize_levels(w, 6)
+        np.testing.assert_allclose(wn, np.asarray(wj), rtol=1e-6, atol=1e-7)

@@ -1,0 +1,103 @@
+//! E8 — end-to-end throughput/latency bench (the measurable half of
+//! examples/uav_vision.rs): PJRT artifact execution latency per variant,
+//! dynamic-batching serving throughput, and the coordinator's raw
+//! co-simulation rate (the L3 perf target of DESIGN.md §7).
+
+#[path = "util.rs"]
+mod util;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::config::FabricConfig;
+use archytas::coordinator::serve::drive_server;
+use archytas::coordinator::{cosim, BatchServer};
+use archytas::fabric::Fabric;
+use archytas::runtime::Runtime;
+use archytas::workloads;
+
+fn main() {
+    util::banner("E8", "end-to-end: PJRT execution + serving + co-sim rate");
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping PJRT section ({e}); run `make artifacts` first");
+            return cosim_rate_only();
+        }
+    };
+
+    println!("-- artifact execution latency (batch of 4 frames) --");
+    println!("{:<16} {:>12} {:>14}", "artifact", "ms/batch", "frames/s");
+    for name in ["vit_digital", "vit_npu_int8", "vit_analog"] {
+        let inputs = rt.registry().golden_inputs(name).unwrap();
+        let exe = rt.executable(name).unwrap();
+        let avg = util::time_avg(20, || {
+            exe.run(&inputs).unwrap();
+        });
+        println!("{:<16} {:>12.3} {:>14.0}", name, avg * 1e3, 4.0 / avg);
+    }
+
+    println!("\n-- dynamic batching throughput (mlp_digital, 8x256 batch) --");
+    let spec = rt.registry().spec("mlp_digital").unwrap();
+    let (batch, feat) = (spec.inputs[0].dims[0], spec.inputs[0].dims[1]);
+    let out_cols = spec.outputs[0].dims[1];
+    for clients in [1usize, 4, 8] {
+        let exe = rt.executable("mlp_digital").unwrap();
+        let server = BatchServer::new(feat, out_cols, batch);
+        let ((stats, _), wall) = util::time_once(|| {
+            drive_server(
+                &server,
+                clients,
+                64,
+                move |c, i| {
+                    let mut rng = archytas::sim::Rng::new((c * 31 + i) as u64);
+                    (0..feat).map(|_| rng.normal() as f32).collect()
+                },
+                {
+                    let exe = exe.clone();
+                    move |input| Ok(exe.run(std::slice::from_ref(input))?.remove(0))
+                },
+            )
+            .unwrap()
+        });
+        println!(
+            "clients={clients}: {} req in {}  mean batch {:.2}  p50 {:.0} us  {:.0} req/s",
+            stats.requests,
+            util::fmt_time(wall),
+            stats.mean_batch(),
+            stats.p50_latency_us(),
+            stats.throughput_rps(wall)
+        );
+    }
+
+    cosim_rate_only();
+}
+
+fn cosim_rate_only() {
+    println!("\n-- coordinator co-simulation rate (L3 perf target) --");
+    let fabric = Fabric::build(
+        FabricConfig::from_toml(&std::fs::read_to_string(
+            archytas::repo_root().join("configs/edge16.toml"),
+        ).unwrap()).unwrap(),
+    )
+    .unwrap();
+    let g = workloads::vit(&workloads::VitParams::default(), 0).unwrap();
+    let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+    let prog = lower(&g, &fabric, &m).unwrap();
+    let steps = prog.steps.len();
+    let avg = util::time_avg(50, || {
+        cosim(&fabric, &prog).unwrap();
+    });
+    println!(
+        "cosim: {} steps in {} -> {:.0} steps/s ({:.1} full-model sims/s)",
+        steps,
+        util::fmt_time(avg),
+        steps as f64 / avg,
+        1.0 / avg
+    );
+    // mapping rate too (compile-path hot loop)
+    let avg_map = util::time_avg(20, || {
+        map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+    });
+    println!("greedy map: {} per compile ({:.1} compiles/s)", util::fmt_time(avg_map), 1.0 / avg_map);
+}

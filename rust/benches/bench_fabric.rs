@@ -1,0 +1,76 @@
+//! E1 — CU integration templates A/B/C (paper Fig. 1).
+//!
+//! The same GEMM workload on the same NPU accelerator behind each
+//! template, plus an elementwise-heavy mix where template C's cluster
+//! pays off. Reported per (template, layer size): end-to-end latency
+//! (tile + NoC feed), energy, area — the quantitative version of the
+//! figure's taxonomy.
+
+#[path = "util.rs"]
+mod util;
+
+use archytas::accel::{Compute, DigitalNpu, Precision};
+use archytas::config::FabricConfig;
+use archytas::fabric::{Fabric, Template, Tile};
+
+fn fabric() -> Fabric {
+    Fabric::build(FabricConfig::from_toml("[noc]\nwidth = 2\nheight = 2\n[[cu]]\nkind = \"npu\"\ncount = 1\n").unwrap()).unwrap()
+}
+
+fn tile(template: Template) -> Tile {
+    Tile::new(0, 1, Box::new(DigitalNpu::default()), template, 256 * 1024, 8)
+}
+
+fn main() {
+    util::banner("E1", "Compute-Unit templates A/B/C (Fig. 1)");
+    let f = fabric();
+    println!(
+        "{:<10} {:>10} | {:>12} {:>12} {:>10} {:>9}",
+        "layer", "template", "latency cyc", "energy nJ", "noc bytes", "area mm²"
+    );
+    for (label, c) in [
+        ("gemm-64", Compute::MatMul { m: 64, k: 64, n: 64 }),
+        ("gemm-128", Compute::MatMul { m: 128, k: 128, n: 128 }),
+        ("gemm-256", Compute::MatMul { m: 256, k: 256, n: 256 }),
+        ("gemm-512", Compute::MatMul { m: 512, k: 512, n: 512 }),
+        ("eltwise-1M", Compute::Elementwise { elems: 1 << 20 }),
+    ] {
+        for template in [Template::A, Template::B, Template::C] {
+            let t = tile(template);
+            let cost = t.execute(&c, Precision::Int8).unwrap();
+            // End-to-end: feed the NoC share from HBM (template A pays
+            // this per call; B/C amortize weights).
+            let feed = f.feed(0, cost.noc_bytes);
+            let e2e = cost.metrics.cycles + feed.cycles;
+            println!(
+                "{:<10} {:>10?} | {:>12} {:>12.1} {:>10} {:>9.2}",
+                label,
+                template,
+                e2e,
+                (cost.metrics.total_energy_pj() + feed.total_energy_pj()) / 1e3,
+                cost.noc_bytes,
+                t.area().mm2,
+            );
+        }
+        println!();
+    }
+    // Where template C actually pays: accelerators WITHOUT a digital
+    // vector path (analog crossbar/photonic tiles defer elementwise to a
+    // slow periphery; the cluster absorbs it).
+    println!("-- elementwise-1M on an analog crossbar tile: B vs C --");
+    use archytas::accel::CrossbarNvm;
+    for template in [Template::B, Template::C] {
+        let t = Tile::new(0, 1, Box::new(CrossbarNvm::default()), template, 256 * 1024, 8);
+        let c = Compute::Elementwise { elems: 1 << 20 };
+        let cost = t.execute(&c, Precision::Analog).unwrap();
+        println!(
+            "  crossbar + {:?}: {:>9} cyc  {:>10.1} nJ",
+            template,
+            cost.metrics.cycles,
+            cost.metrics.total_energy_pj() / 1e3
+        );
+    }
+    println!("\nexpected shape: A lowest area but transfer-bound (streams weights every");
+    println!("call); B best perf/W on weight-reuse GEMMs; C costs area and only pays");
+    println!("off for accelerators without a digital vector path (analog tiles).");
+}

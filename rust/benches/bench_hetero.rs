@@ -1,0 +1,92 @@
+//! E10 — heterogeneity ablation (paper Sec. III): the same mixed workload
+//! on a heterogeneous fabric vs homogeneous fabrics of comparable area,
+//! across mapping strategies. The paper's core architectural bet is that
+//! the heterogeneous fabric Pareto-dominates on perf/W for mixed
+//! AI pipelines.
+
+#[path = "util.rs"]
+mod util;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::config::FabricConfig;
+use archytas::coordinator::cosim;
+use archytas::fabric::Fabric;
+use archytas::ir::Graph;
+use archytas::workloads;
+
+fn run(fabric: &Fabric, graphs: &[Graph], strategy: MapStrategy, p: Precision) -> (u64, f64) {
+    let mut cycles = 0u64;
+    let mut energy = 0.0;
+    for g in graphs {
+        let m = map_graph(g, fabric, strategy, p).unwrap();
+        let prog = lower(g, fabric, &m).unwrap();
+        let r = cosim(fabric, &prog).unwrap();
+        cycles += r.cycles;
+        energy += r.metrics.total_energy_pj();
+    }
+    (cycles, energy)
+}
+
+fn main() {
+    util::banner("E10", "heterogeneous vs homogeneous fabrics (equal-ish area)");
+    let hetero = Fabric::build(
+        FabricConfig::from_toml(&std::fs::read_to_string(
+            archytas::repo_root().join("configs/edge16.toml"),
+        ).unwrap()).unwrap(),
+    )
+    .unwrap();
+    let homo = Fabric::build(
+        FabricConfig::from_toml(&std::fs::read_to_string(
+            archytas::repo_root().join("configs/homogeneous_npu.toml"),
+        ).unwrap()).unwrap(),
+    )
+    .unwrap();
+    // Mixed pipeline: vision transformer + CNN + classifier MLP.
+    let graphs = vec![
+        workloads::vit(&workloads::VitParams::default(), 0).unwrap(),
+        workloads::cnn_edge(2, 1).unwrap(),
+        workloads::mlp(8, 256, &[128, 64], 10, 2).unwrap(),
+    ];
+    println!(
+        "{:<18} {:>9} | {:<8} {:>12} {:>12} {:>12}",
+        "fabric", "area mm²", "strategy", "cycles", "energy nJ", "nJ*ms (EDP)"
+    );
+    for (name, fabric, precisions) in [
+        ("heterogeneous", &hetero, vec![Precision::Analog]),
+        ("homogeneous-npu", &homo, vec![Precision::Int8]),
+    ] {
+        for strategy in [MapStrategy::RoundRobin, MapStrategy::Greedy] {
+            for &p in &precisions {
+                let ((cy, en), _) = util::time_once(|| run(fabric, &graphs, strategy, p));
+                let ms = cy as f64 / (fabric.cfg.freq_ghz * 1e9) * 1e3;
+                println!(
+                    "{:<18} {:>9.1} | {:<8} {:>12} {:>12.1} {:>12.2}",
+                    name,
+                    fabric.total_area().mm2,
+                    format!("{strategy:?}"),
+                    cy,
+                    en / 1e3,
+                    en / 1e3 * ms
+                );
+            }
+        }
+    }
+    // Quantified claim (greedy mapping, device-preferred precisions).
+    // Equal-area framing: the fabrics differ in silicon cost, so the
+    // deployable metric is EDP normalized by die area (perf/W per mm² —
+    // exactly the paper's "performance and energy efficiency" budget).
+    let (hc, he) = run(&hetero, &graphs, MapStrategy::Greedy, Precision::Analog);
+    let (nc, ne) = run(&homo, &graphs, MapStrategy::Greedy, Precision::Int8);
+    let edp_h = he * hc as f64;
+    let edp_n = ne * nc as f64;
+    println!("\nraw EDP ratio (homo/hetero): {:.2}x", edp_n / edp_h);
+    println!(
+        "area-normalized EDP advantage (homo/hetero, EDP*mm²): {:.2}x",
+        (edp_n * homo.total_area().mm2) / (edp_h * hetero.total_area().mm2)
+    );
+    println!("expected shape: heterogeneous matches or beats raw EDP with ~30% less");
+    println!("silicon -> clear win once area-normalized; greedy mapping is what");
+    println!("unlocks it (round-robin wastes the specialists).");
+}

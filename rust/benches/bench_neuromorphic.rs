@@ -1,0 +1,56 @@
+//! E9 — neuromorphic (event-driven SNN) study (paper Sec. II).
+//!
+//! Activity sweep on the Loihi-class core model vs running the same
+//! synapse count dense on the NPU: finds the activity crossover below
+//! which spiking wins — the deployment rule of thumb the paper's
+//! neuromorphic leg needs.
+
+#[path = "util.rs"]
+mod util;
+
+use archytas::accel::{Accelerator, Compute, DigitalNpu, Neuromorphic, Precision};
+
+fn main() {
+    util::banner("E9", "neuromorphic activity sweep");
+    let snn = Neuromorphic::default();
+    let npu = DigitalNpu::default();
+    // An MLP layer as synapses: 1M synapses ~ 1024x1024 dense layer.
+    let synapses = 1 << 20;
+    let dense_equiv = Compute::MatMul { m: 1, k: 1024, n: 1024 };
+    let npu_cost = npu.cost(&dense_equiv, Precision::Int8);
+    let npu_pj = npu_cost.total_energy_pj();
+    let npu_us = npu_cost.cycles as f64 / (npu.freq_ghz() * 1e9) * 1e6;
+
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>14}",
+        "activity", "snn nJ", "snn us", "npu nJ", "snn wins energy"
+    );
+    let mut crossover: Option<f64> = None;
+    for permille in [10u32, 25, 50, 100, 200, 350, 500, 750, 1000] {
+        let act = permille as f64 / 1000.0;
+        let c = Compute::SpikingLayer { synapses, activity: act };
+        let m = snn.cost(&c, Precision::Analog);
+        let wins = m.total_energy_pj() < npu_pj;
+        if !wins && crossover.is_none() && permille > 10 {
+            crossover = Some(act);
+        }
+        println!(
+            "{:>10.3} {:>12.1} {:>12.2} {:>12.1} {:>14}",
+            act,
+            m.total_energy_pj() / 1e3,
+            m.cycles as f64 / (snn.freq_ghz() * 1e9) * 1e6,
+            npu_pj / 1e3,
+            if wins { "yes" } else { "no" }
+        );
+    }
+    println!(
+        "\nNPU dense reference: {:.1} nJ, {:.2} us per layer pass",
+        npu_pj / 1e3,
+        npu_us
+    );
+    match crossover {
+        Some(a) => println!("energy crossover at activity ~{a:.3}: SNN wins below, NPU above."),
+        None => println!("SNN wins at every swept activity level."),
+    }
+    println!("expected shape: SNN energy linear in activity; crossover in the 10-50% band.");
+}

@@ -1,0 +1,57 @@
+//! E7 — photonic accelerator study ("Processing-On-the-Flight", paper
+//! Sec. II; calibration points: Feldmann'21, Xu'21 11-TOPS).
+//!
+//! MVM size sweep across devices: achieved TOPS, pJ/MAC, and the analog
+//! accuracy of the functional twin (the Pallas crossbar kernel semantics
+//! via the golden artifacts are exercised in E8; here the noise-accuracy
+//! relation uses the crossbar ref model constants).
+
+#[path = "util.rs"]
+mod util;
+
+use archytas::accel::{Accelerator, Compute, CpuCore, CrossbarNvm, DigitalNpu, Photonic, Precision};
+
+fn main() {
+    util::banner("E7", "photonic / analog MVM vs digital");
+    let devices: Vec<(&str, Box<dyn Accelerator>, Precision)> = vec![
+        ("photonic", Box::new(Photonic::default()), Precision::Analog),
+        ("nvm-crossbar", Box::new(CrossbarNvm::default()), Precision::Analog),
+        ("digital-npu", Box::new(DigitalNpu::default()), Precision::Int8),
+        ("riscv-cpu", Box::new(CpuCore::default()), Precision::Int8),
+    ];
+    println!(
+        "{:<14} {:>6} {:>10} {:>10} {:>10} {:>10}",
+        "device", "N", "cycles", "TOPS", "pJ/MAC", "W"
+    );
+    for n in [64usize, 128, 256, 512, 1024] {
+        for (name, dev, p) in &devices {
+            let c = Compute::MatMul { m: n, k: n, n };
+            let m = dev.cost(&c, *p);
+            println!(
+                "{:<14} {:>6} {:>10} {:>10.2} {:>10.3} {:>10.3}",
+                name,
+                n,
+                m.cycles,
+                m.tops(dev.freq_ghz()),
+                m.total_energy_pj() / c.ops() as f64,
+                m.watts(dev.freq_ghz()),
+            );
+        }
+        println!();
+    }
+
+    println!("-- small-batch overhead (m=1 MVM, the laser/ADC tax) --");
+    println!("{:<14} {:>10} {:>12}", "device", "pJ/MAC m=1", "pJ/MAC m=4096");
+    for (name, dev, p) in &devices {
+        let small = dev.cost(&Compute::MatMul { m: 1, k: 64, n: 64 }, *p);
+        let big = dev.cost(&Compute::MatMul { m: 4096, k: 64, n: 64 }, *p);
+        println!(
+            "{:<14} {:>10.3} {:>12.3}",
+            name,
+            small.total_energy_pj() / (64.0 * 64.0),
+            big.total_energy_pj() / (4096.0 * 64.0 * 64.0)
+        );
+    }
+    println!("\nexpected shape: photonic tops the raw TOPS chart at large N with lowest");
+    println!("pJ/MAC; the m=1 column shows the ADC/laser overhead crossover; CPU last.");
+}

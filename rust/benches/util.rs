@@ -1,0 +1,41 @@
+//! Shared helpers for the bench harnesses (criterion is not in the
+//! offline image; benches are `harness = false` binaries that print the
+//! paper-style tables — DESIGN.md §6).
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+use std::time::Instant;
+
+/// Wall-clock one run of `f` in seconds.
+pub fn time_once<T>(mut f: impl FnMut() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Mean wall-clock seconds over `iters` runs (after one warmup).
+pub fn time_avg(iters: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Pretty time for table cells.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Section banner.
+pub fn banner(id: &str, title: &str) {
+    println!("\n================================================================");
+    println!("{id}: {title}");
+    println!("================================================================");
+}

@@ -1,0 +1,112 @@
+//! Scalar RISC-V core model: the general-purpose-processor fallback of
+//! the fabric (paper Sec. III "GPPs, in particular based on RISC-V") and
+//! the fetch-to-core baseline every accelerator is compared against.
+
+use crate::metrics::{Area, Category, Metrics, Roofline};
+
+use super::{Accelerator, Compute, Precision};
+
+/// In-order RISC-V core with a small SIMD unit.
+#[derive(Debug, Clone)]
+pub struct CpuCore {
+    pub freq_ghz: f64,
+    /// MACs retired per cycle (RVV-lite: 4 int8 / 2 f32).
+    pub macs_per_cycle_int8: f64,
+    pub macs_per_cycle_f32: f64,
+    /// Core energy per cycle, pJ (pipeline + regfile + I$).
+    pub e_cycle_pj: f64,
+    /// D$ access energy, pJ/byte.
+    pub e_dcache_pj_byte: f64,
+    pub feed_gbs: f64,
+}
+
+impl Default for CpuCore {
+    fn default() -> Self {
+        CpuCore {
+            freq_ghz: 1.0,
+            macs_per_cycle_int8: 4.0,
+            macs_per_cycle_f32: 2.0,
+            e_cycle_pj: 20.0,
+            e_dcache_pj_byte: 1.2,
+            feed_gbs: 8.0,
+        }
+    }
+}
+
+impl Accelerator for CpuCore {
+    fn name(&self) -> &'static str {
+        "riscv-cpu"
+    }
+
+    fn supports(&self, p: Precision) -> bool {
+        matches!(p, Precision::F32 | Precision::Int8)
+    }
+
+    fn cost(&self, c: &Compute, p: Precision) -> Metrics {
+        debug_assert!(self.supports(p));
+        let mut m = Metrics::new();
+        m.ops = c.ops();
+        let rate = match p {
+            Precision::Int8 => self.macs_per_cycle_int8,
+            _ => self.macs_per_cycle_f32,
+        };
+        let compute_cycles = (c.ops() as f64 / rate).ceil() as u64;
+        let feed_cycles = ((c.io_bytes(p) + c.weight_bytes(p)) as f64
+            / (self.feed_gbs / self.freq_ghz))
+            .ceil() as u64;
+        m.cycles = compute_cycles.max(feed_cycles).max(1);
+        m.add_energy(Category::Compute, m.cycles as f64 * self.e_cycle_pj);
+        m.add_energy(
+            Category::Sram,
+            (c.io_bytes(p) + c.weight_bytes(p)) as f64 * self.e_dcache_pj_byte,
+        );
+        m.bytes_moved = c.io_bytes(p);
+        m
+    }
+
+    fn area(&self) -> Area {
+        Area::new(0.5)
+    }
+
+    fn freq_ghz(&self) -> f64 {
+        self.freq_ghz
+    }
+
+    fn roofline(&self) -> Roofline {
+        Roofline {
+            peak_ops: self.macs_per_cycle_int8 * self.freq_ghz * 1e9,
+            mem_bw: self.feed_gbs * 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_of_magnitude_slower_than_npu() {
+        let cpu = CpuCore::default();
+        let npu = super::super::DigitalNpu::default();
+        let c = Compute::MatMul { m: 128, k: 256, n: 128 };
+        let cc = cpu.cost(&c, Precision::Int8);
+        let nc = npu.cost(&c, Precision::Int8);
+        assert!(cc.cycles > 100 * nc.cycles, "cpu {} npu {}", cc.cycles, nc.cycles);
+    }
+
+    #[test]
+    fn int8_twice_the_rate_of_f32() {
+        let cpu = CpuCore::default();
+        let c = Compute::MatMul { m: 64, k: 64, n: 64 };
+        let i8c = cpu.cost(&c, Precision::Int8);
+        let f32c = cpu.cost(&c, Precision::F32);
+        assert!(f32c.cycles >= 2 * i8c.cycles - 2);
+    }
+
+    #[test]
+    fn elementwise_is_cheapish() {
+        let cpu = CpuCore::default();
+        let m = cpu.cost(&Compute::Elementwise { elems: 1000 }, Precision::F32);
+        assert!(m.cycles >= 250 && m.cycles <= 2100, "{}", m.cycles);
+    }
+}

@@ -1,0 +1,179 @@
+//! Post-CMOS accelerator models (paper Sec. II).
+//!
+//! One analytic latency/energy/area model per accelerator family the
+//! ARCHYTAS project targets, all behind the [`Accelerator`] trait so the
+//! fabric, mapper and DSE treat them uniformly:
+//!
+//! * [`DigitalNpu`] — systolic-array digital NPU (the "conventional"
+//!   baseline tile, Marsellus/PULP-class).
+//! * [`CrossbarNvm`] — non-volatile-memory analog crossbar (ISAAC/PUMA
+//!   class): weights stationary as conductances, DAC/ADC dominated.
+//! * [`Photonic`] — photonic tensor core (Feldmann'21 / Xu'21 class):
+//!   WDM-parallel MVM at modulator rate, laser + ADC overheads.
+//! * [`Neuromorphic`] — event-driven SNN core (Loihi-class): energy
+//!   proportional to spike traffic.
+//! * [`CpuCore`] — scalar RISC-V core (the GPP fallback and the
+//!   fetch-to-core baseline).
+//!
+//! The *functional* twin of the analog models is the Pallas crossbar
+//! kernel (python/compile/kernels/crossbar.py); constants here and there
+//! are kept in sync (ANALOG_* in model.py).
+
+mod cpu;
+mod crossbar;
+mod neuromorphic;
+mod npu;
+mod photonic;
+
+pub use cpu::CpuCore;
+pub use crossbar::CrossbarNvm;
+pub use neuromorphic::Neuromorphic;
+pub use npu::DigitalNpu;
+pub use photonic::Photonic;
+
+use crate::metrics::{Area, Metrics, Roofline};
+
+/// Numeric precision a compute op runs at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    Int8,
+    /// Analog compute (level-quantized weights + ADC read-out).
+    Analog,
+}
+
+/// Device-independent compute descriptor (what the mapper hands to a CU).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Compute {
+    /// Dense matmul `[m,k] x [k,n]`.
+    MatMul { m: usize, k: usize, n: usize },
+    /// Elementwise / activation over `elems` values.
+    Elementwise { elems: usize },
+    /// Event-driven SNN layer: `synapses` potential connections at
+    /// `activity` spike rate.
+    SpikingLayer { synapses: usize, activity: f64 },
+}
+
+impl Compute {
+    /// Nominal op count (MACs for matmul, 1/elem otherwise).
+    pub fn ops(&self) -> u64 {
+        match self {
+            Compute::MatMul { m, k, n } => (*m as u64) * (*k as u64) * (*n as u64),
+            Compute::Elementwise { elems } => *elems as u64,
+            Compute::SpikingLayer { synapses, activity } => {
+                (*synapses as f64 * activity) as u64
+            }
+        }
+    }
+
+    /// Input + output bytes at the given precision (weights excluded —
+    /// weight residency is the tile's concern).
+    pub fn io_bytes(&self, p: Precision) -> u64 {
+        let b = match p {
+            Precision::F32 => 4,
+            Precision::Int8 | Precision::Analog => 1,
+        };
+        match self {
+            Compute::MatMul { m, k, n } => ((m * k + m * n) as u64) * b,
+            Compute::Elementwise { elems } => 2 * (*elems as u64) * b,
+            Compute::SpikingLayer { synapses, .. } => (*synapses as u64) / 8,
+        }
+    }
+
+    /// Weight bytes (stationary data a tile must hold or stream).
+    pub fn weight_bytes(&self, p: Precision) -> u64 {
+        let b = match p {
+            Precision::F32 => 4,
+            Precision::Int8 | Precision::Analog => 1,
+        };
+        match self {
+            Compute::MatMul { k, n, .. } => (*k as u64) * (*n as u64) * b,
+            _ => 0,
+        }
+    }
+}
+
+/// The common accelerator interface.
+pub trait Accelerator: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Whether this device can run ops at precision `p`.
+    fn supports(&self, p: Precision) -> bool;
+
+    /// Latency (device cycles at `freq_ghz`) and energy for one compute.
+    /// Implementations must set `cycles`, `ops` and energy categories.
+    fn cost(&self, c: &Compute, p: Precision) -> Metrics;
+
+    /// Silicon (or photonic die) area.
+    fn area(&self) -> Area;
+
+    /// Device clock, GHz.
+    fn freq_ghz(&self) -> f64;
+
+    /// Peak throughput / feed bandwidth for roofline sanity checks.
+    fn roofline(&self) -> Roofline;
+
+    /// pJ per MAC at the device's preferred precision (headline metric).
+    fn pj_per_mac(&self) -> f64 {
+        let c = Compute::MatMul { m: 128, k: 128, n: 128 };
+        let p = if self.supports(Precision::Analog) {
+            Precision::Analog
+        } else if self.supports(Precision::Int8) {
+            Precision::Int8
+        } else {
+            Precision::F32
+        };
+        let m = self.cost(&c, p);
+        m.total_energy_pj() / c.ops() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_ops_and_bytes() {
+        let mm = Compute::MatMul { m: 4, k: 8, n: 2 };
+        assert_eq!(mm.ops(), 64);
+        assert_eq!(mm.io_bytes(Precision::F32), (32 + 8) * 4);
+        assert_eq!(mm.io_bytes(Precision::Int8), 40);
+        assert_eq!(mm.weight_bytes(Precision::F32), 64);
+        let ew = Compute::Elementwise { elems: 10 };
+        assert_eq!(ew.ops(), 10);
+        assert_eq!(ew.weight_bytes(Precision::F32), 0);
+        let sp = Compute::SpikingLayer { synapses: 1000, activity: 0.1 };
+        assert_eq!(sp.ops(), 100);
+    }
+
+    /// Cross-device headline relations the paper leans on (E1/E7 shape):
+    /// analog/photonic MVM beats digital on pJ/MAC; everything beats the
+    /// scalar CPU.
+    #[test]
+    fn efficiency_ordering() {
+        let npu = DigitalNpu::default();
+        let xbar = CrossbarNvm::default();
+        let pho = Photonic::default();
+        let cpu = CpuCore::default();
+        assert!(xbar.pj_per_mac() < npu.pj_per_mac(), "crossbar < npu");
+        assert!(pho.pj_per_mac() < npu.pj_per_mac(), "photonic < npu");
+        assert!(npu.pj_per_mac() < cpu.pj_per_mac(), "npu < cpu");
+    }
+
+    #[test]
+    fn rooflines_are_positive_and_consistent() {
+        let devs: Vec<Box<dyn Accelerator>> = vec![
+            Box::new(DigitalNpu::default()),
+            Box::new(CrossbarNvm::default()),
+            Box::new(Photonic::default()),
+            Box::new(Neuromorphic::default()),
+            Box::new(CpuCore::default()),
+        ];
+        for d in devs {
+            let r = d.roofline();
+            assert!(r.peak_ops > 0.0 && r.mem_bw > 0.0, "{}", d.name());
+            assert!(d.area().mm2 > 0.0);
+            assert!(d.freq_ghz() > 0.0);
+        }
+    }
+}

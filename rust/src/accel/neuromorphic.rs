@@ -1,0 +1,129 @@
+//! Neuromorphic (event-driven SNN) core model, Loihi-class: energy and
+//! time scale with *spike traffic*, not with the dense synapse count —
+//! the activity-proportionality that experiment E9 sweeps.
+
+use crate::metrics::{Area, Category, Metrics, Roofline};
+
+use super::{Accelerator, Compute, Precision};
+
+/// Event-driven spiking neural core.
+#[derive(Debug, Clone)]
+pub struct Neuromorphic {
+    /// Synaptic events processed per cycle.
+    pub events_per_cycle: f64,
+    pub freq_ghz: f64,
+    /// Energy per synaptic event, pJ (Loihi: ~23 pJ incl. overheads;
+    /// newer cores ~1-5).
+    pub e_event_pj: f64,
+    /// Energy per neuron update, pJ.
+    pub e_neuron_pj: f64,
+    /// Static/idle power share, pJ per cycle.
+    pub e_idle_pj_cycle: f64,
+    /// Feed bandwidth (spike packets), GB/s.
+    pub feed_gbs: f64,
+}
+
+impl Default for Neuromorphic {
+    fn default() -> Self {
+        Neuromorphic {
+            events_per_cycle: 8.0,
+            freq_ghz: 0.5,
+            e_event_pj: 4.0,
+            e_neuron_pj: 1.0,
+            e_idle_pj_cycle: 2.0,
+            feed_gbs: 4.0,
+        }
+    }
+}
+
+impl Accelerator for Neuromorphic {
+    fn name(&self) -> &'static str {
+        "neuromorphic"
+    }
+
+    fn supports(&self, p: Precision) -> bool {
+        // Spiking cores are their own numeric regime; we bucket them with
+        // Analog (non-exact) precision.
+        p == Precision::Analog
+    }
+
+    fn cost(&self, c: &Compute, p: Precision) -> Metrics {
+        debug_assert!(self.supports(p));
+        let mut m = Metrics::new();
+        m.ops = c.ops();
+        match *c {
+            Compute::SpikingLayer { synapses, activity } => {
+                let events = (synapses as f64 * activity).ceil();
+                m.cycles = ((events / self.events_per_cycle).ceil() as u64).max(1);
+                m.add_energy(Category::Compute, events * self.e_event_pj);
+                // Neuron updates: ~sqrt(synapses) neurons as a first-order
+                // fanout model.
+                let neurons = (synapses as f64).sqrt();
+                m.add_energy(Category::Compute, neurons * self.e_neuron_pj);
+                m.add_energy(Category::Leakage, m.cycles as f64 * self.e_idle_pj_cycle);
+            }
+            // Rate-coded fallback for non-spiking ops: every MAC becomes
+            // ~activity=1 events (dense) — deliberately unattractive, the
+            // mapper should not put dense GEMMs here.
+            Compute::MatMul { .. } | Compute::Elementwise { .. } => {
+                let events = c.ops() as f64;
+                m.cycles = ((events / self.events_per_cycle).ceil() as u64).max(1);
+                m.add_energy(Category::Compute, events * self.e_event_pj);
+                m.add_energy(Category::Leakage, m.cycles as f64 * self.e_idle_pj_cycle);
+            }
+        }
+        m.bytes_moved = c.io_bytes(p);
+        m
+    }
+
+    fn area(&self) -> Area {
+        Area::new(2.0)
+    }
+
+    fn freq_ghz(&self) -> f64 {
+        self.freq_ghz
+    }
+
+    fn roofline(&self) -> Roofline {
+        Roofline {
+            peak_ops: self.events_per_cycle * self.freq_ghz * 1e9,
+            mem_bw: self.feed_gbs * 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_proportional_to_activity() {
+        let n = Neuromorphic::default();
+        let lo = n.cost(&Compute::SpikingLayer { synapses: 1_000_000, activity: 0.05 },
+                        Precision::Analog);
+        let hi = n.cost(&Compute::SpikingLayer { synapses: 1_000_000, activity: 0.50 },
+                        Precision::Analog);
+        let ratio = hi.total_energy_pj() / lo.total_energy_pj();
+        assert!((ratio - 10.0).abs() < 1.0, "{ratio}");
+    }
+
+    #[test]
+    fn sparse_snn_beats_dense_fallback() {
+        let n = Neuromorphic::default();
+        let sparse = n.cost(&Compute::SpikingLayer { synapses: 1 << 20, activity: 0.05 },
+                            Precision::Analog);
+        let dense = n.cost(&Compute::MatMul { m: 32, k: 128, n: 256 }, Precision::Analog);
+        // Same synapse count (32*128*256 = 2^20) but dense pays full rate.
+        assert!(sparse.total_energy_pj() < dense.total_energy_pj() / 10.0);
+    }
+
+    #[test]
+    fn latency_scales_with_events() {
+        let n = Neuromorphic::default();
+        let a = n.cost(&Compute::SpikingLayer { synapses: 80_000, activity: 0.1 },
+                       Precision::Analog);
+        let b = n.cost(&Compute::SpikingLayer { synapses: 800_000, activity: 0.1 },
+                       Precision::Analog);
+        assert!(b.cycles >= 9 * a.cycles);
+    }
+}

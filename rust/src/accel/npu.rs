@@ -1,0 +1,152 @@
+//! Digital NPU model: an S×S output-stationary systolic MAC array with a
+//! double-buffered SRAM operand path (Marsellus / Gemmini / PULP-cluster
+//! NPU class — the "conventional digital NPU" tile of paper Fig. 1).
+
+use crate::metrics::{Area, Category, Metrics, Roofline};
+
+use super::{Accelerator, Compute, Precision};
+
+/// Systolic-array digital NPU.
+#[derive(Debug, Clone)]
+pub struct DigitalNpu {
+    /// Array edge (S×S MACs).
+    pub size: usize,
+    pub freq_ghz: f64,
+    /// Energy per int8 MAC, pJ (7nm-class digital: ~0.05-0.1).
+    pub e_mac_int8_pj: f64,
+    /// f32 MAC multiplier vs int8 (energy and half the lanes).
+    pub f32_factor: f64,
+    /// Local SRAM access energy, pJ/byte.
+    pub e_sram_pj_byte: f64,
+    /// Operand feed bandwidth, bytes/cycle.
+    pub feed_bytes_cycle: f64,
+}
+
+impl Default for DigitalNpu {
+    fn default() -> Self {
+        DigitalNpu {
+            size: 128,
+            freq_ghz: 1.0,
+            e_mac_int8_pj: 0.08,
+            f32_factor: 4.0,
+            e_sram_pj_byte: 0.6,
+            feed_bytes_cycle: 256.0,
+        }
+    }
+}
+
+impl Accelerator for DigitalNpu {
+    fn name(&self) -> &'static str {
+        "digital-npu"
+    }
+
+    fn supports(&self, p: Precision) -> bool {
+        matches!(p, Precision::F32 | Precision::Int8)
+    }
+
+    fn cost(&self, c: &Compute, p: Precision) -> Metrics {
+        debug_assert!(self.supports(p));
+        let mut m = Metrics::new();
+        m.ops = c.ops();
+        match *c {
+            Compute::MatMul { m: mm, k, n } => {
+                let s = self.size;
+                // f32 runs at quarter rate (lane pairing + wider MACs).
+                let rate_penalty = if p == Precision::F32 { 4 } else { 1 };
+                let tiles_m = mm.div_ceil(s);
+                let tiles_n = n.div_ceil(s);
+                // Output-stationary: each (s, s) output tile streams K
+                // operand pairs; pipeline fill adds 2S.
+                let per_tile = k + 2 * s;
+                let compute = (tiles_m * tiles_n * per_tile * rate_penalty) as u64;
+                // Feed constraint: operands must cross the SRAM port.
+                let feed = (c.io_bytes(p) + c.weight_bytes(p)) as f64 / self.feed_bytes_cycle;
+                m.cycles = compute.max(feed.ceil() as u64);
+                let e_mac = match p {
+                    Precision::Int8 => self.e_mac_int8_pj,
+                    _ => self.e_mac_int8_pj * self.f32_factor,
+                };
+                m.add_energy(Category::Compute, c.ops() as f64 * e_mac);
+                m.add_energy(
+                    Category::Sram,
+                    (c.io_bytes(p) + c.weight_bytes(p)) as f64 * self.e_sram_pj_byte,
+                );
+            }
+            Compute::Elementwise { elems } => {
+                // Vector unit: one lane-row per cycle.
+                m.cycles = (elems.div_ceil(self.size)) as u64;
+                m.add_energy(Category::Compute, elems as f64 * 0.02);
+                m.add_energy(Category::Sram, c.io_bytes(p) as f64 * self.e_sram_pj_byte);
+            }
+            Compute::SpikingLayer { .. } => {
+                // Dense fallback: evaluate all synapses.
+                let syn = match *c {
+                    Compute::SpikingLayer { synapses, .. } => synapses,
+                    _ => unreachable!(),
+                };
+                m.cycles = (syn.div_ceil(self.size * self.size)) as u64;
+                m.add_energy(Category::Compute, syn as f64 * self.e_mac_int8_pj);
+            }
+        }
+        m.bytes_moved = c.io_bytes(p);
+        m
+    }
+
+    fn area(&self) -> Area {
+        // ~0.0006 mm²/int8 MAC + SRAM macro overhead (7nm-class).
+        Area::new(self.size as f64 * self.size as f64 * 0.0006 + 1.5)
+    }
+
+    fn freq_ghz(&self) -> f64 {
+        self.freq_ghz
+    }
+
+    fn roofline(&self) -> Roofline {
+        Roofline {
+            peak_ops: (self.size * self.size) as f64 * self.freq_ghz * 1e9,
+            mem_bw: self.feed_bytes_cycle * self.freq_ghz * 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_tile_utilization_near_peak() {
+        let npu = DigitalNpu::default();
+        let c = Compute::MatMul { m: 128, k: 1024, n: 128 };
+        let m = npu.cost(&c, Precision::Int8);
+        let achieved = m.tops(npu.freq_ghz()) * 1e12;
+        let eff = npu.roofline().efficiency(
+            c.ops() as f64 / (c.io_bytes(Precision::Int8) + c.weight_bytes(Precision::Int8)) as f64,
+            achieved,
+        );
+        assert!(eff > 0.7, "eff {eff}");
+    }
+
+    #[test]
+    fn small_matmul_underutilizes() {
+        let npu = DigitalNpu::default();
+        let big = npu.cost(&Compute::MatMul { m: 128, k: 512, n: 128 }, Precision::Int8);
+        let small = npu.cost(&Compute::MatMul { m: 8, k: 512, n: 8 }, Precision::Int8);
+        let tput = |m: &Metrics| m.ops as f64 / m.cycles as f64;
+        assert!(tput(&big) > 50.0 * tput(&small), "{} {}", tput(&big), tput(&small));
+    }
+
+    #[test]
+    fn f32_slower_and_hungrier_than_int8() {
+        let npu = DigitalNpu::default();
+        let c = Compute::MatMul { m: 128, k: 256, n: 128 };
+        let i8c = npu.cost(&c, Precision::Int8);
+        let f32c = npu.cost(&c, Precision::F32);
+        assert!(f32c.cycles > i8c.cycles);
+        assert!(f32c.total_energy_pj() > i8c.total_energy_pj());
+    }
+
+    #[test]
+    fn rejects_analog() {
+        assert!(!DigitalNpu::default().supports(Precision::Analog));
+    }
+}

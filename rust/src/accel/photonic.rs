@@ -1,0 +1,166 @@
+//! Photonic tensor core model (the paper's "Processing-On-the-Flight"
+//! accelerator; Feldmann'21 photonic tensor core and Xu'21 11-TOPS
+//! convolutional accelerator are the calibration points).
+//!
+//! An N×N coherent mesh (or N-wavelength WDM bank) performs one N-vector
+//! MVM per modulator clock once the weights are programmed (thermo-optic
+//! phase shifters — slow to program, weights-stationary at inference).
+//! Throughput scales as N² × modulator rate; the energy floor is set not
+//! by the optics (≈ free) but by the electrical periphery: modulators,
+//! ADCs at the readout, and the continuous laser power.
+
+use crate::metrics::{Area, Category, Metrics, Roofline};
+
+use super::{Accelerator, Compute, Precision};
+
+/// Photonic MVM engine.
+#[derive(Debug, Clone)]
+pub struct Photonic {
+    /// Optical port count N (mesh edge / WDM channels).
+    pub size: usize,
+    /// Modulator clock, GHz (10+ GHz is routine).
+    pub mod_rate_ghz: f64,
+    /// Laser wall power, mW (continuous while the engine is on).
+    pub laser_mw: f64,
+    /// Wall-plug laser efficiency already folded into `laser_mw`.
+    /// Energy per modulator toggle, pJ.
+    pub e_mod_pj: f64,
+    /// Energy per readout ADC conversion, pJ (high-speed: ~1-2 pJ).
+    pub e_adc_pj: f64,
+    /// Electrical feed bandwidth, GB/s.
+    pub feed_gbs: f64,
+    /// Thermo-optic weight programming/settling time per weight-tile
+    /// load, microseconds (phase shifters are slow — the reason photonic
+    /// engines are weights-stationary).
+    pub program_us: f64,
+    /// Weight-residency reuse factor: how many calls a programmed tile
+    /// serves before reprogramming (inference batching). Programming cost
+    /// is amortized by this factor.
+    pub reuse: u64,
+}
+
+impl Default for Photonic {
+    fn default() -> Self {
+        Photonic {
+            size: 64,
+            mod_rate_ghz: 10.0,
+            laser_mw: 100.0,
+            e_mod_pj: 0.3,
+            e_adc_pj: 1.5,
+            feed_gbs: 64.0,
+            program_us: 5.0,
+            reuse: 64,
+        }
+    }
+}
+
+impl Accelerator for Photonic {
+    fn name(&self) -> &'static str {
+        "photonic"
+    }
+
+    fn supports(&self, p: Precision) -> bool {
+        p == Precision::Analog
+    }
+
+    fn cost(&self, c: &Compute, p: Precision) -> Metrics {
+        debug_assert!(self.supports(p));
+        let mut m = Metrics::new();
+        m.ops = c.ops();
+        match *c {
+            Compute::MatMul { m: mm, k, n } => {
+                let row_tiles = k.div_ceil(self.size) as u64;
+                let col_tiles = n.div_ceil(self.size) as u64;
+                // One MVM slice per modulator clock; weight reprogramming
+                // between column tiles is amortized (weights-stationary
+                // inference: col_tiles small).
+                let shots = mm as u64 * row_tiles * col_tiles;
+                // Each distinct weight tile must be programmed once
+                // (thermo-optic settle, laser burning), amortized over
+                // `reuse` calls of the same resident weights.
+                let program_cycles =
+                    (self.program_us * 1e-6 * self.mod_rate_ghz * 1e9).ceil() as u64
+                        * row_tiles
+                        * col_tiles
+                        / self.reuse.max(1);
+                m.cycles = shots.max(1) + program_cycles;
+                // Per shot: N modulator toggles + N ADC conversions.
+                m.add_energy(Category::Adc, shots as f64 * self.size as f64 * self.e_adc_pj);
+                m.add_energy(
+                    Category::Compute,
+                    shots as f64 * self.size as f64 * self.e_mod_pj,
+                );
+                // Laser burns continuously for the duration.
+                let dur_s = m.cycles as f64 / (self.mod_rate_ghz * 1e9);
+                m.add_energy(Category::Laser, self.laser_mw * 1e-3 * dur_s * 1e12);
+            }
+            Compute::Elementwise { elems } => {
+                // No optical nonlinearity assumed: digital periphery.
+                m.cycles = elems.div_ceil(self.size) as u64;
+                m.add_energy(Category::Compute, elems as f64 * 0.02);
+            }
+            Compute::SpikingLayer { synapses, activity } => {
+                let shots = ((synapses as f64 * activity) / (self.size * self.size) as f64)
+                    .ceil() as u64;
+                m.cycles = shots.max(1);
+                m.add_energy(Category::Adc, shots as f64 * self.size as f64 * self.e_adc_pj);
+            }
+        }
+        m.bytes_moved = c.io_bytes(p);
+        m
+    }
+
+    fn area(&self) -> Area {
+        // Photonic meshes are big: ~(N * 60um)² of silicon photonics
+        // + ADC bank.
+        let edge_mm = self.size as f64 * 0.06;
+        Area::new(edge_mm * edge_mm + 1.0)
+    }
+
+    fn freq_ghz(&self) -> f64 {
+        self.mod_rate_ghz
+    }
+
+    fn roofline(&self) -> Roofline {
+        Roofline {
+            peak_ops: (self.size * self.size) as f64 * self.mod_rate_ghz * 1e9,
+            mem_bw: self.feed_gbs * 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_tops_at_full_tilt() {
+        // Xu'21 headline shape: N=64 @ 10 GHz => 40+ TOPS peak.
+        let p = Photonic::default();
+        assert!(p.roofline().peak_ops > 10e12, "{}", p.roofline().peak_ops);
+        let c = Compute::MatMul { m: 4096, k: 64, n: 64 };
+        let m = p.cost(&c, Precision::Analog);
+        let tops = m.tops(p.freq_ghz());
+        assert!(tops > 10.0, "{tops}");
+    }
+
+    #[test]
+    fn laser_overhead_dominates_small_batches() {
+        // Single small MVM: the laser + ADC tax swamps the useful work —
+        // the crossover the E7 bench sweeps.
+        let p = Photonic::default();
+        let small = p.cost(&Compute::MatMul { m: 1, k: 64, n: 64 }, Precision::Analog);
+        let big = p.cost(&Compute::MatMul { m: 4096, k: 64, n: 64 }, Precision::Analog);
+        let pj_small = small.total_energy_pj() / small.ops as f64;
+        let pj_big = big.total_energy_pj() / big.ops as f64;
+        assert!(pj_small > pj_big, "{pj_small} vs {pj_big}");
+    }
+
+    #[test]
+    fn adc_plus_mod_set_energy_floor() {
+        let p = Photonic::default();
+        let m = p.cost(&Compute::MatMul { m: 1024, k: 64, n: 64 }, Precision::Analog);
+        let periph = m.energy(Category::Adc) + m.energy(Category::Compute);
+        assert!(periph > 0.6 * m.total_energy_pj());
+    }
+}

@@ -1,0 +1,407 @@
+//! Command-line interface (hand-rolled — no clap in the offline image).
+//!
+//! Subcommands:
+//! * `simulate` — compile + map + co-simulate a workload on a fabric.
+//! * `dse`      — NoC topology design-space exploration.
+//! * `dram`     — DRAM/PIM subsystem study (E3 rows).
+//! * `run`      — execute an AOT artifact functionally and verify golden.
+//! * `serve`    — batched-inference demo over an artifact.
+//! * `report`   — environment + artifact inventory.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::accel::Precision;
+use crate::compiler::mapper::{map_graph, MapStrategy};
+use crate::compiler::lowering::lower;
+use crate::config::{FabricConfig, WorkloadConfig};
+use crate::coordinator::{cosim, BatchServer};
+use crate::dram::{DramKind, DramSim, DramTiming, PimCommand, Request};
+use crate::dse::{explore, ExploreConfig, ExploreMethod};
+use crate::fabric::Fabric;
+use crate::runtime::Runtime;
+use crate::workloads;
+use crate::Result;
+
+/// Parsed arguments: positional subcommand + `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter();
+        out.command = it.next().cloned().unwrap_or_else(|| "help".into());
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("expected --flag, got {a:?}");
+            };
+            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            out.flags.insert(key.to_string(), val.clone());
+        }
+        Ok(out)
+    }
+
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+}
+
+pub const HELP: &str = "\
+archytas — post-CMOS accelerator fabric: simulation, compilation, DSE
+
+USAGE: archytas <command> [--flag value]...
+
+COMMANDS:
+  simulate  --fabric <toml-path|default> --model <vit_tiny|mlp|cnn_edge>
+            --precision <f32|int8|analog> --strategy <greedy|rr|ilp>
+  dse       --nodes <n> --method <exhaustive|milp|smt|sim> --max-area <mm2>
+  dram      --kind <ddr4|lpddr4|hbm2> --mode <stream|random|pim> --mb <n>
+  run       --artifact <name> [--dir <artifacts-dir>]
+  serve     --artifact <mlp_digital|mlp_npu_int8> --clients <n> --requests <n>
+  report    [--dir <artifacts-dir>]
+";
+
+/// Execute a parsed command; returns the text report.
+pub fn dispatch(args: &Args) -> Result<String> {
+    match args.command.as_str() {
+        "simulate" => cmd_simulate(args),
+        "dse" => cmd_dse(args),
+        "dram" => cmd_dram(args),
+        "run" => cmd_run(args),
+        "serve" => cmd_serve(args),
+        "report" => cmd_report(args),
+        "help" | "--help" | "-h" => Ok(HELP.to_string()),
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+fn load_fabric(args: &Args) -> Result<Fabric> {
+    let path = args.get("fabric", "default");
+    let cfg = if path == "default" {
+        FabricConfig::default()
+    } else {
+        FabricConfig::from_toml(
+            &std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?,
+        )?
+    };
+    Fabric::build(cfg)
+}
+
+fn build_workload(model: &str) -> Result<crate::ir::Graph> {
+    match model {
+        "vit_tiny" => workloads::vit(&workloads::VitParams::default(), 0),
+        "mlp" => workloads::mlp(8, 256, &[128, 64], 10, 0),
+        "cnn_edge" => workloads::cnn_edge(2, 0),
+        other => bail!("unknown model {other:?}"),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<String> {
+    let fabric = load_fabric(args)?;
+    let model = args.get("model", "vit_tiny");
+    let g = build_workload(model)?;
+    let wl = WorkloadConfig { model: model.into(), batch: 4, precision: args.get("precision", "int8").into() };
+    let precision = match wl.precision.as_str() {
+        "f32" => Precision::F32,
+        "int8" => Precision::Int8,
+        "analog" => Precision::Analog,
+        other => bail!("unknown precision {other:?}"),
+    };
+    let strategy = match args.get("strategy", "greedy") {
+        "greedy" => MapStrategy::Greedy,
+        "rr" => MapStrategy::RoundRobin,
+        "ilp" => MapStrategy::Ilp,
+        other => bail!("unknown strategy {other:?}"),
+    };
+    let mapping = map_graph(&g, &fabric, strategy, precision)?;
+    let prog = lower(&g, &fabric, &mapping)?;
+    let rep = cosim(&fabric, &prog)?;
+    let freq = fabric.cfg.freq_ghz;
+    let mut out = String::new();
+    out += &format!(
+        "simulate: model={model} precision={} strategy={:?} fabric={} ({} tiles, {:.1} mm²)\n",
+        wl.precision,
+        strategy,
+        fabric.cfg.name,
+        fabric.tile_count(),
+        fabric.total_area().mm2,
+    );
+    out += &format!(
+        "  makespan {:>10} cyc  ({:.3} us @ {freq} GHz)\n",
+        rep.cycles,
+        rep.cycles as f64 / (freq * 1e9) * 1e6
+    );
+    out += &format!("  energy   {:>10.1} nJ\n", rep.metrics.total_energy_pj() / 1e3);
+    out += &format!("  transfers {:>9} cyc ({} steps, {} exec)\n",
+        rep.transfer_cycles, prog.steps.len(), rep.exec_steps);
+    out += &format!("  mean tile utilization {:.1}%\n", rep.mean_utilization() * 100.0);
+    for (cat, pj) in rep.metrics.breakdown() {
+        out += &format!("    {cat:<8} {:>12.1} pJ\n", pj);
+    }
+    Ok(out)
+}
+
+fn cmd_dse(args: &Args) -> Result<String> {
+    let cfg = ExploreConfig {
+        min_nodes: args.get_usize("nodes", 16)?,
+        max_area: args.get_f64("max-area", 10.0)?,
+        ..Default::default()
+    };
+    let method = match args.get("method", "exhaustive") {
+        "exhaustive" => ExploreMethod::Exhaustive,
+        "milp" => ExploreMethod::Milp,
+        "smt" => ExploreMethod::Smt,
+        "sim" => ExploreMethod::IterativeSim,
+        other => bail!("unknown method {other:?}"),
+    };
+    let r = explore(&cfg, method)?;
+    let mut out = format!(
+        "dse: nodes>={} method={method:?} solver_evals={} sim_evals={}\n",
+        cfg.min_nodes, r.solver_evals, r.sim_evals
+    );
+    out += &format!(
+        "  {:<12} {:>8} {:>10} {:>8} {:>10} {:>6} {:>9}\n",
+        "topology", "avg-hops", "est-lat", "area", "pJ/KiB", "radix", "sim-lat"
+    );
+    for (i, c) in r.candidates.iter().enumerate() {
+        let marks = format!(
+            "{}{}",
+            if i == r.best { " <= best" } else { "" },
+            if r.front.contains(&i) { " *pareto" } else { "" }
+        );
+        out += &format!(
+            "  {:<12} {:>8.2} {:>10.1} {:>8.2} {:>10.0} {:>6} {:>9}{}\n",
+            c.name,
+            c.avg_hops,
+            c.est_latency,
+            c.area,
+            c.energy_per_kib,
+            c.max_radix,
+            c.sim_latency.map_or("-".into(), |l| format!("{l:.1}")),
+            marks
+        );
+    }
+    Ok(out)
+}
+
+fn cmd_dram(args: &Args) -> Result<String> {
+    let kind = match args.get("kind", "ddr4") {
+        "ddr4" => DramKind::Ddr4_2400,
+        "lpddr4" => DramKind::Lpddr4_3200,
+        "hbm2" => DramKind::Hbm2,
+        other => bail!("unknown dram kind {other:?}"),
+    };
+    let mb = args.get_usize("mb", 1)?;
+    let bytes = mb * 1024 * 1024;
+    let t = DramTiming::new(kind);
+    let mut sim = DramSim::new(t);
+    let mode = args.get("mode", "stream");
+    match mode {
+        "stream" => {
+            for i in 0..(bytes / t.row_bytes) {
+                sim.enqueue(Request::read((i * t.row_bytes) as u64, t.row_bytes));
+            }
+        }
+        "random" => {
+            let mut rng = crate::sim::Rng::new(1);
+            for _ in 0..(bytes / t.burst_bytes).min(16384) {
+                let addr = (rng.below(1 << 26)) as u64 & !63;
+                sim.enqueue(Request::read(addr, t.burst_bytes));
+            }
+        }
+        "pim" => {
+            let macs = (bytes / 4) as u64 / t.banks as u64;
+            for b in 0..t.banks {
+                sim.enqueue(Request::pim(
+                    (b * t.row_bytes) as u64,
+                    PimCommand::BankMac { macs },
+                ));
+            }
+        }
+        other => bail!("unknown mode {other:?}"),
+    }
+    let st = sim.run_to_drain();
+    Ok(format!(
+        "dram: kind={kind:?} mode={mode} footprint={mb} MiB\n\
+         \x20 cycles {:>12}  ({:.3} us)\n\
+         \x20 bandwidth {:>9.2} GB/s (peak {:.2})\n\
+         \x20 energy {:>12.1} nJ  row-hit {:.1}%  acts {}  pim-macs {}\n\
+         \x20 avg latency {:>7.1} cyc\n",
+        st.cycles,
+        st.cycles as f64 / (t.freq_ghz * 1e9) * 1e6,
+        st.bandwidth_gbs(&t),
+        t.peak_bandwidth_gbs(),
+        st.metrics.total_energy_pj() / 1e3,
+        st.row_hit_rate() * 100.0,
+        st.activations,
+        st.pim_macs,
+        st.avg_latency,
+    ))
+}
+
+fn cmd_run(args: &Args) -> Result<String> {
+    let dir = args.get("dir", "");
+    let rt = if dir.is_empty() {
+        Runtime::open_default()?
+    } else {
+        Runtime::open(std::path::Path::new(dir))?
+    };
+    let name = args.get("artifact", "gemm_64");
+    let inputs = rt.registry().golden_inputs(name)?;
+    let want = rt.registry().golden_outputs(name)?;
+    let t0 = std::time::Instant::now();
+    let got = rt.run(name, &inputs)?;
+    let dt = t0.elapsed();
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        worst = worst.max(g.max_abs_diff(w)?);
+    }
+    Ok(format!(
+        "run: artifact={name} exec={:.3} ms outputs={} max|Δ| vs golden = {worst:.2e}  [{}]\n",
+        dt.as_secs_f64() * 1e3,
+        got.len(),
+        if worst < 1e-3 { "OK" } else { "MISMATCH" }
+    ))
+}
+
+fn cmd_serve(args: &Args) -> Result<String> {
+    let rt = Runtime::open_default()?;
+    let name = args.get("artifact", "mlp_digital");
+    let spec = rt.registry().spec(name)?;
+    anyhow::ensure!(
+        spec.inputs.len() == 1 && spec.inputs[0].dims.len() == 2,
+        "serve needs a single 2-D-input artifact (batch, features)"
+    );
+    let batch = spec.inputs[0].dims[0];
+    let feat = spec.inputs[0].dims[1];
+    let out_cols = spec.outputs[0].dims[1];
+    let clients = args.get_usize("clients", 4)?;
+    let per = args.get_usize("requests", 16)?;
+    let exe = rt.executable(name)?;
+    let server = BatchServer::new(feat, out_cols, batch);
+    let t0 = std::time::Instant::now();
+    let (stats, _) = crate::coordinator::serve::drive_server(
+        &server,
+        clients,
+        per,
+        move |c, i| {
+            let mut rng = crate::sim::Rng::new((c * 1000 + i) as u64);
+            (0..feat).map(|_| rng.normal() as f32).collect()
+        },
+        move |input| Ok(exe.run(std::slice::from_ref(input))?.remove(0)),
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(format!(
+        "serve: artifact={name} clients={clients} requests={}\n\
+         \x20 batches {}  mean batch {:.2}/{batch}\n\
+         \x20 p50 {:.0} us  p99 {:.0} us  throughput {:.0} req/s\n",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch(),
+        stats.p50_latency_us(),
+        stats.p99_latency_us(),
+        stats.throughput_rps(wall),
+    ))
+}
+
+fn cmd_report(args: &Args) -> Result<String> {
+    let dir = args.get("dir", "");
+    let dir = if dir.is_empty() { crate::artifacts_dir() } else { dir.into() };
+    let mut out = format!("archytas report\n  artifacts dir: {dir:?}\n");
+    match Runtime::open(&dir) {
+        Ok(rt) => {
+            out += &format!("  artifacts: {}\n", rt.artifact_names().len());
+            for n in rt.artifact_names() {
+                let s = rt.registry().spec(&n).unwrap();
+                out += &format!(
+                    "    {:<22} in={:?} out={:?}\n",
+                    n,
+                    s.inputs.iter().map(|i| i.dims.clone()).collect::<Vec<_>>(),
+                    s.outputs.iter().map(|o| o.dims.clone()).collect::<Vec<_>>()
+                );
+            }
+        }
+        Err(e) => out += &format!("  (no artifacts: {e})\n"),
+    }
+    out += &format!("  default fabric: {:?}\n", FabricConfig::default());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(&argv(&["dse", "--nodes", "32", "--method", "milp"])).unwrap();
+        assert_eq!(a.command, "dse");
+        assert_eq!(a.get("method", ""), "milp");
+        assert_eq!(a.get_usize("nodes", 0).unwrap(), 32);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_rejects_bad_shapes() {
+        assert!(Args::parse(&argv(&["x", "stray"])).is_err());
+        assert!(Args::parse(&argv(&["x", "--flag"])).is_err());
+        let a = Args::parse(&argv(&["x", "--n", "abc"])).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        let h = dispatch(&Args::parse(&argv(&["help"])).unwrap()).unwrap();
+        assert!(h.contains("simulate"));
+        assert!(dispatch(&Args::parse(&argv(&["frobnicate"])).unwrap()).is_err());
+    }
+
+    #[test]
+    fn simulate_smoke() {
+        let a = Args::parse(&argv(&["simulate", "--model", "mlp", "--precision", "int8"]))
+            .unwrap();
+        let out = dispatch(&a).unwrap();
+        assert!(out.contains("makespan"), "{out}");
+        assert!(out.contains("utilization"));
+    }
+
+    #[test]
+    fn dse_smoke_all_methods() {
+        for m in ["exhaustive", "milp", "smt"] {
+            let a = Args::parse(&argv(&["dse", "--nodes", "12", "--method", m])).unwrap();
+            let out = dispatch(&a).unwrap();
+            assert!(out.contains("<= best"), "{m}: {out}");
+        }
+    }
+
+    #[test]
+    fn dram_smoke_modes() {
+        for mode in ["stream", "random", "pim"] {
+            let a = Args::parse(&argv(&["dram", "--mode", mode, "--mb", "1"])).unwrap();
+            let out = dispatch(&a).unwrap();
+            assert!(out.contains("bandwidth"), "{mode}: {out}");
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Lowering: mapped IR graph → [`FabricProgram`], the transfer/compute
+//! step list the coordinator co-simulates (and executes functionally via
+//! the PJRT artifacts).
+
+use anyhow::ensure;
+
+use crate::accel::{Compute, Precision};
+use crate::fabric::{Fabric, Template};
+use crate::ir::Graph;
+use crate::Result;
+
+use super::mapper::{node_compute, Mapping};
+
+/// One program step. `deps` are indices of steps that must complete
+/// first (the coordinator exploits the remaining parallelism).
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// Stage `bytes` from HBM into tile-local memory.
+    Load { tile: usize, bytes: u64, node: usize, deps: Vec<usize> },
+    /// Move `bytes` from one tile to another over the NoC.
+    Transfer { from: usize, to: usize, bytes: u64, node: usize, deps: Vec<usize> },
+    /// Run a compute op on a tile.
+    Exec { tile: usize, node: usize, compute: Compute, precision: Precision, deps: Vec<usize> },
+}
+
+impl Step {
+    pub fn deps(&self) -> &[usize] {
+        match self {
+            Step::Load { deps, .. } | Step::Transfer { deps, .. } | Step::Exec { deps, .. } => deps,
+        }
+    }
+
+    pub fn node(&self) -> usize {
+        match self {
+            Step::Load { node, .. } | Step::Transfer { node, .. } | Step::Exec { node, .. } => {
+                *node
+            }
+        }
+    }
+}
+
+/// A lowered program.
+#[derive(Debug, Clone, Default)]
+pub struct FabricProgram {
+    pub steps: Vec<Step>,
+    /// Step producing each graph node's value (for result lookup).
+    pub producer: Vec<Option<usize>>,
+}
+
+/// Lower a mapped graph. Weight staging: templates B/C load weights once
+/// (TCDM-resident); template A streams weights with every invocation
+/// (its defining cost, paper Fig. 1).
+pub fn lower(g: &Graph, fabric: &Fabric, mapping: &Mapping) -> Result<FabricProgram> {
+    g.validate()?;
+    let mut prog = FabricProgram { steps: Vec::new(), producer: vec![None; g.len()] };
+    // Weight residency: weight idx -> loaded-on-tile step.
+    let mut resident: std::collections::HashMap<(usize, usize), usize> =
+        std::collections::HashMap::new();
+    for id in 0..g.len() {
+        let Some(tile) = mapping.assign[id] else { continue };
+        let c = node_compute(g, id).unwrap();
+        let p = mapping.precision[id];
+        let mut deps = Vec::new();
+        // Operand transfers from producing tiles.
+        for &inp in &g.nodes[id].inputs {
+            match mapping.assign[inp] {
+                Some(src_tile) if src_tile != tile => {
+                    let bytes = (g.nodes[inp].shape[0] * g.nodes[inp].shape[1] * 4) as u64;
+                    let step = Step::Transfer {
+                        from: src_tile,
+                        to: tile,
+                        bytes,
+                        node: inp,
+                        deps: prog.producer[inp].into_iter().collect(),
+                    };
+                    prog.steps.push(step);
+                    deps.push(prog.steps.len() - 1);
+                }
+                Some(_) => {
+                    // same tile: just depend on the producer
+                    if let Some(s) = prog.producer[inp] {
+                        deps.push(s);
+                    }
+                }
+                None => {
+                    // Input or weight from HBM.
+                    let is_weight = g.matmul_weight_idx(&g.nodes[id])
+                        .map(|w| matches!(g.nodes[inp].kind, crate::ir::OpKind::Weight { idx } if idx == w))
+                        .unwrap_or(false)
+                        || matches!(g.nodes[inp].kind, crate::ir::OpKind::Weight { .. });
+                    let bytes = (g.nodes[inp].shape[0] * g.nodes[inp].shape[1] * 4) as u64;
+                    if is_weight && fabric.tiles[tile].template != Template::A {
+                        // Load once per (weight-node, tile).
+                        let key = (inp, tile);
+                        let step_id = match resident.get(&key) {
+                            Some(&s) => s,
+                            None => {
+                                prog.steps.push(Step::Load {
+                                    tile,
+                                    bytes,
+                                    node: inp,
+                                    deps: vec![],
+                                });
+                                let s = prog.steps.len() - 1;
+                                resident.insert(key, s);
+                                s
+                            }
+                        };
+                        deps.push(step_id);
+                    } else {
+                        prog.steps.push(Step::Load { tile, bytes, node: inp, deps: vec![] });
+                        deps.push(prog.steps.len() - 1);
+                    }
+                }
+            }
+        }
+        prog.steps.push(Step::Exec { tile, node: id, compute: c, precision: p, deps });
+        prog.producer[id] = Some(prog.steps.len() - 1);
+    }
+    // Sanity: dependencies point backwards.
+    for (i, s) in prog.steps.iter().enumerate() {
+        ensure!(s.deps().iter().all(|&d| d < i), "forward dep in step {i}");
+    }
+    Ok(prog)
+}
+
+impl FabricProgram {
+    pub fn exec_steps(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, Step::Exec { .. })).count()
+    }
+
+    pub fn transfer_bytes(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                Step::Load { bytes, .. } | Step::Transfer { bytes, .. } => *bytes,
+                Step::Exec { .. } => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::mapper::{map_graph, MapStrategy};
+    use crate::config::FabricConfig;
+    use crate::workloads;
+
+    fn fabric(template: &str) -> Fabric {
+        Fabric::build(
+            FabricConfig::from_toml(&format!(
+                "[noc]\nwidth = 3\nheight = 3\n[[cu]]\nkind = \"npu\"\ntemplate = \"{template}\"\ncount = 4\n"
+            ))
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn lowered(template: &str) -> (Graph, Fabric, FabricProgram) {
+        let g = workloads::mlp(4, 64, &[32], 10, 1).unwrap();
+        let f = fabric(template);
+        let m = map_graph(&g, &f, MapStrategy::Greedy, Precision::Int8).unwrap();
+        let p = lower(&g, &f, &m).unwrap();
+        (g, f, p)
+    }
+
+    use crate::ir::Graph;
+
+    #[test]
+    fn program_covers_all_compute_nodes() {
+        let (g, _, p) = lowered("B");
+        let compute_nodes =
+            (0..g.len()).filter(|&id| node_compute(&g, id).is_some()).count();
+        assert_eq!(p.exec_steps(), compute_nodes);
+        for id in 0..g.len() {
+            if node_compute(&g, id).is_some() {
+                assert!(p.producer[id].is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn deps_are_acyclic_and_backward() {
+        let (_, _, p) = lowered("B");
+        for (i, s) in p.steps.iter().enumerate() {
+            assert!(s.deps().iter().all(|&d| d < i));
+        }
+    }
+
+    #[test]
+    fn template_a_streams_more_than_b() {
+        let (_, _, pa) = lowered("A");
+        let (_, _, pb) = lowered("B");
+        assert!(
+            pa.transfer_bytes() >= pb.transfer_bytes(),
+            "A {} vs B {}",
+            pa.transfer_bytes(),
+            pb.transfer_bytes()
+        );
+    }
+
+    #[test]
+    fn weight_loads_are_deduplicated_on_b() {
+        let (g, _, p) = lowered("B");
+        // Each weight node feeding a matmul should be loaded exactly once
+        // per tile it is used on.
+        let mut loads_per_node: std::collections::HashMap<usize, usize> = Default::default();
+        for s in &p.steps {
+            if let Step::Load { node, .. } = s {
+                *loads_per_node.entry(*node).or_insert(0) += 1;
+            }
+        }
+        for (node, count) in loads_per_node {
+            if matches!(g.nodes[node].kind, crate::ir::OpKind::Weight { .. })
+                && g.nodes[node].shape[0] > 1
+            {
+                assert!(count <= 2, "weight node {node} loaded {count} times");
+            }
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! Layer-to-CU mapping: assign every compute node of an IR graph to a
+//! tile of the fabric (paper Sec. V: "support the mapping of AI
+//! computationally and/or memory intensive kernels to the accelerators").
+//!
+//! Three strategies, compared in the E10 bench:
+//! * `RoundRobin` — naive baseline.
+//! * `Greedy` — earliest-completion-time list scheduling with transport
+//!   awareness (the production default).
+//! * `Ilp` — makespan-minimizing MILP over the matmul nodes (ArchEx-style
+//!   exact reference for small graphs).
+
+use anyhow::{bail, ensure};
+
+use crate::accel::{Compute, Precision};
+use crate::dse::milp::{Milp, Sense};
+use crate::fabric::Fabric;
+use crate::ir::{Graph, OpKind};
+use crate::Result;
+
+/// Mapping strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapStrategy {
+    RoundRobin,
+    Greedy,
+    Ilp,
+}
+
+/// The mapping result.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    /// node -> tile index (None for data nodes).
+    pub assign: Vec<Option<usize>>,
+    /// node -> precision it runs at.
+    pub precision: Vec<Precision>,
+    /// Estimated makespan, fabric cycles (greedy schedule estimate).
+    pub est_cycles: u64,
+    /// Estimated total energy, pJ.
+    pub est_energy_pj: f64,
+}
+
+/// The `Compute` descriptor of a node, if it is a compute node.
+pub fn node_compute(g: &Graph, id: usize) -> Option<Compute> {
+    let n = &g.nodes[id];
+    match n.kind {
+        OpKind::MatMul => {
+            let a = g.nodes[n.inputs[0]].shape;
+            Some(Compute::MatMul { m: a[0], k: a[1], n: n.shape[1] })
+        }
+        OpKind::Input | OpKind::Weight { .. } => None,
+        _ => Some(Compute::Elementwise { elems: n.shape[0] * n.shape[1] }),
+    }
+}
+
+/// Best precision a tile can run a node at, given the preference order.
+///
+/// The preference encodes the *numeric contract* of the compiled model:
+/// an f32 model must not silently run on an analog device, an int8 model
+/// may fall back to f32 (exact superset), and an analog-tolerant model
+/// (noise-aware training / calibration, Sec. V.B) may use anything.
+fn pick_precision(fabric: &Fabric, tile: usize, c: &Compute, prefer: Precision)
+    -> Option<Precision> {
+    let t = &fabric.tiles[tile];
+    let chain: &[Precision] = match prefer {
+        Precision::Analog => &[Precision::Analog, Precision::Int8, Precision::F32],
+        Precision::Int8 => &[Precision::Int8, Precision::F32],
+        Precision::F32 => &[Precision::F32],
+    };
+    // Elementwise on a cluster tile works regardless of accel precision.
+    if matches!(c, Compute::Elementwise { .. }) && t.cluster.is_some() {
+        return Some(Precision::F32);
+    }
+    chain.iter().copied().find(|&p| t.accel.supports(p))
+}
+
+/// Map the graph onto the fabric.
+pub fn map_graph(
+    g: &Graph,
+    fabric: &Fabric,
+    strategy: MapStrategy,
+    prefer: Precision,
+) -> Result<Mapping> {
+    ensure!(fabric.tile_count() > 0, "empty fabric");
+    match strategy {
+        MapStrategy::RoundRobin => round_robin(g, fabric, prefer),
+        MapStrategy::Greedy => greedy(g, fabric, prefer),
+        MapStrategy::Ilp => ilp(g, fabric, prefer),
+    }
+}
+
+fn round_robin(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
+    let mut assign = vec![None; g.len()];
+    let mut precision = vec![Precision::F32; g.len()];
+    let mut next = 0usize;
+    for id in 0..g.len() {
+        let Some(c) = node_compute(g, id) else { continue };
+        // find the next capable tile
+        let mut placed = false;
+        for off in 0..fabric.tile_count() {
+            let t = (next + off) % fabric.tile_count();
+            if let Some(p) = pick_precision(fabric, t, &c, prefer) {
+                assign[id] = Some(t);
+                precision[id] = p;
+                next = t + 1;
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            bail!("no tile can run node {} ({})", id, g.nodes[id].name);
+        }
+    }
+    let (cy, en) = estimate(g, fabric, &assign, &precision)?;
+    Ok(Mapping { assign, precision, est_cycles: cy, est_energy_pj: en })
+}
+
+fn greedy(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
+    let mut assign = vec![None; g.len()];
+    let mut precision = vec![Precision::F32; g.len()];
+    let mut tile_free = vec![0u64; fabric.tile_count()];
+    // node -> (ready time, producing tile)
+    let mut ready: Vec<(u64, Option<usize>)> = vec![(0, None); g.len()];
+    for id in 0..g.len() {
+        let Some(c) = node_compute(g, id) else {
+            // Data nodes are "ready at 0 from HBM".
+            ready[id] = (0, None);
+            continue;
+        };
+        let inputs_ready = g.nodes[id]
+            .inputs
+            .iter()
+            .map(|&i| ready[i].0)
+            .max()
+            .unwrap_or(0);
+        let mut best: Option<(u64, usize, Precision)> = None;
+        for t in 0..fabric.tile_count() {
+            let Some(p) = pick_precision(fabric, t, &c, prefer) else { continue };
+            let cost = fabric.tiles[t].execute(&c, p)?;
+            // Transport from the producing tile (or HBM) of the largest
+            // input.
+            let src = g.nodes[id]
+                .inputs
+                .iter()
+                .filter_map(|&i| ready[i].1)
+                .last();
+            let src_node = src.map(|s| fabric.tiles[s].node).unwrap_or(fabric.hbm_node);
+            let tr = fabric.transport(src_node, fabric.tiles[t].node, cost.noc_bytes);
+            let start = inputs_ready.max(tile_free[t]);
+            let finish = start + tr.cycles + cost.metrics.cycles;
+            if best.map_or(true, |(f, _, _)| finish < f) {
+                best = Some((finish, t, p));
+            }
+        }
+        let Some((finish, t, p)) = best else {
+            bail!("no tile can run node {} ({})", id, g.nodes[id].name);
+        };
+        assign[id] = Some(t);
+        precision[id] = p;
+        tile_free[t] = finish;
+        ready[id] = (finish, Some(t));
+    }
+    let (cy, en) = estimate(g, fabric, &assign, &precision)?;
+    Ok(Mapping { assign, precision, est_cycles: cy, est_energy_pj: en })
+}
+
+fn ilp(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
+    // Exact makespan assignment for the matmul nodes (elementwise nodes
+    // follow their producer's tile afterwards): min T s.t. per-tile
+    // summed cycles <= T, each matmul on exactly one capable tile.
+    let matmuls: Vec<usize> = (0..g.len())
+        .filter(|&id| matches!(g.nodes[id].kind, OpKind::MatMul))
+        .collect();
+    ensure!(!matmuls.is_empty(), "graph has no matmuls to map");
+    let mut m = Milp::new();
+    let big = 1e9;
+    let t_var = m.add_var(0.0, big, 1.0, false); // makespan
+    // x[i][t]
+    let mut x = vec![vec![None; fabric.tile_count()]; matmuls.len()];
+    let mut costs = vec![vec![0.0; fabric.tile_count()]; matmuls.len()];
+    let mut precs = vec![vec![Precision::F32; fabric.tile_count()]; matmuls.len()];
+    for (mi, &id) in matmuls.iter().enumerate() {
+        let c = node_compute(g, id).unwrap();
+        for t in 0..fabric.tile_count() {
+            if let Some(p) = pick_precision(fabric, t, &c, prefer) {
+                let cost = fabric.tiles[t].execute(&c, p)?;
+                let tr = fabric.feed(t, cost.noc_bytes);
+                x[mi][t] = Some(m.add_var(0.0, 1.0, 0.0, true));
+                costs[mi][t] = (cost.metrics.cycles + tr.cycles) as f64;
+                precs[mi][t] = p;
+            }
+        }
+        let row: Vec<(usize, f64)> = x[mi]
+            .iter()
+            .filter_map(|v| v.map(|v| (v, 1.0)))
+            .collect();
+        ensure!(!row.is_empty(), "node {id} unmappable");
+        m.add_constraint(row, Sense::Eq, 1.0);
+    }
+    for t in 0..fabric.tile_count() {
+        let mut row: Vec<(usize, f64)> = Vec::new();
+        for (mi, _) in matmuls.iter().enumerate() {
+            if let Some(v) = x[mi][t] {
+                row.push((v, costs[mi][t]));
+            }
+        }
+        if !row.is_empty() {
+            row.push((t_var, -1.0));
+            m.add_constraint(row, Sense::Le, 0.0);
+        }
+    }
+    let sol = m
+        .minimize()?
+        .ok_or_else(|| anyhow::anyhow!("ILP mapping infeasible"))?;
+    let mut assign = vec![None; g.len()];
+    let mut precision = vec![Precision::F32; g.len()];
+    for (mi, &id) in matmuls.iter().enumerate() {
+        for t in 0..fabric.tile_count() {
+            if let Some(v) = x[mi][t] {
+                if sol.x[v] > 0.5 {
+                    assign[id] = Some(t);
+                    precision[id] = precs[mi][t];
+                }
+            }
+        }
+    }
+    // Elementwise nodes follow their first mapped producer (or tile 0).
+    for id in 0..g.len() {
+        if assign[id].is_some() {
+            continue;
+        }
+        let Some(c) = node_compute(g, id) else { continue };
+        let producer = g.nodes[id]
+            .inputs
+            .iter()
+            .filter_map(|&i| assign[i])
+            .next();
+        let mut t = producer.unwrap_or(0);
+        if pick_precision(fabric, t, &c, prefer).is_none() {
+            t = (0..fabric.tile_count())
+                .find(|&tt| pick_precision(fabric, tt, &c, prefer).is_some())
+                .ok_or_else(|| anyhow::anyhow!("node {id} unmappable"))?;
+        }
+        assign[id] = Some(t);
+        precision[id] = pick_precision(fabric, t, &c, prefer).unwrap();
+    }
+    let (cy, en) = estimate(g, fabric, &assign, &precision)?;
+    Ok(Mapping { assign, precision, est_cycles: cy, est_energy_pj: en })
+}
+
+/// Serial-schedule estimate of a mapping (the lowering/coordinator
+/// recompute this precisely with overlap; this is the mapper's metric).
+fn estimate(
+    g: &Graph,
+    fabric: &Fabric,
+    assign: &[Option<usize>],
+    precision: &[Precision],
+) -> Result<(u64, f64)> {
+    let mut cycles = 0u64;
+    let mut energy = 0.0f64;
+    let mut loc: Vec<Option<usize>> = vec![None; g.len()];
+    for id in 0..g.len() {
+        let Some(t) = assign[id] else { continue };
+        let c = node_compute(g, id).unwrap();
+        let cost = fabric.tiles[t].execute(&c, precision[id])?;
+        let src = g.nodes[id].inputs.iter().filter_map(|&i| loc[i]).last();
+        let src_node = src.map(|s| fabric.tiles[s].node).unwrap_or(fabric.hbm_node);
+        let tr = fabric.transport(src_node, fabric.tiles[t].node, cost.noc_bytes);
+        cycles += cost.metrics.cycles + tr.cycles;
+        energy += cost.metrics.total_energy_pj() + tr.total_energy_pj();
+        loc[id] = Some(t);
+    }
+    Ok((cycles, energy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricConfig;
+    use crate::workloads;
+
+    fn fabric() -> Fabric {
+        Fabric::build(
+            FabricConfig::from_toml(
+                r#"
+[noc]
+width = 3
+height = 3
+
+[[cu]]
+kind = "npu"
+template = "B"
+count = 3
+
+[[cu]]
+kind = "crossbar"
+template = "A"
+count = 2
+
+[[cu]]
+kind = "cpu"
+template = "C"
+count = 1
+"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn all_strategies_produce_complete_mappings() {
+        let g = workloads::mlp(4, 64, &[32], 10, 1).unwrap();
+        let f = fabric();
+        for s in [MapStrategy::RoundRobin, MapStrategy::Greedy, MapStrategy::Ilp] {
+            let m = map_graph(&g, &f, s, Precision::Int8).unwrap();
+            for id in 0..g.len() {
+                let is_compute = node_compute(&g, id).is_some();
+                assert_eq!(m.assign[id].is_some(), is_compute, "{s:?} node {id}");
+            }
+            assert!(m.est_cycles > 0);
+            assert!(m.est_energy_pj > 0.0);
+        }
+    }
+
+    #[test]
+    fn assignments_respect_capabilities() {
+        let g = workloads::mlp(4, 64, &[32], 10, 2).unwrap();
+        let f = fabric();
+        let m = map_graph(&g, &f, MapStrategy::Greedy, Precision::Analog).unwrap();
+        for id in 0..g.len() {
+            if let Some(t) = m.assign[id] {
+                let c = node_compute(&g, id).unwrap();
+                let on_cluster = matches!(c, Compute::Elementwise { .. })
+                    && f.tiles[t].cluster.is_some();
+                assert!(
+                    on_cluster || f.tiles[t].accel.supports(m.precision[id]),
+                    "node {id} on tile {t} at {:?}",
+                    m.precision[id]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_not_worse_than_round_robin() {
+        let g = workloads::vit(&workloads::VitParams::default(), 1).unwrap();
+        let f = fabric();
+        let rr = map_graph(&g, &f, MapStrategy::RoundRobin, Precision::Int8).unwrap();
+        let gr = map_graph(&g, &f, MapStrategy::Greedy, Precision::Int8).unwrap();
+        assert!(
+            gr.est_cycles <= rr.est_cycles,
+            "greedy {} vs rr {}",
+            gr.est_cycles,
+            rr.est_cycles
+        );
+    }
+
+    #[test]
+    fn ilp_balances_matmuls() {
+        let g = workloads::mlp(8, 64, &[64, 64], 10, 3).unwrap();
+        let f = fabric();
+        let m = map_graph(&g, &f, MapStrategy::Ilp, Precision::Int8).unwrap();
+        // 3 matmuls over >=3 capable tiles: the makespan optimum never
+        // stacks all on one tile.
+        let mut used = std::collections::HashSet::new();
+        for id in 0..g.len() {
+            if matches!(g.nodes[id].kind, OpKind::MatMul) {
+                used.insert(m.assign[id].unwrap());
+            }
+        }
+        assert!(used.len() >= 2, "{used:?}");
+    }
+
+    #[test]
+    fn analog_preference_uses_crossbars() {
+        let g = workloads::mlp(4, 64, &[32], 10, 4).unwrap();
+        let f = fabric();
+        let m = map_graph(&g, &f, MapStrategy::Greedy, Precision::Analog).unwrap();
+        let analog_used = (0..g.len()).any(|id| {
+            m.assign[id].map_or(false, |t| f.tiles[t].accel.name() == "nvm-crossbar")
+                && m.precision[id] == Precision::Analog
+        });
+        assert!(analog_used);
+    }
+}

@@ -1,0 +1,23 @@
+//! The ARCHYTAS compiler stack (paper Sec. V, Fig. 2): passes that map AI
+//! kernels onto the heterogeneous fabric.
+//!
+//! * [`pruning`] — magnitude pruning (Sec. V.B).
+//! * [`sparsify`] — structured block sparsification (Sec. V.B + the
+//!   Sec. III microarchitectural sparsity support).
+//! * [`quantize`] — dynamic INT8 quantization with calibration (Sec. V.B).
+//! * [`precision`] — TAFFO-style precision tuning: interval value-range
+//!   analysis from programmer hints, fixed-point type allocation, and
+//!   static error/performance estimation (Sec. V.C).
+//! * [`mapper`] — layer-to-CU assignment over a [`crate::fabric::Fabric`].
+//! * [`lowering`] — mapped graph → [`FabricProgram`] of transfer/compute
+//!   steps the coordinator co-simulates.
+
+pub mod lowering;
+pub mod mapper;
+pub mod precision;
+pub mod pruning;
+pub mod quantize;
+pub mod sparsify;
+
+pub use lowering::{FabricProgram, Step};
+pub use mapper::{MapStrategy, Mapping};

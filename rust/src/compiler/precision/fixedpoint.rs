@@ -1,0 +1,113 @@
+//! Fixed-point type allocation and simulated conversion (TAFFO's
+//! data-type allocation + code conversion stages).
+
+use super::range::Interval;
+
+/// A signed fixed-point format Qm.n: 1 sign bit, `int_bits` integer bits,
+/// `frac_bits` fractional bits (word = 1 + m + n).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl FixedFormat {
+    /// Smallest format of `word_bits` total that covers `range` without
+    /// overflow: integer bits from the magnitude bound, remainder goes to
+    /// fraction. Returns None if the range cannot fit at all.
+    pub fn for_range(range: &Interval, word_bits: u32) -> Option<FixedFormat> {
+        assert!(word_bits >= 2);
+        let m = range.max_abs().max(1e-30);
+        // need int_bits >= ceil(log2(m + 1ulp)); +1e-9 guards exact powers
+        let int_bits = m.log2().floor().max(-1.0) as i64 + 1;
+        let int_bits = int_bits.max(0) as u32;
+        if int_bits > word_bits - 1 {
+            return None;
+        }
+        Some(FixedFormat { int_bits, frac_bits: word_bits - 1 - int_bits })
+    }
+
+    pub fn word_bits(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Representable magnitude bound.
+    pub fn max_value(&self) -> f64 {
+        2f64.powi(self.int_bits as i32) - self.step()
+    }
+
+    /// Quantization step (1 ulp).
+    pub fn step(&self) -> f64 {
+        2f64.powi(-(self.frac_bits as i32))
+    }
+
+    /// Worst-case rounding error per value.
+    pub fn error_bound(&self) -> f64 {
+        self.step() / 2.0
+    }
+
+    /// Round-to-nearest conversion with saturation.
+    pub fn quantize(&self, v: f32) -> f32 {
+        let step = self.step();
+        let q = (v as f64 / step).round() * step;
+        let lim = self.max_value();
+        q.clamp(-lim - self.step(), lim) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_fits_range() {
+        let f = FixedFormat::for_range(&Interval::new(-3.0, 5.0), 16).unwrap();
+        assert_eq!(f.int_bits, 3); // 5 needs 3 integer bits
+        assert_eq!(f.frac_bits, 12);
+        assert_eq!(f.word_bits(), 16);
+        assert!(f.max_value() >= 5.0);
+    }
+
+    #[test]
+    fn subunit_ranges_get_all_fraction() {
+        let f = FixedFormat::for_range(&Interval::new(-0.4, 0.4), 8).unwrap();
+        assert_eq!(f.int_bits, 0);
+        assert_eq!(f.frac_bits, 7);
+    }
+
+    #[test]
+    fn huge_range_cannot_fit_tiny_word() {
+        assert!(FixedFormat::for_range(&Interval::new(-1e9, 1e9), 8).is_none());
+    }
+
+    #[test]
+    fn quantize_rounds_and_saturates() {
+        let f = FixedFormat { int_bits: 2, frac_bits: 5 }; // Q2.5, step 1/32
+        assert_eq!(f.quantize(0.5), 0.5);
+        assert!((f.quantize(0.51) - 0.5).abs() <= f.step() as f32);
+        assert!(f.quantize(100.0) <= f.max_value() as f32);
+        assert!(f.quantize(-100.0) >= (-f.max_value() - f.step()) as f32);
+    }
+
+    #[test]
+    fn error_bound_holds_for_random_values() {
+        let f = FixedFormat::for_range(&Interval::new(-2.0, 2.0), 12).unwrap();
+        let mut rng = crate::sim::Rng::new(9);
+        for _ in 0..1000 {
+            let v = rng.range_f64(-2.0, 2.0) as f32;
+            let q = f.quantize(v);
+            assert!(
+                ((q - v).abs() as f64) <= f.error_bound() + 1e-9,
+                "{v} -> {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn wider_word_smaller_error() {
+        let r = Interval::new(-1.0, 1.0);
+        let f8 = FixedFormat::for_range(&r, 8).unwrap();
+        let f16 = FixedFormat::for_range(&r, 16).unwrap();
+        assert!(f16.error_bound() < f8.error_bound() / 100.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! TAFFO-style precision tuning (paper Sec. V.C, Fig. 2).
+//!
+//! The pipeline re-implements TAFFO's mechanism over our NN IR instead of
+//! LLVM/MLIR (substitution table, DESIGN.md §2):
+//!
+//! 1. **Hints** — the programmer annotates input value ranges.
+//! 2. **Value-range analysis** ([`range`]) — interval arithmetic
+//!    propagates sound bounds through every node.
+//! 3. **Type allocation** ([`fixedpoint`]) — per-node fixed-point Qm.n
+//!    formats chosen from the ranges.
+//! 4. **Conversion + static estimation** ([`tuner`]) — the fixed-point
+//!    execution is *simulated* on the IR interpreter to measure true
+//!    error, and cost deltas come from the accelerator models.
+
+pub mod fixedpoint;
+pub mod range;
+pub mod tuner;
+
+pub use fixedpoint::FixedFormat;
+pub use range::{analyze_ranges, Interval};
+pub use tuner::{tune, TuneReport, TunerConfig};

@@ -1,0 +1,217 @@
+//! Value-range analysis: sound interval propagation through the IR
+//! (TAFFO's VRA stage).
+
+use crate::ir::{Graph, OpKind};
+use crate::Result;
+
+/// A closed interval `[lo, hi]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(lo <= hi, "bad interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    pub fn point(v: f64) -> Self {
+        Interval { lo: v, hi: v }
+    }
+
+    pub fn contains(&self, v: f64) -> bool {
+        // Tolerance for f32->f64 roundoff at the bounds.
+        let eps = 1e-6 * (1.0 + self.hi.abs().max(self.lo.abs()));
+        v >= self.lo - eps && v <= self.hi + eps
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    pub fn add(&self, o: &Interval) -> Interval {
+        Interval::new(self.lo + o.lo, self.hi + o.hi)
+    }
+
+    pub fn mul_scalar(&self, s: f64) -> Interval {
+        let (a, b) = (self.lo * s, self.hi * s);
+        Interval::new(a.min(b), a.max(b))
+    }
+
+    pub fn union(&self, o: &Interval) -> Interval {
+        Interval::new(self.lo.min(o.lo), self.hi.max(o.hi))
+    }
+
+    pub fn relu(&self) -> Interval {
+        Interval::new(self.lo.max(0.0), self.hi.max(0.0))
+    }
+}
+
+/// Propagate input-range hints through the graph; returns one interval
+/// per node (sound: the true value of every element lies inside).
+///
+/// Matmul bound: with x ∈ [lo, hi] per element and the *actual* weight
+/// matrix w, each output = Σ_k x_k w_kj is bounded per column by
+/// Σ_k max(lo·w, hi·w) — we use the column's positive/negative mass,
+/// then take the worst column (per-tensor interval).
+pub fn analyze_ranges(g: &Graph, input_hints: &[Interval]) -> Result<Vec<Interval>> {
+    g.validate()?;
+    let mut iv: Vec<Interval> = Vec::with_capacity(g.len());
+    let mut next_input = 0;
+    for node in &g.nodes {
+        let get = |id: usize| -> Interval { iv[id] };
+        let out = match &node.kind {
+            OpKind::Input => {
+                anyhow::ensure!(next_input < input_hints.len(), "missing hint");
+                let h = input_hints[next_input];
+                next_input += 1;
+                h
+            }
+            OpKind::Weight { idx } => {
+                let w = &g.weights[*idx];
+                let lo = w.data.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+                let hi = w.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+                Interval::new(lo.min(hi), hi.max(lo))
+            }
+            OpKind::MatMul => {
+                let x = get(node.inputs[0]);
+                // Use actual weights when rhs is a Weight node (the
+                // common case); otherwise fall back to interval product.
+                if let Some(idx) = g.matmul_weight_idx(node) {
+                    let w = &g.weights[idx];
+                    let [k, n] = w.shape;
+                    let mut worst_lo = 0.0f64;
+                    let mut worst_hi = 0.0f64;
+                    for j in 0..n {
+                        let (mut lo, mut hi) = (0.0f64, 0.0f64);
+                        for i in 0..k {
+                            let wij = w.data[i * n + j] as f64;
+                            let (a, b) = (x.lo * wij, x.hi * wij);
+                            lo += a.min(b);
+                            hi += a.max(b);
+                        }
+                        worst_lo = worst_lo.min(lo);
+                        worst_hi = worst_hi.max(hi);
+                    }
+                    Interval::new(worst_lo, worst_hi)
+                } else {
+                    let y = get(node.inputs[1]);
+                    let k = g.nodes[node.inputs[0]].shape[1] as f64;
+                    let cands = [x.lo * y.lo, x.lo * y.hi, x.hi * y.lo, x.hi * y.hi];
+                    let lo = cands.iter().cloned().fold(f64::INFINITY, f64::min) * k;
+                    let hi = cands.iter().cloned().fold(f64::NEG_INFINITY, f64::max) * k;
+                    Interval::new(lo.min(0.0), hi.max(0.0))
+                }
+            }
+            OpKind::BiasAdd => {
+                let x = get(node.inputs[0]);
+                let b = get(node.inputs[1]);
+                x.add(&b)
+            }
+            OpKind::Add => get(node.inputs[0]).add(&get(node.inputs[1])),
+            OpKind::Relu => get(node.inputs[0]).relu(),
+            OpKind::Gelu => {
+                let x = get(node.inputs[0]);
+                // gelu(x) ∈ [min(0, lo) - 0.17, max(0, hi)]
+                Interval::new(x.lo.min(0.0) - 0.17, x.hi.max(0.0))
+            }
+            OpKind::Softmax => Interval::new(0.0, 1.0),
+            OpKind::LayerNorm { gain, bias } => {
+                // |(x-mu)/sigma| <= sqrt(n-1); scaled by gain, shifted by
+                // bias (actual weight values).
+                let n = node.shape[1] as f64;
+                let z = (n - 1.0).sqrt();
+                let gmax = g.weights[*gain]
+                    .data
+                    .iter()
+                    .map(|v| v.abs())
+                    .fold(0.0f32, f32::max) as f64;
+                let bmax = g.weights[*bias]
+                    .data
+                    .iter()
+                    .map(|v| v.abs())
+                    .fold(0.0f32, f32::max) as f64;
+                Interval::new(-z * gmax - bmax, z * gmax + bmax)
+            }
+            OpKind::MeanPool { .. } => get(node.inputs[0]),
+            OpKind::Scale { factor } => get(node.inputs[0]).mul_scalar(*factor as f64),
+        };
+        iv.push(out);
+    }
+    Ok(iv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp::{run_with, Mat};
+    use crate::workloads;
+
+    #[test]
+    fn interval_ops() {
+        let a = Interval::new(-1.0, 2.0);
+        let b = Interval::new(0.5, 1.0);
+        assert_eq!(a.add(&b), Interval::new(-0.5, 3.0));
+        assert_eq!(a.relu(), Interval::new(0.0, 2.0));
+        assert_eq!(a.mul_scalar(-2.0), Interval::new(-4.0, 2.0));
+        assert_eq!(a.union(&b), Interval::new(-1.0, 2.0));
+        assert!(a.contains(0.0) && !a.contains(3.0));
+        assert_eq!(a.max_abs(), 2.0);
+    }
+
+    /// THE soundness property: empirical values never escape the
+    /// propagated intervals (sampled over random inputs within hints).
+    #[test]
+    fn ranges_are_sound_for_mlp_and_vit() {
+        let graphs = vec![
+            workloads::mlp(4, 32, &[24, 16], 8, 1).unwrap(),
+            workloads::vit(&workloads::VitParams::default(), 2).unwrap(),
+        ];
+        for g in graphs {
+            let hint = Interval::new(-3.0, 3.0);
+            let iv = analyze_ranges(&g, &[hint]).unwrap();
+            let shape = g.nodes[0].shape;
+            let mut rng = crate::sim::Rng::new(42);
+            for _ in 0..3 {
+                let data: Vec<f32> = (0..shape[0] * shape[1])
+                    .map(|_| rng.range_f64(-3.0, 3.0) as f32)
+                    .collect();
+                let x = Mat::new(shape, data).unwrap();
+                run_with(&g, &[x], |id, m| {
+                    for &v in &m.data {
+                        assert!(
+                            iv[id].contains(v as f64),
+                            "node {} ({}) value {v} outside {:?}",
+                            id,
+                            g.nodes[id].name,
+                            iv[id]
+                        );
+                    }
+                })
+                .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_range_is_unit() {
+        let g = workloads::vit(&workloads::VitParams::default(), 3).unwrap();
+        let iv = analyze_ranges(&g, &[Interval::new(-1.0, 1.0)]).unwrap();
+        for n in &g.nodes {
+            if matches!(n.kind, OpKind::Softmax) {
+                assert_eq!(iv[n.id], Interval::new(0.0, 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_hints_tighter_ranges() {
+        let g = workloads::mlp(2, 32, &[16], 4, 5).unwrap();
+        let wide = analyze_ranges(&g, &[Interval::new(-10.0, 10.0)]).unwrap();
+        let tight = analyze_ranges(&g, &[Interval::new(-1.0, 1.0)]).unwrap();
+        let out = g.outputs[0];
+        assert!(tight[out].max_abs() < wide[out].max_abs());
+    }
+}

@@ -1,0 +1,204 @@
+//! The precision tuner: greedy per-node bit-width allocation under an
+//! output-error budget, with measured (simulated) error and accelerator-
+//! model cost estimation — TAFFO's "static estimation of the performance
+//! impact" realized against our fabric models.
+
+use crate::accel::{Accelerator, Compute, DigitalNpu, Precision};
+use crate::ir::interp::{self, Mat};
+use crate::ir::{Graph, OpKind};
+use crate::Result;
+
+use super::fixedpoint::FixedFormat;
+use super::range::{analyze_ranges, Interval};
+
+/// Tuner configuration.
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    /// Input range hints (one per graph input).
+    pub input_hints: Vec<Interval>,
+    /// Relative output error budget (vs f32 reference, max-abs / scale).
+    pub error_budget: f32,
+    /// Candidate word sizes, tried narrow-first per node.
+    pub words: Vec<u32>,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            input_hints: vec![Interval::new(-4.0, 4.0)],
+            error_budget: 0.05,
+            words: vec![8, 16, 32],
+        }
+    }
+}
+
+/// Per-node allocation + measured results.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Chosen format per node (None = stays f32).
+    pub formats: Vec<Option<FixedFormat>>,
+    /// Measured relative output error with the final allocation.
+    pub measured_rel_err: f32,
+    /// Estimated speedup vs all-f32 on the digital NPU model.
+    pub est_speedup: f64,
+    /// Estimated energy ratio (tuned / f32).
+    pub est_energy_ratio: f64,
+    /// Nodes narrowed below 32 bits.
+    pub narrowed: usize,
+}
+
+fn simulate(g: &Graph, input: &Mat, formats: &[Option<FixedFormat>]) -> Result<Vec<Mat>> {
+    interp::run_with(g, std::slice::from_ref(input), |id, m| {
+        if let Some(f) = formats[id] {
+            for v in &mut m.data {
+                *v = f.quantize(*v);
+            }
+        }
+    })
+}
+
+fn rel_err(g: &Graph, reference: &[Mat], input: &Mat, formats: &[Option<FixedFormat>])
+    -> Result<f32> {
+    let got = simulate(g, input, formats)?;
+    let mut worst = 0.0f32;
+    for (r, q) in reference.iter().zip(&got) {
+        worst = worst.max(q.rel_err(r));
+    }
+    Ok(worst)
+}
+
+/// Estimated (cycles, energy) of the graph's matmuls on the NPU, given a
+/// word size per matmul node (<=8 -> int8 path, else f32 path).
+fn est_cost(g: &Graph, formats: &[Option<FixedFormat>]) -> (f64, f64) {
+    let npu = DigitalNpu::default();
+    let (mut cycles, mut energy) = (0.0, 0.0);
+    for n in &g.nodes {
+        if n.kind != OpKind::MatMul {
+            continue;
+        }
+        let a = g.nodes[n.inputs[0]].shape;
+        let c = Compute::MatMul { m: a[0], k: a[1], n: n.shape[1] };
+        let p = match formats[n.id] {
+            Some(f) if f.word_bits() <= 8 => Precision::Int8,
+            _ => Precision::F32,
+        };
+        let m = npu.cost(&c, p);
+        cycles += m.cycles as f64;
+        energy += m.total_energy_pj();
+    }
+    (cycles, energy)
+}
+
+/// Run the TAFFO pipeline: ranges -> allocation -> greedy narrowing under
+/// the error budget (validated on `calib`), -> static cost estimate.
+pub fn tune(g: &Graph, calib: &Mat, cfg: &TunerConfig) -> Result<TuneReport> {
+    let ranges = analyze_ranges(g, &cfg.input_hints)?;
+    let reference = interp::run(g, std::slice::from_ref(calib))?;
+
+    // Start all-f32 (None), then greedily narrow each node to the
+    // narrowest word that keeps the *cumulative* measured error in budget.
+    let mut formats: Vec<Option<FixedFormat>> = vec![None; g.len()];
+    let mut narrowed = 0;
+    for id in 0..g.len() {
+        // Inputs/weights are converted by the surrounding code in TAFFO;
+        // here every value-producing node is a candidate.
+        if matches!(g.nodes[id].kind, OpKind::Input) {
+            continue;
+        }
+        for &w in &cfg.words {
+            let Some(f) = FixedFormat::for_range(&ranges[id], w) else {
+                continue;
+            };
+            let mut trial = formats.clone();
+            trial[id] = Some(f);
+            if rel_err(g, &reference, calib, &trial)? <= cfg.error_budget {
+                formats = trial;
+                if w < 32 {
+                    narrowed += 1;
+                }
+                break;
+            }
+        }
+    }
+
+    let measured = rel_err(g, &reference, calib, &formats)?;
+    let (c_f32, e_f32) = est_cost(g, &vec![None; g.len()]);
+    let (c_tuned, e_tuned) = est_cost(g, &formats);
+    Ok(TuneReport {
+        formats,
+        measured_rel_err: measured,
+        est_speedup: if c_tuned > 0.0 { c_f32 / c_tuned } else { 1.0 },
+        est_energy_ratio: if e_f32 > 0.0 { e_tuned / e_f32 } else { 1.0 },
+        narrowed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn calib(g: &Graph) -> Mat {
+        let s = g.nodes[0].shape;
+        let mut rng = crate::sim::Rng::new(77);
+        Mat::new(s, (0..s[0] * s[1]).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn tuned_error_within_budget() {
+        let g = workloads::mlp(4, 32, &[24], 8, 1).unwrap();
+        let cfg = TunerConfig { error_budget: 0.05, ..Default::default() };
+        let rep = tune(&g, &calib(&g), &cfg).unwrap();
+        assert!(rep.measured_rel_err <= 0.05, "{}", rep.measured_rel_err);
+        assert!(rep.narrowed > 0, "something must narrow");
+    }
+
+    #[test]
+    fn e6_speedup_energy_shape() {
+        // Narrowing matmuls to <=8-bit must speed up and save energy on
+        // the NPU model (the E6 headline shape).
+        let g = workloads::mlp(8, 64, &[48], 10, 2).unwrap();
+        let cfg = TunerConfig { error_budget: 0.20, ..Default::default() };
+        let rep = tune(&g, &calib(&g), &cfg).unwrap();
+        assert!(rep.est_speedup > 1.2, "{}", rep.est_speedup);
+        assert!(rep.est_energy_ratio < 0.9, "{}", rep.est_energy_ratio);
+    }
+
+    #[test]
+    fn tight_budget_narrows_less() {
+        let g = workloads::mlp(4, 32, &[24], 8, 3).unwrap();
+        let x = calib(&g);
+        let loose = tune(&g, &x, &TunerConfig { error_budget: 0.3, ..Default::default() })
+            .unwrap();
+        let tight = tune(&g, &x, &TunerConfig { error_budget: 0.001, ..Default::default() })
+            .unwrap();
+        let bits = |r: &TuneReport| -> u32 {
+            r.formats.iter().flatten().map(|f| f.word_bits()).sum()
+        };
+        // tighter budget -> wider words (or fewer narrowed nodes)
+        assert!(
+            tight.measured_rel_err <= 0.001 + 1e-6,
+            "{}",
+            tight.measured_rel_err
+        );
+        assert!(bits(&tight) >= bits(&loose) || tight.narrowed <= loose.narrowed);
+    }
+
+    #[test]
+    fn formats_respect_ranges() {
+        let g = workloads::mlp(2, 16, &[8], 4, 4).unwrap();
+        let cfg = TunerConfig::default();
+        let ranges = analyze_ranges(&g, &cfg.input_hints).unwrap();
+        let rep = tune(&g, &calib(&g), &cfg).unwrap();
+        for (id, f) in rep.formats.iter().enumerate() {
+            if let Some(f) = f {
+                assert!(
+                    f.max_value() + f.step() >= ranges[id].max_abs(),
+                    "node {id}: format {f:?} cannot hold {:?}",
+                    ranges[id]
+                );
+            }
+        }
+    }
+}

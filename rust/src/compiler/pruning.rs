@@ -1,0 +1,142 @@
+//! Magnitude pruning (paper Sec. V.B: "systematically removes redundant
+//! or non-informative weights, typically after training").
+
+use crate::ir::Graph;
+
+/// Pruning report (per graph).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruneReport {
+    /// Weights zeroed / total.
+    pub pruned: usize,
+    pub total: usize,
+    /// Fraction of weight L2 norm retained (accuracy-loss proxy).
+    pub norm_retained: f64,
+}
+
+impl PruneReport {
+    pub fn sparsity(&self) -> f64 {
+        self.pruned as f64 / self.total as f64
+    }
+}
+
+/// Zero the smallest-magnitude `sparsity` fraction of every weight
+/// matrix (per-tensor thresholding; biases/norm params are skipped — they
+/// are tiny and disproportionately important).
+pub fn magnitude_prune(g: &mut Graph, sparsity: f64) -> PruneReport {
+    assert!((0.0..1.0).contains(&sparsity), "sparsity in [0,1)");
+    let mut pruned = 0;
+    let mut total = 0;
+    let mut norm_before = 0.0f64;
+    let mut norm_after = 0.0f64;
+    for w in &mut g.weights {
+        if w.shape[0] == 1 {
+            continue; // bias / LN vector
+        }
+        total += w.data.len();
+        norm_before += w.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = (sparsity * mags.len() as f64) as usize;
+        if cut == 0 {
+            norm_after += w.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            continue;
+        }
+        let threshold = mags[cut - 1];
+        for v in &mut w.data {
+            if v.abs() <= threshold && pruned < total {
+                *v = 0.0;
+                pruned += 1;
+            }
+        }
+        norm_after += w.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+    }
+    PruneReport {
+        pruned,
+        total,
+        norm_retained: if norm_before == 0.0 { 1.0 } else { (norm_after / norm_before).sqrt() },
+    }
+}
+
+/// Measured fraction of zero weights in prunable tensors.
+pub fn measured_sparsity(g: &Graph) -> f64 {
+    let (mut zeros, mut total) = (0usize, 0usize);
+    for w in &g.weights {
+        if w.shape[0] == 1 {
+            continue;
+        }
+        zeros += w.data.iter().filter(|&&v| v == 0.0).count();
+        total += w.data.len();
+    }
+    if total == 0 {
+        0.0
+    } else {
+        zeros as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp::{run, Mat};
+    use crate::workloads;
+
+    #[test]
+    fn prunes_to_requested_sparsity() {
+        let mut g = workloads::mlp(2, 64, &[32], 10, 1).unwrap();
+        let rep = magnitude_prune(&mut g, 0.5);
+        assert!((rep.sparsity() - 0.5).abs() < 0.02, "{}", rep.sparsity());
+        assert!((measured_sparsity(&g) - 0.5).abs() < 0.02);
+        assert!(rep.norm_retained > 0.8, "small weights carry little norm");
+    }
+
+    #[test]
+    fn zero_sparsity_is_identity() {
+        let mut g = workloads::mlp(2, 32, &[16], 4, 2).unwrap();
+        let before = g.weights.clone();
+        let rep = magnitude_prune(&mut g, 0.0);
+        assert_eq!(rep.pruned, 0);
+        for (a, b) in g.weights.iter().zip(&before) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn biases_survive() {
+        let mut g = workloads::mlp(2, 32, &[16], 4, 3).unwrap();
+        // make biases nonzero
+        for w in &mut g.weights {
+            if w.shape[0] == 1 {
+                w.data.iter_mut().for_each(|v| *v = 1.0);
+            }
+        }
+        magnitude_prune(&mut g, 0.9);
+        for w in &g.weights {
+            if w.shape[0] == 1 {
+                assert!(w.data.iter().all(|&v| v == 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn mild_pruning_preserves_top1() {
+        // E5 shape: 30% magnitude pruning barely moves decisions.
+        let g0 = workloads::mlp(8, 64, &[48, 24], 10, 4).unwrap();
+        let mut g1 = g0.clone();
+        magnitude_prune(&mut g1, 0.3);
+        let ds = workloads::synthetic_dataset(8, 8, 64, 10, 9);
+        let o0: Vec<Mat> = ds.inputs.iter().map(|x| run(&g0, &[x.clone()]).unwrap().remove(0)).collect();
+        let o1: Vec<Mat> = ds.inputs.iter().map(|x| run(&g1, &[x.clone()]).unwrap().remove(0)).collect();
+        let agree = workloads::top1_agreement(&o0, &o1);
+        assert!(agree > 0.8, "agreement {agree}");
+    }
+
+    #[test]
+    fn heavy_pruning_degrades_more_than_mild() {
+        let g0 = workloads::mlp(8, 64, &[48, 24], 10, 5).unwrap();
+        let mut mild = g0.clone();
+        let mut heavy = g0.clone();
+        let rm = magnitude_prune(&mut mild, 0.2);
+        let rh = magnitude_prune(&mut heavy, 0.95);
+        assert!(rh.norm_retained < rm.norm_retained);
+    }
+}

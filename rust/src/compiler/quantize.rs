@@ -1,0 +1,158 @@
+//! Dynamic INT8 quantization with activation calibration (paper Sec. V.B:
+//! "reduces the precision of model weights and activations during
+//! inference, often down to INT8 ... without significant loss in
+//! accuracy").
+//!
+//! Semantics mirror the L1 qmatmul kernel: symmetric per-output-channel
+//! weight scales, per-tensor activation scales calibrated on sample
+//! inputs; the IR interpreter hook simulates the quantized execution so
+//! accuracy is *measured*, not assumed.
+
+use crate::ir::interp::{self, Mat};
+use crate::ir::{Graph, NodeId, OpKind};
+use crate::Result;
+
+/// Quantization report.
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    /// Per-tensor weight quantization SNR (dB), worst tensor.
+    pub worst_weight_snr_db: f64,
+    /// Calibrated per-node activation scales (max-abs / 127).
+    pub act_scales: Vec<f32>,
+    /// Quantized weight tensors count.
+    pub tensors: usize,
+}
+
+fn quantize_dequantize(v: f32, scale: f32) -> f32 {
+    if scale == 0.0 {
+        return 0.0;
+    }
+    (v / scale).round().clamp(-127.0, 127.0) * scale
+}
+
+/// Quantize all matmul weights in place (per-output-channel symmetric
+/// INT8, stored dequantized — exactly what the analog/digital tile
+/// realises). Returns per-tensor SNR stats.
+pub fn quantize_weights_int8(g: &mut Graph) -> QuantReport {
+    let mut worst_snr = f64::INFINITY;
+    let mut tensors = 0;
+    for w in &mut g.weights {
+        if w.shape[0] == 1 {
+            continue; // vectors stay f32 (bias is added in f32)
+        }
+        tensors += 1;
+        let [k, n] = w.shape;
+        let mut sig = 0.0f64;
+        let mut noise = 0.0f64;
+        for j in 0..n {
+            let mut amax = 0.0f32;
+            for i in 0..k {
+                amax = amax.max(w.data[i * n + j].abs());
+            }
+            let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            for i in 0..k {
+                let old = w.data[i * n + j];
+                let new = quantize_dequantize(old, scale);
+                sig += (old as f64) * (old as f64);
+                noise += ((old - new) as f64) * ((old - new) as f64);
+                w.data[i * n + j] = new;
+            }
+        }
+        let snr = if noise == 0.0 { f64::INFINITY } else { 10.0 * (sig / noise).log10() };
+        worst_snr = worst_snr.min(snr);
+    }
+    QuantReport { worst_weight_snr_db: worst_snr, act_scales: Vec::new(), tensors }
+}
+
+/// Calibrate per-node activation scales by running `samples` through the
+/// f32 graph and recording max-abs per node output.
+pub fn calibrate_activations(g: &Graph, samples: &[Mat]) -> Result<Vec<f32>> {
+    let mut maxabs = vec![0.0f32; g.len()];
+    for s in samples {
+        interp::run_with(g, std::slice::from_ref(s), |id, m| {
+            let mx = m.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            maxabs[id] = maxabs[id].max(mx);
+        })?;
+    }
+    Ok(maxabs.iter().map(|&m| if m > 0.0 { m / 127.0 } else { 1.0 }).collect())
+}
+
+/// Run the graph with simulated INT8 activation quantization after the
+/// quantization-relevant nodes (matmul outputs), using calibrated scales.
+pub fn run_quantized(g: &Graph, input: &Mat, act_scales: &[f32]) -> Result<Vec<Mat>> {
+    interp::run_with(g, std::slice::from_ref(input), |id: NodeId, m: &mut Mat| {
+        if matches!(g.nodes[id].kind, OpKind::MatMul) {
+            let s = act_scales[id];
+            for v in &mut m.data {
+                *v = quantize_dequantize(*v, s);
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn weight_snr_is_high() {
+        let mut g = workloads::mlp(2, 64, &[32], 10, 1).unwrap();
+        let rep = quantize_weights_int8(&mut g);
+        assert!(rep.worst_weight_snr_db > 35.0, "{}", rep.worst_weight_snr_db);
+        assert_eq!(rep.tensors, 2); // 64x32 and 32x10 matrices
+    }
+
+    #[test]
+    fn weights_land_on_grid() {
+        let mut g = workloads::mlp(1, 16, &[8], 4, 2).unwrap();
+        quantize_weights_int8(&mut g);
+        let w = &g.weights[0];
+        let [k, n] = w.shape;
+        for j in 0..n {
+            let amax = (0..k).map(|i| w.data[i * n + j].abs()).fold(0.0f32, f32::max);
+            if amax == 0.0 {
+                continue;
+            }
+            let scale = amax / 127.0;
+            for i in 0..k {
+                let q = w.data[i * n + j] / scale;
+                assert!((q - q.round()).abs() < 1e-3, "{q}");
+            }
+        }
+    }
+
+    #[test]
+    fn e5_quantized_accuracy_tracks_f32() {
+        let g0 = workloads::mlp(8, 64, &[48, 24], 10, 3).unwrap();
+        let mut gq = g0.clone();
+        quantize_weights_int8(&mut gq);
+        let ds = workloads::synthetic_dataset(8, 8, 64, 10, 7);
+        let scales = calibrate_activations(&g0, &ds.inputs).unwrap();
+        let o0: Vec<Mat> =
+            ds.inputs.iter().map(|x| interp::run(&g0, &[x.clone()]).unwrap().remove(0)).collect();
+        let oq: Vec<Mat> = ds
+            .inputs
+            .iter()
+            .map(|x| run_quantized(&gq, x, &scales).unwrap().remove(0))
+            .collect();
+        let agree = workloads::top1_agreement(&o0, &oq);
+        assert!(agree > 0.9, "agreement {agree}");
+    }
+
+    #[test]
+    fn calibration_covers_activations() {
+        let g = workloads::mlp(4, 32, &[16], 4, 4).unwrap();
+        let ds = workloads::synthetic_dataset(4, 4, 32, 4, 8);
+        let scales = calibrate_activations(&g, &ds.inputs).unwrap();
+        assert_eq!(scales.len(), g.len());
+        assert!(scales.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn quantize_dequantize_saturates() {
+        assert_eq!(quantize_dequantize(1e9, 1.0), 127.0);
+        assert_eq!(quantize_dequantize(-1e9, 1.0), -127.0);
+        assert_eq!(quantize_dequantize(0.4, 1.0), 0.0);
+    }
+}

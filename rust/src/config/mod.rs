@@ -1,0 +1,15 @@
+//! Configuration subsystem: a self-contained mini-TOML parser plus the
+//! typed schemas for fabric and workload descriptions.
+//!
+//! The offline build image ships no `serde`/`toml` crates (DESIGN.md §6),
+//! so this module implements the TOML subset the project actually uses:
+//! comments, top-level keys, `[table]`s, `[[array-of-table]]`s, and values
+//! of type string / integer / float / boolean / homogeneous array.
+
+mod schema;
+mod toml;
+mod value;
+
+pub use schema::{CuConfig, FabricConfig, NocConfig, WorkloadConfig};
+pub use toml::{parse_document, ParseError};
+pub use value::{table_get, Document, Item, Table, Value};

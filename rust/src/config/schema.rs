@@ -1,0 +1,340 @@
+//! Typed configuration schemas for fabric and workload descriptions.
+//!
+//! A fabric file describes one instance of the ARCHYTAS Scalable Compute
+//! Fabric (paper Fig. 1): the NoC, the external memory, and a list of
+//! Compute Units, each declaring its accelerator kind and its integration
+//! template (A: bare accelerator with NoC interface; B: light-weight
+//! wrapper with RISC-V controller + TCDM + DMA; C: PULP-style multi-core
+//! cluster).
+
+use super::value::{table_get, Document, Table, Value};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// NoC section (`[noc]`). Defaults are FlooNoC-calibrated (DESIGN.md §2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocConfig {
+    pub topology: String,
+    pub width: usize,
+    pub height: usize,
+    /// Per-link bandwidth, Gbit/s (FlooNoC: 645).
+    pub link_bandwidth_gbps: f64,
+    /// Per-hop energy, pJ/bit (FlooNoC: 0.15).
+    pub hop_energy_pj_per_bit: f64,
+    /// Router pipeline depth in cycles.
+    pub router_latency_cycles: u64,
+    /// Virtual channels per port.
+    pub vcs: usize,
+    /// Flit payload size in bytes.
+    pub flit_bytes: usize,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        NocConfig {
+            topology: "mesh".into(),
+            width: 4,
+            height: 4,
+            link_bandwidth_gbps: 645.0,
+            hop_energy_pj_per_bit: 0.15,
+            router_latency_cycles: 3,
+            vcs: 2,
+            flit_bytes: 32,
+        }
+    }
+}
+
+/// One `[[cu]]` row: a homogeneous group of compute units.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CuConfig {
+    /// Accelerator kind: `npu | crossbar | photonic | neuromorphic |
+    /// pim_dram | cpu`.
+    pub kind: String,
+    /// Integration template: `A | B | C` (paper Fig. 1).
+    pub template: char,
+    /// Number of identical units in this group.
+    pub count: usize,
+    /// Template-C cluster cores (ignored otherwise).
+    pub cluster_cores: usize,
+    /// Tightly-coupled data memory per unit, KiB (templates B/C).
+    pub tcdm_kb: usize,
+}
+
+impl Default for CuConfig {
+    fn default() -> Self {
+        CuConfig { kind: "npu".into(), template: 'B', count: 1, cluster_cores: 8, tcdm_kb: 256 }
+    }
+}
+
+/// Whole-fabric configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    pub name: String,
+    /// Fabric clock, GHz.
+    pub freq_ghz: f64,
+    pub noc: NocConfig,
+    pub cus: Vec<CuConfig>,
+    /// HBM channels.
+    pub hbm_channels: usize,
+    /// Per-channel HBM bandwidth, GB/s.
+    pub hbm_bandwidth_gbps: f64,
+    /// HBM access energy, pJ/byte.
+    pub hbm_energy_pj_per_byte: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            name: "default".into(),
+            freq_ghz: 1.0,
+            noc: NocConfig::default(),
+            cus: vec![CuConfig::default()],
+            hbm_channels: 4,
+            hbm_bandwidth_gbps: 64.0,
+            hbm_energy_pj_per_byte: 3.9,
+        }
+    }
+}
+
+const CU_KINDS: &[&str] = &["npu", "crossbar", "photonic", "neuromorphic", "pim_dram", "cpu"];
+
+impl FabricConfig {
+    /// Parse and validate from mini-TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = super::toml::parse_document(text).context("parsing fabric config")?;
+        Self::from_document(&doc)
+    }
+
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let d = FabricConfig::default();
+        let noc = NocConfig {
+            topology: doc.get_str("noc.topology", &d.noc.topology).to_string(),
+            width: doc.get_int("noc.width", d.noc.width as i64) as usize,
+            height: doc.get_int("noc.height", d.noc.height as i64) as usize,
+            link_bandwidth_gbps: doc
+                .get_float("noc.link_bandwidth_gbps", d.noc.link_bandwidth_gbps),
+            hop_energy_pj_per_bit: doc
+                .get_float("noc.hop_energy_pj_per_bit", d.noc.hop_energy_pj_per_bit),
+            router_latency_cycles: doc
+                .get_int("noc.router_latency_cycles", d.noc.router_latency_cycles as i64)
+                as u64,
+            vcs: doc.get_int("noc.vcs", d.noc.vcs as i64) as usize,
+            flit_bytes: doc.get_int("noc.flit_bytes", d.noc.flit_bytes as i64) as usize,
+        };
+        let mut cus = Vec::new();
+        for (i, row) in doc.tables("cu").iter().enumerate() {
+            cus.push(parse_cu(row).with_context(|| format!("[[cu]] entry {i}"))?);
+        }
+        if cus.is_empty() {
+            cus = d.cus.clone();
+        }
+        let cfg = FabricConfig {
+            name: doc.get_str("fabric.name", &d.name).to_string(),
+            freq_ghz: doc.get_float("fabric.freq_ghz", d.freq_ghz),
+            noc,
+            cus,
+            hbm_channels: doc.get_int("hbm.channels", d.hbm_channels as i64) as usize,
+            hbm_bandwidth_gbps: doc.get_float("hbm.bandwidth_gbps", d.hbm_bandwidth_gbps),
+            hbm_energy_pj_per_byte: doc
+                .get_float("hbm.energy_pj_per_byte", d.hbm_energy_pj_per_byte),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural validation (ranges, totals, known enum values).
+    pub fn validate(&self) -> Result<()> {
+        if self.freq_ghz <= 0.0 {
+            bail!("fabric.freq_ghz must be positive");
+        }
+        if self.noc.width == 0 || self.noc.height == 0 {
+            bail!("noc dimensions must be nonzero");
+        }
+        if self.noc.flit_bytes == 0 || self.noc.vcs == 0 {
+            bail!("noc.flit_bytes and noc.vcs must be nonzero");
+        }
+        let known = ["mesh", "torus", "ring", "star", "fattree"];
+        if !known.contains(&self.noc.topology.as_str()) {
+            bail!("unknown noc.topology {:?} (expected one of {:?})", self.noc.topology, known);
+        }
+        let total: usize = self.cus.iter().map(|c| c.count).sum();
+        if total == 0 {
+            bail!("fabric has no compute units");
+        }
+        if total > self.noc.width * self.noc.height {
+            bail!(
+                "{} CUs do not fit a {}x{} NoC",
+                total,
+                self.noc.width,
+                self.noc.height
+            );
+        }
+        Ok(())
+    }
+
+    /// Total CU count.
+    pub fn total_cus(&self) -> usize {
+        self.cus.iter().map(|c| c.count).sum()
+    }
+}
+
+fn parse_cu(row: &Table) -> Result<CuConfig> {
+    let d = CuConfig::default();
+    let kind = table_get(row, "kind")
+        .and_then(Value::as_str)
+        .unwrap_or(&d.kind)
+        .to_string();
+    if !CU_KINDS.contains(&kind.as_str()) {
+        bail!("unknown cu kind {kind:?} (expected one of {CU_KINDS:?})");
+    }
+    let template_s = table_get(row, "template").and_then(Value::as_str).unwrap_or("B");
+    let template = template_s
+        .chars()
+        .next()
+        .filter(|c| ['A', 'B', 'C'].contains(c))
+        .ok_or_else(|| anyhow!("cu template must be A, B or C, got {template_s:?}"))?;
+    Ok(CuConfig {
+        kind,
+        template,
+        count: table_get(row, "count").and_then(Value::as_int).unwrap_or(1) as usize,
+        cluster_cores: table_get(row, "cluster_cores")
+            .and_then(Value::as_int)
+            .unwrap_or(d.cluster_cores as i64) as usize,
+        tcdm_kb: table_get(row, "tcdm_kb")
+            .and_then(Value::as_int)
+            .unwrap_or(d.tcdm_kb as i64) as usize,
+    })
+}
+
+/// Workload section (`[workload]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// `vit_tiny | mlp | cnn_edge`.
+    pub model: String,
+    pub batch: usize,
+    /// `f32 | int8 | analog`.
+    pub precision: String,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { model: "vit_tiny".into(), batch: 4, precision: "f32".into() }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let d = WorkloadConfig::default();
+        let w = WorkloadConfig {
+            model: doc.get_str("workload.model", &d.model).to_string(),
+            batch: doc.get_int("workload.batch", d.batch as i64) as usize,
+            precision: doc.get_str("workload.precision", &d.precision).to_string(),
+        };
+        if !["vit_tiny", "mlp", "cnn_edge"].contains(&w.model.as_str()) {
+            bail!("unknown workload.model {:?}", w.model);
+        }
+        if !["f32", "int8", "analog"].contains(&w.precision.as_str()) {
+            bail!("unknown workload.precision {:?}", w.precision);
+        }
+        if w.batch == 0 {
+            bail!("workload.batch must be nonzero");
+        }
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[fabric]
+name = "edge-16"
+freq_ghz = 1.2
+
+[noc]
+topology = "torus"
+width = 4
+height = 4
+link_bandwidth_gbps = 645.0
+hop_energy_pj_per_bit = 0.15
+
+[hbm]
+channels = 8
+bandwidth_gbps = 64.0
+
+[[cu]]
+kind = "npu"
+template = "B"
+count = 8
+
+[[cu]]
+kind = "crossbar"
+template = "A"
+count = 4
+
+[[cu]]
+kind = "cpu"
+template = "C"
+count = 2
+cluster_cores = 4
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let cfg = FabricConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "edge-16");
+        assert_eq!(cfg.noc.topology, "torus");
+        assert_eq!(cfg.cus.len(), 3);
+        assert_eq!(cfg.total_cus(), 14);
+        assert_eq!(cfg.cus[1].template, 'A');
+        assert_eq!(cfg.cus[2].cluster_cores, 4);
+        assert_eq!(cfg.hbm_channels, 8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = FabricConfig::from_toml("").unwrap();
+        assert_eq!(cfg, FabricConfig::default());
+    }
+
+    #[test]
+    fn rejects_unknown_topology() {
+        let e = FabricConfig::from_toml("[noc]\ntopology = \"hypercube9\"\n").unwrap_err();
+        assert!(e.to_string().contains("topology"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unknown_cu_kind() {
+        let e = FabricConfig::from_toml("[[cu]]\nkind = \"quantum\"\n").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown cu kind"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_overfull_noc() {
+        let e = FabricConfig::from_toml(
+            "[noc]\nwidth = 2\nheight = 2\n[[cu]]\nkind = \"npu\"\ncount = 5\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("do not fit"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_template() {
+        let e = FabricConfig::from_toml("[[cu]]\nkind = \"npu\"\ntemplate = \"D\"\n")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("template"), "{e:#}");
+    }
+
+    #[test]
+    fn workload_parse_and_validate() {
+        let doc = super::super::toml::parse_document(
+            "[workload]\nmodel = \"mlp\"\nbatch = 8\nprecision = \"int8\"\n",
+        )
+        .unwrap();
+        let w = WorkloadConfig::from_document(&doc).unwrap();
+        assert_eq!(w.model, "mlp");
+        assert_eq!(w.batch, 8);
+        let bad = super::super::toml::parse_document("[workload]\nmodel = \"gpt5\"\n").unwrap();
+        assert!(WorkloadConfig::from_document(&bad).is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Mini-TOML parser (the subset the project uses — see module docs).
+
+use super::value::{Document, Item, Table, Value};
+use std::fmt;
+
+/// Parse failure with 1-based line number and message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError { line, msg: msg.into() })
+}
+
+/// Parse a mini-TOML document.
+pub fn parse_document(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    // Path of the table currently being filled. Empty = root.
+    let mut cursor: Vec<String> = Vec::new();
+    // Whether the cursor tail refers to the last element of an
+    // array-of-tables (so inserts go into that element).
+    let mut in_aot = false;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim();
+            if name.is_empty() {
+                return err(lineno, "empty array-of-tables name");
+            }
+            push_aot(&mut doc.root, name, lineno)?;
+            cursor = vec![name.to_string()];
+            in_aot = true;
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim();
+            if name.is_empty() {
+                return err(lineno, "empty table name");
+            }
+            make_table(&mut doc.root, name, lineno)?;
+            cursor = name.split('.').map(str::to_string).collect();
+            in_aot = false;
+        } else if let Some(eq) = find_eq(line) {
+            let key = line[..eq].trim();
+            let vtext = line[eq + 1..].trim();
+            if key.is_empty() {
+                return err(lineno, "empty key");
+            }
+            let value = parse_value(vtext, lineno)?;
+            let table = resolve_cursor(&mut doc.root, &cursor, in_aot, lineno)?;
+            if table
+                .insert(key.to_string(), Item::Value(value))
+                .is_some()
+            {
+                return err(lineno, format!("duplicate key {key:?}"));
+            }
+        } else {
+            return err(lineno, format!("expected `key = value` or table header, got {line:?}"));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a trailing comment, honouring `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Position of the key/value `=`, honouring quoted strings.
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn push_aot(root: &mut Table, name: &str, line: usize) -> Result<(), ParseError> {
+    match root
+        .entry(name.to_string())
+        .or_insert_with(|| Item::ArrayOfTables(Vec::new()))
+    {
+        Item::ArrayOfTables(v) => {
+            v.push(Table::new());
+            Ok(())
+        }
+        _ => err(line, format!("{name:?} is not an array of tables")),
+    }
+}
+
+fn make_table(root: &mut Table, dotted: &str, line: usize) -> Result<(), ParseError> {
+    let mut table = root;
+    for part in dotted.split('.') {
+        let part = part.trim();
+        if part.is_empty() {
+            return err(line, "empty table-path segment");
+        }
+        let entry = table
+            .entry(part.to_string())
+            .or_insert_with(|| Item::Table(Table::new()));
+        table = match entry {
+            Item::Table(t) => t,
+            _ => return err(line, format!("{part:?} is not a table")),
+        };
+    }
+    Ok(())
+}
+
+fn resolve_cursor<'a>(
+    root: &'a mut Table,
+    cursor: &[String],
+    in_aot: bool,
+    line: usize,
+) -> Result<&'a mut Table, ParseError> {
+    if cursor.is_empty() {
+        return Ok(root);
+    }
+    if in_aot {
+        match root.get_mut(&cursor[0]) {
+            Some(Item::ArrayOfTables(v)) => {
+                return v
+                    .last_mut()
+                    .ok_or(ParseError { line, msg: "empty array of tables".into() })
+            }
+            _ => return err(line, "array-of-tables cursor lost"),
+        }
+    }
+    let mut table = root;
+    for part in cursor {
+        table = match table.get_mut(part) {
+            Some(Item::Table(t)) => t,
+            _ => return err(line, format!("table {part:?} lost")),
+        };
+    }
+    Ok(table)
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
+    let text = text.trim();
+    if text.is_empty() {
+        return err(line, "empty value");
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return err(line, "unterminated string");
+        };
+        if inner.contains('"') {
+            return err(line, "embedded quotes unsupported");
+        }
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            return err(line, "unterminated array");
+        };
+        let mut out = Vec::new();
+        for piece in split_array(inner) {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            out.push(parse_value(piece, line)?);
+        }
+        return Ok(Value::Array(out));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    err(line, format!("cannot parse value {text:?}"))
+}
+
+fn unescape(s: &str) -> String {
+    s.replace("\\n", "\n").replace("\\t", "\t").replace("\\\\", "\\")
+}
+
+/// Split a (non-nested) array body on commas outside strings.
+fn split_array(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::value::table_get;
+
+    #[test]
+    fn scalars_and_comments() {
+        let doc = parse_document(
+            "# header\n\
+             name = \"fabric-a\" # trailing\n\
+             tiles = 16\n\
+             freq_ghz = 1.2\n\
+             enable = true\n\
+             big = 1_000_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name", ""), "fabric-a");
+        assert_eq!(doc.get_int("tiles", 0), 16);
+        assert_eq!(doc.get_float("freq_ghz", 0.0), 1.2);
+        assert!(doc.get_bool("enable", false));
+        assert_eq!(doc.get_int("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn tables_and_dotted_paths() {
+        let doc = parse_document(
+            "[noc]\ntopology = \"mesh\"\nwidth = 4\n\
+             [noc.link]\nbandwidth_gbps = 645.0\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("noc.topology", ""), "mesh");
+        assert_eq!(doc.get_float("noc.link.bandwidth_gbps", 0.0), 645.0);
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = parse_document(
+            "[[cu]]\nkind = \"npu\"\ncount = 4\n\
+             [[cu]]\nkind = \"crossbar\"\ncount = 2\n",
+        )
+        .unwrap();
+        let cus = doc.tables("cu");
+        assert_eq!(cus.len(), 2);
+        assert_eq!(table_get(&cus[0], "kind").unwrap().as_str(), Some("npu"));
+        assert_eq!(table_get(&cus[1], "count").unwrap().as_int(), Some(2));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse_document(
+            "inputs = [\"f32[2,2]\", \"f32[4]\"]\nsizes = [1, 2, 3]\nmixed = []\n",
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("inputs").unwrap().as_str_array().unwrap(),
+            vec!["f32[2,2]", "f32[4]"]
+        );
+        assert_eq!(doc.get("sizes").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(doc.get("mixed").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_document("name = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("name", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_document("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_document("x = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse_document("x = 1\nx = 2\n").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let doc = parse_document("a = -5\nb = -0.25\nc = 1e3\n").unwrap();
+        assert_eq!(doc.get_int("a", 0), -5);
+        assert_eq!(doc.get_float("b", 0.0), -0.25);
+        assert_eq!(doc.get_float("c", 0.0), 1000.0);
+    }
+
+    #[test]
+    fn manifest_shape_roundtrip() {
+        // The exact shape python/compile/aot.py emits.
+        let doc = parse_document(
+            "[[artifact]]\n\
+             name = \"gemm_64\"\n\
+             hlo = \"gemm_64.hlo.txt\"\n\
+             inputs = [\"f32[64,64]\", \"f32[64,64]\"]\n\
+             outputs = [\"f32[64,64]\"]\n\
+             golden_in = [\"golden/gemm_64.in0.bin\", \"golden/gemm_64.in1.bin\"]\n\
+             golden_out = [\"golden/gemm_64.out0.bin\"]\n",
+        )
+        .unwrap();
+        let a = &doc.tables("artifact")[0];
+        assert_eq!(table_get(a, "name").unwrap().as_str(), Some("gemm_64"));
+        assert_eq!(
+            table_get(a, "golden_in").unwrap().as_str_array().unwrap().len(),
+            2
+        );
+    }
+}

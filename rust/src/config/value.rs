@@ -1,0 +1,193 @@
+//! Value model for the mini-TOML configuration format.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar or array configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`tiles = 4` where 4.0 is meant).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Array of strings convenience accessor.
+    pub fn as_str_array(&self) -> Option<Vec<&str>> {
+        self.as_array()?.iter().map(Value::as_str).collect()
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A table entry: scalar value, sub-table, or array of tables.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Item {
+    Value(Value),
+    Table(Table),
+    ArrayOfTables(Vec<Table>),
+}
+
+pub type Table = BTreeMap<String, Item>;
+
+/// A parsed configuration document.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    pub root: Table,
+}
+
+impl Document {
+    /// Look up a dotted path (`"noc.topology"`), scalars only.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut table = &self.root;
+        let parts: Vec<&str> = path.split('.').collect();
+        for (i, part) in parts.iter().enumerate() {
+            match table.get(*part)? {
+                Item::Value(v) if i == parts.len() - 1 => return Some(v),
+                Item::Table(t) => table = t,
+                _ => return None,
+            }
+        }
+        None
+    }
+
+    /// Typed getters with defaults — the common config-consumption shape.
+    pub fn get_str<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn get_int(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// All tables of an `[[array-of-tables]]` entry.
+    pub fn tables(&self, name: &str) -> &[Table] {
+        match self.root.get(name) {
+            Some(Item::ArrayOfTables(v)) => v,
+            _ => &[],
+        }
+    }
+
+    /// A single `[table]`.
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        match self.root.get(name)? {
+            Item::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+/// Typed getter on a raw [`Table`] (used for array-of-table rows).
+pub fn table_get<'a>(t: &'a Table, key: &str) -> Option<&'a Value> {
+    match t.get(key)? {
+        Item::Value(v) => Some(v),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_int(), Some(3));
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(2.5).as_float(), Some(2.5));
+        assert_eq!(Value::Float(2.5).as_int(), None);
+        assert_eq!(Value::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        let arr = Value::Array(vec![Value::Str("a".into()), Value::Str("b".into())]);
+        assert_eq!(arr.as_str_array(), Some(vec!["a", "b"]));
+    }
+
+    #[test]
+    fn mixed_array_str_accessor_fails() {
+        let arr = Value::Array(vec![Value::Str("a".into()), Value::Int(1)]);
+        assert_eq!(arr.as_str_array(), None);
+    }
+
+    #[test]
+    fn document_dotted_get() {
+        let mut inner = Table::new();
+        inner.insert("topology".into(), Item::Value(Value::Str("mesh".into())));
+        let mut doc = Document::default();
+        doc.root.insert("noc".into(), Item::Table(inner));
+        assert_eq!(doc.get("noc.topology").and_then(Value::as_str), Some("mesh"));
+        assert_eq!(doc.get_str("noc.topology", "ring"), "mesh");
+        assert_eq!(doc.get_str("noc.missing", "ring"), "ring");
+        assert!(doc.get("noc").is_none()); // table, not a scalar
+    }
+
+    #[test]
+    fn display_roundtrip_shapes() {
+        let v = Value::Array(vec![Value::Int(1), Value::Float(2.5), Value::Bool(false)]);
+        assert_eq!(v.to_string(), "[1, 2.5, false]");
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator: the runtime that drives the Scalable Compute Fabric.
+//!
+//! Two halves, mirroring how GVSoC/DRAMSys separate function from timing
+//! (DESIGN.md §3):
+//!
+//! * [`exec`] — **timing**: dependency-driven co-simulation of a lowered
+//!   [`crate::compiler::FabricProgram`] over the fabric's tile / NoC /
+//!   HBM models (overlapping transfers with compute, per-tile
+//!   serialization, HBM bandwidth sharing).
+//! * [`serve`] — **function + orchestration**: a leader thread batches
+//!   inference requests from worker threads (std::mpsc) and executes the
+//!   AOT-compiled PJRT artifacts for bit-exact numerics.
+//!
+//! The end-to-end driver (examples/uav_vision.rs) runs both: PJRT for the
+//! numbers, the co-simulator for latency/energy.
+
+pub mod exec;
+pub mod serve;
+
+pub use exec::{cosim, ExecReport};
+pub use serve::{BatchServer, BatchStats, Request as ServeRequest};

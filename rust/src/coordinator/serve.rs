@@ -1,0 +1,289 @@
+//! Batch inference server: the leader/worker orchestration half of the
+//! coordinator.
+//!
+//! Worker threads submit single-sample requests over an mpsc channel; the
+//! leader drains the queue, forms batches up to `max_batch`, executes the
+//! batch through a user-supplied executor (the PJRT artifact in
+//! production; a closure in tests), and answers each request on its own
+//! reply channel. This is the standard dynamic-batching loop of a serving
+//! runtime, sized for the edge-fabric use case.
+//!
+//! No tokio in the offline image — std::thread + mpsc (DESIGN.md §6).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::ensure;
+
+use crate::runtime::Tensor;
+use crate::Result;
+
+/// One inference request: a single sample (row-major f32) plus the reply
+/// channel.
+pub struct Request {
+    pub sample: Vec<f32>,
+    pub reply: mpsc::Sender<Vec<f32>>,
+    pub submitted: Instant,
+}
+
+/// Serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct BatchStats {
+    pub requests: usize,
+    pub batches: usize,
+    /// Distribution of batch sizes formed.
+    pub batch_sizes: Vec<usize>,
+    /// Per-request latency, microseconds.
+    pub latencies_us: Vec<f64>,
+}
+
+impl BatchStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batches as f64
+        }
+    }
+
+    pub fn p50_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 0.50)
+    }
+
+    pub fn p99_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 0.99)
+    }
+
+    pub fn throughput_rps(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / wall_s
+        }
+    }
+}
+
+fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * q).round() as usize]
+}
+
+/// The dynamic batcher. `exec(batch_rows) -> output_rows` runs a full
+/// batch; the server pads the final partial batch with zero rows (the
+/// AOT artifacts have a fixed batch dimension).
+pub struct BatchServer {
+    sample_len: usize,
+    output_len: usize,
+    max_batch: usize,
+}
+
+impl BatchServer {
+    pub fn new(sample_len: usize, output_len: usize, max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        BatchServer { sample_len, output_len, max_batch }
+    }
+
+    /// Serve until the request channel closes. Returns stats.
+    pub fn run(
+        &self,
+        rx: mpsc::Receiver<Request>,
+        mut exec: impl FnMut(&Tensor) -> Result<Tensor>,
+    ) -> Result<BatchStats> {
+        let mut stats = BatchStats::default();
+        let mut pending: Vec<Request> = Vec::new();
+        loop {
+            // Block for the first request, then drain whatever is queued
+            // (batching window = "everything available now").
+            if pending.is_empty() {
+                match rx.recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break, // all senders dropped
+                }
+            }
+            while pending.len() < self.max_batch {
+                match rx.try_recv() {
+                    Ok(r) => pending.push(r),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => break,
+                }
+            }
+            let take = pending.len().min(self.max_batch);
+            let batch: Vec<Request> = pending.drain(..take).collect();
+            // Assemble the padded batch tensor.
+            let mut data = vec![0.0f32; self.max_batch * self.sample_len];
+            for (i, r) in batch.iter().enumerate() {
+                ensure!(r.sample.len() == self.sample_len, "bad sample length");
+                data[i * self.sample_len..(i + 1) * self.sample_len]
+                    .copy_from_slice(&r.sample);
+            }
+            let input = Tensor::new(vec![self.max_batch, self.sample_len], data)?;
+            let out = exec(&input)?;
+            ensure!(
+                out.len() >= batch.len() * self.output_len,
+                "executor output too small"
+            );
+            let now = Instant::now();
+            for (i, r) in batch.iter().enumerate() {
+                let row =
+                    out.data()[i * self.output_len..(i + 1) * self.output_len].to_vec();
+                let _ = r.reply.send(row); // receiver may have given up
+                stats
+                    .latencies_us
+                    .push(now.duration_since(r.submitted).as_secs_f64() * 1e6);
+            }
+            stats.requests += batch.len();
+            stats.batches += 1;
+            stats.batch_sizes.push(batch.len());
+        }
+        Ok(stats)
+    }
+}
+
+/// Convenience: spawn `clients` worker threads that each submit `per`
+/// requests built by `make_sample(client, idx)`, run the server on the
+/// current thread, and return (stats, outputs sorted by client).
+pub fn drive_server(
+    server: &BatchServer,
+    clients: usize,
+    per: usize,
+    make_sample: impl Fn(usize, usize) -> Vec<f32> + Send + Sync + 'static + Clone,
+    exec: impl FnMut(&Tensor) -> Result<Tensor>,
+) -> Result<(BatchStats, Vec<Vec<f32>>)> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut joins = Vec::new();
+    let (otx, orx) = mpsc::channel::<(usize, usize, Vec<f32>)>();
+    for c in 0..clients {
+        let tx = tx.clone();
+        let otx = otx.clone();
+        let make = make_sample.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..per {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request {
+                    sample: make(c, i),
+                    reply: rtx,
+                    submitted: Instant::now(),
+                })
+                .expect("server alive");
+                let out = rrx.recv().expect("reply");
+                otx.send((c, i, out)).unwrap();
+            }
+        }));
+    }
+    drop(tx);
+    drop(otx);
+    let stats = server.run(rx, exec)?;
+    for j in joins {
+        j.join().expect("client thread");
+    }
+    let mut outs: Vec<(usize, usize, Vec<f32>)> = orx.iter().collect();
+    outs.sort_by_key(|&(c, i, _)| (c, i));
+    Ok((stats, outs.into_iter().map(|(_, _, o)| o).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock executor: out_row = 2 * first element of in_row, output_len 1.
+    fn double_exec(input: &Tensor) -> Result<Tensor> {
+        let b = input.dims()[0];
+        let s = input.dims()[1];
+        let out: Vec<f32> = (0..b).map(|i| input.data()[i * s] * 2.0).collect();
+        Tensor::new(vec![b, 1], out)
+    }
+
+    #[test]
+    fn all_requests_answered_correctly() {
+        let server = BatchServer::new(4, 1, 8);
+        let (stats, outs) = drive_server(
+            &server,
+            3,
+            10,
+            |c, i| vec![(c * 100 + i) as f32, 0.0, 0.0, 0.0],
+            double_exec,
+        )
+        .unwrap();
+        assert_eq!(stats.requests, 30);
+        assert_eq!(outs.len(), 30);
+        for (idx, o) in outs.iter().enumerate() {
+            let (c, i) = (idx / 10, idx % 10);
+            assert_eq!(o[0], (c * 100 + i) as f32 * 2.0);
+        }
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        // Pre-queue many requests before serving: the first drain should
+        // form batches bigger than one.
+        let (tx, rx) = mpsc::channel::<Request>();
+        let mut replies = Vec::new();
+        for i in 0..16 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                sample: vec![i as f32, 0.0],
+                reply: rtx,
+                submitted: Instant::now(),
+            })
+            .unwrap();
+            replies.push(rrx);
+        }
+        drop(tx);
+        let server = BatchServer::new(2, 1, 8);
+        let stats = server
+            .run(rx, |input| {
+                let b = input.dims()[0];
+                Tensor::new(vec![b, 1], (0..b).map(|i| input.data()[i * 2]).collect())
+            })
+            .unwrap();
+        assert_eq!(stats.requests, 16);
+        assert!(stats.mean_batch() > 4.0, "{}", stats.mean_batch());
+        assert!(stats.batches <= 4);
+        for r in replies {
+            r.recv().unwrap();
+        }
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let server = BatchServer::new(2, 1, 3);
+        let (stats, _) = drive_server(
+            &server,
+            4,
+            6,
+            |_, i| vec![i as f32, 0.0],
+            |input| {
+                let b = input.dims()[0];
+                assert_eq!(b, 3, "executor must always see max_batch rows");
+                Tensor::new(vec![b, 1], vec![0.0; b])
+            },
+        )
+        .unwrap();
+        assert!(stats.batch_sizes.iter().all(|&s| s <= 3));
+        assert_eq!(stats.requests, 24);
+    }
+
+    #[test]
+    fn rejects_bad_sample_length() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, _rrx) = mpsc::channel();
+        tx.send(Request { sample: vec![1.0; 7], reply: rtx, submitted: Instant::now() })
+            .unwrap();
+        drop(tx);
+        let server = BatchServer::new(4, 1, 2);
+        assert!(server.run(rx, double_exec).is_err());
+    }
+
+    #[test]
+    fn latency_stats_populated() {
+        let server = BatchServer::new(2, 1, 4);
+        let (stats, _) =
+            drive_server(&server, 2, 5, |_, _| vec![1.0, 2.0], double_exec).unwrap();
+        assert_eq!(stats.latencies_us.len(), 10);
+        assert!(stats.p99_latency_us() >= stats.p50_latency_us());
+    }
+}

@@ -1,0 +1,206 @@
+//! Bank finite-state machine enforcing the JEDEC timing constraints.
+
+use crate::sim::Cycle;
+
+use super::DramTiming;
+
+/// Open-page bank state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankState {
+    Idle,
+    /// Row open (row id).
+    Active(u64),
+}
+
+/// Per-bank timing bookkeeping. All `*_ok_at` methods return the earliest
+/// cycle the command becomes legal; `issue_*` updates state and returns
+/// completion info. The controller must only issue at/after the legal
+/// cycle (checked with debug_asserts — the legality checker tests rely on
+/// them).
+#[derive(Debug, Clone)]
+pub struct Bank {
+    pub state: BankState,
+    /// None = never happened (fresh-out-of-reset banks owe no tRC/tRP).
+    last_act: Option<Cycle>,
+    last_pre: Option<Cycle>,
+    /// End of the last read/write data restore affecting PRE.
+    write_recovery_until: Cycle,
+    /// Earliest next column command (tCCD).
+    col_ok: Cycle,
+    /// Rows activated (stats).
+    pub activations: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Bank {
+            state: BankState::Idle,
+            last_act: None,
+            last_pre: None,
+            write_recovery_until: 0,
+            col_ok: 0,
+            activations: 0,
+            row_hits: 0,
+            row_misses: 0,
+        }
+    }
+}
+
+impl Bank {
+    /// Earliest legal ACT (bank-local constraints: tRP after PRE, tRC
+    /// after previous ACT). Bank must be Idle.
+    pub fn act_ok_at(&self, t: &DramTiming) -> Cycle {
+        debug_assert_eq!(self.state, BankState::Idle);
+        let after_pre = self.last_pre.map_or(0, |p| p + t.t_rp);
+        let after_act = self.last_act.map_or(0, |a| a + t.t_rc);
+        after_pre.max(after_act)
+    }
+
+    /// Earliest legal PRE (tRAS after ACT, write recovery done).
+    pub fn pre_ok_at(&self, t: &DramTiming) -> Cycle {
+        self.last_act
+            .map_or(0, |a| a + t.t_ras)
+            .max(self.write_recovery_until)
+    }
+
+    /// Earliest legal column command (tRCD after ACT, tCCD after last).
+    pub fn col_ok_at(&self, t: &DramTiming) -> Cycle {
+        self.last_act.map_or(0, |a| a + t.t_rcd).max(self.col_ok)
+    }
+
+    pub fn issue_act(&mut self, now: Cycle, row: u64, t: &DramTiming) {
+        debug_assert!(now >= self.act_ok_at(t), "ACT violates tRP/tRC");
+        self.state = BankState::Active(row);
+        self.last_act = Some(now);
+        self.activations += 1;
+    }
+
+    pub fn issue_pre(&mut self, now: Cycle, t: &DramTiming) {
+        debug_assert!(matches!(self.state, BankState::Active(_)));
+        debug_assert!(now >= self.pre_ok_at(t), "PRE violates tRAS/tWR");
+        self.state = BankState::Idle;
+        self.last_pre = Some(now);
+    }
+
+    /// Issue RD; returns the cycle the data burst completes on the bus.
+    pub fn issue_rd(&mut self, now: Cycle, t: &DramTiming) -> Cycle {
+        debug_assert!(matches!(self.state, BankState::Active(_)));
+        debug_assert!(now >= self.col_ok_at(t), "RD violates tRCD/tCCD");
+        self.col_ok = now + t.t_ccd;
+        self.row_hits += 1;
+        now + t.t_cl + t.t_burst
+    }
+
+    /// Issue WR; returns burst completion. Updates write recovery for PRE.
+    pub fn issue_wr(&mut self, now: Cycle, t: &DramTiming) -> Cycle {
+        debug_assert!(matches!(self.state, BankState::Active(_)));
+        debug_assert!(now >= self.col_ok_at(t), "WR violates tRCD/tCCD");
+        self.col_ok = now + t.t_ccd;
+        self.row_hits += 1;
+        let done = now + t.t_cl + t.t_burst;
+        self.write_recovery_until = done + t.t_wr;
+        done
+    }
+
+    /// Occupy the bank for an in-bank PIM operation of `dur` cycles
+    /// starting from an open row. Modeled as column-command-like
+    /// occupancy: the bank cannot issue other column commands until done.
+    pub fn issue_pim(&mut self, now: Cycle, dur: Cycle, t: &DramTiming) -> Cycle {
+        debug_assert!(matches!(self.state, BankState::Active(_)));
+        debug_assert!(now >= self.col_ok_at(t));
+        self.col_ok = now + dur;
+        // PIM writes back in place: extend write recovery.
+        self.write_recovery_until = now + dur;
+        now + dur
+    }
+
+    pub fn open_row(&self) -> Option<u64> {
+        match self.state {
+            BankState::Active(r) => Some(r),
+            BankState::Idle => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::{DramKind, DramTiming};
+
+    fn t() -> DramTiming {
+        DramTiming::new(DramKind::Ddr4_2400)
+    }
+
+    #[test]
+    fn act_to_rd_respects_trcd() {
+        let t = t();
+        let mut b = Bank::default();
+        b.issue_act(100, 7, &t);
+        assert_eq!(b.open_row(), Some(7));
+        assert_eq!(b.col_ok_at(&t), 100 + t.t_rcd);
+        let done = b.issue_rd(100 + t.t_rcd, &t);
+        assert_eq!(done, 100 + t.t_rcd + t.t_cl + t.t_burst);
+    }
+
+    #[test]
+    fn consecutive_reads_gap_tccd() {
+        let t = t();
+        let mut b = Bank::default();
+        b.issue_act(0, 1, &t);
+        let first = b.col_ok_at(&t);
+        b.issue_rd(first, &t);
+        assert_eq!(b.col_ok_at(&t), first + t.t_ccd);
+    }
+
+    #[test]
+    fn pre_waits_for_tras_and_twr() {
+        let t = t();
+        let mut b = Bank::default();
+        b.issue_act(0, 1, &t);
+        assert_eq!(b.pre_ok_at(&t), t.t_ras);
+        // a write pushes recovery beyond tRAS
+        let wr_at = b.col_ok_at(&t);
+        let done = b.issue_wr(wr_at, &t);
+        assert_eq!(b.pre_ok_at(&t), (done + t.t_wr).max(t.t_ras));
+        b.issue_pre(b.pre_ok_at(&t), &t);
+        assert_eq!(b.state, BankState::Idle);
+    }
+
+    #[test]
+    fn reopen_respects_trp_and_trc() {
+        let t = t();
+        let mut b = Bank::default();
+        b.issue_act(0, 1, &t);
+        let pre_at = b.pre_ok_at(&t);
+        b.issue_pre(pre_at, &t);
+        let next = b.act_ok_at(&t);
+        assert_eq!(next, (pre_at + t.t_rp).max(t.t_rc));
+        b.issue_act(next, 2, &t);
+        assert_eq!(b.open_row(), Some(2));
+        assert_eq!(b.activations, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "RD violates")]
+    #[cfg(debug_assertions)]
+    fn early_rd_panics() {
+        let t = t();
+        let mut b = Bank::default();
+        b.issue_act(0, 1, &t);
+        b.issue_rd(1, &t); // way before tRCD
+    }
+
+    #[test]
+    fn pim_occupies_column_path() {
+        let t = t();
+        let mut b = Bank::default();
+        b.issue_act(0, 1, &t);
+        let start = b.col_ok_at(&t);
+        let done = b.issue_pim(start, 100, &t);
+        assert_eq!(done, start + 100);
+        assert_eq!(b.col_ok_at(&t), done);
+        assert!(b.pre_ok_at(&t) >= done);
+    }
+}

@@ -1,0 +1,576 @@
+//! FR-FCFS open-page memory controller with PIM issue support.
+//!
+//! Scheduling policy (DRAMSys default): ready column commands (row hits)
+//! first, oldest-first; otherwise the oldest request drives PRE/ACT.
+//! Requests live in per-bank queues (as in real controllers); the FR
+//! stage may reorder row hits ahead of misses within a bounded window
+//! per bank. Global constraints: one command per cycle on the command
+//! bus, tRRD + tFAW between activates, one data burst at a time on the
+//! data bus. The simulator event-jumps: when nothing is issuable it
+//! advances straight to the earliest cycle anything becomes legal.
+
+use std::collections::VecDeque;
+
+use crate::metrics::{Category, Metrics};
+use crate::sim::Cycle;
+
+use super::bank::{Bank, BankState};
+use super::pim::{PimCommand, PimConfig};
+use super::DramTiming;
+
+/// FR reorder window per bank (row hits may overtake at most this many
+/// older entries).
+const FR_WINDOW: usize = 16;
+
+/// One memory request (split into bursts internally). `pim` requests
+/// occupy the target bank with an in-memory operation instead of moving
+/// data over the bus.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub addr: u64,
+    pub bytes: usize,
+    pub write: bool,
+    pub pim: Option<PimCommand>,
+}
+
+impl Request {
+    pub fn read(addr: u64, bytes: usize) -> Self {
+        Request { addr, bytes, write: false, pim: None }
+    }
+
+    pub fn write(addr: u64, bytes: usize) -> Self {
+        Request { addr, bytes, write: true, pim: None }
+    }
+
+    pub fn pim(addr: u64, cmd: PimCommand) -> Self {
+        Request { addr, bytes: 0, write: false, pim: Some(cmd) }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SubCmd {
+    req: usize,
+    seq: u64,
+    row: u64,
+    write: bool,
+    pim: Option<PimCommand>,
+}
+
+/// Aggregate results.
+#[derive(Debug, Clone, Default)]
+pub struct DramStats {
+    pub requests: usize,
+    pub completed: usize,
+    pub cycles: Cycle,
+    pub bytes: u64,
+    pub activations: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub pim_macs: u64,
+    pub avg_latency: f64,
+    pub metrics: Metrics,
+}
+
+impl DramStats {
+    /// Achieved bandwidth, GB/s.
+    pub fn bandwidth_gbs(&self, t: &DramTiming) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / (self.cycles as f64 / (t.freq_ghz * 1e9)) / 1e9
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+}
+
+/// The single-channel DRAM simulator.
+pub struct DramSim {
+    t: DramTiming,
+    pim_cfg: PimConfig,
+    banks: Vec<Bank>,
+    /// Per-bank sub-command queues (FIFO + FR window).
+    queues: Vec<VecDeque<SubCmd>>,
+    queued: usize,
+    next_seq: u64,
+    /// Outstanding bursts + bookkeeping per request.
+    req_bursts: Vec<usize>,
+    req_enqueued: Vec<Cycle>,
+    /// Completion cycle per request id (public for co-simulation).
+    pub req_done: Vec<Option<Cycle>>,
+    /// Last 4 ACT timestamps (tFAW window, tRRD).
+    recent_acts: VecDeque<Cycle>,
+    last_col: Cycle,
+    now: Cycle,
+    energy: Metrics,
+    bytes: u64,
+    pim_macs: u64,
+}
+
+impl DramSim {
+    pub fn new(t: DramTiming) -> Self {
+        Self::with_pim(t, PimConfig::default())
+    }
+
+    pub fn with_pim(t: DramTiming, pim_cfg: PimConfig) -> Self {
+        DramSim {
+            banks: (0..t.banks).map(|_| Bank::default()).collect(),
+            queues: (0..t.banks).map(|_| VecDeque::new()).collect(),
+            t,
+            pim_cfg,
+            queued: 0,
+            next_seq: 0,
+            req_bursts: Vec::new(),
+            req_enqueued: Vec::new(),
+            req_done: Vec::new(),
+            recent_acts: VecDeque::new(),
+            last_col: 0,
+            now: 0,
+            energy: Metrics::new(),
+            bytes: 0,
+            pim_macs: 0,
+        }
+    }
+
+    pub fn timing(&self) -> &DramTiming {
+        &self.t
+    }
+
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    /// Pending sub-commands.
+    pub fn pending(&self) -> usize {
+        self.queued
+    }
+
+    /// Address mapping (RoBaCo with bank interleave at row granularity):
+    /// col = addr % row_bytes; bank = (addr / row_bytes) % banks;
+    /// row = addr / (row_bytes * banks).
+    pub fn map(&self, addr: u64) -> (usize, u64) {
+        let chunk = addr / self.t.row_bytes as u64;
+        let bank = (chunk % self.t.banks as u64) as usize;
+        let row = chunk / self.t.banks as u64;
+        (bank, row)
+    }
+
+    fn push(&mut self, bank: usize, sc: SubCmd) {
+        self.queues[bank].push_back(sc);
+        self.queued += 1;
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn enqueue(&mut self, r: Request) -> usize {
+        let id = self.req_bursts.len();
+        if let Some(cmd) = r.pim {
+            let (bank, row) = self.map(r.addr);
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.push(bank, SubCmd { req: id, seq, row, write: false, pim: Some(cmd) });
+            self.req_bursts.push(1);
+        } else {
+            assert!(r.bytes > 0, "zero-byte access");
+            let nbursts = r.bytes.div_ceil(self.t.burst_bytes);
+            for i in 0..nbursts {
+                let addr = r.addr + (i * self.t.burst_bytes) as u64;
+                let (bank, row) = self.map(addr);
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                self.push(bank, SubCmd { req: id, seq, row, write: r.write, pim: None });
+            }
+            self.req_bursts.push(nbursts);
+        }
+        self.req_enqueued.push(self.now);
+        self.req_done.push(None);
+        id
+    }
+
+    fn act_legal_at(&self) -> Cycle {
+        let mut t0 = self.now;
+        if let Some(&last) = self.recent_acts.back() {
+            t0 = t0.max(last + self.t.t_rrd);
+        }
+        if self.recent_acts.len() >= 4 {
+            t0 = t0.max(self.recent_acts[self.recent_acts.len() - 4] + self.t.t_faw);
+        }
+        t0
+    }
+
+    /// Whether any queued command in `bank`'s window wants `row`.
+    fn row_wanted(&self, bank: usize, row: u64) -> bool {
+        self.queues[bank].iter().take(FR_WINDOW).any(|sc| sc.row == row)
+    }
+
+    /// Issue the best command at `now` if any; returns false if nothing
+    /// was issuable this cycle (caller jumps time).
+    fn try_issue(&mut self) -> bool {
+        // Pass 1 (FR): oldest ready column/PIM command on an open row,
+        // searched within each bank's reorder window.
+        let mut best: Option<(u64, usize, usize)> = None; // (seq, bank, qi)
+        for b in 0..self.banks.len() {
+            let Some(open) = self.banks[b].open_row() else { continue };
+            if self.banks[b].col_ok_at(&self.t) > self.now {
+                continue;
+            }
+            for (qi, sc) in self.queues[b].iter().take(FR_WINDOW).enumerate() {
+                if sc.row != open {
+                    continue;
+                }
+                // Non-PIM bursts also need the data bus.
+                if sc.pim.is_none() && self.now < self.last_col + self.t.t_burst {
+                    continue;
+                }
+                if best.map_or(true, |(s, _, _)| sc.seq < s) {
+                    best = Some((sc.seq, b, qi));
+                }
+                break; // oldest hit in this bank found
+            }
+        }
+        if let Some((_, b, qi)) = best {
+            let sc = self.queues[b].remove(qi).unwrap();
+            self.queued -= 1;
+            let done = if let Some(cmd) = sc.pim {
+                let dur = cmd.duration(&self.pim_cfg, &self.t);
+                self.energy.add_energy(Category::Dram, cmd.energy_pj(&self.pim_cfg));
+                self.pim_macs += cmd.macs();
+                self.banks[b].issue_pim(self.now, dur, &self.t)
+            } else if sc.write {
+                self.energy.add_energy(Category::Dram, self.t.e_wr_pj);
+                self.last_col = self.now;
+                self.bytes += self.t.burst_bytes as u64;
+                self.banks[b].issue_wr(self.now, &self.t)
+            } else {
+                self.energy.add_energy(Category::Dram, self.t.e_rd_pj);
+                self.last_col = self.now;
+                self.bytes += self.t.burst_bytes as u64;
+                self.banks[b].issue_rd(self.now, &self.t)
+            };
+            self.complete(sc.req, done);
+            return true;
+        }
+        // Pass 2 (FCFS): oldest front entry drives PRE or ACT.
+        let act_at = self.act_legal_at();
+        let mut cand: Option<(u64, usize, bool)> = None; // (seq, bank, is_act)
+        for b in 0..self.banks.len() {
+            let Some(sc) = self.queues[b].front() else { continue };
+            match self.banks[b].state {
+                BankState::Idle => {
+                    if act_at <= self.now && self.banks[b].act_ok_at(&self.t) <= self.now
+                        && cand.map_or(true, |(s, _, _)| sc.seq < s)
+                    {
+                        cand = Some((sc.seq, b, true));
+                    }
+                }
+                BankState::Active(open) if open != sc.row => {
+                    if !self.row_wanted(b, open)
+                        && self.banks[b].pre_ok_at(&self.t) <= self.now
+                        && cand.map_or(true, |(s, _, _)| sc.seq < s)
+                    {
+                        cand = Some((sc.seq, b, false));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some((_, b, is_act)) = cand {
+            if is_act {
+                let row = self.queues[b].front().unwrap().row;
+                self.banks[b].issue_act(self.now, row, &self.t);
+                self.energy.add_energy(Category::Dram, self.t.e_act_pj);
+                self.recent_acts.push_back(self.now);
+                if self.recent_acts.len() > 4 {
+                    self.recent_acts.pop_front();
+                }
+            } else {
+                self.banks[b].issue_pre(self.now, &self.t);
+                self.banks[b].row_misses += 1;
+                self.energy.add_energy(Category::Dram, self.t.e_pre_pj);
+            }
+            return true;
+        }
+        false
+    }
+
+    fn complete(&mut self, req: usize, done: Cycle) {
+        self.req_bursts[req] -= 1;
+        if self.req_bursts[req] == 0 {
+            let d = self.req_done[req].get_or_insert(done);
+            *d = (*d).max(done);
+        }
+    }
+
+    /// Earliest future cycle at which anything could become legal.
+    fn next_wakeup(&self) -> Cycle {
+        let mut best = Cycle::MAX;
+        let act_at = self.act_legal_at();
+        for b in 0..self.banks.len() {
+            let Some(front) = self.queues[b].front() else { continue };
+            let bank = &self.banks[b];
+            let t = match bank.state {
+                BankState::Active(open) => {
+                    let hit_in_window =
+                        self.queues[b].iter().take(FR_WINDOW).any(|sc| sc.row == open);
+                    if hit_in_window {
+                        let col = bank.col_ok_at(&self.t);
+                        col.max(self.last_col + self.t.t_burst)
+                    } else if open != front.row {
+                        bank.pre_ok_at(&self.t)
+                    } else {
+                        bank.col_ok_at(&self.t)
+                    }
+                }
+                BankState::Idle => bank.act_ok_at(&self.t).max(act_at),
+            };
+            best = best.min(t.max(self.now + 1));
+        }
+        best
+    }
+
+    /// Run until all requests complete; returns stats.
+    pub fn run_to_drain(&mut self) -> DramStats {
+        while self.queued > 0 {
+            if self.try_issue() {
+                // command bus: next command at now+1
+                self.now += 1;
+            } else {
+                let wake = self.next_wakeup();
+                debug_assert!(wake > self.now, "no progress at {}", self.now);
+                self.now = wake;
+            }
+        }
+        // Completion time of the last data burst may exceed `now`.
+        let end = self
+            .req_done
+            .iter()
+            .filter_map(|d| *d)
+            .max()
+            .unwrap_or(self.now)
+            .max(self.now);
+        self.now = end;
+        self.stats()
+    }
+
+    pub fn stats(&self) -> DramStats {
+        let mut m = self.energy.clone();
+        // Background energy over the whole episode.
+        m.add_energy(
+            Category::Leakage,
+            self.now as f64 * self.t.banks as f64 * self.t.e_bg_pj_cycle,
+        );
+        m.cycles = self.now;
+        m.bytes_moved = self.bytes;
+        m.ops = self.pim_macs;
+        let lats: Vec<f64> = self
+            .req_done
+            .iter()
+            .zip(&self.req_enqueued)
+            .filter_map(|(d, e)| d.map(|dd| (dd - e) as f64))
+            .collect();
+        let (mut hits, mut misses, mut acts) = (0, 0, 0);
+        for b in &self.banks {
+            hits += b.row_hits;
+            misses += b.row_misses;
+            acts += b.activations;
+        }
+        DramStats {
+            requests: self.req_bursts.len(),
+            completed: self.req_done.iter().filter(|d| d.is_some()).count(),
+            cycles: self.now,
+            bytes: self.bytes,
+            activations: acts,
+            row_hits: hits.saturating_sub(misses),
+            row_misses: misses,
+            pim_macs: self.pim_macs,
+            avg_latency: if lats.is_empty() {
+                0.0
+            } else {
+                lats.iter().sum::<f64>() / lats.len() as f64
+            },
+            metrics: m,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::{DramKind, PimCommand};
+
+    fn sim() -> DramSim {
+        DramSim::new(DramTiming::new(DramKind::Ddr4_2400))
+    }
+
+    #[test]
+    fn single_read_latency() {
+        let mut s = sim();
+        s.enqueue(Request::read(0, 64));
+        let st = s.run_to_drain();
+        assert_eq!(st.completed, 1);
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        // ACT + tRCD + tCL + tBURST (+ command cycles)
+        let expect = t.t_rcd + t.t_cl + t.t_burst;
+        assert!(st.avg_latency >= expect as f64, "{}", st.avg_latency);
+        assert!(st.avg_latency <= (expect + 4) as f64, "{}", st.avg_latency);
+    }
+
+    #[test]
+    fn streaming_hits_rows_and_approaches_peak_bw() {
+        let mut s = sim();
+        // 256 KiB sequential = row-buffer friendly.
+        let total = 256 * 1024;
+        let chunk = 1024;
+        for i in 0..(total / chunk) {
+            s.enqueue(Request::read((i * chunk) as u64, chunk));
+        }
+        let st = s.run_to_drain();
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let bw = st.bandwidth_gbs(&t);
+        assert!(st.row_hit_rate() > 0.9, "hit rate {}", st.row_hit_rate());
+        assert!(
+            bw > 0.5 * t.peak_bandwidth_gbs(),
+            "bw {bw} vs peak {}",
+            t.peak_bandwidth_gbs()
+        );
+    }
+
+    #[test]
+    fn random_far_slower_than_streaming() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let mut stream = sim();
+        let mut random = sim();
+        let mut rng = crate::sim::Rng::new(1);
+        for i in 0..512 {
+            stream.enqueue(Request::read((i * 64) as u64, 64));
+            // random rows in one bank to defeat both row buffer and BLP
+            let row = rng.below(1 << 14) as u64;
+            random.enqueue(Request::read(row * t.row_bytes as u64 * t.banks as u64, 64));
+        }
+        let ss = stream.run_to_drain();
+        let rs = random.run_to_drain();
+        assert!(
+            rs.cycles > 3 * ss.cycles,
+            "random {} vs stream {}",
+            rs.cycles,
+            ss.cycles
+        );
+        assert!(rs.metrics.total_energy_pj() > ss.metrics.total_energy_pj());
+    }
+
+    #[test]
+    fn bank_parallelism_beats_single_bank() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let stride_all = t.row_bytes as u64; // consecutive chunks -> banks
+        let stride_one = t.row_bytes as u64 * t.banks as u64; // same bank
+        let run = |stride: u64| {
+            let mut s = sim();
+            for i in 0..64u64 {
+                s.enqueue(Request::read(i * stride, 64));
+            }
+            s.run_to_drain().cycles
+        };
+        assert!(run(stride_one) > run(stride_all), "BLP should help");
+    }
+
+    #[test]
+    fn fr_reorders_row_hits_ahead_of_misses() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let mut s = sim();
+        let bank_stride = t.row_bytes as u64 * t.banks as u64;
+        // bank 0: open row 0, then queue a miss (row 5) followed by more
+        // hits to row 0 — the hits must complete before the miss forces
+        // a precharge.
+        let hit1 = s.enqueue(Request::read(0, 64));
+        let miss = s.enqueue(Request::read(5 * bank_stride, 64));
+        let hit2 = s.enqueue(Request::read(128, 64));
+        let st = s.run_to_drain();
+        assert_eq!(st.completed, 3);
+        let done = |id: usize| s.req_done[id].unwrap();
+        assert!(done(hit2) < done(miss), "hit2 {} miss {}", done(hit2), done(miss));
+        assert!(done(hit1) < done(miss));
+    }
+
+    #[test]
+    fn pim_macs_complete_without_bus_traffic() {
+        let mut s = sim();
+        s.enqueue(Request::pim(0, PimCommand::BankMac { macs: 4096 }));
+        let st = s.run_to_drain();
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.bytes, 0, "PIM must not move bus data");
+        assert_eq!(st.pim_macs, 4096);
+    }
+
+    #[test]
+    fn pim_gemv_beats_fetch_to_core_on_energy() {
+        // E3 miniature: y += W.x with W resident in DRAM. Fetch-to-core
+        // reads all of W over the bus; PIM runs bank MACs in place.
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let w_bytes: usize = 1 << 20; // 1 MiB weight matrix
+        let macs = (w_bytes / 4) as u64;
+        let mut fetch = sim();
+        let chunk = t.row_bytes;
+        for i in 0..(w_bytes / chunk) {
+            fetch.enqueue(Request::read((i * chunk) as u64, chunk));
+        }
+        let fs = fetch.run_to_drain();
+        let mut pim = DramSim::new(t);
+        let per_bank = macs / t.banks as u64;
+        for b in 0..t.banks {
+            pim.enqueue(Request::pim(
+                (b * t.row_bytes) as u64,
+                PimCommand::BankMac { macs: per_bank },
+            ));
+        }
+        let ps = pim.run_to_drain();
+        let e_fetch = fs.metrics.total_energy_pj();
+        let e_pim = ps.metrics.total_energy_pj();
+        assert!(e_pim * 4.0 < e_fetch, "pim {e_pim} vs fetch {e_fetch}");
+        assert!(ps.cycles < fs.cycles, "pim {} vs fetch {}", ps.cycles, fs.cycles);
+    }
+
+    #[test]
+    fn rowcopy_blocks_bank_for_trc() {
+        let mut s = sim();
+        s.enqueue(Request::pim(0, PimCommand::RowCopy));
+        let st = s.run_to_drain();
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        assert!(st.cycles >= t.t_rcd + t.t_rc);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut s = sim();
+            let mut rng = crate::sim::Rng::new(5);
+            for _ in 0..200 {
+                let addr = (rng.below(1 << 22)) as u64 & !63;
+                if rng.chance(0.3) {
+                    s.enqueue(Request::write(addr, 64));
+                } else {
+                    s.enqueue(Request::read(addr, 128));
+                }
+            }
+            let st = s.run_to_drain();
+            (st.cycles, st.bytes, st.metrics.total_energy_pj().to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn all_kinds_drain() {
+        for k in [DramKind::Ddr4_2400, DramKind::Lpddr4_3200, DramKind::Hbm2] {
+            let mut s = DramSim::new(DramTiming::new(k));
+            for i in 0..64u64 {
+                s.enqueue(Request::read(i * 4096, 256));
+            }
+            let st = s.run_to_drain();
+            assert_eq!(st.completed, 64, "{k:?}");
+        }
+    }
+}

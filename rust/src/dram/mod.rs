@@ -1,0 +1,25 @@
+//! DRAM subsystem simulator with Processing-In-Memory extensions
+//! (paper Sec. IV: "ARCHYTAS aims to augment the DRAMSys tool with PIM and
+//! NVM functionalities").
+//!
+//! The model follows DRAMSys4.0's split: a JEDEC bank state machine that
+//! enforces the full timing-constraint set (tRCD/tRP/tCL/tRAS/tRC/tRRD/
+//! tFAW/tWR/tCCD/burst), an FR-FCFS open-page controller, an address
+//! mapper, and a current-based (IDD-derived) energy model — re-implemented
+//! as an event-jumping Rust simulator instead of SystemC TLM-2.0
+//! (substitution table, DESIGN.md §2).
+//!
+//! The PIM extension adds in-bank commands (row-copy à la RowClone and
+//! bank-level MAC à la UPMEM / HBM-PIM) that occupy the bank *without*
+//! crossing the data bus — the data-movement elimination the paper's
+//! Sec. II motivates, measured in experiment E3.
+
+mod bank;
+mod controller;
+mod pim;
+mod timing;
+
+pub use bank::{Bank, BankState};
+pub use controller::{DramSim, DramStats, Request};
+pub use pim::{PimCommand, PimConfig};
+pub use timing::{DramKind, DramTiming};

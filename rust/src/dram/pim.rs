@@ -1,0 +1,105 @@
+//! Processing-In-Memory command set and device parameters.
+//!
+//! Two PIM primitives, matching the two families the paper's Sec. II
+//! cites:
+//! * `RowCopy` — in-array row-to-row copy (RowClone-style): two back-to-
+//!   back activates, no bus transfer.
+//! * `BankMac` — bank-level MAC engine chewing row-buffer-resident
+//!   operands (UPMEM DPU / HBM-PIM style): `macs` multiply-accumulates at
+//!   `macs_per_cycle`, reading `bytes` from the open row.
+
+use crate::sim::Cycle;
+
+use super::DramTiming;
+
+/// PIM engine parameters (per bank).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PimConfig {
+    /// MACs the in-bank engine retires per DRAM command cycle
+    /// (HBM-PIM: ~2 bf16 MAC/cycle/bank; UPMEM DPU scalar: ~1/3).
+    pub macs_per_cycle: f64,
+    /// Energy per in-bank MAC, pJ (no I/O, short local wires).
+    pub e_mac_pj: f64,
+    /// Energy per row-copy, pJ (two row cycles, no I/O).
+    pub e_rowcopy_pj: f64,
+}
+
+impl Default for PimConfig {
+    fn default() -> Self {
+        // HBM-PIM-class numbers (Kwon et al., ISSCC'21 ballpark).
+        PimConfig { macs_per_cycle: 2.0, e_mac_pj: 0.8, e_rowcopy_pj: 600.0 }
+    }
+}
+
+/// An in-memory operation attached to a bank/row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PimCommand {
+    /// Copy an open row onto another row of the same subarray.
+    RowCopy,
+    /// MAC over row-buffer operands.
+    BankMac { macs: u64 },
+}
+
+impl PimCommand {
+    /// Bank occupancy in cycles.
+    pub fn duration(&self, cfg: &PimConfig, t: &DramTiming) -> Cycle {
+        match self {
+            // RowClone: ACT-ACT-PRE sequence ~ tRC.
+            PimCommand::RowCopy => t.t_rc,
+            PimCommand::BankMac { macs } => {
+                ((*macs as f64 / cfg.macs_per_cycle).ceil() as Cycle).max(1)
+            }
+        }
+    }
+
+    /// Energy in pJ.
+    pub fn energy_pj(&self, cfg: &PimConfig) -> f64 {
+        match self {
+            PimCommand::RowCopy => cfg.e_rowcopy_pj,
+            PimCommand::BankMac { macs } => *macs as f64 * cfg.e_mac_pj,
+        }
+    }
+
+    /// MAC count (stats).
+    pub fn macs(&self) -> u64 {
+        match self {
+            PimCommand::RowCopy => 0,
+            PimCommand::BankMac { macs } => *macs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::DramKind;
+
+    #[test]
+    fn bank_mac_duration_scales() {
+        let cfg = PimConfig::default();
+        let t = DramTiming::new(DramKind::Hbm2);
+        let short = PimCommand::BankMac { macs: 10 }.duration(&cfg, &t);
+        let long = PimCommand::BankMac { macs: 1000 }.duration(&cfg, &t);
+        assert_eq!(short, 5);
+        assert_eq!(long, 500);
+    }
+
+    #[test]
+    fn rowcopy_costs_one_trc_and_no_bus() {
+        let cfg = PimConfig::default();
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        assert_eq!(PimCommand::RowCopy.duration(&cfg, &t), t.t_rc);
+        assert_eq!(PimCommand::RowCopy.macs(), 0);
+    }
+
+    #[test]
+    fn in_bank_mac_far_cheaper_than_io() {
+        // The whole point of PIM: an in-bank MAC (0.8 pJ) is ~30x cheaper
+        // than moving its 4 operand bytes over the DDR4 interface
+        // (~26 pJ/B streaming).
+        let cfg = PimConfig::default();
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let io_pj = 4.0 * t.stream_pj_per_byte();
+        assert!(cfg.e_mac_pj * 10.0 < io_pj, "{io_pj}");
+    }
+}

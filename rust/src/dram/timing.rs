@@ -1,0 +1,189 @@
+//! JEDEC timing parameter sets and the IDD-derived energy constants.
+//!
+//! Numbers are the standard datasheet values DRAMSys ships for DDR4-2400,
+//! LPDDR4-3200 and HBM2 (per pseudo-channel), in controller clock cycles
+//! and picojoules. The studies use *relations* between configurations, so
+//! nominal-corner constants are sufficient (DESIGN.md §2).
+
+/// Supported device generations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramKind {
+    Ddr4_2400,
+    Lpddr4_3200,
+    Hbm2,
+}
+
+/// Timing constraints (cycles) + energy constants (pJ).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramTiming {
+    pub kind: DramKind,
+    /// Controller/DRAM clock in GHz (command clock).
+    pub freq_ghz: f64,
+    /// ACT -> column command.
+    pub t_rcd: u64,
+    /// PRE -> ACT.
+    pub t_rp: u64,
+    /// Read latency (CAS).
+    pub t_cl: u64,
+    /// ACT -> PRE minimum.
+    pub t_ras: u64,
+    /// ACT -> ACT same bank.
+    pub t_rc: u64,
+    /// ACT -> ACT different bank.
+    pub t_rrd: u64,
+    /// Four-activate window.
+    pub t_faw: u64,
+    /// Write recovery (last write data -> PRE).
+    pub t_wr: u64,
+    /// Column-to-column (burst gap).
+    pub t_ccd: u64,
+    /// Data burst duration on the bus.
+    pub t_burst: u64,
+    /// Banks per channel.
+    pub banks: usize,
+    /// Row (page) size in bytes.
+    pub row_bytes: usize,
+    /// Bytes transferred per column burst (BL8 × bus width).
+    pub burst_bytes: usize,
+    // --- energy (pJ), derived from IDD currents at nominal VDD ---
+    pub e_act_pj: f64,
+    pub e_pre_pj: f64,
+    /// Per read burst (array + I/O).
+    pub e_rd_pj: f64,
+    pub e_wr_pj: f64,
+    /// Background power per bank, pJ per cycle.
+    pub e_bg_pj_cycle: f64,
+}
+
+impl DramTiming {
+    pub fn new(kind: DramKind) -> Self {
+        match kind {
+            // DDR4-2400R, x8, 1.2 V (micron datasheet / DRAMPower corner).
+            DramKind::Ddr4_2400 => DramTiming {
+                kind,
+                freq_ghz: 1.2,
+                t_rcd: 16,
+                t_rp: 16,
+                t_cl: 16,
+                t_ras: 39,
+                t_rc: 55,
+                t_rrd: 6,
+                t_faw: 26,
+                t_wr: 18,
+                t_ccd: 6,
+                t_burst: 4,
+                banks: 16,
+                row_bytes: 1024,
+                burst_bytes: 64,
+                e_act_pj: 909.0,
+                e_pre_pj: 606.0,
+                e_rd_pj: 1690.0,
+                e_wr_pj: 1726.0,
+                e_bg_pj_cycle: 0.09,
+            },
+            // LPDDR4-3200, x16, 1.1 V.
+            DramKind::Lpddr4_3200 => DramTiming {
+                kind,
+                freq_ghz: 1.6,
+                t_rcd: 29,
+                t_rp: 34,
+                t_cl: 28,
+                t_ras: 67,
+                t_rc: 101,
+                t_rrd: 16,
+                t_faw: 64,
+                t_wr: 29,
+                t_ccd: 8,
+                t_burst: 8,
+                banks: 8,
+                row_bytes: 2048,
+                burst_bytes: 64,
+                e_act_pj: 480.0,
+                e_pre_pj: 320.0,
+                e_rd_pj: 900.0,
+                e_wr_pj: 935.0,
+                e_bg_pj_cycle: 0.05,
+            },
+            // HBM2 pseudo-channel, 1 GHz.
+            DramKind::Hbm2 => DramTiming {
+                kind,
+                freq_ghz: 1.0,
+                t_rcd: 14,
+                t_rp: 14,
+                t_cl: 14,
+                t_ras: 34,
+                t_rc: 48,
+                t_rrd: 4,
+                t_faw: 16,
+                t_wr: 16,
+                t_ccd: 2,
+                t_burst: 2,
+                banks: 16,
+                row_bytes: 1024,
+                burst_bytes: 32,
+                e_act_pj: 460.0,
+                e_pre_pj: 310.0,
+                e_rd_pj: 550.0,
+                e_wr_pj: 560.0,
+                e_bg_pj_cycle: 0.07,
+            },
+        }
+    }
+
+    /// Peak data bandwidth, GB/s (bus fully streaming).
+    pub fn peak_bandwidth_gbs(&self) -> f64 {
+        self.burst_bytes as f64 / (self.t_burst as f64 / (self.freq_ghz * 1e9)) / 1e9
+    }
+
+    /// Random-access energy per byte at one burst per ACT (worst case).
+    pub fn worst_pj_per_byte(&self) -> f64 {
+        (self.e_act_pj + self.e_pre_pj + self.e_rd_pj) / self.burst_bytes as f64
+    }
+
+    /// Streaming energy per byte (row fully reused).
+    pub fn stream_pj_per_byte(&self) -> f64 {
+        let bursts_per_row = (self.row_bytes / self.burst_bytes) as f64;
+        ((self.e_act_pj + self.e_pre_pj) / bursts_per_row + self.e_rd_pj)
+            / self.burst_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jedec_invariants_hold_for_all_kinds() {
+        for k in [DramKind::Ddr4_2400, DramKind::Lpddr4_3200, DramKind::Hbm2] {
+            let t = DramTiming::new(k);
+            // tRC >= tRAS + tRP (close-then-reopen).
+            assert!(t.t_rc >= t.t_ras + t.t_rp, "{k:?}");
+            // tFAW >= 4 activates cannot be faster than 4*tRRD? JEDEC
+            // allows tFAW >= tRRD (window constraint dominates); sanity:
+            assert!(t.t_faw >= t.t_rrd, "{k:?}");
+            assert!(t.t_ras > t.t_rcd, "{k:?}");
+            assert!(t.row_bytes % t.burst_bytes == 0, "{k:?}");
+            assert!(t.banks >= 8, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn peak_bandwidth_values() {
+        // DDR4-2400 x8: 64B / (4 cycles @ 1.2 GHz) = 19.2 GB/s.
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        assert!((t.peak_bandwidth_gbs() - 19.2).abs() < 0.1, "{}", t.peak_bandwidth_gbs());
+        // HBM2 pseudo-channel: 32B / 2ns = 16 GB/s.
+        let h = DramTiming::new(DramKind::Hbm2);
+        assert!((h.peak_bandwidth_gbs() - 16.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn streaming_cheaper_than_random() {
+        for k in [DramKind::Ddr4_2400, DramKind::Lpddr4_3200, DramKind::Hbm2] {
+            let t = DramTiming::new(k);
+            // Row reuse amortizes ACT/PRE; the RD burst itself still
+            // dominates, so expect ~25-45% savings, not 2x.
+            assert!(t.stream_pj_per_byte() < 0.75 * t.worst_pj_per_byte(), "{k:?}");
+        }
+    }
+}

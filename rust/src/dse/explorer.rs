@@ -1,0 +1,385 @@
+//! NoC topology design-space exploration (experiment E4).
+//!
+//! Implements the paper's three-stage methodology:
+//! 1. **Analytic screening** — every candidate topology is costed with the
+//!    floorplan + distance model (fast, no simulation).
+//! 2. **Solver selection** — MILP (ArchEx-style budgeted argmin) or a
+//!    SAT/difference-logic optimization loop picks the best candidate
+//!    under area / radix / wirelength budgets.
+//! 3. **Iterative simulation-in-the-loop** — the top analytic candidates
+//!    are re-scored with the flit-level simulator, and the measured
+//!    latency tightens the solver's constraint set ("deduce constraints
+//!    to guide the solver to the optimal solution more quickly").
+
+use anyhow::ensure;
+
+use crate::noc::{traffic, Floorplan, NocParams, NocSim, Topology};
+use crate::sim::Rng;
+use crate::Result;
+
+use super::milp::{Milp, Sense};
+use super::pareto::pareto_front;
+use super::smt::{Lit, SmtSolver};
+
+/// One candidate topology with its analytic scores.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub name: String,
+    pub topo: Topology,
+    /// Mean hop distance (analytic latency proxy).
+    pub avg_hops: f64,
+    /// Estimated mean packet latency, cycles (distance + serialization +
+    /// contention inflation from bisection load).
+    pub est_latency: f64,
+    /// Router + wiring area proxy, mm².
+    pub area: f64,
+    /// Energy per KiB transported (pJ), floorplan-derated.
+    pub energy_per_kib: f64,
+    pub max_radix: usize,
+    pub wirelength: usize,
+    /// Measured latency from the flit simulator (filled by refinement).
+    pub sim_latency: Option<f64>,
+}
+
+/// Exploration budgets + workload.
+#[derive(Debug, Clone)]
+pub struct ExploreConfig {
+    /// Compute nodes the fabric must host.
+    pub min_nodes: usize,
+    /// Area budget, mm².
+    pub max_area: f64,
+    /// Max router radix (low-radix design principle).
+    pub max_radix: usize,
+    /// Offered load for the traffic model (packets/node/cycle).
+    pub rate: f64,
+    pub packet_bytes: usize,
+    /// Candidates refined with the flit simulator.
+    pub sim_top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            min_nodes: 16,
+            max_area: 10.0,
+            max_radix: 5,
+            rate: 0.05,
+            packet_bytes: 64,
+            sim_top_k: 3,
+            seed: 7,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExploreMethod {
+    /// Analytic screening only.
+    Exhaustive,
+    /// MILP budgeted argmin over the screened candidates.
+    Milp,
+    /// SAT + difference-logic linear-search optimization.
+    Smt,
+    /// MILP + simulation-in-the-loop constraint tightening.
+    IterativeSim,
+}
+
+/// Exploration output.
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    pub candidates: Vec<Candidate>,
+    /// Index of the selected candidate.
+    pub best: usize,
+    /// Pareto-front indices over (est_latency, area, energy).
+    pub front: Vec<usize>,
+    /// Candidates evaluated by the solver / simulator.
+    pub solver_evals: usize,
+    pub sim_evals: usize,
+}
+
+/// Generate the candidate set for a target size.
+pub fn candidates_for(nodes: usize) -> Vec<(String, Topology)> {
+    let mut out: Vec<(String, Topology)> = Vec::new();
+    let mut push = |name: String, t: Result<Topology>| {
+        if let Ok(t) = t {
+            if t.nodes() >= nodes && t.is_connected() {
+                out.push((name, t));
+            }
+        }
+    };
+    // Meshes / tori around the target size.
+    let side = (nodes as f64).sqrt().ceil() as usize;
+    for w in [side, side + 1] {
+        for h in [side.max(1), side + 1] {
+            if w * h >= nodes {
+                push(format!("mesh{w}x{h}"), Topology::mesh(w, h));
+                push(format!("torus{w}x{h}"), Topology::torus(w, h));
+            }
+        }
+    }
+    push(format!("ring{nodes}"), Topology::ring(nodes));
+    push(format!("star{nodes}"), Topology::star(nodes));
+    let down = (nodes as f64).sqrt().ceil() as usize;
+    push(format!("fattree{down}"), Topology::fattree(down));
+    // Low-radix custom: ring + evenly spaced chords (express links).
+    if nodes >= 8 {
+        let mut edges: Vec<(usize, usize)> = (0..nodes).map(|i| (i, (i + 1) % nodes)).collect();
+        let stride = nodes / 4;
+        for i in (0..nodes).step_by(2) {
+            let j = (i + stride) % nodes;
+            if i != j && !edges.contains(&(i, j)) && !edges.contains(&(j, i)) {
+                edges.push((i, j));
+            }
+        }
+        push(format!("chordal{nodes}"), Topology::custom(nodes, &edges));
+    }
+    out
+}
+
+/// Analytic scoring of one topology under the given workload.
+pub fn score(name: &str, topo: Topology, cfg: &ExploreConfig) -> Candidate {
+    let fp = Floorplan::place(&topo);
+    let avg_hops = topo.avg_distance();
+    let params = NocParams::default();
+    let ser = (cfg.packet_bytes as f64 / params.flit_bytes as f64).ceil();
+    // Contention inflation: offered bisection load / capacity.
+    let flits_per_cycle = topo.nodes() as f64 * cfg.rate * ser;
+    let bisection_cap = topo.bisection_links().max(1) as f64 * 2.0;
+    let rho = (flits_per_cycle * 0.5 / bisection_cap).min(0.95);
+    let base = avg_hops * params.router_latency as f64 + ser;
+    let est_latency = base / (1.0 - rho);
+    // Area: radix² crossbar per router + wiring.
+    let router_area: f64 = (0..topo.nodes())
+        .map(|n| ((topo.degree(n) + 1) as f64).powi(2) * 0.01)
+        .sum();
+    let area = router_area + fp.total_wirelength() as f64 * 0.02;
+    let energy_per_kib = 1024.0 * 8.0
+        * params.hop_energy_pj_per_bit
+        * avg_hops
+        * fp.avg_energy_scale();
+    Candidate {
+        name: name.to_string(),
+        max_radix: topo.max_degree() + 1,
+        wirelength: fp.total_wirelength(),
+        topo,
+        avg_hops,
+        est_latency,
+        area,
+        energy_per_kib,
+        sim_latency: None,
+    }
+}
+
+fn simulate_latency(c: &Candidate, cfg: &ExploreConfig) -> f64 {
+    let mut sim = NocSim::new(c.topo.clone(), NocParams::default());
+    let mut rng = Rng::new(cfg.seed);
+    let inj = traffic::generate(
+        traffic::Pattern::Uniform,
+        c.topo.nodes(),
+        cfg.rate,
+        cfg.packet_bytes,
+        2_000,
+        &mut rng,
+    );
+    let rep = traffic::drive(&mut sim, inj, 3_000_000);
+    rep.avg_latency
+}
+
+fn feasible(c: &Candidate, cfg: &ExploreConfig) -> bool {
+    c.area <= cfg.max_area && c.max_radix <= cfg.max_radix
+}
+
+/// Run the exploration.
+pub fn explore(cfg: &ExploreConfig, method: ExploreMethod) -> Result<ExploreResult> {
+    let mut cands: Vec<Candidate> = candidates_for(cfg.min_nodes)
+        .into_iter()
+        .map(|(n, t)| score(&n, t, cfg))
+        .collect();
+    ensure!(!cands.is_empty(), "no candidate topologies for {} nodes", cfg.min_nodes);
+    let mut solver_evals = 0usize;
+    let mut sim_evals = 0usize;
+
+    let pick_analytic = |cands: &[Candidate]| -> Option<usize> {
+        cands
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| feasible(c, cfg))
+            .min_by(|a, b| a.1.est_latency.partial_cmp(&b.1.est_latency).unwrap())
+            .map(|(i, _)| i)
+    };
+
+    let best = match method {
+        ExploreMethod::Exhaustive => {
+            solver_evals = cands.len();
+            pick_analytic(&cands)
+        }
+        ExploreMethod::Milp => {
+            // Binary selection MILP: pick exactly one candidate minimizing
+            // latency under area/radix budgets (ArchEx-style).
+            let mut m = Milp::new();
+            let vars: Vec<usize> = cands
+                .iter()
+                .map(|c| m.add_var(0.0, 1.0, c.est_latency, true))
+                .collect();
+            m.add_constraint(vars.iter().map(|&v| (v, 1.0)).collect(), Sense::Eq, 1.0);
+            m.add_constraint(
+                vars.iter()
+                    .zip(&cands)
+                    .map(|(&v, c)| (v, c.area))
+                    .collect(),
+                Sense::Le,
+                cfg.max_area,
+            );
+            for (v, c) in vars.iter().zip(&cands) {
+                if c.max_radix > cfg.max_radix {
+                    m.add_constraint(vec![(*v, 1.0)], Sense::Le, 0.0);
+                }
+            }
+            let sol = m.minimize()?;
+            solver_evals = sol.as_ref().map_or(0, |s| s.nodes);
+            sol.and_then(|s| vars.iter().position(|&v| s.x[v] > 0.5))
+        }
+        ExploreMethod::Smt => {
+            // Linear-search SAT optimization: exactly-one candidate;
+            // exclude infeasible; repeatedly forbid everything at least
+            // as slow as the incumbent until UNSAT.
+            let mut order: Vec<usize> = (0..cands.len()).collect();
+            order.sort_by(|&a, &b| {
+                cands[a].est_latency.partial_cmp(&cands[b].est_latency).unwrap()
+            });
+            let mut s = SmtSolver::new();
+            let vars: Vec<usize> = cands.iter().map(|_| s.new_var()).collect();
+            s.add_clause(vars.iter().map(|&v| Lit::pos(v)).collect());
+            for (i, &vi) in vars.iter().enumerate() {
+                for &vj in vars.iter().skip(i + 1) {
+                    s.add_clause(vec![Lit::neg(vi), Lit::neg(vj)]);
+                }
+                if !feasible(&cands[i], cfg) {
+                    s.add_clause(vec![Lit::neg(vi)]);
+                }
+            }
+            let mut incumbent = None;
+            loop {
+                solver_evals += 1;
+                match s.solve()? {
+                    None => break,
+                    Some(model) => {
+                        let chosen = vars.iter().position(|&v| model[v]).unwrap();
+                        incumbent = Some(chosen);
+                        // forbid all candidates with latency >= chosen's
+                        for (i, &v) in vars.iter().enumerate() {
+                            if cands[i].est_latency >= cands[chosen].est_latency {
+                                s.add_clause(vec![Lit::neg(v)]);
+                            }
+                        }
+                    }
+                }
+            }
+            incumbent
+        }
+        ExploreMethod::IterativeSim => {
+            // Analytic rank, then sim-refine the top-k feasible
+            // candidates; measured latencies replace estimates and the
+            // final choice is by measurement.
+            let mut order: Vec<usize> = (0..cands.len())
+                .filter(|&i| feasible(&cands[i], cfg))
+                .collect();
+            order.sort_by(|&a, &b| {
+                cands[a].est_latency.partial_cmp(&cands[b].est_latency).unwrap()
+            });
+            for &i in order.iter().take(cfg.sim_top_k) {
+                let lat = simulate_latency(&cands[i], cfg);
+                cands[i].sim_latency = Some(lat);
+                sim_evals += 1;
+            }
+            solver_evals = order.len();
+            order
+                .iter()
+                .take(cfg.sim_top_k)
+                .min_by(|&&a, &&b| {
+                    cands[a]
+                        .sim_latency
+                        .unwrap()
+                        .partial_cmp(&cands[b].sim_latency.unwrap())
+                        .unwrap()
+                })
+                .copied()
+        }
+    };
+    let best = best.ok_or_else(|| anyhow::anyhow!("no feasible topology under budgets"))?;
+    let points: Vec<Vec<f64>> = cands
+        .iter()
+        .map(|c| vec![c.est_latency, c.area, c.energy_per_kib])
+        .collect();
+    let front = pareto_front(&points);
+    Ok(ExploreResult { candidates: cands, best, front, solver_evals, sim_evals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_generation_covers_families() {
+        let cands = candidates_for(16);
+        let names: Vec<&str> = cands.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.iter().any(|n| n.starts_with("mesh")));
+        assert!(names.iter().any(|n| n.starts_with("torus")));
+        assert!(names.iter().any(|n| n.starts_with("ring")));
+        assert!(names.iter().any(|n| n.starts_with("star")));
+        assert!(names.iter().any(|n| n.starts_with("fattree")));
+        assert!(names.iter().any(|n| n.starts_with("chordal")));
+        for (_, t) in &cands {
+            assert!(t.is_connected());
+        }
+    }
+
+    #[test]
+    fn methods_agree_on_the_analytic_optimum() {
+        let cfg = ExploreConfig::default();
+        let ex = explore(&cfg, ExploreMethod::Exhaustive).unwrap();
+        let milp = explore(&cfg, ExploreMethod::Milp).unwrap();
+        let smt = explore(&cfg, ExploreMethod::Smt).unwrap();
+        let lat = |r: &ExploreResult| r.candidates[r.best].est_latency;
+        assert!((lat(&ex) - lat(&milp)).abs() < 1e-9);
+        assert!((lat(&ex) - lat(&smt)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budgets_bind() {
+        // A tiny area budget must exclude the torus (long wrap wires &
+        // radix-5 routers) and change the answer or fail.
+        let loose = explore(&ExploreConfig::default(), ExploreMethod::Exhaustive).unwrap();
+        let tight_cfg = ExploreConfig { max_radix: 3, ..Default::default() };
+        let tight = explore(&tight_cfg, ExploreMethod::Exhaustive).unwrap();
+        assert!(tight.candidates[tight.best].max_radix <= 3);
+        // Ring/chordal class wins under radix pressure.
+        assert_ne!(
+            loose.candidates[loose.best].name,
+            tight.candidates[tight.best].name
+        );
+    }
+
+    #[test]
+    fn pareto_front_nonempty_and_valid() {
+        let r = explore(&ExploreConfig::default(), ExploreMethod::Exhaustive).unwrap();
+        assert!(!r.front.is_empty());
+        assert!(r.front.iter().all(|&i| i < r.candidates.len()));
+    }
+
+    #[test]
+    fn iterative_sim_fills_measurements() {
+        let cfg = ExploreConfig { sim_top_k: 2, ..Default::default() };
+        let r = explore(&cfg, ExploreMethod::IterativeSim).unwrap();
+        assert_eq!(r.sim_evals, 2);
+        assert!(r.candidates[r.best].sim_latency.is_some());
+        let measured = r.candidates.iter().filter(|c| c.sim_latency.is_some()).count();
+        assert_eq!(measured, 2);
+    }
+
+    #[test]
+    fn infeasible_budget_errors() {
+        let cfg = ExploreConfig { max_area: 0.001, ..Default::default() };
+        assert!(explore(&cfg, ExploreMethod::Exhaustive).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! Design-space exploration (paper Sec. III): "methods for efficient
+//! design space exploration to find optimal architectures, using both
+//! Mixed-Integer Linear Programming (MILP), following the approach in
+//! ArchEx, and Boolean techniques, such as Satisfiability Modulo Theory
+//! (SMT) ... System-level simulation will also be introduced using an
+//! iterative optimisation approach to speed up the execution and deduce
+//! constraints to guide the solver to the optimal solution more quickly."
+//!
+//! * [`milp`] — dense two-phase simplex + branch-and-bound MILP solver.
+//! * [`smt`] — DPLL SAT core with a lazy difference-logic theory.
+//! * [`explorer`] — NoC topology DSE: analytic screening, MILP/SMT
+//!   candidate selection, iterative simulation-in-the-loop refinement.
+//! * [`pareto`] — Pareto-front extraction for the cost/performance plots.
+
+pub mod explorer;
+pub mod milp;
+pub mod pareto;
+pub mod smt;
+
+pub use explorer::{explore, Candidate, ExploreConfig, ExploreMethod, ExploreResult};
+pub use milp::{Constraint, Milp, Sense, Solution as MilpSolution};
+pub use pareto::pareto_front;
+pub use smt::{DiffConstraint, Lit, SmtSolver};

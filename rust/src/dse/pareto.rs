@@ -1,0 +1,83 @@
+//! Pareto-front extraction for cost/performance DSE plots.
+
+/// Indices of the Pareto-optimal points when *minimizing* every
+/// objective. Ties: a point dominated by an identical point keeps only
+/// the first occurrence.
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let dominates = q.iter().zip(p).all(|(a, b)| a <= b)
+                && q.iter().zip(p).any(|(a, b)| a < b);
+            let identical_earlier = j < i && q == p;
+            if dominates || identical_earlier {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Hypervolume-style scalar score (product of normalized slack to a
+/// reference point) — a quick "is this front better" metric for the
+/// iterative explorer.
+pub fn front_quality(points: &[Vec<f64>], front: &[usize], reference: &[f64]) -> f64 {
+    front
+        .iter()
+        .map(|&i| {
+            points[i]
+                .iter()
+                .zip(reference)
+                .map(|(v, r)| ((r - v) / r).max(0.0))
+                .product::<f64>()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_front() {
+        let pts = vec![
+            vec![1.0, 5.0], // front
+            vec![2.0, 4.0], // front
+            vec![3.0, 3.0], // front
+            vec![3.0, 5.0], // dominated by (1,5)? no: 1<=3 and 5<=5 and 1<3 -> dominated
+            vec![2.5, 4.5], // dominated by (2,4)
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn identical_points_keep_one() {
+        let pts = vec![vec![1.0, 1.0], vec![1.0, 1.0]];
+        assert_eq!(pareto_front(&pts), vec![0]);
+    }
+
+    #[test]
+    fn single_point() {
+        assert_eq!(pareto_front(&[vec![3.0]]), vec![0]);
+    }
+
+    #[test]
+    fn all_nondominated_in_anti_chain() {
+        let pts = vec![vec![1.0, 3.0], vec![2.0, 2.0], vec![3.0, 1.0]];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn quality_prefers_better_fronts() {
+        let reference = vec![10.0, 10.0];
+        let good = vec![vec![1.0, 1.0]];
+        let bad = vec![vec![9.0, 9.0]];
+        let qg = front_quality(&good, &[0], &reference);
+        let qb = front_quality(&bad, &[0], &reference);
+        assert!(qg > qb);
+    }
+}

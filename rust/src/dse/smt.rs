@@ -1,0 +1,307 @@
+//! SMT-lite: a DPLL SAT core with a lazy difference-logic theory
+//! (the "Boolean techniques, such as Satisfiability Modulo Theory" leg of
+//! the paper's DSE toolchain).
+//!
+//! Architecture is the standard lazy-SMT loop: DPLL (unit propagation +
+//! branching + chronological backtracking) enumerates Boolean models;
+//! each partial model's enabled difference atoms `x_a - x_b <= c` are
+//! checked for consistency with Bellman-Ford negative-cycle detection;
+//! inconsistent subsets come back as blocking clauses.
+
+use anyhow::ensure;
+
+use crate::Result;
+
+/// A literal: positive or negated Boolean variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lit {
+    pub var: usize,
+    pub positive: bool,
+}
+
+impl Lit {
+    pub fn pos(var: usize) -> Lit {
+        Lit { var, positive: true }
+    }
+
+    pub fn neg(var: usize) -> Lit {
+        Lit { var, positive: false }
+    }
+}
+
+/// Difference-logic atom `x_a - x_b <= c`, attached to a Boolean var:
+/// when that var is true, the constraint must hold.
+#[derive(Debug, Clone, Copy)]
+pub struct DiffConstraint {
+    pub a: usize,
+    pub b: usize,
+    pub c: i64,
+}
+
+/// The solver.
+#[derive(Debug, Default)]
+pub struct SmtSolver {
+    nvars: usize,
+    clauses: Vec<Vec<Lit>>,
+    /// theory[boolean var] = Some(difference constraint).
+    theory: Vec<Option<DiffConstraint>>,
+    /// Number of integer (difference-logic) variables.
+    int_vars: usize,
+}
+
+/// Assignment state in DPLL.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Val {
+    Unassigned,
+    True,
+    False,
+}
+
+impl SmtSolver {
+    pub fn new() -> Self {
+        SmtSolver::default()
+    }
+
+    /// Fresh Boolean variable.
+    pub fn new_var(&mut self) -> usize {
+        self.nvars += 1;
+        self.theory.push(None);
+        self.nvars - 1
+    }
+
+    /// Fresh Boolean variable tied to a difference atom over integer
+    /// variables `a`, `b` (auto-registered).
+    pub fn new_diff_var(&mut self, d: DiffConstraint) -> usize {
+        let v = self.new_var();
+        self.int_vars = self.int_vars.max(d.a + 1).max(d.b + 1);
+        self.theory[v] = Some(d);
+        v
+    }
+
+    pub fn add_clause(&mut self, lits: Vec<Lit>) {
+        debug_assert!(lits.iter().all(|l| l.var < self.nvars));
+        self.clauses.push(lits);
+    }
+
+    /// Theory check: all difference atoms whose Boolean is true must be
+    /// jointly satisfiable. Bellman-Ford on the constraint graph
+    /// (edge b->a with weight c for x_a - x_b <= c); negative cycle =
+    /// conflict. Returns the conflicting atom set on failure.
+    fn theory_check(&self, assign: &[Val]) -> Option<Vec<usize>> {
+        let mut edges: Vec<(usize, usize, i64, usize)> = Vec::new();
+        for (v, d) in self.theory.iter().enumerate() {
+            if let (Some(d), Val::True) = (d, assign[v]) {
+                edges.push((d.b, d.a, d.c, v));
+            }
+        }
+        if edges.is_empty() || self.int_vars == 0 {
+            return None;
+        }
+        let n = self.int_vars;
+        let mut dist = vec![0i64; n];
+        for it in 0..=n {
+            let mut changed = false;
+            for &(from, to, w, _) in &edges {
+                if dist[from] + w < dist[to] {
+                    dist[to] = dist[from] + w;
+                    changed = true;
+                }
+            }
+            if !changed {
+                return None;
+            }
+            if it == n {
+                // Conservative conflict: all enabled atoms (a full MUS
+                // extractor is overkill at this scale).
+                return Some(edges.iter().map(|&(_, _, _, v)| v).collect());
+            }
+        }
+        None
+    }
+
+    fn unit_propagate(&self, assign: &mut [Val]) -> bool {
+        loop {
+            let mut changed = false;
+            for clause in &self.clauses {
+                let mut unassigned: Option<Lit> = None;
+                let mut n_unassigned = 0;
+                let mut satisfied = false;
+                for &l in clause {
+                    match (assign[l.var], l.positive) {
+                        (Val::True, true) | (Val::False, false) => {
+                            satisfied = true;
+                            break;
+                        }
+                        (Val::Unassigned, _) => {
+                            n_unassigned += 1;
+                            unassigned = Some(l);
+                        }
+                        _ => {}
+                    }
+                }
+                if satisfied {
+                    continue;
+                }
+                match n_unassigned {
+                    0 => return false, // conflict
+                    1 => {
+                        let l = unassigned.unwrap();
+                        assign[l.var] = if l.positive { Val::True } else { Val::False };
+                        changed = true;
+                    }
+                    _ => {}
+                }
+            }
+            if !changed {
+                return true;
+            }
+        }
+    }
+
+    /// Solve; returns a model (Boolean assignment) if SAT.
+    pub fn solve(&mut self) -> Result<Option<Vec<bool>>> {
+        let mut assign = vec![Val::Unassigned; self.nvars];
+        let mut steps = 0usize;
+        let sat = self.dpll(&mut assign, &mut steps)?;
+        Ok(if sat {
+            Some(assign.iter().map(|&v| v == Val::True).collect())
+        } else {
+            None
+        })
+    }
+
+    fn dpll(&mut self, assign: &mut Vec<Val>, steps: &mut usize) -> Result<bool> {
+        *steps += 1;
+        ensure!(*steps < 2_000_000, "DPLL step limit");
+        let saved = assign.clone();
+        if !self.unit_propagate(assign) {
+            *assign = saved;
+            return Ok(false);
+        }
+        // Theory consistency on the partial model (atoms set true so far).
+        if let Some(conflict) = self.theory_check(assign) {
+            let clause: Vec<Lit> = conflict.into_iter().map(Lit::neg).collect();
+            self.clauses.push(clause);
+            *assign = saved;
+            return Ok(false);
+        }
+        let Some(v) = assign.iter().position(|&x| x == Val::Unassigned) else {
+            return Ok(true); // complete + theory-consistent
+        };
+        for &val in &[Val::True, Val::False] {
+            let snapshot = assign.clone();
+            assign[v] = val;
+            if self.dpll(assign, steps)? {
+                return Ok(true);
+            }
+            *assign = snapshot;
+        }
+        *assign = saved;
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sat_simple() {
+        let mut s = SmtSolver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        s.add_clause(vec![Lit::pos(a), Lit::pos(b)]);
+        s.add_clause(vec![Lit::neg(a)]);
+        let m = s.solve().unwrap().unwrap();
+        assert!(!m[a] && m[b]);
+    }
+
+    #[test]
+    fn unsat_simple() {
+        let mut s = SmtSolver::new();
+        let a = s.new_var();
+        s.add_clause(vec![Lit::pos(a)]);
+        s.add_clause(vec![Lit::neg(a)]);
+        assert!(s.solve().unwrap().is_none());
+    }
+
+    #[test]
+    fn three_sat_unsat_instance() {
+        // (a|b|c)(¬a|b)(¬b|c)(¬c|a)(¬a|¬b|¬c): implication cycle forces
+        // a=b=c, first clause forces all-true, last forbids it.
+        let mut s = SmtSolver::new();
+        let (a, b, c) = (s.new_var(), s.new_var(), s.new_var());
+        s.add_clause(vec![Lit::pos(a), Lit::pos(b), Lit::pos(c)]);
+        s.add_clause(vec![Lit::neg(a), Lit::pos(b)]);
+        s.add_clause(vec![Lit::neg(b), Lit::pos(c)]);
+        s.add_clause(vec![Lit::neg(c), Lit::pos(a)]);
+        s.add_clause(vec![Lit::neg(a), Lit::neg(b), Lit::neg(c)]);
+        assert!(s.solve().unwrap().is_none());
+    }
+
+    #[test]
+    fn difference_logic_consistent() {
+        // x < y, y < z, x - z <= 5: consistent.
+        let mut s = SmtSolver::new();
+        let d1 = s.new_diff_var(DiffConstraint { a: 0, b: 1, c: -1 });
+        let d2 = s.new_diff_var(DiffConstraint { a: 1, b: 2, c: -1 });
+        let d3 = s.new_diff_var(DiffConstraint { a: 0, b: 2, c: 5 });
+        s.add_clause(vec![Lit::pos(d1)]);
+        s.add_clause(vec![Lit::pos(d2)]);
+        s.add_clause(vec![Lit::pos(d3)]);
+        assert!(s.solve().unwrap().is_some());
+    }
+
+    #[test]
+    fn difference_logic_cycle_unsat() {
+        // x < y and y < x.
+        let mut s = SmtSolver::new();
+        let d1 = s.new_diff_var(DiffConstraint { a: 0, b: 1, c: -1 });
+        let d2 = s.new_diff_var(DiffConstraint { a: 1, b: 0, c: -1 });
+        s.add_clause(vec![Lit::pos(d1)]);
+        s.add_clause(vec![Lit::pos(d2)]);
+        assert!(s.solve().unwrap().is_none());
+    }
+
+    #[test]
+    fn theory_guides_boolean_choice() {
+        // d2 forced; d1 would close a negative cycle with d2; clause
+        // (d1 | d3) must resolve to d3.
+        let mut s = SmtSolver::new();
+        let d1 = s.new_diff_var(DiffConstraint { a: 0, b: 1, c: -3 });
+        let d2 = s.new_diff_var(DiffConstraint { a: 1, b: 0, c: -3 });
+        let d3 = s.new_var();
+        s.add_clause(vec![Lit::pos(d2)]);
+        s.add_clause(vec![Lit::pos(d1), Lit::pos(d3)]);
+        let m = s.solve().unwrap().unwrap();
+        assert!(m[d3]);
+        assert!(!(m[d1] && m[d2]));
+    }
+
+    #[test]
+    fn ordering_synthesis() {
+        // Three tasks, pairwise strict orders, model must be a total
+        // order (3 of 6 atoms true, acyclic).
+        let mut s = SmtSolver::new();
+        let mut before = std::collections::HashMap::new();
+        for i in 0..3usize {
+            for j in 0..3usize {
+                if i != j {
+                    let v = s.new_diff_var(DiffConstraint { a: i, b: j, c: -1 });
+                    before.insert((i, j), v);
+                }
+            }
+        }
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                let ij = before[&(i, j)];
+                let ji = before[&(j, i)];
+                s.add_clause(vec![Lit::pos(ij), Lit::pos(ji)]);
+                s.add_clause(vec![Lit::neg(ij), Lit::neg(ji)]);
+            }
+        }
+        let m = s.solve().unwrap().unwrap();
+        let trues = before.values().filter(|&&v| m[v]).count();
+        assert_eq!(trues, 3);
+    }
+}

@@ -1,0 +1,85 @@
+//! PULP-style multi-core cluster model (CU template C's shell).
+//!
+//! `cores` RISC-V cores share a banked TCDM through a logarithmic
+//! interconnect. Elementwise/pre/post work parallelizes across cores;
+//! TCDM banking conflicts derate throughput as contention grows (the
+//! classic PULP p(conflict) curve, first-order approximation).
+
+use crate::metrics::{Category, Metrics};
+
+/// Cluster shell parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PulpCluster {
+    pub cores: usize,
+    pub tcdm_banks: usize,
+    /// Per-core ops per cycle on elementwise work.
+    pub ops_per_core_cycle: f64,
+    /// Core energy per cycle, pJ.
+    pub e_core_cycle_pj: f64,
+}
+
+impl PulpCluster {
+    pub fn new(cores: usize) -> Self {
+        PulpCluster {
+            cores: cores.max(1),
+            tcdm_banks: (2 * cores).max(2),
+            ops_per_core_cycle: 1.0,
+            e_core_cycle_pj: 8.0,
+        }
+    }
+
+    /// Expected slowdown from TCDM banking conflicts with `cores`
+    /// requesters over `banks` banks (random addresses):
+    /// E[serialization] ≈ 1 / (1 - collisions) with
+    /// p(any collision) from the birthday approximation.
+    pub fn contention_factor(&self) -> f64 {
+        let n = self.cores as f64;
+        let b = self.tcdm_banks as f64;
+        // Expected max-load serialization, first order: 1 + (n-1)/(2b).
+        1.0 + (n - 1.0) / (2.0 * b)
+    }
+
+    /// Cost of `elems` elementwise operations spread across the cores.
+    pub fn elementwise(&self, elems: usize) -> Metrics {
+        let mut m = Metrics::new();
+        m.ops = elems as u64;
+        let ideal = elems as f64 / (self.cores as f64 * self.ops_per_core_cycle);
+        m.cycles = (ideal * self.contention_factor()).ceil() as u64;
+        m.cycles = m.cycles.max(1);
+        m.add_energy(
+            Category::Compute,
+            m.cycles as f64 * self.cores as f64 * self.e_core_cycle_pj,
+        );
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_cores_faster_elementwise() {
+        let c2 = PulpCluster::new(2);
+        let c8 = PulpCluster::new(8);
+        let e = 100_000;
+        assert!(c8.elementwise(e).cycles < c2.elementwise(e).cycles / 2);
+    }
+
+    #[test]
+    fn contention_grows_with_cores_per_bank() {
+        let balanced = PulpCluster::new(8); // 16 banks
+        let mut starved = PulpCluster::new(8);
+        starved.tcdm_banks = 4;
+        assert!(starved.contention_factor() > balanced.contention_factor());
+        assert!(balanced.contention_factor() >= 1.0);
+    }
+
+    #[test]
+    fn energy_charged_for_all_cores_while_busy() {
+        let c = PulpCluster::new(4);
+        let m = c.elementwise(4000);
+        let expect = m.cycles as f64 * 4.0 * c.e_core_cycle_pj;
+        assert!((m.total_energy_pj() - expect).abs() < 1e-9);
+    }
+}

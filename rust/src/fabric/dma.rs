@@ -1,0 +1,55 @@
+//! DMA engine model for CU templates B and C.
+
+use crate::metrics::{Category, Metrics};
+use crate::sim::Cycle;
+
+/// A simple burst DMA: fixed programming cost + streaming at a set width.
+#[derive(Debug, Clone, Copy)]
+pub struct Dma {
+    /// Bytes moved per fabric cycle once streaming.
+    pub bytes_per_cycle: f64,
+    /// Descriptor programming + arbitration, cycles per transfer.
+    pub setup_cycles: Cycle,
+    /// Local interconnect energy, pJ/byte.
+    pub e_pj_byte: f64,
+}
+
+impl Default for Dma {
+    fn default() -> Self {
+        Dma { bytes_per_cycle: 64.0, setup_cycles: 16, e_pj_byte: 0.2 }
+    }
+}
+
+impl Dma {
+    /// Cost of one transfer of `bytes`.
+    pub fn transfer(&self, bytes: u64) -> Metrics {
+        let mut m = Metrics::new();
+        if bytes == 0 {
+            return m;
+        }
+        m.cycles = self.setup_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as Cycle;
+        m.bytes_moved = bytes;
+        m.add_energy(Category::Sram, bytes as f64 * self.e_pj_byte);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_transfer_is_free() {
+        assert_eq!(Dma::default().transfer(0).cycles, 0);
+    }
+
+    #[test]
+    fn setup_dominates_small_streaming_dominates_large() {
+        let d = Dma::default();
+        let small = d.transfer(8);
+        assert_eq!(small.cycles, 16 + 1);
+        let large = d.transfer(1 << 20);
+        assert!(large.cycles > 16_000);
+        assert!((large.cycles - d.setup_cycles) as f64 >= (1 << 20) as f64 / d.bytes_per_cycle);
+    }
+}

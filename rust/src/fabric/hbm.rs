@@ -1,0 +1,72 @@
+//! High-Bandwidth Memory model (the fabric's external memory).
+//!
+//! Analytic channel model used on the co-simulation fast path; the
+//! timing-accurate HBM2 bank model lives in `dram::DramSim` and is used
+//! by experiment E3 to validate these constants.
+
+use crate::metrics::{Category, Metrics};
+
+/// Multi-channel HBM stack.
+#[derive(Debug, Clone, Copy)]
+pub struct Hbm {
+    pub channels: usize,
+    /// Per-channel bandwidth, GB/s.
+    pub gbs_per_channel: f64,
+    /// Access energy, pJ/byte (HBM2: ~3.9).
+    pub e_pj_byte: f64,
+    /// Fixed access latency, fabric cycles.
+    pub latency_cycles: u64,
+}
+
+impl Hbm {
+    pub fn new(channels: usize, gbs_per_channel: f64, e_pj_byte: f64) -> Self {
+        Hbm { channels, gbs_per_channel, e_pj_byte, latency_cycles: 100 }
+    }
+
+    /// Aggregate bandwidth, GB/s.
+    pub fn total_gbs(&self) -> f64 {
+        self.channels as f64 * self.gbs_per_channel
+    }
+
+    /// Cost of reading/writing `bytes` (channel-striped), at a 1 GHz
+    /// fabric reference clock.
+    pub fn access(&self, bytes: u64) -> Metrics {
+        let mut m = Metrics::new();
+        if bytes == 0 {
+            return m;
+        }
+        let bytes_per_cycle = self.total_gbs(); // GB/s at 1 GHz = B/cycle
+        m.cycles = self.latency_cycles + (bytes as f64 / bytes_per_cycle).ceil() as u64;
+        m.bytes_moved = bytes;
+        m.add_energy(Category::Dram, bytes as f64 * self.e_pj_byte);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_scales_with_channels() {
+        let one = Hbm::new(1, 64.0, 3.9);
+        let four = Hbm::new(4, 64.0, 3.9);
+        let big = 1 << 24;
+        assert!(one.access(big).cycles > 3 * four.access(big).cycles);
+        assert_eq!(four.total_gbs(), 256.0);
+    }
+
+    #[test]
+    fn latency_floor_for_small_access() {
+        let h = Hbm::new(4, 64.0, 3.9);
+        assert_eq!(h.access(64).cycles, 100 + 1);
+    }
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let h = Hbm::new(2, 64.0, 3.9);
+        let a = h.access(1000).total_energy_pj();
+        let b = h.access(2000).total_energy_pj();
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,257 @@
+//! Compute-Unit tile: an accelerator behind one of the three integration
+//! templates of paper Fig. 1. The template decides control overhead,
+//! operand staging, and how many bytes must cross the NoC per invocation.
+
+use anyhow::bail;
+
+use crate::accel::{Accelerator, Compute, Precision};
+use crate::metrics::{Area, Category, Metrics};
+use crate::noc::NodeId;
+use crate::Result;
+
+use super::{Dma, PulpCluster};
+
+/// Integration template (paper Fig. 1 A/B/C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Template {
+    /// Stand-alone accelerator with NoC interface.
+    A,
+    /// Light-weight wrapper: RISC-V controller + TCDM + DMA.
+    B,
+    /// PULP-style multi-core cluster around the accelerator.
+    C,
+}
+
+impl Template {
+    pub fn from_char(c: char) -> Result<Self> {
+        Ok(match c {
+            'A' => Template::A,
+            'B' => Template::B,
+            'C' => Template::C,
+            other => bail!("unknown CU template {other:?}"),
+        })
+    }
+
+    /// Control overhead per op invocation, fabric cycles (host descriptor
+    /// for A; controller-core launch for B; cluster barrier + launch for C).
+    fn ctrl_cycles(self) -> u64 {
+        match self {
+            Template::A => 100,
+            Template::B => 300,
+            Template::C => 500,
+        }
+    }
+
+    fn ctrl_energy_pj(self) -> f64 {
+        self.ctrl_cycles() as f64 * 5.0
+    }
+}
+
+/// Result of running one op on a tile: time/energy on the tile itself
+/// plus the bytes the caller must move over the NoC.
+#[derive(Debug, Clone)]
+pub struct TileCost {
+    /// Tile-local metrics in *fabric* cycles.
+    pub metrics: Metrics,
+    /// Operand bytes that cross the NoC for this invocation.
+    pub noc_bytes: u64,
+}
+
+/// One placed Compute Unit.
+pub struct Tile {
+    pub id: usize,
+    pub node: NodeId,
+    pub accel: Box<dyn Accelerator>,
+    pub template: Template,
+    pub tcdm_bytes: usize,
+    pub cluster: Option<PulpCluster>,
+    pub dma: Dma,
+    /// Fabric clock the tile is integrated at, GHz.
+    pub fabric_ghz: f64,
+}
+
+impl Tile {
+    pub fn new(
+        id: usize,
+        node: NodeId,
+        accel: Box<dyn Accelerator>,
+        template: Template,
+        tcdm_bytes: usize,
+        cluster_cores: usize,
+    ) -> Self {
+        let cluster = match template {
+            Template::C => Some(PulpCluster::new(cluster_cores)),
+            _ => None,
+        };
+        Tile { id, node, accel, template, tcdm_bytes, cluster, dma: Dma::default(), fabric_ghz: 1.0 }
+    }
+
+    /// Does this tile's accelerator run precision `p`?
+    pub fn supports(&self, p: Precision) -> bool {
+        self.accel.supports(p) || self.cluster.is_some()
+    }
+
+    /// Convert device cycles to fabric cycles.
+    #[allow(dead_code)] // used by unit tests; the exec path inlines it
+    fn to_fabric_cycles(&self, dev_cycles: u64) -> u64 {
+        ((dev_cycles as f64) * self.fabric_ghz / self.accel.freq_ghz()).ceil() as u64
+    }
+
+    /// Execute one compute op on this tile.
+    ///
+    /// * Template A: every operand (weights included) streams over the
+    ///   NoC, no overlap: latency = ctrl + transfer-in-accel-out serial.
+    ///   The NoC share is returned to the caller; the serial dependency
+    ///   is approximated by the caller adding transport latency.
+    /// * Template B: weights resident in TCDM when they fit (amortized to
+    ///   zero steady-state traffic), activations DMA-staged and
+    ///   double-buffered: latency = ctrl + max(accel, dma).
+    /// * Template C: as B; elementwise ops run on the cluster cores
+    ///   instead of the accelerator.
+    pub fn execute(&self, c: &Compute, p: Precision) -> Result<TileCost> {
+        let run_on_cluster = matches!(c, Compute::Elementwise { .. }) && self.cluster.is_some();
+        if !run_on_cluster && !self.accel.supports(p) {
+            bail!(
+                "tile {} ({}) does not support {:?}",
+                self.id,
+                self.accel.name(),
+                p
+            );
+        }
+        let mut out = Metrics::new();
+        out.add_energy(Category::Host, self.template.ctrl_energy_pj());
+
+        let (core, dev_ghz) = if run_on_cluster {
+            let cl = self.cluster.as_ref().unwrap();
+            let elems = match c {
+                Compute::Elementwise { elems } => *elems,
+                _ => unreachable!(),
+            };
+            (cl.elementwise(elems), self.fabric_ghz)
+        } else {
+            (self.accel.cost(c, p), self.accel.freq_ghz())
+        };
+        let accel_fabric_cycles =
+            ((core.cycles as f64) * self.fabric_ghz / dev_ghz).ceil() as u64;
+
+        let io = c.io_bytes(p);
+        let weights = c.weight_bytes(p);
+        let (noc_bytes, tile_cycles) = match self.template {
+            Template::A => {
+                // Everything streams over NoC; accel starts after inputs
+                // land (caller adds transport); no local staging.
+                (io + weights, accel_fabric_cycles)
+            }
+            Template::B | Template::C => {
+                let weights_resident = (weights as usize) <= self.tcdm_bytes / 2;
+                let stream = if weights_resident { io } else { io + weights };
+                let dma = self.dma.transfer(stream);
+                out.absorb_parallel(&dma.with_cycles(0));
+                // Double buffering: DMA overlaps compute.
+                (stream, accel_fabric_cycles.max(dma.cycles))
+            }
+        };
+        out.cycles = self.template.ctrl_cycles() + tile_cycles;
+        for (cat, pj) in core.breakdown() {
+            out.add_energy(cat, pj);
+        }
+        out.ops = core.ops;
+        out.bytes_moved += noc_bytes;
+        Ok(TileCost { metrics: out, noc_bytes })
+    }
+
+    pub fn area(&self) -> Area {
+        let shell = match self.template {
+            Template::A => 0.1,
+            Template::B => 0.4 + self.tcdm_bytes as f64 / 1e6 * 0.5, // SRAM macro
+            Template::C => {
+                0.4 + self.tcdm_bytes as f64 / 1e6 * 0.5
+                    + self.cluster.as_ref().map_or(0.0, |c| c.cores as f64 * 0.15)
+            }
+        };
+        Area::new(self.accel.area().mm2 + shell)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::DigitalNpu;
+
+    fn tile(template: Template) -> Tile {
+        Tile::new(0, 1, Box::new(DigitalNpu::default()), template, 256 * 1024, 8)
+    }
+
+    fn mm() -> Compute {
+        Compute::MatMul { m: 64, k: 256, n: 128 }
+    }
+
+    #[test]
+    fn template_a_streams_weights_every_call() {
+        let a = tile(Template::A).execute(&mm(), Precision::Int8).unwrap();
+        let b = tile(Template::B).execute(&mm(), Precision::Int8).unwrap();
+        assert!(a.noc_bytes > b.noc_bytes, "{} vs {}", a.noc_bytes, b.noc_bytes);
+        assert_eq!(
+            a.noc_bytes - b.noc_bytes,
+            mm().weight_bytes(Precision::Int8)
+        );
+    }
+
+    #[test]
+    fn template_b_overlaps_dma_with_compute() {
+        // Per-tile latency (excluding NoC) should be ctrl + max(parts),
+        // strictly less than ctrl_a + sum(parts) for a feed-heavy op.
+        let b = tile(Template::B).execute(&mm(), Precision::Int8).unwrap();
+        let tb = tile(Template::B);
+        let accel_only = tb.to_fabric_cycles(tb.accel.cost(&mm(), Precision::Int8).cycles);
+        let dma_only = tb.dma.transfer(mm().io_bytes(Precision::Int8)).cycles;
+        assert_eq!(
+            b.metrics.cycles,
+            Template::B.ctrl_cycles() + accel_only.max(dma_only)
+        );
+    }
+
+    #[test]
+    fn big_weights_overflow_tcdm_and_stream() {
+        let huge = Compute::MatMul { m: 8, k: 1024, n: 512 }; // 512 KiB int8
+        let t = tile(Template::B);
+        let cost = t.execute(&huge, Precision::Int8).unwrap();
+        assert!(cost.noc_bytes >= huge.weight_bytes(Precision::Int8));
+    }
+
+    #[test]
+    fn cluster_absorbs_elementwise() {
+        let c = tile(Template::C);
+        let cost = c.execute(&Compute::Elementwise { elems: 100_000 }, Precision::F32).unwrap();
+        // 8 cores at ~1 op/cycle: ~12.5k cycles + ctrl, far below the
+        // NPU vector unit? NPU does 128/cycle — the point here is that
+        // the cluster path *works* and is charged to cluster energy.
+        assert!(cost.metrics.cycles > Template::C.ctrl_cycles());
+        assert!(cost.metrics.total_energy_pj() > 0.0);
+    }
+
+    #[test]
+    fn unsupported_precision_fails() {
+        let t = tile(Template::A);
+        assert!(t.execute(&mm(), Precision::Analog).is_err());
+    }
+
+    #[test]
+    fn area_ordering_a_b_c() {
+        let (a, b, c) = (tile(Template::A), tile(Template::B), tile(Template::C));
+        assert!(a.area().mm2 < b.area().mm2);
+        assert!(b.area().mm2 < c.area().mm2);
+    }
+
+    #[test]
+    fn e1_shape_b_beats_a_on_latency_for_reused_weights() {
+        // Template A pays weight transfer every call; B amortizes via
+        // TCDM residency — with transport added, B wins. Here we check
+        // the tile-local part of that claim: B's noc_bytes are smaller
+        // and its latency not worse beyond the ctrl delta.
+        let a = tile(Template::A).execute(&mm(), Precision::Int8).unwrap();
+        let b = tile(Template::B).execute(&mm(), Precision::Int8).unwrap();
+        assert!(b.noc_bytes < a.noc_bytes);
+        assert!(b.metrics.cycles <= a.metrics.cycles + 300);
+    }
+}

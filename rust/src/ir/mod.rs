@@ -1,0 +1,542 @@
+//! Neural-network graph IR — the ONNX-like representation the ARCHYTAS
+//! compiler stack (paper Sec. V, Fig. 2) operates on.
+//!
+//! Design points:
+//! * Weights are first-class mutable data (`Graph::weights`) so the
+//!   pruning / sparsification / quantization passes (Sec. V.B) transform
+//!   *real* tensors, not metadata.
+//! * Every compute node carries enough shape information for the mapper
+//!   to derive an [`crate::accel::Compute`] descriptor.
+//! * Node ids are topologically ordered by construction (builder enforces
+//!   def-before-use), so passes iterate `0..graph.len()` directly.
+
+use anyhow::ensure;
+
+use crate::Result;
+
+/// Node index.
+pub type NodeId = usize;
+
+/// Operator kinds (enough to express the MLP / CNN-as-GEMM / ViT
+/// workloads of `workloads/`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// External input tensor.
+    Input,
+    /// Weight constant (index into `Graph::weights`).
+    Weight { idx: usize },
+    /// `inputs[0] [m,k] @ inputs[1] [k,n]`.
+    MatMul,
+    /// Row-broadcast bias add: `inputs[0] [m,n] + inputs[1] [n]`.
+    BiasAdd,
+    /// Elementwise binary add (residual).
+    Add,
+    Relu,
+    Gelu,
+    /// Row-wise softmax.
+    Softmax,
+    /// Row-wise layer norm (gain/bias folded into weights idx pair).
+    LayerNorm { gain: usize, bias: usize },
+    /// Mean over axis 0 blocks of `group` rows (token pooling).
+    MeanPool { group: usize },
+    /// Scale by a constant.
+    Scale { factor: f32 },
+}
+
+/// One IR node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: OpKind,
+    pub inputs: Vec<NodeId>,
+    /// Output shape `[rows, cols]` (all tensors are 2-D in this IR;
+    /// batch/token dims are pre-flattened, as the L2 model does).
+    pub shape: [usize; 2],
+    pub name: String,
+}
+
+/// A weight tensor (row-major 2-D, `[k, n]`; vectors are `[1, n]`).
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub shape: [usize; 2],
+    pub data: Vec<f32>,
+}
+
+impl WeightTensor {
+    pub fn new(shape: [usize; 2], data: Vec<f32>) -> Result<Self> {
+        ensure!(shape[0] * shape[1] == data.len(), "weight shape/data mismatch");
+        Ok(WeightTensor { shape, data })
+    }
+
+    pub fn zeros(shape: [usize; 2]) -> Self {
+        WeightTensor { shape, data: vec![0.0; shape[0] * shape[1]] }
+    }
+}
+
+/// The graph: nodes in topological order plus the weight store.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub weights: Vec<WeightTensor>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    fn push(&mut self, kind: OpKind, inputs: Vec<NodeId>, shape: [usize; 2], name: &str)
+        -> Result<NodeId> {
+        for &i in &inputs {
+            ensure!(i < self.nodes.len(), "use before def: {i} in {name}");
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, kind, inputs, shape, name: name.to_string() });
+        Ok(id)
+    }
+
+    pub fn input(&mut self, shape: [usize; 2], name: &str) -> Result<NodeId> {
+        self.push(OpKind::Input, vec![], shape, name)
+    }
+
+    pub fn weight(&mut self, w: WeightTensor, name: &str) -> Result<NodeId> {
+        let idx = self.weights.len();
+        let shape = w.shape;
+        self.weights.push(w);
+        self.push(OpKind::Weight { idx }, vec![], shape, name)
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId, name: &str) -> Result<NodeId> {
+        let (sa, sb) = (self.nodes[a].shape, self.nodes[b].shape);
+        ensure!(sa[1] == sb[0], "matmul {name}: {sa:?} x {sb:?}");
+        self.push(OpKind::MatMul, vec![a, b], [sa[0], sb[1]], name)
+    }
+
+    pub fn bias_add(&mut self, x: NodeId, b: NodeId, name: &str) -> Result<NodeId> {
+        let (sx, sb) = (self.nodes[x].shape, self.nodes[b].shape);
+        ensure!(sb == [1, sx[1]], "bias {name}: {sx:?} + {sb:?}");
+        self.push(OpKind::BiasAdd, vec![x, b], sx, name)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId, name: &str) -> Result<NodeId> {
+        ensure!(self.nodes[a].shape == self.nodes[b].shape, "add {name}");
+        self.push(OpKind::Add, vec![a, b], self.nodes[a].shape, name)
+    }
+
+    pub fn relu(&mut self, x: NodeId, name: &str) -> Result<NodeId> {
+        self.push(OpKind::Relu, vec![x], self.nodes[x].shape, name)
+    }
+
+    pub fn gelu(&mut self, x: NodeId, name: &str) -> Result<NodeId> {
+        self.push(OpKind::Gelu, vec![x], self.nodes[x].shape, name)
+    }
+
+    pub fn softmax(&mut self, x: NodeId, name: &str) -> Result<NodeId> {
+        self.push(OpKind::Softmax, vec![x], self.nodes[x].shape, name)
+    }
+
+    pub fn layer_norm(&mut self, x: NodeId, gain: usize, bias: usize, name: &str)
+        -> Result<NodeId> {
+        ensure!(gain < self.weights.len() && bias < self.weights.len());
+        self.push(OpKind::LayerNorm { gain, bias }, vec![x], self.nodes[x].shape, name)
+    }
+
+    pub fn mean_pool(&mut self, x: NodeId, group: usize, name: &str) -> Result<NodeId> {
+        let s = self.nodes[x].shape;
+        ensure!(group > 0 && s[0] % group == 0, "pool {name}: {s:?} by {group}");
+        self.push(OpKind::MeanPool { group }, vec![x], [s[0] / group, s[1]], name)
+    }
+
+    pub fn scale(&mut self, x: NodeId, factor: f32, name: &str) -> Result<NodeId> {
+        self.push(OpKind::Scale { factor }, vec![x], self.nodes[x].shape, name)
+    }
+
+    pub fn mark_output(&mut self, n: NodeId) {
+        self.outputs.push(n);
+    }
+
+    /// Structural validation: acyclic by construction; check shape rules
+    /// and weight indices.
+    pub fn validate(&self) -> Result<()> {
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                ensure!(i < n.id, "node {} uses later node {}", n.id, i);
+            }
+            if let OpKind::Weight { idx } = n.kind {
+                ensure!(idx < self.weights.len(), "dangling weight {idx}");
+                ensure!(self.weights[idx].shape == n.shape, "weight shape drift");
+            }
+        }
+        for &o in &self.outputs {
+            ensure!(o < self.nodes.len(), "dangling output {o}");
+        }
+        Ok(())
+    }
+
+    /// Total MACs of all matmuls (the model's nominal compute).
+    pub fn total_macs(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.kind == OpKind::MatMul)
+            .map(|n| {
+                let a = self.nodes[n.inputs[0]].shape;
+                (a[0] as u64) * (a[1] as u64) * (n.shape[1] as u64)
+            })
+            .sum()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> usize {
+        self.weights.iter().map(|w| w.data.len()).sum()
+    }
+
+    /// Users of each node (fan-out lists).
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut u = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                u[i].push(n.id);
+            }
+        }
+        u
+    }
+
+    /// The weight feeding a matmul's rhs, if it is a direct Weight node.
+    pub fn matmul_weight_idx(&self, n: &Node) -> Option<usize> {
+        if n.kind != OpKind::MatMul {
+            return None;
+        }
+        match self.nodes[n.inputs[1]].kind {
+            OpKind::Weight { idx } => Some(idx),
+            _ => None,
+        }
+    }
+}
+
+/// Reference f32 interpreter for the IR: the oracle every compiler pass
+/// is validated against (and the accuracy-proxy engine for E5/E6).
+pub mod interp {
+    use super::*;
+
+    /// Dense row-major matrix value.
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct Mat {
+        pub shape: [usize; 2],
+        pub data: Vec<f32>,
+    }
+
+    impl Mat {
+        pub fn new(shape: [usize; 2], data: Vec<f32>) -> Result<Self> {
+            ensure!(shape[0] * shape[1] == data.len(), "mat shape/data mismatch");
+            Ok(Mat { shape, data })
+        }
+
+        pub fn zeros(shape: [usize; 2]) -> Self {
+            Mat { shape, data: vec![0.0; shape[0] * shape[1]] }
+        }
+
+        pub fn at(&self, i: usize, j: usize) -> f32 {
+            self.data[i * self.shape[1] + j]
+        }
+
+        pub fn max_abs_diff(&self, o: &Mat) -> f32 {
+            self.data
+                .iter()
+                .zip(&o.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max)
+        }
+
+        pub fn rel_err(&self, reference: &Mat) -> f32 {
+            let scale = reference.data.iter().fold(1e-12f32, |a, &v| a.max(v.abs()));
+            self.max_abs_diff(reference) / scale
+        }
+    }
+
+    fn matmul(a: &Mat, b: &Mat) -> Mat {
+        let ([m, k], [k2, n]) = (a.shape, b.shape);
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.data[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        Mat { shape: [m, n], data: out }
+    }
+
+    /// Execute the graph on the given inputs (by Input-node order).
+    /// `quantize` optionally post-processes every node's output (the
+    /// fixed-point simulation hook used by the precision tuner).
+    pub fn run_with(
+        g: &Graph,
+        inputs: &[Mat],
+        mut quantize: impl FnMut(NodeId, &mut Mat),
+    ) -> Result<Vec<Mat>> {
+        g.validate()?;
+        let mut vals: Vec<Option<Mat>> = vec![None; g.nodes.len()];
+        let mut next_input = 0;
+        for node in &g.nodes {
+            let get = |id: NodeId| vals[id].as_ref().expect("topo order");
+            let mut out = match &node.kind {
+                OpKind::Input => {
+                    ensure!(next_input < inputs.len(), "missing input {}", node.name);
+                    let m = inputs[next_input].clone();
+                    ensure!(m.shape == node.shape, "input shape {:?}", m.shape);
+                    next_input += 1;
+                    m
+                }
+                OpKind::Weight { idx } => Mat {
+                    shape: g.weights[*idx].shape,
+                    data: g.weights[*idx].data.clone(),
+                },
+                OpKind::MatMul => matmul(get(node.inputs[0]), get(node.inputs[1])),
+                OpKind::BiasAdd => {
+                    let x = get(node.inputs[0]);
+                    let b = get(node.inputs[1]);
+                    let mut d = x.data.clone();
+                    let n = x.shape[1];
+                    for (i, v) in d.iter_mut().enumerate() {
+                        *v += b.data[i % n];
+                    }
+                    Mat { shape: x.shape, data: d }
+                }
+                OpKind::Add => {
+                    let a = get(node.inputs[0]);
+                    let b = get(node.inputs[1]);
+                    let d = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+                    Mat { shape: a.shape, data: d }
+                }
+                OpKind::Relu => {
+                    let x = get(node.inputs[0]);
+                    Mat {
+                        shape: x.shape,
+                        data: x.data.iter().map(|&v| v.max(0.0)).collect(),
+                    }
+                }
+                OpKind::Gelu => {
+                    let x = get(node.inputs[0]);
+                    let g = |v: f32| {
+                        0.5 * v
+                            * (1.0
+                                + ((0.7978845608 * (v + 0.044715 * v * v * v)) as f32).tanh())
+                    };
+                    Mat { shape: x.shape, data: x.data.iter().map(|&v| g(v)).collect() }
+                }
+                OpKind::Softmax => {
+                    let x = get(node.inputs[0]);
+                    let n = x.shape[1];
+                    let mut d = x.data.clone();
+                    for row in d.chunks_mut(n) {
+                        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                        let mut s = 0.0;
+                        for v in row.iter_mut() {
+                            *v = (*v - mx).exp();
+                            s += *v;
+                        }
+                        for v in row.iter_mut() {
+                            *v /= s;
+                        }
+                    }
+                    Mat { shape: x.shape, data: d }
+                }
+                OpKind::LayerNorm { gain, bias } => {
+                    let x = get(node.inputs[0]);
+                    let n = x.shape[1];
+                    let gw = &g.weights[*gain].data;
+                    let bw = &g.weights[*bias].data;
+                    let mut d = x.data.clone();
+                    for row in d.chunks_mut(n) {
+                        let mu = row.iter().sum::<f32>() / n as f32;
+                        let var =
+                            row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+                        let inv = 1.0 / (var + 1e-6).sqrt();
+                        for (j, v) in row.iter_mut().enumerate() {
+                            *v = (*v - mu) * inv * gw[j] + bw[j];
+                        }
+                    }
+                    Mat { shape: x.shape, data: d }
+                }
+                OpKind::MeanPool { group } => {
+                    let x = get(node.inputs[0]);
+                    let n = x.shape[1];
+                    let rows_out = x.shape[0] / group;
+                    let mut d = vec![0.0f32; rows_out * n];
+                    for i in 0..x.shape[0] {
+                        let o = i / group;
+                        for j in 0..n {
+                            d[o * n + j] += x.at(i, j) / *group as f32;
+                        }
+                    }
+                    Mat { shape: [rows_out, n], data: d }
+                }
+                OpKind::Scale { factor } => {
+                    let x = get(node.inputs[0]);
+                    Mat {
+                        shape: x.shape,
+                        data: x.data.iter().map(|&v| v * factor).collect(),
+                    }
+                }
+            };
+            quantize(node.id, &mut out);
+            vals[node.id] = Some(out);
+        }
+        Ok(g.outputs
+            .iter()
+            .map(|&o| vals[o].clone().expect("output computed"))
+            .collect())
+    }
+
+    /// Plain f32 execution.
+    pub fn run(g: &Graph, inputs: &[Mat]) -> Result<Vec<Mat>> {
+        run_with(g, inputs, |_, _| {})
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::interp::{run, Mat};
+    use super::*;
+
+    fn tiny_mlp() -> Graph {
+        let mut g = Graph::new();
+        let x = g.input([2, 4], "x").unwrap();
+        let w = g
+            .weight(
+                WeightTensor::new([4, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1., 1., 1., 1.])
+                    .unwrap(),
+                "w0",
+            )
+            .unwrap();
+        let b = g
+            .weight(WeightTensor::new([1, 3], vec![0.5, -0.5, 0.0]).unwrap(), "b0")
+            .unwrap();
+        let mm = g.matmul(x, w, "mm").unwrap();
+        let ba = g.bias_add(mm, b, "bias").unwrap();
+        let r = g.relu(ba, "relu").unwrap();
+        g.mark_output(r);
+        g
+    }
+
+    #[test]
+    fn builder_shape_checks() {
+        let mut g = Graph::new();
+        let x = g.input([2, 4], "x").unwrap();
+        let w = g.weight(WeightTensor::zeros([5, 3]), "w").unwrap();
+        assert!(g.matmul(x, w, "bad").is_err());
+        let b = g.weight(WeightTensor::zeros([1, 4]), "b").unwrap();
+        assert!(g.bias_add(x, b, "ok").is_ok());
+    }
+
+    #[test]
+    fn interp_mlp_numbers() {
+        let g = tiny_mlp();
+        g.validate().unwrap();
+        let x = Mat::new([2, 4], vec![1., 2., 3., 4., -1., -2., -3., -4.]).unwrap();
+        let out = &run(&g, &[x]).unwrap()[0];
+        // row0: [1+4, 2+4, 3+4] + bias, relu
+        assert_eq!(out.at(0, 0), 5.5);
+        assert_eq!(out.at(0, 1), 5.5);
+        assert_eq!(out.at(0, 2), 7.0);
+        // row1 all negative pre-relu + bias
+        assert_eq!(out.at(1, 0), 0.0);
+        assert_eq!(out.at(1, 2), 0.0);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut g = Graph::new();
+        let x = g.input([3, 5], "x").unwrap();
+        let s = g.softmax(x, "sm").unwrap();
+        g.mark_output(s);
+        let mut rng = crate::sim::Rng::new(1);
+        let data: Vec<f32> = (0..15).map(|_| rng.normal() as f32 * 3.0).collect();
+        let out = &run(&g, &[Mat::new([3, 5], data).unwrap()]).unwrap()[0];
+        for i in 0..3 {
+            let s: f32 = (0..5).map(|j| out.at(i, j)).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let mut g = Graph::new();
+        let x = g.input([1, 8], "x").unwrap();
+        let gain = 0;
+        g.weights.push(WeightTensor::new([1, 8], vec![1.0; 8]).unwrap());
+        g.weights.push(WeightTensor::new([1, 8], vec![0.0; 8]).unwrap());
+        let ln = g.layer_norm(x, gain, 1, "ln").unwrap();
+        g.mark_output(ln);
+        let out = &run(
+            &g,
+            &[Mat::new([1, 8], (0..8).map(|i| i as f32).collect()).unwrap()],
+        )
+        .unwrap()[0];
+        let mu: f32 = out.data.iter().sum::<f32>() / 8.0;
+        let var: f32 = out.data.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 8.0;
+        assert!(mu.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mean_pool_groups() {
+        let mut g = Graph::new();
+        let x = g.input([4, 2], "x").unwrap();
+        let p = g.mean_pool(x, 2, "pool").unwrap();
+        g.mark_output(p);
+        assert_eq!(g.nodes[p].shape, [2, 2]);
+        let out = &run(
+            &g,
+            &[Mat::new([4, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.]).unwrap()],
+        )
+        .unwrap()[0];
+        assert_eq!(out.at(0, 0), 2.0);
+        assert_eq!(out.at(1, 1), 30.0);
+    }
+
+    #[test]
+    fn macs_and_params_counted() {
+        let g = tiny_mlp();
+        assert_eq!(g.total_macs(), 2 * 4 * 3);
+        assert_eq!(g.total_params(), 12 + 3);
+    }
+
+    #[test]
+    fn users_fanout() {
+        let mut g = Graph::new();
+        let x = g.input([2, 2], "x").unwrap();
+        let a = g.relu(x, "a").unwrap();
+        let b = g.gelu(x, "b").unwrap();
+        let c = g.add(a, b, "c").unwrap();
+        g.mark_output(c);
+        let u = g.users();
+        assert_eq!(u[x], vec![a, b]);
+        assert_eq!(u[a], vec![c]);
+    }
+
+    #[test]
+    fn quantize_hook_sees_every_node() {
+        let g = tiny_mlp();
+        let x = Mat::new([2, 4], vec![0.5; 8]).unwrap();
+        let mut seen = Vec::new();
+        interp::run_with(&g, &[x], |id, _| seen.push(id)).unwrap();
+        assert_eq!(seen, (0..g.len()).collect::<Vec<_>>());
+    }
+}

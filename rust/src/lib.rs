@@ -1,0 +1,51 @@
+//! # ARCHYTAS — architecture, simulation and software stack for post-CMOS
+//! AI accelerators
+//!
+//! Reproduction of the ARCHYTAS project paper (ISVLSI 2025): a scalable
+//! heterogeneous compute fabric (tiled NoC with post-CMOS accelerator
+//! compute units), the simulation infrastructure to prototype it (flit-level
+//! NoC, JEDEC-timing DRAM with Processing-In-Memory extensions, analytic
+//! accelerator models), the software stack to program it (NN graph IR,
+//! sparsification / quantization / TAFFO-style precision-tuning compiler
+//! passes, a layer-to-CU mapper) and MILP/SMT design-space exploration —
+//! with the numeric hot path AOT-compiled from JAX/Pallas and executed via
+//! PJRT (see [`runtime`]).
+//!
+//! Layer map (DESIGN.md §3):
+//! * L3 (this crate): coordination, simulation, compilation, DSE.
+//! * L2 (`python/compile/model.py`): JAX model variants, lowered once.
+//! * L1 (`python/compile/kernels/`): Pallas kernels (crossbar / int8 /
+//!   block-sparse), verified against pure-jnp oracles.
+
+pub mod accel;
+pub mod cli;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod dse;
+pub mod fabric;
+pub mod ir;
+pub mod metrics;
+pub mod noc;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Returns the repository root (honours `ARCHYTAS_ROOT`, falls back to the
+/// cargo manifest dir so tests and examples find `artifacts/`).
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ARCHYTAS_ROOT") {
+        return p.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Default artifacts directory (`<root>/artifacts`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_root().join("artifacts")
+}

@@ -1,0 +1,19 @@
+//! ARCHYTAS CLI entrypoint (thin shell over `archytas::cli`).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match archytas::cli::Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    match archytas::cli::dispatch(&args) {
+        Ok(report) => print!("{report}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Metrics: energy / latency / area accounting and the roofline model used
+//! to sanity-check every accelerator estimate (Williams et al., cited as
+//! [60] in the paper).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Energy bookkeeping category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    Compute,
+    Noc,
+    Dram,
+    Sram,
+    Adc,
+    Laser,
+    Leakage,
+    Host,
+}
+
+impl fmt::Display for Category {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Category::Compute => "compute",
+            Category::Noc => "noc",
+            Category::Dram => "dram",
+            Category::Sram => "sram",
+            Category::Adc => "adc",
+            Category::Laser => "laser",
+            Category::Leakage => "leakage",
+            Category::Host => "host",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Accumulated energy (pJ, by category), cycles, and op/byte counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    energy_pj: BTreeMap<Category, f64>,
+    pub cycles: u64,
+    pub ops: u64,
+    pub bytes_moved: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_energy(&mut self, cat: Category, pj: f64) {
+        debug_assert!(pj >= 0.0, "negative energy {pj} for {cat}");
+        *self.energy_pj.entry(cat).or_insert(0.0) += pj;
+    }
+
+    pub fn energy(&self, cat: Category) -> f64 {
+        self.energy_pj.get(&cat).copied().unwrap_or(0.0)
+    }
+
+    pub fn total_energy_pj(&self) -> f64 {
+        self.energy_pj.values().sum()
+    }
+
+    /// Merge another metrics record (parallel components run concurrently,
+    /// so the caller decides whether cycles add or max; this adds).
+    pub fn absorb(&mut self, other: &Metrics) {
+        for (cat, pj) in &other.energy_pj {
+            self.add_energy(*cat, *pj);
+        }
+        self.cycles += other.cycles;
+        self.ops += other.ops;
+        self.bytes_moved += other.bytes_moved;
+    }
+
+    /// Copy with a replaced cycle count (for overlap accounting where the
+    /// caller merges latency separately from energy).
+    pub fn with_cycles(&self, cycles: u64) -> Metrics {
+        let mut m = self.clone();
+        m.cycles = cycles;
+        m
+    }
+
+    /// Merge keeping the max latency (components in parallel).
+    pub fn absorb_parallel(&mut self, other: &Metrics) {
+        for (cat, pj) in &other.energy_pj {
+            self.add_energy(*cat, *pj);
+        }
+        self.cycles = self.cycles.max(other.cycles);
+        self.ops += other.ops;
+        self.bytes_moved += other.bytes_moved;
+    }
+
+    /// Wall-clock seconds at the given clock.
+    pub fn seconds(&self, freq_ghz: f64) -> f64 {
+        self.cycles as f64 / (freq_ghz * 1e9)
+    }
+
+    /// Average power in watts at the given clock.
+    pub fn watts(&self, freq_ghz: f64) -> f64 {
+        let s = self.seconds(freq_ghz);
+        if s == 0.0 {
+            0.0
+        } else {
+            self.total_energy_pj() * 1e-12 / s
+        }
+    }
+
+    /// Tera-ops per second at the given clock.
+    pub fn tops(&self, freq_ghz: f64) -> f64 {
+        let s = self.seconds(freq_ghz);
+        if s == 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / s / 1e12
+        }
+    }
+
+    /// Energy efficiency: pJ per op.
+    pub fn pj_per_op(&self) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            self.total_energy_pj() / self.ops as f64
+        }
+    }
+
+    /// One-line summary for bench tables.
+    pub fn summary(&self, freq_ghz: f64) -> String {
+        format!(
+            "{:>10} cyc  {:>9.3} us  {:>10.1} nJ  {:>7.2} pJ/op  {:>7.3} W",
+            self.cycles,
+            self.seconds(freq_ghz) * 1e6,
+            self.total_energy_pj() / 1e3,
+            self.pj_per_op(),
+            self.watts(freq_ghz),
+        )
+    }
+
+    /// Per-category energy breakdown, descending.
+    pub fn breakdown(&self) -> Vec<(Category, f64)> {
+        let mut v: Vec<_> = self.energy_pj.iter().map(|(c, e)| (*c, *e)).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+/// Roofline model: attainable throughput given operational intensity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Roofline {
+    /// Peak compute, ops/s.
+    pub peak_ops: f64,
+    /// Peak memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+}
+
+impl Roofline {
+    /// Attainable ops/s at `intensity` ops/byte.
+    pub fn attainable(&self, intensity: f64) -> f64 {
+        (self.mem_bw * intensity).min(self.peak_ops)
+    }
+
+    /// Intensity where memory- and compute-bound regimes meet.
+    pub fn knee(&self) -> f64 {
+        self.peak_ops / self.mem_bw
+    }
+
+    /// Fraction of peak achieved by a kernel of given intensity & measured
+    /// throughput.
+    pub fn efficiency(&self, intensity: f64, achieved_ops: f64) -> f64 {
+        achieved_ops / self.attainable(intensity)
+    }
+}
+
+/// Silicon area accounting in mm² (for the equal-area DSE comparisons).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Area {
+    pub mm2: f64,
+}
+
+impl Area {
+    pub fn new(mm2: f64) -> Self {
+        Area { mm2 }
+    }
+}
+
+impl std::ops::Add for Area {
+    type Output = Area;
+    fn add(self, rhs: Area) -> Area {
+        Area { mm2: self.mm2 + rhs.mm2 }
+    }
+}
+
+impl std::iter::Sum for Area {
+    fn sum<I: Iterator<Item = Area>>(iter: I) -> Area {
+        iter.fold(Area::default(), |a, b| a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_accumulates_by_category() {
+        let mut m = Metrics::new();
+        m.add_energy(Category::Compute, 10.0);
+        m.add_energy(Category::Compute, 5.0);
+        m.add_energy(Category::Dram, 20.0);
+        assert_eq!(m.energy(Category::Compute), 15.0);
+        assert_eq!(m.total_energy_pj(), 35.0);
+        assert_eq!(m.breakdown()[0].0, Category::Dram);
+    }
+
+    #[test]
+    fn absorb_serial_vs_parallel() {
+        let mut a = Metrics { cycles: 100, ops: 10, ..Default::default() };
+        let b = Metrics { cycles: 70, ops: 5, ..Default::default() };
+        let mut p = a.clone();
+        a.absorb(&b);
+        assert_eq!(a.cycles, 170);
+        p.absorb_parallel(&b);
+        assert_eq!(p.cycles, 100);
+        assert_eq!(p.ops, 15);
+    }
+
+    #[test]
+    fn derived_rates() {
+        let mut m = Metrics { cycles: 1000, ops: 2000, ..Default::default() };
+        m.add_energy(Category::Compute, 4000.0);
+        // 1 GHz -> 1 us; 2000 ops / 1e-6 s = 2e9 ops/s = 0.002 TOPS
+        assert!((m.seconds(1.0) - 1e-6).abs() < 1e-12);
+        assert!((m.tops(1.0) - 0.002).abs() < 1e-9);
+        assert!((m.pj_per_op() - 2.0).abs() < 1e-12);
+        // 4000 pJ over 1 us = 4 mW
+        assert!((m.watts(1.0) - 0.004).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roofline_knee_and_regimes() {
+        let r = Roofline { peak_ops: 100e12, mem_bw: 1e12 };
+        assert_eq!(r.knee(), 100.0);
+        assert_eq!(r.attainable(10.0), 10e12); // memory bound
+        assert_eq!(r.attainable(1000.0), 100e12); // compute bound
+        assert!((r.efficiency(1000.0, 50e12) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn area_sums() {
+        let total: Area = [Area::new(1.5), Area::new(2.5)].into_iter().sum();
+        assert_eq!(total.mm2, 4.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Approximate NoC floorplanning and link-routing cost estimation
+//! (paper Sec. III: "a toolchain incorporating approximate NoC
+//! floor-planning and link routing to provide rapid yet precise cost and
+//! performance estimations").
+//!
+//! Tiles are placed on a √N×√N grid; regular topologies use their natural
+//! coordinates, custom graphs get a greedy connectivity-aware placement.
+//! Link length = Manhattan distance in tile pitches; per-link latency and
+//! energy derate linearly with length (repeated wires), which is the
+//! first-order model FlooNoC's physical design validates.
+
+use super::topology::{Topology, TopologyKind};
+
+/// Cost of one physical link after placement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkCost {
+    /// Endpoint nodes.
+    pub a: usize,
+    pub b: usize,
+    /// Manhattan length in tile pitches (>= 1).
+    pub length: usize,
+    /// Extra pipeline cycles from wire length (1 cycle per pitch beyond
+    /// the first).
+    pub extra_cycles: u64,
+    /// Energy multiplier vs a unit-length link.
+    pub energy_scale: f64,
+}
+
+/// A placed topology with per-link costs.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    /// Tile position of each node (grid coordinates).
+    pub pos: Vec<(usize, usize)>,
+    pub links: Vec<LinkCost>,
+    /// Die edge in tiles.
+    pub grid: usize,
+}
+
+impl Floorplan {
+    /// Place `topo` and cost its links. `tile_mm` is the tile pitch used
+    /// for the area report.
+    pub fn place(topo: &Topology) -> Floorplan {
+        let n = topo.nodes();
+        let grid = (n as f64).sqrt().ceil() as usize;
+        let pos = match topo.kind() {
+            TopologyKind::Mesh { w, .. } | TopologyKind::Torus { w, .. } => {
+                (0..n).map(|i| (i % w, i / w)).collect::<Vec<_>>()
+            }
+            _ => greedy_place(topo, grid),
+        };
+        let mut links = Vec::with_capacity(topo.links());
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..n {
+            for &(b, lid) in topo.neighbors(a) {
+                if !seen.insert(lid) {
+                    continue;
+                }
+                let (ax, ay) = pos[a];
+                let (bx, by) = pos[b];
+                let length = ax.abs_diff(bx) + ay.abs_diff(by);
+                let length = length.max(1);
+                links.push(LinkCost {
+                    a,
+                    b,
+                    length,
+                    extra_cycles: (length - 1) as u64,
+                    energy_scale: length as f64,
+                });
+            }
+        }
+        Floorplan { pos, links, grid }
+    }
+
+    /// Total wire length (tile pitches) — the DSE area/cost proxy.
+    pub fn total_wirelength(&self) -> usize {
+        self.links.iter().map(|l| l.length).sum()
+    }
+
+    /// Longest link (sets the safe clock or pipelining depth).
+    pub fn max_link_length(&self) -> usize {
+        self.links.iter().map(|l| l.length).max().unwrap_or(0)
+    }
+
+    /// Mean energy scale over links (≥ 1.0; 1.0 = all unit-length).
+    pub fn avg_energy_scale(&self) -> f64 {
+        if self.links.is_empty() {
+            return 1.0;
+        }
+        self.links.iter().map(|l| l.energy_scale).sum::<f64>() / self.links.len() as f64
+    }
+
+    /// Die area in mm² given a tile pitch.
+    pub fn die_area_mm2(&self, tile_mm: f64) -> f64 {
+        (self.grid as f64 * tile_mm).powi(2)
+    }
+}
+
+/// Greedy DFS placement: nodes are laid out in DFS order from the
+/// highest-degree node, snaking over the grid — DFS follows chains, so
+/// graph neighbours land in adjacent slots and most links stay short
+/// (exactly right for rings/paths, good for trees and low-radix graphs).
+fn greedy_place(topo: &Topology, grid: usize) -> Vec<(usize, usize)> {
+    let n = topo.nodes();
+    let start = (0..n).max_by_key(|&v| topo.degree(v)).unwrap_or(0);
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut stack = vec![start];
+    seen[start] = true;
+    while let Some(u) = stack.pop() {
+        order.push(u);
+        for &(v, _) in topo.neighbors(u).iter().rev() {
+            if !seen[v] {
+                seen[v] = true;
+                stack.push(v);
+            }
+        }
+    }
+    // Disconnected leftovers at the end.
+    for v in 0..n {
+        if !seen[v] {
+            order.push(v);
+        }
+    }
+    let mut pos = vec![(0, 0); n];
+    for (slot, &node) in order.iter().enumerate() {
+        let y = slot / grid;
+        let x = if y % 2 == 0 { slot % grid } else { grid - 1 - (slot % grid) };
+        pos[node] = (x, y);
+    }
+    pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_links_are_unit_length() {
+        let t = Topology::mesh(4, 4).unwrap();
+        let fp = Floorplan::place(&t);
+        assert!(fp.links.iter().all(|l| l.length == 1));
+        assert_eq!(fp.total_wirelength(), t.links());
+        assert_eq!(fp.avg_energy_scale(), 1.0);
+    }
+
+    #[test]
+    fn torus_wrap_links_are_long() {
+        let t = Topology::torus(4, 4).unwrap();
+        let fp = Floorplan::place(&t);
+        assert_eq!(fp.max_link_length(), 3);
+        assert!(fp.avg_energy_scale() > 1.0);
+    }
+
+    #[test]
+    fn star_hub_placement_short_links() {
+        let t = Topology::star(16).unwrap();
+        let fp = Floorplan::place(&t);
+        // Hub placed first; average leaf distance bounded by grid diameter.
+        assert!(fp.max_link_length() <= 2 * fp.grid);
+        assert!(fp.total_wirelength() >= 15);
+    }
+
+    #[test]
+    fn greedy_beats_random_for_ring() {
+        // The BFS snake keeps ring neighbours adjacent: total wirelength
+        // close to N (optimal) instead of O(N * grid).
+        let t = Topology::ring(16).unwrap();
+        let fp = Floorplan::place(&t);
+        assert!(fp.total_wirelength() <= 16 + 2 * 4, "{}", fp.total_wirelength());
+    }
+
+    #[test]
+    fn die_area() {
+        let t = Topology::mesh(4, 4).unwrap();
+        let fp = Floorplan::place(&t);
+        assert_eq!(fp.grid, 4);
+        assert!((fp.die_area_mm2(1.5) - 36.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn every_link_costed_once() {
+        for t in [
+            Topology::mesh(3, 5).unwrap(),
+            Topology::torus(4, 4).unwrap(),
+            Topology::fattree(3).unwrap(),
+        ] {
+            let fp = Floorplan::place(&t);
+            assert_eq!(fp.links.len(), t.links());
+        }
+    }
+}

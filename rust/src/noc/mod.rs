@@ -1,0 +1,32 @@
+//! Network-on-Chip simulator (paper Sec. III).
+//!
+//! The ARCHYTAS Scalable Compute Fabric couples its heterogeneous Compute
+//! Units through a NoC; this module provides the flit-level,
+//! credit-flow-controlled wormhole simulator used for (a) the fabric
+//! co-simulation (`coordinator`), (b) the NoC scaling study (E2) and
+//! (c) the topology design-space exploration (E4, `dse`).
+//!
+//! Link parameters default to the FlooNoC figures the paper builds on
+//! (645 Gb/s per link, 0.15 pJ/bit/hop — Fischer et al. [18]).
+//!
+//! * [`Topology`] — node/link graph with mesh/torus/ring/star/fat-tree
+//!   constructors plus arbitrary (low-radix) custom graphs.
+//! * [`routing`] — dimension-order XY (deadlock-free on mesh/torus) and
+//!   table-based shortest-path next-hop functions.
+//! * [`NocSim`] — cycle-stepped wormhole router network with virtual
+//!   channels and credit flow control.
+//! * [`traffic`] — uniform / hotspot / transpose / neighbour generators.
+//! * [`floorplan`] — approximate placement + Manhattan link lengths for
+//!   the cost model the DSE toolchain uses.
+
+mod floorplan;
+mod router;
+mod sim;
+mod topology;
+pub mod routing;
+pub mod traffic;
+
+pub use floorplan::{Floorplan, LinkCost};
+pub use router::{Flit, FlitKind};
+pub use sim::{NocParams, NocSim, PacketStats, SimReport};
+pub use topology::{NodeId, Topology, TopologyKind};

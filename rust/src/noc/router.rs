@@ -1,0 +1,75 @@
+//! Wormhole router building blocks: flits and per-router state.
+
+use super::topology::NodeId;
+
+/// Flit position within its packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlitKind {
+    Head,
+    Body,
+    /// Tail (a single-flit packet is Head+Tail; we mark it Tail and set
+    /// `is_head`).
+    Tail,
+}
+
+/// One flit of a packet in flight.
+#[derive(Debug, Clone, Copy)]
+pub struct Flit {
+    pub packet: usize,
+    pub kind: FlitKind,
+    pub is_head: bool,
+    pub dst: NodeId,
+    pub vc: usize,
+}
+
+/// Per-router, per-input-port, per-VC buffer state plus output allocation.
+///
+/// Wormhole switching: a head flit allocates (output port, vc) and holds
+/// it until the tail passes; body flits follow the allocation. Credits
+/// count free downstream buffer slots per (port, vc).
+#[derive(Debug)]
+pub struct RouterState {
+    /// in_buf[port][vc] — input queues. Port 0..deg are neighbor links in
+    /// `Topology::neighbors` order; port deg is the local injection port.
+    pub in_buf: Vec<Vec<std::collections::VecDeque<Flit>>>,
+    /// out_owner[port][vc] = Some((in_port, in_vc)) while a packet holds
+    /// the output.
+    pub out_owner: Vec<Vec<Option<(usize, usize)>>>,
+    /// credits[port][vc] = free buffer slots at the downstream input.
+    pub credits: Vec<Vec<usize>>,
+    /// Round-robin arbitration pointer per output port.
+    pub rr: Vec<usize>,
+}
+
+impl RouterState {
+    pub fn new(ports_in: usize, ports_out: usize, vcs: usize, buf_flits: usize) -> Self {
+        RouterState {
+            in_buf: (0..ports_in)
+                .map(|_| (0..vcs).map(|_| std::collections::VecDeque::new()).collect())
+                .collect(),
+            out_owner: vec![vec![None; vcs]; ports_out],
+            credits: vec![vec![buf_flits; vcs]; ports_out],
+            rr: vec![0; ports_out],
+        }
+    }
+
+    /// Total buffered flits (for drain checks and backpressure stats).
+    pub fn occupancy(&self) -> usize {
+        self.in_buf.iter().flat_map(|p| p.iter().map(|q| q.len())).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_router_is_empty_with_full_credits() {
+        let r = RouterState::new(5, 4, 2, 4);
+        assert_eq!(r.occupancy(), 0);
+        assert!(r.credits.iter().all(|p| p.iter().all(|&c| c == 4)));
+        assert!(r.out_owner.iter().all(|p| p.iter().all(Option::is_none)));
+        assert_eq!(r.in_buf.len(), 5);
+        assert_eq!(r.out_owner.len(), 4);
+    }
+}

@@ -1,0 +1,172 @@
+//! Routing functions: next-hop selection per topology.
+//!
+//! * Mesh/torus use dimension-order (XY) routing — deadlock-free without
+//!   escape VCs (Dally & Towles); the torus variant picks the shorter
+//!   wrap direction and relies on the second VC as the dateline escape
+//!   channel (the simulator assigns VCs accordingly).
+//! * Everything else uses table-based shortest-path next hops, precomputed
+//!   by BFS from every destination (deterministic lowest-id tie-break so
+//!   runs replay identically).
+
+use super::topology::{NodeId, Topology, TopologyKind};
+
+/// Precomputed routing: `next[dst][cur]` = next hop from `cur` towards
+/// `dst` (cur == dst maps to itself).
+#[derive(Debug, Clone)]
+pub struct RouteTable {
+    next: Vec<Vec<NodeId>>,
+    kind: TopologyKind,
+}
+
+impl RouteTable {
+    pub fn build(topo: &Topology) -> Self {
+        let n = topo.nodes();
+        let mut next = vec![vec![0; n]; n];
+        for dst in 0..n {
+            // BFS from dst; next hop towards dst = parent in BFS tree.
+            let mut parent = vec![usize::MAX; n];
+            let mut q = std::collections::VecDeque::new();
+            parent[dst] = dst;
+            q.push_back(dst);
+            while let Some(u) = q.pop_front() {
+                for &(v, _) in topo.neighbors(u) {
+                    if parent[v] == usize::MAX {
+                        parent[v] = u;
+                        q.push_back(v);
+                    }
+                }
+            }
+            for cur in 0..n {
+                next[dst][cur] = if parent[cur] == usize::MAX { cur } else { parent[cur] };
+            }
+        }
+        RouteTable { next, kind: topo.kind() }
+    }
+
+    /// Next hop from `cur` towards `dst`. Dimension-order for mesh/torus,
+    /// table lookup otherwise.
+    pub fn next_hop(&self, cur: NodeId, dst: NodeId) -> NodeId {
+        match self.kind {
+            TopologyKind::Mesh { w, .. } => xy_mesh(cur, dst, w),
+            TopologyKind::Torus { w, h } => xy_torus(cur, dst, w, h),
+            _ => self.next[dst][cur],
+        }
+    }
+
+    /// Hop count along the chosen route (for analytic estimates and the
+    /// no-livelock property test).
+    pub fn route_len(&self, src: NodeId, dst: NodeId) -> usize {
+        let mut cur = src;
+        let mut hops = 0;
+        while cur != dst {
+            let nxt = self.next_hop(cur, dst);
+            assert_ne!(nxt, cur, "routing stuck at {cur} towards {dst}");
+            cur = nxt;
+            hops += 1;
+            assert!(hops <= self.next.len(), "routing loop {src}->{dst}");
+        }
+        hops
+    }
+}
+
+/// Dimension-order XY on a w-wide mesh: correct X first, then Y.
+pub fn xy_mesh(cur: NodeId, dst: NodeId, w: usize) -> NodeId {
+    let (cx, cy) = (cur % w, cur / w);
+    let (dx, dy) = (dst % w, dst / w);
+    if cx < dx {
+        cur + 1
+    } else if cx > dx {
+        cur - 1
+    } else if cy < dy {
+        cur + w
+    } else if cy > dy {
+        cur - w
+    } else {
+        cur
+    }
+}
+
+/// Dimension-order XY on a torus, taking the shorter wrap direction.
+pub fn xy_torus(cur: NodeId, dst: NodeId, w: usize, h: usize) -> NodeId {
+    let (cx, cy) = (cur % w, cur / w);
+    let (dx, dy) = (dst % w, dst / w);
+    if cx != dx {
+        let fwd = (dx + w - cx) % w; // +x hops
+        let nx = if fwd <= w - fwd { (cx + 1) % w } else { (cx + w - 1) % w };
+        cy * w + nx
+    } else if cy != dy {
+        let fwd = (dy + h - cy) % h;
+        let ny = if fwd <= h - fwd { (cy + 1) % h } else { (cy + h - 1) % h };
+        ny * w + cx
+    } else {
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::Topology;
+
+    #[test]
+    fn xy_mesh_goes_x_first() {
+        // 4-wide mesh: 0 -> 10 (x=2,y=2): first +x, +x, then +y, +y.
+        assert_eq!(xy_mesh(0, 10, 4), 1);
+        assert_eq!(xy_mesh(1, 10, 4), 2);
+        assert_eq!(xy_mesh(2, 10, 4), 6);
+        assert_eq!(xy_mesh(6, 10, 4), 10);
+        assert_eq!(xy_mesh(10, 10, 4), 10);
+    }
+
+    #[test]
+    fn xy_torus_picks_short_wrap() {
+        // 4x1 torus in x: 0 -> 3 is one wrap hop (-x).
+        assert_eq!(xy_torus(0, 3, 4, 4), 3);
+        // 0 -> 2 is two hops either way; forward preferred on tie.
+        assert_eq!(xy_torus(0, 2, 4, 4), 1);
+    }
+
+    #[test]
+    fn all_topologies_route_everywhere() {
+        let topos = vec![
+            Topology::mesh(4, 4).unwrap(),
+            Topology::torus(4, 4).unwrap(),
+            Topology::ring(9).unwrap(),
+            Topology::star(8).unwrap(),
+            Topology::fattree(3).unwrap(),
+        ];
+        for t in topos {
+            let rt = RouteTable::build(&t);
+            for s in 0..t.nodes() {
+                let dist = t.distances(s);
+                for d in 0..t.nodes() {
+                    if s == d {
+                        continue;
+                    }
+                    // route terminates and is shortest (for table + XY on
+                    // these regular graphs).
+                    let len = rt.route_len(s, d);
+                    assert_eq!(len, dist[d], "{s}->{d} on {:?}", t.kind());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn next_hop_is_a_neighbor() {
+        let t = Topology::fattree(2).unwrap();
+        let rt = RouteTable::build(&t);
+        for s in 0..t.nodes() {
+            for d in 0..t.nodes() {
+                if s == d {
+                    continue;
+                }
+                let n = rt.next_hop(s, d);
+                assert!(
+                    t.neighbors(s).iter().any(|&(v, _)| v == n),
+                    "{s}->{d} hop {n} not adjacent"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,563 @@
+//! Cycle-stepped wormhole NoC simulation with virtual channels and credit
+//! flow control.
+//!
+//! Model (one clock domain, all routers step synchronously):
+//! * A packet is flitized at injection (`ceil(bytes / flit_bytes)` flits,
+//!   head…tail) and assigned a VC (`packet_id % vcs`).
+//! * Each router has one input port per incident link plus a local
+//!   injection port, and one output port per link plus a local ejection
+//!   port. Per cycle each input port sends at most one flit and each
+//!   output port accepts at most one flit (crossbar constraint).
+//! * A head flit arbitrates (round-robin) for its routed output port and
+//!   allocates (port, vc) until its tail passes — wormhole switching.
+//! * Forwarding consumes one downstream credit; credits return to the
+//!   upstream router one cycle after the downstream buffer drains.
+//! * A forwarded flit arrives `router_latency` cycles later at the next
+//!   router (pipeline depth), 1 flit/cycle/link throughput.
+//!
+//! Determinism: routers and ports are iterated in fixed order, all moves
+//! are double-buffered within a cycle, and all randomness lives in the
+//! traffic generators (seeded).
+
+use std::collections::VecDeque;
+
+use super::router::{Flit, FlitKind, RouterState};
+use super::routing::RouteTable;
+use super::topology::{NodeId, Topology};
+use crate::metrics::{Category, Metrics};
+use crate::sim::Cycle;
+
+/// Microarchitectural NoC parameters (config defaults are FlooNoC-like).
+#[derive(Debug, Clone, Copy)]
+pub struct NocParams {
+    pub vcs: usize,
+    /// Input buffer depth per VC, in flits.
+    pub buf_flits: usize,
+    pub flit_bytes: usize,
+    /// Router pipeline depth (cycles per hop).
+    pub router_latency: Cycle,
+    /// Link + router energy per bit per hop (pJ).
+    pub hop_energy_pj_per_bit: f64,
+}
+
+impl Default for NocParams {
+    fn default() -> Self {
+        NocParams {
+            vcs: 2,
+            buf_flits: 4,
+            flit_bytes: 32,
+            router_latency: 3,
+            hop_energy_pj_per_bit: 0.15,
+        }
+    }
+}
+
+impl NocParams {
+    pub fn from_config(cfg: &crate::config::NocConfig) -> Self {
+        NocParams {
+            vcs: cfg.vcs,
+            buf_flits: 4,
+            flit_bytes: cfg.flit_bytes,
+            router_latency: cfg.router_latency_cycles,
+            hop_energy_pj_per_bit: cfg.hop_energy_pj_per_bit,
+        }
+    }
+}
+
+/// Lifetime record of one packet.
+#[derive(Debug, Clone, Copy)]
+pub struct PacketStats {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub flits: usize,
+    pub injected_at: Cycle,
+    /// Cycle the tail flit was ejected (None while in flight).
+    pub ejected_at: Option<Cycle>,
+    pub hops: usize,
+}
+
+/// Aggregate simulation report (one bench-table row).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub cycles: Cycle,
+    pub delivered: usize,
+    pub in_flight: usize,
+    pub avg_latency: f64,
+    pub p99_latency: f64,
+    pub flit_hops: u64,
+    /// Delivered flits per node per cycle.
+    pub throughput: f64,
+    pub metrics: Metrics,
+}
+
+struct Arrival {
+    at: Cycle,
+    node: NodeId,
+    port: usize,
+    flit: Flit,
+}
+
+struct CreditReturn {
+    at: Cycle,
+    node: NodeId,
+    out_port: usize,
+    vc: usize,
+}
+
+/// The simulator.
+pub struct NocSim {
+    topo: Topology,
+    routes: RouteTable,
+    params: NocParams,
+    routers: Vec<RouterState>,
+    /// Pending packet flits waiting at each source (unbounded source
+    /// queue feeding the local injection port).
+    inject_q: Vec<VecDeque<Flit>>,
+    arrivals: Vec<Arrival>,
+    credit_returns: Vec<CreditReturn>,
+    packets: Vec<PacketStats>,
+    now: Cycle,
+    flit_hops: u64,
+    delivered: usize,
+}
+
+impl NocSim {
+    pub fn new(topo: Topology, params: NocParams) -> Self {
+        let routes = RouteTable::build(&topo);
+        let routers = (0..topo.nodes())
+            .map(|n| {
+                let deg = topo.degree(n);
+                RouterState::new(deg + 1, deg + 1, params.vcs, params.buf_flits)
+            })
+            .collect();
+        let inject_q = (0..topo.nodes()).map(|_| VecDeque::new()).collect();
+        NocSim {
+            topo,
+            routes,
+            params,
+            routers,
+            inject_q,
+            arrivals: Vec::new(),
+            credit_returns: Vec::new(),
+            packets: Vec::new(),
+            now: 0,
+            flit_hops: 0,
+            delivered: 0,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    pub fn packets(&self) -> &[PacketStats] {
+        &self.packets
+    }
+
+    /// Queue a packet for injection at the current cycle. Returns its id.
+    pub fn inject(&mut self, src: NodeId, dst: NodeId, bytes: usize) -> usize {
+        assert!(src < self.topo.nodes() && dst < self.topo.nodes());
+        assert_ne!(src, dst, "self-traffic is not modelled");
+        let id = self.packets.len();
+        let nflits = bytes.div_ceil(self.params.flit_bytes).max(1);
+        let vc = id % self.params.vcs;
+        for i in 0..nflits {
+            let kind = if i + 1 == nflits {
+                FlitKind::Tail
+            } else if i == 0 {
+                FlitKind::Head
+            } else {
+                FlitKind::Body
+            };
+            self.inject_q[src].push_back(Flit {
+                packet: id,
+                kind,
+                is_head: i == 0,
+                dst,
+                vc,
+            });
+        }
+        self.packets.push(PacketStats {
+            src,
+            dst,
+            flits: nflits,
+            injected_at: self.now,
+            ejected_at: None,
+            hops: self.routes.route_len(src, dst),
+        });
+        id
+    }
+
+    /// Input-port index at `to` for the link arriving from `from`.
+    fn in_port(&self, to: NodeId, from: NodeId) -> usize {
+        self.topo
+            .neighbors(to)
+            .iter()
+            .position(|&(v, _)| v == from)
+            .expect("link endpoints inconsistent")
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) {
+        let nodes = self.topo.nodes();
+        let vcs = self.params.vcs;
+
+        // 1. Local injection: move flits from source queues into the local
+        //    input port's VC buffer while space remains.
+        for n in 0..nodes {
+            let local = self.topo.degree(n); // local input port index
+            while let Some(&flit) = self.inject_q[n].front() {
+                let buf = &mut self.routers[n].in_buf[local][flit.vc];
+                if buf.len() >= self.params.buf_flits {
+                    break;
+                }
+                buf.push_back(self.inject_q[n].pop_front().unwrap());
+            }
+        }
+
+        // 2. Switch allocation + traversal, double-buffered.
+        let mut new_arrivals: Vec<Arrival> = Vec::new();
+        let mut new_credits: Vec<CreditReturn> = Vec::new();
+        for n in 0..nodes {
+            let deg = self.topo.degree(n);
+            let ports_in = deg + 1;
+            let mut input_busy = vec![false; ports_in];
+            // Output ports in fixed order: links first, then ejection.
+            for p_out in 0..=deg {
+                // 2a. VC allocation: head flits claim a free (p_out, vc).
+                for p_in in 0..ports_in {
+                    for vc in 0..vcs {
+                        let Some(&flit) = self.routers[n].in_buf[p_in][vc].front() else {
+                            continue;
+                        };
+                        if !flit.is_head {
+                            continue; // body/tail follow the allocation
+                        }
+                        let want = self.route_port(n, flit.dst, deg);
+                        if want != p_out {
+                            continue;
+                        }
+                        if self.routers[n].out_owner[p_out][vc].is_none() {
+                            self.routers[n].out_owner[p_out][vc] = Some((p_in, vc));
+                        }
+                    }
+                }
+                // 2b. Switch traversal: round-robin over VCs that own this
+                //     output; forward at most one flit per output port.
+                let rr0 = self.routers[n].rr[p_out];
+                for k in 0..vcs {
+                    let vc = (rr0 + k) % vcs;
+                    let Some((p_in, in_vc)) = self.routers[n].out_owner[p_out][vc] else {
+                        continue;
+                    };
+                    if input_busy[p_in] {
+                        continue;
+                    }
+                    let Some(&flit) = self.routers[n].in_buf[p_in][in_vc].front() else {
+                        continue;
+                    };
+                    // Only flits of the owning packet may use the slot.
+                    let owner_ok = {
+                        // The queue is FIFO per (port, vc); the owning
+                        // packet's flits are contiguous (wormhole), so the
+                        // front flit routed to this port belongs to it.
+                        let want = if flit.dst == n {
+                            deg
+                        } else {
+                            self.route_port(n, flit.dst, deg)
+                        };
+                        want == p_out
+                    };
+                    if !owner_ok {
+                        continue;
+                    }
+                    let is_ejection = p_out == deg;
+                    if !is_ejection && self.routers[n].credits[p_out][vc] == 0 {
+                        continue;
+                    }
+                    // Commit the move.
+                    let flit = self.routers[n].in_buf[p_in][in_vc].pop_front().unwrap();
+                    input_busy[p_in] = true;
+                    self.routers[n].rr[p_out] = (vc + 1) % vcs;
+                    if flit.kind == FlitKind::Tail {
+                        self.routers[n].out_owner[p_out][vc] = None;
+                    }
+                    // Return a credit upstream for the buffer we freed
+                    // (unless it was the local injection queue, which is
+                    // backpressured directly).
+                    if p_in < deg {
+                        let (up, _) = self.topo.neighbors(n)[p_in];
+                        // Credits are indexed by the upstream router's
+                        // output port towards us == position of n in the
+                        // upstream neighbor list.
+                        let up_out_port = self.in_port(up, n);
+                        new_credits.push(CreditReturn {
+                            at: self.now + 1,
+                            node: up,
+                            out_port: up_out_port,
+                            vc: in_vc,
+                        });
+                    }
+                    if is_ejection {
+                        // Ejected at the local sink.
+                        if flit.kind == FlitKind::Tail {
+                            let p = &mut self.packets[flit.packet];
+                            p.ejected_at = Some(self.now + 1);
+                            self.delivered += 1;
+                        }
+                    } else {
+                        let (next, _) = self.topo.neighbors(n)[p_out];
+                        let dest_port = self.in_port(next, n);
+                        self.routers[n].credits[p_out][vc] -= 1;
+                        self.flit_hops += 1;
+                        new_arrivals.push(Arrival {
+                            at: self.now + self.params.router_latency,
+                            node: next,
+                            port: dest_port,
+                            flit,
+                        });
+                    }
+                }
+            }
+        }
+
+        // 3. Apply arrivals whose time has come (including older ones).
+        self.arrivals.extend(new_arrivals);
+        self.credit_returns.extend(new_credits);
+        let now_next = self.now + 1;
+        let mut rest = Vec::with_capacity(self.arrivals.len());
+        for a in self.arrivals.drain(..) {
+            if a.at <= now_next {
+                self.routers[a.node].in_buf[a.port][a.flit.vc].push_back(a.flit);
+            } else {
+                rest.push(a);
+            }
+        }
+        self.arrivals = rest;
+        let mut rest = Vec::with_capacity(self.credit_returns.len());
+        for c in self.credit_returns.drain(..) {
+            if c.at <= now_next {
+                self.routers[c.node].credits[c.out_port][c.vc] += 1;
+            } else {
+                rest.push(c);
+            }
+        }
+        self.credit_returns = rest;
+
+        self.now = now_next;
+    }
+
+    /// Output port at `n` towards `dst` (deg = ejection if dst == n).
+    fn route_port(&self, n: NodeId, dst: NodeId, deg: usize) -> usize {
+        if dst == n {
+            return deg;
+        }
+        let next = self.routes.next_hop(n, dst);
+        self.topo
+            .neighbors(n)
+            .iter()
+            .position(|&(v, _)| v == next)
+            .expect("route table returned non-neighbor")
+    }
+
+    /// True when no flits remain anywhere.
+    pub fn drained(&self) -> bool {
+        self.inject_q.iter().all(VecDeque::is_empty)
+            && self.arrivals.is_empty()
+            && self.routers.iter().all(|r| r.occupancy() == 0)
+    }
+
+    /// Run until drained or `max_cycles`, then report.
+    pub fn run_to_drain(&mut self, max_cycles: Cycle) -> SimReport {
+        while !self.drained() && self.now < max_cycles {
+            self.step();
+        }
+        self.report()
+    }
+
+    /// Run exactly `cycles` more cycles.
+    pub fn run_for(&mut self, cycles: Cycle) {
+        for _ in 0..cycles {
+            self.step();
+        }
+    }
+
+    pub fn report(&self) -> SimReport {
+        let mut lats: Vec<u64> = self
+            .packets
+            .iter()
+            .filter_map(|p| p.ejected_at.map(|e| e - p.injected_at))
+            .collect();
+        lats.sort_unstable();
+        let avg = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<u64>() as f64 / lats.len() as f64
+        };
+        let p99 = if lats.is_empty() {
+            0.0
+        } else {
+            lats[(lats.len() - 1).min(lats.len() * 99 / 100)] as f64
+        };
+        let mut metrics = Metrics::new();
+        metrics.cycles = self.now;
+        metrics.bytes_moved = self.flit_hops * self.params.flit_bytes as u64;
+        metrics.add_energy(
+            Category::Noc,
+            self.flit_hops as f64 * self.params.flit_bytes as f64 * 8.0
+                * self.params.hop_energy_pj_per_bit,
+        );
+        let delivered_flits: usize = self
+            .packets
+            .iter()
+            .filter(|p| p.ejected_at.is_some())
+            .map(|p| p.flits)
+            .sum();
+        SimReport {
+            cycles: self.now,
+            delivered: self.delivered,
+            in_flight: self.packets.len() - self.delivered,
+            avg_latency: avg,
+            p99_latency: p99,
+            flit_hops: self.flit_hops,
+            throughput: if self.now == 0 {
+                0.0
+            } else {
+                delivered_flits as f64 / self.now as f64 / self.topo.nodes() as f64
+            },
+            metrics,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh_sim(w: usize, h: usize) -> NocSim {
+        NocSim::new(Topology::mesh(w, h).unwrap(), NocParams::default())
+    }
+
+    #[test]
+    fn single_packet_latency_matches_analytic() {
+        let mut sim = mesh_sim(4, 4);
+        // 0 -> 15: 6 hops; 64B = 2 flits.
+        sim.inject(0, 15, 64);
+        let rep = sim.run_to_drain(10_000);
+        assert_eq!(rep.delivered, 1);
+        let lat = sim.packets()[0].ejected_at.unwrap() - sim.packets()[0].injected_at;
+        // serialization (2 flits) + hops * router_latency + inject/eject.
+        let expect_min = 6 * 3; // hops * pipeline
+        assert!(lat >= expect_min as u64, "lat {lat}");
+        assert!(lat <= expect_min as u64 + 10, "lat {lat}");
+    }
+
+    #[test]
+    fn all_packets_delivered_exactly_once() {
+        let mut sim = mesh_sim(4, 4);
+        let mut rng = crate::sim::Rng::new(7);
+        for _ in 0..200 {
+            let s = rng.below(16);
+            let mut d = rng.below(16);
+            while d == s {
+                d = rng.below(16);
+            }
+            sim.inject(s, d, 32 + rng.below(97));
+        }
+        let rep = sim.run_to_drain(100_000);
+        assert!(sim.drained(), "network drained");
+        assert_eq!(rep.delivered, 200);
+        assert_eq!(rep.in_flight, 0);
+        assert!(sim.packets().iter().all(|p| p.ejected_at.is_some()));
+    }
+
+    #[test]
+    fn torus_delivers_under_load() {
+        let mut sim = NocSim::new(Topology::torus(4, 4).unwrap(), NocParams::default());
+        let mut rng = crate::sim::Rng::new(3);
+        for _ in 0..100 {
+            let s = rng.below(16);
+            let d = (s + 1 + rng.below(15)) % 16;
+            sim.inject(s, d, 64);
+        }
+        let rep = sim.run_to_drain(100_000);
+        assert_eq!(rep.delivered, 100);
+    }
+
+    #[test]
+    fn hotspot_slower_than_uniform() {
+        // All-to-one congests; same offered load spread uniformly drains
+        // faster. (The paper's E2 saturation shape, in miniature.)
+        let mut uni = mesh_sim(4, 4);
+        let mut hot = mesh_sim(4, 4);
+        let mut rng = crate::sim::Rng::new(11);
+        for i in 0..60 {
+            let s = (i * 5 + 1) % 16;
+            let mut d = rng.below(16);
+            while d == s {
+                d = rng.below(16);
+            }
+            if s != 0 {
+                hot.inject(s, 0, 128);
+            }
+            uni.inject(s, d, 128);
+        }
+        let ru = uni.run_to_drain(100_000);
+        let rh = hot.run_to_drain(100_000);
+        assert!(rh.cycles > ru.cycles, "hotspot {} vs uniform {}", rh.cycles, ru.cycles);
+    }
+
+    #[test]
+    fn energy_scales_with_hops() {
+        let mut near = mesh_sim(4, 4);
+        near.inject(0, 1, 256);
+        let rn = near.run_to_drain(10_000);
+        let mut far = mesh_sim(4, 4);
+        far.inject(0, 15, 256);
+        let rf = far.run_to_drain(10_000);
+        assert_eq!(rn.flit_hops * 6, rf.flit_hops); // 1 hop vs 6 hops
+        let en = rn.metrics.total_energy_pj();
+        let ef = rf.metrics.total_energy_pj();
+        assert!((ef / en - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flits_count_matches_bytes() {
+        let mut sim = mesh_sim(2, 2);
+        sim.inject(0, 1, 1); // 1 flit minimum
+        sim.inject(0, 1, 32); // exactly 1
+        sim.inject(0, 1, 33); // 2
+        assert_eq!(sim.packets()[0].flits, 1);
+        assert_eq!(sim.packets()[1].flits, 1);
+        assert_eq!(sim.packets()[2].flits, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-traffic")]
+    fn rejects_self_traffic() {
+        mesh_sim(2, 2).inject(1, 1, 32);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut sim = mesh_sim(4, 4);
+            let mut rng = crate::sim::Rng::new(99);
+            for _ in 0..150 {
+                let s = rng.below(16);
+                let mut d = rng.below(16);
+                while d == s {
+                    d = rng.below(16);
+                }
+                sim.inject(s, d, 64);
+            }
+            let r = sim.run_to_drain(100_000);
+            (r.cycles, r.flit_hops, r.avg_latency.to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+}

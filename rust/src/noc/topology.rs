@@ -1,0 +1,316 @@
+//! NoC topologies: regular constructors plus arbitrary low-radix graphs.
+
+use anyhow::{bail, ensure};
+
+use crate::Result;
+
+/// Node index into a [`Topology`].
+pub type NodeId = usize;
+
+/// Which constructor built the topology (used by routing selection and by
+/// the DSE reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    Mesh { w: usize, h: usize },
+    Torus { w: usize, h: usize },
+    Ring,
+    Star,
+    FatTree { down: usize },
+    Custom,
+}
+
+/// An undirected multigraph of routers. Links are stored once per
+/// direction (adjacency lists), so every physical link appears as two
+/// directed edges with a shared link id.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    kind: TopologyKind,
+    nodes: usize,
+    /// adj[n] = (neighbor, link_id), sorted by neighbor.
+    adj: Vec<Vec<(NodeId, usize)>>,
+    links: usize,
+}
+
+impl Topology {
+    /// Build from an undirected edge list.
+    pub fn custom(nodes: usize, edges: &[(NodeId, NodeId)]) -> Result<Self> {
+        Self::build(TopologyKind::Custom, nodes, edges)
+    }
+
+    fn build(kind: TopologyKind, nodes: usize, edges: &[(NodeId, NodeId)]) -> Result<Self> {
+        ensure!(nodes > 0, "topology needs at least one node");
+        let mut adj = vec![Vec::new(); nodes];
+        for (lid, &(a, b)) in edges.iter().enumerate() {
+            ensure!(a < nodes && b < nodes, "edge ({a},{b}) out of range");
+            ensure!(a != b, "self-loop on node {a}");
+            if adj[a].iter().any(|&(n, _)| n == b) {
+                bail!("duplicate edge ({a},{b})");
+            }
+            adj[a].push((b, lid));
+            adj[b].push((a, lid));
+        }
+        for l in &mut adj {
+            l.sort_unstable();
+        }
+        Ok(Topology { kind, nodes, adj, links: edges.len() })
+    }
+
+    /// w×h 2-D mesh (node id = y*w + x).
+    pub fn mesh(w: usize, h: usize) -> Result<Self> {
+        ensure!(w > 0 && h > 0, "mesh dims must be nonzero");
+        let mut edges = Vec::new();
+        for y in 0..h {
+            for x in 0..w {
+                let n = y * w + x;
+                if x + 1 < w {
+                    edges.push((n, n + 1));
+                }
+                if y + 1 < h {
+                    edges.push((n, n + w));
+                }
+            }
+        }
+        Self::build(TopologyKind::Mesh { w, h }, w * h, &edges)
+    }
+
+    /// w×h 2-D torus (wrap-around mesh). Wrap links are skipped where they
+    /// would duplicate a mesh link (w or h == 2) or self-loop (w or h == 1).
+    pub fn torus(w: usize, h: usize) -> Result<Self> {
+        ensure!(w > 0 && h > 0, "torus dims must be nonzero");
+        let mut edges = Vec::new();
+        for y in 0..h {
+            for x in 0..w {
+                let n = y * w + x;
+                if x + 1 < w {
+                    edges.push((n, n + 1));
+                } else if w > 2 {
+                    edges.push((n, y * w));
+                }
+                if y + 1 < h {
+                    edges.push((n, n + w));
+                } else if h > 2 {
+                    edges.push((n, x));
+                }
+            }
+        }
+        Self::build(TopologyKind::Torus { w, h }, w * h, &edges)
+    }
+
+    /// n-node ring.
+    pub fn ring(n: usize) -> Result<Self> {
+        ensure!(n >= 3, "ring needs >= 3 nodes");
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Self::build(TopologyKind::Ring, n, &edges)
+    }
+
+    /// Star: node 0 is the hub, 1..n are leaves.
+    pub fn star(n: usize) -> Result<Self> {
+        ensure!(n >= 2, "star needs >= 2 nodes");
+        let edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+        Self::build(TopologyKind::Star, n, &edges)
+    }
+
+    /// Two-level fat tree: `down*down` leaves, `down` aggregation switches,
+    /// one root; leaves are nodes `0..down*down` (the CU-facing ids).
+    pub fn fattree(down: usize) -> Result<Self> {
+        ensure!(down >= 2, "fattree needs down >= 2");
+        let leaves = down * down;
+        let aggs = down;
+        let nodes = leaves + aggs + 1;
+        let root = leaves + aggs;
+        let mut edges = Vec::new();
+        for a in 0..aggs {
+            for l in 0..down {
+                edges.push((a * down + l, leaves + a));
+            }
+            edges.push((leaves + a, root));
+        }
+        Self::build(TopologyKind::FatTree { down }, nodes, &edges)
+    }
+
+    /// Build by config name ("mesh", "torus", "ring", "star", "fattree").
+    pub fn from_config(cfg: &crate::config::NocConfig) -> Result<Self> {
+        match cfg.topology.as_str() {
+            "mesh" => Self::mesh(cfg.width, cfg.height),
+            "torus" => Self::torus(cfg.width, cfg.height),
+            "ring" => Self::ring(cfg.width * cfg.height),
+            "star" => Self::star(cfg.width * cfg.height),
+            "fattree" => Self::fattree(cfg.width),
+            other => bail!("unknown topology {other:?}"),
+        }
+    }
+
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn links(&self) -> usize {
+        self.links
+    }
+
+    /// Neighbors of `n` with their link ids.
+    pub fn neighbors(&self, n: NodeId) -> &[(NodeId, usize)] {
+        &self.adj[n]
+    }
+
+    /// Router radix (degree) of `n`, excluding the local port.
+    pub fn degree(&self, n: NodeId) -> usize {
+        self.adj[n].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.nodes).map(|n| self.degree(n)).max().unwrap_or(0)
+    }
+
+    /// BFS hop distances from `src` (usize::MAX if unreachable).
+    pub fn distances(&self, src: NodeId) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.nodes];
+        let mut q = std::collections::VecDeque::new();
+        dist[src] = 0;
+        q.push_back(src);
+        while let Some(u) = q.pop_front() {
+            for &(v, _) in &self.adj[u] {
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.distances(0).iter().all(|&d| d != usize::MAX)
+    }
+
+    /// Longest shortest path.
+    pub fn diameter(&self) -> usize {
+        (0..self.nodes)
+            .map(|s| self.distances(s).into_iter().max().unwrap_or(0))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean hop distance over ordered pairs (s != d).
+    pub fn avg_distance(&self) -> f64 {
+        if self.nodes < 2 {
+            return 0.0;
+        }
+        let mut total = 0usize;
+        for s in 0..self.nodes {
+            total += self.distances(s).iter().sum::<usize>();
+        }
+        total as f64 / (self.nodes * (self.nodes - 1)) as f64
+    }
+
+    /// Bisection width estimate: links cut by splitting node ids in half.
+    /// Exact for the regular constructors' natural orderings; a lower
+    /// bound style heuristic for custom graphs (documented in DESIGN.md).
+    pub fn bisection_links(&self) -> usize {
+        let half = self.nodes / 2;
+        let mut cut = 0;
+        for a in 0..self.nodes {
+            for &(b, _) in &self.adj[a] {
+                if a < b && (a < half) != (b < half) {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_structure() {
+        let t = Topology::mesh(4, 3).unwrap();
+        assert_eq!(t.nodes(), 12);
+        assert_eq!(t.links(), 3 * 3 + 4 * 2); // horizontal + vertical
+        assert_eq!(t.degree(0), 2); // corner
+        assert_eq!(t.degree(1), 3); // edge
+        assert_eq!(t.degree(5), 4); // interior
+        assert!(t.is_connected());
+        assert_eq!(t.diameter(), 3 + 2);
+    }
+
+    #[test]
+    fn torus_is_regular() {
+        let t = Topology::torus(4, 4).unwrap();
+        assert_eq!(t.nodes(), 16);
+        assert_eq!(t.links(), 32);
+        for n in 0..16 {
+            assert_eq!(t.degree(n), 4);
+        }
+        assert_eq!(t.diameter(), 4); // 2 + 2
+    }
+
+    #[test]
+    fn torus_small_dims_no_duplicate_links() {
+        let t = Topology::torus(2, 2).unwrap();
+        assert_eq!(t.links(), 4); // same as mesh(2,2)
+        let t = Topology::torus(1, 3).unwrap();
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn ring_and_star() {
+        let r = Topology::ring(8).unwrap();
+        assert_eq!(r.diameter(), 4);
+        assert_eq!(r.links(), 8);
+        let s = Topology::star(9).unwrap();
+        assert_eq!(s.diameter(), 2);
+        assert_eq!(s.degree(0), 8);
+        assert_eq!(s.max_degree(), 8);
+    }
+
+    #[test]
+    fn fattree_structure() {
+        let t = Topology::fattree(3).unwrap();
+        assert_eq!(t.nodes(), 9 + 3 + 1);
+        assert!(t.is_connected());
+        // leaf -> agg -> root -> agg -> leaf
+        assert_eq!(t.diameter(), 4);
+    }
+
+    #[test]
+    fn torus_beats_mesh_on_avg_distance() {
+        let m = Topology::mesh(8, 8).unwrap();
+        let t = Topology::torus(8, 8).unwrap();
+        assert!(t.avg_distance() < m.avg_distance());
+    }
+
+    #[test]
+    fn bisection_mesh_vs_torus() {
+        // mesh 4x4 split by id-halves cuts one row of 4 vertical links;
+        // torus adds the wrap column links -> 2x.
+        let m = Topology::mesh(4, 4).unwrap();
+        let t = Topology::torus(4, 4).unwrap();
+        assert_eq!(m.bisection_links(), 4);
+        assert_eq!(t.bisection_links(), 8);
+    }
+
+    #[test]
+    fn custom_rejects_bad_edges() {
+        assert!(Topology::custom(3, &[(0, 0)]).is_err());
+        assert!(Topology::custom(3, &[(0, 5)]).is_err());
+        assert!(Topology::custom(3, &[(0, 1), (1, 0)]).is_err());
+        let t = Topology::custom(3, &[(0, 1)]).unwrap();
+        assert!(!t.is_connected());
+    }
+
+    #[test]
+    fn distances_bfs() {
+        let t = Topology::mesh(3, 3).unwrap();
+        let d = t.distances(0);
+        assert_eq!(d[0], 0);
+        assert_eq!(d[8], 4);
+        assert_eq!(d[4], 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! Synthetic traffic generators for the NoC studies (E2): uniform random,
+//! hotspot, transpose, nearest-neighbour and a Poisson-ish open-loop
+//! injector used for saturation sweeps.
+
+use super::topology::NodeId;
+use crate::sim::{Cycle, Rng};
+
+/// One injection request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Injection {
+    pub at: Cycle,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: usize,
+}
+
+/// Traffic pattern kinds used in the scaling study.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Uniform random destinations.
+    Uniform,
+    /// Fraction `hot_permille`/1000 of packets target node 0.
+    Hotspot { hot_permille: u32 },
+    /// Bit-transpose on a w×w mesh: (x,y) -> (y,x).
+    Transpose { w: usize },
+    /// Ring-style nearest neighbour (n -> n+1 mod N).
+    Neighbor,
+}
+
+/// Open-loop generator: every node injects one `bytes`-sized packet per
+/// `1/rate` cycles on average (Bernoulli per cycle), for `cycles` cycles.
+pub fn generate(
+    pattern: Pattern,
+    nodes: usize,
+    rate: f64,
+    bytes: usize,
+    cycles: Cycle,
+    rng: &mut Rng,
+) -> Vec<Injection> {
+    assert!(nodes >= 2, "need at least two nodes");
+    let mut out = Vec::new();
+    for t in 0..cycles {
+        for src in 0..nodes {
+            if !rng.chance(rate) {
+                continue;
+            }
+            let dst = pick_dst(pattern, src, nodes, rng);
+            if dst != src {
+                out.push(Injection { at: t, src, dst, bytes });
+            }
+        }
+    }
+    out
+}
+
+fn pick_dst(pattern: Pattern, src: NodeId, nodes: usize, rng: &mut Rng) -> NodeId {
+    match pattern {
+        Pattern::Uniform => {
+            let mut d = rng.below(nodes);
+            while d == src {
+                d = rng.below(nodes);
+            }
+            d
+        }
+        Pattern::Hotspot { hot_permille } => {
+            if rng.below(1000) < hot_permille as usize && src != 0 {
+                0
+            } else {
+                let mut d = rng.below(nodes);
+                while d == src {
+                    d = rng.below(nodes);
+                }
+                d
+            }
+        }
+        Pattern::Transpose { w } => {
+            let (x, y) = (src % w, src / w);
+            let d = x * w + y;
+            if d == src || d >= nodes {
+                (src + 1) % nodes
+            } else {
+                d
+            }
+        }
+        Pattern::Neighbor => (src + 1) % nodes,
+    }
+}
+
+/// Drive a [`super::NocSim`] with an injection schedule, stepping the
+/// simulator as time advances, then drain. Returns the final report.
+pub fn drive(
+    sim: &mut super::NocSim,
+    mut schedule: Vec<Injection>,
+    max_cycles: Cycle,
+) -> super::SimReport {
+    schedule.sort_by_key(|i| i.at);
+    let mut next = 0;
+    while next < schedule.len() && sim.now() < max_cycles {
+        while next < schedule.len() && schedule[next].at <= sim.now() {
+            let inj = schedule[next];
+            sim.inject(inj.src, inj.dst, inj.bytes);
+            next += 1;
+        }
+        sim.step();
+    }
+    sim.run_to_drain(max_cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::{NocParams, NocSim, Topology};
+
+    #[test]
+    fn generate_respects_rate_roughly() {
+        let mut rng = Rng::new(1);
+        let inj = generate(Pattern::Uniform, 16, 0.1, 32, 1000, &mut rng);
+        let expect = 16.0 * 0.1 * 1000.0;
+        assert!((inj.len() as f64 - expect).abs() < expect * 0.2, "{}", inj.len());
+        assert!(inj.iter().all(|i| i.src != i.dst));
+    }
+
+    #[test]
+    fn hotspot_concentrates_on_node0() {
+        let mut rng = Rng::new(2);
+        let inj = generate(Pattern::Hotspot { hot_permille: 500 }, 16, 0.2, 32, 500, &mut rng);
+        let to0 = inj.iter().filter(|i| i.dst == 0).count();
+        assert!(to0 as f64 > inj.len() as f64 * 0.3, "{to0}/{}", inj.len());
+    }
+
+    #[test]
+    fn transpose_is_involution() {
+        let mut rng = Rng::new(3);
+        for src in 0..16 {
+            let d = pick_dst(Pattern::Transpose { w: 4 }, src, 16, &mut rng);
+            if d != (src % 4) * 4 + src / 4 {
+                // diagonal fallback
+                assert_eq!(d, (src + 1) % 16);
+            } else if src != d {
+                let back = pick_dst(Pattern::Transpose { w: 4 }, d, 16, &mut rng);
+                assert_eq!(back, src);
+            }
+        }
+    }
+
+    #[test]
+    fn drive_delivers_everything_at_low_load() {
+        let mut sim = NocSim::new(Topology::mesh(4, 4).unwrap(), NocParams::default());
+        let mut rng = Rng::new(4);
+        let inj = generate(Pattern::Uniform, 16, 0.02, 64, 2000, &mut rng);
+        let n = inj.len();
+        let rep = drive(&mut sim, inj, 1_000_000);
+        assert_eq!(rep.delivered, n);
+        assert_eq!(rep.in_flight, 0);
+    }
+
+    #[test]
+    fn saturation_latency_grows_with_load() {
+        let lat_at = |rate: f64| {
+            let mut sim = NocSim::new(Topology::mesh(4, 4).unwrap(), NocParams::default());
+            let mut rng = Rng::new(5);
+            let inj = generate(Pattern::Uniform, 16, rate, 64, 2000, &mut rng);
+            let rep = drive(&mut sim, inj, 2_000_000);
+            rep.avg_latency
+        };
+        let low = lat_at(0.01);
+        let high = lat_at(0.30);
+        assert!(high > low * 1.5, "low {low} high {high}");
+    }
+}

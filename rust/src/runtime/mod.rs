@@ -1,0 +1,77 @@
+//! Runtime: load and execute the AOT-compiled JAX/Pallas artifacts via the
+//! PJRT CPU client (`xla` crate).
+//!
+//! Python lowers every L1/L2 entry point to HLO **text** once (`make
+//! artifacts`); this module is the only bridge between the Rust coordinator
+//! and those numerics. Nothing here imports or spawns Python — the binary
+//! is self-contained after artifacts are built.
+//!
+//! * [`Tensor`] — host-side f32 tensor (all artifact I/O is f32 by
+//!   construction, see python/compile/aot.py).
+//! * [`Engine`] — PJRT client + HLO-text loader.
+//! * [`Registry`] — artifact manifest (`artifacts/manifest.toml`), shape
+//!   specs and golden files.
+//! * [`Runtime`] — engine + registry + executable cache; the facade the
+//!   coordinator uses.
+
+mod engine;
+mod registry;
+mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use registry::{ArtifactSpec, DType, Registry, ShapeSpec};
+pub use tensor::Tensor;
+
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Engine + registry + executable cache (one compile per artifact).
+pub struct Runtime {
+    engine: Engine,
+    registry: Registry,
+    cache: std::sync::Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the default artifacts directory (see [`crate::artifacts_dir`]).
+    pub fn open_default() -> Result<Self> {
+        Self::open(&crate::artifacts_dir())
+    }
+
+    pub fn open(dir: &std::path::Path) -> Result<Self> {
+        Ok(Runtime {
+            engine: Engine::cpu()?,
+            registry: Registry::open(dir)?,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Fetch (compiling and caching on first use) an executable by name.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.registry.spec(name)?;
+        let exe = Arc::new(self.engine.load(spec)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile-and-run convenience: `run("gemm_64", &[x, w])`.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.executable(name)?.run(inputs)
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.registry.names()
+    }
+}

@@ -1,0 +1,227 @@
+//! Artifact registry: parses `artifacts/manifest.toml` (emitted by
+//! python/compile/aot.py) into typed specs and loads golden tensors.
+
+use anyhow::{anyhow, bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{parse_document, Value};
+use crate::Result;
+
+use super::Tensor;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    S8,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" => DType::S32,
+            "s8" => DType::S8,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// Parsed `"f32[4,16,16,3]"`-style shape string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl ShapeSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let open = s.find('[').ok_or_else(|| anyhow!("bad shape {s:?}"))?;
+        if !s.ends_with(']') {
+            bail!("bad shape {s:?}");
+        }
+        let dtype = DType::parse(&s[..open])?;
+        let body = &s[open + 1..s.len() - 1];
+        let dims = if body.is_empty() {
+            Vec::new()
+        } else {
+            body.split(',')
+                .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad shape {s:?}")))
+                .collect::<Result<_>>()?
+        };
+        Ok(ShapeSpec { dtype, dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact: HLO path, I/O shapes, golden files.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<ShapeSpec>,
+    pub outputs: Vec<ShapeSpec>,
+    pub golden_in: Vec<PathBuf>,
+    pub golden_out: Vec<PathBuf>,
+}
+
+/// The parsed manifest.
+pub struct Registry {
+    dir: PathBuf,
+    specs: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Registry {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("reading {manifest:?} — run `make artifacts` first")
+        })?;
+        Self::from_manifest_text(dir, &text)
+    }
+
+    pub fn from_manifest_text(dir: &Path, text: &str) -> Result<Self> {
+        let doc = parse_document(text).context("parsing manifest.toml")?;
+        let mut specs = BTreeMap::new();
+        for row in doc.tables("artifact") {
+            let get = |key: &str| -> Result<&Value> {
+                crate::config::table_get(row, key)
+                    .ok_or_else(|| anyhow!("manifest entry missing {key:?}"))
+            };
+            let name = get("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("name not a string"))?
+                .to_string();
+            let hlo = get("hlo")?.as_str().ok_or_else(|| anyhow!("hlo not a string"))?;
+            let shapes = |key: &str| -> Result<Vec<ShapeSpec>> {
+                get(key)?
+                    .as_str_array()
+                    .ok_or_else(|| anyhow!("{key} not a string array"))?
+                    .into_iter()
+                    .map(ShapeSpec::parse)
+                    .collect()
+            };
+            let paths = |key: &str| -> Result<Vec<PathBuf>> {
+                Ok(get(key)?
+                    .as_str_array()
+                    .ok_or_else(|| anyhow!("{key} not a string array"))?
+                    .into_iter()
+                    .map(|p| dir.join(p))
+                    .collect())
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                hlo_path: dir.join(hlo),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+                golden_in: paths("golden_in")?,
+                golden_out: paths("golden_out")?,
+            };
+            if spec.inputs.len() != spec.golden_in.len()
+                || spec.outputs.len() != spec.golden_out.len()
+            {
+                bail!("{name}: golden file count mismatch");
+            }
+            specs.insert(name, spec);
+        }
+        if specs.is_empty() {
+            bail!("manifest contains no artifacts");
+        }
+        Ok(Registry { dir: dir.to_path_buf(), specs })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.specs.keys().cloned().collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})", self.names()))
+    }
+
+    /// Load the golden input tensors of an artifact (f32 files).
+    pub fn golden_inputs(&self, name: &str) -> Result<Vec<Tensor>> {
+        let spec = self.spec(name)?;
+        spec.inputs
+            .iter()
+            .zip(&spec.golden_in)
+            .map(|(shape, path)| {
+                if shape.dtype != DType::F32 {
+                    bail!("{name}: non-f32 golden input unsupported at runtime");
+                }
+                Tensor::from_f32_file(path, shape.dims.clone())
+            })
+            .collect()
+    }
+
+    /// Load the golden output tensors of an artifact.
+    pub fn golden_outputs(&self, name: &str) -> Result<Vec<Tensor>> {
+        let spec = self.spec(name)?;
+        spec.outputs
+            .iter()
+            .zip(&spec.golden_out)
+            .map(|(shape, path)| Tensor::from_f32_file(path, shape.dims.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_spec_parses() {
+        let s = ShapeSpec::parse("f32[4,16,16,3]").unwrap();
+        assert_eq!(s.dtype, DType::F32);
+        assert_eq!(s.dims, vec![4, 16, 16, 3]);
+        assert_eq!(s.elements(), 4 * 16 * 16 * 3);
+        assert_eq!(ShapeSpec::parse("s8[1,2]").unwrap().dtype, DType::S8);
+        assert_eq!(ShapeSpec::parse("f32[]").unwrap().dims, Vec::<usize>::new());
+        assert!(ShapeSpec::parse("f64[2]").is_err());
+        assert!(ShapeSpec::parse("f32[2").is_err());
+        assert!(ShapeSpec::parse("f32[a]").is_err());
+    }
+
+    const MANIFEST: &str = r#"
+[[artifact]]
+name = "gemm_64"
+hlo = "gemm_64.hlo.txt"
+inputs = ["f32[64,64]", "f32[64,64]"]
+outputs = ["f32[64,64]"]
+golden_in = ["golden/gemm_64.in0.bin", "golden/gemm_64.in1.bin"]
+golden_out = ["golden/gemm_64.out0.bin"]
+"#;
+
+    #[test]
+    fn manifest_parses() {
+        let r = Registry::from_manifest_text(Path::new("/tmp/a"), MANIFEST).unwrap();
+        let s = r.spec("gemm_64").unwrap();
+        assert_eq!(s.inputs.len(), 2);
+        assert_eq!(s.hlo_path, Path::new("/tmp/a/gemm_64.hlo.txt"));
+        assert!(r.spec("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_count_mismatch_rejected() {
+        let bad = MANIFEST.replace(
+            "golden_in = [\"golden/gemm_64.in0.bin\", \"golden/gemm_64.in1.bin\"]",
+            "golden_in = [\"golden/gemm_64.in0.bin\"]",
+        );
+        assert!(Registry::from_manifest_text(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        assert!(Registry::from_manifest_text(Path::new("/tmp"), "# empty\n").is_err());
+    }
+}

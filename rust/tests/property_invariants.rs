@@ -1,0 +1,366 @@
+//! Property-based invariant tests over the simulators, solvers and
+//! compiler passes (deliverable (c); uses the in-repo `testutil::prop`
+//! harness — the offline image has no proptest).
+
+use archytas::compiler::precision::{analyze_ranges, FixedFormat, Interval};
+use archytas::compiler::{pruning, quantize, sparsify};
+use archytas::dram::{DramKind, DramSim, DramTiming, Request};
+use archytas::dse::milp::{Milp, Sense};
+use archytas::dse::pareto_front;
+use archytas::ir::interp::{self, Mat};
+use archytas::noc::{routing::RouteTable, traffic, NocParams, NocSim, Topology};
+use archytas::sim::Rng;
+use archytas::testutil::prop;
+use archytas::workloads;
+
+fn random_topology(rng: &mut Rng) -> Topology {
+    match rng.below(6) {
+        0 => Topology::mesh(rng.below(5) + 2, rng.below(5) + 2).unwrap(),
+        1 => Topology::torus(rng.below(4) + 2, rng.below(4) + 2).unwrap(),
+        2 => Topology::ring(rng.below(12) + 3).unwrap(),
+        3 => Topology::star(rng.below(12) + 3).unwrap(),
+        4 => Topology::fattree(rng.below(3) + 2).unwrap(),
+        _ => {
+            // random connected graph: spanning chain + extra edges
+            let n = rng.below(10) + 4;
+            let mut edges: Vec<(usize, usize)> = (1..n).map(|i| (i - 1, i)).collect();
+            for _ in 0..rng.below(n) {
+                let a = rng.below(n);
+                let b = rng.below(n);
+                if a != b && !edges.contains(&(a.min(b), a.max(b)))
+                    && !edges.contains(&(a.max(b), a.min(b)))
+                {
+                    edges.push((a, b));
+                }
+            }
+            Topology::custom(n, &edges).unwrap()
+        }
+    }
+}
+
+/// Routing: on every topology, every (s,d) route terminates, is loop-free
+/// (bounded by node count) and shortest for the table router.
+#[test]
+fn prop_routing_terminates_and_is_shortest() {
+    prop::check(40, |rng| {
+        let t = random_topology(rng);
+        let rt = RouteTable::build(&t);
+        let s = rng.below(t.nodes());
+        let dist = t.distances(s);
+        for d in 0..t.nodes() {
+            if d == s {
+                continue;
+            }
+            let len = rt.route_len(s, d);
+            if len != dist[d] {
+                return Err(format!("{s}->{d}: route {len} vs bfs {:?}", dist[d]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// NoC conservation: every injected packet is delivered exactly once and
+/// the network fully drains; energy is exactly flit_hops * flit * 8 * pj.
+#[test]
+fn prop_noc_conservation() {
+    prop::check(15, |rng| {
+        let t = random_topology(rng);
+        let n = t.nodes();
+        if n < 2 {
+            return Ok(());
+        }
+        let mut sim = NocSim::new(t, NocParams::default());
+        let count = rng.below(60) + 5;
+        for _ in 0..count {
+            let s = rng.below(n);
+            let mut d = rng.below(n);
+            while d == s {
+                d = rng.below(n);
+            }
+            sim.inject(s, d, rng.below(200) + 1);
+        }
+        let rep = sim.run_to_drain(3_000_000);
+        if rep.delivered != count {
+            return Err(format!("delivered {}/{count}", rep.delivered));
+        }
+        if !sim.drained() {
+            return Err("not drained".into());
+        }
+        let expect_pj = rep.flit_hops as f64 * 32.0 * 8.0 * 0.15;
+        let got = rep.metrics.total_energy_pj();
+        if (got - expect_pj).abs() > 1e-6 * expect_pj.max(1.0) {
+            return Err(format!("energy {got} vs {expect_pj}"));
+        }
+        Ok(())
+    });
+}
+
+/// DRAM: random request mixes always drain; bytes moved = read+write
+/// bursts * burst_bytes; latencies >= the device's minimum.
+#[test]
+fn prop_dram_drains_and_accounts_bytes() {
+    prop::check(25, |rng| {
+        let kind = [DramKind::Ddr4_2400, DramKind::Lpddr4_3200, DramKind::Hbm2]
+            [rng.below(3)];
+        let t = DramTiming::new(kind);
+        let mut sim = DramSim::new(t);
+        let count = rng.below(80) + 1;
+        let mut expect_bytes = 0u64;
+        for _ in 0..count {
+            let addr = (rng.below(1 << 24)) as u64 & !63;
+            let bytes = (rng.below(4) + 1) * t.burst_bytes;
+            expect_bytes += bytes.div_ceil(t.burst_bytes) as u64 * t.burst_bytes as u64;
+            if rng.chance(0.4) {
+                sim.enqueue(Request::write(addr, bytes));
+            } else {
+                sim.enqueue(Request::read(addr, bytes));
+            }
+        }
+        let st = sim.run_to_drain();
+        if st.completed != count {
+            return Err(format!("completed {}/{count}", st.completed));
+        }
+        if st.bytes != expect_bytes {
+            return Err(format!("bytes {} vs {expect_bytes}", st.bytes));
+        }
+        let min_lat = (t.t_rcd + t.t_cl + t.t_burst) as f64;
+        if st.avg_latency < min_lat {
+            return Err(format!("latency {} < device min {min_lat}", st.avg_latency));
+        }
+        Ok(())
+    });
+}
+
+/// MILP: random feasible bounded LPs — the returned point satisfies every
+/// constraint and respects bounds; integer vars are integral.
+#[test]
+fn prop_milp_solutions_are_feasible() {
+    prop::check(30, |rng| {
+        let nvars = rng.below(5) + 1;
+        let mut m = Milp::new();
+        let mut bounds = Vec::new();
+        for _ in 0..nvars {
+            let lo = rng.range_f64(-5.0, 0.0);
+            let hi = lo + rng.range_f64(0.5, 8.0);
+            let cost = rng.range_f64(-3.0, 3.0);
+            let int = rng.chance(0.5);
+            m.add_var(lo, hi, cost, int);
+            bounds.push((lo, hi, int));
+        }
+        let mut cons = Vec::new();
+        for _ in 0..rng.below(4) {
+            let coeffs: Vec<(usize, f64)> =
+                (0..nvars).map(|v| (v, rng.range_f64(-2.0, 2.0))).collect();
+            // rhs chosen so x = midpoints is feasible -> instance feasible
+            let mid_val: f64 = coeffs
+                .iter()
+                .map(|&(v, c)| c * (bounds[v].0 + bounds[v].1) / 2.0)
+                .sum();
+            let rhs = mid_val + rng.range_f64(0.0, 5.0);
+            m.add_constraint(coeffs.clone(), Sense::Le, rhs);
+            cons.push((coeffs, rhs));
+        }
+        // midpoint integrality may break feasibility for int vars; skip
+        // unsat results (None) rather than fail.
+        let Some(sol) = m.minimize().map_err(|e| e.to_string())? else {
+            return Ok(());
+        };
+        for (v, &(lo, hi, int)) in bounds.iter().enumerate() {
+            let x = sol.x[v];
+            if x < lo - 1e-6 || x > hi + 1e-6 {
+                return Err(format!("x[{v}]={x} outside [{lo},{hi}]"));
+            }
+            if int && (x - x.round()).abs() > 1e-6 {
+                return Err(format!("x[{v}]={x} not integral"));
+            }
+        }
+        for (coeffs, rhs) in cons {
+            let lhs: f64 = coeffs.iter().map(|&(v, c)| c * sol.x[v]).sum();
+            if lhs > rhs + 1e-6 {
+                return Err(format!("constraint violated: {lhs} > {rhs}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pareto front: no front point dominates another; every non-front point
+/// is dominated by some front point.
+#[test]
+fn prop_pareto_front_is_correct() {
+    prop::check(50, |rng| {
+        let n = rng.below(20) + 2;
+        let dims = rng.below(3) + 2;
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..dims).map(|_| rng.range_f64(0.0, 10.0)).collect())
+            .collect();
+        let front = pareto_front(&pts);
+        let dominates = |a: &[f64], b: &[f64]| {
+            a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+        };
+        for &i in &front {
+            for &j in &front {
+                if i != j && dominates(&pts[i], &pts[j]) {
+                    return Err(format!("front point {i} dominates front point {j}"));
+                }
+            }
+        }
+        for i in 0..n {
+            if front.contains(&i) {
+                continue;
+            }
+            let covered = front
+                .iter()
+                .any(|&f| dominates(&pts[f], &pts[i]) || pts[f] == pts[i]);
+            if !covered {
+                return Err(format!("non-front point {i} not dominated"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Range analysis soundness on random MLPs with random hints.
+#[test]
+fn prop_range_analysis_sound() {
+    prop::check(12, |rng| {
+        let inputs = (rng.below(4) + 1) * 8;
+        let hidden = (rng.below(4) + 1) * 8;
+        let g = workloads::mlp(2, inputs, &[hidden], 4, rng.next_u64()).unwrap();
+        let bound = rng.range_f64(0.5, 5.0);
+        let iv = analyze_ranges(&g, &[Interval::new(-bound, bound)]).unwrap();
+        let data: Vec<f32> = (0..2 * inputs)
+            .map(|_| rng.range_f64(-bound, bound) as f32)
+            .collect();
+        let x = Mat::new([2, inputs], data).unwrap();
+        let mut err = None;
+        interp::run_with(&g, &[x], |id, m| {
+            for &v in &m.data {
+                if !iv[id].contains(v as f64) && err.is_none() {
+                    err = Some(format!("node {id} value {v} outside {:?}", iv[id]));
+                }
+            }
+        })
+        .unwrap();
+        err.map_or(Ok(()), Err)
+    });
+}
+
+/// Fixed-point quantization error bound holds for random formats/values.
+#[test]
+fn prop_fixedpoint_error_bound() {
+    prop::check(60, |rng| {
+        let hi = rng.range_f64(0.1, 100.0);
+        let r = Interval::new(-hi, hi);
+        let word = [8u32, 12, 16, 24][rng.below(4)];
+        let Some(f) = FixedFormat::for_range(&r, word) else {
+            return Ok(());
+        };
+        for _ in 0..50 {
+            let v = rng.range_f64(-hi, hi) as f32;
+            let q = f.quantize(v);
+            if ((q - v).abs() as f64) > f.error_bound() + 1e-7 {
+                return Err(format!("{v} -> {q} exceeds bound {}", f.error_bound()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pruning invariants: requested sparsity achieved (±2%), surviving
+/// weights unchanged, biases untouched.
+#[test]
+fn prop_pruning_preserves_survivors() {
+    prop::check(20, |rng| {
+        let g0 = workloads::mlp(2, 32, &[16], 8, rng.next_u64()).unwrap();
+        let mut g1 = g0.clone();
+        let sp = rng.range_f64(0.1, 0.9);
+        let rep = pruning::magnitude_prune(&mut g1, sp);
+        if (rep.sparsity() - sp).abs() > 0.03 {
+            return Err(format!("sparsity {} vs requested {sp}", rep.sparsity()));
+        }
+        for (w0, w1) in g0.weights.iter().zip(&g1.weights) {
+            for (a, b) in w0.data.iter().zip(&w1.data) {
+                if *b != 0.0 && a != b {
+                    return Err("survivor mutated".into());
+                }
+                if w0.shape[0] == 1 && a != b {
+                    return Err("bias pruned".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized weights stay within one scale-step of the originals.
+#[test]
+fn prop_quantization_bounded_perturbation() {
+    prop::check(20, |rng| {
+        let g0 = workloads::mlp(2, 24, &[16], 4, rng.next_u64()).unwrap();
+        let mut g1 = g0.clone();
+        quantize::quantize_weights_int8(&mut g1);
+        for (w0, w1) in g0.weights.iter().zip(&g1.weights) {
+            if w0.shape[0] == 1 {
+                continue;
+            }
+            let [k, n] = w0.shape;
+            for j in 0..n {
+                let amax = (0..k)
+                    .map(|i| w0.data[i * n + j].abs())
+                    .fold(0.0f32, f32::max);
+                let step = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+                for i in 0..k {
+                    let d = (w0.data[i * n + j] - w1.data[i * n + j]).abs();
+                    if d > step / 2.0 + 1e-6 {
+                        return Err(format!("perturbation {d} > step/2 {}", step / 2.0));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Block sparsify: density monotone in keep parameter; norms only drop.
+#[test]
+fn prop_sparsify_monotone() {
+    prop::check(15, |rng| {
+        let g0 = workloads::mlp(2, 32, &[32], 8, rng.next_u64()).unwrap();
+        let d_lo = rng.range_f64(0.2, 0.5);
+        let d_hi = rng.range_f64(d_lo, 1.0);
+        let mut g_lo = g0.clone();
+        let mut g_hi = g0.clone();
+        let r_lo = sparsify::block_sparsify(&mut g_lo, 16, 8, d_lo);
+        let r_hi = sparsify::block_sparsify(&mut g_hi, 16, 8, d_hi);
+        if r_lo.density > r_hi.density + 1e-9 {
+            return Err(format!("density not monotone: {} vs {}", r_lo.density, r_hi.density));
+        }
+        if r_lo.norm_retained > r_hi.norm_retained + 1e-9 {
+            return Err("norm not monotone".into());
+        }
+        Ok(())
+    });
+}
+
+/// The open-loop traffic driver never loses packets at low load on any
+/// regular topology.
+#[test]
+fn prop_traffic_driver_lossless() {
+    prop::check(10, |rng| {
+        let t = random_topology(rng);
+        let n = t.nodes();
+        if n < 3 {
+            return Ok(());
+        }
+        let mut sim = NocSim::new(t, NocParams::default());
+        let inj = traffic::generate(traffic::Pattern::Uniform, n, 0.02, 64, 500, rng);
+        let total = inj.len();
+        let rep = traffic::drive(&mut sim, inj, 2_000_000);
+        if rep.delivered != total {
+            return Err(format!("{}/{total} delivered", rep.delivered));
+        }
+        Ok(())
+    });
+}

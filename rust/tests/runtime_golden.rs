@@ -1,0 +1,74 @@
+//! Cross-language integration: every AOT artifact, executed through the
+//! PJRT runtime from Rust, must reproduce the golden outputs produced by
+//! the Python (jax) reference at lowering time — bit-compatible numerics
+//! across the language boundary.
+//!
+//! Requires `make artifacts` (the Makefile runs it before cargo test).
+
+use archytas::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("artifacts/ missing — run `make artifacts`")
+}
+
+#[test]
+fn all_artifacts_reproduce_golden_outputs() {
+    let rt = runtime();
+    let names = rt.artifact_names();
+    assert!(names.len() >= 10, "expected full artifact set, got {names:?}");
+    for name in names {
+        let inputs = rt.registry().golden_inputs(&name).unwrap();
+        let want = rt.registry().golden_outputs(&name).unwrap();
+        let got = rt.run(&name, &inputs).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(got.len(), want.len(), "{name}: output arity");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let scale = w.data().iter().fold(1.0f32, |a, &v| a.max(v.abs()));
+            let diff = g.max_abs_diff(w).unwrap();
+            assert!(
+                diff <= 2e-4 * scale,
+                "{name} output {i}: max abs diff {diff} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_rejects_wrong_shapes() {
+    let rt = runtime();
+    let exe = rt.executable("gemm_64").unwrap();
+    let bad = archytas::runtime::Tensor::zeros(vec![2, 2]);
+    let good = archytas::runtime::Tensor::zeros(vec![64, 64]);
+    assert!(exe.run(&[bad, good.clone()]).is_err());
+    assert!(exe.run(&[good.clone()]).is_err(), "arity check");
+}
+
+#[test]
+fn executables_are_cached() {
+    let rt = runtime();
+    let a = rt.executable("gemm_64").unwrap();
+    let b = rt.executable("gemm_64").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn gemm_matches_host_reference() {
+    // Independent of golden files: run gemm_64 on fresh deterministic
+    // inputs and compare with a host-side matmul.
+    let rt = runtime();
+    let mut rng = archytas::sim::Rng::new(123);
+    let x = archytas::runtime::Tensor::random(vec![64, 64], &mut rng);
+    let w = archytas::runtime::Tensor::random(vec![64, 64], &mut rng);
+    let got = rt.run("gemm_64", &[x.clone(), w.clone()]).unwrap();
+    let mut want = vec![0.0f32; 64 * 64];
+    for i in 0..64 {
+        for kk in 0..64 {
+            let xv = x.at2(i, kk);
+            for j in 0..64 {
+                want[i * 64 + j] += xv * w.at2(kk, j);
+            }
+        }
+    }
+    let want = archytas::runtime::Tensor::new(vec![64, 64], want).unwrap();
+    let diff = got[0].max_abs_diff(&want).unwrap();
+    assert!(diff < 1e-3, "diff {diff}");
+}
