@@ -1,12 +1,16 @@
 //! E2 — NoC scaling study (paper Sec. III).
 //!
 //! Saturation sweeps (offered load -> latency/throughput) per topology
-//! and traffic pattern on the flit-level wormhole simulator, plus the
-//! size-scaling row the "performance up-scaling" claim needs.
+//! and traffic pattern on the flit-level wormhole simulator, the
+//! size-scaling row the "performance up-scaling" claim needs, and the
+//! hot-loop throughput row: the event-wheel `NocSim` vs the retained
+//! pre-rewrite `RefNocSim` on the same seeded workload, reporting
+//! simulated cycles/second for both (the CI perf-smoke line).
 
 #[path = "util.rs"]
 mod util;
 
+use archytas::noc::refsim::RefNocSim;
 use archytas::noc::{traffic, NocParams, NocSim, Topology};
 use archytas::sim::Rng;
 
@@ -30,6 +34,55 @@ fn sweep(name: &str, mk: impl Fn() -> Topology, pattern: traffic::Pattern) {
     }
 }
 
+/// Hot-loop throughput: 16x16 mesh, uniform random at mid injection rate,
+/// identical workload on the event-wheel simulator and the pre-rewrite
+/// reference. Prints simulated cycles/sec for both — the perf trajectory
+/// line CI greps for — and cross-checks that the reports stay
+/// bit-identical (golden determinism).
+fn hot_loop_throughput() {
+    println!("\n-- hot loop: 16x16 mesh, uniform, load 0.08 (event wheel vs reference) --");
+    // 32-byte single-flit packets at 0.08/node/cycle: ~2/3 of the mesh's
+    // uniform-traffic saturation point, so both simulators drain.
+    let mut rng = Rng::new(42);
+    let schedule = traffic::generate(traffic::Pattern::Uniform, 256, 0.08, 32, 1500, &mut rng);
+
+    // Clone outside the timed regions so both sides pay identical setup
+    // (each drive then sorts its own already-sorted copy).
+    let mut sched_new = Some(schedule.clone());
+    let mut sim = NocSim::new(Topology::mesh(16, 16).unwrap(), NocParams::default());
+    let (rep, wall_new) = util::time_once(|| {
+        traffic::drive(&mut sim, sched_new.take().expect("timed once"), 3_000_000)
+    });
+
+    let mut sched_ref = Some(schedule);
+    let mut rsim = RefNocSim::new(Topology::mesh(16, 16).unwrap(), NocParams::default());
+    let (rref, wall_ref) = util::time_once(|| {
+        archytas::noc::refsim::drive(&mut rsim, sched_ref.take().expect("timed once"), 3_000_000)
+    });
+
+    let cps_new = rep.cycles as f64 / wall_new;
+    let cps_ref = rref.cycles as f64 / wall_ref;
+    println!(
+        "  event-wheel: {:>10} cyc in {:>10}  =  {:>12.0} cycles/sec",
+        rep.cycles,
+        util::fmt_time(wall_new),
+        cps_new
+    );
+    println!(
+        "  reference:   {:>10} cyc in {:>10}  =  {:>12.0} cycles/sec",
+        rref.cycles,
+        util::fmt_time(wall_ref),
+        cps_ref
+    );
+    println!("  speedup: {:.2}x", cps_new / cps_ref);
+    let golden_ok = rep.cycles == rref.cycles
+        && rep.delivered == rref.delivered
+        && rep.flit_hops == rref.flit_hops
+        && rep.avg_latency.to_bits() == rref.avg_latency.to_bits();
+    println!("  golden match: {}", if golden_ok { "ok" } else { "MISMATCH" });
+    assert!(golden_ok, "event-wheel sim diverged from reference");
+}
+
 fn main() {
     util::banner("E2", "NoC saturation & scaling (flit-level wormhole sim)");
     sweep("mesh 4x4", || Topology::mesh(4, 4).unwrap(), traffic::Pattern::Uniform);
@@ -42,7 +95,10 @@ fn main() {
     sweep("mesh 4x4", || Topology::mesh(4, 4).unwrap(), traffic::Pattern::Transpose { w: 4 });
 
     println!("\n-- size scaling at load 0.05, uniform --");
-    println!("{:>10} {:>8} {:>12} {:>14} {:>12}", "mesh", "nodes", "avg lat", "flits/node/cyc", "sim wall");
+    println!(
+        "{:>10} {:>8} {:>12} {:>14} {:>12} {:>14}",
+        "mesh", "nodes", "avg lat", "flits/node/cyc", "sim wall", "cycles/sec"
+    );
     for side in [2usize, 4, 6, 8, 12, 16] {
         let (rep, wall) = util::time_once(|| {
             let topo = Topology::mesh(side, side).unwrap();
@@ -53,15 +109,19 @@ fn main() {
             traffic::drive(&mut sim, inj, 2_000_000)
         });
         println!(
-            "{:>7}x{:<3} {:>8} {:>12.1} {:>14.4} {:>12}",
+            "{:>7}x{:<3} {:>8} {:>12.1} {:>14.4} {:>12} {:>14.0}",
             side,
             side,
             side * side,
             rep.avg_latency,
             rep.throughput,
-            util::fmt_time(wall)
+            util::fmt_time(wall),
+            rep.cycles as f64 / wall
         );
     }
+
+    hot_loop_throughput();
+
     println!("\nexpected shape: latency knee at saturation; torus ~2x bisection of mesh;");
     println!("hotspot saturates earliest; per-node throughput ~flat with size at low load.");
 }

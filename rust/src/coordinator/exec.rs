@@ -11,8 +11,6 @@
 //!   free — classic resource-constrained list scheduling, which is what
 //!   a doorbell-driven fabric run looks like at this abstraction level.
 
-use std::collections::HashMap;
-
 use crate::compiler::{FabricProgram, Step};
 use crate::fabric::Fabric;
 use crate::metrics::{Category, Metrics};
@@ -65,7 +63,13 @@ pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
     let mut tile_free = vec![0 as Cycle; fabric.tile_count()];
     let mut tile_busy = vec![0 as Cycle; fabric.tile_count()];
     let mut hbm_free: Cycle = 0;
-    let mut link_free: HashMap<(usize, usize), Cycle> = HashMap::new();
+    // Per-(src tile, dst tile) transfer-path occupancy, flat-indexed by
+    // the dense pair id `from * tile_count + to` (same trick as the NoC's
+    // precomputed reverse-port map) instead of hashing tuples. O(tiles^2)
+    // memory — 8 B * nt^2, fine for the <=256-tile fabrics the configs
+    // describe; revisit (sparse or per-src maps) beyond ~2k tiles.
+    let nt = fabric.tile_count();
+    let mut link_free: Vec<Cycle> = vec![0; nt * nt];
     let mut total = Metrics::new();
     let mut transfer_cycles: Cycle = 0;
     let mut exec_steps = 0usize;
@@ -86,11 +90,10 @@ pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
                 let src = fabric.tiles[*from].node;
                 let dst = fabric.tiles[*to].node;
                 let cost = fabric.transport(src, dst, *bytes);
-                let key = (*from, *to);
-                let free = link_free.get(&key).copied().unwrap_or(0);
-                let start = ready.max(free);
+                let key = *from * nt + *to;
+                let start = ready.max(link_free[key]);
                 let finish = start + cost.cycles;
-                link_free.insert(key, finish);
+                link_free[key] = finish;
                 done[i] = finish;
                 transfer_cycles += cost.cycles;
                 total.absorb_parallel(&cost.with_cycles(0));

@@ -90,6 +90,44 @@ impl DramStats {
     }
 }
 
+/// Fixed ring of the last 4 ACT timestamps (tRRD / tFAW window). The
+/// original `VecDeque` allocated on the heap and was pushed/popped every
+/// activate; this is four words in the controller struct.
+#[derive(Debug, Clone, Copy, Default)]
+struct ActWindow {
+    t: [Cycle; 4],
+    n: usize,
+    pos: usize,
+}
+
+impl ActWindow {
+    fn push(&mut self, at: Cycle) {
+        self.t[self.pos] = at;
+        self.pos = (self.pos + 1) % 4;
+        if self.n < 4 {
+            self.n += 1;
+        }
+    }
+
+    /// Most recent ACT (tRRD reference).
+    fn last(&self) -> Option<Cycle> {
+        if self.n == 0 {
+            None
+        } else {
+            Some(self.t[(self.pos + 3) % 4])
+        }
+    }
+
+    /// Fourth-most-recent ACT (tFAW reference), once the window is full.
+    fn fourth_last(&self) -> Option<Cycle> {
+        if self.n < 4 {
+            None
+        } else {
+            Some(self.t[self.pos])
+        }
+    }
+}
+
 /// The single-channel DRAM simulator.
 pub struct DramSim {
     t: DramTiming,
@@ -105,7 +143,7 @@ pub struct DramSim {
     /// Completion cycle per request id (public for co-simulation).
     pub req_done: Vec<Option<Cycle>>,
     /// Last 4 ACT timestamps (tFAW window, tRRD).
-    recent_acts: VecDeque<Cycle>,
+    recent_acts: ActWindow,
     last_col: Cycle,
     now: Cycle,
     energy: Metrics,
@@ -129,7 +167,7 @@ impl DramSim {
             req_bursts: Vec::new(),
             req_enqueued: Vec::new(),
             req_done: Vec::new(),
-            recent_acts: VecDeque::new(),
+            recent_acts: ActWindow::default(),
             last_col: 0,
             now: 0,
             energy: Metrics::new(),
@@ -194,11 +232,11 @@ impl DramSim {
 
     fn act_legal_at(&self) -> Cycle {
         let mut t0 = self.now;
-        if let Some(&last) = self.recent_acts.back() {
+        if let Some(last) = self.recent_acts.last() {
             t0 = t0.max(last + self.t.t_rrd);
         }
-        if self.recent_acts.len() >= 4 {
-            t0 = t0.max(self.recent_acts[self.recent_acts.len() - 4] + self.t.t_faw);
+        if let Some(fourth) = self.recent_acts.fourth_last() {
+            t0 = t0.max(fourth + self.t.t_faw);
         }
         t0
     }
@@ -284,10 +322,7 @@ impl DramSim {
                 let row = self.queues[b].front().unwrap().row;
                 self.banks[b].issue_act(self.now, row, &self.t);
                 self.energy.add_energy(Category::Dram, self.t.e_act_pj);
-                self.recent_acts.push_back(self.now);
-                if self.recent_acts.len() > 4 {
-                    self.recent_acts.pop_front();
-                }
+                self.recent_acts.push(self.now);
             } else {
                 self.banks[b].issue_pre(self.now, &self.t);
                 self.banks[b].row_misses += 1;
@@ -340,6 +375,11 @@ impl DramSim {
                 // command bus: next command at now+1
                 self.now += 1;
             } else {
+                // Event-jump straight to the earliest legal cycle. A full
+                // EventWheel port (per-bank ready events instead of the
+                // O(banks) next_wakeup scan) is a ROADMAP open item; a
+                // decorative push/pop through the wheel here would cost
+                // work without making anything event-driven.
                 let wake = self.next_wakeup();
                 debug_assert!(wake > self.now, "no progress at {}", self.now);
                 self.now = wake;
@@ -357,8 +397,12 @@ impl DramSim {
         self.stats()
     }
 
-    pub fn stats(&self) -> DramStats {
-        let mut m = self.energy.clone();
+    /// Final report. The accumulated energy ledger is *moved* into the
+    /// report (no per-report `Metrics` clone); the simulator's ledger
+    /// restarts empty, so call once per drained episode — which is what
+    /// [`DramSim::run_to_drain`] does.
+    pub fn stats(&mut self) -> DramStats {
+        let mut m = std::mem::take(&mut self.energy);
         // Background energy over the whole episode.
         m.add_energy(
             Category::Leakage,

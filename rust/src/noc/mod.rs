@@ -14,7 +14,10 @@
 //! * [`routing`] — dimension-order XY (deadlock-free on mesh/torus) and
 //!   table-based shortest-path next-hop functions.
 //! * [`NocSim`] — cycle-stepped wormhole router network with virtual
-//!   channels and credit flow control.
+//!   channels and credit flow control, built on the flat event-wheel hot
+//!   loop (see `sim.rs` module docs for the buffer layout).
+//! * [`refsim`] — the retained pre-rewrite implementation, used as the
+//!   differential-testing golden reference and perf baseline.
 //! * [`traffic`] — uniform / hotspot / transpose / neighbour generators.
 //! * [`floorplan`] — approximate placement + Manhattan link lengths for
 //!   the cost model the DSE toolchain uses.
@@ -23,6 +26,7 @@ mod floorplan;
 mod router;
 mod sim;
 mod topology;
+pub mod refsim;
 pub mod routing;
 pub mod traffic;
 

@@ -1,0 +1,407 @@
+//! Reference NoC simulator: the pre-event-wheel implementation, retained
+//! verbatim for differential testing and as the in-repo performance
+//! baseline.
+//!
+//! [`RefNocSim`] models exactly the same microarchitecture as
+//! [`super::NocSim`] — same allocation, traversal and credit rules, same
+//! fixed iteration order — but with the original data layout: per-router
+//! `Vec<Vec<VecDeque<Flit>>>` buffers, unsorted arrival/credit `Vec`s
+//! drained and reallocated every cycle, and per-flit linear neighbor
+//! scans for routing and reverse ports. The golden tests
+//! (`tests/noc_golden.rs`) assert that both simulators produce
+//! bit-identical [`SimReport`]s and per-packet timelines on fixed seeds;
+//! `benches/bench_noc.rs` runs both on the same workload to report the
+//! hot-loop speedup.
+//!
+//! Do not optimize this module — its value is being the slow, obviously
+//! faithful model.
+
+use std::collections::VecDeque;
+
+use super::router::{Flit, FlitKind};
+use super::routing::RouteTable;
+use super::sim::{NocParams, PacketStats, SimReport};
+use super::topology::{NodeId, Topology};
+use super::traffic::Injection;
+use crate::metrics::{Category, Metrics};
+use crate::sim::Cycle;
+
+/// Drive a [`RefNocSim`] with an injection schedule, stepping as time
+/// advances, then drain — the same contract as [`super::traffic::drive`]
+/// (which only accepts the production simulator), so differential tests
+/// and benches feed both simulators identical timelines without
+/// hand-copied drive loops.
+pub fn drive(sim: &mut RefNocSim, mut schedule: Vec<Injection>, max_cycles: Cycle) -> SimReport {
+    schedule.sort_by_key(|i| i.at);
+    let mut next = 0;
+    while next < schedule.len() && sim.now() < max_cycles {
+        while next < schedule.len() && schedule[next].at <= sim.now() {
+            let inj = schedule[next];
+            sim.inject(inj.src, inj.dst, inj.bytes);
+            next += 1;
+        }
+        sim.step();
+    }
+    sim.run_to_drain(max_cycles)
+}
+
+/// Per-router buffer state in the original nested layout.
+struct RefRouter {
+    /// in_buf[port][vc] — input queues. Port 0..deg are neighbor links in
+    /// `Topology::neighbors` order; port deg is the local injection port.
+    in_buf: Vec<Vec<VecDeque<Flit>>>,
+    /// out_owner[port][vc] = Some((in_port, in_vc)) while a packet holds
+    /// the output.
+    out_owner: Vec<Vec<Option<(usize, usize)>>>,
+    /// credits[port][vc] = free buffer slots at the downstream input.
+    credits: Vec<Vec<usize>>,
+    /// Round-robin arbitration pointer per output port.
+    rr: Vec<usize>,
+}
+
+impl RefRouter {
+    fn new(ports_in: usize, ports_out: usize, vcs: usize, buf_flits: usize) -> Self {
+        RefRouter {
+            in_buf: (0..ports_in)
+                .map(|_| (0..vcs).map(|_| VecDeque::new()).collect())
+                .collect(),
+            out_owner: vec![vec![None; vcs]; ports_out],
+            credits: vec![vec![buf_flits; vcs]; ports_out],
+            rr: vec![0; ports_out],
+        }
+    }
+
+    fn occupancy(&self) -> usize {
+        self.in_buf.iter().flat_map(|p| p.iter().map(|q| q.len())).sum()
+    }
+}
+
+struct Arrival {
+    at: Cycle,
+    node: NodeId,
+    port: usize,
+    flit: Flit,
+}
+
+struct CreditReturn {
+    at: Cycle,
+    node: NodeId,
+    out_port: usize,
+    vc: usize,
+}
+
+/// The reference simulator (original data layout; see module docs).
+pub struct RefNocSim {
+    topo: Topology,
+    routes: RouteTable,
+    params: NocParams,
+    routers: Vec<RefRouter>,
+    inject_q: Vec<VecDeque<Flit>>,
+    arrivals: Vec<Arrival>,
+    credit_returns: Vec<CreditReturn>,
+    packets: Vec<PacketStats>,
+    now: Cycle,
+    flit_hops: u64,
+    delivered: usize,
+}
+
+impl RefNocSim {
+    pub fn new(topo: Topology, params: NocParams) -> Self {
+        let routes = RouteTable::build(&topo);
+        let routers = (0..topo.nodes())
+            .map(|n| {
+                let deg = topo.degree(n);
+                RefRouter::new(deg + 1, deg + 1, params.vcs, params.buf_flits)
+            })
+            .collect();
+        let inject_q = (0..topo.nodes()).map(|_| VecDeque::new()).collect();
+        RefNocSim {
+            topo,
+            routes,
+            params,
+            routers,
+            inject_q,
+            arrivals: Vec::new(),
+            credit_returns: Vec::new(),
+            packets: Vec::new(),
+            now: 0,
+            flit_hops: 0,
+            delivered: 0,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    pub fn packets(&self) -> &[PacketStats] {
+        &self.packets
+    }
+
+    /// Queue a packet for injection at the current cycle. Returns its id.
+    pub fn inject(&mut self, src: NodeId, dst: NodeId, bytes: usize) -> usize {
+        assert!(src < self.topo.nodes() && dst < self.topo.nodes());
+        assert_ne!(src, dst, "self-traffic is not modelled");
+        let id = self.packets.len();
+        let nflits = bytes.div_ceil(self.params.flit_bytes).max(1);
+        let vc = id % self.params.vcs;
+        for i in 0..nflits {
+            let kind = if i + 1 == nflits {
+                FlitKind::Tail
+            } else if i == 0 {
+                FlitKind::Head
+            } else {
+                FlitKind::Body
+            };
+            self.inject_q[src].push_back(Flit {
+                packet: id,
+                kind,
+                is_head: i == 0,
+                dst,
+                vc,
+            });
+        }
+        self.packets.push(PacketStats {
+            src,
+            dst,
+            flits: nflits,
+            injected_at: self.now,
+            ejected_at: None,
+            hops: self.routes.route_len(src, dst),
+        });
+        id
+    }
+
+    /// Input-port index at `to` for the link arriving from `from`
+    /// (original linear scan).
+    fn in_port(&self, to: NodeId, from: NodeId) -> usize {
+        self.topo
+            .neighbors(to)
+            .iter()
+            .position(|&(v, _)| v == from)
+            .expect("link endpoints inconsistent")
+    }
+
+    /// Output port at `n` towards `dst` (original linear scan; deg =
+    /// ejection if dst == n).
+    fn route_port(&self, n: NodeId, dst: NodeId, deg: usize) -> usize {
+        if dst == n {
+            return deg;
+        }
+        let next = self.routes.next_hop(n, dst);
+        self.topo
+            .neighbors(n)
+            .iter()
+            .position(|&(v, _)| v == next)
+            .expect("route table returned non-neighbor")
+    }
+
+    /// Advance one cycle (original double-buffered step).
+    pub fn step(&mut self) {
+        let nodes = self.topo.nodes();
+        let vcs = self.params.vcs;
+
+        // 1. Local injection.
+        for n in 0..nodes {
+            let local = self.topo.degree(n);
+            while let Some(&flit) = self.inject_q[n].front() {
+                let buf = &mut self.routers[n].in_buf[local][flit.vc];
+                if buf.len() >= self.params.buf_flits {
+                    break;
+                }
+                buf.push_back(self.inject_q[n].pop_front().unwrap());
+            }
+        }
+
+        // 2. Switch allocation + traversal, double-buffered.
+        let mut new_arrivals: Vec<Arrival> = Vec::new();
+        let mut new_credits: Vec<CreditReturn> = Vec::new();
+        for n in 0..nodes {
+            let deg = self.topo.degree(n);
+            let ports_in = deg + 1;
+            let mut input_busy = vec![false; ports_in];
+            for p_out in 0..=deg {
+                // 2a. VC allocation.
+                for p_in in 0..ports_in {
+                    for vc in 0..vcs {
+                        let Some(&flit) = self.routers[n].in_buf[p_in][vc].front() else {
+                            continue;
+                        };
+                        if !flit.is_head {
+                            continue;
+                        }
+                        let want = self.route_port(n, flit.dst, deg);
+                        if want != p_out {
+                            continue;
+                        }
+                        if self.routers[n].out_owner[p_out][vc].is_none() {
+                            self.routers[n].out_owner[p_out][vc] = Some((p_in, vc));
+                        }
+                    }
+                }
+                // 2b. Switch traversal.
+                let rr0 = self.routers[n].rr[p_out];
+                for k in 0..vcs {
+                    let vc = (rr0 + k) % vcs;
+                    let Some((p_in, in_vc)) = self.routers[n].out_owner[p_out][vc] else {
+                        continue;
+                    };
+                    if input_busy[p_in] {
+                        continue;
+                    }
+                    let Some(&flit) = self.routers[n].in_buf[p_in][in_vc].front() else {
+                        continue;
+                    };
+                    let owner_ok = {
+                        let want = if flit.dst == n {
+                            deg
+                        } else {
+                            self.route_port(n, flit.dst, deg)
+                        };
+                        want == p_out
+                    };
+                    if !owner_ok {
+                        continue;
+                    }
+                    let is_ejection = p_out == deg;
+                    if !is_ejection && self.routers[n].credits[p_out][vc] == 0 {
+                        continue;
+                    }
+                    // Commit the move.
+                    let flit = self.routers[n].in_buf[p_in][in_vc].pop_front().unwrap();
+                    input_busy[p_in] = true;
+                    self.routers[n].rr[p_out] = (vc + 1) % vcs;
+                    if flit.kind == FlitKind::Tail {
+                        self.routers[n].out_owner[p_out][vc] = None;
+                    }
+                    if p_in < deg {
+                        let (up, _) = self.topo.neighbors(n)[p_in];
+                        let up_out_port = self.in_port(up, n);
+                        new_credits.push(CreditReturn {
+                            at: self.now + 1,
+                            node: up,
+                            out_port: up_out_port,
+                            vc: in_vc,
+                        });
+                    }
+                    if is_ejection {
+                        if flit.kind == FlitKind::Tail {
+                            let p = &mut self.packets[flit.packet];
+                            p.ejected_at = Some(self.now + 1);
+                            self.delivered += 1;
+                        }
+                    } else {
+                        let (next, _) = self.topo.neighbors(n)[p_out];
+                        let dest_port = self.in_port(next, n);
+                        self.routers[n].credits[p_out][vc] -= 1;
+                        self.flit_hops += 1;
+                        new_arrivals.push(Arrival {
+                            at: self.now + self.params.router_latency,
+                            node: next,
+                            port: dest_port,
+                            flit,
+                        });
+                    }
+                }
+            }
+        }
+
+        // 3. Apply arrivals whose time has come (including older ones).
+        self.arrivals.extend(new_arrivals);
+        self.credit_returns.extend(new_credits);
+        let now_next = self.now + 1;
+        let mut rest = Vec::with_capacity(self.arrivals.len());
+        for a in self.arrivals.drain(..) {
+            if a.at <= now_next {
+                self.routers[a.node].in_buf[a.port][a.flit.vc].push_back(a.flit);
+            } else {
+                rest.push(a);
+            }
+        }
+        self.arrivals = rest;
+        let mut rest = Vec::with_capacity(self.credit_returns.len());
+        for c in self.credit_returns.drain(..) {
+            if c.at <= now_next {
+                self.routers[c.node].credits[c.out_port][c.vc] += 1;
+            } else {
+                rest.push(c);
+            }
+        }
+        self.credit_returns = rest;
+
+        self.now = now_next;
+    }
+
+    /// True when no flits remain anywhere.
+    pub fn drained(&self) -> bool {
+        self.inject_q.iter().all(VecDeque::is_empty)
+            && self.arrivals.is_empty()
+            && self.routers.iter().all(|r| r.occupancy() == 0)
+    }
+
+    /// Run until drained or `max_cycles`, then report.
+    pub fn run_to_drain(&mut self, max_cycles: Cycle) -> SimReport {
+        while !self.drained() && self.now < max_cycles {
+            self.step();
+        }
+        self.report()
+    }
+
+    /// Run exactly `cycles` more cycles.
+    pub fn run_for(&mut self, cycles: Cycle) {
+        for _ in 0..cycles {
+            self.step();
+        }
+    }
+
+    pub fn report(&self) -> SimReport {
+        let mut lats: Vec<u64> = self
+            .packets
+            .iter()
+            .filter_map(|p| p.ejected_at.map(|e| e - p.injected_at))
+            .collect();
+        lats.sort_unstable();
+        let avg = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<u64>() as f64 / lats.len() as f64
+        };
+        let p99 = if lats.is_empty() {
+            0.0
+        } else {
+            lats[(lats.len() - 1).min(lats.len() * 99 / 100)] as f64
+        };
+        let mut metrics = Metrics::new();
+        metrics.cycles = self.now;
+        metrics.bytes_moved = self.flit_hops * self.params.flit_bytes as u64;
+        metrics.add_energy(
+            Category::Noc,
+            self.flit_hops as f64 * self.params.flit_bytes as f64 * 8.0
+                * self.params.hop_energy_pj_per_bit,
+        );
+        let delivered_flits: usize = self
+            .packets
+            .iter()
+            .filter(|p| p.ejected_at.is_some())
+            .map(|p| p.flits)
+            .sum();
+        SimReport {
+            cycles: self.now,
+            delivered: self.delivered,
+            in_flight: self.packets.len() - self.delivered,
+            avg_latency: avg,
+            p99_latency: p99,
+            flit_hops: self.flit_hops,
+            throughput: if self.now == 0 {
+                0.0
+            } else {
+                delivered_flits as f64 / self.now as f64 / self.topo.nodes() as f64
+            },
+            metrics,
+        }
+    }
+}

@@ -1,4 +1,15 @@
-//! Wormhole router building blocks: flits and per-router state.
+//! Wormhole router building blocks: flits and the contiguous input-buffer
+//! arena shared by every router in a [`super::NocSim`].
+//!
+//! The original implementation kept per-router `Vec<Vec<VecDeque<Flit>>>`
+//! buffers — three pointer hops and a heap allocation per queue, which
+//! made the cycle loop allocation- and cache-miss-bound. [`FlitQueues`]
+//! replaces all of it with one flat arena: every (node, port, vc) input
+//! queue is a fixed-capacity ring window inside a single `Vec<Flit>`,
+//! addressed by a dense queue id the simulator derives from its per-node
+//! prefix offsets. Head/length cursors live in two parallel flat arrays,
+//! so stepping a router touches a handful of contiguous cache lines and
+//! never allocates.
 
 use super::topology::NodeId;
 
@@ -22,40 +33,84 @@ pub struct Flit {
     pub vc: usize,
 }
 
-/// Per-router, per-input-port, per-VC buffer state plus output allocation.
-///
-/// Wormhole switching: a head flit allocates (output port, vc) and holds
-/// it until the tail passes; body flits follow the allocation. Credits
-/// count free downstream buffer slots per (port, vc).
-#[derive(Debug)]
-pub struct RouterState {
-    /// in_buf[port][vc] — input queues. Port 0..deg are neighbor links in
-    /// `Topology::neighbors` order; port deg is the local injection port.
-    pub in_buf: Vec<Vec<std::collections::VecDeque<Flit>>>,
-    /// out_owner[port][vc] = Some((in_port, in_vc)) while a packet holds
-    /// the output.
-    pub out_owner: Vec<Vec<Option<(usize, usize)>>>,
-    /// credits[port][vc] = free buffer slots at the downstream input.
-    pub credits: Vec<Vec<usize>>,
-    /// Round-robin arbitration pointer per output port.
-    pub rr: Vec<usize>,
+impl Flit {
+    /// Placeholder value for unoccupied arena slots.
+    const NULL: Flit =
+        Flit { packet: usize::MAX, kind: FlitKind::Body, is_head: false, dst: 0, vc: 0 };
 }
 
-impl RouterState {
-    pub fn new(ports_in: usize, ports_out: usize, vcs: usize, buf_flits: usize) -> Self {
-        RouterState {
-            in_buf: (0..ports_in)
-                .map(|_| (0..vcs).map(|_| std::collections::VecDeque::new()).collect())
-                .collect(),
-            out_owner: vec![vec![None; vcs]; ports_out],
-            credits: vec![vec![buf_flits; vcs]; ports_out],
-            rr: vec![0; ports_out],
+/// Contiguous ring-buffer arena of fixed-capacity flit queues.
+///
+/// Queue `q` owns slots `q*cap .. (q+1)*cap` of the backing buffer and
+/// behaves as a bounded FIFO (the credit protocol guarantees a push never
+/// exceeds `cap`; this is debug-asserted). All queues share one
+/// allocation made at construction time.
+#[derive(Debug, Clone)]
+pub struct FlitQueues {
+    buf: Vec<Flit>,
+    head: Vec<u32>,
+    len: Vec<u32>,
+    cap: usize,
+}
+
+impl FlitQueues {
+    pub fn new(queues: usize, cap_flits: usize) -> Self {
+        assert!(cap_flits > 0, "queues need nonzero capacity");
+        FlitQueues {
+            buf: vec![Flit::NULL; queues * cap_flits],
+            head: vec![0; queues],
+            len: vec![0; queues],
+            cap: cap_flits,
         }
     }
 
-    /// Total buffered flits (for drain checks and backpressure stats).
-    pub fn occupancy(&self) -> usize {
-        self.in_buf.iter().flat_map(|p| p.iter().map(|q| q.len())).sum()
+    /// Per-queue capacity in flits.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Number of buffered flits in queue `q`.
+    #[inline]
+    pub fn len(&self, q: usize) -> usize {
+        self.len[q] as usize
+    }
+
+    #[inline]
+    pub fn is_full(&self, q: usize) -> bool {
+        self.len[q] as usize == self.cap
+    }
+
+    /// Front flit of queue `q` (copied out; `Flit` is 4 words).
+    #[inline]
+    pub fn front(&self, q: usize) -> Option<Flit> {
+        if self.len[q] == 0 {
+            None
+        } else {
+            Some(self.buf[q * self.cap + self.head[q] as usize])
+        }
+    }
+
+    #[inline]
+    pub fn push_back(&mut self, q: usize, f: Flit) {
+        debug_assert!(!self.is_full(q), "queue {q} overflow (credit protocol violated)");
+        let slot = q * self.cap + (self.head[q] as usize + self.len[q] as usize) % self.cap;
+        self.buf[slot] = f;
+        self.len[q] += 1;
+    }
+
+    #[inline]
+    pub fn pop_front(&mut self, q: usize) -> Flit {
+        debug_assert!(self.len[q] > 0, "pop from empty queue {q}");
+        let f = self.buf[q * self.cap + self.head[q] as usize];
+        self.head[q] = ((self.head[q] as usize + 1) % self.cap) as u32;
+        self.len[q] -= 1;
+        f
+    }
+
+    /// Total buffered flits across all queues (drain checks).
+    pub fn total(&self) -> usize {
+        self.len.iter().map(|&l| l as usize).sum()
     }
 }
 
@@ -63,13 +118,60 @@ impl RouterState {
 mod tests {
     use super::*;
 
+    fn flit(packet: usize) -> Flit {
+        Flit { packet, kind: FlitKind::Tail, is_head: true, dst: 0, vc: 0 }
+    }
+
     #[test]
-    fn fresh_router_is_empty_with_full_credits() {
-        let r = RouterState::new(5, 4, 2, 4);
-        assert_eq!(r.occupancy(), 0);
-        assert!(r.credits.iter().all(|p| p.iter().all(|&c| c == 4)));
-        assert!(r.out_owner.iter().all(|p| p.iter().all(Option::is_none)));
-        assert_eq!(r.in_buf.len(), 5);
-        assert_eq!(r.out_owner.len(), 4);
+    fn fresh_arena_is_empty() {
+        let q = FlitQueues::new(6, 4);
+        assert_eq!(q.total(), 0);
+        assert_eq!(q.capacity(), 4);
+        for i in 0..6 {
+            assert_eq!(q.len(i), 0);
+            assert!(q.front(i).is_none());
+            assert!(!q.is_full(i));
+        }
+    }
+
+    #[test]
+    fn fifo_order_per_queue() {
+        let mut q = FlitQueues::new(2, 4);
+        for p in 0..4 {
+            q.push_back(1, flit(p));
+        }
+        assert!(q.is_full(1));
+        assert_eq!(q.len(0), 0, "queues are independent");
+        for p in 0..4 {
+            assert_eq!(q.front(1).unwrap().packet, p);
+            assert_eq!(q.pop_front(1).packet, p);
+        }
+        assert_eq!(q.total(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_within_window() {
+        let mut q = FlitQueues::new(3, 2);
+        // Push/pop repeatedly so head cycles through the 2-slot window.
+        for round in 0..7 {
+            q.push_back(2, flit(round));
+            q.push_back(2, flit(round + 100));
+            assert!(q.is_full(2));
+            assert_eq!(q.pop_front(2).packet, round);
+            assert_eq!(q.pop_front(2).packet, round + 100);
+        }
+        // Neighboring queues untouched.
+        assert_eq!(q.len(0), 0);
+        assert_eq!(q.len(1), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    #[cfg(debug_assertions)]
+    fn overflow_panics_in_debug() {
+        let mut q = FlitQueues::new(1, 2);
+        q.push_back(0, flit(0));
+        q.push_back(0, flit(1));
+        q.push_back(0, flit(2));
     }
 }

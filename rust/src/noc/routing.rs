@@ -10,11 +10,20 @@
 
 use super::topology::{NodeId, Topology, TopologyKind};
 
+/// Sentinel in the output-port table for cur == dst or unreachable pairs.
+const NO_PORT: u16 = u16::MAX;
+
 /// Precomputed routing: `next[dst][cur]` = next hop from `cur` towards
-/// `dst` (cur == dst maps to itself).
+/// `dst` (cur == dst maps to itself), plus a flat per-(cur, dst)
+/// *output-port* cache so the simulator's inner loop is a single table
+/// read — no per-flit XY arithmetic or neighbor-position scan.
 #[derive(Debug, Clone)]
 pub struct RouteTable {
     next: Vec<Vec<NodeId>>,
+    /// out_ports[dst * nodes + cur] = output-port index at `cur` towards
+    /// `dst` ([`NO_PORT`] on the diagonal and for unreachable pairs).
+    out_ports: Vec<u16>,
+    nodes: usize,
     kind: TopologyKind,
 }
 
@@ -40,7 +49,36 @@ impl RouteTable {
                 next[dst][cur] = if parent[cur] == usize::MAX { cur } else { parent[cur] };
             }
         }
-        RouteTable { next, kind: topo.kind() }
+        let mut table = RouteTable { next, out_ports: vec![NO_PORT; n * n], nodes: n, kind: topo.kind() };
+        for dst in 0..n {
+            for cur in 0..n {
+                if cur == dst {
+                    continue;
+                }
+                let nxt = table.next_hop(cur, dst);
+                if nxt == cur {
+                    continue; // unreachable (disconnected custom graphs)
+                }
+                let port = topo
+                    .neighbors(cur)
+                    .iter()
+                    .position(|&(v, _)| v == nxt)
+                    .expect("route table returned non-neighbor");
+                debug_assert!(port < NO_PORT as usize);
+                table.out_ports[dst * n + cur] = port as u16;
+            }
+        }
+        table
+    }
+
+    /// Output-port index at `cur` towards `dst` (`cur != dst`). O(1)
+    /// table lookup; panics (via debug assert) for unroutable pairs.
+    #[inline]
+    pub fn out_port(&self, cur: NodeId, dst: NodeId) -> usize {
+        debug_assert_ne!(cur, dst, "no output port towards self");
+        let p = self.out_ports[dst * self.nodes + cur];
+        debug_assert_ne!(p, NO_PORT, "no route {cur} -> {dst}");
+        p as usize
     }
 
     /// Next hop from `cur` towards `dst`. Dimension-order for mesh/torus,
@@ -147,6 +185,34 @@ mod tests {
                     // these regular graphs).
                     let len = rt.route_len(s, d);
                     assert_eq!(len, dist[d], "{s}->{d} on {:?}", t.kind());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_port_cache_matches_next_hop() {
+        let topos = vec![
+            Topology::mesh(4, 4).unwrap(),
+            Topology::torus(4, 4).unwrap(),
+            Topology::ring(9).unwrap(),
+            Topology::star(8).unwrap(),
+            Topology::fattree(3).unwrap(),
+        ];
+        for t in topos {
+            let rt = RouteTable::build(&t);
+            for s in 0..t.nodes() {
+                for d in 0..t.nodes() {
+                    if s == d {
+                        continue;
+                    }
+                    let port = rt.out_port(s, d);
+                    assert_eq!(
+                        t.neighbors(s)[port].0,
+                        rt.next_hop(s, d),
+                        "{s}->{d} on {:?}",
+                        t.kind()
+                    );
                 }
             }
         }

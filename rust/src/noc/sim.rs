@@ -18,14 +18,43 @@
 //! Determinism: routers and ports are iterated in fixed order, all moves
 //! are double-buffered within a cycle, and all randomness lives in the
 //! traffic generators (seeded).
+//!
+//! # Hot-loop layout (event-wheel rewrite)
+//!
+//! The cycle loop is flat and allocation-free in steady state:
+//!
+//! * **Buffers** — all (node, port, vc) input queues live in one
+//!   contiguous [`FlitQueues`] arena. Queue ids are dense:
+//!   `qbase[n] + port * vcs + vc`, with `qbase` the per-node prefix sum
+//!   of `(degree + 1) * vcs`. Credits and output-owner state use the
+//!   same indexing in flat arrays (`credits`, `owner`), and round-robin
+//!   pointers use the analogous per-port prefix (`pbase[n] + port`).
+//! * **Events** — in-flight flits and credit returns live in two
+//!   [`EventWheel`] calendar queues instead of unsorted `Vec`s that were
+//!   drained and reallocated every cycle. Push is O(1); the end-of-cycle
+//!   drain hands back the due bucket's storage, which is recycled.
+//! * **Routing** — the output port towards a destination is a single
+//!   table read ([`RouteTable::out_port`]), and the far-end input port of
+//!   every link is a precomputed reverse-port lookup
+//!   ([`Topology::reverse_port`]); the old code recomputed both with
+//!   linear neighbor scans per flit per cycle.
+//! * **Worklist** — per-node buffered-flit counts (`occ`) let the loop
+//!   skip idle routers outright: an empty router with an empty source
+//!   queue cannot allocate, traverse, or emit events, so skipping it is
+//!   exactly behavior-preserving.
+//!
+//! Behavior is pinned by differential golden tests against
+//! [`super::refsim::RefNocSim`], the retained pre-rewrite implementation:
+//! on fixed seeds both produce bit-identical [`SimReport`]s (see
+//! `tests/noc_golden.rs`).
 
 use std::collections::VecDeque;
 
-use super::router::{Flit, FlitKind, RouterState};
+use super::router::{Flit, FlitKind, FlitQueues};
 use super::routing::RouteTable;
 use super::topology::{NodeId, Topology};
 use crate::metrics::{Category, Metrics};
-use crate::sim::Cycle;
+use crate::sim::{Cycle, EventWheel};
 
 /// Microarchitectural NoC parameters (config defaults are FlooNoC-like).
 #[derive(Debug, Clone, Copy)]
@@ -90,31 +119,53 @@ pub struct SimReport {
     pub metrics: Metrics,
 }
 
+/// An in-flight flit scheduled to land in a downstream input buffer.
+#[derive(Debug, Clone, Copy)]
 struct Arrival {
-    at: Cycle,
     node: NodeId,
     port: usize,
     flit: Flit,
 }
 
+/// A buffer-slot credit on its way back upstream.
+#[derive(Debug, Clone, Copy)]
 struct CreditReturn {
-    at: Cycle,
     node: NodeId,
     out_port: usize,
     vc: usize,
 }
+
+/// Sentinel for an unallocated output (port, vc).
+const NO_OWNER: u32 = u32::MAX;
 
 /// The simulator.
 pub struct NocSim {
     topo: Topology,
     routes: RouteTable,
     params: NocParams,
-    routers: Vec<RouterState>,
+    /// All input buffers, flattened (see module docs for the layout).
+    bufs: FlitQueues,
+    /// credits[qbase[n] + out_port * vcs + vc] = free downstream slots.
+    credits: Vec<u32>,
+    /// owner[qbase[n] + out_port * vcs + vc] = `in_port * vcs + in_vc` of
+    /// the packet holding the output, or [`NO_OWNER`].
+    owner: Vec<u32>,
+    /// Round-robin arbitration pointer per (node, output port).
+    rr: Vec<u32>,
+    /// First queue id of each node (`(degree + 1) * vcs` queues per node).
+    qbase: Vec<usize>,
+    /// First port id of each node (`degree + 1` ports per node).
+    pbase: Vec<usize>,
+    /// Buffered flits per node — the active-node worklist: a node with no
+    /// buffered flits and an empty source queue is skipped entirely.
+    occ: Vec<usize>,
     /// Pending packet flits waiting at each source (unbounded source
     /// queue feeding the local injection port).
     inject_q: Vec<VecDeque<Flit>>,
-    arrivals: Vec<Arrival>,
-    credit_returns: Vec<CreditReturn>,
+    arrivals: EventWheel<Arrival>,
+    credit_returns: EventWheel<CreditReturn>,
+    /// Per-cycle scratch, reused across steps (sized `max_degree + 1`).
+    input_busy: Vec<bool>,
     packets: Vec<PacketStats>,
     now: Cycle,
     flit_hops: u64,
@@ -124,25 +175,38 @@ pub struct NocSim {
 impl NocSim {
     pub fn new(topo: Topology, params: NocParams) -> Self {
         let routes = RouteTable::build(&topo);
-        let routers = (0..topo.nodes())
-            .map(|n| {
-                let deg = topo.degree(n);
-                RouterState::new(deg + 1, deg + 1, params.vcs, params.buf_flits)
-            })
-            .collect();
-        let inject_q = (0..topo.nodes()).map(|_| VecDeque::new()).collect();
+        let nodes = topo.nodes();
+        let vcs = params.vcs;
+        let mut qbase = Vec::with_capacity(nodes);
+        let mut pbase = Vec::with_capacity(nodes);
+        let (mut q, mut p) = (0usize, 0usize);
+        for n in 0..nodes {
+            qbase.push(q);
+            pbase.push(p);
+            let ports = topo.degree(n) + 1;
+            q += ports * vcs;
+            p += ports;
+        }
+        let inject_q = (0..nodes).map(|_| VecDeque::new()).collect();
         NocSim {
-            topo,
-            routes,
-            params,
-            routers,
+            bufs: FlitQueues::new(q, params.buf_flits),
+            credits: vec![params.buf_flits as u32; q],
+            owner: vec![NO_OWNER; q],
+            rr: vec![0; p],
+            qbase,
+            pbase,
+            occ: vec![0; nodes],
             inject_q,
-            arrivals: Vec::new(),
-            credit_returns: Vec::new(),
+            arrivals: EventWheel::with_horizon(params.router_latency as usize + 2),
+            credit_returns: EventWheel::with_horizon(4),
+            input_busy: vec![false; topo.max_degree() + 1],
             packets: Vec::new(),
             now: 0,
             flit_hops: 0,
             delivered: 0,
+            topo,
+            routes,
+            params,
         }
     }
 
@@ -192,183 +256,166 @@ impl NocSim {
         id
     }
 
-    /// Input-port index at `to` for the link arriving from `from`.
-    fn in_port(&self, to: NodeId, from: NodeId) -> usize {
-        self.topo
-            .neighbors(to)
-            .iter()
-            .position(|&(v, _)| v == from)
-            .expect("link endpoints inconsistent")
-    }
-
     /// Advance one cycle.
     pub fn step(&mut self) {
-        let nodes = self.topo.nodes();
         let vcs = self.params.vcs;
+        let cap = self.params.buf_flits;
+        let now_next = self.now + 1;
+        let nodes = self.topo.nodes();
 
-        // 1. Local injection: move flits from source queues into the local
-        //    input port's VC buffer while space remains.
         for n in 0..nodes {
-            let local = self.topo.degree(n); // local input port index
-            while let Some(&flit) = self.inject_q[n].front() {
-                let buf = &mut self.routers[n].in_buf[local][flit.vc];
-                if buf.len() >= self.params.buf_flits {
-                    break;
-                }
-                buf.push_back(self.inject_q[n].pop_front().unwrap());
+            // Worklist: idle routers (no buffered flits, nothing to
+            // inject) can neither move flits nor change state — skip.
+            if self.occ[n] == 0 && self.inject_q[n].is_empty() {
+                continue;
             }
-        }
-
-        // 2. Switch allocation + traversal, double-buffered.
-        let mut new_arrivals: Vec<Arrival> = Vec::new();
-        let mut new_credits: Vec<CreditReturn> = Vec::new();
-        for n in 0..nodes {
             let deg = self.topo.degree(n);
             let ports_in = deg + 1;
-            let mut input_busy = vec![false; ports_in];
-            // Output ports in fixed order: links first, then ejection.
+            let qb = self.qbase[n];
+
+            // 1. Local injection: move flits from the source queue into
+            //    the local input port's VC buffer while space remains.
+            if !self.inject_q[n].is_empty() {
+                let local_q = qb + deg * vcs;
+                loop {
+                    let Some(&flit) = self.inject_q[n].front() else { break };
+                    let q = local_q + flit.vc;
+                    if self.bufs.len(q) >= cap {
+                        break;
+                    }
+                    let f = self.inject_q[n].pop_front().unwrap();
+                    self.bufs.push_back(q, f);
+                    self.occ[n] += 1;
+                }
+                if self.occ[n] == 0 {
+                    continue;
+                }
+            }
+
+            // 2. Switch allocation + traversal, double-buffered. Output
+            //    ports in fixed order: links first, then ejection.
+            self.input_busy[..ports_in].fill(false);
             for p_out in 0..=deg {
                 // 2a. VC allocation: head flits claim a free (p_out, vc).
                 for p_in in 0..ports_in {
                     for vc in 0..vcs {
-                        let Some(&flit) = self.routers[n].in_buf[p_in][vc].front() else {
+                        let Some(flit) = self.bufs.front(qb + p_in * vcs + vc) else {
                             continue;
                         };
                         if !flit.is_head {
                             continue; // body/tail follow the allocation
                         }
-                        let want = self.route_port(n, flit.dst, deg);
+                        let want = if flit.dst == n {
+                            deg
+                        } else {
+                            self.routes.out_port(n, flit.dst)
+                        };
                         if want != p_out {
                             continue;
                         }
-                        if self.routers[n].out_owner[p_out][vc].is_none() {
-                            self.routers[n].out_owner[p_out][vc] = Some((p_in, vc));
+                        let o = qb + p_out * vcs + vc;
+                        if self.owner[o] == NO_OWNER {
+                            self.owner[o] = (p_in * vcs + vc) as u32;
                         }
                     }
                 }
                 // 2b. Switch traversal: round-robin over VCs that own this
                 //     output; forward at most one flit per output port.
-                let rr0 = self.routers[n].rr[p_out];
+                let rr0 = self.rr[self.pbase[n] + p_out] as usize;
                 for k in 0..vcs {
                     let vc = (rr0 + k) % vcs;
-                    let Some((p_in, in_vc)) = self.routers[n].out_owner[p_out][vc] else {
-                        continue;
-                    };
-                    if input_busy[p_in] {
+                    let o = qb + p_out * vcs + vc;
+                    let own = self.owner[o];
+                    if own == NO_OWNER {
                         continue;
                     }
-                    let Some(&flit) = self.routers[n].in_buf[p_in][in_vc].front() else {
+                    let p_in = own as usize / vcs;
+                    let in_vc = own as usize % vcs;
+                    if self.input_busy[p_in] {
+                        continue;
+                    }
+                    let q = qb + p_in * vcs + in_vc;
+                    let Some(flit) = self.bufs.front(q) else {
                         continue;
                     };
                     // Only flits of the owning packet may use the slot.
-                    let owner_ok = {
-                        // The queue is FIFO per (port, vc); the owning
-                        // packet's flits are contiguous (wormhole), so the
-                        // front flit routed to this port belongs to it.
-                        let want = if flit.dst == n {
-                            deg
-                        } else {
-                            self.route_port(n, flit.dst, deg)
-                        };
-                        want == p_out
+                    // The queue is FIFO per (port, vc); the owning
+                    // packet's flits are contiguous (wormhole), so the
+                    // front flit routed to this port belongs to it.
+                    let want = if flit.dst == n {
+                        deg
+                    } else {
+                        self.routes.out_port(n, flit.dst)
                     };
-                    if !owner_ok {
+                    if want != p_out {
                         continue;
                     }
                     let is_ejection = p_out == deg;
-                    if !is_ejection && self.routers[n].credits[p_out][vc] == 0 {
+                    if !is_ejection && self.credits[o] == 0 {
                         continue;
                     }
                     // Commit the move.
-                    let flit = self.routers[n].in_buf[p_in][in_vc].pop_front().unwrap();
-                    input_busy[p_in] = true;
-                    self.routers[n].rr[p_out] = (vc + 1) % vcs;
+                    let flit = self.bufs.pop_front(q);
+                    self.occ[n] -= 1;
+                    self.input_busy[p_in] = true;
+                    self.rr[self.pbase[n] + p_out] = ((vc + 1) % vcs) as u32;
                     if flit.kind == FlitKind::Tail {
-                        self.routers[n].out_owner[p_out][vc] = None;
+                        self.owner[o] = NO_OWNER;
                     }
                     // Return a credit upstream for the buffer we freed
                     // (unless it was the local injection queue, which is
-                    // backpressured directly).
+                    // backpressured directly). Credits are indexed by the
+                    // upstream router's output port towards us — the
+                    // precomputed reverse port.
                     if p_in < deg {
-                        let (up, _) = self.topo.neighbors(n)[p_in];
-                        // Credits are indexed by the upstream router's
-                        // output port towards us == position of n in the
-                        // upstream neighbor list.
-                        let up_out_port = self.in_port(up, n);
-                        new_credits.push(CreditReturn {
-                            at: self.now + 1,
-                            node: up,
-                            out_port: up_out_port,
-                            vc: in_vc,
-                        });
+                        let up = self.topo.neighbor(n, p_in);
+                        let up_out = self.topo.reverse_port(n, p_in);
+                        self.credit_returns.push(
+                            now_next,
+                            CreditReturn { node: up, out_port: up_out, vc: in_vc },
+                        );
                     }
                     if is_ejection {
                         // Ejected at the local sink.
                         if flit.kind == FlitKind::Tail {
                             let p = &mut self.packets[flit.packet];
-                            p.ejected_at = Some(self.now + 1);
+                            p.ejected_at = Some(now_next);
                             self.delivered += 1;
                         }
                     } else {
-                        let (next, _) = self.topo.neighbors(n)[p_out];
-                        let dest_port = self.in_port(next, n);
-                        self.routers[n].credits[p_out][vc] -= 1;
+                        let next = self.topo.neighbor(n, p_out);
+                        let dest_port = self.topo.reverse_port(n, p_out);
+                        self.credits[o] -= 1;
                         self.flit_hops += 1;
-                        new_arrivals.push(Arrival {
-                            at: self.now + self.params.router_latency,
-                            node: next,
-                            port: dest_port,
-                            flit,
-                        });
+                        let at = (self.now + self.params.router_latency).max(now_next);
+                        self.arrivals.push(at, Arrival { node: next, port: dest_port, flit });
                     }
                 }
             }
         }
 
-        // 3. Apply arrivals whose time has come (including older ones).
-        self.arrivals.extend(new_arrivals);
-        self.credit_returns.extend(new_credits);
-        let now_next = self.now + 1;
-        let mut rest = Vec::with_capacity(self.arrivals.len());
-        for a in self.arrivals.drain(..) {
-            if a.at <= now_next {
-                self.routers[a.node].in_buf[a.port][a.flit.vc].push_back(a.flit);
-            } else {
-                rest.push(a);
-            }
+        // 3. Deliver events due at the end of this cycle.
+        let due = self.arrivals.take_due(now_next);
+        for &(_, a) in &due {
+            let q = self.qbase[a.node] + a.port * vcs + a.flit.vc;
+            self.bufs.push_back(q, a.flit);
+            self.occ[a.node] += 1;
         }
-        self.arrivals = rest;
-        let mut rest = Vec::with_capacity(self.credit_returns.len());
-        for c in self.credit_returns.drain(..) {
-            if c.at <= now_next {
-                self.routers[c.node].credits[c.out_port][c.vc] += 1;
-            } else {
-                rest.push(c);
-            }
+        self.arrivals.recycle(due);
+        let due = self.credit_returns.take_due(now_next);
+        for &(_, c) in &due {
+            self.credits[self.qbase[c.node] + c.out_port * vcs + c.vc] += 1;
         }
-        self.credit_returns = rest;
+        self.credit_returns.recycle(due);
 
         self.now = now_next;
-    }
-
-    /// Output port at `n` towards `dst` (deg = ejection if dst == n).
-    fn route_port(&self, n: NodeId, dst: NodeId, deg: usize) -> usize {
-        if dst == n {
-            return deg;
-        }
-        let next = self.routes.next_hop(n, dst);
-        self.topo
-            .neighbors(n)
-            .iter()
-            .position(|&(v, _)| v == next)
-            .expect("route table returned non-neighbor")
     }
 
     /// True when no flits remain anywhere.
     pub fn drained(&self) -> bool {
         self.inject_q.iter().all(VecDeque::is_empty)
             && self.arrivals.is_empty()
-            && self.routers.iter().all(|r| r.occupancy() == 0)
+            && self.occ.iter().all(|&o| o == 0)
     }
 
     /// Run until drained or `max_cycles`, then report.
@@ -559,5 +606,42 @@ mod tests {
             (r.cycles, r.flit_hops, r.avg_latency.to_bits())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn single_cycle_router_latency_still_drains() {
+        // router_latency = 1 exercises the wheel's push-then-drain-same-
+        // slot path (arrivals land one cycle out, like credits).
+        let params = NocParams { router_latency: 1, ..NocParams::default() };
+        let mut sim = NocSim::new(Topology::mesh(3, 3).unwrap(), params);
+        let mut rng = crate::sim::Rng::new(21);
+        for _ in 0..50 {
+            let s = rng.below(9);
+            let mut d = rng.below(9);
+            while d == s {
+                d = rng.below(9);
+            }
+            sim.inject(s, d, 96);
+        }
+        let rep = sim.run_to_drain(100_000);
+        assert_eq!(rep.delivered, 50);
+        assert!(sim.drained());
+    }
+
+    #[test]
+    fn single_vc_wormhole_drains() {
+        let params = NocParams { vcs: 1, ..NocParams::default() };
+        let mut sim = NocSim::new(Topology::mesh(4, 4).unwrap(), params);
+        let mut rng = crate::sim::Rng::new(5);
+        for _ in 0..80 {
+            let s = rng.below(16);
+            let mut d = rng.below(16);
+            while d == s {
+                d = rng.below(16);
+            }
+            sim.inject(s, d, 128);
+        }
+        let rep = sim.run_to_drain(200_000);
+        assert_eq!(rep.delivered, 80);
     }
 }

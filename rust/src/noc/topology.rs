@@ -28,6 +28,11 @@ pub struct Topology {
     nodes: usize,
     /// adj[n] = (neighbor, link_id), sorted by neighbor.
     adj: Vec<Vec<(NodeId, usize)>>,
+    /// rev[n][p] = position of `n` in `adj[v]` where `v = adj[n][p].0`:
+    /// the input-port index at the far end of each outgoing link,
+    /// precomputed so the simulator's per-flit lookups are O(1) table
+    /// reads instead of linear neighbor scans.
+    rev: Vec<Vec<usize>>,
     links: usize,
 }
 
@@ -52,7 +57,20 @@ impl Topology {
         for l in &mut adj {
             l.sort_unstable();
         }
-        Ok(Topology { kind, nodes, adj, links: edges.len() })
+        let rev = (0..nodes)
+            .map(|n| {
+                adj[n]
+                    .iter()
+                    .map(|&(v, _)| {
+                        adj[v]
+                            .iter()
+                            .position(|&(u, _)| u == n)
+                            .expect("adjacency lists are symmetric by construction")
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(Topology { kind, nodes, adj, rev, links: edges.len() })
     }
 
     /// w×h 2-D mesh (node id = y*w + x).
@@ -155,6 +173,20 @@ impl Topology {
     /// Neighbors of `n` with their link ids.
     pub fn neighbors(&self, n: NodeId) -> &[(NodeId, usize)] {
         &self.adj[n]
+    }
+
+    /// Neighbor reached from `n` through its `port`-th link.
+    #[inline]
+    pub fn neighbor(&self, n: NodeId, port: usize) -> NodeId {
+        self.adj[n][port].0
+    }
+
+    /// Input-port index at the far end of `n`'s `port`-th link: the
+    /// position of `n` in that neighbor's adjacency list. O(1) — the
+    /// reverse-port map is precomputed at build time.
+    #[inline]
+    pub fn reverse_port(&self, n: NodeId, port: usize) -> usize {
+        self.rev[n][port]
     }
 
     /// Router radix (degree) of `n`, excluding the local port.
@@ -303,6 +335,30 @@ mod tests {
         assert!(Topology::custom(3, &[(0, 1), (1, 0)]).is_err());
         let t = Topology::custom(3, &[(0, 1)]).unwrap();
         assert!(!t.is_connected());
+    }
+
+    #[test]
+    fn reverse_port_round_trips_on_all_topologies() {
+        let topos = vec![
+            Topology::mesh(4, 3).unwrap(),
+            Topology::torus(4, 4).unwrap(),
+            Topology::ring(7).unwrap(),
+            Topology::star(9).unwrap(),
+            Topology::fattree(3).unwrap(),
+            Topology::custom(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (1, 3)]).unwrap(),
+        ];
+        for t in topos {
+            for n in 0..t.nodes() {
+                for p in 0..t.degree(n) {
+                    let (v, lid) = t.neighbors(n)[p];
+                    assert_eq!(t.neighbor(n, p), v);
+                    let rp = t.reverse_port(n, p);
+                    // The reverse port at v leads back to n over the same
+                    // physical link.
+                    assert_eq!(t.neighbors(v)[rp], (n, lid), "{:?} {n}->{v}", t.kind());
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,128 +1,204 @@
 //! PJRT engine: HLO-text loading, compilation and execution.
+//!
+//! The real engine rides on the external `xla` crate, which the offline
+//! build image does not ship; it is therefore compiled only with the
+//! `pjrt` cargo feature (which additionally requires adding the `xla`
+//! dependency to Cargo.toml). The default build substitutes a stub with
+//! the same API whose constructor reports the runtime as unavailable —
+//! callers like `Runtime::open_default()` then fail cleanly at open
+//! time, and every test that needs artifacts skips or is feature-gated.
 
-use anyhow::{bail, Context};
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{bail, Context};
 
-use crate::Result;
+    use crate::Result;
 
-use super::{ArtifactSpec, ShapeSpec, Tensor};
+    use super::super::{ArtifactSpec, ShapeSpec, Tensor};
 
-/// A PJRT CPU client plus the HLO-text loader.
-pub struct Engine {
-    client: xla::PjRtClient,
-}
-
-impl Engine {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client })
+    /// A PJRT CPU client plus the HLO-text loader.
+    pub struct Engine {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one artifact. HLO *text* is the interchange format:
-    /// jax >= 0.5 emits protos with 64-bit instruction ids which
-    /// xla_extension 0.5.1 rejects; the text parser reassigns ids.
-    pub fn load(&self, spec: &ArtifactSpec) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.hlo_path
-                .to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {:?}", spec.hlo_path))?,
-        )
-        .with_context(|| format!("parsing HLO text {:?}", spec.hlo_path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {:?}", spec.name))?;
-        Ok(Executable {
-            name: spec.name.clone(),
-            inputs: spec.inputs.clone(),
-            outputs: spec.outputs.clone(),
-            exe,
-        })
-    }
-}
-
-/// A compiled artifact, ready to execute with shape-checked f32 tensors.
-pub struct Executable {
-    name: String,
-    inputs: Vec<ShapeSpec>,
-    outputs: Vec<ShapeSpec>,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    pub fn input_specs(&self) -> &[ShapeSpec] {
-        &self.inputs
-    }
-
-    pub fn output_specs(&self) -> &[ShapeSpec] {
-        &self.outputs
-    }
-
-    /// Execute with host tensors; returns the decomposed output tuple
-    /// (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != self.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.inputs.len(),
-                inputs.len()
-            );
+    impl Engine {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine { client })
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (t, spec)) in inputs.iter().zip(&self.inputs).enumerate() {
-            if t.dims() != spec.dims.as_slice() {
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one artifact. HLO *text* is the interchange
+        /// format: jax >= 0.5 emits protos with 64-bit instruction ids
+        /// which xla_extension 0.5.1 rejects; the text parser reassigns
+        /// ids.
+        pub fn load(&self, spec: &ArtifactSpec) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path {:?}", spec.hlo_path))?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", spec.hlo_path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {:?}", spec.name))?;
+            Ok(Executable {
+                name: spec.name.clone(),
+                inputs: spec.inputs.clone(),
+                outputs: spec.outputs.clone(),
+                exe,
+            })
+        }
+    }
+
+    /// A compiled artifact, ready to execute with shape-checked f32
+    /// tensors.
+    pub struct Executable {
+        name: String,
+        inputs: Vec<ShapeSpec>,
+        outputs: Vec<ShapeSpec>,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Executable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        pub fn input_specs(&self) -> &[ShapeSpec] {
+            &self.inputs
+        }
+
+        pub fn output_specs(&self) -> &[ShapeSpec] {
+            &self.outputs
+        }
+
+        /// Execute with host tensors; returns the decomposed output tuple
+        /// (aot.py lowers with `return_tuple=True`).
+        pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            if inputs.len() != self.inputs.len() {
                 bail!(
-                    "{}: input {i} shape {:?} != spec {:?}",
+                    "{}: expected {} inputs, got {}",
                     self.name,
-                    t.dims(),
-                    spec.dims
+                    self.inputs.len(),
+                    inputs.len()
                 );
             }
-            let dims_i64: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(t.data());
-            let lit = if dims_i64.len() == 1 {
-                lit
-            } else {
-                lit.reshape(&dims_i64)
-                    .with_context(|| format!("{}: reshaping input {i}", self.name))?
-            };
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, (t, spec)) in inputs.iter().zip(&self.inputs).enumerate() {
+                if t.dims() != spec.dims.as_slice() {
+                    bail!(
+                        "{}: input {i} shape {:?} != spec {:?}",
+                        self.name,
+                        t.dims(),
+                        spec.dims
+                    );
+                }
+                let dims_i64: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(t.data());
+                let lit = if dims_i64.len() == 1 {
+                    lit
+                } else {
+                    lit.reshape(&dims_i64)
+                        .with_context(|| format!("{}: reshaping input {i}", self.name))?
+                };
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.name))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("{}: fetching result", self.name))?;
+            let outs = tuple
+                .to_tuple()
+                .with_context(|| format!("{}: decomposing result tuple", self.name))?;
+            if outs.len() != self.outputs.len() {
+                bail!(
+                    "{}: expected {} outputs, got {}",
+                    self.name,
+                    self.outputs.len(),
+                    outs.len()
+                );
+            }
+            outs.into_iter()
+                .zip(&self.outputs)
+                .map(|(lit, spec)| {
+                    let data = lit
+                        .to_vec::<f32>()
+                        .with_context(|| format!("{}: reading output", self.name))?;
+                    Tensor::new(spec.dims.clone(), data)
+                })
+                .collect()
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("{}: fetching result", self.name))?;
-        let outs = tuple
-            .to_tuple()
-            .with_context(|| format!("{}: decomposing result tuple", self.name))?;
-        if outs.len() != self.outputs.len() {
-            bail!(
-                "{}: expected {} outputs, got {}",
-                self.name,
-                self.outputs.len(),
-                outs.len()
-            );
-        }
-        outs.into_iter()
-            .zip(&self.outputs)
-            .map(|(lit, spec)| {
-                let data = lit
-                    .to_vec::<f32>()
-                    .with_context(|| format!("{}: reading output", self.name))?;
-                Tensor::new(spec.dims.clone(), data)
-            })
-            .collect()
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use anyhow::bail;
+
+    use crate::Result;
+
+    use super::super::{ArtifactSpec, ShapeSpec, Tensor};
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: archytas was built without the `pjrt` feature \
+         (the offline image ships no `xla` crate); timing simulation, DSE and the \
+         compiler stack work without it";
+
+    /// API-compatible stand-in for the PJRT engine; construction fails.
+    pub struct Engine {
+        _private: (),
+    }
+
+    impl Engine {
+        pub fn cpu() -> Result<Self> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn load(&self, _spec: &ArtifactSpec) -> Result<Executable> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    /// Never constructed in stub builds; exists so signatures line up.
+    pub struct Executable {
+        name: String,
+        inputs: Vec<ShapeSpec>,
+        outputs: Vec<ShapeSpec>,
+    }
+
+    impl Executable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        pub fn input_specs(&self) -> &[ShapeSpec] {
+            &self.inputs
+        }
+
+        pub fn output_specs(&self) -> &[ShapeSpec] {
+            &self.outputs
+        }
+
+        pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Engine, Executable};
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::{Engine, Executable};

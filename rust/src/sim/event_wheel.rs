@@ -1,0 +1,214 @@
+//! Bucketed event wheel (calendar queue) for bounded-delay event storage.
+//!
+//! The heap-based [`super::EventQueue`] is the general-purpose scheduler:
+//! O(log n) per operation, arbitrary horizons. The hot simulation loops
+//! (NoC flit arrivals and credit returns, DRAM wakeups) have a different
+//! profile: every cycle schedules many events a *small, bounded* number of
+//! cycles into the future, and every cycle drains everything due. For
+//! that shape a calendar queue is O(1) per push and O(due) per drain with
+//! no per-event allocation:
+//!
+//! * `slots` is a power-of-two ring of buckets; an event at absolute
+//!   cycle `t` lives in bucket `t & mask`.
+//! * Pushing appends to the bucket, so events scheduled for the same
+//!   cycle pop in scheduling order — the FIFO tie-break every
+//!   determinism test relies on (same contract as `EventQueue`).
+//! * [`EventWheel::take_due`] hands the caller the bucket's backing `Vec`
+//!   (zero copy in the common case); [`EventWheel::recycle`] returns the
+//!   storage so steady-state stepping performs no allocation at all.
+//! * Events beyond the horizon simply land in a bucket a lap early; each
+//!   entry carries its absolute cycle and `take_due` retains entries for
+//!   later laps. Laps cost one compare per co-resident event and are
+//!   impossible when the horizon covers the maximum delay (the NoC sizes
+//!   its wheel from `router_latency`, so its fast path never laps).
+
+use super::Cycle;
+
+/// A bucketed calendar queue over absolute cycle timestamps.
+#[derive(Debug)]
+pub struct EventWheel<T> {
+    /// Power-of-two ring of buckets; each entry keeps its absolute cycle.
+    slots: Vec<Vec<(Cycle, T)>>,
+    mask: u64,
+    /// Total queued events across all buckets.
+    count: usize,
+    /// Recycled bucket storage (see [`EventWheel::recycle`]).
+    free: Vec<Vec<(Cycle, T)>>,
+}
+
+impl<T> EventWheel<T> {
+    /// Build a wheel whose ring covers at least `min_horizon` cycles
+    /// (rounded up to a power of two, minimum 2). Events scheduled
+    /// further out than the horizon are still correct — they wait in
+    /// their bucket across laps — but a horizon covering the maximum
+    /// delay keeps `take_due` on the swap fast path.
+    pub fn with_horizon(min_horizon: usize) -> Self {
+        let n = min_horizon.max(2).next_power_of_two();
+        EventWheel {
+            slots: (0..n).map(|_| Vec::new()).collect(),
+            mask: (n - 1) as u64,
+            count: 0,
+            free: Vec::new(),
+        }
+    }
+
+    /// Number of buckets in the ring.
+    pub fn horizon(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Schedule `item` at absolute cycle `at`. O(1) amortized.
+    #[inline]
+    pub fn push(&mut self, at: Cycle, item: T) {
+        let s = (at & self.mask) as usize;
+        self.slots[s].push((at, item));
+        self.count += 1;
+    }
+
+    /// Remove and return every event scheduled exactly at `at`, in the
+    /// order it was pushed. Events sharing the bucket but due on a later
+    /// lap are retained. The returned `Vec` is backing storage on loan —
+    /// hand it back via [`EventWheel::recycle`] to keep stepping
+    /// allocation-free.
+    pub fn take_due(&mut self, at: Cycle) -> Vec<(Cycle, T)> {
+        let s = (at & self.mask) as usize;
+        let mut due = self.free.pop().unwrap_or_default();
+        debug_assert!(due.is_empty());
+        if self.slots[s].iter().all(|&(t, _)| t == at) {
+            // Fast path (also taken for an empty bucket): the whole
+            // bucket is due — swap it out wholesale.
+            std::mem::swap(&mut self.slots[s], &mut due);
+        } else {
+            // Lap collision: partition, preserving order of the
+            // retained later-lap entries.
+            let mut keep = self.free.pop().unwrap_or_default();
+            for ev in self.slots[s].drain(..) {
+                debug_assert!(ev.0 >= at, "event at {} stuck in the past (now {at})", ev.0);
+                if ev.0 == at {
+                    due.push(ev);
+                } else {
+                    keep.push(ev);
+                }
+            }
+            std::mem::swap(&mut self.slots[s], &mut keep);
+            keep.clear();
+            self.free.push(keep);
+        }
+        self.count -= due.len();
+        due
+    }
+
+    /// Return bucket storage obtained from [`EventWheel::take_due`].
+    pub fn recycle(&mut self, mut storage: Vec<(Cycle, T)>) {
+        storage.clear();
+        self.free.push(storage);
+    }
+
+    /// Total number of queued events.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn horizon_rounds_to_power_of_two() {
+        assert_eq!(EventWheel::<u32>::with_horizon(5).horizon(), 8);
+        assert_eq!(EventWheel::<u32>::with_horizon(8).horizon(), 8);
+        assert_eq!(EventWheel::<u32>::with_horizon(0).horizon(), 2);
+    }
+
+    #[test]
+    fn fifo_within_a_cycle() {
+        let mut w = EventWheel::with_horizon(8);
+        w.push(3, "a");
+        w.push(3, "b");
+        w.push(3, "c");
+        let due = w.take_due(3);
+        let got: Vec<_> = due.iter().map(|&(_, x)| x).collect();
+        assert_eq!(got, ["a", "b", "c"]);
+        assert!(w.is_empty());
+        w.recycle(due);
+    }
+
+    #[test]
+    fn due_only_at_exact_cycle() {
+        let mut w = EventWheel::with_horizon(8);
+        w.push(2, 1u32);
+        w.push(5, 2u32);
+        assert!(w.take_due(1).is_empty());
+        assert_eq!(w.take_due(2).len(), 1);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.take_due(5)[0].1, 2);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn push_then_take_same_cycle() {
+        // The NoC pushes credit returns at `now + 1` and drains that same
+        // slot at the end of the step.
+        let mut w = EventWheel::with_horizon(4);
+        w.push(7, "x");
+        assert_eq!(w.take_due(7).len(), 1);
+    }
+
+    #[test]
+    fn wrap_around_reuses_buckets() {
+        let mut w = EventWheel::with_horizon(4); // 4 buckets
+        w.push(1, "lap0");
+        let d = w.take_due(1);
+        assert_eq!(d[0].1, "lap0");
+        w.recycle(d);
+        w.push(5, "lap1"); // same bucket as cycle 1
+        assert!(w.take_due(4).is_empty());
+        assert_eq!(w.take_due(5)[0].1, "lap1");
+    }
+
+    #[test]
+    fn lap_collision_partitions_and_retains_order() {
+        let mut w = EventWheel::with_horizon(4); // bucket = t & 3
+        w.push(2, "now");
+        w.push(6, "next-lap-a"); // same bucket (6 & 3 == 2)
+        w.push(10, "lap-after"); // same bucket again
+        w.push(2, "now-2");
+        let due = w.take_due(2);
+        let got: Vec<_> = due.iter().map(|&(_, x)| x).collect();
+        assert_eq!(got, ["now", "now-2"]);
+        assert_eq!(w.len(), 2);
+        w.recycle(due);
+        let due = w.take_due(6);
+        assert_eq!(due[0].1, "next-lap-a");
+        assert_eq!(w.take_due(10)[0].1, "lap-after");
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn recycled_storage_is_reused() {
+        let mut w = EventWheel::with_horizon(4);
+        w.push(1, 9u64);
+        let d = w.take_due(1);
+        let cap_before = d.capacity();
+        w.recycle(d);
+        w.push(2, 10u64);
+        let d = w.take_due(2);
+        assert!(d.capacity() >= cap_before);
+        assert_eq!(d[0].1, 10);
+    }
+
+    #[test]
+    fn far_future_events_survive_many_laps() {
+        let mut w = EventWheel::with_horizon(2);
+        w.push(1000, 42u32);
+        for t in 0..1000 {
+            assert!(w.take_due(t).is_empty(), "t={t}");
+        }
+        assert_eq!(w.take_due(1000)[0].1, 42);
+    }
+}

@@ -3,13 +3,19 @@
 //!
 //! * [`EventQueue`] — a deterministic time-ordered queue (ties broken by
 //!   insertion sequence, so identical runs replay identically).
+//! * [`EventWheel`] — a bucketed calendar queue for the bounded-delay hot
+//!   loops (NoC flit arrivals / credit returns, DRAM wakeups): O(1) push,
+//!   O(due) drain, reusable bucket storage, same FIFO tie-break contract
+//!   as [`EventQueue`].
 //! * [`Rng`] — xoshiro256** PRNG with uniform/normal helpers; every
 //!   stochastic component seeds one of these, never OS entropy.
 
 mod event;
+mod event_wheel;
 mod rng;
 
 pub use event::EventQueue;
+pub use event_wheel::EventWheel;
 pub use rng::Rng;
 
 /// Simulated time in clock cycles of the component's own clock domain.

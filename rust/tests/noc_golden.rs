@@ -1,0 +1,189 @@
+//! Differential golden tests for the NoC event-wheel rewrite.
+//!
+//! `archytas::noc::refsim::RefNocSim` is the pre-rewrite simulator kept
+//! verbatim (nested `VecDeque` buffers, per-cycle `Vec` draining, linear
+//! neighbor scans). These tests drive it and the flat event-wheel
+//! `NocSim` with identical seeded workloads and require **bit-identical**
+//! reports and per-packet timelines — the refactor must change the clock
+//! speed of the simulator, never its answers.
+
+use archytas::noc::refsim::RefNocSim;
+use archytas::noc::{traffic, NocParams, NocSim, SimReport, Topology};
+use archytas::sim::{Cycle, Rng};
+
+fn assert_reports_identical(a: &SimReport, b: &SimReport, tag: &str) {
+    assert_eq!(a.cycles, b.cycles, "{tag}: cycles");
+    assert_eq!(a.delivered, b.delivered, "{tag}: delivered");
+    assert_eq!(a.in_flight, b.in_flight, "{tag}: in_flight");
+    assert_eq!(
+        a.avg_latency.to_bits(),
+        b.avg_latency.to_bits(),
+        "{tag}: avg_latency {} vs {}",
+        a.avg_latency,
+        b.avg_latency
+    );
+    assert_eq!(
+        a.p99_latency.to_bits(),
+        b.p99_latency.to_bits(),
+        "{tag}: p99_latency {} vs {}",
+        a.p99_latency,
+        b.p99_latency
+    );
+    assert_eq!(a.flit_hops, b.flit_hops, "{tag}: flit_hops");
+    assert_eq!(
+        a.throughput.to_bits(),
+        b.throughput.to_bits(),
+        "{tag}: throughput {} vs {}",
+        a.throughput,
+        b.throughput
+    );
+    assert_eq!(a.metrics, b.metrics, "{tag}: metrics");
+}
+
+fn assert_packets_identical(sim: &NocSim, refsim: &RefNocSim, tag: &str) {
+    assert_eq!(sim.packets().len(), refsim.packets().len(), "{tag}: packet count");
+    for (i, (p, r)) in sim.packets().iter().zip(refsim.packets()).enumerate() {
+        assert_eq!(
+            (p.src, p.dst, p.flits, p.injected_at, p.ejected_at, p.hops),
+            (r.src, r.dst, r.flits, r.injected_at, r.ejected_at, r.hops),
+            "{tag}: packet {i}"
+        );
+    }
+}
+
+/// Burst workload: everything injected at cycle 0.
+fn burst_case(topo: &Topology, params: NocParams, seed: u64, packets: usize, tag: &str) {
+    let n = topo.nodes();
+    let mut sim = NocSim::new(topo.clone(), params);
+    let mut rsim = RefNocSim::new(topo.clone(), params);
+    let mut rng = Rng::new(seed);
+    for _ in 0..packets {
+        let s = rng.below(n);
+        let mut d = rng.below(n);
+        while d == s {
+            d = rng.below(n);
+        }
+        let bytes = 1 + rng.below(200);
+        sim.inject(s, d, bytes);
+        rsim.inject(s, d, bytes);
+    }
+    let a = sim.run_to_drain(1_000_000);
+    let b = rsim.run_to_drain(1_000_000);
+    assert_eq!(a.delivered, packets, "{tag}: all delivered");
+    assert_reports_identical(&a, &b, tag);
+    assert_packets_identical(&sim, &rsim, tag);
+    assert_eq!(sim.drained(), rsim.drained(), "{tag}: drained");
+}
+
+/// Open-loop workload: seeded pattern traffic over time.
+fn openloop_case(
+    topo: &Topology,
+    params: NocParams,
+    pattern: traffic::Pattern,
+    rate: f64,
+    cycles: Cycle,
+    seed: u64,
+    tag: &str,
+) {
+    let n = topo.nodes();
+    let mut rng = Rng::new(seed);
+    let schedule = traffic::generate(pattern, n, rate, 64, cycles, &mut rng);
+    let mut sim = NocSim::new(topo.clone(), params);
+    let mut rsim = RefNocSim::new(topo.clone(), params);
+    let a = traffic::drive(&mut sim, schedule.clone(), 2_000_000);
+    let b = archytas::noc::refsim::drive(&mut rsim, schedule, 2_000_000);
+    assert_reports_identical(&a, &b, tag);
+    assert_packets_identical(&sim, &rsim, tag);
+}
+
+#[test]
+fn golden_mesh_burst_matches_reference() {
+    let topo = Topology::mesh(4, 4).unwrap();
+    for seed in [1, 7, 99] {
+        burst_case(&topo, NocParams::default(), seed, 250, &format!("mesh4x4 seed {seed}"));
+    }
+}
+
+#[test]
+fn golden_torus_burst_matches_reference() {
+    let topo = Topology::torus(4, 4).unwrap();
+    for seed in [3, 11] {
+        burst_case(&topo, NocParams::default(), seed, 250, &format!("torus4x4 seed {seed}"));
+    }
+}
+
+#[test]
+fn golden_irregular_topologies_match_reference() {
+    burst_case(&Topology::fattree(3).unwrap(), NocParams::default(), 5, 120, "fattree3");
+    burst_case(&Topology::ring(8).unwrap(), NocParams::default(), 6, 100, "ring8");
+    burst_case(&Topology::star(9).unwrap(), NocParams::default(), 8, 100, "star9");
+}
+
+#[test]
+fn golden_mesh_openloop_uniform_matches_reference() {
+    let topo = Topology::mesh(8, 8).unwrap();
+    openloop_case(
+        &topo,
+        NocParams::default(),
+        traffic::Pattern::Uniform,
+        0.08,
+        400,
+        42,
+        "mesh8x8 uniform",
+    );
+}
+
+#[test]
+fn golden_torus_openloop_hotspot_matches_reference() {
+    let topo = Topology::torus(4, 4).unwrap();
+    openloop_case(
+        &topo,
+        NocParams::default(),
+        traffic::Pattern::Hotspot { hot_permille: 300 },
+        0.15,
+        500,
+        17,
+        "torus4x4 hotspot",
+    );
+}
+
+#[test]
+fn golden_nondefault_params_match_reference() {
+    // Single VC, shallow buffers, 1-cycle routers: stresses wormhole
+    // blocking, credit starvation and the wheel's same-slot drain path.
+    let params = NocParams { vcs: 1, buf_flits: 2, router_latency: 1, ..NocParams::default() };
+    burst_case(&Topology::mesh(4, 4).unwrap(), params, 23, 150, "mesh4x4 tight");
+    let params = NocParams { vcs: 3, buf_flits: 8, router_latency: 5, ..NocParams::default() };
+    burst_case(&Topology::torus(4, 4).unwrap(), params, 29, 150, "torus4x4 wide");
+}
+
+#[test]
+fn golden_incremental_stepping_matches_reference() {
+    // run_for + late injections exercise mid-flight state equivalence,
+    // not just end-of-drain equivalence.
+    let topo = Topology::mesh(4, 4).unwrap();
+    let mut sim = NocSim::new(topo.clone(), NocParams::default());
+    let mut rsim = RefNocSim::new(topo, NocParams::default());
+    let mut rng = Rng::new(13);
+    for round in 0..5 {
+        for _ in 0..30 {
+            let s = rng.below(16);
+            let mut d = rng.below(16);
+            while d == s {
+                d = rng.below(16);
+            }
+            let bytes = 16 + rng.below(120);
+            sim.inject(s, d, bytes);
+            rsim.inject(s, d, bytes);
+        }
+        sim.run_for(50);
+        rsim.run_for(50);
+        let a = sim.report();
+        let b = rsim.report();
+        assert_reports_identical(&a, &b, &format!("round {round}"));
+    }
+    let a = sim.run_to_drain(1_000_000);
+    let b = rsim.run_to_drain(1_000_000);
+    assert_reports_identical(&a, &b, "final drain");
+    assert_packets_identical(&sim, &rsim, "final drain");
+}

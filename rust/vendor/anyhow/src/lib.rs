@@ -1,0 +1,255 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline build image cannot reach crates.io, so this shim provides
+//! exactly the surface archytas uses, with matching semantics:
+//!
+//! * [`Error`] — a context chain over an erased root cause. `{}` displays
+//!   the outermost message only; `{:#}` joins the whole chain with `": "`
+//!   (outermost first), like real `anyhow`.
+//! * [`Result`] — `Result<T, Error>` with a defaulted error parameter.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (for
+//!   both std errors and [`Error`] itself) and on `Option`.
+//! * `From<E>` for every `E: std::error::Error + Send + Sync + 'static`,
+//!   so `?` conversions work unchanged.
+//!
+//! Deliberately not implemented (unused in this repo): downcasting,
+//! backtraces, `Error::source` chains beyond message capture.
+
+use std::convert::Infallible;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message chain: `chain[0]` is the outermost context, the last
+/// entry is the root cause. Like real `anyhow::Error`, this type does
+/// **not** implement `std::error::Error` (that is what makes the blanket
+/// `From` impl coherent).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> + '_ {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Capture the typed error's own source chain as messages.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Conversion helper so [`Context`] works uniformly for `Result<T, E>`
+/// with `E` a std error *or* already an [`Error`]. The two impls do not
+/// overlap because [`Error`] does not implement `std::error::Error`.
+pub trait IntoShimError {
+    fn into_shim_error(self) -> Error;
+}
+
+impl IntoShimError for Error {
+    fn into_shim_error(self) -> Error {
+        self
+    }
+}
+
+impl<E> IntoShimError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_shim_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` extension for `Result` and
+/// `Option`, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: IntoShimError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_shim_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_shim_error().context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(msg: &str) -> Result<()> {
+        bail!("root: {msg}")
+    }
+
+    #[test]
+    fn display_outer_only_alternate_full_chain() {
+        let e = fails("x").unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root: x");
+        assert_eq!(e.root_cause(), "root: x");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<()> = fails("y").context("ctx");
+        assert_eq!(format!("{:#}", r.unwrap_err()), "ctx: root: y");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        let e = "nope".parse::<i32>().with_context(|| "bad flag").unwrap_err();
+        assert!(format!("{e:#}").starts_with("bad flag: "));
+    }
+
+    #[test]
+    fn ensure_both_arms() {
+        fn check(v: usize) -> Result<()> {
+            ensure!(v < 10);
+            ensure!(v != 3, "three is right out (got {v})");
+            Ok(())
+        }
+        assert!(check(2).is_ok());
+        assert!(check(3).unwrap_err().to_string().contains("three"));
+        assert!(check(11).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = fails("deep").unwrap_err().context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("top"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("root: deep"));
+    }
+}
