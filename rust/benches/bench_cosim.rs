@@ -1,0 +1,78 @@
+//! E-COSIM — coordinator co-simulation engine throughput.
+//!
+//! The event-driven calendar engine (`coordinator::cosim`) vs the
+//! retained one-pass list scheduler (`coordinator::refexec::cosim_ref`)
+//! on identical lowered programs, over both bundled fabric configs.
+//! Prints scheduled steps/second for both engines — the CI perf-smoke
+//! line — and panics if any report field diverges (the same golden
+//! contract `tests/cosim_golden.rs` enforces). Note the list scheduler is
+//! a single O(n) pass, so it is the throughput *ceiling*; the calendar
+//! engine buys incremental re-simulation and event-stream interleaving,
+//! and this table tracks how much of the ceiling it keeps.
+
+#[path = "util.rs"]
+mod util;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::compiler::FabricProgram;
+use archytas::coordinator::{cosim, cosim_ref, ExecReport};
+use archytas::fabric::Fabric;
+use archytas::testutil::bundled_fabric;
+use archytas::workloads;
+
+fn golden_check(a: &ExecReport, b: &ExecReport, tag: &str) {
+    let ok = a.bit_identical(b);
+    println!("  golden match: {}", if ok { "ok" } else { "MISMATCH" });
+    assert!(ok, "{tag}: event-driven co-sim diverged from the list scheduler");
+}
+
+fn engine_row(fabric: &Fabric, prog: &FabricProgram, tag: &str) {
+    let steps = prog.steps.len();
+    let iters = (200_000 / steps.max(1)).clamp(3, 200);
+    let mut ev_rep = None;
+    let ev = util::time_avg(iters, || {
+        ev_rep = Some(cosim(fabric, prog).unwrap());
+    });
+    let mut ref_rep = None;
+    let rf = util::time_avg(iters, || {
+        ref_rep = Some(cosim_ref(fabric, prog).unwrap());
+    });
+    let ev_sps = steps as f64 / ev;
+    let rf_sps = steps as f64 / rf;
+    println!("\n-- cosim hot loop: {tag} ({steps} steps, {iters} iters) --");
+    println!(
+        "  event-driven:   {:>10}/run  =  {:>12.0} steps/sec",
+        util::fmt_time(ev),
+        ev_sps
+    );
+    println!(
+        "  list scheduler: {:>10}/run  =  {:>12.0} steps/sec",
+        util::fmt_time(rf),
+        rf_sps
+    );
+    println!("  relative: {:.2}x of the list-scheduler ceiling", ev_sps / rf_sps);
+    golden_check(&ev_rep.unwrap(), &ref_rep.unwrap(), tag);
+}
+
+fn main() {
+    util::banner(
+        "E-COSIM",
+        "coordinator co-sim: event calendar vs list scheduler (golden-checked)",
+    );
+    for cfg in ["edge16.toml", "homogeneous_npu.toml"] {
+        let fabric = bundled_fabric(cfg);
+        let mlp = workloads::mlp(32, 256, &[512, 256, 128], 10, 1).unwrap();
+        let vit = workloads::vit(&workloads::VitParams::default(), 2).unwrap();
+        for (wname, g) in [("mlp", &mlp), ("vit", &vit)] {
+            for strategy in [MapStrategy::RoundRobin, MapStrategy::Greedy] {
+                let m = map_graph(g, &fabric, strategy, Precision::Int8).unwrap();
+                let prog = lower(g, &fabric, &m).unwrap();
+                engine_row(&fabric, &prog, &format!("{cfg}/{wname}/{strategy:?}"));
+            }
+        }
+    }
+    println!("\nexpected shape: both engines report identical timing/energy; the");
+    println!("calendar engine trades some single-pass speed for incremental re-sim.");
+}

@@ -1,20 +1,61 @@
-//! Timing co-simulation of a lowered FabricProgram.
+//! Timing co-simulation of a lowered FabricProgram — event-driven, on the
+//! shared [`crate::sim::EventWheel`] calendar (via [`Calendar`]).
 //!
-//! Resource model:
-//! * each tile executes one `Exec` at a time (per-tile FIFO by program
-//!   order);
-//! * `Load`s share HBM bandwidth (serialized on the HBM port) but overlap
-//!   with compute;
-//! * `Transfer`s use the analytic NoC transport model (latency + energy),
-//!   serialized per (src, dst) tile pair;
-//! * a step starts when its dependencies are done AND its resource is
-//!   free — classic resource-constrained list scheduling, which is what
-//!   a doorbell-driven fabric run looks like at this abstraction level.
+//! # Resource model (event-driven engine)
+//!
+//! Steps are *events*; tiles, the HBM port and (src, dst) transfer paths
+//! are *resources* with in-order wake queues:
+//!
+//! * every resource serves its steps strictly in program order (the same
+//!   contract the retained list scheduler in [`super::refexec`] enforces
+//!   implicitly by its one-pass loop): each tile executes one `Exec` at a
+//!   time, `Load`s serialize on the single HBM port but overlap with
+//!   compute, `Transfer`s serialize per (src, dst) tile pair on the
+//!   analytic NoC transport model;
+//! * a step *starts* at `max(ready, free)` — the instant its last
+//!   dependency completes (`ready`) or its resource's previous occupant
+//!   finishes (`free`), whichever is later. Both instants are completion
+//!   events, so every start happens while draining a completion batch and
+//!   the engine never scans for runnable work;
+//! * a step's *completion* is one calendar event: it frees the resource
+//!   (waking the next queued step if its dependencies are met) and
+//!   decrements each successor's pending-dependency count (waking a
+//!   successor whose resource is idle and whose queue turn has come);
+//! * the calendar jumps between completion times — no per-cycle stepping,
+//!   so a 5000-cycle HBM feed costs one event, and tile/NoC/DRAM event
+//!   streams can interleave in the same calendar as the rest of the
+//!   simulation stack.
+//!
+//! Step durations come from the start-time-aware fabric hooks
+//! ([`Fabric::feed_at`], [`Fabric::transport_at`],
+//! [`crate::fabric::Tile::execute_at`]): today those ignore the start
+//! cycle (so the engine is bit-identical to the list scheduler — the
+//! differential golden tests in `tests/cosim_golden.rs` enforce it), but
+//! they are the seam where congestion-, DVFS- or thermal-aware cost
+//! models plug in without another engine rewrite.
+//!
+//! Link resources are keyed *sparsely* — a hash over the (src, dst)
+//! pairs the program actually uses — instead of the reference's dense
+//! `nt * nt` occupancy vector (8 B·nt²: 32 MB at 2k tiles, before a
+//! single step runs). Memory here is O(active pairs), and the map is
+//! touched only while building the resource table, never while stepping.
+//!
+//! Why event-driven at all, when the one-pass list scheduler is already
+//! O(n)? Because a calendar admits what a single pass cannot: incremental
+//! re-simulation (re-enqueue only invalidated steps), batched admission
+//! of new programs mid-flight (the serving path), and interleaving with
+//! the flit-level NoC / bank-level DRAM event streams — the ROADMAP's
+//! parallel-stepping and million-request serving items all want this
+//! substrate.
+
+use std::collections::VecDeque;
+
+use anyhow::ensure;
 
 use crate::compiler::{FabricProgram, Step};
 use crate::fabric::Fabric;
 use crate::metrics::{Category, Metrics};
-use crate::sim::Cycle;
+use crate::sim::{Calendar, Cycle};
 use crate::Result;
 
 /// Co-simulation result.
@@ -54,63 +95,263 @@ impl ExecReport {
             active.iter().sum::<f64>() / active.len() as f64
         }
     }
+
+    /// Field-by-field bit identity with another report — THE golden
+    /// contract between the event-driven engine and the retained
+    /// [`super::refexec`] list scheduler (energy compared by f64 bit
+    /// pattern, per category and in total). The differential tests and
+    /// `bench_cosim` all gate on this one definition, so a future
+    /// `ExecReport` field only needs to be added here to stay covered.
+    pub fn bit_identical(&self, other: &ExecReport) -> bool {
+        let (ba, bb) = (self.metrics.breakdown(), other.metrics.breakdown());
+        self.cycles == other.cycles
+            && self.step_done == other.step_done
+            && self.tile_busy == other.tile_busy
+            && self.transfer_cycles == other.transfer_cycles
+            && self.exec_steps == other.exec_steps
+            && self.metrics == other.metrics
+            && self.metrics.total_energy_pj().to_bits()
+                == other.metrics.total_energy_pj().to_bits()
+            && ba.len() == bb.len()
+            && ba
+                .iter()
+                .zip(&bb)
+                .all(|((ca, ea), (cb, eb))| ca == cb && ea.to_bits() == eb.to_bits())
+    }
 }
 
-/// Run the timing co-simulation.
-pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
-    let n = prog.steps.len();
-    let mut done = vec![0 as Cycle; n];
-    let mut tile_free = vec![0 as Cycle; fabric.tile_count()];
-    let mut tile_busy = vec![0 as Cycle; fabric.tile_count()];
-    let mut hbm_free: Cycle = 0;
-    // Per-(src tile, dst tile) transfer-path occupancy, flat-indexed by
-    // the dense pair id `from * tile_count + to` (same trick as the NoC's
-    // precomputed reverse-port map) instead of hashing tuples. O(tiles^2)
-    // memory — 8 B * nt^2, fine for the <=256-tile fabrics the configs
-    // describe; revisit (sparse or per-src maps) beyond ~2k tiles.
-    let nt = fabric.tile_count();
-    let mut link_free: Vec<Cycle> = vec![0; nt * nt];
-    let mut total = Metrics::new();
-    let mut transfer_cycles: Cycle = 0;
-    let mut exec_steps = 0usize;
+/// The event-driven co-simulation engine state.
+struct Engine<'a> {
+    fabric: &'a Fabric,
+    prog: &'a FabricProgram,
+    /// Resource id serving each step (tile | HBM port | link).
+    res_of: Vec<usize>,
+    /// Per-resource wake queue of step ids, in program order.
+    queue: Vec<VecDeque<usize>>,
+    /// Finish time of the last step started on each resource.
+    res_free: Vec<Cycle>,
+    /// Resource currently occupied by a running step.
+    res_busy: Vec<bool>,
+    /// Unresolved dependency count per step.
+    pending: Vec<u32>,
+    /// Max completion time over resolved dependencies, per step.
+    ready_at: Vec<Cycle>,
+    /// Successor adjacency, CSR over dependency edges.
+    succ_off: Vec<usize>,
+    succ: Vec<u32>,
+    /// Completion time per step.
+    done: Vec<Cycle>,
+    /// Per-step cost (cycles zeroed), folded into the report totals in
+    /// program order so the energy f64 additions replay the reference
+    /// scheduler's exact sequence — bit-identical energy accumulators.
+    step_cost: Vec<Metrics>,
+    tile_busy: Vec<Cycle>,
+    transfer_cycles: Cycle,
+    exec_steps: usize,
+    completed: usize,
+}
 
-    for (i, step) in prog.steps.iter().enumerate() {
-        let ready = step.deps().iter().map(|&d| done[d]).max().unwrap_or(0);
-        match step {
+impl<'a> Engine<'a> {
+    fn build(fabric: &'a Fabric, prog: &'a FabricProgram) -> Self {
+        let n = prog.steps.len();
+        let nt = fabric.tile_count();
+        // Resource ids: 0..nt = tiles, nt = the HBM port, nt+1.. = links,
+        // allocated sparsely per active (src, dst) pair.
+        let hbm_res = nt;
+        let mut link_ids: std::collections::HashMap<(usize, usize), usize> =
+            std::collections::HashMap::new();
+        let mut n_res = nt + 1;
+        let mut res_of = Vec::with_capacity(n);
+        for step in &prog.steps {
+            let r = match step {
+                Step::Load { .. } => hbm_res,
+                Step::Exec { tile, .. } => *tile,
+                Step::Transfer { from, to, .. } => *link_ids
+                    .entry((*from, *to))
+                    .or_insert_with(|| {
+                        let id = n_res;
+                        n_res += 1;
+                        id
+                    }),
+            };
+            res_of.push(r);
+        }
+        let mut queue = vec![VecDeque::new(); n_res];
+        for (i, &r) in res_of.iter().enumerate() {
+            queue[r].push_back(i);
+        }
+        // Successor CSR + pending counts (duplicate dep edges are kept on
+        // both sides, so the counts stay balanced).
+        let mut succ_off = vec![0usize; n + 1];
+        for s in &prog.steps {
+            for &d in s.deps() {
+                succ_off[d + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            succ_off[i + 1] += succ_off[i];
+        }
+        let mut succ = vec![0u32; succ_off[n]];
+        let mut cursor: Vec<usize> = succ_off[..n].to_vec();
+        let mut pending = vec![0u32; n];
+        for (i, s) in prog.steps.iter().enumerate() {
+            pending[i] = s.deps().len() as u32;
+            for &d in s.deps() {
+                succ[cursor[d]] = i as u32;
+                cursor[d] += 1;
+            }
+        }
+        Engine {
+            fabric,
+            prog,
+            res_of,
+            queue,
+            res_free: vec![0; n_res],
+            res_busy: vec![false; n_res],
+            pending,
+            ready_at: vec![0; n],
+            succ_off,
+            succ,
+            done: vec![0; n],
+            step_cost: vec![Metrics::new(); n],
+            tile_busy: vec![0; nt],
+            transfer_cycles: 0,
+            exec_steps: 0,
+            completed: 0,
+        }
+    }
+
+    /// Start step `i` on its (idle) resource: price it with the
+    /// start-time-aware cost hooks, occupy the resource, and return the
+    /// completion time.
+    fn start(&mut self, i: usize) -> Result<Cycle> {
+        let (fabric, prog) = (self.fabric, self.prog);
+        let r = self.res_of[i];
+        debug_assert!(!self.res_busy[r] && self.pending[i] == 0);
+        let start = self.ready_at[i].max(self.res_free[r]);
+        let dur = match &prog.steps[i] {
             Step::Load { tile, bytes, .. } => {
-                let cost = fabric.feed(*tile, *bytes);
-                let start = ready.max(hbm_free);
-                let finish = start + cost.cycles;
-                hbm_free = finish;
-                done[i] = finish;
-                transfer_cycles += cost.cycles;
-                total.absorb_parallel(&cost.with_cycles(0));
+                let cost = fabric.feed_at(*tile, *bytes, start);
+                let cyc = cost.cycles;
+                self.transfer_cycles += cyc;
+                self.step_cost[i] = cost.with_cycles(0);
+                cyc
             }
             Step::Transfer { from, to, bytes, .. } => {
                 let src = fabric.tiles[*from].node;
                 let dst = fabric.tiles[*to].node;
-                let cost = fabric.transport(src, dst, *bytes);
-                let key = *from * nt + *to;
-                let start = ready.max(link_free[key]);
-                let finish = start + cost.cycles;
-                link_free[key] = finish;
-                done[i] = finish;
-                transfer_cycles += cost.cycles;
-                total.absorb_parallel(&cost.with_cycles(0));
+                let cost = fabric.transport_at(src, dst, *bytes, start);
+                let cyc = cost.cycles;
+                self.transfer_cycles += cyc;
+                self.step_cost[i] = cost.with_cycles(0);
+                cyc
             }
             Step::Exec { tile, compute, precision, .. } => {
-                let cost = fabric.tiles[*tile].execute(compute, *precision)?;
-                let start = ready.max(tile_free[*tile]);
-                let finish = start + cost.metrics.cycles;
-                tile_free[*tile] = finish;
-                tile_busy[*tile] += cost.metrics.cycles;
-                done[i] = finish;
-                exec_steps += 1;
-                total.absorb_parallel(&cost.metrics.with_cycles(0));
+                let cost = fabric.tiles[*tile].execute_at(compute, *precision, start)?;
+                let cyc = cost.metrics.cycles;
+                self.tile_busy[*tile] += cyc;
+                self.exec_steps += 1;
+                self.step_cost[i] = cost.metrics.with_cycles(0);
+                cyc
+            }
+        };
+        let finish = start + dur;
+        self.res_free[r] = finish;
+        self.res_busy[r] = true;
+        Ok(finish)
+    }
+
+    /// If resource `r`'s next queued step is dependency-ready, start it.
+    /// Returns `Some((step, finish))` when a step launched.
+    fn wake_head(&mut self, r: usize) -> Result<Option<(usize, Cycle)>> {
+        if self.res_busy[r] {
+            return Ok(None);
+        }
+        let Some(&h) = self.queue[r].front() else {
+            return Ok(None);
+        };
+        if self.pending[h] != 0 {
+            return Ok(None);
+        }
+        self.queue[r].pop_front();
+        let finish = self.start(h)?;
+        Ok(Some((h, finish)))
+    }
+}
+
+/// Run the event-driven timing co-simulation.
+pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
+    let n = prog.steps.len();
+    let mut e = Engine::build(fabric, prog);
+    let mut cal: Calendar<usize> = Calendar::with_horizon(256);
+
+    // Seed: launch every resource whose first queued step has no deps.
+    for r in 0..e.queue.len() {
+        if let Some((i, finish)) = e.wake_head(r)? {
+            cal.push(finish, i);
+        }
+    }
+
+    // Drain completion batches in time order; same-cycle launches append
+    // to the live batch so zero-duration steps complete without another
+    // calendar round-trip. `batch` is reusable scratch (the wheel's own
+    // storage is recycled right after copying out the step ids).
+    let mut batch: Vec<usize> = Vec::new();
+    while let Some((t, due)) = cal.take_next() {
+        batch.clear();
+        batch.extend(due.iter().map(|&(_, i)| i));
+        cal.recycle(due);
+        let mut k = 0;
+        while k < batch.len() {
+            let i = batch[k];
+            k += 1;
+            e.done[i] = t;
+            e.completed += 1;
+            // Free the resource and wake its next queued step, then
+            // resolve successors and wake any whose resource-queue turn
+            // has come. (An idle resource never holds back a dep-ready
+            // head between events, so `wake_head` at both event kinds
+            // covers every launch point.)
+            let r = e.res_of[i];
+            e.res_busy[r] = false;
+            if let Some((j, finish)) = e.wake_head(r)? {
+                if finish == t {
+                    batch.push(j);
+                } else {
+                    cal.push(finish, j);
+                }
+            }
+            for s in e.succ_off[i]..e.succ_off[i + 1] {
+                let j = e.succ[s] as usize;
+                e.pending[j] -= 1;
+                if e.ready_at[j] < t {
+                    e.ready_at[j] = t;
+                }
+                if e.pending[j] == 0 {
+                    if let Some((j2, finish)) = e.wake_head(e.res_of[j])? {
+                        if finish == t {
+                            batch.push(j2);
+                        } else {
+                            cal.push(finish, j2);
+                        }
+                    }
+                }
             }
         }
     }
-    let makespan = done.iter().copied().max().unwrap_or(0);
+    ensure!(
+        e.completed == n,
+        "co-sim stalled: {} of {n} steps completed (cyclic or dangling deps?)",
+        e.completed
+    );
+
+    let makespan = e.done.iter().copied().max().unwrap_or(0);
+    // Fold per-step costs in program order: the same absorb sequence the
+    // reference list scheduler performs, so energy bits match exactly.
+    let mut total = Metrics::new();
+    for c in &e.step_cost {
+        total.absorb_parallel(c);
+    }
     total.cycles = makespan;
     // Fabric-level leakage over the episode.
     total.add_energy(
@@ -120,10 +361,10 @@ pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
     Ok(ExecReport {
         cycles: makespan,
         metrics: total,
-        tile_busy,
-        step_done: done,
-        transfer_cycles,
-        exec_steps,
+        tile_busy: e.tile_busy,
+        step_done: e.done,
+        transfer_cycles: e.transfer_cycles,
+        exec_steps: e.exec_steps,
     })
 }
 
@@ -131,8 +372,8 @@ pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
 mod tests {
     use super::*;
     use crate::accel::Precision;
-    use crate::compiler::mapper::{map_graph, MapStrategy};
     use crate::compiler::lowering::lower;
+    use crate::compiler::mapper::{map_graph, MapStrategy};
     use crate::config::FabricConfig;
     use crate::workloads;
 
@@ -209,5 +450,14 @@ mod tests {
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.metrics.total_energy_pj().to_bits(),
                    b.metrics.total_energy_pj().to_bits());
+    }
+
+    #[test]
+    fn empty_program_reports_zero() {
+        let f = fabric();
+        let r = cosim(&f, &FabricProgram::default()).unwrap();
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.exec_steps, 0);
+        assert!(r.step_done.is_empty());
     }
 }

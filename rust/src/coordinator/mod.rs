@@ -1,12 +1,16 @@
 //! L3 coordinator: the runtime that drives the Scalable Compute Fabric.
 //!
-//! Two halves, mirroring how GVSoC/DRAMSys separate function from timing
-//! (DESIGN.md §3):
+//! Three halves, mirroring how GVSoC/DRAMSys separate function from
+//! timing (DESIGN.md §3):
 //!
-//! * [`exec`] — **timing**: dependency-driven co-simulation of a lowered
-//!   [`crate::compiler::FabricProgram`] over the fabric's tile / NoC /
-//!   HBM models (overlapping transfers with compute, per-tile
-//!   serialization, HBM bandwidth sharing).
+//! * [`exec`] — **timing**: event-driven co-simulation of a lowered
+//!   [`crate::compiler::FabricProgram`] on the shared simulation calendar
+//!   (steps as events; tiles, the HBM port and (src, dst) links as
+//!   resources with in-order wake queues), overlapping transfers with
+//!   compute exactly as a doorbell-driven fabric run would.
+//! * [`refexec`] — the retained pre-rewrite list scheduler; differential
+//!   golden tests pin the event-driven engine to its bit-exact answers
+//!   (the `noc::refsim` pattern).
 //! * [`serve`] — **function + orchestration**: a leader thread batches
 //!   inference requests from worker threads (std::mpsc) and executes the
 //!   AOT-compiled PJRT artifacts for bit-exact numerics.
@@ -15,7 +19,9 @@
 //! numbers, the co-simulator for latency/energy.
 
 pub mod exec;
+pub mod refexec;
 pub mod serve;
 
 pub use exec::{cosim, ExecReport};
+pub use refexec::cosim_ref;
 pub use serve::{BatchServer, BatchStats, Request as ServeRequest};

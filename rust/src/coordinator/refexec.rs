@@ -1,0 +1,146 @@
+//! Reference timing co-simulation: the pre-rewrite one-pass list
+//! scheduler, kept verbatim (the `noc::refsim` pattern).
+//!
+//! [`super::exec::cosim`] is the event-driven engine that replaced this
+//! loop; `cosim_ref` here is the retained original, and the differential
+//! golden tests (`tests/cosim_golden.rs`) plus `benches/bench_cosim.rs`
+//! require the two to emit **bit-identical** [`ExecReport`]s — makespan,
+//! per-tile busy cycles, per-step completion times and energy bit
+//! patterns — across workloads, map strategies and both bundled fabric
+//! configs. The rewrite may change the clock speed and the memory shape
+//! of the simulator, never its answers.
+//!
+//! Resource model (shared contract with the event-driven engine):
+//! * each tile executes one `Exec` at a time (per-tile FIFO by program
+//!   order);
+//! * `Load`s share HBM bandwidth (serialized on the HBM port) but overlap
+//!   with compute;
+//! * `Transfer`s use the analytic NoC transport model (latency + energy),
+//!   serialized per (src, dst) tile pair;
+//! * a step starts when its dependencies are done AND its resource is
+//!   free — classic resource-constrained list scheduling, which is what
+//!   a doorbell-driven fabric run looks like at this abstraction level.
+
+use crate::compiler::{FabricProgram, Step};
+use crate::fabric::Fabric;
+use crate::metrics::{Category, Metrics};
+use crate::sim::Cycle;
+use crate::Result;
+
+use super::exec::ExecReport;
+
+/// Run the reference list-scheduler co-simulation (pre-rewrite code).
+pub fn cosim_ref(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
+    let n = prog.steps.len();
+    let mut done = vec![0 as Cycle; n];
+    let mut tile_free = vec![0 as Cycle; fabric.tile_count()];
+    let mut tile_busy = vec![0 as Cycle; fabric.tile_count()];
+    let mut hbm_free: Cycle = 0;
+    // Per-(src tile, dst tile) transfer-path occupancy, flat-indexed by
+    // the dense pair id `from * tile_count + to`. O(tiles^2) memory —
+    // kept as-is in the reference; the event-driven engine keys link
+    // resources sparsely instead.
+    let nt = fabric.tile_count();
+    let mut link_free: Vec<Cycle> = vec![0; nt * nt];
+    let mut total = Metrics::new();
+    let mut transfer_cycles: Cycle = 0;
+    let mut exec_steps = 0usize;
+
+    for (i, step) in prog.steps.iter().enumerate() {
+        let ready = step.deps().iter().map(|&d| done[d]).max().unwrap_or(0);
+        match step {
+            Step::Load { tile, bytes, .. } => {
+                let cost = fabric.feed(*tile, *bytes);
+                let start = ready.max(hbm_free);
+                let finish = start + cost.cycles;
+                hbm_free = finish;
+                done[i] = finish;
+                transfer_cycles += cost.cycles;
+                total.absorb_parallel(&cost.with_cycles(0));
+            }
+            Step::Transfer { from, to, bytes, .. } => {
+                let src = fabric.tiles[*from].node;
+                let dst = fabric.tiles[*to].node;
+                let cost = fabric.transport(src, dst, *bytes);
+                let key = *from * nt + *to;
+                let start = ready.max(link_free[key]);
+                let finish = start + cost.cycles;
+                link_free[key] = finish;
+                done[i] = finish;
+                transfer_cycles += cost.cycles;
+                total.absorb_parallel(&cost.with_cycles(0));
+            }
+            Step::Exec { tile, compute, precision, .. } => {
+                let cost = fabric.tiles[*tile].execute(compute, *precision)?;
+                let start = ready.max(tile_free[*tile]);
+                let finish = start + cost.metrics.cycles;
+                tile_free[*tile] = finish;
+                tile_busy[*tile] += cost.metrics.cycles;
+                done[i] = finish;
+                exec_steps += 1;
+                total.absorb_parallel(&cost.metrics.with_cycles(0));
+            }
+        }
+    }
+    let makespan = done.iter().copied().max().unwrap_or(0);
+    total.cycles = makespan;
+    // Fabric-level leakage over the episode.
+    total.add_energy(
+        Category::Leakage,
+        makespan as f64 * fabric.tile_count() as f64 * 0.5,
+    );
+    Ok(ExecReport {
+        cycles: makespan,
+        metrics: total,
+        tile_busy,
+        step_done: done,
+        transfer_cycles,
+        exec_steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Precision;
+    use crate::compiler::lowering::lower;
+    use crate::compiler::mapper::{map_graph, MapStrategy};
+    use crate::config::FabricConfig;
+    use crate::coordinator::cosim;
+    use crate::workloads;
+
+    fn fabric() -> Fabric {
+        Fabric::build(
+            FabricConfig::from_toml(
+                "[noc]\nwidth = 3\nheight = 3\n\
+                 [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn reference_still_schedules() {
+        let g = workloads::mlp(8, 64, &[64, 32], 10, 1).unwrap();
+        let f = fabric();
+        let m = map_graph(&g, &f, MapStrategy::Greedy, Precision::Int8).unwrap();
+        let p = lower(&g, &f, &m).unwrap();
+        let r = cosim_ref(&f, &p).unwrap();
+        assert!(r.cycles > 0);
+        assert!(r.step_done.iter().all(|&d| d <= r.cycles));
+    }
+
+    #[test]
+    fn event_engine_matches_reference_on_mlp() {
+        let g = workloads::mlp(8, 64, &[64, 32], 10, 1).unwrap();
+        let f = fabric();
+        for s in [MapStrategy::RoundRobin, MapStrategy::Greedy] {
+            let m = map_graph(&g, &f, s, Precision::Int8).unwrap();
+            let p = lower(&g, &f, &m).unwrap();
+            let a = cosim(&f, &p).unwrap();
+            let b = cosim_ref(&f, &p).unwrap();
+            assert!(a.bit_identical(&b), "{s:?}: engines diverged");
+        }
+    }
+}

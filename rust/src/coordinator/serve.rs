@@ -68,7 +68,9 @@ fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN latency (clock skew pathologies) must not panic
+    // the serving report path (same fix as Metrics::breakdown).
+    v.sort_by(f64::total_cmp);
     v[((v.len() - 1) as f64 * q).round() as usize]
 }
 

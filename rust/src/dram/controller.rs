@@ -6,13 +6,23 @@
 //! stage may reorder row hits ahead of misses within a bounded window
 //! per bank. Global constraints: one command per cycle on the command
 //! bus, tRRD + tFAW between activates, one data burst at a time on the
-//! data bus. The simulator event-jumps: when nothing is issuable it
-//! advances straight to the earliest cycle anything becomes legal.
+//! data bus.
+//!
+//! The simulator is event-driven on the shared [`Calendar`] wheel:
+//! every bank with queued work keeps a *ready event* at the earliest
+//! cycle it could plausibly issue; a stall jumps straight to the wheel's
+//! next event instead of re-scanning every bank (the old `next_wakeup`
+//! loop was O(banks) per stall). Ready times are computed per bank from
+//! that bank's own state, so they can be optimistic about the *global*
+//! constraints (command/data bus, tRRD/tFAW) — that is safe because
+//! global constraints only ever delay legality: an early wake simply
+//! retries `try_issue` and re-arms at the freshly computed ready time
+//! (early-wake-retry, per ROADMAP).
 
 use std::collections::VecDeque;
 
 use crate::metrics::{Category, Metrics};
-use crate::sim::Cycle;
+use crate::sim::{Calendar, Cycle};
 
 use super::bank::{Bank, BankState};
 use super::pim::{PimCommand, PimConfig};
@@ -144,6 +154,8 @@ pub struct DramSim {
     pub req_done: Vec<Option<Cycle>>,
     /// Last 4 ACT timestamps (tFAW window, tRRD).
     recent_acts: ActWindow,
+    /// Per-bank ready events (payload = bank id); see the module docs.
+    wakes: Calendar<usize>,
     last_col: Cycle,
     now: Cycle,
     energy: Metrics,
@@ -168,6 +180,9 @@ impl DramSim {
             req_enqueued: Vec::new(),
             req_done: Vec::new(),
             recent_acts: ActWindow::default(),
+            // Horizon spans the common timing windows (tRCD/tRP/tRC are
+            // tens of cycles); longer PIM occupancies just lap the ring.
+            wakes: Calendar::with_horizon(64),
             last_col: 0,
             now: 0,
             energy: Metrics::new(),
@@ -246,9 +261,9 @@ impl DramSim {
         self.queues[bank].iter().take(FR_WINDOW).any(|sc| sc.row == row)
     }
 
-    /// Issue the best command at `now` if any; returns false if nothing
-    /// was issuable this cycle (caller jumps time).
-    fn try_issue(&mut self) -> bool {
+    /// Issue the best command at `now` if any; returns the issuing bank,
+    /// or `None` if nothing was issuable this cycle (caller jumps time).
+    fn try_issue(&mut self) -> Option<usize> {
         // Pass 1 (FR): oldest ready column/PIM command on an open row,
         // searched within each bank's reorder window.
         let mut best: Option<(u64, usize, usize)> = None; // (seq, bank, qi)
@@ -291,7 +306,7 @@ impl DramSim {
                 self.banks[b].issue_rd(self.now, &self.t)
             };
             self.complete(sc.req, done);
-            return true;
+            return Some(b);
         }
         // Pass 2 (FCFS): oldest front entry drives PRE or ACT.
         let act_at = self.act_legal_at();
@@ -328,9 +343,9 @@ impl DramSim {
                 self.banks[b].row_misses += 1;
                 self.energy.add_energy(Category::Dram, self.t.e_pre_pj);
             }
-            return true;
+            return Some(b);
         }
-        false
+        None
     }
 
     fn complete(&mut self, req: usize, done: Cycle) {
@@ -341,48 +356,90 @@ impl DramSim {
         }
     }
 
-    /// Earliest future cycle at which anything could become legal.
-    fn next_wakeup(&self) -> Cycle {
-        let mut best = Cycle::MAX;
-        let act_at = self.act_legal_at();
-        for b in 0..self.banks.len() {
-            let Some(front) = self.queues[b].front() else { continue };
-            let bank = &self.banks[b];
-            let t = match bank.state {
-                BankState::Active(open) => {
-                    let hit_in_window =
-                        self.queues[b].iter().take(FR_WINDOW).any(|sc| sc.row == open);
-                    if hit_in_window {
-                        let col = bank.col_ok_at(&self.t);
-                        col.max(self.last_col + self.t.t_burst)
-                    } else if open != front.row {
-                        bank.pre_ok_at(&self.t)
-                    } else {
-                        bank.col_ok_at(&self.t)
-                    }
+    /// Earliest future cycle at which bank `b` could become issuable,
+    /// given its own state and the global constraints *as of now*. `None`
+    /// when the bank has no queued work. Later global events (ACTs, data
+    /// bursts elsewhere) can only push real legality later, never
+    /// earlier, so arming a wake at this time is always safe — at worst
+    /// the wake fires early, `try_issue` declines, and the bank re-arms.
+    fn bank_ready_at(&self, b: usize) -> Option<Cycle> {
+        let front = self.queues[b].front()?;
+        let bank = &self.banks[b];
+        let t = match bank.state {
+            BankState::Active(open) => {
+                let hit_in_window =
+                    self.queues[b].iter().take(FR_WINDOW).any(|sc| sc.row == open);
+                if hit_in_window {
+                    let col = bank.col_ok_at(&self.t);
+                    col.max(self.last_col + self.t.t_burst)
+                } else if open != front.row {
+                    bank.pre_ok_at(&self.t)
+                } else {
+                    bank.col_ok_at(&self.t)
                 }
-                BankState::Idle => bank.act_ok_at(&self.t).max(act_at),
-            };
-            best = best.min(t.max(self.now + 1));
+            }
+            BankState::Idle => bank.act_ok_at(&self.t).max(self.act_legal_at()),
+        };
+        Some(t.max(self.now + 1))
+    }
+
+    /// Re-arm bank `b`'s ready event if it still has queued work.
+    fn arm_wake(&mut self, b: usize) {
+        if let Some(t) = self.bank_ready_at(b) {
+            self.wakes.push(t, b);
         }
-        best
     }
 
     /// Run until all requests complete; returns stats.
     pub fn run_to_drain(&mut self) -> DramStats {
+        // Arm a ready event for every bank with queued work. Duplicate
+        // or stale wakes (e.g. left over from a previous episode) are
+        // consumed below as harmless early retries.
+        for b in 0..self.queues.len() {
+            self.arm_wake(b);
+        }
         while self.queued > 0 {
-            if self.try_issue() {
-                // command bus: next command at now+1
+            if let Some(b) = self.try_issue() {
+                // Command bus: next command at now + 1. The issue changed
+                // bank b's state (and consumed one of its commands), so
+                // its previously armed ready time is void — re-arm.
                 self.now += 1;
+                self.arm_wake(b);
             } else {
-                // Event-jump straight to the earliest legal cycle. A full
-                // EventWheel port (per-bank ready events instead of the
-                // O(banks) next_wakeup scan) is a ROADMAP open item; a
-                // decorative push/pop through the wheel here would cost
-                // work without making anything event-driven.
-                let wake = self.next_wakeup();
-                debug_assert!(wake > self.now, "no progress at {}", self.now);
-                self.now = wake;
+                // Stall: pop per-bank ready events until one is *ripe* —
+                // the bank's freshly recomputed ready time still equals
+                // the wake's timestamp. Ready times only move later as
+                // state accrues (bus traffic, ACT windows), so a wake
+                // armed under older state can only be early, never late;
+                // an early wake just re-arms at the fresh time without
+                // advancing the clock (early-wake-retry). Time therefore
+                // advances exactly at the minimum of the banks' *current*
+                // ready times — the same jump targets the old O(banks)
+                // `next_wakeup` scan produced — and the FR-FCFS arbiter
+                // only reruns once a wake is ripe, so a stall costs
+                // O(due) bank-local checks instead of a full rescan per
+                // stale wake. The wheel invariant (every non-empty bank
+                // keeps a pending wake) guarantees the pops terminate:
+                // each unripe pop re-arms strictly later, converging on
+                // the stall state's true minimum.
+                loop {
+                    let (t, due) = self
+                        .wakes
+                        .take_next()
+                        .expect("stalled with queued work but no pending bank wake");
+                    let ripe = due.iter().any(|&(_, b)| self.bank_ready_at(b) == Some(t));
+                    if ripe {
+                        // bank_ready_at clamps to now + 1, so t > now.
+                        self.now = t;
+                    }
+                    for &(_, b) in &due {
+                        self.arm_wake(b);
+                    }
+                    self.wakes.recycle(due);
+                    if ripe {
+                        break;
+                    }
+                }
             }
         }
         // Completion time of the last data burst may exceed `now`.

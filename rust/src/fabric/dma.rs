@@ -21,6 +21,13 @@ impl Default for Dma {
 }
 
 impl Dma {
+    /// Start-time-aware transfer hook (event-driven co-sim contract):
+    /// delegates to [`Dma::transfer`] bit-for-bit today; `_start` is the
+    /// seam for TCDM-contention-aware staging models.
+    pub fn transfer_at(&self, bytes: u64, _start: Cycle) -> Metrics {
+        self.transfer(bytes)
+    }
+
     /// Cost of one transfer of `bytes`.
     pub fn transfer(&self, bytes: u64) -> Metrics {
         let mut m = Metrics::new();

@@ -27,6 +27,7 @@ use crate::accel::{Accelerator, CpuCore, CrossbarNvm, DigitalNpu, Neuromorphic, 
 use crate::config::FabricConfig;
 use crate::metrics::{Area, Category, Metrics};
 use crate::noc::{NodeId, Topology};
+use crate::sim::Cycle;
 use crate::Result;
 
 /// A built fabric instance: topology + placed tiles + memory.
@@ -115,10 +116,26 @@ impl Fabric {
         m
     }
 
+    /// Start-time-aware transport hook for the event-driven co-simulator.
+    /// `_start` is the fabric cycle the transfer begins; the analytic
+    /// model is time-invariant today, so this delegates to
+    /// [`Fabric::transport`] bit-for-bit — the parameter is the seam
+    /// where a congestion- or DVFS-aware cost model plugs in without
+    /// another engine signature change.
+    pub fn transport_at(&self, src: NodeId, dst: NodeId, bytes: u64, _start: Cycle) -> Metrics {
+        self.transport(src, dst, bytes)
+    }
+
     /// Transport from HBM to a tile.
     pub fn feed(&self, tile: usize, bytes: u64) -> Metrics {
-        let mut m = self.hbm.access(bytes);
-        let t = self.transport(self.hbm_node, self.tiles[tile].node, bytes);
+        self.feed_at(tile, bytes, 0)
+    }
+
+    /// Start-time-aware HBM feed (see [`Fabric::transport_at`] for the
+    /// contract); routes through the start-aware HBM and transport hooks.
+    pub fn feed_at(&self, tile: usize, bytes: u64, start: Cycle) -> Metrics {
+        let mut m = self.hbm.access_at(bytes, start);
+        let t = self.transport_at(self.hbm_node, self.tiles[tile].node, bytes, start);
         // HBM access and NoC transfer pipeline: latency = max + overlap
         // fudge (serial command, streamed data) — we take the sum of
         // fixed latencies and the max of the streaming parts, which the

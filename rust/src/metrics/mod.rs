@@ -136,10 +136,13 @@ impl Metrics {
         )
     }
 
-    /// Per-category energy breakdown, descending.
+    /// Per-category energy breakdown, descending. Uses the IEEE 754
+    /// total order so a NaN entry (e.g. a poisoned accumulator from a
+    /// bad config in release builds) sorts deterministically instead of
+    /// panicking the report path.
     pub fn breakdown(&self) -> Vec<(Category, f64)> {
         let mut v: Vec<_> = self.energy_pj.iter().map(|(c, e)| (*c, *e)).collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v
     }
 }
@@ -209,6 +212,26 @@ mod tests {
         assert_eq!(m.energy(Category::Compute), 15.0);
         assert_eq!(m.total_energy_pj(), 35.0);
         assert_eq!(m.breakdown()[0].0, Category::Dram);
+    }
+
+    #[test]
+    fn breakdown_survives_nan_energy() {
+        // Regression: `breakdown` used `partial_cmp(..).unwrap()`, which
+        // panics the whole report path if any accumulator went NaN (a
+        // bad config can produce that in release, where `add_energy`'s
+        // debug_assert is compiled out). total_cmp must sort it
+        // deterministically instead: NaN first (it is "largest" in the
+        // IEEE total order), finite entries still descending.
+        let mut m = Metrics::new();
+        m.energy_pj.insert(Category::Compute, 10.0);
+        m.energy_pj.insert(Category::Dram, f64::NAN);
+        m.energy_pj.insert(Category::Noc, 20.0);
+        let v = m.breakdown();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].0, Category::Dram);
+        assert!(v[0].1.is_nan());
+        assert_eq!(v[1], (Category::Noc, 20.0));
+        assert_eq!(v[2], (Category::Compute, 10.0));
     }
 
     #[test]

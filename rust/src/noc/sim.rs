@@ -54,7 +54,7 @@ use super::router::{Flit, FlitKind, FlitQueues};
 use super::routing::RouteTable;
 use super::topology::{NodeId, Topology};
 use crate::metrics::{Category, Metrics};
-use crate::sim::{Cycle, EventWheel};
+use crate::sim::{Cycle, EventWheel, StreamingHist};
 
 /// Microarchitectural NoC parameters (config defaults are FlooNoC-like).
 #[derive(Debug, Clone, Copy)]
@@ -166,6 +166,11 @@ pub struct NocSim {
     credit_returns: EventWheel<CreditReturn>,
     /// Per-cycle scratch, reused across steps (sized `max_degree + 1`).
     input_busy: Vec<bool>,
+    /// Streaming packet-latency stats, recorded at tail ejection, so
+    /// `report()` is O(latency range) instead of sort-all-latencies.
+    /// Quantiles are exact order statistics — bit-identical to the
+    /// sorted-`Vec` path `refsim` retains (tests/noc_golden.rs).
+    lat_hist: StreamingHist,
     packets: Vec<PacketStats>,
     now: Cycle,
     flit_hops: u64,
@@ -200,6 +205,7 @@ impl NocSim {
             arrivals: EventWheel::with_horizon(params.router_latency as usize + 2),
             credit_returns: EventWheel::with_horizon(4),
             input_busy: vec![false; topo.max_degree() + 1],
+            lat_hist: StreamingHist::new(),
             packets: Vec::new(),
             now: 0,
             flit_hops: 0,
@@ -380,6 +386,7 @@ impl NocSim {
                         if flit.kind == FlitKind::Tail {
                             let p = &mut self.packets[flit.packet];
                             p.ejected_at = Some(now_next);
+                            self.lat_hist.record(now_next - p.injected_at);
                             self.delivered += 1;
                         }
                     } else {
@@ -434,22 +441,12 @@ impl NocSim {
     }
 
     pub fn report(&self) -> SimReport {
-        let mut lats: Vec<u64> = self
-            .packets
-            .iter()
-            .filter_map(|p| p.ejected_at.map(|e| e - p.injected_at))
-            .collect();
-        lats.sort_unstable();
-        let avg = if lats.is_empty() {
-            0.0
-        } else {
-            lats.iter().sum::<u64>() as f64 / lats.len() as f64
-        };
-        let p99 = if lats.is_empty() {
-            0.0
-        } else {
-            lats[(lats.len() - 1).min(lats.len() * 99 / 100)] as f64
-        };
+        // Streaming stats recorded at ejection: `mean` replays the same
+        // u64 sum / f64 division as the replaced sorted-Vec code, and
+        // `quantile_indexed` the same `(len-1).min(len*99/100)` index, so
+        // both stay bit-identical to `refsim`'s report.
+        let avg = self.lat_hist.mean();
+        let p99 = self.lat_hist.quantile_indexed(99, 100);
         let mut metrics = Metrics::new();
         metrics.cycles = self.now;
         metrics.bytes_moved = self.flit_hops * self.params.flit_bytes as u64;

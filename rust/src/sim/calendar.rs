@@ -1,0 +1,129 @@
+//! Jumpable calendar: an [`EventWheel`] plus a time index, for simulators
+//! that *jump* between sparse event times instead of stepping every cycle.
+//!
+//! The NoC hot loop drains its wheel once per cycle, so it never needs to
+//! ask "when is the next event?". The coordinator co-simulation and the
+//! DRAM controller have the opposite shape: long quiet stretches (a
+//! 5000-cycle HBM feed, a tRP precharge window) where stepping cycle by
+//! cycle would dominate the run time. [`Calendar`] pairs the wheel's O(1)
+//! push / FIFO-per-cycle semantics with a `BinaryHeap<Reverse<Cycle>>` of
+//! pending timestamps so `take_next` can hand back the earliest due batch
+//! directly — the wheel stores the events, the heap only stores times.
+//!
+//! Costs: push is O(log n) for the time index (n = pending events) plus
+//! the wheel's O(1); `take_next` pops one heap entry per event at the due
+//! cycle and drains exactly one wheel bucket. FIFO tie-break within a
+//! cycle is inherited from the wheel, so runs replay bit-identically.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::{Cycle, EventWheel};
+
+/// A calendar queue that can jump to the next pending timestamp.
+#[derive(Debug)]
+pub struct Calendar<T> {
+    wheel: EventWheel<T>,
+    /// Min-heap of pending event times (one entry per queued event).
+    times: BinaryHeap<Reverse<Cycle>>,
+}
+
+impl<T> Calendar<T> {
+    /// Build over a wheel of at least `min_horizon` buckets. Events past
+    /// the horizon are still exact (the wheel retains later laps); the
+    /// horizon only sizes the fast path.
+    pub fn with_horizon(min_horizon: usize) -> Self {
+        Calendar {
+            wheel: EventWheel::with_horizon(min_horizon),
+            times: BinaryHeap::new(),
+        }
+    }
+
+    /// Schedule `item` at absolute cycle `at`.
+    #[inline]
+    pub fn push(&mut self, at: Cycle, item: T) {
+        self.wheel.push(at, item);
+        self.times.push(Reverse(at));
+    }
+
+    /// Earliest pending event time, if any.
+    pub fn next_time(&self) -> Option<Cycle> {
+        self.times.peek().map(|&Reverse(t)| t)
+    }
+
+    /// Remove and return the earliest batch: `(t, events due at t)` in
+    /// push order. Hand the `Vec` back via [`Calendar::recycle`].
+    pub fn take_next(&mut self) -> Option<(Cycle, Vec<(Cycle, T)>)> {
+        let Reverse(t) = self.times.pop()?;
+        // One heap entry per event at `t`; drop the rest of the batch.
+        while self.times.peek() == Some(&Reverse(t)) {
+            self.times.pop();
+        }
+        let due = self.wheel.take_due(t);
+        debug_assert!(!due.is_empty(), "time index out of sync at {t}");
+        Some((t, due))
+    }
+
+    /// Return batch storage obtained from [`Calendar::take_next`].
+    pub fn recycle(&mut self, storage: Vec<(Cycle, T)>) {
+        self.wheel.recycle(storage);
+    }
+
+    /// Total queued events.
+    pub fn len(&self) -> usize {
+        self.wheel.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.wheel.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jumps_in_time_order_with_fifo_ties() {
+        let mut c = Calendar::with_horizon(4);
+        c.push(50, "c");
+        c.push(7, "a1");
+        c.push(7, "a2");
+        c.push(23, "b");
+        let (t, due) = c.take_next().unwrap();
+        assert_eq!(t, 7);
+        let got: Vec<_> = due.iter().map(|&(_, x)| x).collect();
+        assert_eq!(got, ["a1", "a2"]);
+        c.recycle(due);
+        assert_eq!(c.take_next().unwrap().0, 23);
+        assert_eq!(c.take_next().unwrap().0, 50);
+        assert!(c.take_next().is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn far_future_laps_are_exact() {
+        let mut c = Calendar::with_horizon(2);
+        c.push(1000, 1u32);
+        c.push(2, 2u32); // same bucket as 1000 on a 2-slot ring? (2 & 1 = 0, 1000 & 1 = 0)
+        let (t, due) = c.take_next().unwrap();
+        assert_eq!((t, due[0].1), (2, 2));
+        c.recycle(due);
+        let (t, due) = c.take_next().unwrap();
+        assert_eq!((t, due[0].1), (1000, 1));
+    }
+
+    #[test]
+    fn interleaved_push_take() {
+        let mut c = Calendar::with_horizon(8);
+        c.push(5, 'x');
+        let (t, due) = c.take_next().unwrap();
+        assert_eq!(t, 5);
+        c.recycle(due);
+        c.push(9, 'z');
+        c.push(6, 'y');
+        assert_eq!(c.next_time(), Some(6));
+        assert_eq!(c.take_next().unwrap().0, 6);
+        assert_eq!(c.take_next().unwrap().0, 9);
+    }
+}

@@ -7,16 +7,26 @@
 //!   loops (NoC flit arrivals / credit returns, DRAM wakeups): O(1) push,
 //!   O(due) drain, reusable bucket storage, same FIFO tie-break contract
 //!   as [`EventQueue`].
+//! * [`Calendar`] — an [`EventWheel`] plus a pending-time index, for the
+//!   simulators that jump between sparse event times (coordinator co-sim
+//!   step completions, DRAM per-bank ready events) instead of stepping
+//!   every cycle.
+//! * [`StreamingHist`] — exact streaming histogram (flat counts + sparse
+//!   tail) behind the report-path latency quantiles.
 //! * [`Rng`] — xoshiro256** PRNG with uniform/normal helpers; every
 //!   stochastic component seeds one of these, never OS entropy.
 
+mod calendar;
 mod event;
 mod event_wheel;
 mod rng;
+mod stats;
 
+pub use calendar::Calendar;
 pub use event::EventQueue;
 pub use event_wheel::EventWheel;
 pub use rng::Rng;
+pub use stats::StreamingHist;
 
 /// Simulated time in clock cycles of the component's own clock domain.
 pub type Cycle = u64;

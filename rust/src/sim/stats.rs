@@ -1,0 +1,185 @@
+//! Streaming sample statistics for simulator report paths.
+//!
+//! The pre-rewrite report code collected every per-packet latency in a
+//! `Vec<u64>` and sorted it at report time — O(n log n) and O(n) memory
+//! in delivered packets. [`StreamingHist`] is the replacement: an *exact*
+//! counting histogram with a flat dense front (a plain `Vec<u64>` of
+//! counts that scans/vectorizes — the ROADMAP's "SIMD-friendly metrics"
+//! shape) and an exact sparse tail for outliers. Quantiles come out as
+//! k-th order statistics over the counts, so they are bit-identical to
+//! indexing the sorted vector, while `record` is O(1) and memory is
+//! O(latency range), not O(samples).
+
+use std::collections::BTreeMap;
+
+use super::Cycle;
+
+/// Dense-count coverage: values below this live in the flat array
+/// (8 buckets/cache line, 32 KiB total); rarer, larger values fall into
+/// the exact sparse tail.
+const DENSE_LIMIT: usize = 1 << 12;
+
+/// Exact streaming histogram of `u64` samples.
+#[derive(Debug, Clone, Default)]
+pub struct StreamingHist {
+    /// counts[v] = occurrences of value v, for v < DENSE_LIMIT. Grown
+    /// lazily in powers of two up to the limit.
+    dense: Vec<u64>,
+    /// Exact counts for values >= DENSE_LIMIT (ordered, usually tiny).
+    tail: BTreeMap<Cycle, u64>,
+    count: u64,
+    sum: u64,
+}
+
+impl StreamingHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. O(1) amortized.
+    #[inline]
+    pub fn record(&mut self, v: Cycle) {
+        self.count += 1;
+        self.sum += v;
+        let i = v as usize;
+        if v < DENSE_LIMIT as Cycle {
+            if self.dense.len() <= i {
+                self.dense.resize((i + 1).next_power_of_two().min(DENSE_LIMIT), 0);
+            }
+            self.dense[i] += 1;
+        } else {
+            *self.tail.entry(v).or_insert(0) += 1;
+        }
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all recorded samples (exact; u64 like the sorted-Vec sum).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean as `sum as f64 / count as f64` — the same two f64 conversions
+    /// and single division the sorted-Vec code performed, so the result
+    /// is bit-identical. 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// k-th smallest recorded sample (0-based), i.e. `sorted[k]`.
+    /// `None` when `k >= count`.
+    pub fn kth(&self, k: u64) -> Option<Cycle> {
+        if k >= self.count {
+            return None;
+        }
+        let mut cum = 0u64;
+        for (v, &c) in self.dense.iter().enumerate() {
+            cum += c;
+            if cum > k {
+                return Some(v as Cycle);
+            }
+        }
+        for (&v, &c) in &self.tail {
+            cum += c;
+            if cum > k {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// `sorted[(len - 1).min(len * p_num / p_den)]` — the exact indexing
+    /// rule the NoC report paths use for p99 (`p_num/p_den` = 99/100).
+    /// 0.0 when empty, matching the replaced code.
+    pub fn quantile_indexed(&self, p_num: u64, p_den: u64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let k = (self.count - 1).min(self.count * p_num / p_den);
+        self.kth(k).expect("k < count") as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference implementation: the sorted vector the histogram replaces.
+    fn sorted_ref(vals: &[u64]) -> (f64, f64) {
+        let mut lats = vals.to_vec();
+        lats.sort_unstable();
+        let avg = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<u64>() as f64 / lats.len() as f64
+        };
+        let p99 = if lats.is_empty() {
+            0.0
+        } else {
+            lats[(lats.len() - 1).min(lats.len() * 99 / 100)] as f64
+        };
+        (avg, p99)
+    }
+
+    #[test]
+    fn matches_sorted_vector_bitwise() {
+        let mut rng = crate::sim::Rng::new(17);
+        for case in 0..50 {
+            let n = rng.below(300);
+            let mut vals = Vec::new();
+            let mut h = StreamingHist::new();
+            for _ in 0..n {
+                // mix of small (dense) and huge (tail) samples
+                let v = if rng.chance(0.9) {
+                    rng.below(2000) as u64
+                } else {
+                    5000 + rng.below(1 << 20) as u64
+                };
+                vals.push(v);
+                h.record(v);
+            }
+            let (avg, p99) = sorted_ref(&vals);
+            assert_eq!(h.mean().to_bits(), avg.to_bits(), "case {case} avg");
+            assert_eq!(
+                h.quantile_indexed(99, 100).to_bits(),
+                p99.to_bits(),
+                "case {case} p99"
+            );
+        }
+    }
+
+    #[test]
+    fn kth_is_order_statistic() {
+        let mut h = StreamingHist::new();
+        for v in [5u64, 1, 5, 100_000, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.kth(0), Some(1));
+        assert_eq!(h.kth(1), Some(3));
+        assert_eq!(h.kth(2), Some(5));
+        assert_eq!(h.kth(3), Some(5));
+        assert_eq!(h.kth(4), Some(100_000));
+        assert_eq!(h.kth(5), None);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 100_014);
+    }
+
+    #[test]
+    fn empty_reports_zero() {
+        let h = StreamingHist::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile_indexed(99, 100), 0.0);
+        assert!(h.is_empty());
+    }
+}

@@ -13,6 +13,20 @@
 //! });
 //! ```
 
+/// Load one of the bundled fabric configs (`configs/<name>`) into a built
+/// [`crate::fabric::Fabric`] — shared by the golden tests and benches so
+/// they exercise the exact same fabrics.
+pub fn bundled_fabric(name: &str) -> crate::fabric::Fabric {
+    crate::fabric::Fabric::build(
+        crate::config::FabricConfig::from_toml(
+            &std::fs::read_to_string(crate::repo_root().join("configs").join(name))
+                .expect("bundled config readable"),
+        )
+        .expect("bundled config parses"),
+    )
+    .expect("bundled fabric builds")
+}
+
 pub mod prop {
     use crate::sim::Rng;
 

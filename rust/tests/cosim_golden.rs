@@ -1,0 +1,132 @@
+//! Differential golden tests for the event-driven coordinator co-sim.
+//!
+//! `archytas::coordinator::refexec::cosim_ref` is the pre-rewrite
+//! one-pass list scheduler kept verbatim; `archytas::coordinator::cosim`
+//! is the event-driven engine on the shared simulation calendar. These
+//! tests lower identical workloads across map strategies and both bundled
+//! fabric configs and require **bit-identical** [`ExecReport`]s —
+//! makespan, per-tile busy cycles, per-step completion times, transfer
+//! cycles and energy bit patterns. The rewrite must change the engine's
+//! complexity and memory shape, never its answers.
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::config::FabricConfig;
+use archytas::coordinator::{cosim, cosim_ref, ExecReport};
+use archytas::fabric::Fabric;
+use archytas::ir::Graph;
+use archytas::testutil::{bundled_fabric, prop};
+use archytas::workloads;
+
+/// Per-field asserts first (granular failure messages on divergence),
+/// then the library's [`ExecReport::bit_identical`] golden contract so
+/// fields added to the report later stay covered here automatically.
+fn assert_reports_identical(a: &ExecReport, b: &ExecReport, tag: &str) {
+    assert_eq!(a.cycles, b.cycles, "{tag}: makespan");
+    assert_eq!(a.step_done, b.step_done, "{tag}: step_done");
+    assert_eq!(a.tile_busy, b.tile_busy, "{tag}: tile_busy");
+    assert_eq!(a.transfer_cycles, b.transfer_cycles, "{tag}: transfer_cycles");
+    assert_eq!(a.exec_steps, b.exec_steps, "{tag}: exec_steps");
+    // Energy bit patterns: total and every per-category accumulator.
+    assert_eq!(
+        a.metrics.total_energy_pj().to_bits(),
+        b.metrics.total_energy_pj().to_bits(),
+        "{tag}: total energy {} vs {}",
+        a.metrics.total_energy_pj(),
+        b.metrics.total_energy_pj()
+    );
+    let (ba, bb) = (a.metrics.breakdown(), b.metrics.breakdown());
+    assert_eq!(ba.len(), bb.len(), "{tag}: breakdown categories");
+    for ((ca, ea), (cb, eb)) in ba.iter().zip(&bb) {
+        assert_eq!(ca, cb, "{tag}: breakdown order");
+        assert_eq!(ea.to_bits(), eb.to_bits(), "{tag}: {ca} energy {ea} vs {eb}");
+    }
+    assert_eq!(a.metrics, b.metrics, "{tag}: metrics struct");
+    assert_eq!(a.metrics.ops, b.metrics.ops, "{tag}: ops");
+    assert_eq!(a.metrics.bytes_moved, b.metrics.bytes_moved, "{tag}: bytes");
+    assert!(a.bit_identical(b), "{tag}: bit_identical contract");
+}
+
+fn differential(fabric: &Fabric, g: &Graph, strategy: MapStrategy, p: Precision, tag: &str) {
+    let m = map_graph(g, fabric, strategy, p).unwrap();
+    let prog = lower(g, fabric, &m).unwrap();
+    let ev = cosim(fabric, &prog).unwrap();
+    let re = cosim_ref(fabric, &prog).unwrap();
+    assert!(ev.cycles > 0, "{tag}: trivial program");
+    assert_reports_identical(&ev, &re, tag);
+}
+
+/// The acceptance matrix: ≥2 workloads × ≥2 map strategies × both bundled
+/// fabric configs, all bit-identical between the engines.
+#[test]
+fn golden_matrix_workloads_strategies_configs() {
+    let workloads: Vec<(&str, Graph)> = vec![
+        ("mlp", workloads::mlp(8, 256, &[128, 64], 10, 0).unwrap()),
+        ("vit", workloads::vit(&workloads::VitParams::default(), 0).unwrap()),
+    ];
+    for cfg in ["edge16.toml", "homogeneous_npu.toml"] {
+        let fabric = bundled_fabric(cfg);
+        for (wname, g) in &workloads {
+            for strategy in [MapStrategy::RoundRobin, MapStrategy::Greedy] {
+                let tag = format!("{cfg}/{wname}/{strategy:?}");
+                differential(&fabric, g, strategy, Precision::Int8, &tag);
+            }
+        }
+    }
+}
+
+/// The ILP mapper produces different (often denser) step graphs — cover
+/// it on the heterogeneous config.
+#[test]
+fn golden_ilp_strategy() {
+    let fabric = bundled_fabric("edge16.toml");
+    let g = workloads::mlp(4, 64, &[32], 10, 7).unwrap();
+    differential(&fabric, &g, MapStrategy::Ilp, Precision::Int8, "edge16/mlp/Ilp");
+}
+
+/// F32 exercises different accelerator cost paths (and template-A weight
+/// streaming on the crossbar tiles).
+#[test]
+fn golden_f32_precision() {
+    let fabric = bundled_fabric("edge16.toml");
+    let g = workloads::vit(&workloads::VitParams::default(), 1).unwrap();
+    differential(&fabric, &g, MapStrategy::Greedy, Precision::F32, "edge16/vit/f32");
+}
+
+/// Property-style sweep: random MLP shapes on a small inline fabric must
+/// also match bit-for-bit (guards resource shapes the bundled configs
+/// don't hit: tiny programs, single-hidden-layer chains, reused links).
+#[test]
+fn golden_random_mlps() {
+    let fabric = Fabric::build(
+        FabricConfig::from_toml(
+            "[noc]\nwidth = 3\nheight = 3\n\
+             [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n\
+             [[cu]]\nkind = \"cpu\"\ntemplate = \"C\"\ncount = 2\ncluster_cores = 4\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    prop::check(12, |rng| {
+        let batch = (rng.below(4) + 1) * 2;
+        let inputs = (rng.below(4) + 1) * 16;
+        let hidden = (rng.below(3) + 1) * 16;
+        let layers: Vec<usize> =
+            (0..rng.below(2) + 1).map(|_| hidden).collect();
+        let g = workloads::mlp(batch, inputs, &layers, 8, rng.next_u64()).unwrap();
+        let strategy = if rng.chance(0.5) { MapStrategy::Greedy } else { MapStrategy::RoundRobin };
+        let m = map_graph(&g, &fabric, strategy, Precision::Int8)
+            .map_err(|e| e.to_string())?;
+        let prog = lower(&g, &fabric, &m).map_err(|e| e.to_string())?;
+        let ev = cosim(&fabric, &prog).map_err(|e| e.to_string())?;
+        let re = cosim_ref(&fabric, &prog).map_err(|e| e.to_string())?;
+        if ev.cycles != re.cycles {
+            return Err(format!("makespan {} vs {}", ev.cycles, re.cycles));
+        }
+        if !ev.bit_identical(&re) {
+            return Err("reports not bit-identical".into());
+        }
+        Ok(())
+    });
+}

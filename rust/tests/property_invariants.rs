@@ -9,7 +9,7 @@ use archytas::dse::milp::{Milp, Sense};
 use archytas::dse::pareto_front;
 use archytas::ir::interp::{self, Mat};
 use archytas::noc::{routing::RouteTable, traffic, NocParams, NocSim, Topology};
-use archytas::sim::Rng;
+use archytas::sim::{Calendar, Cycle, EventWheel, Rng};
 use archytas::testutil::prop;
 use archytas::workloads;
 
@@ -339,6 +339,143 @@ fn prop_sparsify_monotone() {
         }
         if r_lo.norm_retained > r_hi.norm_retained + 1e-9 {
             return Err("norm not monotone".into());
+        }
+        Ok(())
+    });
+}
+
+/// EventWheel lap-safety + exact-time delivery + FIFO tie-break: with a
+/// deliberately tiny ring, random pushes (many far past the horizon, so
+/// buckets hold several laps at once) must pop exactly at their cycle, in
+/// push order within a cycle, and nothing may be lost or duplicated.
+#[test]
+fn prop_event_wheel_laps_exact_and_fifo() {
+    prop::check(40, |rng| {
+        let horizon = rng.below(6) + 1; // 1..6 -> rings of 2..8 buckets
+        let mut w = EventWheel::with_horizon(horizon);
+        let n = rng.below(80) + 1;
+        let mut expect: std::collections::BTreeMap<Cycle, Vec<usize>> = Default::default();
+        let max_t = 20 * (horizon as u64 + 1); // many laps
+        for id in 0..n {
+            let t = rng.below(max_t as usize) as Cycle;
+            w.push(t, id);
+            expect.entry(t).or_default().push(id);
+        }
+        if w.len() != n {
+            return Err(format!("len {} after {n} pushes", w.len()));
+        }
+        for t in 0..=max_t {
+            let due = w.take_due(t);
+            let got: Vec<usize> = due.iter().map(|&(at, id)| {
+                debug_assert_eq!(at, t);
+                id
+            }).collect();
+            let want = expect.remove(&t).unwrap_or_default();
+            if got != want {
+                return Err(format!("at {t}: got {got:?} want {want:?}"));
+            }
+            w.recycle(due);
+        }
+        if !w.is_empty() {
+            return Err(format!("{} events stranded past the sweep", w.len()));
+        }
+        Ok(())
+    });
+}
+
+/// EventWheel push-while-draining (the NoC's credit-return shape: events
+/// drained at cycle t schedule follow-ups at t+delta): every event must
+/// surface exactly once, at its scheduled cycle, across bucket reuse.
+#[test]
+fn prop_event_wheel_push_while_draining() {
+    prop::check(30, |rng| {
+        let mut w = EventWheel::with_horizon(rng.below(4) + 2);
+        // Each event carries (due_cycle, remaining_respawns).
+        let seeds = rng.below(10) + 1;
+        let mut outstanding = 0usize;
+        for _ in 0..seeds {
+            let t = rng.below(8) as Cycle;
+            let hops = rng.below(5);
+            w.push(t, (t, hops));
+            outstanding += 1;
+        }
+        let mut now: Cycle = 0;
+        let mut drained = 0usize;
+        while !w.is_empty() {
+            if now > 10_000 {
+                return Err("wheel failed to drain".into());
+            }
+            let due = w.take_due(now);
+            let spawn: Vec<(Cycle, usize)> = due.iter().map(|&(_, ev)| ev).collect();
+            for (at, hops) in spawn {
+                if at != now {
+                    return Err(format!("event due {at} surfaced at {now}"));
+                }
+                drained += 1;
+                if hops > 0 {
+                    // respawn mid-drain, 1..=6 cycles out (can be the
+                    // same bucket on a small ring)
+                    let next = now + 1 + rng.below(6) as Cycle;
+                    w.push(next, (next, hops - 1));
+                    outstanding += 1;
+                }
+            }
+            w.recycle(due);
+            now += 1;
+        }
+        if drained != outstanding {
+            return Err(format!("drained {drained} of {outstanding}"));
+        }
+        Ok(())
+    });
+}
+
+/// Calendar (wheel + time index): `take_next` must visit strictly
+/// increasing times, preserve FIFO order within a time, and conserve
+/// every event — including pushes interleaved with draining.
+#[test]
+fn prop_calendar_time_ordered_and_lossless() {
+    prop::check(30, |rng| {
+        let mut c = Calendar::with_horizon(rng.below(5) + 1);
+        let mut pushed = 0usize;
+        let mut seen = 0usize;
+        for id in 0..rng.below(60) + 1 {
+            let t = rng.below(500) as Cycle;
+            c.push(t, (t, id));
+            pushed += 1;
+        }
+        let mut last: Option<Cycle> = None;
+        while let Some((t, due)) = c.take_next() {
+            if let Some(l) = last {
+                if t <= l {
+                    return Err(format!("time went {l} -> {t}"));
+                }
+            }
+            last = Some(t);
+            let mut prev_id: Option<usize> = None;
+            for &(at, (want_t, id)) in &due {
+                if at != t || want_t != t {
+                    return Err(format!("event for {want_t} popped at {t} (slot {at})"));
+                }
+                // ids were pushed in increasing order per time
+                if let Some(p) = prev_id {
+                    if id <= p {
+                        return Err(format!("FIFO broken at {t}: {p} then {id}"));
+                    }
+                }
+                prev_id = Some(id);
+                seen += 1;
+            }
+            // occasionally push more work strictly in the future
+            if rng.chance(0.3) {
+                let ft = t + 1 + rng.below(50) as Cycle;
+                c.push(ft, (ft, usize::MAX / 2 + seen)); // ids stay increasing per fresh time
+                pushed += 1;
+            }
+            c.recycle(due);
+        }
+        if seen != pushed {
+            return Err(format!("saw {seen} of {pushed}"));
         }
         Ok(())
     });
