@@ -2,10 +2,12 @@
 //!
 //! Saturation sweeps (offered load -> latency/throughput) per topology
 //! and traffic pattern on the flit-level wormhole simulator, the
-//! size-scaling row the "performance up-scaling" claim needs, and the
-//! hot-loop throughput row: the event-wheel `NocSim` vs the retained
-//! pre-rewrite `RefNocSim` on the same seeded workload, reporting
-//! simulated cycles/second for both (the CI perf-smoke line).
+//! size-scaling row the "performance up-scaling" claim needs (now up to
+//! 64x64 — computed route tables), the hot-loop throughput row (the
+//! event-wheel `NocSim` vs the retained pre-rewrite `RefNocSim`), and
+//! the thread-scaling row: shard-parallel stepping at 1/2/4/8 threads
+//! with a bit-identity golden check that panics on divergence (the CI
+//! parallel-determinism smoke).
 
 #[path = "util.rs"]
 mod util;
@@ -83,6 +85,53 @@ fn hot_loop_throughput() {
     assert!(golden_ok, "event-wheel sim diverged from reference");
 }
 
+/// Thread-scaling row: shard-parallel stepping on a 32x32 mesh at mid
+/// load, one row per thread count, with a golden check — every report
+/// must match the threads=1 bits exactly (the determinism contract), so
+/// any parallel divergence panics the bench and fails CI.
+fn thread_scaling() {
+    println!("\n-- parallel stepping: 32x32 mesh, uniform, load 0.05 (threads sweep) --");
+    let nodes = 32 * 32;
+    let mut rng = Rng::new(7);
+    let schedule = traffic::generate(traffic::Pattern::Uniform, nodes, 0.05, 64, 600, &mut rng);
+    println!(
+        "{:>8} {:>10} {:>12} {:>14} {:>9} {:>8}",
+        "threads", "cycles", "sim wall", "cycles/sec", "speedup", "golden"
+    );
+    let mut golden: Option<(u64, usize, u64, u64, u64)> = None;
+    let mut base_cps = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let params = NocParams { threads, ..NocParams::default() };
+        let mut sim = NocSim::new(Topology::mesh(32, 32).unwrap(), params);
+        let mut sched = Some(schedule.clone());
+        let (rep, wall) = util::time_once(|| {
+            traffic::drive(&mut sim, sched.take().expect("timed once"), 3_000_000)
+        });
+        let sig = (
+            rep.cycles,
+            rep.delivered,
+            rep.flit_hops,
+            rep.avg_latency.to_bits(),
+            rep.p99_latency.to_bits(),
+        );
+        let ok = *golden.get_or_insert(sig) == sig;
+        let cps = rep.cycles as f64 / wall;
+        if threads == 1 {
+            base_cps = cps;
+        }
+        println!(
+            "{:>8} {:>10} {:>12} {:>14.0} {:>8.2}x {:>8}",
+            threads,
+            rep.cycles,
+            util::fmt_time(wall),
+            cps,
+            cps / base_cps,
+            if ok { "ok" } else { "MISMATCH" }
+        );
+        assert!(ok, "threads={threads} diverged from the threads=1 golden report");
+    }
+}
+
 fn main() {
     util::banner("E2", "NoC saturation & scaling (flit-level wormhole sim)");
     sweep("mesh 4x4", || Topology::mesh(4, 4).unwrap(), traffic::Pattern::Uniform);
@@ -99,7 +148,9 @@ fn main() {
         "{:>10} {:>8} {:>12} {:>14} {:>12} {:>14}",
         "mesh", "nodes", "avg lat", "flits/node/cyc", "sim wall", "cycles/sec"
     );
-    for side in [2usize, 4, 6, 8, 12, 16] {
+    // 32/64-side rows are the ROADMAP's large-mesh goal: feasible now
+    // that mesh routing is computed (no O(n²) route tables).
+    for side in [2usize, 4, 6, 8, 12, 16, 32, 64] {
         let (rep, wall) = util::time_once(|| {
             let topo = Topology::mesh(side, side).unwrap();
             let nodes = topo.nodes();
@@ -121,7 +172,9 @@ fn main() {
     }
 
     hot_loop_throughput();
+    thread_scaling();
 
     println!("\nexpected shape: latency knee at saturation; torus ~2x bisection of mesh;");
-    println!("hotspot saturates earliest; per-node throughput ~flat with size at low load.");
+    println!("hotspot saturates earliest; per-node throughput ~flat with size at low load;");
+    println!("threads sweep: golden 'ok' on every row, speedup growing with threads.");
 }

@@ -26,6 +26,9 @@ pub struct NocConfig {
     pub vcs: usize,
     /// Flit payload size in bytes.
     pub flit_bytes: usize,
+    /// Worker threads for shard-parallel NoC stepping (1 = sequential;
+    /// reports are bit-identical at any value — see noc/sim.rs docs).
+    pub threads: usize,
 }
 
 impl Default for NocConfig {
@@ -39,6 +42,7 @@ impl Default for NocConfig {
             router_latency_cycles: 3,
             vcs: 2,
             flit_bytes: 32,
+            threads: 1,
         }
     }
 }
@@ -119,6 +123,7 @@ impl FabricConfig {
                 as u64,
             vcs: doc.get_int("noc.vcs", d.noc.vcs as i64) as usize,
             flit_bytes: doc.get_int("noc.flit_bytes", d.noc.flit_bytes as i64) as usize,
+            threads: doc.get_int("noc.threads", d.noc.threads as i64) as usize,
         };
         let mut cus = Vec::new();
         for (i, row) in doc.tables("cu").iter().enumerate() {
@@ -151,6 +156,14 @@ impl FabricConfig {
         }
         if self.noc.flit_bytes == 0 || self.noc.vcs == 0 {
             bail!("noc.flit_bytes and noc.vcs must be nonzero");
+        }
+        // Upper bound also catches negative TOML values wrapping through
+        // the i64 -> usize cast into huge counts.
+        if self.noc.threads == 0 || self.noc.threads > 1024 {
+            bail!(
+                "noc.threads must be in 1..=1024 (1 = sequential stepping), got {}",
+                self.noc.threads
+            );
         }
         let known = ["mesh", "torus", "ring", "star", "fattree"];
         if !known.contains(&self.noc.topology.as_str()) {

@@ -138,6 +138,34 @@ impl ActWindow {
     }
 }
 
+/// Snapshot of the cumulative counters at the end of the previous
+/// reporting episode. [`DramSim::stats`] reports *deltas* against this
+/// mark, so back-to-back `run_to_drain` episodes on one simulator no
+/// longer double-charge earlier episodes' background energy or mix their
+/// byte/latency accounting (ROADMAP: multi-episode stats consistency).
+/// Single-episode use is unchanged: the mark starts at zero.
+/// Accounting is flow-based: `requests` counts admissions (enqueues)
+/// during the episode, `completed`/`avg_latency` count completions during
+/// the episode — so a request admitted in one episode and drained in the
+/// next shows up exactly once on each side, consistent with where its
+/// bytes and energy land.
+#[derive(Debug, Clone, Copy, Default)]
+struct EpisodeMark {
+    cycle: Cycle,
+    /// Requests enqueued as of the mark.
+    enqueued: usize,
+    /// Requests completed as of the mark.
+    done: usize,
+    /// Sum of completed-request latencies as of the mark (f64 additions
+    /// in completion order, accumulated in [`DramSim::complete`]).
+    lat_sum: f64,
+    bytes: u64,
+    pim_macs: u64,
+    activations: u64,
+    row_hits: u64,
+    row_misses: u64,
+}
+
 /// The single-channel DRAM simulator.
 pub struct DramSim {
     t: DramTiming,
@@ -161,6 +189,13 @@ pub struct DramSim {
     energy: Metrics,
     bytes: u64,
     pim_macs: u64,
+    /// Running completion counters (updated in [`DramSim::complete`]) so
+    /// per-episode reports are O(1) in history, not a rescan of every
+    /// request ever enqueued.
+    done_count: usize,
+    lat_sum: f64,
+    /// Reporting baseline for per-episode stats (see [`EpisodeMark`]).
+    ep: EpisodeMark,
 }
 
 impl DramSim {
@@ -188,6 +223,9 @@ impl DramSim {
             energy: Metrics::new(),
             bytes: 0,
             pim_macs: 0,
+            done_count: 0,
+            lat_sum: 0.0,
+            ep: EpisodeMark::default(),
         }
     }
 
@@ -353,6 +391,8 @@ impl DramSim {
         if self.req_bursts[req] == 0 {
             let d = self.req_done[req].get_or_insert(done);
             *d = (*d).max(done);
+            self.done_count += 1;
+            self.lat_sum += (*d - self.req_enqueued[req]) as f64;
         }
     }
 
@@ -367,11 +407,28 @@ impl DramSim {
         let bank = &self.banks[b];
         let t = match bank.state {
             BankState::Active(open) => {
-                let hit_in_window =
-                    self.queues[b].iter().take(FR_WINDOW).any(|sc| sc.row == open);
-                if hit_in_window {
-                    let col = bank.col_ok_at(&self.t);
-                    col.max(self.last_col + self.t.t_burst)
+                // PIM commands never touch the data bus, and `try_issue`
+                // skips past bus-blocked non-PIM hits within the window,
+                // so the bank is issuable at its column-path time the
+                // moment *any* window hit is a PIM command; the data-bus
+                // term applies only when every hit needs the bus
+                // (ROADMAP: PIM wake exactness — the old formula charged
+                // PIM hits the bus wait and woke them late).
+                let mut hit_any = false;
+                let mut hit_pim = false;
+                for sc in self.queues[b].iter().take(FR_WINDOW) {
+                    if sc.row == open {
+                        hit_any = true;
+                        if sc.pim.is_some() {
+                            hit_pim = true;
+                            break;
+                        }
+                    }
+                }
+                if hit_pim {
+                    bank.col_ok_at(&self.t)
+                } else if hit_any {
+                    bank.col_ok_at(&self.t).max(self.last_col + self.t.t_burst)
                 } else if open != front.row {
                     bank.pre_ok_at(&self.t)
                 } else {
@@ -454,55 +511,72 @@ impl DramSim {
         self.stats()
     }
 
-    /// Final report. The accumulated energy ledger is *moved* into the
-    /// report (no per-report `Metrics` clone); the simulator's ledger
-    /// restarts empty, so call once per drained episode — which is what
-    /// [`DramSim::run_to_drain`] does.
+    /// Per-episode report: everything since the previous `stats()` call
+    /// (or construction). The accumulated energy ledger is *moved* into
+    /// the report (no per-report `Metrics` clone) and every cumulative
+    /// counter is snapshot-and-delta'd against the episode mark, so a
+    /// second `run_to_drain` episode on the same simulator reports only
+    /// its own cycles, bytes, latencies and background energy —
+    /// back-to-back episodes tile the timeline instead of double-
+    /// charging it. [`DramSim::run_to_drain`] calls this once per
+    /// drained episode.
     pub fn stats(&mut self) -> DramStats {
+        let ep_cycles = self.now - self.ep.cycle;
         let mut m = std::mem::take(&mut self.energy);
-        // Background energy over the whole episode.
+        // Background energy over this episode only.
         m.add_energy(
             Category::Leakage,
-            self.now as f64 * self.t.banks as f64 * self.t.e_bg_pj_cycle,
+            ep_cycles as f64 * self.t.banks as f64 * self.t.e_bg_pj_cycle,
         );
-        m.cycles = self.now;
-        m.bytes_moved = self.bytes;
-        m.ops = self.pim_macs;
-        let lats: Vec<f64> = self
-            .req_done
-            .iter()
-            .zip(&self.req_enqueued)
-            .filter_map(|(d, e)| d.map(|dd| (dd - e) as f64))
-            .collect();
+        m.cycles = ep_cycles;
+        m.bytes_moved = self.bytes - self.ep.bytes;
+        m.ops = self.pim_macs - self.ep.pim_macs;
+        // Episode completion stats are deltas of the running counters
+        // maintained in `complete()` — O(1) in history. Flow-based:
+        // completions (and their latencies) belong to the episode they
+        // happened in, admissions to the episode they were enqueued in.
+        let ep_done = self.done_count - self.ep.done;
+        let ep_lat_sum = self.lat_sum - self.ep.lat_sum;
         let (mut hits, mut misses, mut acts) = (0, 0, 0);
         for b in &self.banks {
             hits += b.row_hits;
             misses += b.row_misses;
             acts += b.activations;
         }
-        DramStats {
-            requests: self.req_bursts.len(),
-            completed: self.req_done.iter().filter(|d| d.is_some()).count(),
-            cycles: self.now,
-            bytes: self.bytes,
-            activations: acts,
-            row_hits: hits.saturating_sub(misses),
-            row_misses: misses,
-            pim_macs: self.pim_macs,
-            avg_latency: if lats.is_empty() {
-                0.0
-            } else {
-                lats.iter().sum::<f64>() / lats.len() as f64
-            },
+        let st = DramStats {
+            requests: self.req_bursts.len() - self.ep.enqueued,
+            completed: ep_done,
+            cycles: ep_cycles,
+            bytes: self.bytes - self.ep.bytes,
+            activations: acts - self.ep.activations,
+            // Net row hits: the raw hit counter also ticks for the access
+            // that follows a miss-forced precharge, so subtract misses —
+            // same arithmetic as the cumulative report, on episode deltas.
+            row_hits: (hits - self.ep.row_hits).saturating_sub(misses - self.ep.row_misses),
+            row_misses: misses - self.ep.row_misses,
+            pim_macs: self.pim_macs - self.ep.pim_macs,
+            avg_latency: if ep_done == 0 { 0.0 } else { ep_lat_sum / ep_done as f64 },
             metrics: m,
-        }
+        };
+        self.ep = EpisodeMark {
+            cycle: self.now,
+            enqueued: self.req_bursts.len(),
+            done: self.done_count,
+            lat_sum: self.lat_sum,
+            bytes: self.bytes,
+            pim_macs: self.pim_macs,
+            activations: acts,
+            row_hits: hits,
+            row_misses: misses,
+        };
+        st
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dram::{DramKind, PimCommand};
+    use crate::dram::{DramKind, PimCommand, PimConfig};
 
     fn sim() -> DramSim {
         DramSim::new(DramTiming::new(DramKind::Ddr4_2400))
@@ -642,6 +716,105 @@ mod tests {
         let st = s.run_to_drain();
         let t = DramTiming::new(DramKind::Ddr4_2400);
         assert!(st.cycles >= t.t_rcd + t.t_rc);
+    }
+
+    /// PIM wake exactness (ROADMAP): a PIM row hit is ready at the
+    /// column path even while the data bus is busy — the bus term must
+    /// not appear in its ready time.
+    #[test]
+    fn pim_window_hit_ready_time_ignores_data_bus() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        // Bank 0 open on row 0 since cycle 0; the column path unlocks at
+        // tRCD, but a burst that just started (last_col = now) owns the
+        // data bus until now + tBURST.
+        let setup = |probe: Request| {
+            let mut s = DramSim::new(t);
+            s.banks[0].issue_act(0, 0, &t);
+            s.now = t.t_rcd;
+            s.last_col = s.now;
+            s.enqueue(probe);
+            s
+        };
+        // PIM hit: ready the next cycle (col path passed, no bus need).
+        let s = setup(Request::pim(0, PimCommand::BankMac { macs: 8 }));
+        assert_eq!(s.bank_ready_at(0), Some(s.now + 1));
+        // Non-PIM hit: the data-bus constraint still applies.
+        let s = setup(Request::read(0, 64));
+        assert_eq!(s.bank_ready_at(0), Some(s.last_col + t.t_burst));
+        assert!(s.last_col + t.t_burst > s.now + 1, "bus term must bind here");
+    }
+
+    /// `try_issue` skips past a bus-blocked non-PIM hit to a later PIM
+    /// hit, so a PIM *anywhere* in the window makes the bank ready at
+    /// the column path.
+    #[test]
+    fn pim_behind_blocked_read_hit_still_wakes_at_col() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let mut s = DramSim::new(t);
+        s.banks[0].issue_act(0, 0, &t);
+        s.now = t.t_rcd;
+        s.last_col = s.now;
+        s.enqueue(Request::read(0, 64)); // bus-blocked row hit
+        s.enqueue(Request::pim(0, PimCommand::BankMac { macs: 8 }));
+        assert_eq!(s.bank_ready_at(0), Some(s.now + 1));
+    }
+
+    /// Golden pin of a PIM issue time: ACT at 0, column path opens at
+    /// tRCD, PIM occupies the bank for its duration — no bus waits
+    /// anywhere in the schedule.
+    #[test]
+    fn pim_issue_time_pinned() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let mut s = sim();
+        let cmd = PimCommand::BankMac { macs: 100 };
+        s.enqueue(Request::pim(0, cmd));
+        let st = s.run_to_drain();
+        let dur = cmd.duration(&PimConfig::default(), &t);
+        assert_eq!(s.req_done[0], Some(t.t_rcd + dur));
+        assert_eq!(st.cycles, t.t_rcd + dur);
+    }
+
+    /// Multi-episode stats (ROADMAP): a second `run_to_drain` on the
+    /// same simulator reports only its own episode — no double-charged
+    /// background energy, no re-counted requests or bytes.
+    #[test]
+    fn back_to_back_episodes_report_per_episode() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let mut s = sim();
+        let mut run_ep = |s: &mut DramSim, base: u64| {
+            for i in 0..64u64 {
+                s.enqueue(Request::read(base + i * 4096, 128));
+            }
+            s.run_to_drain()
+        };
+        let a = run_ep(&mut s, 0);
+        let end_a = s.now();
+        let b = run_ep(&mut s, 1 << 26);
+        assert_eq!(a.requests, 64);
+        assert_eq!(b.requests, 64, "episode 2 must not re-count episode 1");
+        assert_eq!(b.completed, 64);
+        assert_eq!(a.bytes, b.bytes, "identical per-episode byte traffic");
+        // Episodes tile the timeline.
+        assert_eq!(a.cycles, end_a);
+        assert_eq!(a.cycles + b.cycles, s.now());
+        assert!(b.cycles > 0);
+        // Background energy is charged for episode 2's cycles only.
+        let leak_b = b.metrics.energy(Category::Leakage);
+        let expect = b.cycles as f64 * t.banks as f64 * t.e_bg_pj_cycle;
+        assert!(
+            (leak_b - expect).abs() <= 1e-6 * expect.max(1.0),
+            "leakage {leak_b} vs {expect}"
+        );
+        // Similar workloads → similar totals (the old cumulative report
+        // roughly doubled episode 2's background energy).
+        assert!(
+            b.metrics.total_energy_pj() < 1.5 * a.metrics.total_energy_pj(),
+            "ep2 {} vs ep1 {}",
+            b.metrics.total_energy_pj(),
+            a.metrics.total_energy_pj()
+        );
+        // Per-episode latency averages stay in the single-episode range.
+        assert!(b.avg_latency >= (t.t_cl + t.t_burst) as f64);
     }
 
     #[test]

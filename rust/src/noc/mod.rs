@@ -15,7 +15,9 @@
 //!   table-based shortest-path next-hop functions.
 //! * [`NocSim`] — cycle-stepped wormhole router network with virtual
 //!   channels and credit flow control, built on the flat event-wheel hot
-//!   loop (see `sim.rs` module docs for the buffer layout).
+//!   loop; steps shard-parallel at `NocParams::threads > 1` with
+//!   bit-identical reports (see `sim.rs` module docs for the buffer
+//!   layout and the determinism contract).
 //! * [`refsim`] — the retained pre-rewrite implementation, used as the
 //!   differential-testing golden reference and perf baseline.
 //! * [`traffic`] — uniform / hotspot / transpose / neighbour generators.

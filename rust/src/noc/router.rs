@@ -112,6 +112,118 @@ impl FlitQueues {
     pub fn total(&self) -> usize {
         self.len.iter().map(|&l| l as usize).sum()
     }
+
+    /// Number of queues in the arena.
+    pub fn queues(&self) -> usize {
+        self.head.len()
+    }
+
+    /// A view over the whole arena (the single-shard fast path — no
+    /// per-step allocation).
+    pub fn full_view(&mut self) -> FlitQueuesShard<'_> {
+        FlitQueuesShard {
+            buf: &mut self.buf,
+            head: &mut self.head,
+            len: &mut self.len,
+            cap: self.cap,
+            q0: 0,
+        }
+    }
+
+    /// Split the arena into disjoint mutable shard views at the given
+    /// queue-id boundaries (`bounds[0] == 0`, ascending, last ==
+    /// [`FlitQueues::queues`]). Shard `i` owns queues
+    /// `bounds[i]..bounds[i+1]` and is addressed by *global* queue id,
+    /// so simulator code is identical on sharded and whole-arena paths.
+    /// The borrows are disjoint slices — safe to hand to parallel
+    /// workers.
+    pub fn shards(&mut self, bounds: &[usize]) -> Vec<FlitQueuesShard<'_>> {
+        assert!(bounds.len() >= 2, "need at least one shard");
+        assert_eq!(bounds[0], 0, "shard bounds must start at queue 0");
+        assert_eq!(*bounds.last().unwrap(), self.head.len(), "bounds must cover the arena");
+        let cap = self.cap;
+        let mut out = Vec::with_capacity(bounds.len() - 1);
+        let (mut buf, mut head, mut len) =
+            (&mut self.buf[..], &mut self.head[..], &mut self.len[..]);
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "shard bounds must be strictly increasing");
+            let nq = w[1] - w[0];
+            let (b, rest) = std::mem::take(&mut buf).split_at_mut(nq * cap);
+            buf = rest;
+            let (h, rest) = std::mem::take(&mut head).split_at_mut(nq);
+            head = rest;
+            let (l, rest) = std::mem::take(&mut len).split_at_mut(nq);
+            len = rest;
+            out.push(FlitQueuesShard { buf: b, head: h, len: l, cap, q0: w[0] });
+        }
+        out
+    }
+}
+
+/// Mutable view over a contiguous range of [`FlitQueues`] queues,
+/// addressed by global queue id (the view subtracts its own offset).
+/// Produced by [`FlitQueues::shards`] / [`FlitQueues::full_view`]; the
+/// parallel NoC step hands one view per shard to its workers.
+#[derive(Debug)]
+pub struct FlitQueuesShard<'a> {
+    buf: &'a mut [Flit],
+    head: &'a mut [u32],
+    len: &'a mut [u32],
+    cap: usize,
+    /// First global queue id owned by this view.
+    q0: usize,
+}
+
+impl FlitQueuesShard<'_> {
+    #[inline]
+    fn local(&self, q: usize) -> usize {
+        debug_assert!(
+            q >= self.q0 && q - self.q0 < self.head.len(),
+            "queue {q} outside shard [{}, {})",
+            self.q0,
+            self.q0 + self.head.len()
+        );
+        q - self.q0
+    }
+
+    /// Number of buffered flits in (global) queue `q`.
+    #[inline]
+    pub fn len(&self, q: usize) -> usize {
+        self.len[self.local(q)] as usize
+    }
+
+    /// Front flit of (global) queue `q`.
+    #[inline]
+    pub fn front(&self, q: usize) -> Option<Flit> {
+        let l = self.local(q);
+        if self.len[l] == 0 {
+            None
+        } else {
+            Some(self.buf[l * self.cap + self.head[l] as usize])
+        }
+    }
+
+    #[inline]
+    pub fn push_back(&mut self, q: usize, f: Flit) {
+        let l = self.local(q);
+        debug_assert!(
+            (self.len[l] as usize) < self.cap,
+            "queue {q} overflow (credit protocol violated)"
+        );
+        let slot = l * self.cap + (self.head[l] as usize + self.len[l] as usize) % self.cap;
+        self.buf[slot] = f;
+        self.len[l] += 1;
+    }
+
+    #[inline]
+    pub fn pop_front(&mut self, q: usize) -> Flit {
+        let l = self.local(q);
+        debug_assert!(self.len[l] > 0, "pop from empty queue {q}");
+        let f = self.buf[l * self.cap + self.head[l] as usize];
+        self.head[l] = ((self.head[l] as usize + 1) % self.cap) as u32;
+        self.len[l] -= 1;
+        f
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +285,53 @@ mod tests {
         q.push_back(0, flit(0));
         q.push_back(0, flit(1));
         q.push_back(0, flit(2));
+    }
+
+    #[test]
+    fn shard_views_alias_the_arena_by_global_id() {
+        let mut q = FlitQueues::new(6, 3);
+        q.push_back(0, flit(10));
+        q.push_back(4, flit(40));
+        q.push_back(4, flit(41));
+        {
+            let mut shards = q.shards(&[0, 2, 6]);
+            assert_eq!(shards.len(), 2);
+            // Global ids work in each shard's own range.
+            assert_eq!(shards[0].front(0).unwrap().packet, 10);
+            assert_eq!(shards[0].len(1), 0);
+            assert_eq!(shards[1].front(4).unwrap().packet, 40);
+            assert_eq!(shards[1].pop_front(4).packet, 40);
+            shards[1].push_back(5, flit(50));
+        }
+        // Mutations through the views land in the arena.
+        assert_eq!(q.len(4), 1);
+        assert_eq!(q.front(4).unwrap().packet, 41);
+        assert_eq!(q.front(5).unwrap().packet, 50);
+        assert_eq!(q.total(), 3);
+    }
+
+    #[test]
+    fn full_view_behaves_like_the_arena() {
+        let mut q = FlitQueues::new(3, 2);
+        {
+            let mut v = q.full_view();
+            v.push_back(2, flit(7));
+            // Ring wrap inside the view.
+            v.push_back(0, flit(1));
+            v.push_back(0, flit(2));
+            assert_eq!(v.pop_front(0).packet, 1);
+            v.push_back(0, flit(3));
+            assert_eq!(v.len(0), 2);
+        }
+        assert_eq!(q.pop_front(0).packet, 2);
+        assert_eq!(q.pop_front(0).packet, 3);
+        assert_eq!(q.front(2).unwrap().packet, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the arena")]
+    fn shard_bounds_must_cover_all_queues() {
+        let mut q = FlitQueues::new(4, 2);
+        let _ = q.shards(&[0, 3]);
     }
 }

@@ -13,16 +13,37 @@ use super::topology::{NodeId, Topology, TopologyKind};
 /// Sentinel in the output-port table for cur == dst or unreachable pairs.
 const NO_PORT: u16 = u16::MAX;
 
-/// Precomputed routing: `next[dst][cur]` = next hop from `cur` towards
-/// `dst` (cur == dst maps to itself), plus a flat per-(cur, dst)
-/// *output-port* cache so the simulator's inner loop is a single table
-/// read — no per-flit XY arithmetic or neighbor-position scan.
+/// XY direction indices into [`RouteTable::dir_ports`].
+const DIR_XNEG: usize = 0;
+const DIR_XPOS: usize = 1;
+const DIR_YNEG: usize = 2;
+const DIR_YPOS: usize = 3;
+
+/// Precomputed routing.
+///
+/// Mesh/torus (the large-fabric topologies) use *computed* routing: the
+/// output port towards a destination is dimension-order XY arithmetic
+/// plus a tiny per-node direction→port cache (`dir_ports`, 8 bytes per
+/// node). Irregular topologies keep the dense tables: `next[dst][cur]`
+/// (BFS next hop) and a flat per-(cur, dst) output-port cache. The dense
+/// tables are O(n²) — 167 MB for a 64x64 mesh — which is why mesh/torus
+/// must not build them (ROADMAP: large-mesh route tables); computed
+/// ports cost O(n) memory and one compare chain per lookup, and are
+/// asserted route-for-route identical to the dense construction on 8x8
+/// and 64x64 fabrics.
 #[derive(Debug, Clone)]
 pub struct RouteTable {
+    /// BFS next-hop table (irregular topologies only; empty for
+    /// mesh/torus).
     next: Vec<Vec<NodeId>>,
     /// out_ports[dst * nodes + cur] = output-port index at `cur` towards
     /// `dst` ([`NO_PORT`] on the diagonal and for unreachable pairs).
+    /// Irregular topologies only; empty for mesh/torus.
     out_ports: Vec<u16>,
+    /// Mesh/torus: per-node output port for each XY direction
+    /// `[-x, +x, -y, +y]`; [`NO_PORT`] where the direction has no link
+    /// (mesh boundary). Empty for irregular topologies.
+    dir_ports: Vec<[u16; 4]>,
     nodes: usize,
     kind: TopologyKind,
 }
@@ -30,8 +51,33 @@ pub struct RouteTable {
 impl RouteTable {
     pub fn build(topo: &Topology) -> Self {
         let n = topo.nodes();
+        let kind = topo.kind();
+        if matches!(kind, TopologyKind::Mesh { .. } | TopologyKind::Torus { .. }) {
+            // Computed routing: only the per-node direction→port map is
+            // materialized (one neighbor scan per node at build time).
+            let mut dir_ports = vec![[NO_PORT; 4]; n];
+            for (cur, ports) in dir_ports.iter_mut().enumerate() {
+                for dir in 0..4 {
+                    let Some(nxt) = dir_target(kind, cur, dir) else { continue };
+                    let port = topo
+                        .neighbors(cur)
+                        .iter()
+                        .position(|&(v, _)| v == nxt)
+                        .expect("mesh/torus neighbor missing for XY direction");
+                    debug_assert!(port < NO_PORT as usize);
+                    ports[dir] = port as u16;
+                }
+            }
+            return RouteTable {
+                next: Vec::new(),
+                out_ports: Vec::new(),
+                dir_ports,
+                nodes: n,
+                kind,
+            };
+        }
         let mut next = vec![vec![0; n]; n];
-        for dst in 0..n {
+        for (dst, row) in next.iter_mut().enumerate() {
             // BFS from dst; next hop towards dst = parent in BFS tree.
             let mut parent = vec![usize::MAX; n];
             let mut q = std::collections::VecDeque::new();
@@ -46,10 +92,16 @@ impl RouteTable {
                 }
             }
             for cur in 0..n {
-                next[dst][cur] = if parent[cur] == usize::MAX { cur } else { parent[cur] };
+                row[cur] = if parent[cur] == usize::MAX { cur } else { parent[cur] };
             }
         }
-        let mut table = RouteTable { next, out_ports: vec![NO_PORT; n * n], nodes: n, kind: topo.kind() };
+        let mut table = RouteTable {
+            next,
+            out_ports: vec![NO_PORT; n * n],
+            dir_ports: Vec::new(),
+            nodes: n,
+            kind,
+        };
         for dst in 0..n {
             for cur in 0..n {
                 if cur == dst {
@@ -71,12 +123,18 @@ impl RouteTable {
         table
     }
 
-    /// Output-port index at `cur` towards `dst` (`cur != dst`). O(1)
-    /// table lookup; panics (via debug assert) for unroutable pairs.
+    /// Output-port index at `cur` towards `dst` (`cur != dst`). O(1):
+    /// XY arithmetic + per-node direction cache on mesh/torus, a dense
+    /// table read otherwise; panics (via debug assert) for unroutable
+    /// pairs.
     #[inline]
     pub fn out_port(&self, cur: NodeId, dst: NodeId) -> usize {
         debug_assert_ne!(cur, dst, "no output port towards self");
-        let p = self.out_ports[dst * self.nodes + cur];
+        let p = match self.kind {
+            TopologyKind::Mesh { w, .. } => self.dir_ports[cur][mesh_dir(cur, dst, w)],
+            TopologyKind::Torus { w, h } => self.dir_ports[cur][torus_dir(cur, dst, w, h)],
+            _ => self.out_ports[dst * self.nodes + cur],
+        };
         debug_assert_ne!(p, NO_PORT, "no route {cur} -> {dst}");
         p as usize
     }
@@ -101,9 +159,88 @@ impl RouteTable {
             assert_ne!(nxt, cur, "routing stuck at {cur} towards {dst}");
             cur = nxt;
             hops += 1;
-            assert!(hops <= self.next.len(), "routing loop {src}->{dst}");
+            assert!(hops <= self.nodes, "routing loop {src}->{dst}");
         }
         hops
+    }
+}
+
+/// Neighbor reached from `cur` in XY direction `dir`, or `None` when the
+/// direction has no link (mesh boundary, or a 1-wide torus dimension).
+/// For 2-wide torus dimensions both directions resolve to the same
+/// neighbor (the constructor skips the duplicate wrap link), so both map
+/// to the same port — exactly what dimension-order routing needs.
+fn dir_target(kind: TopologyKind, cur: NodeId, dir: usize) -> Option<NodeId> {
+    match kind {
+        TopologyKind::Mesh { w, h } => {
+            let (cx, cy) = (cur % w, cur / w);
+            match dir {
+                DIR_XNEG if cx > 0 => Some(cur - 1),
+                DIR_XPOS if cx + 1 < w => Some(cur + 1),
+                DIR_YNEG if cy > 0 => Some(cur - w),
+                DIR_YPOS if cy + 1 < h => Some(cur + w),
+                _ => None,
+            }
+        }
+        TopologyKind::Torus { w, h } => {
+            let (cx, cy) = (cur % w, cur / w);
+            let t = match dir {
+                DIR_XNEG => cy * w + (cx + w - 1) % w,
+                DIR_XPOS => cy * w + (cx + 1) % w,
+                DIR_YNEG => ((cy + h - 1) % h) * w + cx,
+                DIR_YPOS => ((cy + 1) % h) * w + cx,
+                _ => unreachable!(),
+            };
+            if t == cur {
+                None // 1-wide dimension: no link in this direction
+            } else {
+                Some(t)
+            }
+        }
+        _ => unreachable!("dir_target is mesh/torus-only"),
+    }
+}
+
+/// XY direction taken by [`xy_mesh`] from `cur` towards `dst` — same
+/// branch order, so the computed port always equals the port towards
+/// `xy_mesh`'s next hop.
+#[inline]
+fn mesh_dir(cur: NodeId, dst: NodeId, w: usize) -> usize {
+    let (cx, cy) = (cur % w, cur / w);
+    let (dx, dy) = (dst % w, dst / w);
+    if cx < dx {
+        DIR_XPOS
+    } else if cx > dx {
+        DIR_XNEG
+    } else if cy < dy {
+        DIR_YPOS
+    } else {
+        debug_assert!(cy > dy, "no direction towards self");
+        DIR_YNEG
+    }
+}
+
+/// XY direction taken by [`xy_torus`] from `cur` towards `dst` (shorter
+/// wrap, forward on ties — same tie-break as [`xy_torus`]).
+#[inline]
+fn torus_dir(cur: NodeId, dst: NodeId, w: usize, h: usize) -> usize {
+    let (cx, cy) = (cur % w, cur / w);
+    let (dx, dy) = (dst % w, dst / w);
+    if cx != dx {
+        let fwd = (dx + w - cx) % w;
+        if fwd <= w - fwd {
+            DIR_XPOS
+        } else {
+            DIR_XNEG
+        }
+    } else {
+        debug_assert_ne!(cy, dy, "no direction towards self");
+        let fwd = (dy + h - cy) % h;
+        if fwd <= h - fwd {
+            DIR_YPOS
+        } else {
+            DIR_YNEG
+        }
     }
 }
 
@@ -213,6 +350,64 @@ mod tests {
                         "{s}->{d} on {:?}",
                         t.kind()
                     );
+                }
+            }
+        }
+    }
+
+    /// Route-for-route parity of the computed mesh/torus ports against a
+    /// per-pair neighbor scan (the construction the dense table used),
+    /// on 8x8 and 64x64 fabrics (ROADMAP: large-mesh route tables).
+    #[test]
+    fn computed_ports_match_scan_on_8x8_and_64x64() {
+        for (w, h) in [(8usize, 8usize), (64, 64)] {
+            for t in [Topology::mesh(w, h).unwrap(), Topology::torus(w, h).unwrap()] {
+                let rt = RouteTable::build(&t);
+                for cur in 0..t.nodes() {
+                    for dst in 0..t.nodes() {
+                        if cur == dst {
+                            continue;
+                        }
+                        let nxt = rt.next_hop(cur, dst);
+                        let want = t
+                            .neighbors(cur)
+                            .iter()
+                            .position(|&(v, _)| v == nxt)
+                            .expect("XY next hop must be a neighbor");
+                        assert_eq!(
+                            rt.out_port(cur, dst),
+                            want,
+                            "{cur}->{dst} on {:?} {w}x{h}",
+                            t.kind()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Narrow torus dimensions (w or h in {1, 2}) skip duplicate/self
+    /// wrap links; the direction cache must still resolve every pair.
+    #[test]
+    fn computed_ports_cover_narrow_torus_dims() {
+        for (w, h) in [(2usize, 5usize), (5, 2), (2, 2), (1, 4), (4, 1)] {
+            let t = Topology::torus(w, h).unwrap();
+            if t.nodes() < 2 {
+                continue;
+            }
+            let rt = RouteTable::build(&t);
+            for cur in 0..t.nodes() {
+                for dst in 0..t.nodes() {
+                    if cur == dst {
+                        continue;
+                    }
+                    let nxt = rt.next_hop(cur, dst);
+                    let want = t
+                        .neighbors(cur)
+                        .iter()
+                        .position(|&(v, _)| v == nxt)
+                        .expect("XY next hop must be a neighbor");
+                    assert_eq!(rt.out_port(cur, dst), want, "{cur}->{dst} {w}x{h}");
                 }
             }
         }

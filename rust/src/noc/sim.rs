@@ -34,14 +34,49 @@
 //!   drained and reallocated every cycle. Push is O(1); the end-of-cycle
 //!   drain hands back the due bucket's storage, which is recycled.
 //! * **Routing** — the output port towards a destination is a single
-//!   table read ([`RouteTable::out_port`]), and the far-end input port of
-//!   every link is a precomputed reverse-port lookup
+//!   computed/table read ([`RouteTable::out_port`]), and the far-end
+//!   input port of every link is a precomputed reverse-port lookup
 //!   ([`Topology::reverse_port`]); the old code recomputed both with
 //!   linear neighbor scans per flit per cycle.
 //! * **Worklist** — per-node buffered-flit counts (`occ`) let the loop
 //!   skip idle routers outright: an empty router with an empty source
 //!   queue cannot allocate, traverse, or emit events, so skipping it is
 //!   exactly behavior-preserving.
+//!
+//! # Parallel stepping — the determinism contract
+//!
+//! With [`NocParams::threads`] > 1 the per-node phases of a cycle run
+//! shard-parallel on a persistent [`WorkerPool`] owned by the simulator.
+//! The node range is partitioned once into contiguous shards (balanced
+//! by queue count; [`NocSim::set_shards`] overrides the partition). The
+//! flat-arena layout makes every per-node index range contiguous, so
+//! each shard gets disjoint `&mut` views of the buffers
+//! ([`FlitQueues::shards`]), credits, owners, round-robin pointers,
+//! occupancy counts and source queues — a node phase touches no state
+//! outside its shard. Determinism is a *contract*, not an accident:
+//!
+//! * **Shard-local writes only.** Inside the parallel phase a node may
+//!   mutate arena state only within its own shard's range. Everything
+//!   that crosses a shard boundary — flit arrivals, credit returns,
+//!   ejection records, hop counts — is appended (in node order) to the
+//!   shard's private [`ShardScratch`], never applied directly.
+//! * **Order-merged side effects.** After the shards join, a sequential
+//!   merge drains every scratch in global node order
+//!   ([`EventWheel::push_all`]), replaying the exact push sequence the
+//!   single-thread loop produces: the wheels' FIFO tie-break order,
+//!   packet bookkeeping, `StreamingHist` latency samples and every
+//!   [`SimReport`] bit are identical for every partition and thread
+//!   count (tests/noc_golden.rs threads sweep,
+//!   `prop_shard_partition_invariance`).
+//! * **Position-keyed randomness.** The cycle loop draws no randomness
+//!   today; if a future phase ever does (adaptive routing, fault
+//!   injection), it must use [`crate::sim::CounterRng`] keyed by
+//!   (cycle, node, draw index) so draw values depend on position, never
+//!   on which thread ran first.
+//!
+//! The parallel path costs two small `Vec`s of shard views per cycle;
+//! the default `threads = 1` path builds a single whole-arena view with
+//! no per-step allocation and is exactly the sequential simulator.
 //!
 //! Behavior is pinned by differential golden tests against
 //! [`super::refsim::RefNocSim`], the retained pre-rewrite implementation:
@@ -50,11 +85,11 @@
 
 use std::collections::VecDeque;
 
-use super::router::{Flit, FlitKind, FlitQueues};
+use super::router::{Flit, FlitKind, FlitQueues, FlitQueuesShard};
 use super::routing::RouteTable;
 use super::topology::{NodeId, Topology};
 use crate::metrics::{Category, Metrics};
-use crate::sim::{Cycle, EventWheel, StreamingHist};
+use crate::sim::{Cycle, EventWheel, StreamingHist, WorkerPool};
 
 /// Microarchitectural NoC parameters (config defaults are FlooNoC-like).
 #[derive(Debug, Clone, Copy)]
@@ -67,6 +102,10 @@ pub struct NocParams {
     pub router_latency: Cycle,
     /// Link + router energy per bit per hop (pJ).
     pub hop_energy_pj_per_bit: f64,
+    /// Worker threads for shard-parallel stepping (1 = sequential).
+    /// Reports are bit-identical at every thread count — see the module
+    /// docs' determinism contract.
+    pub threads: usize,
 }
 
 impl Default for NocParams {
@@ -77,6 +116,7 @@ impl Default for NocParams {
             flit_bytes: 32,
             router_latency: 3,
             hop_energy_pj_per_bit: 0.15,
+            threads: 1,
         }
     }
 }
@@ -89,6 +129,7 @@ impl NocParams {
             flit_bytes: cfg.flit_bytes,
             router_latency: cfg.router_latency_cycles,
             hop_energy_pj_per_bit: cfg.hop_energy_pj_per_bit,
+            threads: cfg.threads,
         }
     }
 }
@@ -138,6 +179,130 @@ struct CreditReturn {
 /// Sentinel for an unallocated output (port, vc).
 const NO_OWNER: u32 = u32::MAX;
 
+/// Per-shard side-effect buffer. During the parallel phase a shard only
+/// appends here (in node order); the sequential merge applies every
+/// scratch in global node order — see the module docs' determinism
+/// contract.
+#[derive(Debug, Default)]
+struct ShardScratch {
+    /// Flit arrivals to schedule on the global wheel.
+    arrivals: Vec<(Cycle, Arrival)>,
+    /// Credit returns to schedule on the global wheel (may target nodes
+    /// in *other* shards — the upstream router of a boundary link).
+    credit_returns: Vec<(Cycle, CreditReturn)>,
+    /// Packets whose tail flit ejected this cycle (node order).
+    ejections: Vec<usize>,
+    /// Link traversals this cycle (merged into the global counter).
+    flit_hops: u64,
+    /// Per-cycle input-port busy scratch (sized `max_degree + 1`).
+    input_busy: Vec<bool>,
+}
+
+impl ShardScratch {
+    fn new(max_ports: usize) -> Self {
+        ShardScratch { input_busy: vec![false; max_ports], ..Default::default() }
+    }
+}
+
+/// Where a node phase's cross-node side effects go. Two zero-cost
+/// implementations keep the loop body single-source: the sequential
+/// (`threads = 1`) path pushes straight into the wheels and stats — the
+/// exact pre-parallel hot loop, no buffering — while the parallel path
+/// appends to a [`ShardScratch`] for the ordered merge.
+trait Effects {
+    fn hop(&mut self);
+    fn credit(&mut self, at: Cycle, c: CreditReturn);
+    fn arrival(&mut self, at: Cycle, a: Arrival);
+    fn eject(&mut self, packet: usize);
+}
+
+/// Sequential sink: apply effects immediately (single-shard fast path).
+struct DirectEffects<'a> {
+    arrivals: &'a mut EventWheel<Arrival>,
+    credit_returns: &'a mut EventWheel<CreditReturn>,
+    packets: &'a mut [PacketStats],
+    lat_hist: &'a mut StreamingHist,
+    delivered: &'a mut usize,
+    flit_hops: &'a mut u64,
+    now_next: Cycle,
+}
+
+impl Effects for DirectEffects<'_> {
+    #[inline]
+    fn hop(&mut self) {
+        *self.flit_hops += 1;
+    }
+    #[inline]
+    fn credit(&mut self, at: Cycle, c: CreditReturn) {
+        self.credit_returns.push(at, c);
+    }
+    #[inline]
+    fn arrival(&mut self, at: Cycle, a: Arrival) {
+        self.arrivals.push(at, a);
+    }
+    #[inline]
+    fn eject(&mut self, packet: usize) {
+        let p = &mut self.packets[packet];
+        p.ejected_at = Some(self.now_next);
+        self.lat_hist.record(self.now_next - p.injected_at);
+        *self.delivered += 1;
+    }
+}
+
+/// Parallel sink: buffer effects in node order for the sequential merge.
+struct ScratchEffects<'a> {
+    arrivals: &'a mut Vec<(Cycle, Arrival)>,
+    credit_returns: &'a mut Vec<(Cycle, CreditReturn)>,
+    ejections: &'a mut Vec<usize>,
+    flit_hops: &'a mut u64,
+}
+
+impl Effects for ScratchEffects<'_> {
+    #[inline]
+    fn hop(&mut self) {
+        *self.flit_hops += 1;
+    }
+    #[inline]
+    fn credit(&mut self, at: Cycle, c: CreditReturn) {
+        self.credit_returns.push((at, c));
+    }
+    #[inline]
+    fn arrival(&mut self, at: Cycle, a: Arrival) {
+        self.arrivals.push((at, a));
+    }
+    #[inline]
+    fn eject(&mut self, packet: usize) {
+        self.ejections.push(packet);
+    }
+}
+
+/// Disjoint per-shard working set for one cycle: shared read-only
+/// structure plus `&mut` views covering exactly the shard's node range.
+/// `Send` by construction when the sink is (slices of `Send` data), so
+/// instances can be moved to pool workers.
+struct ShardCtx<'a, E> {
+    topo: &'a Topology,
+    routes: &'a RouteTable,
+    qbase: &'a [usize],
+    pbase: &'a [usize],
+    bufs: FlitQueuesShard<'a>,
+    credits: &'a mut [u32],
+    owner: &'a mut [u32],
+    rr: &'a mut [u32],
+    occ: &'a mut [usize],
+    inject_q: &'a mut [VecDeque<Flit>],
+    input_busy: &'a mut [bool],
+    effects: E,
+    /// Node / queue / port offsets of this shard's ranges.
+    n0: usize,
+    n1: usize,
+    q0: usize,
+    p0: usize,
+    vcs: usize,
+    cap: usize,
+    router_latency: Cycle,
+}
+
 /// The simulator.
 pub struct NocSim {
     topo: Topology,
@@ -156,6 +321,9 @@ pub struct NocSim {
     qbase: Vec<usize>,
     /// First port id of each node (`degree + 1` ports per node).
     pbase: Vec<usize>,
+    /// Total queue / port counts (the final prefix values).
+    nq: usize,
+    np: usize,
     /// Buffered flits per node — the active-node worklist: a node with no
     /// buffered flits and an empty source queue is skipped entirely.
     occ: Vec<usize>,
@@ -164,8 +332,16 @@ pub struct NocSim {
     inject_q: Vec<VecDeque<Flit>>,
     arrivals: EventWheel<Arrival>,
     credit_returns: EventWheel<CreditReturn>,
-    /// Per-cycle scratch, reused across steps (sized `max_degree + 1`).
-    input_busy: Vec<bool>,
+    /// Contiguous shard partition: node boundaries (len = shards + 1),
+    /// plus the derived queue/port boundaries.
+    shard_bounds: Vec<usize>,
+    shard_qbounds: Vec<usize>,
+    shard_pbounds: Vec<usize>,
+    /// One side-effect buffer per shard, reused across cycles.
+    scratch: Vec<ShardScratch>,
+    /// Persistent workers (shards - 1 of them; the caller's thread runs
+    /// shard 0). `None` when single-sharded.
+    pool: Option<WorkerPool>,
     /// Streaming packet-latency stats, recorded at tail ejection, so
     /// `report()` is O(latency range) instead of sort-all-latencies.
     /// Quantiles are exact order statistics — bit-identical to the
@@ -179,6 +355,7 @@ pub struct NocSim {
 
 impl NocSim {
     pub fn new(topo: Topology, params: NocParams) -> Self {
+        assert!(params.vcs >= 1, "need at least one virtual channel");
         let routes = RouteTable::build(&topo);
         let nodes = topo.nodes();
         let vcs = params.vcs;
@@ -193,18 +370,22 @@ impl NocSim {
             p += ports;
         }
         let inject_q = (0..nodes).map(|_| VecDeque::new()).collect();
-        NocSim {
+        let mut sim = NocSim {
             bufs: FlitQueues::new(q, params.buf_flits),
             credits: vec![params.buf_flits as u32; q],
             owner: vec![NO_OWNER; q],
             rr: vec![0; p],
-            qbase,
-            pbase,
+            nq: q,
+            np: p,
             occ: vec![0; nodes],
             inject_q,
             arrivals: EventWheel::with_horizon(params.router_latency as usize + 2),
             credit_returns: EventWheel::with_horizon(4),
-            input_busy: vec![false; topo.max_degree() + 1],
+            shard_bounds: Vec::new(),
+            shard_qbounds: Vec::new(),
+            shard_pbounds: Vec::new(),
+            scratch: Vec::new(),
+            pool: None,
             lat_hist: StreamingHist::new(),
             packets: Vec::new(),
             now: 0,
@@ -213,7 +394,12 @@ impl NocSim {
             topo,
             routes,
             params,
-        }
+            qbase,
+            pbase,
+        };
+        let bounds = partition_by_queues(&sim.qbase, sim.nq, nodes, params.threads.max(1));
+        sim.apply_shards(bounds);
+        sim
     }
 
     pub fn topology(&self) -> &Topology {
@@ -226,6 +412,44 @@ impl NocSim {
 
     pub fn packets(&self) -> &[PacketStats] {
         &self.packets
+    }
+
+    /// Number of shards the node range is partitioned into.
+    pub fn shards(&self) -> usize {
+        self.shard_bounds.len() - 1
+    }
+
+    /// Override the shard partition with explicit node-index boundaries
+    /// (`bounds[0] == 0`, strictly increasing, last == node count).
+    /// Exposed for tuning and for the shard-invariance property tests:
+    /// the determinism contract guarantees bit-identical reports for
+    /// every valid partition.
+    pub fn set_shards(&mut self, bounds: &[NodeId]) {
+        let nodes = self.topo.nodes();
+        assert!(bounds.len() >= 2, "need at least one shard");
+        assert_eq!(bounds[0], 0, "bounds must start at node 0");
+        assert_eq!(*bounds.last().unwrap(), nodes, "bounds must end at the node count");
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must be strictly increasing");
+        self.apply_shards(bounds.to_vec());
+    }
+
+    fn apply_shards(&mut self, bounds: Vec<usize>) {
+        let nodes = self.topo.nodes();
+        let nshards = bounds.len() - 1;
+        self.shard_qbounds = bounds
+            .iter()
+            .map(|&b| if b == nodes { self.nq } else { self.qbase[b] })
+            .collect();
+        self.shard_pbounds = bounds
+            .iter()
+            .map(|&b| if b == nodes { self.np } else { self.pbase[b] })
+            .collect();
+        let ports = self.topo.max_degree() + 1;
+        self.scratch = (0..nshards).map(|_| ShardScratch::new(ports)).collect();
+        // Workers persist for the simulator's lifetime; the stepping
+        // thread itself runs shard 0, so `shards - 1` workers suffice.
+        self.pool = if nshards > 1 { Some(WorkerPool::new(nshards - 1)) } else { None };
+        self.shard_bounds = bounds;
     }
 
     /// Queue a packet for injection at the current cycle. Returns its id.
@@ -262,146 +486,193 @@ impl NocSim {
         id
     }
 
-    /// Advance one cycle.
+    /// Advance one cycle. Sequential (`threads = 1`): one whole-arena
+    /// pass with direct effect application — the exact pre-parallel hot
+    /// loop. Sharded: parallel per-node phases into per-shard scratches,
+    /// then the sequential node-order merge. Both end with event
+    /// delivery.
     pub fn step(&mut self) {
+        let now_next = self.now + 1;
+        if self.shard_bounds.len() - 1 == 1 {
+            self.step_single(now_next);
+        } else {
+            self.step_sharded(now_next);
+            self.merge_scratches(now_next);
+        }
+        self.deliver_events(now_next);
+        self.now = now_next;
+    }
+
+    /// Single-shard fast path: whole-arena view, direct pushes into the
+    /// wheels and stats, no scratch buffering, no per-step allocation.
+    fn step_single(&mut self, now_next: Cycle) {
+        let now = self.now;
+        let nodes = self.topo.nodes();
+        let NocSim {
+            topo,
+            routes,
+            params,
+            bufs,
+            credits,
+            owner,
+            rr,
+            qbase,
+            pbase,
+            occ,
+            inject_q,
+            scratch,
+            arrivals,
+            credit_returns,
+            packets,
+            lat_hist,
+            delivered,
+            flit_hops,
+            ..
+        } = self;
+        let mut ctx = ShardCtx {
+            topo,
+            routes,
+            qbase,
+            pbase,
+            bufs: bufs.full_view(),
+            credits,
+            owner,
+            rr,
+            occ,
+            inject_q,
+            input_busy: &mut scratch[0].input_busy,
+            effects: DirectEffects {
+                arrivals,
+                credit_returns,
+                packets,
+                lat_hist,
+                delivered,
+                flit_hops,
+                now_next,
+            },
+            n0: 0,
+            n1: nodes,
+            q0: 0,
+            p0: 0,
+            vcs: params.vcs,
+            cap: params.buf_flits,
+            router_latency: params.router_latency,
+        };
+        ctx.run(now, now_next);
+    }
+
+    /// Phases 1–2 (injection, switch allocation + traversal) for every
+    /// node, executed shard-parallel. All cross-shard effects land in
+    /// the per-shard scratches for [`NocSim::merge_scratches`].
+    fn step_sharded(&mut self, now_next: Cycle) {
+        let nshards = self.shard_bounds.len() - 1;
+        let now = self.now;
         let vcs = self.params.vcs;
         let cap = self.params.buf_flits;
-        let now_next = self.now + 1;
-        let nodes = self.topo.nodes();
+        let router_latency = self.params.router_latency;
+        let NocSim {
+            topo,
+            routes,
+            bufs,
+            credits,
+            owner,
+            rr,
+            qbase,
+            pbase,
+            occ,
+            inject_q,
+            scratch,
+            shard_bounds,
+            shard_qbounds,
+            shard_pbounds,
+            pool,
+            ..
+        } = self;
+        let topo: &Topology = topo;
+        let routes: &RouteTable = routes;
+        let qbase: &[usize] = qbase;
+        let pbase: &[usize] = pbase;
 
-        for n in 0..nodes {
-            // Worklist: idle routers (no buffered flits, nothing to
-            // inject) can neither move flits nor change state — skip.
-            if self.occ[n] == 0 && self.inject_q[n].is_empty() {
-                continue;
-            }
-            let deg = self.topo.degree(n);
-            let ports_in = deg + 1;
-            let qb = self.qbase[n];
-
-            // 1. Local injection: move flits from the source queue into
-            //    the local input port's VC buffer while space remains.
-            if !self.inject_q[n].is_empty() {
-                let local_q = qb + deg * vcs;
-                loop {
-                    let Some(&flit) = self.inject_q[n].front() else { break };
-                    let q = local_q + flit.vc;
-                    if self.bufs.len(q) >= cap {
-                        break;
-                    }
-                    let f = self.inject_q[n].pop_front().unwrap();
-                    self.bufs.push_back(q, f);
-                    self.occ[n] += 1;
-                }
-                if self.occ[n] == 0 {
-                    continue;
-                }
-            }
-
-            // 2. Switch allocation + traversal, double-buffered. Output
-            //    ports in fixed order: links first, then ejection.
-            self.input_busy[..ports_in].fill(false);
-            for p_out in 0..=deg {
-                // 2a. VC allocation: head flits claim a free (p_out, vc).
-                for p_in in 0..ports_in {
-                    for vc in 0..vcs {
-                        let Some(flit) = self.bufs.front(qb + p_in * vcs + vc) else {
-                            continue;
-                        };
-                        if !flit.is_head {
-                            continue; // body/tail follow the allocation
-                        }
-                        let want = if flit.dst == n {
-                            deg
-                        } else {
-                            self.routes.out_port(n, flit.dst)
-                        };
-                        if want != p_out {
-                            continue;
-                        }
-                        let o = qb + p_out * vcs + vc;
-                        if self.owner[o] == NO_OWNER {
-                            self.owner[o] = (p_in * vcs + vc) as u32;
-                        }
-                    }
-                }
-                // 2b. Switch traversal: round-robin over VCs that own this
-                //     output; forward at most one flit per output port.
-                let rr0 = self.rr[self.pbase[n] + p_out] as usize;
-                for k in 0..vcs {
-                    let vc = (rr0 + k) % vcs;
-                    let o = qb + p_out * vcs + vc;
-                    let own = self.owner[o];
-                    if own == NO_OWNER {
-                        continue;
-                    }
-                    let p_in = own as usize / vcs;
-                    let in_vc = own as usize % vcs;
-                    if self.input_busy[p_in] {
-                        continue;
-                    }
-                    let q = qb + p_in * vcs + in_vc;
-                    let Some(flit) = self.bufs.front(q) else {
-                        continue;
-                    };
-                    // Only flits of the owning packet may use the slot.
-                    // The queue is FIFO per (port, vc); the owning
-                    // packet's flits are contiguous (wormhole), so the
-                    // front flit routed to this port belongs to it.
-                    let want = if flit.dst == n {
-                        deg
-                    } else {
-                        self.routes.out_port(n, flit.dst)
-                    };
-                    if want != p_out {
-                        continue;
-                    }
-                    let is_ejection = p_out == deg;
-                    if !is_ejection && self.credits[o] == 0 {
-                        continue;
-                    }
-                    // Commit the move.
-                    let flit = self.bufs.pop_front(q);
-                    self.occ[n] -= 1;
-                    self.input_busy[p_in] = true;
-                    self.rr[self.pbase[n] + p_out] = ((vc + 1) % vcs) as u32;
-                    if flit.kind == FlitKind::Tail {
-                        self.owner[o] = NO_OWNER;
-                    }
-                    // Return a credit upstream for the buffer we freed
-                    // (unless it was the local injection queue, which is
-                    // backpressured directly). Credits are indexed by the
-                    // upstream router's output port towards us — the
-                    // precomputed reverse port.
-                    if p_in < deg {
-                        let up = self.topo.neighbor(n, p_in);
-                        let up_out = self.topo.reverse_port(n, p_in);
-                        self.credit_returns.push(
-                            now_next,
-                            CreditReturn { node: up, out_port: up_out, vc: in_vc },
-                        );
-                    }
-                    if is_ejection {
-                        // Ejected at the local sink.
-                        if flit.kind == FlitKind::Tail {
-                            let p = &mut self.packets[flit.packet];
-                            p.ejected_at = Some(now_next);
-                            self.lat_hist.record(now_next - p.injected_at);
-                            self.delivered += 1;
-                        }
-                    } else {
-                        let next = self.topo.neighbor(n, p_out);
-                        let dest_port = self.topo.reverse_port(n, p_out);
-                        self.credits[o] -= 1;
-                        self.flit_hops += 1;
-                        let at = (self.now + self.params.router_latency).max(now_next);
-                        self.arrivals.push(at, Arrival { node: next, port: dest_port, flit });
-                    }
-                }
-            }
+        // Carve disjoint per-shard views out of the flat arenas.
+        let bufs_shards = bufs.shards(shard_qbounds);
+        let (mut credits_r, mut owner_r) = (&mut credits[..], &mut owner[..]);
+        let mut rr_r = &mut rr[..];
+        let mut occ_r = &mut occ[..];
+        let mut inj_r = &mut inject_q[..];
+        let mut ctxs = Vec::with_capacity(nshards);
+        for (i, (scr, bufs_sh)) in scratch.iter_mut().zip(bufs_shards).enumerate() {
+            let (n0, n1) = (shard_bounds[i], shard_bounds[i + 1]);
+            let (q0, q1) = (shard_qbounds[i], shard_qbounds[i + 1]);
+            let (p0, p1) = (shard_pbounds[i], shard_pbounds[i + 1]);
+            let (c, rest) = std::mem::take(&mut credits_r).split_at_mut(q1 - q0);
+            credits_r = rest;
+            let (ow, rest) = std::mem::take(&mut owner_r).split_at_mut(q1 - q0);
+            owner_r = rest;
+            let (r, rest) = std::mem::take(&mut rr_r).split_at_mut(p1 - p0);
+            rr_r = rest;
+            let (oc, rest) = std::mem::take(&mut occ_r).split_at_mut(n1 - n0);
+            occ_r = rest;
+            let (inj, rest) = std::mem::take(&mut inj_r).split_at_mut(n1 - n0);
+            inj_r = rest;
+            let ShardScratch { arrivals, credit_returns, ejections, flit_hops, input_busy } = scr;
+            ctxs.push(ShardCtx {
+                topo,
+                routes,
+                qbase,
+                pbase,
+                bufs: bufs_sh,
+                credits: c,
+                owner: ow,
+                rr: r,
+                occ: oc,
+                inject_q: inj,
+                input_busy,
+                effects: ScratchEffects { arrivals, credit_returns, ejections, flit_hops },
+                n0,
+                n1,
+                q0,
+                p0,
+                vcs,
+                cap,
+                router_latency,
+            });
         }
+        let pool = pool.as_mut().expect("multi-shard sims own a worker pool");
+        pool.scoped(|scope| {
+            let mut it = ctxs.into_iter();
+            let mut first = it.next().expect("at least one shard");
+            for mut ctx in it {
+                scope.execute(move || ctx.run(now, now_next));
+            }
+            // The stepping thread works too instead of idling at the
+            // barrier.
+            first.run(now, now_next);
+        });
+    }
 
-        // 3. Deliver events due at the end of this cycle.
+    /// Sequential merge: apply every shard's side effects in global node
+    /// order, replaying the single-thread push/record sequence exactly.
+    fn merge_scratches(&mut self, now_next: Cycle) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for s in &mut scratch {
+            self.flit_hops += s.flit_hops;
+            s.flit_hops = 0;
+            self.arrivals.push_all(s.arrivals.drain(..));
+            self.credit_returns.push_all(s.credit_returns.drain(..));
+            for &pkt in &s.ejections {
+                let p = &mut self.packets[pkt];
+                p.ejected_at = Some(now_next);
+                self.lat_hist.record(now_next - p.injected_at);
+                self.delivered += 1;
+            }
+            s.ejections.clear();
+        }
+        self.scratch = scratch;
+    }
+
+    /// Phase 3: deliver events due at the end of this cycle.
+    fn deliver_events(&mut self, now_next: Cycle) {
+        let vcs = self.params.vcs;
         let due = self.arrivals.take_due(now_next);
         for &(_, a) in &due {
             let q = self.qbase[a.node] + a.port * vcs + a.flit.vc;
@@ -414,8 +685,6 @@ impl NocSim {
             self.credits[self.qbase[c.node] + c.out_port * vcs + c.vc] += 1;
         }
         self.credit_returns.recycle(due);
-
-        self.now = now_next;
     }
 
     /// True when no flits remain anywhere.
@@ -474,6 +743,173 @@ impl NocSim {
                 delivered_flits as f64 / self.now as f64 / self.topo.nodes() as f64
             },
             metrics,
+        }
+    }
+}
+
+/// Partition `0..nodes` into at most `shards` contiguous ranges balanced
+/// by queue count (≈ buffer state per shard). Always returns a valid
+/// boundary vector: starts at 0, strictly increasing, ends at `nodes`.
+fn partition_by_queues(qbase: &[usize], total_q: usize, nodes: usize, shards: usize) -> Vec<usize> {
+    let shards = shards.clamp(1, nodes.max(1));
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0usize);
+    for i in 1..shards {
+        let target = total_q * i / shards;
+        let b = qbase
+            .partition_point(|&qb| qb < target)
+            .max(bounds[i - 1] + 1)
+            .min(nodes - (shards - i));
+        bounds.push(b);
+    }
+    bounds.push(nodes);
+    bounds
+}
+
+impl<E: Effects> ShardCtx<'_, E> {
+    /// Injection + switch allocation/traversal for every node in
+    /// `n0..n1`. One loop body for both execution modes: offset
+    /// indexing into the shard's `&mut` views, side effects routed
+    /// through the [`Effects`] sink — direct pushes sequentially,
+    /// scratch buffering in parallel (see the module docs' determinism
+    /// contract).
+    fn run(&mut self, now: Cycle, now_next: Cycle) {
+        let vcs = self.vcs;
+        let cap = self.cap;
+        for n in self.n0..self.n1 {
+            let ln = n - self.n0;
+            // Worklist: idle routers (no buffered flits, nothing to
+            // inject) can neither move flits nor change state — skip.
+            if self.occ[ln] == 0 && self.inject_q[ln].is_empty() {
+                continue;
+            }
+            let deg = self.topo.degree(n);
+            let ports_in = deg + 1;
+            let qb = self.qbase[n];
+
+            // 1. Local injection: move flits from the source queue into
+            //    the local input port's VC buffer while space remains.
+            if !self.inject_q[ln].is_empty() {
+                let local_q = qb + deg * vcs;
+                loop {
+                    let Some(&flit) = self.inject_q[ln].front() else { break };
+                    let q = local_q + flit.vc;
+                    if self.bufs.len(q) >= cap {
+                        break;
+                    }
+                    let f = self.inject_q[ln].pop_front().unwrap();
+                    self.bufs.push_back(q, f);
+                    self.occ[ln] += 1;
+                }
+                if self.occ[ln] == 0 {
+                    continue;
+                }
+            }
+
+            // 2. Switch allocation + traversal, double-buffered. Output
+            //    ports in fixed order: links first, then ejection.
+            self.input_busy[..ports_in].fill(false);
+            for p_out in 0..=deg {
+                // 2a. VC allocation: head flits claim a free (p_out, vc).
+                for p_in in 0..ports_in {
+                    for vc in 0..vcs {
+                        let Some(flit) = self.bufs.front(qb + p_in * vcs + vc) else {
+                            continue;
+                        };
+                        if !flit.is_head {
+                            continue; // body/tail follow the allocation
+                        }
+                        let want = if flit.dst == n {
+                            deg
+                        } else {
+                            self.routes.out_port(n, flit.dst)
+                        };
+                        if want != p_out {
+                            continue;
+                        }
+                        let o = qb + p_out * vcs + vc;
+                        if self.owner[o - self.q0] == NO_OWNER {
+                            self.owner[o - self.q0] = (p_in * vcs + vc) as u32;
+                        }
+                    }
+                }
+                // 2b. Switch traversal: round-robin over VCs that own this
+                //     output; forward at most one flit per output port.
+                let rrp = self.pbase[n] + p_out - self.p0;
+                let rr0 = self.rr[rrp] as usize;
+                for k in 0..vcs {
+                    let vc = (rr0 + k) % vcs;
+                    let o = qb + p_out * vcs + vc;
+                    let own = self.owner[o - self.q0];
+                    if own == NO_OWNER {
+                        continue;
+                    }
+                    let p_in = own as usize / vcs;
+                    let in_vc = own as usize % vcs;
+                    if self.input_busy[p_in] {
+                        continue;
+                    }
+                    let q = qb + p_in * vcs + in_vc;
+                    let Some(flit) = self.bufs.front(q) else {
+                        continue;
+                    };
+                    // Only flits of the owning packet may use the slot.
+                    // The queue is FIFO per (port, vc); the owning
+                    // packet's flits are contiguous (wormhole), so the
+                    // front flit routed to this port belongs to it.
+                    let want = if flit.dst == n {
+                        deg
+                    } else {
+                        self.routes.out_port(n, flit.dst)
+                    };
+                    if want != p_out {
+                        continue;
+                    }
+                    let is_ejection = p_out == deg;
+                    if !is_ejection && self.credits[o - self.q0] == 0 {
+                        continue;
+                    }
+                    // Commit the move.
+                    let flit = self.bufs.pop_front(q);
+                    self.occ[ln] -= 1;
+                    self.input_busy[p_in] = true;
+                    self.rr[rrp] = ((vc + 1) % vcs) as u32;
+                    if flit.kind == FlitKind::Tail {
+                        self.owner[o - self.q0] = NO_OWNER;
+                    }
+                    // Return a credit upstream for the buffer we freed
+                    // (unless it was the local injection queue, which is
+                    // backpressured directly). Credits are indexed by the
+                    // upstream router's output port towards us — the
+                    // precomputed reverse port. The upstream node may
+                    // live in another shard, so this goes through the
+                    // effects sink.
+                    if p_in < deg {
+                        let up = self.topo.neighbor(n, p_in);
+                        let up_out = self.topo.reverse_port(n, p_in);
+                        self.effects.credit(
+                            now_next,
+                            CreditReturn { node: up, out_port: up_out, vc: in_vc },
+                        );
+                    }
+                    if is_ejection {
+                        // Ejected at the local sink; the sink applies
+                        // packet bookkeeping immediately (sequential) or
+                        // defers it to the node-order merge (parallel).
+                        if flit.kind == FlitKind::Tail {
+                            self.effects.eject(flit.packet);
+                        }
+                    } else {
+                        let next = self.topo.neighbor(n, p_out);
+                        let dest_port = self.topo.reverse_port(n, p_out);
+                        self.credits[o - self.q0] -= 1;
+                        self.effects.hop();
+                        let at = (now + self.router_latency).max(now_next);
+                        self.effects
+                            .arrival(at, Arrival { node: next, port: dest_port, flit });
+                    }
+                }
+            }
         }
     }
 }
@@ -640,5 +1076,63 @@ mod tests {
         }
         let rep = sim.run_to_drain(200_000);
         assert_eq!(rep.delivered, 80);
+    }
+
+    #[test]
+    fn threaded_step_matches_sequential_bitwise() {
+        // The cheap in-module determinism check; the full sweep against
+        // refsim lives in tests/noc_golden.rs.
+        let run = |threads: usize| {
+            let params = NocParams { threads, ..NocParams::default() };
+            let mut sim = NocSim::new(Topology::mesh(4, 4).unwrap(), params);
+            let mut rng = crate::sim::Rng::new(31);
+            for _ in 0..120 {
+                let s = rng.below(16);
+                let mut d = rng.below(16);
+                while d == s {
+                    d = rng.below(16);
+                }
+                sim.inject(s, d, 16 + rng.below(150));
+            }
+            let r = sim.run_to_drain(200_000);
+            (r.cycles, r.delivered, r.flit_hops, r.avg_latency.to_bits(), r.p99_latency.to_bits())
+        };
+        let base = run(1);
+        for threads in [2, 3, 8] {
+            assert_eq!(run(threads), base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn partition_is_valid_for_all_shapes() {
+        // Uneven degrees (star: hub has n-1 ports, leaves 1) still yield
+        // valid, nonempty, covering partitions.
+        for (nodes, shards) in [(1, 4), (2, 2), (9, 3), (9, 9), (16, 5), (64, 8)] {
+            let topo = if nodes == 1 {
+                Topology::custom(1, &[]).unwrap()
+            } else {
+                Topology::star(nodes).unwrap()
+            };
+            let sim = NocSim::new(topo, NocParams { threads: shards, ..NocParams::default() });
+            let b = &sim.shard_bounds;
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), nodes);
+            assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+            assert!(b.len() - 1 <= shards.min(nodes.max(1)));
+        }
+    }
+
+    #[test]
+    fn set_shards_rejects_bad_bounds() {
+        let mut sim = mesh_sim(3, 3);
+        sim.set_shards(&[0, 4, 9]); // valid
+        assert_eq!(sim.shards(), 2);
+        for bad in [vec![1, 9], vec![0, 4], vec![0, 4, 4, 9], vec![0usize; 0]] {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut s = mesh_sim(3, 3);
+                s.set_shards(&bad);
+            }));
+            assert!(r.is_err(), "bounds {bad:?} must be rejected");
+        }
     }
 }

@@ -65,6 +65,19 @@ impl<T> EventWheel<T> {
         self.count += 1;
     }
 
+    /// Batched ordered push: append every event in iteration order.
+    /// Exactly equivalent to calling [`EventWheel::push`] in a loop —
+    /// same-cycle events keep their iteration order for the FIFO
+    /// tie-break. This is the shard-merge primitive: the parallel NoC
+    /// step drains each shard's scratch buffer through here in global
+    /// node order, replaying the sequential push sequence bit-for-bit.
+    #[inline]
+    pub fn push_all(&mut self, events: impl IntoIterator<Item = (Cycle, T)>) {
+        for (at, item) in events {
+            self.push(at, item);
+        }
+    }
+
     /// Remove and return every event scheduled exactly at `at`, in the
     /// order it was pushed. Events sharing the bucket but due on a later
     /// lap are retained. The returned `Vec` is backing storage on loan —
@@ -123,6 +136,19 @@ mod tests {
         assert_eq!(EventWheel::<u32>::with_horizon(5).horizon(), 8);
         assert_eq!(EventWheel::<u32>::with_horizon(8).horizon(), 8);
         assert_eq!(EventWheel::<u32>::with_horizon(0).horizon(), 2);
+    }
+
+    #[test]
+    fn push_all_keeps_fifo_order_with_interleaved_push() {
+        let mut w = EventWheel::with_horizon(8);
+        w.push(4, "a");
+        w.push_all([(4, "b"), (5, "x"), (4, "c")]);
+        w.push(4, "d");
+        let due = w.take_due(4);
+        let got: Vec<_> = due.iter().map(|&(_, x)| x).collect();
+        assert_eq!(got, ["a", "b", "c", "d"]);
+        w.recycle(due);
+        assert_eq!(w.take_due(5)[0].1, "x");
     }
 
     #[test]

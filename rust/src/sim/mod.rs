@@ -12,20 +12,28 @@
 //!   step completions, DRAM per-bank ready events) instead of stepping
 //!   every cycle.
 //! * [`StreamingHist`] — exact streaming histogram (flat counts + sparse
-//!   tail) behind the report-path latency quantiles.
+//!   tail) behind the report-path latency quantiles; mergeable, so
+//!   shard-local histograms reduce to the same bits as a single one.
 //! * [`Rng`] — xoshiro256** PRNG with uniform/normal helpers; every
 //!   stochastic component seeds one of these, never OS entropy.
+//! * [`CounterRng`] — counter-based (stateless) draws that depend only on
+//!   (key, position), never on call order: the RNG contract parallel
+//!   simulation phases must use (see `noc/sim.rs` determinism docs).
+//! * [`WorkerPool`] — persistent scoped worker pool (std-only) behind the
+//!   NoC's shard-parallel stepping.
 
 mod calendar;
 mod event;
 mod event_wheel;
+mod pool;
 mod rng;
 mod stats;
 
 pub use calendar::Calendar;
 pub use event::EventQueue;
 pub use event_wheel::EventWheel;
-pub use rng::Rng;
+pub use pool::{Scope, WorkerPool};
+pub use rng::{CounterRng, Rng};
 pub use stats::StreamingHist;
 
 /// Simulated time in clock cycles of the component's own clock domain.

@@ -1,0 +1,261 @@
+//! Persistent scoped worker pool for shard-parallel simulation phases.
+//!
+//! The offline image ships no rayon/crossbeam, and `std::thread::scope`
+//! alone would respawn OS threads every simulated cycle — far too slow
+//! for a hot loop that fans out small shard jobs millions of times. So
+//! this is the classic *scoped threadpool* shape built on std only:
+//! workers are spawned once and live as long as the pool; a
+//! [`WorkerPool::scoped`] call opens a region in which borrowed
+//! (non-`'static`) jobs may be submitted, and it does not return until
+//! every submitted job has finished, which is what makes handing the
+//! workers `&mut` shard views of caller-owned arenas sound.
+//!
+//! Determinism: the pool makes **no** ordering promises — jobs run on
+//! whatever worker grabs them first. Callers get determinism the way the
+//! NoC simulator does (see `noc/sim.rs` module docs): jobs touch only
+//! disjoint state and emit cross-shard side effects into per-job scratch
+//! buffers that the caller merges sequentially in a fixed order after
+//! `scoped` returns.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A queued unit of work. Jobs are type-erased closures; the `'static`
+/// bound is a lie told once, in [`Scope::execute`], and made true by
+/// [`WorkerPool::scoped`]'s completion barrier.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<Job>,
+    /// Jobs submitted but not yet finished (queued + running).
+    pending: usize,
+    /// Set when any job panicked; re-raised by `scoped`.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Wakes workers: work available or shutdown.
+    work: Condvar,
+    /// Wakes the scope owner: `pending` reached zero.
+    done: Condvar,
+}
+
+/// A fixed-size pool of persistent worker threads executing borrowed
+/// jobs inside [`WorkerPool::scoped`] regions.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+/// Handle for submitting jobs inside a [`WorkerPool::scoped`] region.
+/// The `'scope` lifetime is invariant (same trick as `std::thread::Scope`)
+/// so submitted jobs may borrow anything that outlives the region.
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool WorkerPool,
+    _scope: PhantomData<std::cell::Cell<&'scope mut ()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads (>= 1).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "a worker pool needs at least one thread");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let threads = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sim-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning simulation worker thread")
+            })
+            .collect();
+        WorkerPool { shared, threads }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Run `f` with a [`Scope`] that accepts borrowed jobs, then block
+    /// until every submitted job has completed. Blocks-before-returning
+    /// is the soundness contract: no job can outlive the borrows it
+    /// captured. If `f` itself unwinds, the guard still waits for the
+    /// already-submitted jobs before the panic propagates. A panic
+    /// inside a job is re-raised here after all jobs finish.
+    pub fn scoped<'pool, 'scope, R>(
+        &'pool mut self,
+        f: impl FnOnce(&Scope<'pool, 'scope>) -> R,
+    ) -> R {
+        struct WaitGuard<'a>(&'a WorkerPool);
+        impl Drop for WaitGuard<'_> {
+            fn drop(&mut self) {
+                let st = self.0.shared.state.lock().unwrap();
+                drop(self.0.shared.done.wait_while(st, |s| s.pending != 0).unwrap());
+            }
+        }
+        // Start the region with a clean panic flag: if a previous
+        // region's *closure* unwound after one of its jobs panicked, the
+        // take below never ran and the flag would otherwise leak into
+        // this region and fail it spuriously.
+        self.shared.state.lock().unwrap().panicked = false;
+        let scope = Scope { pool: self, _scope: PhantomData };
+        let guard = WaitGuard(self);
+        let out = f(&scope);
+        drop(guard); // completion barrier
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            std::mem::take(&mut st.panicked)
+        };
+        if panicked {
+            panic!("WorkerPool: a scoped job panicked");
+        }
+        out
+    }
+}
+
+impl<'scope> Scope<'_, 'scope> {
+    /// Submit a job that may borrow state alive for `'scope`.
+    pub fn execute(&self, f: impl FnOnce() + Send + 'scope) {
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the job is only reachable by pool workers, and
+        // `WorkerPool::scoped` does not return (even on unwind — see
+        // WaitGuard) until `pending == 0`, i.e. until this job has run
+        // to completion and been dropped. Every `'scope` borrow the
+        // closure captured therefore strictly outlives the closure's
+        // actual lifetime, and erasing the lifetime to `'static` is
+        // unobservable. This is the `scoped_threadpool` construction.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        let mut st = self.pool.shared.state.lock().unwrap();
+        st.pending += 1;
+        st.queue.push_back(job);
+        drop(st);
+        self.pool.shared.work.notify_one();
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = sh.work.wait(st).unwrap();
+            }
+        };
+        // Catch unwinds so one bad job cannot wedge the completion
+        // barrier; `scoped` re-raises after the barrier.
+        let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+        let mut st = sh.state.lock().unwrap();
+        st.pending -= 1;
+        if !ok {
+            st.panicked = true;
+        }
+        if st.pending == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_to_completion() {
+        let mut pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        let chunks: Vec<&mut [u64]> = data.chunks_mut(16).collect();
+        pool.scoped(|scope| {
+            for (i, chunk) in chunks.into_iter().enumerate() {
+                scope.execute(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 16 + j) as u64;
+                    }
+                });
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u64));
+    }
+
+    #[test]
+    fn scope_is_a_completion_barrier() {
+        let mut pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for round in 1..=5 {
+            pool.scoped(|scope| {
+                for _ in 0..8 {
+                    scope.execute(|| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+            // All 8 jobs of this round observed before the next round.
+            assert_eq!(counter.load(Ordering::SeqCst), round * 8);
+        }
+    }
+
+    #[test]
+    fn pool_outlives_many_scopes() {
+        let mut pool = WorkerPool::new(2);
+        let mut total = 0u64;
+        for i in 0..100u64 {
+            let mut parts = [0u64; 4];
+            pool.scoped(|scope| {
+                let mut rest = &mut parts[..];
+                for k in 0..4u64 {
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut(1);
+                    rest = tail;
+                    scope.execute(move || head[0] = i + k);
+                }
+            });
+            total += parts.iter().sum::<u64>();
+        }
+        assert_eq!(total, (0..100u64).map(|i| 4 * i + 6).sum::<u64>());
+    }
+
+    #[test]
+    fn job_panic_propagates_after_barrier() {
+        let mut pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                scope.execute(|| panic!("job boom"));
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate out of scoped");
+        // Pool still usable afterwards.
+        let mut x = 0u32;
+        pool.scoped(|scope| scope.execute(|| x = 7));
+        assert_eq!(x, 7);
+    }
+}

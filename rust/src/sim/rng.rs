@@ -1,5 +1,7 @@
 //! Deterministic PRNG: xoshiro256** (Blackman & Vigna), self-contained
-//! because the offline image only ships `rand_core` (traits, no generators).
+//! because the offline image only ships `rand_core` (traits, no generators),
+//! plus [`CounterRng`], the counter-based generator parallel simulation
+//! phases must use (draws keyed by position, not by call order).
 
 /// xoshiro256** with SplitMix64 seeding and uniform/normal helpers.
 #[derive(Debug, Clone)]
@@ -88,6 +90,69 @@ impl Rng {
     }
 }
 
+/// SplitMix64 finalizer (Stafford mix 13) — full-avalanche bijection.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Counter-based (stateless) RNG: every draw is a pure function of
+/// `(key, position)`.
+///
+/// Sequential generators like [`Rng`] make draw values depend on *how
+/// many* draws happened before — which, in a shard-parallel simulation
+/// phase, would make them depend on the thread schedule. A `CounterRng`
+/// keys each draw by its position instead (e.g. `(cycle, node, k)`
+/// folded via [`CounterRng::at3`]), so any future stochastic router or
+/// controller behavior stays bit-reproducible at every thread count.
+/// This is the RNG the NoC determinism contract prescribes for code
+/// running inside a parallel phase (`noc/sim.rs` module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct CounterRng {
+    key: u64,
+}
+
+impl CounterRng {
+    pub fn new(seed: u64) -> Self {
+        // Decorrelate small seeds the same way Rng's seeding does.
+        CounterRng { key: mix64(seed.wrapping_add(0x9E3779B97F4A7C15)) }
+    }
+
+    /// The draw at `position`. Pure: same (key, position) -> same value.
+    #[inline]
+    pub fn at(&self, position: u64) -> u64 {
+        mix64(self.key ^ position.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Fold a (cycle, node, draw-index) style triple into one position.
+    /// Injective enough in practice: each component is spread by an odd
+    /// multiplier before xor-folding.
+    #[inline]
+    pub fn at3(&self, a: u64, b: u64, c: u64) -> u64 {
+        self.at(
+            a.wrapping_mul(0xD1B54A32D192ED03)
+                ^ b.wrapping_mul(0xAEF17502108EF2D9)
+                ^ c.wrapping_mul(0x2545F4914F6CDD1D),
+        )
+    }
+
+    /// Uniform in [0, 1) at `position` (same 53-bit construction as
+    /// [`Rng::uniform`]).
+    #[inline]
+    pub fn uniform_at(&self, position: u64) -> f64 {
+        (self.at(position) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) at `position`. n must be nonzero.
+    #[inline]
+    pub fn below_at(&self, position: u64, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.uniform_at(position) * n as f64) as usize % n
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +230,49 @@ mod tests {
         let mut c1 = r.fork(1);
         let mut c2 = r.fork(2);
         assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn counter_rng_is_position_keyed_not_order_keyed() {
+        let r = CounterRng::new(42);
+        // Draw the same positions in two different orders: identical values.
+        let fwd: Vec<u64> = (0..100).map(|p| r.at(p)).collect();
+        let rev: Vec<u64> = (0..100).rev().map(|p| r.at(p)).collect();
+        assert!(fwd.iter().eq(rev.iter().rev()));
+        // Re-draws are idempotent (stateless).
+        assert_eq!(r.at(7), r.at(7));
+        assert_ne!(r.at(7), r.at(8));
+        // Distinct seeds give distinct streams.
+        assert_ne!(CounterRng::new(1).at(0), CounterRng::new(2).at(0));
+    }
+
+    #[test]
+    fn counter_rng_uniform_and_below_bounds() {
+        let r = CounterRng::new(3);
+        let mut sum = 0.0;
+        let n = 20_000u64;
+        for p in 0..n {
+            let u = r.uniform_at(p);
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        let mut seen = [false; 5];
+        for p in 0..500 {
+            let v = r.below_at(p, 5);
+            assert!(v < 5);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn counter_rng_at3_components_matter() {
+        let r = CounterRng::new(11);
+        assert_eq!(r.at3(1, 2, 3), r.at3(1, 2, 3));
+        assert_ne!(r.at3(1, 2, 3), r.at3(3, 2, 1));
+        assert_ne!(r.at3(1, 2, 3), r.at3(1, 2, 4));
+        assert_ne!(r.at3(1, 2, 3), r.at3(2, 2, 3));
     }
 }

@@ -99,6 +99,28 @@ impl StreamingHist {
         None
     }
 
+    /// Merge another histogram into this one (counts add; exact). Order
+    /// statistics over summed counts equal those over the concatenated
+    /// sample streams, so partial histograms merged in any order
+    /// reproduce the single-histogram mean and quantiles bit-for-bit.
+    /// (The parallel NoC step currently records into one global
+    /// histogram at merge time rather than per-shard; this is the
+    /// reduction primitive for consumers that do keep partials — e.g.
+    /// DSE sweep aggregation or a future sharded report path.)
+    pub fn merge(&mut self, other: &StreamingHist) {
+        self.count += other.count;
+        self.sum += other.sum;
+        if self.dense.len() < other.dense.len() {
+            self.dense.resize(other.dense.len(), 0);
+        }
+        for (d, &c) in self.dense.iter_mut().zip(&other.dense) {
+            *d += c;
+        }
+        for (&v, &c) in &other.tail {
+            *self.tail.entry(v).or_insert(0) += c;
+        }
+    }
+
     /// `sorted[(len - 1).min(len * p_num / p_den)]` — the exact indexing
     /// rule the NoC report paths use for p99 (`p_num/p_den` = 99/100).
     /// 0.0 when empty, matching the replaced code.
@@ -181,5 +203,74 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.quantile_indexed(99, 100), 0.0);
         assert!(h.is_empty());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut h = StreamingHist::new();
+        for v in [1u64, 9, 9, 700_000] {
+            h.record(v);
+        }
+        let snapshot = (h.count(), h.sum(), h.kth(0), h.kth(3));
+        h.merge(&StreamingHist::new());
+        assert_eq!((h.count(), h.sum(), h.kth(0), h.kth(3)), snapshot);
+        let mut empty = StreamingHist::new();
+        empty.merge(&h);
+        assert_eq!(empty.count(), h.count());
+        assert_eq!(empty.sum(), h.sum());
+        assert_eq!(empty.kth(2), h.kth(2));
+    }
+
+    #[test]
+    fn merge_overlapping_tails_adds_counts() {
+        let mut a = StreamingHist::new();
+        let mut b = StreamingHist::new();
+        // Same tail value recorded on both sides, plus disjoint ones.
+        a.record(1 << 20);
+        a.record(5);
+        b.record(1 << 20);
+        b.record(1 << 21);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.kth(0), Some(5));
+        assert_eq!(a.kth(1), Some(1 << 20));
+        assert_eq!(a.kth(2), Some(1 << 20), "overlapping tail count doubled");
+        assert_eq!(a.kth(3), Some(1 << 21));
+    }
+
+    #[test]
+    fn merged_shards_match_single_hist_bitwise() {
+        // Split one sample stream across 4 shard-local hists, merge in
+        // order: mean/p99 must equal the single-hist (and sorted-vec)
+        // bits — the parallel-stepping reduction contract.
+        let mut rng = crate::sim::Rng::new(23);
+        for case in 0..20 {
+            let n = rng.below(400) + 1;
+            let mut single = StreamingHist::new();
+            let mut shards = vec![StreamingHist::new(); 4];
+            let mut vals = Vec::new();
+            for i in 0..n {
+                let v = if rng.chance(0.85) {
+                    rng.below(3000) as u64
+                } else {
+                    4000 + rng.below(1 << 22) as u64
+                };
+                vals.push(v);
+                single.record(v);
+                shards[i % 4].record(v);
+            }
+            let mut merged = StreamingHist::new();
+            for s in &shards {
+                merged.merge(s);
+            }
+            let (avg, p99) = sorted_ref(&vals);
+            assert_eq!(merged.mean().to_bits(), single.mean().to_bits(), "case {case}");
+            assert_eq!(merged.mean().to_bits(), avg.to_bits(), "case {case}");
+            assert_eq!(
+                merged.quantile_indexed(99, 100).to_bits(),
+                p99.to_bits(),
+                "case {case}"
+            );
+        }
     }
 }

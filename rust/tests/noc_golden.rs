@@ -157,6 +157,88 @@ fn golden_nondefault_params_match_reference() {
     burst_case(&Topology::torus(4, 4).unwrap(), params, 29, 150, "torus4x4 wide");
 }
 
+/// Threads sweep: shard-parallel stepping must reproduce the reference
+/// simulator bit-for-bit at every thread count — the determinism
+/// contract of the parallel rewrite (noc/sim.rs module docs).
+#[test]
+fn golden_threads_sweep_burst_matches_reference() {
+    let topo = Topology::mesh(8, 8).unwrap();
+    let n = topo.nodes();
+    let mut workload = Vec::new();
+    let mut rng = Rng::new(4242);
+    for _ in 0..400 {
+        let s = rng.below(n);
+        let mut d = rng.below(n);
+        while d == s {
+            d = rng.below(n);
+        }
+        workload.push((s, d, 1 + rng.below(200)));
+    }
+    let mut rsim = RefNocSim::new(topo.clone(), NocParams::default());
+    for &(s, d, b) in &workload {
+        rsim.inject(s, d, b);
+    }
+    let golden = rsim.run_to_drain(1_000_000);
+    for threads in [1usize, 2, 4, 8] {
+        let params = NocParams { threads, ..NocParams::default() };
+        let mut sim = NocSim::new(topo.clone(), params);
+        for &(s, d, b) in &workload {
+            sim.inject(s, d, b);
+        }
+        let rep = sim.run_to_drain(1_000_000);
+        assert_reports_identical(&rep, &golden, &format!("mesh8x8 threads={threads}"));
+        assert_packets_identical(&sim, &rsim, &format!("mesh8x8 threads={threads}"));
+    }
+}
+
+/// Same sweep over open-loop traffic and non-default microarchitecture
+/// parameters (single VC + 1-cycle routers stresses the same-slot wheel
+/// paths under sharding).
+#[test]
+fn golden_threads_sweep_openloop_and_tight_params() {
+    let topo = Topology::torus(6, 6).unwrap();
+    let n = topo.nodes();
+    let mut rng = Rng::new(77);
+    let schedule = traffic::generate(traffic::Pattern::Uniform, n, 0.10, 64, 300, &mut rng);
+    let mut rsim = RefNocSim::new(topo.clone(), NocParams::default());
+    let golden = archytas::noc::refsim::drive(&mut rsim, schedule.clone(), 2_000_000);
+    for threads in [2usize, 4, 8] {
+        let params = NocParams { threads, ..NocParams::default() };
+        let mut sim = NocSim::new(topo.clone(), params);
+        let rep = traffic::drive(&mut sim, schedule.clone(), 2_000_000);
+        assert_reports_identical(&rep, &golden, &format!("torus6x6 threads={threads}"));
+        assert_packets_identical(&sim, &rsim, &format!("torus6x6 threads={threads}"));
+    }
+
+    let tight = NocParams { vcs: 1, buf_flits: 2, router_latency: 1, ..NocParams::default() };
+    let mesh = Topology::mesh(5, 5).unwrap();
+    let mut rsim = RefNocSim::new(mesh.clone(), tight);
+    let mut rng = Rng::new(23);
+    let mut workload = Vec::new();
+    for _ in 0..150 {
+        let s = rng.below(25);
+        let mut d = rng.below(25);
+        while d == s {
+            d = rng.below(25);
+        }
+        workload.push((s, d, 1 + rng.below(160)));
+    }
+    for &(s, d, b) in &workload {
+        rsim.inject(s, d, b);
+    }
+    let golden = rsim.run_to_drain(1_000_000);
+    for threads in [2usize, 4, 8] {
+        let params = NocParams { threads, ..tight };
+        let mut sim = NocSim::new(mesh.clone(), params);
+        for &(s, d, b) in &workload {
+            sim.inject(s, d, b);
+        }
+        let rep = sim.run_to_drain(1_000_000);
+        assert_reports_identical(&rep, &golden, &format!("mesh5x5 tight threads={threads}"));
+        assert_packets_identical(&sim, &rsim, &format!("mesh5x5 tight threads={threads}"));
+    }
+}
+
 #[test]
 fn golden_incremental_stepping_matches_reference() {
     // run_for + late injections exercise mid-flight state equivalence,

@@ -96,6 +96,68 @@ fn prop_noc_conservation() {
     });
 }
 
+/// Shard-partition invariance: the parallel NoC step's determinism
+/// contract says *any* valid contiguous partition of the node range —
+/// one node per shard, everything in one shard, or random uneven cuts —
+/// produces a bit-identical SimReport (side effects are order-merged in
+/// global node order; see noc/sim.rs module docs).
+#[test]
+fn prop_shard_partition_invariance() {
+    prop::check(8, |rng| {
+        let t = random_topology(rng);
+        let n = t.nodes();
+        if n < 2 {
+            return Ok(());
+        }
+        let count = rng.below(40) + 5;
+        let mut workload = Vec::new();
+        for _ in 0..count {
+            let s = rng.below(n);
+            let mut d = rng.below(n);
+            while d == s {
+                d = rng.below(n);
+            }
+            workload.push((s, d, rng.below(180) + 1));
+        }
+        let run = |bounds: Option<&[usize]>| {
+            let mut sim = NocSim::new(t.clone(), NocParams::default());
+            if let Some(b) = bounds {
+                sim.set_shards(b);
+            }
+            for &(s, d, bytes) in &workload {
+                sim.inject(s, d, bytes);
+            }
+            let r = sim.run_to_drain(3_000_000);
+            (
+                r.cycles,
+                r.delivered,
+                r.flit_hops,
+                r.avg_latency.to_bits(),
+                r.p99_latency.to_bits(),
+                r.throughput.to_bits(),
+            )
+        };
+        let base = run(None);
+        // 1 node/shard, all-in-one (explicit), and a random uneven cut.
+        let per_node: Vec<usize> = (0..=n).collect();
+        let single: Vec<usize> = vec![0, n];
+        let mut uneven: Vec<usize> = vec![0];
+        for b in 1..n {
+            if rng.chance(0.3) {
+                uneven.push(b);
+            }
+        }
+        uneven.push(n);
+        for bounds in [per_node, single, uneven] {
+            let got = run(Some(&bounds));
+            if got != base {
+                return Err(format!("partition {bounds:?}: {got:?} vs {base:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// DRAM: random request mixes always drain; bytes moved = read+write
 /// bursts * burst_bytes; latencies >= the device's minimum.
 #[test]
