@@ -194,6 +194,24 @@ fn ilp(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
             .collect();
         ensure!(!row.is_empty(), "node {id} unmappable");
         m.add_constraint(row, Sense::Eq, 1.0);
+        // Valid inequality: a node's own cost on its chosen tile is a
+        // lower bound on the makespan (implied by the per-tile load rows
+        // for every integral point, so the optimum is unchanged). The LP
+        // relaxation without it bounds T only by total-load/tiles, which
+        // collapses to near-zero on symmetric instances — on the
+        // homogeneous config the branch-and-bound then enumerates
+        // permutations of equivalent assignments until it trips its node
+        // limit (observed: 2 nodes on 15 equal tiles already costs ~450
+        // B&B nodes, 8 nodes exceeds the 100k cap). With the per-node
+        // rows the first integral incumbent matches the LP bound and the
+        // search collapses to a handful of nodes.
+        let jrow: Vec<(usize, f64)> = x[mi]
+            .iter()
+            .enumerate()
+            .filter_map(|(t, v)| v.map(|v| (v, costs[mi][t])))
+            .chain([(t_var, -1.0)])
+            .collect();
+        m.add_constraint(jrow, Sense::Le, 0.0);
     }
     for t in 0..fabric.tile_count() {
         let mut row: Vec<(usize, f64)> = Vec::new();
@@ -368,6 +386,33 @@ count = 1
             }
         }
         assert!(used.len() >= 2, "{used:?}");
+    }
+
+    #[test]
+    fn ilp_handles_symmetric_fabrics() {
+        // Homogeneous tiles make the assignment MILP fully symmetric;
+        // without the per-node makespan rows the B&B enumerated
+        // equivalent permutations until its node limit. A depth-1 ViT has
+        // 8 matmuls — solve must stay effectively instant.
+        let f = Fabric::build(
+            FabricConfig::from_toml(
+                "[noc]\nwidth = 4\nheight = 4\n\
+                 [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 15\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let p = workloads::VitParams { depth: 1, ..Default::default() };
+        let g = workloads::vit(&p, 5).unwrap();
+        let m = map_graph(&g, &f, MapStrategy::Ilp, Precision::Int8).unwrap();
+        let mut used = std::collections::HashSet::new();
+        for id in 0..g.len() {
+            if matches!(g.nodes[id].kind, OpKind::MatMul) {
+                used.insert(m.assign[id].unwrap());
+            }
+        }
+        // 8 matmuls over 15 equal tiles: optimum spreads them out.
+        assert!(used.len() >= 4, "{used:?}");
     }
 
     #[test]

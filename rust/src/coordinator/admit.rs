@@ -1,0 +1,912 @@
+//! Batched admission + incremental re-simulation: the multi-program
+//! co-simulation layer on the shared calendar.
+//!
+//! [`super::exec::cosim`] replays exactly one lowered program on a fresh
+//! calendar. A serving runtime has the opposite shape: a *stream* of
+//! programs arriving over simulated time, sharing one fabric. This module
+//! keeps the calendar (and every resource's state) **alive across
+//! requests**:
+//!
+//! * [`CosimSession::admit_at`] inserts a program's steps into the live
+//!   resource queues at an arbitrary simulated time — including times in
+//!   the already-simulated past (a late-arriving high-priority request);
+//! * [`CosimSession::replace`] swaps a program's content and/or admission
+//!   time in place — the "program or cost model changed" primitive of a
+//!   DSE loop (re-lower at a different precision, bump a workload);
+//! * both re-enqueue only the **invalidated closure** (see below), so a
+//!   request admitted into a quiescent calendar with a thousand finished
+//!   programs costs O(the resource queues it touches + its own steps),
+//!   not O(world) — finished programs on *other* resources are never
+//!   revisited (pruning drained programs from long-lived shared queues
+//!   is the remaining step for unbounded serving runs; see ROADMAP);
+//! * [`AdmissionQueue`] batches admissions so a burst prices each step
+//!   exactly once instead of draining per request.
+//!
+//! # Determinism and the FIFO contract
+//!
+//! Every resource (tile, the HBM port, each active (src, dst) link)
+//! serves its steps in ascending `(admit time, admission sequence, step
+//! index)` order, and a step starts at `max(dependency ready, resource
+//! free)` — the same recurrence as the single-program engine. The key is
+//! a total order consistent across all queues with all dependencies
+//! pointing backwards, so the multi-program schedule is deadlock-free and
+//! uniquely determined. Consequences, pinned by `tests/admission_golden.rs`:
+//!
+//! * one program admitted at t=0 is **bit-identical** to `exec::cosim`
+//!   and `refexec::cosim_ref` (report fields, energy bit patterns);
+//! * N programs admitted at t=0 are bit-identical to `exec::cosim` of
+//!   the concatenated program;
+//! * any admit/replace/run interleaving is bit-identical to a fresh
+//!   session built from scratch with the same final programs and times.
+//!
+//! # Invalidation closure
+//!
+//! When a program is admitted, replaced or re-priced, the steps whose
+//! schedule can change are exactly:
+//!
+//! 1. the changed program's own steps (they are fresh or re-priced);
+//! 2. every step positioned *after* an inserted/removed/invalidated step
+//!    in its resource queue (its queue predecessor chain changed);
+//! 3. transitively: dependency successors of any invalidated step, and
+//!    rule 2 applied again to those.
+//!
+//! Steps outside the closure keep their completed state byte for byte —
+//! no step before an invalidated one in any queue, and no dependency of
+//! a valid step, is ever touched, which is what makes the incremental
+//! re-run provably equal to the from-scratch oracle. Pending completion
+//! events of invalidated in-flight steps are retracted via the
+//! generation-stamped calendar ([`crate::sim::StampedCalendar`]) and
+//! re-pushed at their recomputed finish times.
+//!
+//! Step costs come from the start-time-aware fabric hooks
+//! ([`crate::fabric::Fabric::feed_at`] / `transport_at` /
+//! [`crate::fabric::Tile::execute_at`] ...), priced at each step's true
+//! multi-program start cycle — this layer is the first caller for which
+//! those `_at` seams carry real congestion information.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::ensure;
+
+use crate::compiler::{FabricProgram, Step};
+use crate::fabric::Fabric;
+use crate::metrics::{Category, Metrics};
+use crate::sim::{Cycle, StampedCalendar};
+use crate::Result;
+
+use super::exec::{ExecReport, ProgramSpan};
+
+/// Identifies an admitted program within its [`CosimSession`]. The index
+/// doubles as the admission sequence used for FIFO tie-breaking and is
+/// stable across [`CosimSession::replace`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgramHandle(usize);
+
+impl ProgramHandle {
+    /// Position of this program in [`CosimSession`] admission order
+    /// (== its index in [`ExecReport::programs`]).
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Dynamic per-step state.
+#[derive(Debug, Clone)]
+struct StepRec {
+    /// Resource id serving this step (tile | HBM port | link).
+    res: u32,
+    /// Position in the resource queue (maintained across insertions).
+    qpos: u32,
+    started: bool,
+    completed: bool,
+    finish: Cycle,
+    /// Step duration in cycles (finish - start).
+    dur: Cycle,
+    /// Unresolved dependency count.
+    pending: u32,
+    /// Max over admit time and resolved dependencies' completion times.
+    ready_at: Cycle,
+    /// Step cost with cycles zeroed (the fold unit of the report).
+    cost: Metrics,
+}
+
+/// One admitted program.
+#[derive(Debug)]
+struct Prog {
+    admit_at: Cycle,
+    steps: Vec<Step>,
+    rec: Vec<StepRec>,
+    /// Global id of step 0 (ids `base..base + steps.len()`).
+    base: usize,
+    /// Successor adjacency, CSR over (intra-program) dependency edges.
+    succ_off: Vec<usize>,
+    succ: Vec<u32>,
+}
+
+/// A resource's wake queue: step ids in `(admit, seq, idx)` order.
+#[derive(Debug, Default)]
+struct ResQueue {
+    steps: Vec<usize>,
+    /// Started steps form the prefix `0..cursor`.
+    cursor: usize,
+    /// Finish time of the last started step.
+    free: Cycle,
+    /// A started-but-uncompleted step occupies the resource.
+    busy: bool,
+}
+
+/// A live multi-program co-simulation over one fabric: the admission
+/// engine. See the module docs for the determinism and invalidation
+/// contracts.
+///
+/// Error handling: a pricing error (e.g. an `Exec` step whose tile cannot
+/// run its precision) surfaces from `admit_at`/`replace`/`run*` and
+/// leaves the session in an unspecified (but memory-safe) state — build
+/// programs through the compiler, which only emits supported steps.
+pub struct CosimSession<'f> {
+    fabric: &'f Fabric,
+    progs: Vec<Prog>,
+    res: Vec<ResQueue>,
+    /// Sparse link resources per active (src tile, dst tile) pair.
+    link_ids: HashMap<(usize, usize), usize>,
+    /// Global step id -> (program, local index).
+    id_map: Vec<(u32, u32)>,
+    cal: StampedCalendar,
+    /// Reusable completion-batch scratch.
+    batch: Vec<usize>,
+}
+
+/// Price one step starting at `start`: returns (cost with cycles zeroed,
+/// duration). Identical to the single-program engine's cost path.
+fn price(fabric: &Fabric, step: &Step, start: Cycle) -> Result<(Metrics, Cycle)> {
+    Ok(match step {
+        Step::Load { tile, bytes, .. } => {
+            let cost = fabric.feed_at(*tile, *bytes, start);
+            let cyc = cost.cycles;
+            (cost.with_cycles(0), cyc)
+        }
+        Step::Transfer { from, to, bytes, .. } => {
+            let src = fabric.tiles[*from].node;
+            let dst = fabric.tiles[*to].node;
+            let cost = fabric.transport_at(src, dst, *bytes, start);
+            let cyc = cost.cycles;
+            (cost.with_cycles(0), cyc)
+        }
+        Step::Exec { tile, compute, precision, .. } => {
+            let cost = fabric.tiles[*tile].execute_at(compute, *precision, start)?;
+            let cyc = cost.metrics.cycles;
+            (cost.metrics.with_cycles(0), cyc)
+        }
+    })
+}
+
+impl<'f> CosimSession<'f> {
+    /// An empty session over `fabric` (resources: one queue per tile,
+    /// one for the HBM port; link queues appear as programs use pairs).
+    pub fn new(fabric: &'f Fabric) -> Self {
+        let nt = fabric.tile_count();
+        CosimSession {
+            fabric,
+            progs: Vec::new(),
+            res: (0..nt + 1).map(|_| ResQueue::default()).collect(),
+            link_ids: HashMap::new(),
+            id_map: Vec::new(),
+            cal: StampedCalendar::with_horizon(256),
+            batch: Vec::new(),
+        }
+    }
+
+    /// Number of admitted programs.
+    pub fn programs(&self) -> usize {
+        self.progs.len()
+    }
+
+    /// True when no completion events are pending (all admitted work has
+    /// been simulated to completion or nothing was admitted).
+    pub fn is_quiescent(&self) -> bool {
+        self.cal.is_empty()
+    }
+
+    /// Admit `prog` into the live calendar at simulated cycle `at`.
+    /// Steps become runnable no earlier than `at`; resource FIFO order is
+    /// `(admit time, admission sequence, step index)`. `at` may lie in
+    /// the already-simulated past — affected steps of other programs are
+    /// invalidated and re-simulated (see module docs).
+    pub fn admit_at(&mut self, prog: &FabricProgram, at: Cycle) -> Result<ProgramHandle> {
+        let slot = self.progs.len();
+        self.install(slot, prog, at)?;
+        Ok(ProgramHandle(slot))
+    }
+
+    /// Replace program `h` (content and admission time) in place — the
+    /// "program or cost model changed" primitive. Only the invalidation
+    /// closure of the change is re-simulated.
+    pub fn replace(&mut self, h: ProgramHandle, prog: &FabricProgram, at: Cycle) -> Result<()> {
+        ensure!(h.0 < self.progs.len(), "stale program handle {}", h.0);
+        self.install(h.0, prog, at)
+    }
+
+    /// Force re-pricing and re-simulation of program `h` (and its
+    /// invalidation closure) without changing its content — for callers
+    /// whose external cost context changed. Equivalent to `replace` with
+    /// the same program.
+    pub fn invalidate(&mut self, h: ProgramHandle) -> Result<()> {
+        ensure!(h.0 < self.progs.len(), "stale program handle {}", h.0);
+        let prog = FabricProgram {
+            steps: self.progs[h.0].steps.clone(),
+            producer: Vec::new(),
+        };
+        let at = self.progs[h.0].admit_at;
+        self.install(h.0, &prog, at)
+    }
+
+    /// Drain every pending completion event; errors if steps remain
+    /// unfinished afterwards (impossible for forward-dep programs — the
+    /// queue order is a consistent total order, see module docs).
+    pub fn run_to_drain(&mut self) -> Result<()> {
+        self.drain(None)?;
+        let incomplete = self
+            .progs
+            .iter()
+            .flat_map(|p| &p.rec)
+            .filter(|r| !r.completed)
+            .count();
+        ensure!(incomplete == 0, "admission co-sim stalled: {incomplete} steps incomplete");
+        Ok(())
+    }
+
+    /// Drain completion events up to and including simulated cycle `t`,
+    /// leaving later work in flight — programs admitted afterwards land
+    /// in a genuinely running calendar (their displaced steps' pending
+    /// completions are retracted via generation stamps).
+    pub fn run_until(&mut self, t: Cycle) -> Result<()> {
+        self.drain(Some(t))
+    }
+
+    /// Drain to quiescence and fold the merged report: identical field
+    /// semantics to [`super::exec::cosim`], with one [`ProgramSpan`] per
+    /// admitted program. Step-ordered data (`step_done`, the energy fold)
+    /// runs in `(admission sequence, step index)` order, so a single
+    /// program admitted at t=0 reproduces `cosim` bit for bit, and N
+    /// programs at t=0 reproduce `cosim` of the concatenated program.
+    pub fn report(&mut self) -> Result<ExecReport> {
+        self.run_to_drain()?;
+        let nt = self.fabric.tile_count();
+        let mut total = Metrics::new();
+        let mut tile_busy = vec![0 as Cycle; nt];
+        let mut step_done = Vec::new();
+        let mut transfer_cycles: Cycle = 0;
+        let mut exec_steps = 0usize;
+        let mut makespan: Cycle = 0;
+        let mut programs = Vec::with_capacity(self.progs.len());
+        for pr in &self.progs {
+            let span =
+                Self::fold_program(pr, &mut total, Some(tile_busy.as_mut_slice()), &mut step_done);
+            exec_steps += span.exec_steps;
+            transfer_cycles += span.transfer_cycles;
+            makespan = makespan.max(pr.rec.iter().map(|r| r.finish).max().unwrap_or(0));
+            programs.push(span);
+        }
+        total.cycles = makespan;
+        // Fabric-level leakage over the merged episode (same charge as
+        // the single-program engines).
+        total.add_energy(
+            Category::Leakage,
+            makespan as f64 * self.fabric.tile_count() as f64 * 0.5,
+        );
+        Ok(ExecReport {
+            cycles: makespan,
+            metrics: total,
+            tile_busy,
+            step_done,
+            transfer_cycles,
+            exec_steps,
+            programs,
+        })
+    }
+
+    /// Per-program span of `h` — O(program), so the serving path reads
+    /// each request's simulated latency without folding the whole world.
+    /// Meaningful only once the program has fully completed (call after
+    /// [`CosimSession::run_to_drain`]): all steps are folded, and an
+    /// in-flight program's unfinished steps would contribute zeroed
+    /// placeholders.
+    pub fn span(&self, h: ProgramHandle) -> ProgramSpan {
+        debug_assert!(
+            self.progs[h.0].rec.iter().all(|r| r.completed),
+            "span({}) read while the program is still in flight",
+            h.0
+        );
+        Self::fold_program(&self.progs[h.0], &mut Metrics::new(), None, &mut Vec::new())
+    }
+
+    /// Fold one program's steps in step order into the merged
+    /// accumulators and return its span. The per-program energy is folded
+    /// independently in the same order, so it equals a solo run's
+    /// pre-leakage energy bit for bit.
+    fn fold_program(
+        pr: &Prog,
+        total: &mut Metrics,
+        mut tile_busy: Option<&mut [Cycle]>,
+        step_done: &mut Vec<Cycle>,
+    ) -> ProgramSpan {
+        let mut penergy = Metrics::new();
+        let mut p_exec = 0usize;
+        let mut p_transfer: Cycle = 0;
+        let mut finished = pr.admit_at;
+        for (step, rec) in pr.steps.iter().zip(&pr.rec) {
+            total.absorb_parallel(&rec.cost);
+            penergy.absorb_parallel(&rec.cost);
+            step_done.push(rec.finish);
+            finished = finished.max(rec.finish);
+            if let Step::Exec { tile, .. } = step {
+                if let Some(tb) = tile_busy.as_deref_mut() {
+                    tb[*tile] += rec.dur;
+                }
+                p_exec += 1;
+            } else {
+                p_transfer += rec.dur;
+            }
+        }
+        ProgramSpan {
+            admitted_at: pr.admit_at,
+            finished_at: finished,
+            steps: pr.rec.len(),
+            exec_steps: p_exec,
+            transfer_cycles: p_transfer,
+            ops: penergy.ops,
+            bytes_moved: penergy.bytes_moved,
+            energy_pj: penergy.total_energy_pj(),
+        }
+    }
+
+    /// Install `prog` into `slot` (fresh admission when `slot` is one
+    /// past the end, replacement otherwise): validate, splice the steps
+    /// into the resource queues, invalidate the closure, and re-seed the
+    /// wake chain.
+    fn install(&mut self, slot: usize, prog: &FabricProgram, at: Cycle) -> Result<()> {
+        let nt = self.fabric.tile_count();
+        for (i, s) in prog.steps.iter().enumerate() {
+            for &d in s.deps() {
+                ensure!(d < i, "step {i} depends on non-earlier step {d} (forward deps required)");
+            }
+            match s {
+                Step::Load { tile, .. } | Step::Exec { tile, .. } => {
+                    ensure!(*tile < nt, "step {i}: tile {tile} out of range")
+                }
+                Step::Transfer { from, to, .. } => ensure!(
+                    *from < nt && *to < nt,
+                    "step {i}: transfer {from}->{to} out of range"
+                ),
+            }
+        }
+
+        let mut seeds: Vec<usize> = Vec::new();
+        let mut touched: Vec<usize> = Vec::new();
+        if slot < self.progs.len() {
+            self.remove_program_steps(slot, &mut seeds, &mut touched);
+        }
+
+        // Build the program's static structures. A replacement reuses
+        // the outgoing program's global-id range when it fits (its
+        // in-flight events were cancelled above and consumed ids hold
+        // no queued events, so generation stamps keep any stale entry
+        // dead) — the replace/invalidate re-pricing loop then runs with
+        // bounded id/generation state; only a *growing* replacement
+        // allocates a fresh range.
+        let n = prog.steps.len();
+        let base = if slot < self.progs.len() && n <= self.progs[slot].rec.len() {
+            self.progs[slot].base
+        } else {
+            let b = self.id_map.len();
+            for idx in 0..n {
+                self.id_map.push((slot as u32, idx as u32));
+            }
+            b
+        };
+        let mut res_of = Vec::with_capacity(n);
+        for s in &prog.steps {
+            let r = match s {
+                Step::Load { .. } => nt,
+                Step::Exec { tile, .. } => *tile,
+                Step::Transfer { from, to, .. } => {
+                    let next = self.res.len();
+                    let id = *self.link_ids.entry((*from, *to)).or_insert(next);
+                    if id == next {
+                        self.res.push(ResQueue::default());
+                    }
+                    id
+                }
+            };
+            res_of.push(r);
+        }
+        let mut succ_off = vec![0usize; n + 1];
+        for s in &prog.steps {
+            for &d in s.deps() {
+                succ_off[d + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            succ_off[i + 1] += succ_off[i];
+        }
+        let mut succ = vec![0u32; succ_off[n]];
+        let mut cursor: Vec<usize> = succ_off[..n].to_vec();
+        for (i, s) in prog.steps.iter().enumerate() {
+            for &d in s.deps() {
+                succ[cursor[d]] = i as u32;
+                cursor[d] += 1;
+            }
+        }
+        let rec: Vec<StepRec> = prog
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StepRec {
+                res: res_of[i] as u32,
+                qpos: 0,
+                started: false,
+                completed: false,
+                finish: 0,
+                dur: 0,
+                pending: s.deps().len() as u32,
+                ready_at: at,
+                cost: Metrics::new(),
+            })
+            .collect();
+        let built = Prog {
+            admit_at: at,
+            steps: prog.steps.clone(),
+            rec,
+            base,
+            succ_off,
+            succ,
+        };
+        if slot == self.progs.len() {
+            self.progs.push(built);
+        } else {
+            self.progs[slot] = built;
+        }
+
+        // Splice the new steps into their queues at the FIFO position,
+        // seeding every displaced (later-keyed) entry.
+        let mut by_res: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (idx, &r) in res_of.iter().enumerate() {
+            if let Some(pos) = by_res.iter().position(|&(rr, _)| rr == r) {
+                by_res[pos].1.push(base + idx);
+            } else {
+                by_res.push((r, vec![base + idx]));
+            }
+        }
+        for (r, ids) in by_res {
+            let pos = self.res[r].steps.partition_point(|&id2| {
+                let (p2, _) = self.id_map[id2];
+                let p2 = p2 as usize;
+                let t2 = self.progs[p2].admit_at;
+                t2 < at || (t2 == at && p2 < slot)
+            });
+            seeds.extend_from_slice(&self.res[r].steps[pos..]);
+            self.res[r].steps.splice(pos..pos, ids);
+            if !touched.contains(&r) {
+                touched.push(r);
+            }
+        }
+        for &r in &touched {
+            self.renumber_queue(r);
+        }
+
+        // Affected set = structurally changed queues + every resource
+        // owning a closure-invalidated step. Resources outside it kept
+        // their exact state, so rebuilding and waking only these makes
+        // an admission O(affected queues + own steps), not O(world):
+        // between operations no resource ever has an idle dep-ready
+        // unstarted head (wakes are always exhausted), so an untouched
+        // resource cannot need a wake.
+        let mut affected = touched;
+        self.invalidate_closure(seeds, &mut affected);
+        affected.sort_unstable();
+        self.rebuild_resource_state(&affected);
+        for &r in &affected {
+            self.wake_head(r)?;
+        }
+        Ok(())
+    }
+
+    /// Retire program `slot`'s current steps: cancel in-flight completion
+    /// events and excise the ids from their queues, seeding every entry
+    /// positioned at or after the first removal in each queue.
+    fn remove_program_steps(&mut self, slot: usize, seeds: &mut Vec<usize>, touched: &mut Vec<usize>) {
+        let base = self.progs[slot].base;
+        for (idx, rec) in self.progs[slot].rec.iter().enumerate() {
+            if rec.started && !rec.completed {
+                self.cal.cancel(base + idx);
+            }
+            let r = rec.res as usize;
+            if !touched.contains(&r) {
+                touched.push(r);
+            }
+        }
+        for &r in touched.iter() {
+            let old = std::mem::take(&mut self.res[r].steps);
+            let mut kept = Vec::with_capacity(old.len());
+            let mut min_removed = usize::MAX;
+            for id in old {
+                if self.id_map[id].0 as usize == slot {
+                    min_removed = min_removed.min(kept.len());
+                } else {
+                    kept.push(id);
+                }
+            }
+            if min_removed != usize::MAX {
+                seeds.extend_from_slice(&kept[min_removed..]);
+            }
+            self.res[r].steps = kept;
+        }
+    }
+
+    fn renumber_queue(&mut self, r: usize) {
+        for k in 0..self.res[r].steps.len() {
+            let (p, i) = self.id_map[self.res[r].steps[k]];
+            self.progs[p as usize].rec[i as usize].qpos = k as u32;
+        }
+    }
+
+    /// Propagate the invalidation closure from `seeds`: reset each
+    /// reached step (retracting its pending completion event), follow
+    /// dependency successors, and extend along resource-queue suffixes.
+    /// Afterwards recompute pending counts and ready times from the
+    /// surviving completed frontier. Every resource owning an
+    /// invalidated step is appended to `affected` (so the caller can
+    /// rebuild/wake only those instead of the world).
+    fn invalidate_closure(&mut self, seeds: Vec<usize>, affected: &mut Vec<usize>) {
+        let mut work = seeds;
+        let mut visited: HashSet<usize> = HashSet::new();
+        let mut order: Vec<usize> = Vec::new();
+        // Lowest invalidated queue position seen per resource: suffix
+        // entries beyond it are already in the closure.
+        let mut min_pos: HashMap<usize, usize> = HashMap::new();
+        while let Some(id) = work.pop() {
+            if !visited.insert(id) {
+                continue;
+            }
+            order.push(id);
+            let (p, i) = self.id_map[id];
+            let (p, i) = (p as usize, i as usize);
+            let (started, completed, r, qpos) = {
+                let rec = &self.progs[p].rec[i];
+                (rec.started, rec.completed, rec.res as usize, rec.qpos as usize)
+            };
+            if started && !completed {
+                self.cal.cancel(id);
+            }
+            {
+                let rec = &mut self.progs[p].rec[i];
+                rec.started = false;
+                rec.completed = false;
+            }
+            if !affected.contains(&r) {
+                affected.push(r);
+            }
+            for s in self.progs[p].succ_off[i]..self.progs[p].succ_off[i + 1] {
+                let j = self.progs[p].succ[s] as usize;
+                work.push(self.progs[p].base + j);
+            }
+            let cur = min_pos.entry(r).or_insert(usize::MAX);
+            if qpos < *cur {
+                let hi = (*cur).min(self.res[r].steps.len());
+                work.extend_from_slice(&self.res[r].steps[qpos + 1..hi]);
+                *cur = qpos;
+            }
+        }
+        for &id in &order {
+            let (p, i) = self.id_map[id];
+            let (p, i) = (p as usize, i as usize);
+            let (pending, ready) = {
+                let pr = &self.progs[p];
+                let mut pending = 0u32;
+                let mut ready = pr.admit_at;
+                for &d in pr.steps[i].deps() {
+                    let dr = &pr.rec[d];
+                    if dr.completed {
+                        ready = ready.max(dr.finish);
+                    } else {
+                        pending += 1;
+                    }
+                }
+                (pending, ready)
+            };
+            let rec = &mut self.progs[p].rec[i];
+            rec.pending = pending;
+            rec.ready_at = ready;
+        }
+    }
+
+    /// Re-derive the given resources' cursor / free / busy from their
+    /// queues' started prefixes (started steps always form a prefix:
+    /// starts are strictly in queue order and invalidation only clears
+    /// suffixes). Resources outside an install's affected set are
+    /// untouched by it, so their cached state stays valid.
+    fn rebuild_resource_state(&mut self, resources: &[usize]) {
+        let (progs, id_map) = (&self.progs, &self.id_map);
+        let rec_of = |id: usize| {
+            let (p, i) = id_map[id];
+            &progs[p as usize].rec[i as usize]
+        };
+        for &r in resources {
+            let rq = &self.res[r];
+            let mut cursor = 0usize;
+            while cursor < rq.steps.len() && rec_of(rq.steps[cursor]).started {
+                cursor += 1;
+            }
+            let (free, busy) = if cursor == 0 {
+                (0, false)
+            } else {
+                let rec = rec_of(rq.steps[cursor - 1]);
+                (rec.finish, !rec.completed)
+            };
+            let rq = &mut self.res[r];
+            rq.cursor = cursor;
+            rq.free = free;
+            rq.busy = busy;
+        }
+    }
+
+    /// If resource `r` is idle and its next queued step is
+    /// dependency-ready, start the step: price it at `max(ready, free)`
+    /// and push its completion event.
+    fn wake_head(&mut self, r: usize) -> Result<()> {
+        let rq = &self.res[r];
+        if rq.busy || rq.cursor >= rq.steps.len() {
+            return Ok(());
+        }
+        let id = rq.steps[rq.cursor];
+        let (p, i) = self.id_map[id];
+        let (p, i) = (p as usize, i as usize);
+        if self.progs[p].rec[i].pending != 0 {
+            return Ok(());
+        }
+        let start = self.progs[p].rec[i].ready_at.max(self.res[r].free);
+        let (cost, dur) = price(self.fabric, &self.progs[p].steps[i], start)?;
+        {
+            let rec = &mut self.progs[p].rec[i];
+            rec.started = true;
+            rec.finish = start + dur;
+            rec.dur = dur;
+            rec.cost = cost;
+        }
+        let rq = &mut self.res[r];
+        rq.free = start + dur;
+        rq.busy = true;
+        rq.cursor += 1;
+        self.cal.push(start + dur, id);
+        Ok(())
+    }
+
+    /// Drain completion batches in time order (bounded by `until`).
+    fn drain(&mut self, until: Option<Cycle>) -> Result<()> {
+        let mut batch = std::mem::take(&mut self.batch);
+        while let Some(t) = self.cal.take_due_until(until, &mut batch) {
+            for &id in &batch {
+                let (p, i) = self.id_map[id];
+                let (p, i) = (p as usize, i as usize);
+                let r = {
+                    let rec = &mut self.progs[p].rec[i];
+                    debug_assert!(rec.started && !rec.completed && rec.finish == t);
+                    rec.completed = true;
+                    rec.res as usize
+                };
+                self.res[r].busy = false;
+                self.wake_head(r)?;
+                let (s0, s1) = {
+                    let pr = &self.progs[p];
+                    (pr.succ_off[i], pr.succ_off[i + 1])
+                };
+                for s in s0..s1 {
+                    let j = self.progs[p].succ[s] as usize;
+                    let wake = {
+                        let rec = &mut self.progs[p].rec[j];
+                        rec.pending -= 1;
+                        rec.ready_at = rec.ready_at.max(t);
+                        if rec.pending == 0 { Some(rec.res as usize) } else { None }
+                    };
+                    if let Some(rr) = wake {
+                        self.wake_head(rr)?;
+                    }
+                }
+            }
+        }
+        self.batch = batch;
+        Ok(())
+    }
+}
+
+/// Deterministic admission batching: requests accumulate in arrival
+/// order and flush into a [`CosimSession`] in one pass, so a burst of
+/// programs is admitted (and the calendar re-seeded) without draining
+/// between requests. `bench_admission` measures the win over
+/// one-at-a-time admit+drain.
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    entries: Vec<(FabricProgram, Cycle)>,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        AdmissionQueue::default()
+    }
+
+    /// Queue `prog` for admission at simulated cycle `at`.
+    pub fn push(&mut self, prog: FabricProgram, at: Cycle) {
+        self.entries.push((prog, at));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Admit every queued program, in push order, returning the handles.
+    pub fn admit_all(&mut self, session: &mut CosimSession) -> Result<Vec<ProgramHandle>> {
+        let mut handles = Vec::with_capacity(self.entries.len());
+        for (prog, at) in self.entries.drain(..) {
+            handles.push(session.admit_at(&prog, at)?);
+        }
+        Ok(handles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Precision;
+    use crate::compiler::lowering::lower;
+    use crate::compiler::mapper::{map_graph, MapStrategy};
+    use crate::config::FabricConfig;
+    use crate::coordinator::{cosim, cosim_ref};
+    use crate::workloads;
+
+    fn fabric() -> Fabric {
+        Fabric::build(
+            FabricConfig::from_toml(
+                "[noc]\nwidth = 3\nheight = 3\n\
+                 [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn program(f: &Fabric, seed: u64) -> FabricProgram {
+        let g = workloads::mlp(4, 32, &[32, 16], 8, seed).unwrap();
+        let m = map_graph(&g, f, MapStrategy::Greedy, Precision::Int8).unwrap();
+        lower(&g, f, &m).unwrap()
+    }
+
+    #[test]
+    fn single_program_at_zero_matches_cosim_bitwise() {
+        let f = fabric();
+        let p = program(&f, 1);
+        let mut s = CosimSession::new(&f);
+        s.admit_at(&p, 0).unwrap();
+        let got = s.report().unwrap();
+        let want = cosim(&f, &p).unwrap();
+        let want_ref = cosim_ref(&f, &p).unwrap();
+        assert!(got.bit_identical(&want), "session vs event engine");
+        assert!(got.bit_identical(&want_ref), "session vs list scheduler");
+    }
+
+    #[test]
+    fn report_is_repeatable_and_incremental_admit_extends_it() {
+        let f = fabric();
+        let p1 = program(&f, 1);
+        let p2 = program(&f, 2);
+        let mut s = CosimSession::new(&f);
+        let h1 = s.admit_at(&p1, 0).unwrap();
+        let a = s.report().unwrap();
+        let b = s.report().unwrap();
+        assert!(a.bit_identical(&b), "re-reporting a quiescent session");
+        let h2 = s.admit_at(&p2, a.cycles + 100).unwrap();
+        let c = s.report().unwrap();
+        assert_eq!(c.programs.len(), 2);
+        // Tail admission after quiescence must not disturb program 1.
+        assert!(c.programs[h1.index()].bit_identical(&a.programs[0]));
+        assert_eq!(c.programs[h2.index()].admitted_at, a.cycles + 100);
+        assert!(c.cycles >= a.cycles);
+    }
+
+    #[test]
+    fn retroactive_admission_matches_fresh_session() {
+        let f = fabric();
+        let p1 = program(&f, 3);
+        let p2 = program(&f, 4);
+        // Incremental: admit p1 at t=500, drain, then admit p2 at t=0 —
+        // in the simulated past, displacing p1's already-run steps.
+        let mut inc = CosimSession::new(&f);
+        inc.admit_at(&p1, 500).unwrap();
+        inc.run_to_drain().unwrap();
+        inc.admit_at(&p2, 0).unwrap();
+        let got = inc.report().unwrap();
+        // Oracle: fresh session, same programs and times, same sequence.
+        let mut fresh = CosimSession::new(&f);
+        fresh.admit_at(&p1, 500).unwrap();
+        fresh.admit_at(&p2, 0).unwrap();
+        let want = fresh.report().unwrap();
+        assert!(got.bit_identical(&want));
+    }
+
+    #[test]
+    fn replace_reprices_only_that_program() {
+        let f = fabric();
+        let p1 = program(&f, 5);
+        let p2 = program(&f, 6);
+        let p2b = program(&f, 7);
+        let mut inc = CosimSession::new(&f);
+        let _h1 = inc.admit_at(&p1, 0).unwrap();
+        let h2 = inc.admit_at(&p2, 10).unwrap();
+        inc.run_to_drain().unwrap();
+        inc.replace(h2, &p2b, 10).unwrap();
+        let got = inc.report().unwrap();
+        let mut fresh = CosimSession::new(&f);
+        fresh.admit_at(&p1, 0).unwrap();
+        fresh.admit_at(&p2b, 10).unwrap();
+        let want = fresh.report().unwrap();
+        assert!(got.bit_identical(&want));
+    }
+
+    #[test]
+    fn run_until_pauses_mid_flight() {
+        let f = fabric();
+        let p1 = program(&f, 8);
+        let mut s = CosimSession::new(&f);
+        let h = s.admit_at(&p1, 0).unwrap();
+        let full = {
+            let mut s2 = CosimSession::new(&f);
+            s2.admit_at(&p1, 0).unwrap();
+            s2.report().unwrap()
+        };
+        s.run_until(full.cycles / 2).unwrap();
+        assert!(!s.is_quiescent(), "work must remain in flight");
+        let got = s.report().unwrap();
+        assert!(got.bit_identical(&full));
+        assert_eq!(s.span(h).finished_at, full.cycles);
+    }
+
+    #[test]
+    fn admission_queue_batches_in_push_order() {
+        let f = fabric();
+        let mut q = AdmissionQueue::new();
+        assert!(q.is_empty());
+        q.push(program(&f, 1), 0);
+        q.push(program(&f, 2), 0);
+        assert_eq!(q.len(), 2);
+        let mut s = CosimSession::new(&f);
+        let hs = q.admit_all(&mut s).unwrap();
+        assert!(q.is_empty());
+        assert_eq!(hs.iter().map(ProgramHandle::index).collect::<Vec<_>>(), [0, 1]);
+        let mut seq = CosimSession::new(&f);
+        seq.admit_at(&program(&f, 1), 0).unwrap();
+        seq.run_to_drain().unwrap();
+        seq.admit_at(&program(&f, 2), 0).unwrap();
+        let a = s.report().unwrap();
+        let b = seq.report().unwrap();
+        assert!(a.bit_identical(&b), "batched vs one-at-a-time admission");
+    }
+
+    #[test]
+    fn rejects_malformed_programs() {
+        let f = fabric();
+        let mut s = CosimSession::new(&f);
+        let bad = FabricProgram {
+            steps: vec![Step::Load { tile: 0, bytes: 64, node: 0, deps: vec![0] }],
+            producer: Vec::new(),
+        };
+        assert!(s.admit_at(&bad, 0).is_err(), "self-dependency");
+        let bad_tile = FabricProgram {
+            steps: vec![Step::Load { tile: 99, bytes: 64, node: 0, deps: vec![] }],
+            producer: Vec::new(),
+        };
+        assert!(s.admit_at(&bad_tile, 0).is_err(), "tile out of range");
+    }
+}

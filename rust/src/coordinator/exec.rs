@@ -47,6 +47,34 @@
 //! the flit-level NoC / bank-level DRAM event streams — the ROADMAP's
 //! parallel-stepping and million-request serving items all want this
 //! substrate.
+//!
+//! # Admission / invalidation contract (the multi-program layer)
+//!
+//! [`super::admit`] generalizes this engine to a *persistent* session:
+//! programs are admitted into a live calendar at arbitrary simulated
+//! times, share the tile/HBM/link resources, and can be replaced (a
+//! program or cost-model change) without rebuilding the world. The
+//! contract, enforced by `tests/admission_golden.rs`:
+//!
+//! * **Resource FIFO across programs.** Every resource serves its steps
+//!   in ascending `(admit time, admission sequence, step index)` order —
+//!   deterministic FIFO tie-breaking: programs admitted at the same time
+//!   are ordered by admission sequence. A single program admitted at
+//!   t=0 therefore replays [`cosim`] (and [`super::refexec::cosim_ref`])
+//!   **bit-identically**, and N programs admitted at t=0 replay `cosim`
+//!   on the concatenated program.
+//! * **Invalidation.** When a program is admitted, replaced or
+//!   re-priced, the steps whose schedule can change are exactly: the
+//!   changed program's own (un)started steps, every step positioned
+//!   after one of them in a resource queue, and — transitively — the
+//!   dependency successors and queue tails of those. Only this closure
+//!   is re-enqueued; everything before it keeps its completed state,
+//!   byte for byte.
+//! * **From-scratch equivalence.** After any admit/replace sequence the
+//!   drained report is bit-identical to a fresh session (or a fresh
+//!   `cosim` of the merged program, for t=0 batches) built with the same
+//!   final programs and admit times — incremental re-simulation is an
+//!   optimization, never a semantic.
 
 use std::collections::VecDeque;
 
@@ -57,6 +85,52 @@ use crate::fabric::Fabric;
 use crate::metrics::{Category, Metrics};
 use crate::sim::{Calendar, Cycle};
 use crate::Result;
+
+/// Per-program slice of a co-simulation: admission-to-finish span plus
+/// the program's own step costs. Spans *tile* the merged report the way
+/// the per-episode DRAM stats tile the DRAM timeline (PR 3): the integer
+/// counters (`steps`, `exec_steps`, `transfer_cycles`, `ops`,
+/// `bytes_moved`) sum exactly to the merged totals, and `energy_pj` is
+/// the program's step costs folded in its own step order — bit-identical
+/// to what a solo run of that program reports before fabric leakage
+/// (leakage is charged on the merged makespan, so it lives only in the
+/// merged [`ExecReport::metrics`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramSpan {
+    /// Simulated cycle the program was admitted (0 for a plain `cosim`).
+    pub admitted_at: Cycle,
+    /// Completion time of the program's last step (== `admitted_at` for
+    /// an empty program).
+    pub finished_at: Cycle,
+    /// Step counts: total / `Exec` steps only.
+    pub steps: usize,
+    pub exec_steps: usize,
+    /// Sum of the program's NoC + HBM transfer step durations.
+    pub transfer_cycles: Cycle,
+    pub ops: u64,
+    pub bytes_moved: u64,
+    /// Program step costs folded in step order (no fabric leakage).
+    pub energy_pj: f64,
+}
+
+impl ProgramSpan {
+    /// Admission-to-completion latency in fabric cycles.
+    pub fn makespan(&self) -> Cycle {
+        self.finished_at - self.admitted_at
+    }
+
+    /// Bit-level equality (energy compared by f64 bit pattern).
+    pub fn bit_identical(&self, other: &ProgramSpan) -> bool {
+        self.admitted_at == other.admitted_at
+            && self.finished_at == other.finished_at
+            && self.steps == other.steps
+            && self.exec_steps == other.exec_steps
+            && self.transfer_cycles == other.transfer_cycles
+            && self.ops == other.ops
+            && self.bytes_moved == other.bytes_moved
+            && self.energy_pj.to_bits() == other.energy_pj.to_bits()
+    }
+}
 
 /// Co-simulation result.
 #[derive(Debug, Clone)]
@@ -72,6 +146,10 @@ pub struct ExecReport {
     /// Total NoC + HBM transfer cycles (overlap included).
     pub transfer_cycles: Cycle,
     pub exec_steps: usize,
+    /// One span per admitted program, in admission order (`cosim` /
+    /// `cosim_ref` report exactly one; [`super::admit::CosimSession`]
+    /// reports one per [`super::admit::CosimSession::admit_at`]).
+    pub programs: Vec<ProgramSpan>,
 }
 
 impl ExecReport {
@@ -117,6 +195,12 @@ impl ExecReport {
                 .iter()
                 .zip(&bb)
                 .all(|((ca, ea), (cb, eb))| ca == cb && ea.to_bits() == eb.to_bits())
+            && self.programs.len() == other.programs.len()
+            && self
+                .programs
+                .iter()
+                .zip(&other.programs)
+                .all(|(a, b)| a.bit_identical(b))
     }
 }
 
@@ -353,6 +437,18 @@ pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
         total.absorb_parallel(c);
     }
     total.cycles = makespan;
+    // The single program's span: captured before the fabric leakage term,
+    // which is charged on the merged makespan (see ProgramSpan docs).
+    let span = ProgramSpan {
+        admitted_at: 0,
+        finished_at: makespan,
+        steps: n,
+        exec_steps: e.exec_steps,
+        transfer_cycles: e.transfer_cycles,
+        ops: total.ops,
+        bytes_moved: total.bytes_moved,
+        energy_pj: total.total_energy_pj(),
+    };
     // Fabric-level leakage over the episode.
     total.add_energy(
         Category::Leakage,
@@ -365,6 +461,7 @@ pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
         step_done: e.done,
         transfer_cycles: e.transfer_cycles,
         exec_steps: e.exec_steps,
+        programs: vec![span],
     })
 }
 

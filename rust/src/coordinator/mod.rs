@@ -8,20 +8,32 @@
 //!   (steps as events; tiles, the HBM port and (src, dst) links as
 //!   resources with in-order wake queues), overlapping transfers with
 //!   compute exactly as a doorbell-driven fabric run would.
+//! * [`admit`] — **admission**: the multi-program layer that keeps the
+//!   calendar alive across requests — batched admission at arbitrary
+//!   simulated times, shared resources with deterministic FIFO
+//!   tie-breaking, and incremental re-simulation (only the invalidated
+//!   closure of a program/cost change is re-enqueued). Single-program
+//!   t=0 admission is pinned bit-identical to [`exec`] and [`refexec`]
+//!   by `tests/admission_golden.rs`.
 //! * [`refexec`] — the retained pre-rewrite list scheduler; differential
 //!   golden tests pin the event-driven engine to its bit-exact answers
 //!   (the `noc::refsim` pattern).
 //! * [`serve`] — **function + orchestration**: a leader thread batches
 //!   inference requests from worker threads (std::mpsc) and executes the
-//!   AOT-compiled PJRT artifacts for bit-exact numerics.
+//!   AOT-compiled PJRT artifacts for bit-exact numerics; the co-sim
+//!   session plugs in as a simulated-latency executor
+//!   ([`serve::CosimExecutor`]), so the batch server can report fabric
+//!   latencies for every batch it forms.
 //!
 //! The end-to-end driver (examples/uav_vision.rs) runs both: PJRT for the
 //! numbers, the co-simulator for latency/energy.
 
+pub mod admit;
 pub mod exec;
 pub mod refexec;
 pub mod serve;
 
-pub use exec::{cosim, ExecReport};
+pub use admit::{AdmissionQueue, CosimSession, ProgramHandle};
+pub use exec::{cosim, ExecReport, ProgramSpan};
 pub use refexec::cosim_ref;
-pub use serve::{BatchServer, BatchStats, Request as ServeRequest};
+pub use serve::{BatchServer, BatchStats, CosimExecutor, Request as ServeRequest};

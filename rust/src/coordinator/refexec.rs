@@ -84,6 +84,18 @@ pub fn cosim_ref(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
     }
     let makespan = done.iter().copied().max().unwrap_or(0);
     total.cycles = makespan;
+    // Single-program span, captured before the leakage term (the same
+    // point `exec::cosim` captures it, so the bits agree).
+    let span = super::exec::ProgramSpan {
+        admitted_at: 0,
+        finished_at: makespan,
+        steps: n,
+        exec_steps,
+        transfer_cycles,
+        ops: total.ops,
+        bytes_moved: total.bytes_moved,
+        energy_pj: total.total_energy_pj(),
+    };
     // Fabric-level leakage over the episode.
     total.add_energy(
         Category::Leakage,
@@ -96,6 +108,7 @@ pub fn cosim_ref(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
         step_done: done,
         transfer_cycles,
         exec_steps,
+        programs: vec![span],
     })
 }
 

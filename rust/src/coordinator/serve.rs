@@ -9,13 +9,26 @@
 //! runtime, sized for the edge-fabric use case.
 //!
 //! No tokio in the offline image — std::thread + mpsc (DESIGN.md §6).
+//!
+//! **Simulated-latency serving mode**: [`BatchServer::run_cosim`] pairs
+//! the functional executor with a [`CosimExecutor`] — a live
+//! [`CosimSession`] that admits one lowered program per formed batch into
+//! the shared calendar at its simulated arrival cycle and reports the
+//! batch's fabric makespan. The wall-clock latencies answer "how fast is
+//! this host"; the simulated cycles answer "how fast would the fabric
+//! serve this stream", including cross-batch queueing on shared
+//! tiles/HBM/links.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::ensure;
 
+use super::admit::CosimSession;
+use crate::compiler::FabricProgram;
+use crate::fabric::Fabric;
 use crate::runtime::Tensor;
+use crate::sim::Cycle;
 use crate::Result;
 
 /// One inference request: a single sample (row-major f32) plus the reply
@@ -35,6 +48,9 @@ pub struct BatchStats {
     pub batch_sizes: Vec<usize>,
     /// Per-request latency, microseconds.
     pub latencies_us: Vec<f64>,
+    /// Per-batch simulated fabric makespan, cycles (populated by
+    /// [`BatchServer::run_cosim`]; empty in plain wall-clock mode).
+    pub sim_cycles: Vec<Cycle>,
 }
 
 impl BatchStats {
@@ -61,6 +77,22 @@ impl BatchStats {
             self.requests as f64 / wall_s
         }
     }
+
+    /// Mean simulated batch makespan in fabric cycles (0 outside the
+    /// simulated-latency serving mode).
+    pub fn mean_sim_cycles(&self) -> f64 {
+        if self.sim_cycles.is_empty() {
+            0.0
+        } else {
+            self.sim_cycles.iter().sum::<Cycle>() as f64 / self.sim_cycles.len() as f64
+        }
+    }
+
+    /// p99 simulated batch makespan in fabric cycles.
+    pub fn p99_sim_cycles(&self) -> f64 {
+        let v: Vec<f64> = self.sim_cycles.iter().map(|&c| c as f64).collect();
+        percentile(&v, 0.99)
+    }
 }
 
 fn percentile(xs: &[f64], q: f64) -> f64 {
@@ -72,6 +104,45 @@ fn percentile(xs: &[f64], q: f64) -> f64 {
     // the serving report path (same fix as Metrics::breakdown).
     v.sort_by(f64::total_cmp);
     v[((v.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Simulated-latency executor for the batch server: a live
+/// [`CosimSession`] admitting one lowered batch-program per formed batch
+/// at its simulated arrival cycle (`gap` cycles apart), so consecutive
+/// batches queue on the shared tiles/HBM/links exactly as an on-fabric
+/// serving loop would. The calendar persists across batches — each
+/// admission re-simulates only the new program (tail admission into a
+/// quiescent calendar), not the world.
+pub struct CosimExecutor<'f> {
+    session: CosimSession<'f>,
+    prog: FabricProgram,
+    /// Simulated cycles between consecutive batch admissions.
+    gap: Cycle,
+    next_at: Cycle,
+}
+
+impl<'f> CosimExecutor<'f> {
+    /// `prog` is the lowered program of one full batch; `gap` the
+    /// simulated inter-batch arrival distance in fabric cycles.
+    pub fn new(fabric: &'f Fabric, prog: FabricProgram, gap: Cycle) -> Self {
+        CosimExecutor { session: CosimSession::new(fabric), prog, gap, next_at: 0 }
+    }
+
+    /// Admit the next batch at its arrival cycle, simulate to
+    /// quiescence, and return the batch's simulated makespan
+    /// (admission-to-completion, queueing included).
+    pub fn execute_batch(&mut self) -> Result<Cycle> {
+        let h = self.session.admit_at(&self.prog, self.next_at)?;
+        self.next_at += self.gap;
+        self.session.run_to_drain()?;
+        Ok(self.session.span(h).makespan())
+    }
+
+    /// The underlying session (e.g. for a merged
+    /// [`super::exec::ExecReport`] via [`CosimSession::report`]).
+    pub fn session_mut(&mut self) -> &mut CosimSession<'f> {
+        &mut self.session
+    }
 }
 
 /// The dynamic batcher. `exec(batch_rows) -> output_rows` runs a full
@@ -93,7 +164,29 @@ impl BatchServer {
     pub fn run(
         &self,
         rx: mpsc::Receiver<Request>,
+        exec: impl FnMut(&Tensor) -> Result<Tensor>,
+    ) -> Result<BatchStats> {
+        self.run_inner(rx, exec, |_| Ok(None))
+    }
+
+    /// Serve like [`BatchServer::run`], additionally driving the co-sim
+    /// session as the timing executor: every formed batch is admitted to
+    /// `sim`'s shared calendar and its simulated makespan recorded in
+    /// [`BatchStats::sim_cycles`].
+    pub fn run_cosim(
+        &self,
+        rx: mpsc::Receiver<Request>,
+        exec: impl FnMut(&Tensor) -> Result<Tensor>,
+        sim: &mut CosimExecutor,
+    ) -> Result<BatchStats> {
+        self.run_inner(rx, exec, |_| sim.execute_batch().map(Some))
+    }
+
+    fn run_inner(
+        &self,
+        rx: mpsc::Receiver<Request>,
         mut exec: impl FnMut(&Tensor) -> Result<Tensor>,
+        mut on_batch: impl FnMut(usize) -> Result<Option<Cycle>>,
     ) -> Result<BatchStats> {
         let mut stats = BatchStats::default();
         let mut pending: Vec<Request> = Vec::new();
@@ -140,6 +233,9 @@ impl BatchServer {
             stats.requests += batch.len();
             stats.batches += 1;
             stats.batch_sizes.push(batch.len());
+            if let Some(cycles) = on_batch(batch.len())? {
+                stats.sim_cycles.push(cycles);
+            }
         }
         Ok(stats)
     }
@@ -287,5 +383,110 @@ mod tests {
             drive_server(&server, 2, 5, |_, _| vec![1.0, 2.0], double_exec).unwrap();
         assert_eq!(stats.latencies_us.len(), 10);
         assert!(stats.p99_latency_us() >= stats.p50_latency_us());
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element_is_that_element() {
+        assert_eq!(percentile(&[42.5], 0.0), 42.5);
+        assert_eq!(percentile(&[42.5], 0.5), 42.5);
+        assert_eq!(percentile(&[42.5], 1.0), 42.5);
+    }
+
+    #[test]
+    fn percentile_interior_quantiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_nan_hardened_path_never_panics() {
+        // total_cmp sorts positive NaN bit patterns after +inf: low
+        // quantiles stay finite, the tail reports the poisoned entry —
+        // and nothing panics (the original sort_by(partial_cmp) did).
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert!(percentile(&xs, 1.0).is_nan());
+    }
+
+    mod cosim_serving {
+        use super::*;
+        use crate::accel::Precision;
+        use crate::compiler::lowering::lower;
+        use crate::compiler::mapper::{map_graph, MapStrategy};
+        use crate::config::FabricConfig;
+        use crate::workloads;
+
+        #[test]
+        fn batch_server_drives_the_cosim_executor() {
+            let fabric = Fabric::build(
+                FabricConfig::from_toml(
+                    "[noc]\nwidth = 3\nheight = 3\n\
+                     [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+            let g = workloads::mlp(4, 32, &[16], 8, 1).unwrap();
+            let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+            let prog = lower(&g, &fabric, &m).unwrap();
+            let mut sim = CosimExecutor::new(&fabric, prog, 1_000);
+
+            // Pre-queue 10 requests so the server forms multiple batches.
+            let (tx, rx) = mpsc::channel::<Request>();
+            let mut replies = Vec::new();
+            for i in 0..10 {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request {
+                    sample: vec![i as f32, 0.0],
+                    reply: rtx,
+                    submitted: Instant::now(),
+                })
+                .unwrap();
+                replies.push(rrx);
+            }
+            drop(tx);
+            let server = BatchServer::new(2, 1, 4);
+            let stats = server
+                .run_cosim(
+                    rx,
+                    |input| {
+                        let b = input.dims()[0];
+                        Tensor::new(
+                            vec![b, 1],
+                            (0..b).map(|i| input.data()[i * 2]).collect(),
+                        )
+                    },
+                    &mut sim,
+                )
+                .unwrap();
+            // Request/batch accounting: every request answered, one
+            // simulated makespan per formed batch, one admitted program
+            // per batch on the live session.
+            assert_eq!(stats.requests, 10);
+            assert!(stats.batches >= 3, "max_batch 4 over 10 requests");
+            assert_eq!(stats.sim_cycles.len(), stats.batches);
+            assert_eq!(sim.session_mut().programs(), stats.batches);
+            assert!(stats.sim_cycles.iter().all(|&c| c > 0));
+            assert!(stats.mean_sim_cycles() > 0.0);
+            assert!(stats.p99_sim_cycles() >= stats.mean_sim_cycles() * 0.5);
+            for r in replies {
+                r.recv().unwrap();
+            }
+            // The merged report over the whole serving run tiles into
+            // one span per batch.
+            let rep = sim.session_mut().report().unwrap();
+            assert_eq!(rep.programs.len(), stats.batches);
+            let sum_steps: usize = rep.programs.iter().map(|p| p.steps).sum();
+            assert_eq!(sum_steps, rep.step_done.len());
+        }
     }
 }

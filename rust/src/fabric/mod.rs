@@ -116,12 +116,19 @@ impl Fabric {
         m
     }
 
-    /// Start-time-aware transport hook for the event-driven co-simulator.
-    /// `_start` is the fabric cycle the transfer begins; the analytic
-    /// model is time-invariant today, so this delegates to
-    /// [`Fabric::transport`] bit-for-bit — the parameter is the seam
-    /// where a congestion- or DVFS-aware cost model plugs in without
-    /// another engine signature change.
+    /// Start-time-aware transport hook for the event-driven co-simulator
+    /// and the multi-program admission engine (`coordinator::admit`,
+    /// which prices every step at its true multi-program start cycle —
+    /// the first caller for which `start` carries real cross-program
+    /// congestion information). The analytic model is time-invariant
+    /// today, so this delegates to [`Fabric::transport`] bit-for-bit —
+    /// that invariance is load-bearing: it is what makes incremental
+    /// re-simulation's re-priced steps bit-identical to a from-scratch
+    /// run, and `tests/admission_golden.rs` pins it. A congestion- or
+    /// DVFS-aware model plugs in here without an engine signature
+    /// change, at the cost of widening the admission invalidation rule
+    /// (a time-varying model must invalidate everything scheduled after
+    /// the perturbation, not just the structural closure).
     pub fn transport_at(&self, src: NodeId, dst: NodeId, bytes: u64, _start: Cycle) -> Metrics {
         self.transport(src, dst, bytes)
     }

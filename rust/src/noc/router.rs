@@ -131,38 +131,74 @@ impl FlitQueues {
     }
 
     /// Split the arena into disjoint mutable shard views at the given
-    /// queue-id boundaries (`bounds[0] == 0`, ascending, last ==
+    /// queue-id boundaries (`bounds[0] == 0`, strictly ascending, last ==
     /// [`FlitQueues::queues`]). Shard `i` owns queues
     /// `bounds[i]..bounds[i+1]` and is addressed by *global* queue id,
     /// so simulator code is identical on sharded and whole-arena paths.
     /// The borrows are disjoint slices — safe to hand to parallel
-    /// workers.
-    pub fn shards(&mut self, bounds: &[usize]) -> Vec<FlitQueuesShard<'_>> {
+    /// workers. Views are carved lazily by the returned iterator, so the
+    /// per-cycle parallel step builds no `Vec` of views (ROADMAP item:
+    /// reusable shard-view storage).
+    pub fn shard_views<'a>(&'a mut self, bounds: &'a [usize]) -> ShardViews<'a> {
         assert!(bounds.len() >= 2, "need at least one shard");
         assert_eq!(bounds[0], 0, "shard bounds must start at queue 0");
         assert_eq!(*bounds.last().unwrap(), self.head.len(), "bounds must cover the arena");
-        let cap = self.cap;
-        let mut out = Vec::with_capacity(bounds.len() - 1);
-        let (mut buf, mut head, mut len) =
-            (&mut self.buf[..], &mut self.head[..], &mut self.len[..]);
         for w in bounds.windows(2) {
             assert!(w[0] < w[1], "shard bounds must be strictly increasing");
-            let nq = w[1] - w[0];
-            let (b, rest) = std::mem::take(&mut buf).split_at_mut(nq * cap);
-            buf = rest;
-            let (h, rest) = std::mem::take(&mut head).split_at_mut(nq);
-            head = rest;
-            let (l, rest) = std::mem::take(&mut len).split_at_mut(nq);
-            len = rest;
-            out.push(FlitQueuesShard { buf: b, head: h, len: l, cap, q0: w[0] });
         }
-        out
+        ShardViews {
+            buf: &mut self.buf,
+            head: &mut self.head,
+            len: &mut self.len,
+            cap: self.cap,
+            bounds,
+            next: 0,
+        }
+    }
+}
+
+/// Lazy iterator over disjoint [`FlitQueuesShard`] views — see
+/// [`FlitQueues::shard_views`]. Successively splits the arena slices, so
+/// every yielded view carries the full arena lifetime (views may coexist
+/// and cross worker threads).
+#[derive(Debug)]
+pub struct ShardViews<'a> {
+    buf: &'a mut [Flit],
+    head: &'a mut [u32],
+    len: &'a mut [u32],
+    cap: usize,
+    bounds: &'a [usize],
+    next: usize,
+}
+
+impl<'a> Iterator for ShardViews<'a> {
+    type Item = FlitQueuesShard<'a>;
+
+    fn next(&mut self) -> Option<FlitQueuesShard<'a>> {
+        if self.next + 1 >= self.bounds.len() {
+            return None;
+        }
+        let (q0, q1) = (self.bounds[self.next], self.bounds[self.next + 1]);
+        self.next += 1;
+        let nq = q1 - q0;
+        let (b, rest) = std::mem::take(&mut self.buf).split_at_mut(nq * self.cap);
+        self.buf = rest;
+        let (h, rest) = std::mem::take(&mut self.head).split_at_mut(nq);
+        self.head = rest;
+        let (l, rest) = std::mem::take(&mut self.len).split_at_mut(nq);
+        self.len = rest;
+        Some(FlitQueuesShard { buf: b, head: h, len: l, cap: self.cap, q0 })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.bounds.len() - 1 - self.next;
+        (n, Some(n))
     }
 }
 
 /// Mutable view over a contiguous range of [`FlitQueues`] queues,
 /// addressed by global queue id (the view subtracts its own offset).
-/// Produced by [`FlitQueues::shards`] / [`FlitQueues::full_view`]; the
+/// Produced by [`FlitQueues::shard_views`] / [`FlitQueues::full_view`]; the
 /// parallel NoC step hands one view per shard to its workers.
 #[derive(Debug)]
 pub struct FlitQueuesShard<'a> {
@@ -294,14 +330,19 @@ mod tests {
         q.push_back(4, flit(40));
         q.push_back(4, flit(41));
         {
-            let mut shards = q.shards(&[0, 2, 6]);
-            assert_eq!(shards.len(), 2);
-            // Global ids work in each shard's own range.
-            assert_eq!(shards[0].front(0).unwrap().packet, 10);
-            assert_eq!(shards[0].len(1), 0);
-            assert_eq!(shards[1].front(4).unwrap().packet, 40);
-            assert_eq!(shards[1].pop_front(4).packet, 40);
-            shards[1].push_back(5, flit(50));
+            let bounds = [0, 2, 6];
+            let mut views = q.shard_views(&bounds);
+            assert_eq!(views.size_hint(), (2, Some(2)));
+            let s0 = views.next().unwrap();
+            let mut s1 = views.next().unwrap();
+            assert!(views.next().is_none());
+            // Global ids work in each shard's own range (both views
+            // coexist — the splits are disjoint).
+            assert_eq!(s0.front(0).unwrap().packet, 10);
+            assert_eq!(s0.len(1), 0);
+            assert_eq!(s1.front(4).unwrap().packet, 40);
+            assert_eq!(s1.pop_front(4).packet, 40);
+            s1.push_back(5, flit(50));
         }
         // Mutations through the views land in the arena.
         assert_eq!(q.len(4), 1);
@@ -332,6 +373,6 @@ mod tests {
     #[should_panic(expected = "cover the arena")]
     fn shard_bounds_must_cover_all_queues() {
         let mut q = FlitQueues::new(4, 2);
-        let _ = q.shards(&[0, 3]);
+        let _ = q.shard_views(&[0, 3]);
     }
 }

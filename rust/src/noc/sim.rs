@@ -74,9 +74,11 @@
 //!   (cycle, node, draw index) so draw values depend on position, never
 //!   on which thread ran first.
 //!
-//! The parallel path costs two small `Vec`s of shard views per cycle;
-//! the default `threads = 1` path builds a single whole-arena view with
-//! no per-step allocation and is exactly the sequential simulator.
+//! The parallel path allocates nothing per cycle: shard views are carved
+//! lazily ([`FlitQueues::shard_views`] walks `split_at_mut`) and each
+//! context is handed to a worker as it is built. The default
+//! `threads = 1` path builds a single whole-arena view with no per-step
+//! allocation and is exactly the sequential simulator.
 //!
 //! Behavior is pinned by differential golden tests against
 //! [`super::refsim::RefNocSim`], the retained pre-rewrite implementation:
@@ -593,60 +595,69 @@ impl NocSim {
         let qbase: &[usize] = qbase;
         let pbase: &[usize] = pbase;
 
-        // Carve disjoint per-shard views out of the flat arenas.
-        let bufs_shards = bufs.shards(shard_qbounds);
+        // Carve disjoint per-shard views out of the flat arenas, lazily:
+        // each context is dispatched to a worker the moment it is built,
+        // so the parallel step allocates no per-cycle `Vec` of views or
+        // contexts (ROADMAP follow-up (a) to the PR 3 parallel port).
+        let mut bufs_shards = bufs.shard_views(shard_qbounds);
         let (mut credits_r, mut owner_r) = (&mut credits[..], &mut owner[..]);
         let mut rr_r = &mut rr[..];
         let mut occ_r = &mut occ[..];
         let mut inj_r = &mut inject_q[..];
-        let mut ctxs = Vec::with_capacity(nshards);
-        for (i, (scr, bufs_sh)) in scratch.iter_mut().zip(bufs_shards).enumerate() {
-            let (n0, n1) = (shard_bounds[i], shard_bounds[i + 1]);
-            let (q0, q1) = (shard_qbounds[i], shard_qbounds[i + 1]);
-            let (p0, p1) = (shard_pbounds[i], shard_pbounds[i + 1]);
-            let (c, rest) = std::mem::take(&mut credits_r).split_at_mut(q1 - q0);
-            credits_r = rest;
-            let (ow, rest) = std::mem::take(&mut owner_r).split_at_mut(q1 - q0);
-            owner_r = rest;
-            let (r, rest) = std::mem::take(&mut rr_r).split_at_mut(p1 - p0);
-            rr_r = rest;
-            let (oc, rest) = std::mem::take(&mut occ_r).split_at_mut(n1 - n0);
-            occ_r = rest;
-            let (inj, rest) = std::mem::take(&mut inj_r).split_at_mut(n1 - n0);
-            inj_r = rest;
-            let ShardScratch { arrivals, credit_returns, ejections, flit_hops, input_busy } = scr;
-            ctxs.push(ShardCtx {
-                topo,
-                routes,
-                qbase,
-                pbase,
-                bufs: bufs_sh,
-                credits: c,
-                owner: ow,
-                rr: r,
-                occ: oc,
-                inject_q: inj,
-                input_busy,
-                effects: ScratchEffects { arrivals, credit_returns, ejections, flit_hops },
-                n0,
-                n1,
-                q0,
-                p0,
-                vcs,
-                cap,
-                router_latency,
-            });
-        }
+        let mut scratch_r = &mut scratch[..];
         let pool = pool.as_mut().expect("multi-shard sims own a worker pool");
         pool.scoped(|scope| {
-            let mut it = ctxs.into_iter();
-            let mut first = it.next().expect("at least one shard");
-            for mut ctx in it {
-                scope.execute(move || ctx.run(now, now_next));
+            let mut first: Option<ShardCtx<'_, ScratchEffects<'_>>> = None;
+            for i in 0..nshards {
+                let bufs_sh = bufs_shards.next().expect("one view per shard");
+                let (scr, rest) =
+                    std::mem::take(&mut scratch_r).split_first_mut().expect("scratch per shard");
+                scratch_r = rest;
+                let (n0, n1) = (shard_bounds[i], shard_bounds[i + 1]);
+                let (q0, q1) = (shard_qbounds[i], shard_qbounds[i + 1]);
+                let (p0, p1) = (shard_pbounds[i], shard_pbounds[i + 1]);
+                let (c, rest) = std::mem::take(&mut credits_r).split_at_mut(q1 - q0);
+                credits_r = rest;
+                let (ow, rest) = std::mem::take(&mut owner_r).split_at_mut(q1 - q0);
+                owner_r = rest;
+                let (r, rest) = std::mem::take(&mut rr_r).split_at_mut(p1 - p0);
+                rr_r = rest;
+                let (oc, rest) = std::mem::take(&mut occ_r).split_at_mut(n1 - n0);
+                occ_r = rest;
+                let (inj, rest) = std::mem::take(&mut inj_r).split_at_mut(n1 - n0);
+                inj_r = rest;
+                let ShardScratch { arrivals, credit_returns, ejections, flit_hops, input_busy } =
+                    scr;
+                let mut ctx = ShardCtx {
+                    topo,
+                    routes,
+                    qbase,
+                    pbase,
+                    bufs: bufs_sh,
+                    credits: c,
+                    owner: ow,
+                    rr: r,
+                    occ: oc,
+                    inject_q: inj,
+                    input_busy,
+                    effects: ScratchEffects { arrivals, credit_returns, ejections, flit_hops },
+                    n0,
+                    n1,
+                    q0,
+                    p0,
+                    vcs,
+                    cap,
+                    router_latency,
+                };
+                if i == 0 {
+                    first = Some(ctx);
+                } else {
+                    scope.execute(move || ctx.run(now, now_next));
+                }
             }
             // The stepping thread works too instead of idling at the
             // barrier.
-            first.run(now, now_next);
+            first.expect("at least one shard").run(now, now_next);
         });
     }
 

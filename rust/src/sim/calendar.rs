@@ -79,6 +79,111 @@ impl<T> Calendar<T> {
     }
 }
 
+/// A [`Calendar`] with lazy event cancellation by generation stamp, for
+/// simulators that must *retract* scheduled work — the admission engine's
+/// incremental re-simulation (`coordinator::admit`) cancels the pending
+/// completion events of invalidated steps and re-enqueues them at their
+/// recomputed times.
+///
+/// Every event is a `usize` key (the caller's step/entity id) pushed
+/// together with the key's current generation. [`StampedCalendar::cancel`]
+/// bumps the generation, which invalidates *all* queued events for that
+/// key in O(1); stale entries are filtered out (and their storage
+/// recycled) when their batch comes due. Re-enqueueing is just a fresh
+/// [`StampedCalendar::push`] — it records the new generation. `len` /
+/// `is_empty` count **live** events only, so cancellation is observable
+/// immediately even though the stale entries are still physically queued.
+///
+/// FIFO tie-break within a cycle is inherited from the wheel: live events
+/// due at the same cycle surface in push order (cancelled entries are
+/// skipped without perturbing the order of the survivors).
+#[derive(Debug)]
+pub struct StampedCalendar {
+    cal: Calendar<(usize, u32)>,
+    /// Current generation per key (grown on demand).
+    gens: Vec<u32>,
+    /// Live (non-cancelled) queued events per key.
+    queued: Vec<u32>,
+    /// Total live queued events.
+    live: usize,
+}
+
+impl StampedCalendar {
+    /// See [`Calendar::with_horizon`].
+    pub fn with_horizon(min_horizon: usize) -> Self {
+        StampedCalendar {
+            cal: Calendar::with_horizon(min_horizon),
+            gens: Vec::new(),
+            queued: Vec::new(),
+            live: 0,
+        }
+    }
+
+    fn grow(&mut self, key: usize) {
+        if key >= self.gens.len() {
+            self.gens.resize(key + 1, 0);
+            self.queued.resize(key + 1, 0);
+        }
+    }
+
+    /// Schedule `key` at absolute cycle `at` under its current generation.
+    pub fn push(&mut self, at: Cycle, key: usize) {
+        self.grow(key);
+        self.cal.push(at, (key, self.gens[key]));
+        self.queued[key] += 1;
+        self.live += 1;
+    }
+
+    /// Cancel every queued event for `key` (lazy: stale entries are
+    /// dropped when their batch comes due). A later
+    /// [`StampedCalendar::push`] re-enqueues the key under the new
+    /// generation.
+    pub fn cancel(&mut self, key: usize) {
+        self.grow(key);
+        self.gens[key] = self.gens[key].wrapping_add(1);
+        self.live -= self.queued[key] as usize;
+        self.queued[key] = 0;
+    }
+
+    /// Pop the earliest batch of live events due at or before `until`
+    /// (no bound when `None`), writing the keys in push order into `out`
+    /// (cleared first). Returns the batch time, or `None` when nothing
+    /// live is due in range. Batches whose events were all cancelled are
+    /// skipped and their storage recycled.
+    pub fn take_due_until(&mut self, until: Option<Cycle>, out: &mut Vec<usize>) -> Option<Cycle> {
+        out.clear();
+        loop {
+            let t = self.cal.next_time()?;
+            if let Some(u) = until {
+                if t > u {
+                    return None;
+                }
+            }
+            let (t, due) = self.cal.take_next().expect("time index out of sync");
+            for &(_, (key, gen)) in &due {
+                if self.gens[key] == gen {
+                    out.push(key);
+                    self.queued[key] -= 1;
+                    self.live -= 1;
+                }
+            }
+            self.cal.recycle(due);
+            if !out.is_empty() {
+                return Some(t);
+            }
+        }
+    }
+
+    /// Live (non-cancelled) queued events.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +216,68 @@ mod tests {
         c.recycle(due);
         let (t, due) = c.take_next().unwrap();
         assert_eq!((t, due[0].1), (1000, 1));
+    }
+
+    #[test]
+    fn stamped_cancel_drops_queued_events() {
+        let mut c = StampedCalendar::with_horizon(8);
+        let mut out = Vec::new();
+        c.push(5, 1);
+        c.push(5, 2);
+        c.push(9, 3);
+        assert_eq!(c.len(), 3);
+        c.cancel(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.take_due_until(None, &mut out), Some(5));
+        assert_eq!(out, [1]);
+        assert_eq!(c.take_due_until(None, &mut out), Some(9));
+        assert_eq!(out, [3]);
+        assert!(c.is_empty());
+        assert_eq!(c.take_due_until(None, &mut out), None);
+    }
+
+    #[test]
+    fn stamped_cancel_then_readmit_surfaces_once_at_new_time() {
+        let mut c = StampedCalendar::with_horizon(4);
+        let mut out = Vec::new();
+        c.push(10, 7);
+        c.cancel(7);
+        c.push(3, 7); // re-enqueued earlier under the new generation
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.take_due_until(None, &mut out), Some(3));
+        assert_eq!(out, [7]);
+        // The stale generation-0 entry at t=10 must be skipped entirely.
+        assert_eq!(c.take_due_until(None, &mut out), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn stamped_until_bound_and_fifo_ties() {
+        let mut c = StampedCalendar::with_horizon(8);
+        let mut out = Vec::new();
+        c.push(4, 11);
+        c.push(4, 22);
+        c.push(4, 33);
+        c.push(6, 44);
+        c.cancel(22);
+        assert_eq!(c.take_due_until(Some(3), &mut out), None);
+        assert_eq!(c.take_due_until(Some(4), &mut out), Some(4));
+        assert_eq!(out, [11, 33], "push-order FIFO with the cancelled entry skipped");
+        assert_eq!(c.take_due_until(Some(5), &mut out), None);
+        assert_eq!(c.take_due_until(Some(6), &mut out), Some(6));
+        assert_eq!(out, [44]);
+    }
+
+    #[test]
+    fn stamped_all_cancelled_batch_is_skipped() {
+        let mut c = StampedCalendar::with_horizon(4);
+        let mut out = Vec::new();
+        c.push(2, 0);
+        c.push(5, 1);
+        c.cancel(0);
+        // The t=2 batch is entirely stale: take must jump to t=5.
+        assert_eq!(c.take_due_until(None, &mut out), Some(5));
+        assert_eq!(out, [1]);
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //!   simulators that jump between sparse event times (coordinator co-sim
 //!   step completions, DRAM per-bank ready events) instead of stepping
 //!   every cycle.
+//! * [`StampedCalendar`] — a [`Calendar`] with generation-stamped lazy
+//!   cancellation, for simulators that retract scheduled work (the
+//!   admission engine's incremental re-simulation cancels and re-enqueues
+//!   invalidated step completions).
 //! * [`StreamingHist`] — exact streaming histogram (flat counts + sparse
 //!   tail) behind the report-path latency quantiles; mergeable, so
 //!   shard-local histograms reduce to the same bits as a single one.
@@ -29,7 +33,7 @@ mod pool;
 mod rng;
 mod stats;
 
-pub use calendar::Calendar;
+pub use calendar::{Calendar, StampedCalendar};
 pub use event::EventQueue;
 pub use event_wheel::EventWheel;
 pub use pool::{Scope, WorkerPool};

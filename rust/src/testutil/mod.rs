@@ -27,6 +27,32 @@ pub fn bundled_fabric(name: &str) -> crate::fabric::Fabric {
     .expect("bundled fabric builds")
 }
 
+/// Concatenate lowered programs into one merged program with dependency
+/// indices offset per segment — the "merged schedule" oracle shared by
+/// `tests/admission_golden.rs` and `benches/bench_admission.rs`: running
+/// `coordinator::cosim` on the concatenation must equal admitting the
+/// parts at t=0 in order.
+pub fn merge_programs(progs: &[&crate::compiler::FabricProgram]) -> crate::compiler::FabricProgram {
+    use crate::compiler::Step;
+    let mut steps = Vec::new();
+    for p in progs {
+        let base = steps.len();
+        for s in &p.steps {
+            let mut s = s.clone();
+            let deps = match &mut s {
+                Step::Load { deps, .. } | Step::Transfer { deps, .. } | Step::Exec { deps, .. } => {
+                    deps
+                }
+            };
+            for d in deps.iter_mut() {
+                *d += base;
+            }
+            steps.push(s);
+        }
+    }
+    crate::compiler::FabricProgram { steps, producer: Vec::new() }
+}
+
 pub mod prop {
     use crate::sim::Rng;
 

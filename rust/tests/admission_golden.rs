@@ -1,0 +1,234 @@
+//! Differential golden tests for the multi-program admission engine
+//! (`coordinator::admit`), pinning it to the single-program engines.
+//!
+//! The headline contract (see the module docs in `coordinator/exec.rs`):
+//!
+//! * (a) one program admitted at t=0 reproduces `exec::cosim` **and**
+//!   `refexec::cosim_ref` bit-for-bit — makespan, per-step completions,
+//!   tile busy cycles, transfer cycles, per-category energy bit patterns
+//!   and the program span — across mlp/vit workloads, all three map
+//!   strategies and both bundled fabric configs;
+//! * (b) N programs admitted at t=0 equal a fresh-calendar oracle that
+//!   replays the merged (concatenated) schedule through `cosim`;
+//! * (c) staggered `admit_at` times equal the oracle built from scratch
+//!   with the same offsets;
+//! * incremental re-simulation after a program/cost change (`replace`)
+//!   is bit-identical to a from-scratch oracle run.
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::compiler::FabricProgram;
+use archytas::coordinator::{cosim, cosim_ref, CosimSession, ExecReport};
+use archytas::fabric::Fabric;
+use archytas::sim::Cycle;
+use archytas::testutil::{bundled_fabric, merge_programs};
+use archytas::workloads;
+
+const CONFIGS: [&str; 2] = ["edge16.toml", "homogeneous_npu.toml"];
+const STRATEGIES: [MapStrategy; 3] =
+    [MapStrategy::RoundRobin, MapStrategy::Greedy, MapStrategy::Ilp];
+
+/// The two workload families of the matrix. Kept small so the full
+/// config × strategy × workload product (including the ILP mapper's
+/// branch-and-bound) stays fast.
+fn workload(name: &str) -> archytas::ir::Graph {
+    match name {
+        "mlp" => workloads::mlp(4, 64, &[32], 10, 7).unwrap(),
+        "vit" => {
+            let p = workloads::VitParams {
+                batch: 2,
+                tokens: 8,
+                dim: 32,
+                depth: 1,
+                mlp_ratio: 2,
+                patch_dim: 16,
+                classes: 10,
+            };
+            workloads::vit(&p, 3).unwrap()
+        }
+        other => panic!("unknown workload {other}"),
+    }
+}
+
+fn lowered(fabric: &Fabric, wname: &str, strategy: MapStrategy) -> FabricProgram {
+    let g = workload(wname);
+    let m = map_graph(&g, fabric, strategy, Precision::Int8).unwrap();
+    lower(&g, fabric, &m).unwrap()
+}
+
+/// Field-by-field asserts (granular diagnostics), then the library's
+/// `bit_identical` contract (which now also covers the program spans).
+fn assert_reports_identical(a: &ExecReport, b: &ExecReport, tag: &str) {
+    assert_eq!(a.cycles, b.cycles, "{tag}: makespan");
+    assert_eq!(a.step_done, b.step_done, "{tag}: step_done");
+    assert_eq!(a.tile_busy, b.tile_busy, "{tag}: tile_busy");
+    assert_eq!(a.transfer_cycles, b.transfer_cycles, "{tag}: transfer_cycles");
+    assert_eq!(a.exec_steps, b.exec_steps, "{tag}: exec_steps");
+    assert_eq!(
+        a.metrics.total_energy_pj().to_bits(),
+        b.metrics.total_energy_pj().to_bits(),
+        "{tag}: total energy {} vs {}",
+        a.metrics.total_energy_pj(),
+        b.metrics.total_energy_pj()
+    );
+    assert_eq!(a.programs.len(), b.programs.len(), "{tag}: span count");
+    for (i, (sa, sb)) in a.programs.iter().zip(&b.programs).enumerate() {
+        assert!(sa.bit_identical(sb), "{tag}: span {i}: {sa:?} vs {sb:?}");
+    }
+    assert!(a.bit_identical(b), "{tag}: bit_identical contract");
+}
+
+/// (a) Single program at t=0: the session must replay both single-program
+/// engines bit-for-bit over the full workload × strategy × config matrix.
+#[test]
+fn single_program_matrix_matches_both_engines() {
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        for wname in ["mlp", "vit"] {
+            for strategy in STRATEGIES {
+                let tag = format!("{cfg}/{wname}/{strategy:?}");
+                let prog = lowered(&fabric, wname, strategy);
+                let mut s = CosimSession::new(&fabric);
+                s.admit_at(&prog, 0).unwrap();
+                let got = s.report().unwrap();
+                assert!(got.cycles > 0, "{tag}: trivial program");
+                let ev = cosim(&fabric, &prog).unwrap();
+                let re = cosim_ref(&fabric, &prog).unwrap();
+                assert_reports_identical(&got, &ev, &format!("{tag} vs cosim"));
+                assert_reports_identical(&got, &re, &format!("{tag} vs cosim_ref"));
+            }
+        }
+    }
+}
+
+/// (b) N programs admitted at t=0 equal the fresh-calendar oracle that
+/// replays the merged schedule: `cosim`/`cosim_ref` of the concatenation
+/// (merged fields; the session additionally reports one span per
+/// program, whose integer counters tile the merged totals exactly).
+#[test]
+fn batch_at_zero_matches_merged_oracle() {
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        let p1 = lowered(&fabric, "mlp", MapStrategy::Greedy);
+        let p2 = lowered(&fabric, "vit", MapStrategy::RoundRobin);
+        let p3 = lowered(&fabric, "mlp", MapStrategy::RoundRobin);
+        let mut s = CosimSession::new(&fabric);
+        s.admit_at(&p1, 0).unwrap();
+        s.admit_at(&p2, 0).unwrap();
+        s.admit_at(&p3, 0).unwrap();
+        let got = s.report().unwrap();
+        let merged = merge_programs(&[&p1, &p2, &p3]);
+        for oracle in [cosim(&fabric, &merged).unwrap(), cosim_ref(&fabric, &merged).unwrap()] {
+            let tag = format!("{cfg}/batch3");
+            assert_eq!(got.cycles, oracle.cycles, "{tag}: makespan");
+            assert_eq!(got.step_done, oracle.step_done, "{tag}: step_done");
+            assert_eq!(got.tile_busy, oracle.tile_busy, "{tag}: tile_busy");
+            assert_eq!(got.transfer_cycles, oracle.transfer_cycles, "{tag}: transfer");
+            assert_eq!(got.exec_steps, oracle.exec_steps, "{tag}: exec_steps");
+            assert_eq!(
+                got.metrics.total_energy_pj().to_bits(),
+                oracle.metrics.total_energy_pj().to_bits(),
+                "{tag}: energy bits"
+            );
+            assert_eq!(got.metrics, oracle.metrics, "{tag}: metrics struct");
+        }
+        // Spans tile the merged totals exactly (integer counters).
+        assert_eq!(got.programs.len(), 3);
+        let steps: usize = got.programs.iter().map(|p| p.steps).sum();
+        let execs: usize = got.programs.iter().map(|p| p.exec_steps).sum();
+        let transfer: Cycle = got.programs.iter().map(|p| p.transfer_cycles).sum();
+        let ops: u64 = got.programs.iter().map(|p| p.ops).sum();
+        let bytes: u64 = got.programs.iter().map(|p| p.bytes_moved).sum();
+        assert_eq!(steps, got.step_done.len());
+        assert_eq!(execs, got.exec_steps);
+        assert_eq!(transfer, got.transfer_cycles);
+        assert_eq!(ops, got.metrics.ops);
+        assert_eq!(bytes, got.metrics.bytes_moved);
+        assert_eq!(
+            got.cycles,
+            got.programs.iter().map(|p| p.finished_at).max().unwrap()
+        );
+    }
+}
+
+/// (c) Staggered admission times: interleaving admits with drains (the
+/// serving shape — including an admit into the simulated *past*) equals
+/// the oracle session built from scratch with the same offsets.
+#[test]
+fn staggered_admission_matches_from_scratch_oracle() {
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        let p1 = lowered(&fabric, "mlp", MapStrategy::Greedy);
+        let p2 = lowered(&fabric, "vit", MapStrategy::Greedy);
+        let p3 = lowered(&fabric, "mlp", MapStrategy::RoundRobin);
+        // Offsets: p2 lands mid-flight of p1 (run_until pause), p3 lands
+        // retroactively before both after everything drained.
+        let mut inc = CosimSession::new(&fabric);
+        inc.admit_at(&p1, 50).unwrap();
+        let solo = cosim(&fabric, &p1).unwrap();
+        inc.run_until(50 + solo.cycles / 2).unwrap();
+        inc.admit_at(&p2, 50 + solo.cycles / 3).unwrap();
+        inc.run_to_drain().unwrap();
+        inc.admit_at(&p3, 0).unwrap();
+        let got = inc.report().unwrap();
+
+        let mut fresh = CosimSession::new(&fabric);
+        fresh.admit_at(&p1, 50).unwrap();
+        fresh.admit_at(&p2, 50 + solo.cycles / 3).unwrap();
+        fresh.admit_at(&p3, 0).unwrap();
+        let want = fresh.report().unwrap();
+        assert_reports_identical(&got, &want, &format!("{cfg}/staggered"));
+    }
+}
+
+/// Incremental re-simulation after a program/cost change: `replace` a
+/// drained program with a re-lowered variant (different precision — a
+/// genuine cost-model bump through the start-time-aware fabric hooks)
+/// and require bit-identity with a from-scratch oracle, across both
+/// configs and all three map strategies.
+#[test]
+fn replace_matches_from_scratch_across_matrix() {
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        for strategy in STRATEGIES {
+            let tag = format!("{cfg}/{strategy:?}/replace");
+            let keep = lowered(&fabric, "mlp", strategy);
+            let old = lowered(&fabric, "vit", strategy);
+            // The "cost bump": same workload re-mapped at F32 — every
+            // Exec/Load step re-prices through the fabric hooks.
+            let g = workload("vit");
+            let m = map_graph(&g, &fabric, strategy, Precision::F32).unwrap();
+            let bumped = lower(&g, &fabric, &m).unwrap();
+
+            let mut inc = CosimSession::new(&fabric);
+            inc.admit_at(&keep, 0).unwrap();
+            let h = inc.admit_at(&old, 25).unwrap();
+            inc.run_to_drain().unwrap();
+            inc.replace(h, &bumped, 25).unwrap();
+            let got = inc.report().unwrap();
+
+            let mut fresh = CosimSession::new(&fabric);
+            fresh.admit_at(&keep, 0).unwrap();
+            fresh.admit_at(&bumped, 25).unwrap();
+            let want = fresh.report().unwrap();
+            assert_reports_identical(&got, &want, &tag);
+        }
+    }
+}
+
+/// `invalidate` (re-price without content change) must be a bit-exact
+/// no-op on a time-invariant cost model — the hook seam contract.
+#[test]
+fn invalidate_reprices_to_identical_bits() {
+    let fabric = bundled_fabric("edge16.toml");
+    let p1 = lowered(&fabric, "mlp", MapStrategy::Greedy);
+    let p2 = lowered(&fabric, "vit", MapStrategy::Greedy);
+    let mut s = CosimSession::new(&fabric);
+    let h1 = s.admit_at(&p1, 0).unwrap();
+    s.admit_at(&p2, 10).unwrap();
+    let before = s.report().unwrap();
+    s.invalidate(h1).unwrap();
+    let after = s.report().unwrap();
+    assert_reports_identical(&before, &after, "invalidate/noop");
+}

@@ -2,14 +2,18 @@
 //! compiler passes (deliverable (c); uses the in-repo `testutil::prop`
 //! harness — the offline image has no proptest).
 
+use archytas::accel::{Compute, Precision};
 use archytas::compiler::precision::{analyze_ranges, FixedFormat, Interval};
-use archytas::compiler::{pruning, quantize, sparsify};
+use archytas::compiler::{pruning, quantize, sparsify, FabricProgram, Step};
+use archytas::config::FabricConfig;
+use archytas::coordinator::CosimSession;
 use archytas::dram::{DramKind, DramSim, DramTiming, Request};
 use archytas::dse::milp::{Milp, Sense};
 use archytas::dse::pareto_front;
+use archytas::fabric::Fabric;
 use archytas::ir::interp::{self, Mat};
 use archytas::noc::{routing::RouteTable, traffic, NocParams, NocSim, Topology};
-use archytas::sim::{Calendar, Cycle, EventWheel, Rng};
+use archytas::sim::{Calendar, Cycle, EventWheel, Rng, StampedCalendar};
 use archytas::testutil::prop;
 use archytas::workloads;
 
@@ -538,6 +542,237 @@ fn prop_calendar_time_ordered_and_lossless() {
         }
         if seen != pushed {
             return Err(format!("saw {seen} of {pushed}"));
+        }
+        Ok(())
+    });
+}
+
+/// Random synthetic DAG program over `nt` tiles: forward deps only
+/// (duplicates allowed — the engine keeps them balanced on both sides),
+/// mixing HBM loads, tile-to-tile transfers (including self-transfers,
+/// which cost zero cycles) and Int8 matmul execs.
+fn random_admission_program(rng: &mut Rng, nt: usize) -> FabricProgram {
+    let n = rng.below(12) + 1;
+    let mut steps = Vec::new();
+    for i in 0..n {
+        let mut deps: Vec<usize> = Vec::new();
+        if i > 0 {
+            for _ in 0..rng.below(3) {
+                deps.push(rng.below(i));
+            }
+        }
+        let step = match rng.below(3) {
+            0 => Step::Load {
+                tile: rng.below(nt),
+                bytes: (rng.below(4000) + 1) as u64,
+                node: 0,
+                deps,
+            },
+            1 => Step::Transfer {
+                from: rng.below(nt),
+                to: rng.below(nt),
+                bytes: (rng.below(4000) + 1) as u64,
+                node: 0,
+                deps,
+            },
+            _ => Step::Exec {
+                tile: rng.below(nt),
+                node: 0,
+                compute: Compute::MatMul {
+                    m: rng.below(8) + 1,
+                    k: rng.below(8) + 1,
+                    n: rng.below(8) + 1,
+                },
+                precision: Precision::Int8,
+                deps,
+            },
+        };
+        steps.push(step);
+    }
+    FabricProgram { steps, producer: Vec::new() }
+}
+
+/// Admission engine vs the invalidation oracle: random DAGs admitted at
+/// random times (including the simulated past), random `replace`s (the
+/// cost-model-bump primitive) and random full/partial drains in between
+/// must leave the session bit-identical to a fresh one built from
+/// scratch with the same final programs and times.
+#[test]
+fn prop_incremental_resimulation_matches_from_scratch() {
+    let fabric = Fabric::build(
+        FabricConfig::from_toml(
+            "[noc]\nwidth = 3\nheight = 3\n\
+             [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let nt = fabric.tile_count();
+    prop::check(25, |rng| {
+        let mut inc = CosimSession::new(&fabric);
+        let mut current: Vec<(FabricProgram, Cycle)> = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..rng.below(6) + 1 {
+            let roll = rng.below(10);
+            if roll < 5 || current.is_empty() {
+                let p = random_admission_program(rng, nt);
+                let at = rng.below(3000) as Cycle;
+                handles.push(inc.admit_at(&p, at).map_err(|e| e.to_string())?);
+                current.push((p, at));
+            } else if roll < 7 {
+                let slot = rng.below(current.len());
+                let p = random_admission_program(rng, nt);
+                let at = rng.below(3000) as Cycle;
+                inc.replace(handles[slot], &p, at).map_err(|e| e.to_string())?;
+                current[slot] = (p, at);
+            } else if roll < 9 {
+                inc.run_to_drain().map_err(|e| e.to_string())?;
+            } else {
+                inc.run_until(rng.below(4000) as Cycle).map_err(|e| e.to_string())?;
+            }
+        }
+        let got = inc.report().map_err(|e| e.to_string())?;
+        let mut fresh = CosimSession::new(&fabric);
+        for (p, at) in &current {
+            fresh.admit_at(p, *at).map_err(|e| e.to_string())?;
+        }
+        let want = fresh.report().map_err(|e| e.to_string())?;
+        if !got.bit_identical(&want) {
+            return Err(format!(
+                "incremental diverged: cycles {} vs {}, steps {:?} vs {:?}",
+                got.cycles, want.cycles, got.step_done, want.step_done
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// StampedCalendar invariants under random interleavings of push,
+/// cancel, cancel-then-readmit and take: every key surfaces exactly once
+/// per live push, at its scheduled time, in push order within a time —
+/// and never after a cancellation that outpaced it.
+#[test]
+fn prop_stamped_calendar_cancellation() {
+    prop::check(40, |rng| {
+        let mut c = StampedCalendar::with_horizon(rng.below(6) + 1);
+        let keys = rng.below(12) + 1;
+        // expected[key] = Some(time) when one live event is queued.
+        let mut expected: Vec<Option<Cycle>> = vec![None; keys];
+        let mut pushes = rng.below(60) + 5;
+        let mut out = Vec::new();
+        let mut live_target = 0usize;
+        while pushes > 0 || !c.is_empty() {
+            let act = rng.below(10);
+            if act < 5 && pushes > 0 {
+                let k = rng.below(keys);
+                // single-live-event-per-key discipline (the engine's):
+                // cancel first if one is queued.
+                if expected[k].is_some() {
+                    c.cancel(k);
+                    expected[k] = None;
+                    live_target -= 1;
+                }
+                let t = rng.below(500) as Cycle;
+                c.push(t, k);
+                expected[k] = Some(t);
+                live_target += 1;
+                pushes -= 1;
+            } else if act < 6 {
+                let k = rng.below(keys);
+                if expected[k].is_some() {
+                    c.cancel(k);
+                    expected[k] = None;
+                    live_target -= 1;
+                }
+            } else {
+                match c.take_due_until(None, &mut out) {
+                    None => {
+                        if !c.is_empty() {
+                            return Err("take returned None with live events".into());
+                        }
+                    }
+                    Some(t) => {
+                        for &k in &out {
+                            if expected[k] != Some(t) {
+                                return Err(format!(
+                                    "key {k} surfaced at {t}, expected {:?}",
+                                    expected[k]
+                                ));
+                            }
+                            expected[k] = None;
+                            live_target -= 1;
+                        }
+                    }
+                }
+            }
+            if c.len() != live_target {
+                return Err(format!("live count {} vs expected {live_target}", c.len()));
+            }
+        }
+        if expected.iter().any(Option::is_some) {
+            return Err("live events stranded".into());
+        }
+        Ok(())
+    });
+}
+
+/// StampedCalendar FIFO ties across keys and push-while-draining: keys
+/// pushed at one cycle surface in push order even when interleaved with
+/// cancelled entries, and events pushed while draining (the re-enqueue
+/// path) surface at their new times.
+#[test]
+fn prop_stamped_calendar_fifo_and_reenqueue() {
+    prop::check(30, |rng| {
+        let mut c = StampedCalendar::with_horizon(4);
+        let n = rng.below(20) + 2;
+        let t0: Cycle = 10;
+        for k in 0..n {
+            c.push(t0, k);
+        }
+        // Cancel a random subset, re-enqueueing half of it later.
+        let mut expect_first: Vec<usize> = Vec::new();
+        let mut reenqueued: Vec<usize> = Vec::new();
+        for k in 0..n {
+            if rng.chance(0.4) {
+                c.cancel(k);
+                if rng.chance(0.5) {
+                    c.push(t0 + 7, k);
+                    reenqueued.push(k);
+                }
+            } else {
+                expect_first.push(k);
+            }
+        }
+        let mut out = Vec::new();
+        if expect_first.is_empty() {
+            // Whole first batch cancelled: jump straight to the
+            // re-enqueued batch (if any).
+            match c.take_due_until(None, &mut out) {
+                None => {
+                    if !reenqueued.is_empty() {
+                        return Err("lost re-enqueued events".into());
+                    }
+                }
+                Some(t) => {
+                    if (t, &out) != (t0 + 7, &reenqueued) {
+                        return Err(format!("got {t}/{out:?} want {}/{reenqueued:?}", t0 + 7));
+                    }
+                }
+            }
+            return Ok(());
+        }
+        let t = c.take_due_until(None, &mut out);
+        if t != Some(t0) || out != expect_first {
+            return Err(format!("first batch {t:?}/{out:?} want {t0}/{expect_first:?}"));
+        }
+        if !reenqueued.is_empty() {
+            let t = c.take_due_until(None, &mut out);
+            if t != Some(t0 + 7) || out != reenqueued {
+                return Err(format!("re-enqueued {t:?}/{out:?} want {reenqueued:?}"));
+            }
+        }
+        if !c.is_empty() {
+            return Err("stranded events".into());
         }
         Ok(())
     });
