@@ -69,6 +69,91 @@ impl Default for CuConfig {
     }
 }
 
+/// Cost-model section (`[fabric.cost]`): selects the
+/// [`crate::fabric::CostModel`] every resource query of the
+/// co-simulation stack routes through, and its knobs. `model` is one of
+/// `invariant` (default — time-invariant analytic pricing, bit-identical
+/// to the pre-cost-layer engines), `congestion`, `dvfs`, or
+/// `congestion_dvfs`. The time-varying models quantize occupancy
+/// feedback to `epoch_cycles`-long windows and read strictly earlier
+/// epochs only (the exactness contract — see `fabric::cost` docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostConfig {
+    pub model: String,
+    /// Occupancy epoch length, fabric cycles (time-varying models).
+    pub epoch_cycles: u64,
+    /// Congestion latency slope per average resident transfer.
+    pub alpha: f64,
+    /// Congestion factor ceiling.
+    pub cap: f64,
+    /// DVFS trailing window, in epochs.
+    pub window_epochs: u64,
+    /// DVFS busy-fraction threshold for the warm throttle band.
+    pub warm_frac: f64,
+    /// DVFS busy-fraction threshold for the hot throttle band.
+    pub hot_frac: f64,
+    /// Frequency scale applied in the warm band (0 < scale <= 1).
+    pub warm_scale: f64,
+    /// Frequency scale applied in the hot band (0 < scale <= 1).
+    pub hot_scale: f64,
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        CostConfig {
+            model: "invariant".into(),
+            epoch_cycles: 2048,
+            alpha: 0.25,
+            cap: 4.0,
+            window_epochs: 4,
+            warm_frac: 0.6,
+            hot_frac: 0.9,
+            warm_scale: 0.75,
+            hot_scale: 0.5,
+        }
+    }
+}
+
+impl CostConfig {
+    fn validate(&self) -> Result<()> {
+        let known = ["invariant", "congestion", "dvfs", "congestion_dvfs"];
+        if !known.contains(&self.model.as_str()) {
+            bail!(
+                "unknown fabric.cost.model {:?} (expected one of {known:?})",
+                self.model
+            );
+        }
+        // Upper bounds also catch negative TOML values wrapping through
+        // the i64 -> u64 cast into huge counts (the noc.threads lesson).
+        if self.epoch_cycles == 0 || self.epoch_cycles > 1_000_000_000 {
+            bail!(
+                "fabric.cost.epoch_cycles must be in 1..=1e9 cycles, got {}",
+                self.epoch_cycles
+            );
+        }
+        // Spelled so a NaN knob is rejected too (NaN compares false).
+        let ge = |x: f64, lo: f64| x.partial_cmp(&lo).is_some_and(std::cmp::Ordering::is_ge);
+        if !ge(self.alpha, 0.0) || !ge(self.cap, 1.0) {
+            bail!("fabric.cost: alpha must be >= 0 and cap >= 1");
+        }
+        if self.window_epochs == 0 || self.window_epochs > 4096 {
+            bail!(
+                "fabric.cost.window_epochs must be in 1..=4096, got {}",
+                self.window_epochs
+            );
+        }
+        let frac_ok = |f: f64| (0.0..=1.0).contains(&f);
+        if !frac_ok(self.warm_frac) || !frac_ok(self.hot_frac) || self.warm_frac > self.hot_frac {
+            bail!("fabric.cost: need 0 <= warm_frac <= hot_frac <= 1");
+        }
+        let scale_ok = |s: f64| s > 0.0 && s <= 1.0;
+        if !scale_ok(self.warm_scale) || !scale_ok(self.hot_scale) {
+            bail!("fabric.cost: throttle scales must lie in (0, 1]");
+        }
+        Ok(())
+    }
+}
+
 /// Whole-fabric configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
@@ -83,6 +168,8 @@ pub struct FabricConfig {
     pub hbm_bandwidth_gbps: f64,
     /// HBM access energy, pJ/byte.
     pub hbm_energy_pj_per_byte: f64,
+    /// Cost-model selection (`[fabric.cost]`).
+    pub cost: CostConfig,
 }
 
 impl Default for FabricConfig {
@@ -95,6 +182,7 @@ impl Default for FabricConfig {
             hbm_channels: 4,
             hbm_bandwidth_gbps: 64.0,
             hbm_energy_pj_per_byte: 3.9,
+            cost: CostConfig::default(),
         }
     }
 }
@@ -132,6 +220,19 @@ impl FabricConfig {
         if cus.is_empty() {
             cus = d.cus.clone();
         }
+        let cost = CostConfig {
+            model: doc.get_str("fabric.cost.model", &d.cost.model).to_string(),
+            epoch_cycles: doc.get_int("fabric.cost.epoch_cycles", d.cost.epoch_cycles as i64)
+                as u64,
+            alpha: doc.get_float("fabric.cost.alpha", d.cost.alpha),
+            cap: doc.get_float("fabric.cost.cap", d.cost.cap),
+            window_epochs: doc.get_int("fabric.cost.window_epochs", d.cost.window_epochs as i64)
+                as u64,
+            warm_frac: doc.get_float("fabric.cost.warm_frac", d.cost.warm_frac),
+            hot_frac: doc.get_float("fabric.cost.hot_frac", d.cost.hot_frac),
+            warm_scale: doc.get_float("fabric.cost.warm_scale", d.cost.warm_scale),
+            hot_scale: doc.get_float("fabric.cost.hot_scale", d.cost.hot_scale),
+        };
         let cfg = FabricConfig {
             name: doc.get_str("fabric.name", &d.name).to_string(),
             freq_ghz: doc.get_float("fabric.freq_ghz", d.freq_ghz),
@@ -141,6 +242,7 @@ impl FabricConfig {
             hbm_bandwidth_gbps: doc.get_float("hbm.bandwidth_gbps", d.hbm_bandwidth_gbps),
             hbm_energy_pj_per_byte: doc
                 .get_float("hbm.energy_pj_per_byte", d.hbm_energy_pj_per_byte),
+            cost,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -181,6 +283,7 @@ impl FabricConfig {
                 self.noc.height
             );
         }
+        self.cost.validate()?;
         Ok(())
     }
 
@@ -336,6 +439,38 @@ cluster_cores = 4
         let e = FabricConfig::from_toml("[[cu]]\nkind = \"npu\"\ntemplate = \"D\"\n")
             .unwrap_err();
         assert!(format!("{e:#}").contains("template"), "{e:#}");
+    }
+
+    #[test]
+    fn cost_section_parses_and_defaults() {
+        let cfg = FabricConfig::from_toml(
+            "[fabric.cost]\nmodel = \"congestion_dvfs\"\nepoch_cycles = 512\nalpha = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cost.model, "congestion_dvfs");
+        assert_eq!(cfg.cost.epoch_cycles, 512);
+        assert_eq!(cfg.cost.alpha, 0.5);
+        // Unset knobs keep their defaults.
+        assert_eq!(cfg.cost.window_epochs, CostConfig::default().window_epochs);
+        // And an absent section is the invariant default.
+        assert_eq!(FabricConfig::from_toml("").unwrap().cost, CostConfig::default());
+    }
+
+    #[test]
+    fn cost_section_rejects_bad_values() {
+        for bad in [
+            "[fabric.cost]\nmodel = \"psychic\"\n",
+            "[fabric.cost]\nmodel = \"congestion\"\nepoch_cycles = 0\n",
+            // Negative values must not wrap through the u64 cast.
+            "[fabric.cost]\nepoch_cycles = -1\n",
+            "[fabric.cost]\nwindow_epochs = -1\n",
+            "[fabric.cost]\ncap = 0.5\n",
+            "[fabric.cost]\nwarm_frac = 0.95\nhot_frac = 0.6\n",
+            "[fabric.cost]\nhot_scale = 0.0\n",
+            "[fabric.cost]\nhot_scale = 1.5\n",
+        ] {
+            assert!(FabricConfig::from_toml(bad).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

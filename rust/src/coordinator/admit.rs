@@ -17,20 +17,31 @@
 //!   request admitted into a quiescent calendar with a thousand finished
 //!   programs costs O(the resource queues it touches + its own steps),
 //!   not O(world) — finished programs on *other* resources are never
-//!   revisited (pruning drained programs from long-lived shared queues
-//!   is the remaining step for unbounded serving runs; see ROADMAP);
+//!   revisited, and [`CosimSession::prune_completed_before`] bounds the
+//!   shared queues themselves for unbounded serving runs;
 //! * [`AdmissionQueue`] batches admissions so a burst prices each step
 //!   exactly once instead of draining per request.
 //!
-//! # Determinism and the FIFO contract
+//! # Determinism and the queue-key contract
 //!
 //! Every resource (tile, the HBM port, each active (src, dst) link)
-//! serves its steps in ascending `(admit time, admission sequence, step
-//! index)` order, and a step starts at `max(dependency ready, resource
-//! free)` — the same recurrence as the single-program engine. The key is
-//! a total order consistent across all queues with all dependencies
-//! pointing backwards, so the multi-program schedule is deadlock-free and
-//! uniquely determined. Consequences, pinned by `tests/admission_golden.rs`:
+//! serves its steps in ascending `(program key, step index)` order, and a
+//! step starts at `max(dependency ready, resource free)` — the same
+//! recurrence as the single-program engine. The program key is chosen by
+//! the session's [`AdmitPolicy`]:
+//!
+//! * [`AdmitPolicy::Fifo`] (default) — `(admit time, admission seq)`:
+//!   exactly the PR 4 order, so every pre-policy report is unchanged;
+//! * [`AdmitPolicy::Priority`] — `(admit time, inverted priority,
+//!   admission seq)`: among same-instant admissions, higher
+//!   [`AdmitMeta::priority`] is served first;
+//! * [`AdmitPolicy::Deadline`] — `(deadline, admit time, admission
+//!   seq)`: earliest-deadline-first across the whole stream.
+//!
+//! Any such key is a total order on programs, and dependencies are
+//! intra-program pointing backwards in step index, so the multi-program
+//! schedule stays deadlock-free and uniquely determined under every
+//! policy. Consequences, pinned by `tests/admission_golden.rs`:
 //!
 //! * one program admitted at t=0 is **bit-identical** to `exec::cosim`
 //!   and `refexec::cosim_ref` (report fields, energy bit patterns);
@@ -39,7 +50,7 @@
 //! * any admit/replace/run interleaving is bit-identical to a fresh
 //!   session built from scratch with the same final programs and times.
 //!
-//! # Invalidation closure
+//! # Invalidation: structural closure + time horizon
 //!
 //! When a program is admitted, replaced or re-priced, the steps whose
 //! schedule can change are exactly:
@@ -50,31 +61,80 @@
 //! 3. transitively: dependency successors of any invalidated step, and
 //!    rule 2 applied again to those.
 //!
-//! Steps outside the closure keep their completed state byte for byte —
-//! no step before an invalidated one in any queue, and no dependency of
-//! a valid step, is ever touched, which is what makes the incremental
-//! re-run provably equal to the from-scratch oracle. Pending completion
-//! events of invalidated in-flight steps are retracted via the
-//! generation-stamped calendar ([`crate::sim::StampedCalendar`]) and
-//! re-pushed at their recomputed finish times.
+//! That **structural closure** is complete for a time-invariant cost
+//! model, and steps outside it keep their completed state byte for byte.
+//! Under a *time-varying* model ([`crate::fabric::TimeDependence::
+//! VaryingAfter`]) prices also depend on occupancy, so a perturbation at
+//! simulated time `t` additionally invalidates **every scheduled step
+//! with start ≥ t** (the *horizon closure*); if the closure itself
+//! reaches a started step with an earlier start, the horizon is lowered
+//! to it and re-applied until stable. Pending completion events of
+//! invalidated in-flight steps are retracted via the generation-stamped
+//! calendar ([`crate::sim::StampedCalendar`]) and re-pushed at their
+//! recomputed finish times, and every registered occupancy span is
+//! retracted integer-exactly ([`crate::fabric::Occupancy`]).
 //!
-//! Step costs come from the start-time-aware fabric hooks
-//! ([`crate::fabric::Fabric::feed_at`] / `transport_at` /
-//! [`crate::fabric::Tile::execute_at`] ...), priced at each step's true
-//! multi-program start cycle — this layer is the first caller for which
-//! those `_at` seams carry real congestion information.
+//! # The settle loop (occupancy-coupled fixed point)
+//!
+//! Re-simulating after a horizon invalidation prices steps against the
+//! occupancy registered *so far*, which may still change as later-priced
+//! steps register (admissions at out-of-order times price eagerly). So
+//! for time-varying models [`CosimSession::run_to_drain`] finishes with
+//! a **fixed-point re-pricing loop**: re-price every settled step with
+//! start ≥ the dirty horizon against the final occupancy; if any price
+//! diverges, horizon-invalidate from the earliest divergent start,
+//! re-drain, and repeat. Because models read occupancy of **strictly
+//! earlier epochs** only (the `fabric::cost` purity contract), each pass
+//! finalizes at least one more epoch prefix — after a pass starting at
+//! `t`, every contribution to epochs `< epoch(t)` comes from steps
+//! starting before `t` (unchanged), so steps starting in `epoch(t)` are
+//! final and the next divergence lies in a strictly later epoch. The
+//! loop therefore converges in at most `(makespan − t₀)/epoch + 2`
+//! passes; a hard cap ([`MAX_SETTLE_PASSES`]) guards against models that
+//! violate the contract. The same stratification makes the
+//! self-consistent schedule **unique**, which is why an incremental
+//! session bit-matches a from-scratch session (and, at t=0, the single
+//! program engines) under congestion/DVFS models —
+//! `tests/costmodel_golden.rs` pins all of it.
+//!
+//! # Pruning and the admission floor
+//!
+//! Drained programs stay in the shared resource queues, so an unbounded
+//! serving run's splice/renumber cost would grow with history.
+//! [`CosimSession::prune_completed_before`]`(t)` removes the queue
+//! entries of every program that fully completed before `t` *and* whose
+//! queue key sorts below `t`, recycles their global-id ranges for future
+//! admissions, and raises the **admission floor** to `t`: from then on
+//! admissions/replaces below the floor (by time or queue key) are
+//! rejected, so pruned history can never be displaced and every report
+//! stays bit-identical to an unpruned session. Pruning is a perf/memory
+//! operation, never a semantic one.
+//!
+//! Step costs come from the session's cost model
+//! ([`crate::fabric::CostModel`]; [`CosimSession::new`] uses the
+//! fabric's configured `[fabric.cost]` model,
+//! [`CosimSession::with_model`] takes an explicit handle), priced at
+//! each step's true multi-program start cycle with the live occupancy
+//! aggregates — this layer is the first caller for which the cost seam
+//! carries real cross-program congestion information.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use anyhow::ensure;
 
 use crate::compiler::{FabricProgram, Step};
-use crate::fabric::Fabric;
+use crate::fabric::{CostModel, Fabric, Occupancy};
 use crate::metrics::{Category, Metrics};
 use crate::sim::{Cycle, StampedCalendar};
 use crate::Result;
 
 use super::exec::{ExecReport, ProgramSpan};
+
+/// Hard cap on settle passes — generous (the epoch-prefix argument
+/// bounds real convergence by `makespan / epoch + 2`); hitting it means
+/// the cost model violates the strictly-earlier-epoch purity contract.
+pub const MAX_SETTLE_PASSES: usize = 4096;
 
 /// Identifies an admitted program within its [`CosimSession`]. The index
 /// doubles as the admission sequence used for FIFO tie-breaking and is
@@ -90,6 +150,45 @@ impl ProgramHandle {
     }
 }
 
+/// Queue-key policy of a session (see the module docs for the exact key
+/// per variant). Fixed before the first admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmitPolicy {
+    /// `(admit time, admission seq)` — the PR 4 order.
+    #[default]
+    Fifo,
+    /// `(admit time, inverted priority, admission seq)`.
+    Priority,
+    /// `(deadline, admit time, admission seq)` — EDF.
+    Deadline,
+}
+
+/// Per-program admission metadata consumed by the non-FIFO policies
+/// (ignored under [`AdmitPolicy::Fifo`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmitMeta {
+    /// Larger = more urgent under [`AdmitPolicy::Priority`].
+    pub priority: u32,
+    /// Absolute-deadline cycle under [`AdmitPolicy::Deadline`].
+    pub deadline: Cycle,
+}
+
+impl Default for AdmitMeta {
+    fn default() -> Self {
+        AdmitMeta { priority: 0, deadline: Cycle::MAX }
+    }
+}
+
+/// The program-level queue key (lexicographic; step index is appended
+/// implicitly by per-program step order).
+fn prog_key(policy: AdmitPolicy, at: Cycle, meta: AdmitMeta, seq: usize) -> [u64; 3] {
+    match policy {
+        AdmitPolicy::Fifo => [at, seq as u64, 0],
+        AdmitPolicy::Priority => [at, (u32::MAX - meta.priority) as u64, seq as u64],
+        AdmitPolicy::Deadline => [meta.deadline, at, seq as u64],
+    }
+}
+
 /// Dynamic per-step state.
 #[derive(Debug, Clone)]
 struct StepRec {
@@ -99,6 +198,8 @@ struct StepRec {
     qpos: u32,
     started: bool,
     completed: bool,
+    /// Scheduled start cycle (valid while `started`).
+    start: Cycle,
     finish: Cycle,
     /// Step duration in cycles (finish - start).
     dur: Cycle,
@@ -114,6 +215,9 @@ struct StepRec {
 #[derive(Debug)]
 struct Prog {
     admit_at: Cycle,
+    meta: AdmitMeta,
+    /// Policy queue key (see [`prog_key`]).
+    key: [u64; 3],
     steps: Vec<Step>,
     rec: Vec<StepRec>,
     /// Global id of step 0 (ids `base..base + steps.len()`).
@@ -121,9 +225,16 @@ struct Prog {
     /// Successor adjacency, CSR over (intra-program) dependency edges.
     succ_off: Vec<usize>,
     succ: Vec<u32>,
+    /// Uncompleted step count (the O(1) drain/telemetry counter).
+    remaining: usize,
+    /// Cached span, maintained eagerly when the last step completes and
+    /// dropped on any invalidation — [`CosimSession::span`] is O(1).
+    span_cache: Option<ProgramSpan>,
+    /// Queue entries removed + id range recycled; frozen history.
+    pruned: bool,
 }
 
-/// A resource's wake queue: step ids in `(admit, seq, idx)` order.
+/// A resource's wake queue: step ids in `(program key, step idx)` order.
 #[derive(Debug, Default)]
 struct ResQueue {
     steps: Vec<usize>,
@@ -136,15 +247,24 @@ struct ResQueue {
 }
 
 /// A live multi-program co-simulation over one fabric: the admission
-/// engine. See the module docs for the determinism and invalidation
-/// contracts.
+/// engine. See the module docs for the determinism, invalidation and
+/// settle contracts.
 ///
 /// Error handling: a pricing error (e.g. an `Exec` step whose tile cannot
 /// run its precision) surfaces from `admit_at`/`replace`/`run*` and
 /// leaves the session in an unspecified (but memory-safe) state — build
-/// programs through the compiler, which only emits supported steps.
+/// programs through the compiler, which only emits supported steps. The
+/// same applies to perturbations rejected for reaching below the pruned
+/// admission floor.
 pub struct CosimSession<'f> {
     fabric: &'f Fabric,
+    /// The pricing seam: every resource query routes through this.
+    model: Arc<dyn CostModel>,
+    /// `Some(epoch)` when the model is time-varying.
+    epoch: Option<Cycle>,
+    policy: AdmitPolicy,
+    /// Live occupancy aggregates (inert under an invariant model).
+    occ: Occupancy,
     progs: Vec<Prog>,
     res: Vec<ResQueue>,
     /// Sparse link resources per active (src tile, dst tile) pair.
@@ -154,26 +274,39 @@ pub struct CosimSession<'f> {
     cal: StampedCalendar,
     /// Reusable completion-batch scratch.
     batch: Vec<usize>,
+    /// Earliest perturbation since the last settle (time-varying only).
+    dirty_from: Option<Cycle>,
+    /// Admissions/replaces below this are rejected (raised by pruning).
+    admit_floor: Cycle,
+    /// Recycled global-id ranges from pruned programs: `(base, len)`.
+    free_ranges: Vec<(usize, usize)>,
 }
 
-/// Price one step starting at `start`: returns (cost with cycles zeroed,
-/// duration). Identical to the single-program engine's cost path.
-fn price(fabric: &Fabric, step: &Step, start: Cycle) -> Result<(Metrics, Cycle)> {
+/// Price one step starting at `start` through the cost model: returns
+/// (cost with cycles zeroed, duration). Identical to the single-program
+/// engines' cost path.
+fn price(
+    model: &dyn CostModel,
+    fabric: &Fabric,
+    step: &Step,
+    start: Cycle,
+    occ: &Occupancy,
+) -> Result<(Metrics, Cycle)> {
     Ok(match step {
         Step::Load { tile, bytes, .. } => {
-            let cost = fabric.feed_at(*tile, *bytes, start);
+            let cost = model.feed(fabric, *tile, *bytes, start, occ);
             let cyc = cost.cycles;
             (cost.with_cycles(0), cyc)
         }
         Step::Transfer { from, to, bytes, .. } => {
             let src = fabric.tiles[*from].node;
             let dst = fabric.tiles[*to].node;
-            let cost = fabric.transport_at(src, dst, *bytes, start);
+            let cost = model.transport(fabric, src, dst, *bytes, start, occ);
             let cyc = cost.cycles;
             (cost.with_cycles(0), cyc)
         }
         Step::Exec { tile, compute, precision, .. } => {
-            let cost = fabric.tiles[*tile].execute_at(compute, *precision, start)?;
+            let cost = model.execute(fabric, *tile, compute, *precision, start, occ)?;
             let cyc = cost.metrics.cycles;
             (cost.metrics.with_cycles(0), cyc)
         }
@@ -181,22 +314,62 @@ fn price(fabric: &Fabric, step: &Step, start: Cycle) -> Result<(Metrics, Cycle)>
 }
 
 impl<'f> CosimSession<'f> {
-    /// An empty session over `fabric` (resources: one queue per tile,
-    /// one for the HBM port; link queues appear as programs use pairs).
+    /// An empty session over `fabric` using the fabric's configured cost
+    /// model (resources: one queue per tile, one for the HBM port; link
+    /// queues appear as programs use pairs).
     pub fn new(fabric: &'f Fabric) -> Self {
+        Self::with_model(fabric, fabric.cost_model().clone())
+    }
+
+    /// An empty session pricing through an explicit cost model.
+    pub fn with_model(fabric: &'f Fabric, model: Arc<dyn CostModel>) -> Self {
         let nt = fabric.tile_count();
+        let epoch = model.time_dependence().epoch();
+        let occ = match epoch {
+            Some(w) => Occupancy::new(w),
+            None => Occupancy::disabled(),
+        };
         CosimSession {
             fabric,
+            model,
+            epoch,
+            policy: AdmitPolicy::default(),
+            occ,
             progs: Vec::new(),
             res: (0..nt + 1).map(|_| ResQueue::default()).collect(),
             link_ids: HashMap::new(),
             id_map: Vec::new(),
             cal: StampedCalendar::with_horizon(256),
             batch: Vec::new(),
+            dirty_from: None,
+            admit_floor: 0,
+            free_ranges: Vec::new(),
         }
     }
 
-    /// Number of admitted programs.
+    /// The session's cost model (the per-session pricing seam `serve`
+    /// exposes).
+    pub fn cost_model(&self) -> &Arc<dyn CostModel> {
+        &self.model
+    }
+
+    /// The session's queue-key policy.
+    pub fn policy(&self) -> AdmitPolicy {
+        self.policy
+    }
+
+    /// Select the queue-key policy. Must be called before the first
+    /// admission — the key is baked into every queue position.
+    pub fn set_policy(&mut self, policy: AdmitPolicy) -> Result<()> {
+        ensure!(
+            self.progs.is_empty(),
+            "admission policy must be set before the first admission"
+        );
+        self.policy = policy;
+        Ok(())
+    }
+
+    /// Number of admitted programs (pruned ones included).
     pub fn programs(&self) -> usize {
         self.progs.len()
     }
@@ -207,23 +380,60 @@ impl<'f> CosimSession<'f> {
         self.cal.is_empty()
     }
 
-    /// Admit `prog` into the live calendar at simulated cycle `at`.
-    /// Steps become runnable no earlier than `at`; resource FIFO order is
-    /// `(admit time, admission sequence, step index)`. `at` may lie in
-    /// the already-simulated past — affected steps of other programs are
-    /// invalidated and re-simulated (see module docs).
+    /// Current admission floor (0 until [`CosimSession::
+    /// prune_completed_before`] raises it).
+    pub fn admit_floor(&self) -> Cycle {
+        self.admit_floor
+    }
+
+    /// Footprint probe for the long-run regression tests: (longest
+    /// resource queue, global-id table length).
+    pub fn queue_footprint(&self) -> (usize, usize) {
+        let longest = self.res.iter().map(|r| r.steps.len()).max().unwrap_or(0);
+        (longest, self.id_map.len())
+    }
+
+    /// Admit `prog` into the live calendar at simulated cycle `at` with
+    /// default metadata. Steps become runnable no earlier than `at`;
+    /// resource order follows the session's [`AdmitPolicy`] key. `at`
+    /// may lie in the already-simulated past — affected steps of other
+    /// programs are invalidated and re-simulated (see module docs).
     pub fn admit_at(&mut self, prog: &FabricProgram, at: Cycle) -> Result<ProgramHandle> {
+        self.admit_with(prog, at, AdmitMeta::default())
+    }
+
+    /// Admit with explicit priority/deadline metadata.
+    pub fn admit_with(
+        &mut self,
+        prog: &FabricProgram,
+        at: Cycle,
+        meta: AdmitMeta,
+    ) -> Result<ProgramHandle> {
         let slot = self.progs.len();
-        self.install(slot, prog, at)?;
+        self.install(slot, prog, at, meta)?;
         Ok(ProgramHandle(slot))
     }
 
     /// Replace program `h` (content and admission time) in place — the
-    /// "program or cost model changed" primitive. Only the invalidation
-    /// closure of the change is re-simulated.
+    /// "program or cost model changed" primitive. Keeps the program's
+    /// admission metadata; only the invalidation closure of the change
+    /// is re-simulated.
     pub fn replace(&mut self, h: ProgramHandle, prog: &FabricProgram, at: Cycle) -> Result<()> {
         ensure!(h.0 < self.progs.len(), "stale program handle {}", h.0);
-        self.install(h.0, prog, at)
+        let meta = self.progs[h.0].meta;
+        self.replace_with(h, prog, at, meta)
+    }
+
+    /// Replace program `h` with new content, admission time and metadata.
+    pub fn replace_with(
+        &mut self,
+        h: ProgramHandle,
+        prog: &FabricProgram,
+        at: Cycle,
+        meta: AdmitMeta,
+    ) -> Result<()> {
+        ensure!(h.0 < self.progs.len(), "stale program handle {}", h.0);
+        self.install(h.0, prog, at, meta)
     }
 
     /// Force re-pricing and re-simulation of program `h` (and its
@@ -237,38 +447,41 @@ impl<'f> CosimSession<'f> {
             producer: Vec::new(),
         };
         let at = self.progs[h.0].admit_at;
-        self.install(h.0, &prog, at)
+        let meta = self.progs[h.0].meta;
+        self.install(h.0, &prog, at, meta)
     }
 
-    /// Drain every pending completion event; errors if steps remain
-    /// unfinished afterwards (impossible for forward-dep programs — the
+    /// Drain every pending completion event and, under a time-varying
+    /// model, run the settle loop to the occupancy fixed point; errors if
+    /// steps remain unfinished (impossible for forward-dep programs — the
     /// queue order is a consistent total order, see module docs).
     pub fn run_to_drain(&mut self) -> Result<()> {
         self.drain(None)?;
-        let incomplete = self
-            .progs
-            .iter()
-            .flat_map(|p| &p.rec)
-            .filter(|r| !r.completed)
-            .count();
+        let incomplete: usize = self.progs.iter().map(|p| p.remaining).sum();
         ensure!(incomplete == 0, "admission co-sim stalled: {incomplete} steps incomplete");
+        if self.epoch.is_some() {
+            self.settle()?;
+        }
         Ok(())
     }
 
     /// Drain completion events up to and including simulated cycle `t`,
     /// leaving later work in flight — programs admitted afterwards land
     /// in a genuinely running calendar (their displaced steps' pending
-    /// completions are retracted via generation stamps).
+    /// completions are retracted via generation stamps). Under a
+    /// time-varying model, mid-flight prices are provisional until the
+    /// next full drain settles the fixed point.
     pub fn run_until(&mut self, t: Cycle) -> Result<()> {
         self.drain(Some(t))
     }
 
-    /// Drain to quiescence and fold the merged report: identical field
-    /// semantics to [`super::exec::cosim`], with one [`ProgramSpan`] per
-    /// admitted program. Step-ordered data (`step_done`, the energy fold)
-    /// runs in `(admission sequence, step index)` order, so a single
-    /// program admitted at t=0 reproduces `cosim` bit for bit, and N
-    /// programs at t=0 reproduce `cosim` of the concatenated program.
+    /// Drain to quiescence (settling time-varying prices) and fold the
+    /// merged report: identical field semantics to
+    /// [`super::exec::cosim`], with one [`ProgramSpan`] per admitted
+    /// program. Step-ordered data (`step_done`, the energy fold) runs in
+    /// `(admission sequence, step index)` order, so a single program
+    /// admitted at t=0 reproduces `cosim` bit for bit, and N programs at
+    /// t=0 reproduce `cosim` of the concatenated program.
     pub fn report(&mut self) -> Result<ExecReport> {
         self.run_to_drain()?;
         let nt = self.fabric.tile_count();
@@ -280,8 +493,16 @@ impl<'f> CosimSession<'f> {
         let mut makespan: Cycle = 0;
         let mut programs = Vec::with_capacity(self.progs.len());
         for pr in &self.progs {
-            let span =
-                Self::fold_program(pr, &mut total, Some(tile_busy.as_mut_slice()), &mut step_done);
+            let span = Self::fold_program(
+                pr,
+                &mut total,
+                Some(tile_busy.as_mut_slice()),
+                Some(&mut step_done),
+            );
+            debug_assert!(
+                pr.span_cache.as_ref().is_none_or(|c| c.bit_identical(&span)),
+                "span cache diverged from the fold"
+            );
             exec_steps += span.exec_steps;
             transfer_cycles += span.transfer_cycles;
             makespan = makespan.max(pr.rec.iter().map(|r| r.finish).max().unwrap_or(0));
@@ -305,19 +526,23 @@ impl<'f> CosimSession<'f> {
         })
     }
 
-    /// Per-program span of `h` — O(program), so the serving path reads
-    /// each request's simulated latency without folding the whole world.
-    /// Meaningful only once the program has fully completed (call after
-    /// [`CosimSession::run_to_drain`]): all steps are folded, and an
+    /// Per-program span of `h` — O(1): served from the cache maintained
+    /// at program completion (dropped and rebuilt across invalidations),
+    /// so the serving path reads each request's simulated latency without
+    /// folding anything. Meaningful only once the program has fully
+    /// completed (call after [`CosimSession::run_to_drain`]): an
     /// in-flight program's unfinished steps would contribute zeroed
-    /// placeholders.
+    /// placeholders to the fallback fold.
     pub fn span(&self, h: ProgramHandle) -> ProgramSpan {
+        if let Some(s) = &self.progs[h.0].span_cache {
+            return s.clone();
+        }
         debug_assert!(
             self.progs[h.0].rec.iter().all(|r| r.completed),
             "span({}) read while the program is still in flight",
             h.0
         );
-        Self::fold_program(&self.progs[h.0], &mut Metrics::new(), None, &mut Vec::new())
+        Self::fold_program(&self.progs[h.0], &mut Metrics::new(), None, None)
     }
 
     /// Fold one program's steps in step order into the merged
@@ -328,16 +553,19 @@ impl<'f> CosimSession<'f> {
         pr: &Prog,
         total: &mut Metrics,
         mut tile_busy: Option<&mut [Cycle]>,
-        step_done: &mut Vec<Cycle>,
+        step_done: Option<&mut Vec<Cycle>>,
     ) -> ProgramSpan {
         let mut penergy = Metrics::new();
         let mut p_exec = 0usize;
         let mut p_transfer: Cycle = 0;
         let mut finished = pr.admit_at;
+        let mut done = step_done;
         for (step, rec) in pr.steps.iter().zip(&pr.rec) {
             total.absorb_parallel(&rec.cost);
             penergy.absorb_parallel(&rec.cost);
-            step_done.push(rec.finish);
+            if let Some(sd) = done.as_deref_mut() {
+                sd.push(rec.finish);
+            }
             finished = finished.max(rec.finish);
             if let Step::Exec { tile, .. } = step {
                 if let Some(tb) = tile_busy.as_deref_mut() {
@@ -360,12 +588,40 @@ impl<'f> CosimSession<'f> {
         }
     }
 
+    /// Span of `pr` alone (cache fill path).
+    fn compute_span(pr: &Prog) -> ProgramSpan {
+        Self::fold_program(pr, &mut Metrics::new(), None, None)
+    }
+
     /// Install `prog` into `slot` (fresh admission when `slot` is one
     /// past the end, replacement otherwise): validate, splice the steps
-    /// into the resource queues, invalidate the closure, and re-seed the
+    /// into the resource queues at their policy-key position, invalidate
+    /// the structural + (time-varying) horizon closure, and re-seed the
     /// wake chain.
-    fn install(&mut self, slot: usize, prog: &FabricProgram, at: Cycle) -> Result<()> {
+    fn install(&mut self, slot: usize, prog: &FabricProgram, at: Cycle, meta: AdmitMeta) -> Result<()> {
         let nt = self.fabric.tile_count();
+        ensure!(
+            at >= self.admit_floor,
+            "admission at cycle {at} lies below the pruned horizon {}",
+            self.admit_floor
+        );
+        let key = prog_key(self.policy, at, meta, slot);
+        ensure!(
+            key[0] >= self.admit_floor,
+            "queue key {} (policy {:?}) lies below the pruned horizon {}",
+            key[0],
+            self.policy,
+            self.admit_floor
+        );
+        if slot < self.progs.len() {
+            ensure!(!self.progs[slot].pruned, "program {slot} was pruned; its history is frozen");
+            ensure!(
+                self.progs[slot].admit_at >= self.admit_floor
+                    && self.progs[slot].key[0] >= self.admit_floor,
+                "replacing program {slot} would perturb history below the pruned horizon {}",
+                self.admit_floor
+            );
+        }
         for (i, s) in prog.steps.iter().enumerate() {
             for &d in s.deps() {
                 ensure!(d < i, "step {i} depends on non-earlier step {d} (forward deps required)");
@@ -381,10 +637,15 @@ impl<'f> CosimSession<'f> {
             }
         }
 
+        // Perturbation time: the earliest simulated instant whose
+        // occupancy/schedule this install can change.
+        let mut t_pert = at;
         let mut seeds: Vec<usize> = Vec::new();
         let mut touched: Vec<usize> = Vec::new();
         if slot < self.progs.len() {
-            self.remove_program_steps(slot, &mut seeds, &mut touched);
+            t_pert = t_pert.min(self.progs[slot].admit_at);
+            let removed_min = self.remove_program_steps(slot, &mut seeds, &mut touched);
+            t_pert = t_pert.min(removed_min);
         }
 
         // Build the program's static structures. A replacement reuses
@@ -392,11 +653,28 @@ impl<'f> CosimSession<'f> {
         // in-flight events were cancelled above and consumed ids hold
         // no queued events, so generation stamps keep any stale entry
         // dead) — the replace/invalidate re-pricing loop then runs with
-        // bounded id/generation state; only a *growing* replacement
-        // allocates a fresh range.
+        // bounded id/generation state. Otherwise a range recycled from a
+        // pruned program is reused (first fit) before growing the table.
         let n = prog.steps.len();
-        let base = if slot < self.progs.len() && n <= self.progs[slot].rec.len() {
+        let fits_outgoing = slot < self.progs.len() && n <= self.progs[slot].rec.len();
+        let free_slot = if fits_outgoing || n == 0 {
+            None
+        } else {
+            self.free_ranges.iter().position(|&(_, len)| len >= n)
+        };
+        let base = if fits_outgoing {
             self.progs[slot].base
+        } else if let Some(pos) = free_slot {
+            let (b, flen) = self.free_ranges[pos];
+            if flen == n {
+                self.free_ranges.swap_remove(pos);
+            } else {
+                self.free_ranges[pos] = (b + n, flen - n);
+            }
+            for (idx, entry) in self.id_map[b..b + n].iter_mut().enumerate() {
+                *entry = (slot as u32, idx as u32);
+            }
+            b
         } else {
             let b = self.id_map.len();
             for idx in 0..n {
@@ -446,6 +724,7 @@ impl<'f> CosimSession<'f> {
                 qpos: 0,
                 started: false,
                 completed: false,
+                start: 0,
                 finish: 0,
                 dur: 0,
                 pending: s.deps().len() as u32,
@@ -453,22 +732,30 @@ impl<'f> CosimSession<'f> {
                 cost: Metrics::new(),
             })
             .collect();
-        let built = Prog {
+        let mut built = Prog {
             admit_at: at,
+            meta,
+            key,
             steps: prog.steps.clone(),
             rec,
             base,
             succ_off,
             succ,
+            remaining: n,
+            span_cache: None,
+            pruned: false,
         };
+        if n == 0 {
+            built.span_cache = Some(Self::compute_span(&built));
+        }
         if slot == self.progs.len() {
             self.progs.push(built);
         } else {
             self.progs[slot] = built;
         }
 
-        // Splice the new steps into their queues at the FIFO position,
-        // seeding every displaced (later-keyed) entry.
+        // Splice the new steps into their queues at the policy-key
+        // position, seeding every displaced (later-keyed) entry.
         let mut by_res: Vec<(usize, Vec<usize>)> = Vec::new();
         for (idx, &r) in res_of.iter().enumerate() {
             if let Some(pos) = by_res.iter().position(|&(rr, _)| rr == r) {
@@ -480,9 +767,7 @@ impl<'f> CosimSession<'f> {
         for (r, ids) in by_res {
             let pos = self.res[r].steps.partition_point(|&id2| {
                 let (p2, _) = self.id_map[id2];
-                let p2 = p2 as usize;
-                let t2 = self.progs[p2].admit_at;
-                t2 < at || (t2 == at && p2 < slot)
+                self.progs[p2 as usize].key < key
             });
             seeds.extend_from_slice(&self.res[r].steps[pos..]);
             self.res[r].steps.splice(pos..pos, ids);
@@ -501,8 +786,36 @@ impl<'f> CosimSession<'f> {
         // between operations no resource ever has an idle dep-ready
         // unstarted head (wakes are always exhausted), so an untouched
         // resource cannot need a wake.
+        //
+        // Time-varying models widen the closure to the horizon: every
+        // started step with start >= the perturbation time is seeded,
+        // and if the closure reaches a started step scheduled even
+        // earlier (possible under non-FIFO keys), the horizon is lowered
+        // and re-applied until stable.
         let mut affected = touched;
-        self.invalidate_closure(seeds, &mut affected);
+        let mut hor = t_pert;
+        if self.epoch.is_some() {
+            self.collect_horizon_seeds(hor, slot, &mut seeds);
+        }
+        let mut low = self.invalidate_closure(seeds, &mut affected).min(t_pert);
+        if self.epoch.is_some() {
+            while low < hor {
+                hor = low;
+                let mut extra = Vec::new();
+                self.collect_horizon_seeds(hor, usize::MAX, &mut extra);
+                if extra.is_empty() {
+                    break;
+                }
+                low = low.min(self.invalidate_closure(extra, &mut affected));
+            }
+            self.dirty_from = Some(self.dirty_from.map_or(low, |d| d.min(low)));
+        }
+        ensure!(
+            low >= self.admit_floor,
+            "invalidation reached simulated cycle {low}, below the pruned horizon {} \
+             (prune less history or admit later)",
+            self.admit_floor
+        );
         affected.sort_unstable();
         self.rebuild_resource_state(&affected);
         for &r in &affected {
@@ -512,15 +825,33 @@ impl<'f> CosimSession<'f> {
     }
 
     /// Retire program `slot`'s current steps: cancel in-flight completion
-    /// events and excise the ids from their queues, seeding every entry
-    /// positioned at or after the first removal in each queue.
-    fn remove_program_steps(&mut self, slot: usize, seeds: &mut Vec<usize>, touched: &mut Vec<usize>) {
+    /// events, retract registered occupancy spans, and excise the ids
+    /// from their queues, seeding every entry positioned at or after the
+    /// first removal in each queue. Returns the minimum start cycle of
+    /// any removed *started* step (`Cycle::MAX` if none) — the occupancy
+    /// perturbation floor of the removal.
+    fn remove_program_steps(
+        &mut self,
+        slot: usize,
+        seeds: &mut Vec<usize>,
+        touched: &mut Vec<usize>,
+    ) -> Cycle {
         let base = self.progs[slot].base;
-        for (idx, rec) in self.progs[slot].rec.iter().enumerate() {
-            if rec.started && !rec.completed {
-                self.cal.cancel(base + idx);
+        let mut min_start = Cycle::MAX;
+        for idx in 0..self.progs[slot].rec.len() {
+            let (started, completed, start, finish, r) = {
+                let rec = &self.progs[slot].rec[idx];
+                (rec.started, rec.completed, rec.start, rec.finish, rec.res as usize)
+            };
+            if started {
+                min_start = min_start.min(start);
+                if !completed {
+                    self.cal.cancel(base + idx);
+                }
+                if self.occ.is_tracking() {
+                    self.occ.remove_step(&self.progs[slot].steps[idx], start, finish);
+                }
             }
-            let r = rec.res as usize;
             if !touched.contains(&r) {
                 touched.push(r);
             }
@@ -541,6 +872,7 @@ impl<'f> CosimSession<'f> {
             }
             self.res[r].steps = kept;
         }
+        min_start
     }
 
     fn renumber_queue(&mut self, r: usize) {
@@ -550,14 +882,41 @@ impl<'f> CosimSession<'f> {
         }
     }
 
+    /// True when every step of `pr` is known to lie strictly before
+    /// `from` — a fully-completed program whose cached span finished
+    /// earlier (starts <= finishes < from). Lets the horizon/settle
+    /// scans skip drained history instead of walking O(world) steps.
+    fn finished_before(pr: &Prog, from: Cycle) -> bool {
+        pr.span_cache.as_ref().is_some_and(|c| c.finished_at < from)
+    }
+
+    /// Push every started, unpruned step with start >= `from` (skipping
+    /// program `skip`) — the horizon seed set of a time-varying
+    /// perturbation at `from`.
+    fn collect_horizon_seeds(&self, from: Cycle, skip: usize, out: &mut Vec<usize>) {
+        for (pi, pr) in self.progs.iter().enumerate() {
+            if pi == skip || pr.pruned || Self::finished_before(pr, from) {
+                continue;
+            }
+            for (i, rec) in pr.rec.iter().enumerate() {
+                if rec.started && rec.start >= from {
+                    out.push(pr.base + i);
+                }
+            }
+        }
+    }
+
     /// Propagate the invalidation closure from `seeds`: reset each
-    /// reached step (retracting its pending completion event), follow
-    /// dependency successors, and extend along resource-queue suffixes.
-    /// Afterwards recompute pending counts and ready times from the
-    /// surviving completed frontier. Every resource owning an
-    /// invalidated step is appended to `affected` (so the caller can
-    /// rebuild/wake only those instead of the world).
-    fn invalidate_closure(&mut self, seeds: Vec<usize>, affected: &mut Vec<usize>) {
+    /// reached step (retracting its pending completion event and its
+    /// occupancy spans), follow dependency successors, and extend along
+    /// resource-queue suffixes. Afterwards recompute pending counts and
+    /// ready times from the surviving completed frontier. Every resource
+    /// owning an invalidated step is appended to `affected` (so the
+    /// caller can rebuild/wake only those instead of the world). Returns
+    /// the minimum start cycle over the *started* steps it reset
+    /// (`Cycle::MAX` if none) — the caller's horizon floor.
+    fn invalidate_closure(&mut self, seeds: Vec<usize>, affected: &mut Vec<usize>) -> Cycle {
+        let mut min_start = Cycle::MAX;
         let mut work = seeds;
         let mut visited: HashSet<usize> = HashSet::new();
         let mut order: Vec<usize> = Vec::new();
@@ -571,13 +930,34 @@ impl<'f> CosimSession<'f> {
             order.push(id);
             let (p, i) = self.id_map[id];
             let (p, i) = (p as usize, i as usize);
-            let (started, completed, r, qpos) = {
+            let (started, completed, start, finish, r, qpos) = {
                 let rec = &self.progs[p].rec[i];
-                (rec.started, rec.completed, rec.res as usize, rec.qpos as usize)
+                (
+                    rec.started,
+                    rec.completed,
+                    rec.start,
+                    rec.finish,
+                    rec.res as usize,
+                    rec.qpos as usize,
+                )
             };
-            if started && !completed {
-                self.cal.cancel(id);
+            if started {
+                min_start = min_start.min(start);
+                if !completed {
+                    self.cal.cancel(id);
+                }
+                if self.occ.is_tracking() {
+                    self.occ.remove_step(&self.progs[p].steps[i], start, finish);
+                }
             }
+            if completed {
+                self.progs[p].remaining += 1;
+                self.progs[p].span_cache = None;
+            }
+            debug_assert!(
+                self.progs[p].remaining == 0 || self.progs[p].span_cache.is_none(),
+                "span cache must not outlive an invalidation"
+            );
             {
                 let rec = &mut self.progs[p].rec[i];
                 rec.started = false;
@@ -618,6 +998,7 @@ impl<'f> CosimSession<'f> {
             rec.pending = pending;
             rec.ready_at = ready;
         }
+        min_start
     }
 
     /// Re-derive the given resources' cursor / free / busy from their
@@ -652,7 +1033,8 @@ impl<'f> CosimSession<'f> {
 
     /// If resource `r` is idle and its next queued step is
     /// dependency-ready, start the step: price it at `max(ready, free)`
-    /// and push its completion event.
+    /// through the cost model, register its occupancy span, and push its
+    /// completion event.
     fn wake_head(&mut self, r: usize) -> Result<()> {
         let rq = &self.res[r];
         if rq.busy || rq.cursor >= rq.steps.len() {
@@ -665,13 +1047,18 @@ impl<'f> CosimSession<'f> {
             return Ok(());
         }
         let start = self.progs[p].rec[i].ready_at.max(self.res[r].free);
-        let (cost, dur) = price(self.fabric, &self.progs[p].steps[i], start)?;
+        let (cost, dur) =
+            price(self.model.as_ref(), self.fabric, &self.progs[p].steps[i], start, &self.occ)?;
         {
             let rec = &mut self.progs[p].rec[i];
             rec.started = true;
+            rec.start = start;
             rec.finish = start + dur;
             rec.dur = dur;
             rec.cost = cost;
+        }
+        if self.occ.is_tracking() {
+            self.occ.add_step(&self.progs[p].steps[i], start, start + dur);
         }
         let rq = &mut self.res[r];
         rq.free = start + dur;
@@ -688,12 +1075,19 @@ impl<'f> CosimSession<'f> {
             for &id in &batch {
                 let (p, i) = self.id_map[id];
                 let (p, i) = (p as usize, i as usize);
-                let r = {
-                    let rec = &mut self.progs[p].rec[i];
+                let (r, finished_prog) = {
+                    let pr = &mut self.progs[p];
+                    let rec = &mut pr.rec[i];
                     debug_assert!(rec.started && !rec.completed && rec.finish == t);
                     rec.completed = true;
-                    rec.res as usize
+                    let r = rec.res as usize;
+                    pr.remaining -= 1;
+                    (r, pr.remaining == 0)
                 };
+                if finished_prog {
+                    let span = Self::compute_span(&self.progs[p]);
+                    self.progs[p].span_cache = Some(span);
+                }
                 self.res[r].busy = false;
                 self.wake_head(r)?;
                 let (s0, s1) = {
@@ -717,6 +1111,113 @@ impl<'f> CosimSession<'f> {
         self.batch = batch;
         Ok(())
     }
+
+    /// The occupancy fixed point (time-varying models only; see the
+    /// module docs for the convergence argument): re-price every settled
+    /// step with start >= the dirty horizon against the final occupancy;
+    /// on divergence, horizon-invalidate from the earliest divergent
+    /// start, re-drain, repeat.
+    fn settle(&mut self) -> Result<()> {
+        let Some(mut from) = self.dirty_from.take() else { return Ok(()) };
+        let mut passes = 0usize;
+        loop {
+            let mut div: Option<Cycle> = None;
+            for pr in self
+                .progs
+                .iter()
+                .filter(|p| !p.pruned && !Self::finished_before(p, from))
+            {
+                for (i, rec) in pr.rec.iter().enumerate() {
+                    if !rec.started || rec.start < from {
+                        continue;
+                    }
+                    let (cost, dur) = price(
+                        self.model.as_ref(),
+                        self.fabric,
+                        &pr.steps[i],
+                        rec.start,
+                        &self.occ,
+                    )?;
+                    if dur != rec.dur || cost != rec.cost {
+                        div = Some(div.map_or(rec.start, |d| d.min(rec.start)));
+                    }
+                }
+            }
+            let Some(t) = div else { return Ok(()) };
+            passes += 1;
+            ensure!(
+                passes <= MAX_SETTLE_PASSES,
+                "settle loop did not converge in {MAX_SETTLE_PASSES} passes \
+                 (cost model reads non-strictly-earlier epochs?)"
+            );
+            let mut seeds = Vec::new();
+            self.collect_horizon_seeds(t, usize::MAX, &mut seeds);
+            let mut affected = Vec::new();
+            let low = self.invalidate_closure(seeds, &mut affected);
+            debug_assert!(low >= t, "horizon invalidation reached below its own floor");
+            affected.sort_unstable();
+            self.rebuild_resource_state(&affected);
+            for &r in &affected {
+                self.wake_head(r)?;
+            }
+            self.drain(None)?;
+            from = t;
+        }
+    }
+
+    /// Prune the queue entries of every program that fully completed
+    /// before cycle `t` (and whose queue key sorts below `t`), recycling
+    /// their global-id ranges, and raise the admission floor to `t`:
+    /// later perturbations below the floor are rejected, so the pruned
+    /// history can never be displaced and reports stay bit-identical to
+    /// an unpruned session. Drains (and, for time-varying models,
+    /// settles) first. Returns the number of queue entries removed.
+    pub fn prune_completed_before(&mut self, t: Cycle) -> Result<usize> {
+        self.run_to_drain()?;
+        let mut prunable = vec![false; self.progs.len()];
+        let mut any = false;
+        for (pi, pr) in self.progs.iter().enumerate() {
+            if pr.pruned || pr.remaining != 0 || pr.key[0] >= t {
+                continue;
+            }
+            let finished = match &pr.span_cache {
+                Some(s) => s.finished_at,
+                None => pr.rec.iter().map(|r| r.finish).max().unwrap_or(pr.admit_at),
+            };
+            if finished < t {
+                prunable[pi] = true;
+                any = true;
+            }
+        }
+        self.admit_floor = self.admit_floor.max(t);
+        if !any {
+            return Ok(0);
+        }
+        let mut removed = 0usize;
+        let mut touched: Vec<usize> = Vec::new();
+        for r in 0..self.res.len() {
+            let before = self.res[r].steps.len();
+            let id_map = &self.id_map;
+            self.res[r].steps.retain(|&id| !prunable[id_map[id].0 as usize]);
+            if self.res[r].steps.len() != before {
+                removed += before - self.res[r].steps.len();
+                touched.push(r);
+            }
+        }
+        for &r in &touched {
+            self.renumber_queue(r);
+        }
+        self.rebuild_resource_state(&touched);
+        for (pi, pr) in self.progs.iter_mut().enumerate() {
+            if prunable[pi] {
+                pr.pruned = true;
+                if !pr.rec.is_empty() {
+                    self.free_ranges.push((pr.base, pr.rec.len()));
+                }
+            }
+        }
+        Ok(removed)
+    }
 }
 
 /// Deterministic admission batching: requests accumulate in arrival
@@ -726,7 +1227,7 @@ impl<'f> CosimSession<'f> {
 /// one-at-a-time admit+drain.
 #[derive(Debug, Default)]
 pub struct AdmissionQueue {
-    entries: Vec<(FabricProgram, Cycle)>,
+    entries: Vec<(FabricProgram, Cycle, AdmitMeta)>,
 }
 
 impl AdmissionQueue {
@@ -736,7 +1237,12 @@ impl AdmissionQueue {
 
     /// Queue `prog` for admission at simulated cycle `at`.
     pub fn push(&mut self, prog: FabricProgram, at: Cycle) {
-        self.entries.push((prog, at));
+        self.entries.push((prog, at, AdmitMeta::default()));
+    }
+
+    /// Queue with explicit priority/deadline metadata.
+    pub fn push_with(&mut self, prog: FabricProgram, at: Cycle, meta: AdmitMeta) {
+        self.entries.push((prog, at, meta));
     }
 
     pub fn len(&self) -> usize {
@@ -750,8 +1256,8 @@ impl AdmissionQueue {
     /// Admit every queued program, in push order, returning the handles.
     pub fn admit_all(&mut self, session: &mut CosimSession) -> Result<Vec<ProgramHandle>> {
         let mut handles = Vec::with_capacity(self.entries.len());
-        for (prog, at) in self.entries.drain(..) {
-            handles.push(session.admit_at(&prog, at)?);
+        for (prog, at, meta) in self.entries.drain(..) {
+            handles.push(session.admit_with(&prog, at, meta)?);
         }
         Ok(handles)
     }
@@ -908,5 +1414,176 @@ mod tests {
             producer: Vec::new(),
         };
         assert!(s.admit_at(&bad_tile, 0).is_err(), "tile out of range");
+    }
+
+    /// Priority policy: a same-instant burst serves higher priority
+    /// first; the schedule is deterministic and independent of the
+    /// admission call order (spans matched per program).
+    #[test]
+    fn priority_policy_is_deterministic_and_order_independent() {
+        let f = fabric();
+        let pa = program(&f, 11);
+        let pb = program(&f, 12);
+        let run = |first: (&FabricProgram, u32), second: (&FabricProgram, u32)| {
+            let mut s = CosimSession::new(&f);
+            s.set_policy(AdmitPolicy::Priority).unwrap();
+            let h1 = s
+                .admit_with(first.0, 0, AdmitMeta { priority: first.1, ..Default::default() })
+                .unwrap();
+            let h2 = s
+                .admit_with(second.0, 0, AdmitMeta { priority: second.1, ..Default::default() })
+                .unwrap();
+            let rep = s.report().unwrap();
+            (rep.programs[h1.index()].clone(), rep.programs[h2.index()].clone(), rep)
+        };
+        let (a1, a2, ra) = run((&pa, 1), (&pb, 9));
+        let (b2, b1, rb) = run((&pb, 9), (&pa, 1));
+        assert!(a1.bit_identical(&b1), "low-priority span must not depend on call order");
+        assert!(a2.bit_identical(&b2), "high-priority span must not depend on call order");
+        assert_eq!(ra.cycles, rb.cycles);
+        // Determinism: repeating the exact sequence replays the bits.
+        let (c1, c2, rc) = run((&pa, 1), (&pb, 9));
+        assert!(c1.bit_identical(&a1) && c2.bit_identical(&a2));
+        assert!(rc.bit_identical(&ra));
+        // The high-priority program must not finish later than it would
+        // have under plain FIFO in the same call order.
+        let mut fifo = CosimSession::new(&f);
+        fifo.admit_at(&pa, 0).unwrap();
+        let hb = fifo.admit_at(&pb, 0).unwrap();
+        let fifo_rep = fifo.report().unwrap();
+        assert!(a2.finished_at <= fifo_rep.programs[hb.index()].finished_at);
+    }
+
+    /// Deadline policy: earliest deadline is served first regardless of
+    /// admission sequence; determinism pinned by replay.
+    #[test]
+    fn deadline_policy_orders_by_deadline() {
+        let f = fabric();
+        let pa = program(&f, 13);
+        let pb = program(&f, 14);
+        let run = |d1: Cycle, d2: Cycle| {
+            let mut s = CosimSession::new(&f);
+            s.set_policy(AdmitPolicy::Deadline).unwrap();
+            let h1 = s
+                .admit_with(&pa, 0, AdmitMeta { deadline: d1, ..Default::default() })
+                .unwrap();
+            let h2 = s
+                .admit_with(&pb, 0, AdmitMeta { deadline: d2, ..Default::default() })
+                .unwrap();
+            let rep = s.report().unwrap();
+            (rep.programs[h1.index()].clone(), rep.programs[h2.index()].clone())
+        };
+        // pb has the earlier deadline even though admitted second.
+        let (a_late, b_urgent) = run(1_000_000, 10);
+        let (a_urgent, b_late) = run(10, 1_000_000);
+        // The urgent program wins the shared resources in both runs.
+        assert!(b_urgent.finished_at <= a_late.finished_at);
+        assert!(a_urgent.finished_at <= b_late.finished_at);
+        // Replay determinism.
+        let (x, y) = run(1_000_000, 10);
+        assert!(x.bit_identical(&a_late) && y.bit_identical(&b_urgent));
+        // Incremental vs from-scratch under the policy.
+        let mut inc = CosimSession::new(&f);
+        inc.set_policy(AdmitPolicy::Deadline).unwrap();
+        inc.admit_with(&pa, 0, AdmitMeta { deadline: 1_000_000, ..Default::default() }).unwrap();
+        inc.run_to_drain().unwrap();
+        inc.admit_with(&pb, 0, AdmitMeta { deadline: 10, ..Default::default() }).unwrap();
+        let got = inc.report().unwrap();
+        let mut fresh = CosimSession::new(&f);
+        fresh.set_policy(AdmitPolicy::Deadline).unwrap();
+        fresh
+            .admit_with(&pa, 0, AdmitMeta { deadline: 1_000_000, ..Default::default() })
+            .unwrap();
+        fresh.admit_with(&pb, 0, AdmitMeta { deadline: 10, ..Default::default() }).unwrap();
+        let want = fresh.report().unwrap();
+        assert!(got.bit_identical(&want));
+    }
+
+    #[test]
+    fn policy_change_rejected_after_first_admission() {
+        let f = fabric();
+        let mut s = CosimSession::new(&f);
+        s.admit_at(&program(&f, 1), 0).unwrap();
+        assert!(s.set_policy(AdmitPolicy::Priority).is_err());
+    }
+
+    /// The O(1) span cache must serve the same bits as a fresh fold (and
+    /// as a fresh session), surviving an invalidate/re-drain cycle.
+    #[test]
+    fn span_cache_matches_fold_bitwise() {
+        let f = fabric();
+        let p1 = program(&f, 21);
+        let p2 = program(&f, 22);
+        let mut s = CosimSession::new(&f);
+        let h1 = s.admit_at(&p1, 0).unwrap();
+        let h2 = s.admit_at(&p2, 37).unwrap();
+        s.run_to_drain().unwrap();
+        let cached = s.span(h1);
+        assert!(s.progs[h1.index()].span_cache.is_some(), "cache must be primed");
+        let folded = CosimSession::fold_program(
+            &s.progs[h1.index()],
+            &mut Metrics::new(),
+            None,
+            None,
+        );
+        assert!(cached.bit_identical(&folded), "cache vs fold");
+        // Invalidate drops the cache; settling rebuilds it with the same
+        // bits (time-invariant model).
+        s.invalidate(h1).unwrap();
+        assert!(s.progs[h1.index()].span_cache.is_none(), "invalidate drops the cache");
+        s.run_to_drain().unwrap();
+        assert!(s.span(h1).bit_identical(&cached));
+        assert!(s.span(h2).bit_identical(&s.report().unwrap().programs[h2.index()]));
+    }
+
+    /// Pruning is perf-only: the report after pruning is bit-identical
+    /// to an unpruned session, queue footprint stays bounded, id ranges
+    /// recycle, and the admission floor rejects time travel into pruned
+    /// history.
+    #[test]
+    fn prune_bounds_queues_and_preserves_reports() {
+        let f = fabric();
+        let prog = program(&f, 31);
+        let solo = cosim(&f, &prog).unwrap();
+        let gap = solo.cycles + 50;
+        let rounds = 12usize;
+        // Unpruned baseline.
+        let mut plain = CosimSession::new(&f);
+        for k in 0..rounds {
+            plain.admit_at(&prog, k as Cycle * gap).unwrap();
+            plain.run_to_drain().unwrap();
+        }
+        let want = plain.report().unwrap();
+        let (plain_longest, plain_ids) = plain.queue_footprint();
+        // Pruned session: prune after every admission.
+        let mut pruned = CosimSession::new(&f);
+        let mut max_longest = 0usize;
+        for k in 0..rounds {
+            let at = k as Cycle * gap;
+            pruned.admit_at(&prog, at).unwrap();
+            pruned.run_to_drain().unwrap();
+            pruned.prune_completed_before(at).unwrap();
+            max_longest = max_longest.max(pruned.queue_footprint().0);
+        }
+        let got = pruned.report().unwrap();
+        assert!(got.bit_identical(&want), "pruning changed the report");
+        // Footprint: the unpruned queues grow ~linearly with history;
+        // the pruned ones never hold more than ~2 programs' steps.
+        assert!(plain_longest >= rounds, "baseline must actually grow");
+        assert!(
+            max_longest <= 2 * plain_longest / rounds + prog.steps.len(),
+            "pruned queue footprint grew with history: {max_longest}"
+        );
+        // Id recycling keeps the table bounded well below the baseline.
+        let (_, pruned_ids) = pruned.queue_footprint();
+        assert!(pruned_ids < plain_ids, "{pruned_ids} vs {plain_ids}");
+        // The floor froze pruned history.
+        assert_eq!(pruned.admit_floor(), (rounds - 1) as Cycle * gap);
+        assert!(pruned.admit_at(&prog, 0).is_err(), "admission below the floor");
+        let early = ProgramHandle(0);
+        assert!(pruned.invalidate(early).is_err(), "pruned program is frozen");
+        // Spans of pruned programs are still served (from the cache).
+        assert_eq!(got.programs[0].admitted_at, 0);
+        assert!(pruned.span(early).bit_identical(&got.programs[0]));
     }
 }

@@ -26,13 +26,22 @@
 //!   streams can interleave in the same calendar as the rest of the
 //!   simulation stack.
 //!
-//! Step durations come from the start-time-aware fabric hooks
-//! ([`Fabric::feed_at`], [`Fabric::transport_at`],
-//! [`crate::fabric::Tile::execute_at`]): today those ignore the start
-//! cycle (so the engine is bit-identical to the list scheduler — the
-//! differential golden tests in `tests/cosim_golden.rs` enforce it), but
-//! they are the seam where congestion-, DVFS- or thermal-aware cost
-//! models plug in without another engine rewrite.
+//! Step durations come from the fabric's **cost-model layer**
+//! ([`crate::fabric::CostModel`]): the engine holds a model handle
+//! ([`cosim`] uses the fabric's configured `[fabric.cost]` model,
+//! [`cosim_with`] takes an explicit one) and prices every step at its
+//! true start cycle, feeding time-varying models the live
+//! [`crate::fabric::Occupancy`] aggregates. Under the default
+//! [`crate::fabric::InvariantCost`] the engine is bit-identical to the
+//! list scheduler (the differential golden tests in
+//! `tests/cosim_golden.rs` enforce it). Under a time-varying model the
+//! single greedy pass is *self-consistent by construction* for a t=0
+//! program: completion events drain in time order and every start is
+//! assigned exactly at its triggering event time, so pricing happens in
+//! nondecreasing start order — by the strictly-earlier-epoch occupancy
+//! contract (see `fabric::cost`), every price already reads its final
+//! occupancy. `tests/costmodel_golden.rs` pins this against the iterated
+//! list scheduler and the admission session.
 //!
 //! Link resources are keyed *sparsely* — a hash over the (src, dst)
 //! pairs the program actually uses — instead of the reference's dense
@@ -81,7 +90,7 @@ use std::collections::VecDeque;
 use anyhow::ensure;
 
 use crate::compiler::{FabricProgram, Step};
-use crate::fabric::Fabric;
+use crate::fabric::{CostModel, Fabric, Occupancy};
 use crate::metrics::{Category, Metrics};
 use crate::sim::{Calendar, Cycle};
 use crate::Result;
@@ -208,6 +217,11 @@ impl ExecReport {
 struct Engine<'a> {
     fabric: &'a Fabric,
     prog: &'a FabricProgram,
+    /// The pricing seam: every resource query routes through this.
+    model: &'a dyn CostModel,
+    /// Live occupancy aggregates (tracking only under a time-varying
+    /// model; inert for [`crate::fabric::InvariantCost`]).
+    occ: Occupancy,
     /// Resource id serving each step (tile | HBM port | link).
     res_of: Vec<usize>,
     /// Per-resource wake queue of step ids, in program order.
@@ -236,7 +250,7 @@ struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    fn build(fabric: &'a Fabric, prog: &'a FabricProgram) -> Self {
+    fn build(fabric: &'a Fabric, prog: &'a FabricProgram, model: &'a dyn CostModel) -> Self {
         let n = prog.steps.len();
         let nt = fabric.tile_count();
         // Resource ids: 0..nt = tiles, nt = the HBM port, nt+1.. = links,
@@ -285,9 +299,15 @@ impl<'a> Engine<'a> {
                 cursor[d] += 1;
             }
         }
+        let occ = match model.time_dependence().epoch() {
+            Some(w) => Occupancy::new(w),
+            None => Occupancy::disabled(),
+        };
         Engine {
             fabric,
             prog,
+            model,
+            occ,
             res_of,
             queue,
             res_free: vec![0; n_res],
@@ -305,17 +325,17 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Start step `i` on its (idle) resource: price it with the
-    /// start-time-aware cost hooks, occupy the resource, and return the
-    /// completion time.
+    /// Start step `i` on its (idle) resource: price it through the cost
+    /// model at its true start cycle, register its occupancy span, occupy
+    /// the resource, and return the completion time.
     fn start(&mut self, i: usize) -> Result<Cycle> {
-        let (fabric, prog) = (self.fabric, self.prog);
+        let (fabric, prog, model) = (self.fabric, self.prog, self.model);
         let r = self.res_of[i];
         debug_assert!(!self.res_busy[r] && self.pending[i] == 0);
         let start = self.ready_at[i].max(self.res_free[r]);
         let dur = match &prog.steps[i] {
             Step::Load { tile, bytes, .. } => {
-                let cost = fabric.feed_at(*tile, *bytes, start);
+                let cost = model.feed(fabric, *tile, *bytes, start, &self.occ);
                 let cyc = cost.cycles;
                 self.transfer_cycles += cyc;
                 self.step_cost[i] = cost.with_cycles(0);
@@ -324,14 +344,14 @@ impl<'a> Engine<'a> {
             Step::Transfer { from, to, bytes, .. } => {
                 let src = fabric.tiles[*from].node;
                 let dst = fabric.tiles[*to].node;
-                let cost = fabric.transport_at(src, dst, *bytes, start);
+                let cost = model.transport(fabric, src, dst, *bytes, start, &self.occ);
                 let cyc = cost.cycles;
                 self.transfer_cycles += cyc;
                 self.step_cost[i] = cost.with_cycles(0);
                 cyc
             }
             Step::Exec { tile, compute, precision, .. } => {
-                let cost = fabric.tiles[*tile].execute_at(compute, *precision, start)?;
+                let cost = model.execute(fabric, *tile, compute, *precision, start, &self.occ)?;
                 let cyc = cost.metrics.cycles;
                 self.tile_busy[*tile] += cyc;
                 self.exec_steps += 1;
@@ -339,6 +359,9 @@ impl<'a> Engine<'a> {
                 cyc
             }
         };
+        if self.occ.is_tracking() {
+            self.occ.add_step(&prog.steps[i], start, start + dur);
+        }
         let finish = start + dur;
         self.res_free[r] = finish;
         self.res_busy[r] = true;
@@ -363,10 +386,22 @@ impl<'a> Engine<'a> {
     }
 }
 
-/// Run the event-driven timing co-simulation.
+/// Run the event-driven timing co-simulation under the fabric's
+/// configured cost model (`[fabric.cost]`).
 pub fn cosim(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
+    cosim_with(fabric, prog, fabric.cost_model().as_ref())
+}
+
+/// Run the event-driven timing co-simulation with an explicit cost
+/// model. For a time-varying model the single greedy pass is already the
+/// unique self-consistent schedule (see the module docs).
+pub fn cosim_with(
+    fabric: &Fabric,
+    prog: &FabricProgram,
+    model: &dyn CostModel,
+) -> Result<ExecReport> {
     let n = prog.steps.len();
-    let mut e = Engine::build(fabric, prog);
+    let mut e = Engine::build(fabric, prog, model);
     let mut cal: Calendar<usize> = Calendar::with_horizon(256);
 
     // Seed: launch every resource whose first queued step has no deps.

@@ -10,11 +10,15 @@
 //!   compute exactly as a doorbell-driven fabric run would.
 //! * [`admit`] — **admission**: the multi-program layer that keeps the
 //!   calendar alive across requests — batched admission at arbitrary
-//!   simulated times, shared resources with deterministic FIFO
-//!   tie-breaking, and incremental re-simulation (only the invalidated
-//!   closure of a program/cost change is re-enqueued). Single-program
-//!   t=0 admission is pinned bit-identical to [`exec`] and [`refexec`]
-//!   by `tests/admission_golden.rs`.
+//!   simulated times, shared resources with deterministic policy-keyed
+//!   tie-breaking (FIFO / priority / deadline), incremental
+//!   re-simulation (structural closure, widened to the time horizon +
+//!   settle fixed point under a time-varying cost model), O(1) span
+//!   telemetry and queue pruning for unbounded serving runs.
+//!   Single-program t=0 admission is pinned bit-identical to [`exec`]
+//!   and [`refexec`] by `tests/admission_golden.rs`; the time-varying
+//!   contracts by `tests/costmodel_golden.rs`. All engines price through
+//!   the [`crate::fabric::CostModel`] layer (`[fabric.cost]`).
 //! * [`refexec`] — the retained pre-rewrite list scheduler; differential
 //!   golden tests pin the event-driven engine to its bit-exact answers
 //!   (the `noc::refsim` pattern).
@@ -33,7 +37,7 @@ pub mod exec;
 pub mod refexec;
 pub mod serve;
 
-pub use admit::{AdmissionQueue, CosimSession, ProgramHandle};
-pub use exec::{cosim, ExecReport, ProgramSpan};
-pub use refexec::cosim_ref;
+pub use admit::{AdmissionQueue, AdmitMeta, AdmitPolicy, CosimSession, ProgramHandle};
+pub use exec::{cosim, cosim_with, ExecReport, ProgramSpan};
+pub use refexec::{cosim_ref, cosim_ref_with};
 pub use serve::{BatchServer, BatchStats, CosimExecutor, Request as ServeRequest};

@@ -1,5 +1,6 @@
 //! Reference timing co-simulation: the pre-rewrite one-pass list
-//! scheduler, kept verbatim (the `noc::refsim` pattern).
+//! scheduler, kept verbatim as the differential oracle (the
+//! `noc::refsim` pattern) — now parameterized over the cost-model layer.
 //!
 //! [`super::exec::cosim`] is the event-driven engine that replaced this
 //! loop; `cosim_ref` here is the retained original, and the differential
@@ -20,21 +21,51 @@
 //! * a step starts when its dependencies are done AND its resource is
 //!   free — classic resource-constrained list scheduling, which is what
 //!   a doorbell-driven fabric run looks like at this abstraction level.
+//!
+//! # Time-varying cost models: the iterated list scheduler
+//!
+//! Under [`crate::fabric::InvariantCost`] the scheduler is a single pass,
+//! exactly the pre-cost-layer code path. Under a time-varying model
+//! ([`crate::fabric::TimeDependence::VaryingAfter`]), a single pass in
+//! *program order* cannot be self-consistent (it prices steps before the
+//! occupancy they should read exists), so [`cosim_ref_with`] iterates
+//! Jacobi-style: pass `k+1` prices every step against the occupancy of
+//! pass `k`'s settled schedule, until two consecutive passes produce the
+//! same schedule bit-for-bit. Because models read occupancy of
+//! **strictly earlier epochs** only (the `fabric::cost` purity
+//! contract), each pass pins at least one more epoch prefix of the
+//! unique fixed point, so the loop converges in at most
+//! `makespan / epoch + 2` passes; a hard cap guards against models that
+//! violate the contract. The converged schedule is the *same* fixed
+//! point the event engine and the admission session reach by entirely
+//! different routes — `tests/costmodel_golden.rs` pins all three.
 
 use crate::compiler::{FabricProgram, Step};
-use crate::fabric::Fabric;
+use crate::fabric::{CostModel, Fabric, Occupancy, TimeDependence};
 use crate::metrics::{Category, Metrics};
 use crate::sim::Cycle;
 use crate::Result;
 
+use super::admit::MAX_SETTLE_PASSES;
 use super::exec::ExecReport;
 
-/// Run the reference list-scheduler co-simulation (pre-rewrite code).
-pub fn cosim_ref(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
+use anyhow::ensure;
+
+/// One list-scheduler pass: prices every step in program order against
+/// the (frozen) occupancy `occ`, returning the completion times and the
+/// per-step costs/durations. This is the pre-rewrite loop, verbatim.
+#[allow(clippy::type_complexity)]
+fn pass(
+    fabric: &Fabric,
+    prog: &FabricProgram,
+    model: &dyn CostModel,
+    occ: &Occupancy,
+) -> Result<(Vec<Cycle>, Vec<Metrics>, Vec<Cycle>)> {
     let n = prog.steps.len();
     let mut done = vec![0 as Cycle; n];
+    let mut dur = vec![0 as Cycle; n];
+    let mut cost = vec![Metrics::new(); n];
     let mut tile_free = vec![0 as Cycle; fabric.tile_count()];
-    let mut tile_busy = vec![0 as Cycle; fabric.tile_count()];
     let mut hbm_free: Cycle = 0;
     // Per-(src tile, dst tile) transfer-path occupancy, flat-indexed by
     // the dense pair id `from * tile_count + to`. O(tiles^2) memory —
@@ -42,44 +73,111 @@ pub fn cosim_ref(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
     // resources sparsely instead.
     let nt = fabric.tile_count();
     let mut link_free: Vec<Cycle> = vec![0; nt * nt];
-    let mut total = Metrics::new();
-    let mut transfer_cycles: Cycle = 0;
-    let mut exec_steps = 0usize;
 
     for (i, step) in prog.steps.iter().enumerate() {
         let ready = step.deps().iter().map(|&d| done[d]).max().unwrap_or(0);
         match step {
             Step::Load { tile, bytes, .. } => {
-                let cost = fabric.feed(*tile, *bytes);
                 let start = ready.max(hbm_free);
-                let finish = start + cost.cycles;
+                let c = model.feed(fabric, *tile, *bytes, start, occ);
+                let finish = start + c.cycles;
                 hbm_free = finish;
                 done[i] = finish;
-                transfer_cycles += cost.cycles;
-                total.absorb_parallel(&cost.with_cycles(0));
+                dur[i] = c.cycles;
+                cost[i] = c.with_cycles(0);
             }
             Step::Transfer { from, to, bytes, .. } => {
                 let src = fabric.tiles[*from].node;
                 let dst = fabric.tiles[*to].node;
-                let cost = fabric.transport(src, dst, *bytes);
                 let key = *from * nt + *to;
                 let start = ready.max(link_free[key]);
-                let finish = start + cost.cycles;
+                let c = model.transport(fabric, src, dst, *bytes, start, occ);
+                let finish = start + c.cycles;
                 link_free[key] = finish;
                 done[i] = finish;
-                transfer_cycles += cost.cycles;
-                total.absorb_parallel(&cost.with_cycles(0));
+                dur[i] = c.cycles;
+                cost[i] = c.with_cycles(0);
             }
             Step::Exec { tile, compute, precision, .. } => {
-                let cost = fabric.tiles[*tile].execute(compute, *precision)?;
                 let start = ready.max(tile_free[*tile]);
-                let finish = start + cost.metrics.cycles;
+                let c = model.execute(fabric, *tile, compute, *precision, start, occ)?;
+                let finish = start + c.metrics.cycles;
                 tile_free[*tile] = finish;
-                tile_busy[*tile] += cost.metrics.cycles;
                 done[i] = finish;
-                exec_steps += 1;
-                total.absorb_parallel(&cost.metrics.with_cycles(0));
+                dur[i] = c.metrics.cycles;
+                cost[i] = c.metrics.with_cycles(0);
             }
+        }
+    }
+    Ok((done, cost, dur))
+}
+
+/// Build the occupancy aggregates of a settled schedule.
+fn occupancy_of(
+    prog: &FabricProgram,
+    epoch: Cycle,
+    done: &[Cycle],
+    dur: &[Cycle],
+) -> Occupancy {
+    let mut occ = Occupancy::new(epoch);
+    for (i, step) in prog.steps.iter().enumerate() {
+        occ.add_step(step, done[i] - dur[i], done[i]);
+    }
+    occ
+}
+
+/// Run the reference list-scheduler co-simulation under the fabric's
+/// configured cost model (`[fabric.cost]`).
+pub fn cosim_ref(fabric: &Fabric, prog: &FabricProgram) -> Result<ExecReport> {
+    cosim_ref_with(fabric, prog, fabric.cost_model().as_ref())
+}
+
+/// Run the reference list scheduler with an explicit cost model:
+/// a single pass for an invariant model (the pre-rewrite code path,
+/// bit-identical), iterated to the unique fixed point for a
+/// time-varying one (see module docs).
+pub fn cosim_ref_with(
+    fabric: &Fabric,
+    prog: &FabricProgram,
+    model: &dyn CostModel,
+) -> Result<ExecReport> {
+    let (done, cost, dur) = match model.time_dependence() {
+        TimeDependence::Invariant => pass(fabric, prog, model, &Occupancy::disabled())?,
+        TimeDependence::VaryingAfter(epoch) => {
+            let mut cur = pass(fabric, prog, model, &Occupancy::new(epoch))?;
+            let mut passes = 1usize;
+            loop {
+                let occ = occupancy_of(prog, epoch, &cur.0, &cur.2);
+                let next = pass(fabric, prog, model, &occ)?;
+                if next == cur {
+                    break;
+                }
+                cur = next;
+                passes += 1;
+                ensure!(
+                    passes <= MAX_SETTLE_PASSES,
+                    "iterated list scheduler did not converge in {MAX_SETTLE_PASSES} passes \
+                     (cost model reads non-strictly-earlier epochs?)"
+                );
+            }
+            cur
+        }
+    };
+
+    let n = prog.steps.len();
+    let mut tile_busy = vec![0 as Cycle; fabric.tile_count()];
+    let mut transfer_cycles: Cycle = 0;
+    let mut exec_steps = 0usize;
+    let mut total = Metrics::new();
+    for (i, step) in prog.steps.iter().enumerate() {
+        // Fold per-step costs in program order — the exact absorb
+        // sequence of the pre-cost-layer scheduler, so energy bits match.
+        total.absorb_parallel(&cost[i]);
+        if let Step::Exec { tile, .. } = step {
+            tile_busy[*tile] += dur[i];
+            exec_steps += 1;
+        } else {
+            transfer_cycles += dur[i];
         }
     }
     let makespan = done.iter().copied().max().unwrap_or(0);
@@ -155,5 +253,20 @@ mod tests {
             let b = cosim_ref(&f, &p).unwrap();
             assert!(a.bit_identical(&b), "{s:?}: engines diverged");
         }
+    }
+
+    #[test]
+    fn iterated_scheduler_converges_under_congestion() {
+        use crate::fabric::{CongestionKnobs, VaryingCost};
+        let g = workloads::mlp(8, 64, &[64, 32], 10, 1).unwrap();
+        let f = fabric();
+        let m = map_graph(&g, &f, MapStrategy::Greedy, Precision::Int8).unwrap();
+        let p = lower(&g, &f, &m).unwrap();
+        let model = VaryingCost::congestion(256, CongestionKnobs { alpha: 0.5, cap: 4.0 });
+        let a = cosim_ref_with(&f, &p, &model).unwrap();
+        let b = cosim_ref_with(&f, &p, &model).unwrap();
+        assert!(a.bit_identical(&b), "fixed point must be deterministic");
+        let base = cosim_ref(&f, &p).unwrap();
+        assert!(a.cycles >= base.cycles, "congestion can only stretch the makespan");
     }
 }

@@ -20,13 +20,14 @@
 //! tiles/HBM/links.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::ensure;
 
 use super::admit::CosimSession;
 use crate::compiler::FabricProgram;
-use crate::fabric::Fabric;
+use crate::fabric::{CostModel, Fabric};
 use crate::runtime::Tensor;
 use crate::sim::Cycle;
 use crate::Result;
@@ -123,9 +124,27 @@ pub struct CosimExecutor<'f> {
 
 impl<'f> CosimExecutor<'f> {
     /// `prog` is the lowered program of one full batch; `gap` the
-    /// simulated inter-batch arrival distance in fabric cycles.
+    /// simulated inter-batch arrival distance in fabric cycles. Prices
+    /// through the fabric's configured `[fabric.cost]` model.
     pub fn new(fabric: &'f Fabric, prog: FabricProgram, gap: Cycle) -> Self {
         CosimExecutor { session: CosimSession::new(fabric), prog, gap, next_at: 0 }
+    }
+
+    /// Like [`CosimExecutor::new`] but pricing through an explicit cost
+    /// model — e.g. a congestion/DVFS [`crate::fabric::VaryingCost`], so
+    /// the serving loop prices load-dependent latency honestly.
+    pub fn with_model(
+        fabric: &'f Fabric,
+        prog: FabricProgram,
+        gap: Cycle,
+        model: Arc<dyn CostModel>,
+    ) -> Self {
+        CosimExecutor { session: CosimSession::with_model(fabric, model), prog, gap, next_at: 0 }
+    }
+
+    /// The cost model this executor's session prices through.
+    pub fn cost_model(&self) -> &Arc<dyn CostModel> {
+        self.session.cost_model()
     }
 
     /// Admit the next batch at its arrival cycle, simulate to
@@ -487,6 +506,42 @@ mod tests {
             assert_eq!(rep.programs.len(), stats.batches);
             let sum_steps: usize = rep.programs.iter().map(|p| p.steps).sum();
             assert_eq!(sum_steps, rep.step_done.len());
+        }
+
+        #[test]
+        fn cosim_executor_prices_load_through_a_varying_model() {
+            use crate::fabric::{CongestionKnobs, VaryingCost};
+            let fabric = Fabric::build(
+                FabricConfig::from_toml(
+                    "[noc]\nwidth = 3\nheight = 3\n\
+                     [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+            let g = workloads::mlp(4, 32, &[16], 8, 1).unwrap();
+            let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+            let prog = lower(&g, &fabric, &m).unwrap();
+            // Tight gap so consecutive batches overlap and congest.
+            let model =
+                Arc::new(VaryingCost::congestion(64, CongestionKnobs { alpha: 1.0, cap: 8.0 }));
+            let mut hot = CosimExecutor::with_model(&fabric, prog.clone(), 10, model.clone());
+            assert_eq!(hot.cost_model().name(), "congestion");
+            let mut cold = CosimExecutor::new(&fabric, prog, 10);
+            let (mut hot_spans, mut cold_spans) = (Vec::new(), Vec::new());
+            for _ in 0..4 {
+                hot_spans.push(hot.execute_batch().unwrap());
+                cold_spans.push(cold.execute_batch().unwrap());
+            }
+            // Congestion can only stretch simulated batch latency, and a
+            // saturated stream must actually show it somewhere.
+            for (h, c) in hot_spans.iter().zip(&cold_spans) {
+                assert!(h >= c, "congestion shrank a batch: {h} < {c}");
+            }
+            assert!(
+                hot_spans.iter().zip(&cold_spans).any(|(h, c)| h > c),
+                "saturated stream never congested: {hot_spans:?} vs {cold_spans:?}"
+            );
         }
     }
 }

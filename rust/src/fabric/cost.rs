@@ -1,0 +1,676 @@
+//! The cost-model layer: every start-time-aware resource query of the
+//! co-simulation stack routes through one [`CostModel`] — the swappable
+//! analytic pricing seam between the exact event engines
+//! (`coordinator::exec` / `coordinator::admit`) and the fabric's
+//! resource models, in the Timeloop/gem5 spirit of separating *what a
+//! step costs* from *when the engine replays it*.
+//!
+//! PR 2 grew `transport_at`/`feed_at`/`execute_at`/… hooks on the fabric
+//! types and PR 4 made their time-invariance load-bearing for incremental
+//! re-simulation. This module **replaces** those hooks (they are gone —
+//! a contract migration, not an addition): the engines now hold a model
+//! handle and the model declares its own time dependence, so
+//! time-varying pricing (congestion, DVFS/thermal throttling) plugs in
+//! without touching an engine, and the admission session knows which
+//! invalidation rule the model requires.
+//!
+//! # The contract
+//!
+//! A cost model must be a **pure, deterministic function** of
+//!
+//! * the fabric description,
+//! * the step parameters (`src`/`dst`/`bytes`/`compute`/`precision`),
+//! * the start cycle, and
+//! * occupancy reads of **strictly earlier epochs** (below).
+//!
+//! No interior mutability, no iteration-order-dependent reads, no clock
+//! or RNG. Identical inputs must produce bit-identical [`Metrics`].
+//!
+//! # Time dependence and the epoch quantization
+//!
+//! [`CostModel::time_dependence`] is self-declared:
+//!
+//! * [`TimeDependence::Invariant`] — the price ignores `start` and the
+//!   occupancy entirely. The engines then skip occupancy tracking and the
+//!   admission session keeps the (cheaper) structural-only invalidation
+//!   closure of PR 4; every report stays bit-identical to the
+//!   pre-cost-layer engines (`tests/admission_golden.rs` pins this).
+//! * [`TimeDependence::VaryingAfter(w)`] — the price at start `s` may
+//!   read occupancy, but only aggregated over epochs **strictly before**
+//!   `epoch(s) = s / w` (epoch length `w` cycles). The admission session
+//!   then widens invalidation to the *time horizon* (every scheduled step
+//!   with start ≥ the perturbation time) and runs a fixed-point
+//!   re-pricing loop (see `coordinator::admit`).
+//!
+//! The strictly-earlier-epoch rule is what makes the whole design exact:
+//! it stratifies the schedule by epoch, so the self-consistent schedule
+//! (every step priced against the occupancy of the final schedule) is
+//! **unique** — occupancy of epochs `< k` is fully determined by steps
+//! starting before epoch `k`, so two self-consistent schedules agreeing
+//! before their earliest divergence must also agree at it. Uniqueness is
+//! why an incremental session, a from-scratch session, the event engine
+//! and the iterated list scheduler all converge to bit-identical reports
+//! (pinned by `tests/costmodel_golden.rs`). A model that reads its own
+//! epoch (or a future one) voids that guarantee; the session's settle
+//! loop would still terminate or error, but the differential goldens
+//! would catch the divergence.
+//!
+//! # Shipped models
+//!
+//! * [`InvariantCost`] — delegates to the analytic fabric models
+//!   bit-for-bit; the default (`[fabric.cost] model = "invariant"`).
+//! * [`VaryingCost`] — the time-varying model family, with two orthogonal
+//!   mechanisms that can be enabled independently or together:
+//!   * **congestion** (link/HBM): transfer-class latency scales with the
+//!     average number of concurrently-resident transfer steps during the
+//!     previous epoch (`factor = min(cap, 1 + alpha · resident)`);
+//!   * **DVFS/thermal** (tiles): a tile whose busy fraction over a
+//!     trailing window of epochs crosses the warm/hot thresholds is
+//!     frequency-throttled (`cycles / scale`, discrete levels — discrete
+//!     so the fixed point settles in few passes). Energy is left
+//!     unscaled: congestion and throttling stretch time, they do not
+//!     move more bits or switch more gates in this model family.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::accel::{Compute, Precision};
+use crate::compiler::Step;
+use crate::config::CostConfig;
+use crate::metrics::Metrics;
+use crate::noc::NodeId;
+use crate::sim::Cycle;
+use crate::Result;
+
+use super::{Fabric, TileCost};
+
+/// Self-declared time dependence of a [`CostModel`] (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeDependence {
+    /// Prices ignore `start` and occupancy; structural invalidation
+    /// suffices and reports match the pre-cost-layer engines bit-for-bit.
+    Invariant,
+    /// Prices may vary with `start`, reading occupancy aggregated over
+    /// epochs of the given length — **strictly earlier** epochs only.
+    /// Requires the admission session's horizon invalidation + settle
+    /// loop.
+    VaryingAfter(Cycle),
+}
+
+impl TimeDependence {
+    /// Epoch length when time-varying, `None` when invariant.
+    pub fn epoch(self) -> Option<Cycle> {
+        match self {
+            TimeDependence::Invariant => None,
+            TimeDependence::VaryingAfter(w) => Some(w),
+        }
+    }
+}
+
+/// Live resource-occupancy aggregates an engine feeds its time-varying
+/// cost model: per-epoch integrals of transfer residency (Load/Transfer
+/// steps in flight on the HBM port / NoC links) and per-tile busy
+/// cycles. All counters are integers, so registering and retracting a
+/// step's span is *exact* — the admission engine's invalidation can
+/// subtract a contribution and land on the same bits as never having
+/// added it (a float accumulator could not).
+#[derive(Debug, Clone)]
+pub struct Occupancy {
+    /// Epoch length in cycles; 0 = tracking disabled (invariant model).
+    epoch: Cycle,
+    /// epoch -> resident transfer cycles (sum of per-step overlap).
+    transfer: HashMap<u64, u64>,
+    /// (tile, epoch) -> busy cycles.
+    tile_busy: HashMap<(u32, u64), u64>,
+}
+
+impl Occupancy {
+    /// Tracking occupancy at the given epoch length.
+    pub fn new(epoch: Cycle) -> Self {
+        assert!(epoch > 0, "occupancy epoch must be positive");
+        Occupancy { epoch, transfer: HashMap::new(), tile_busy: HashMap::new() }
+    }
+
+    /// A disabled instance for invariant models: all adds are no-ops and
+    /// all reads return 0.
+    pub fn disabled() -> Self {
+        Occupancy { epoch: 0, transfer: HashMap::new(), tile_busy: HashMap::new() }
+    }
+
+    pub fn is_tracking(&self) -> bool {
+        self.epoch > 0
+    }
+
+    /// Visit `(epoch, overlap cycles)` for every epoch the span
+    /// `[start, finish)` intersects.
+    fn for_epochs(epoch: Cycle, start: Cycle, finish: Cycle, mut f: impl FnMut(u64, u64)) {
+        if epoch == 0 || finish <= start {
+            return;
+        }
+        let mut e = start / epoch;
+        let last = (finish - 1) / epoch;
+        while e <= last {
+            let lo = start.max(e * epoch);
+            let hi = finish.min((e + 1) * epoch);
+            f(e, hi - lo);
+            e += 1;
+        }
+    }
+
+    /// Register a transfer-class step (HBM load or NoC transfer) resident
+    /// over `[start, finish)`.
+    pub fn add_transfer(&mut self, start: Cycle, finish: Cycle) {
+        let transfer = &mut self.transfer;
+        Self::for_epochs(self.epoch, start, finish, |e, c| {
+            *transfer.entry(e).or_insert(0) += c;
+        });
+    }
+
+    /// Retract a previously registered transfer span — exact inverse.
+    pub fn remove_transfer(&mut self, start: Cycle, finish: Cycle) {
+        let transfer = &mut self.transfer;
+        Self::for_epochs(self.epoch, start, finish, |e, c| {
+            let v = transfer.get_mut(&e).expect("retracting unknown transfer span");
+            *v -= c;
+            if *v == 0 {
+                transfer.remove(&e);
+            }
+        });
+    }
+
+    /// Register tile busy time over `[start, finish)`.
+    pub fn add_tile_busy(&mut self, tile: usize, start: Cycle, finish: Cycle) {
+        let tile_busy = &mut self.tile_busy;
+        Self::for_epochs(self.epoch, start, finish, |e, c| {
+            *tile_busy.entry((tile as u32, e)).or_insert(0) += c;
+        });
+    }
+
+    /// Retract a previously registered tile-busy span — exact inverse.
+    pub fn remove_tile_busy(&mut self, tile: usize, start: Cycle, finish: Cycle) {
+        let tile_busy = &mut self.tile_busy;
+        Self::for_epochs(self.epoch, start, finish, |e, c| {
+            let key = (tile as u32, e);
+            let v = tile_busy.get_mut(&key).expect("retracting unknown busy span");
+            *v -= c;
+            if *v == 0 {
+                tile_busy.remove(&key);
+            }
+        });
+    }
+
+    /// Register the occupancy span of one program step: `Exec` steps
+    /// charge their tile's busy integral, `Load`/`Transfer` steps the
+    /// shared resident-transfer integral. Keeping the classification in
+    /// one place keeps [`Occupancy::remove_step`] its exact inverse.
+    pub fn add_step(&mut self, step: &Step, start: Cycle, finish: Cycle) {
+        match step {
+            Step::Exec { tile, .. } => self.add_tile_busy(*tile, start, finish),
+            Step::Load { .. } | Step::Transfer { .. } => self.add_transfer(start, finish),
+        }
+    }
+
+    /// Exact inverse of [`Occupancy::add_step`].
+    pub fn remove_step(&mut self, step: &Step, start: Cycle, finish: Cycle) {
+        match step {
+            Step::Exec { tile, .. } => self.remove_tile_busy(*tile, start, finish),
+            Step::Load { .. } | Step::Transfer { .. } => self.remove_transfer(start, finish),
+        }
+    }
+
+    /// Resident transfer cycles integrated over epoch `e`.
+    pub fn transfer_cycles(&self, e: u64) -> u64 {
+        self.transfer.get(&e).copied().unwrap_or(0)
+    }
+
+    /// Busy cycles of `tile` within epoch `e`.
+    pub fn tile_busy_cycles(&self, tile: usize, e: u64) -> u64 {
+        self.tile_busy.get(&(tile as u32, e)).copied().unwrap_or(0)
+    }
+}
+
+/// The cost-model layer every resource query routes through (module docs
+/// carry the purity + strictly-earlier-epoch contract).
+pub trait CostModel: Send + Sync {
+    /// Self-declared time dependence; drives occupancy tracking and the
+    /// admission session's invalidation rule.
+    fn time_dependence(&self) -> TimeDependence;
+
+    /// Short stable identifier (for logs / config round-trips).
+    fn name(&self) -> &'static str;
+
+    /// Price a NoC transport of `bytes` from node `src` to `dst`
+    /// launching at `start`.
+    fn transport(
+        &self,
+        fabric: &Fabric,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Metrics;
+
+    /// Price an HBM→tile feed (channel access + NoC leg) launching at
+    /// `start`.
+    fn feed(&self, fabric: &Fabric, tile: usize, bytes: u64, start: Cycle, occ: &Occupancy)
+        -> Metrics;
+
+    /// Price one compute invocation on `tile` launching at `start`.
+    fn execute(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        c: &Compute,
+        p: Precision,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Result<TileCost>;
+}
+
+/// Time-invariant model: delegates to the analytic fabric primitives
+/// bit-for-bit. This is the pre-refactor pricing path — the differential
+/// goldens pin every engine under this model to the PR 4 reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InvariantCost;
+
+impl CostModel for InvariantCost {
+    fn time_dependence(&self) -> TimeDependence {
+        TimeDependence::Invariant
+    }
+
+    fn name(&self) -> &'static str {
+        "invariant"
+    }
+
+    fn transport(
+        &self,
+        fabric: &Fabric,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        _start: Cycle,
+        _occ: &Occupancy,
+    ) -> Metrics {
+        fabric.transport(src, dst, bytes)
+    }
+
+    fn feed(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        bytes: u64,
+        _start: Cycle,
+        _occ: &Occupancy,
+    ) -> Metrics {
+        fabric.feed(tile, bytes)
+    }
+
+    fn execute(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        c: &Compute,
+        p: Precision,
+        _start: Cycle,
+        _occ: &Occupancy,
+    ) -> Result<TileCost> {
+        fabric.tiles[tile].execute(c, p)
+    }
+}
+
+/// Congestion knobs: transfer latency scales with the average number of
+/// concurrently-resident transfer steps during the previous epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CongestionKnobs {
+    /// Latency slope per average resident transfer.
+    pub alpha: f64,
+    /// Ceiling on the congestion factor.
+    pub cap: f64,
+}
+
+impl Default for CongestionKnobs {
+    fn default() -> Self {
+        CongestionKnobs { alpha: 0.25, cap: 4.0 }
+    }
+}
+
+/// DVFS/thermal knobs: discrete frequency throttle levels driven by the
+/// tile's busy fraction over a trailing window of epochs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DvfsKnobs {
+    /// Trailing window length, in epochs.
+    pub window: u64,
+    /// Busy fraction at/above which the tile throttles to `warm_scale`.
+    pub warm_frac: f64,
+    /// Busy fraction at/above which the tile throttles to `hot_scale`.
+    pub hot_frac: f64,
+    /// Frequency scale in the warm band (0 < scale <= 1).
+    pub warm_scale: f64,
+    /// Frequency scale in the hot band (0 < scale <= 1).
+    pub hot_scale: f64,
+}
+
+impl Default for DvfsKnobs {
+    fn default() -> Self {
+        DvfsKnobs { window: 4, warm_frac: 0.6, hot_frac: 0.9, warm_scale: 0.75, hot_scale: 0.5 }
+    }
+}
+
+/// The time-varying model family: congestion-aware link/HBM pricing
+/// and/or DVFS/thermal tile pricing, both quantized to `epoch`-cycle
+/// occupancy windows (strictly-earlier-epoch reads only — see module
+/// docs for why that makes the fixed point unique).
+#[derive(Debug, Clone, Copy)]
+pub struct VaryingCost {
+    /// Occupancy epoch length, cycles.
+    pub epoch: Cycle,
+    pub congestion: Option<CongestionKnobs>,
+    pub dvfs: Option<DvfsKnobs>,
+}
+
+impl VaryingCost {
+    /// Congestion-only model.
+    pub fn congestion(epoch: Cycle, knobs: CongestionKnobs) -> Self {
+        assert!(epoch > 0, "time-varying cost epoch must be positive");
+        VaryingCost { epoch, congestion: Some(knobs), dvfs: None }
+    }
+
+    /// DVFS-only model.
+    pub fn dvfs(epoch: Cycle, knobs: DvfsKnobs) -> Self {
+        assert!(epoch > 0, "time-varying cost epoch must be positive");
+        VaryingCost { epoch, congestion: None, dvfs: Some(knobs) }
+    }
+
+    /// Both mechanisms on one epoch grid.
+    pub fn congestion_dvfs(epoch: Cycle, c: CongestionKnobs, d: DvfsKnobs) -> Self {
+        assert!(epoch > 0, "time-varying cost epoch must be positive");
+        VaryingCost { epoch, congestion: Some(c), dvfs: Some(d) }
+    }
+
+    /// Congestion latency factor at `start`: reads the previous epoch's
+    /// resident-transfer integral (epoch 0 sees no history → 1.0).
+    pub fn congestion_factor(&self, start: Cycle, occ: &Occupancy) -> f64 {
+        let Some(k) = self.congestion else { return 1.0 };
+        let e = start / self.epoch;
+        if e == 0 || !occ.is_tracking() {
+            return 1.0;
+        }
+        let resident = occ.transfer_cycles(e - 1) as f64 / self.epoch as f64;
+        (1.0 + k.alpha * resident).min(k.cap)
+    }
+
+    /// DVFS frequency scale for `tile` at `start`: busy fraction over the
+    /// trailing window of fully elapsed epochs, mapped to discrete
+    /// throttle levels (1.0 when cool or without history).
+    pub fn dvfs_scale(&self, tile: usize, start: Cycle, occ: &Occupancy) -> f64 {
+        let Some(k) = self.dvfs else { return 1.0 };
+        let e = start / self.epoch;
+        if e == 0 || !occ.is_tracking() || k.window == 0 {
+            return 1.0;
+        }
+        let w = k.window.min(e);
+        let busy: u64 = (e - w..e).map(|j| occ.tile_busy_cycles(tile, j)).sum();
+        let frac = busy as f64 / (w * self.epoch) as f64;
+        if frac >= k.hot_frac {
+            k.hot_scale
+        } else if frac >= k.warm_frac {
+            k.warm_scale
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Stretch a latency by `factor >= 1.0` (ceil to whole cycles).
+fn stretch(cycles: Cycle, factor: f64) -> Cycle {
+    if factor == 1.0 {
+        cycles
+    } else {
+        (cycles as f64 * factor).ceil() as Cycle
+    }
+}
+
+impl CostModel for VaryingCost {
+    fn time_dependence(&self) -> TimeDependence {
+        // A knob-less instance is genuinely invariant — declare it so:
+        // `name()`, the behavior class and the engines' invalidation
+        // rule then all agree for every constructible value.
+        if self.congestion.is_none() && self.dvfs.is_none() {
+            TimeDependence::Invariant
+        } else {
+            TimeDependence::VaryingAfter(self.epoch)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match (self.congestion.is_some(), self.dvfs.is_some()) {
+            (true, true) => "congestion_dvfs",
+            (true, false) => "congestion",
+            (false, true) => "dvfs",
+            (false, false) => "invariant",
+        }
+    }
+
+    fn transport(
+        &self,
+        fabric: &Fabric,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Metrics {
+        let mut m = fabric.transport(src, dst, bytes);
+        m.cycles = stretch(m.cycles, self.congestion_factor(start, occ));
+        m
+    }
+
+    fn feed(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        bytes: u64,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Metrics {
+        let mut m = fabric.feed(tile, bytes);
+        m.cycles = stretch(m.cycles, self.congestion_factor(start, occ));
+        m
+    }
+
+    fn execute(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        c: &Compute,
+        p: Precision,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Result<TileCost> {
+        let mut cost = fabric.tiles[tile].execute(c, p)?;
+        let scale = self.dvfs_scale(tile, start, occ);
+        if scale != 1.0 {
+            cost.metrics.cycles = (cost.metrics.cycles as f64 / scale).ceil() as Cycle;
+        }
+        Ok(cost)
+    }
+}
+
+/// Build the configured cost model (`[fabric.cost]`, see
+/// [`crate::config::CostConfig`]).
+pub fn model_from_config(cfg: &CostConfig) -> Result<Arc<dyn CostModel>> {
+    let cong = CongestionKnobs { alpha: cfg.alpha, cap: cfg.cap };
+    let dvfs = DvfsKnobs {
+        window: cfg.window_epochs,
+        warm_frac: cfg.warm_frac,
+        hot_frac: cfg.hot_frac,
+        warm_scale: cfg.warm_scale,
+        hot_scale: cfg.hot_scale,
+    };
+    Ok(match cfg.model.as_str() {
+        "invariant" => Arc::new(InvariantCost),
+        "congestion" => Arc::new(VaryingCost::congestion(cfg.epoch_cycles, cong)),
+        "dvfs" => Arc::new(VaryingCost::dvfs(cfg.epoch_cycles, dvfs)),
+        "congestion_dvfs" => {
+            Arc::new(VaryingCost::congestion_dvfs(cfg.epoch_cycles, cong, dvfs))
+        }
+        other => bail!("unknown cost model {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FabricConfig;
+
+    fn fabric() -> Fabric {
+        Fabric::build(
+            FabricConfig::from_toml(
+                "[noc]\nwidth = 3\nheight = 3\n\
+                 [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn occupancy_add_remove_roundtrips_exactly() {
+        let mut o = Occupancy::new(100);
+        o.add_transfer(50, 260); // epochs 0 (50), 1 (100), 2 (60)
+        assert_eq!(o.transfer_cycles(0), 50);
+        assert_eq!(o.transfer_cycles(1), 100);
+        assert_eq!(o.transfer_cycles(2), 60);
+        o.add_transfer(120, 130);
+        assert_eq!(o.transfer_cycles(1), 110);
+        o.remove_transfer(50, 260);
+        assert_eq!(o.transfer_cycles(0), 0);
+        assert_eq!(o.transfer_cycles(1), 10);
+        assert_eq!(o.transfer_cycles(2), 0);
+        o.remove_transfer(120, 130);
+        assert!(o.transfer.is_empty(), "all counters drained to zero");
+        // Zero-length spans are no-ops.
+        o.add_transfer(7, 7);
+        assert!(o.transfer.is_empty());
+    }
+
+    #[test]
+    fn occupancy_tile_busy_per_tile_and_epoch() {
+        let mut o = Occupancy::new(64);
+        o.add_tile_busy(2, 0, 200); // epochs 0..=3
+        assert_eq!(o.tile_busy_cycles(2, 0), 64);
+        assert_eq!(o.tile_busy_cycles(2, 3), 200 - 3 * 64);
+        assert_eq!(o.tile_busy_cycles(1, 0), 0);
+        o.remove_tile_busy(2, 0, 200);
+        assert!(o.tile_busy.is_empty());
+    }
+
+    #[test]
+    fn disabled_occupancy_is_inert() {
+        let mut o = Occupancy::disabled();
+        assert!(!o.is_tracking());
+        o.add_transfer(0, 1000);
+        o.add_tile_busy(0, 0, 1000);
+        assert_eq!(o.transfer_cycles(0), 0);
+        assert_eq!(o.tile_busy_cycles(0, 0), 0);
+    }
+
+    #[test]
+    fn invariant_model_matches_analytic_primitives_bitwise() {
+        let f = fabric();
+        let m = InvariantCost;
+        let occ = Occupancy::disabled();
+        let a = m.transport(&f, 0, 3, 4096, 12345, &occ);
+        let b = f.transport(0, 3, 4096);
+        assert_eq!(a, b);
+        assert_eq!(a.total_energy_pj().to_bits(), b.total_energy_pj().to_bits());
+        let a = m.feed(&f, 1, 4096, 999, &occ);
+        let b = f.feed(1, 4096);
+        assert_eq!(a, b);
+        assert_eq!(m.time_dependence().epoch(), None);
+    }
+
+    #[test]
+    fn congestion_reads_previous_epoch_only() {
+        let f = fabric();
+        let model = VaryingCost::congestion(100, CongestionKnobs { alpha: 0.5, cap: 4.0 });
+        let mut occ = Occupancy::new(100);
+        // Two transfers resident through all of epoch 0.
+        occ.add_transfer(0, 100);
+        occ.add_transfer(0, 100);
+        let base = f.transport(0, 3, 4096);
+        // Epoch 0 start: no history, base latency.
+        assert_eq!(model.transport(&f, 0, 3, 4096, 0, &occ).cycles, base.cycles);
+        assert_eq!(model.transport(&f, 0, 3, 4096, 99, &occ).cycles, base.cycles);
+        // Epoch 1 start: reads epoch 0 (avg residency 2) -> factor 2.0.
+        let congested = model.transport(&f, 0, 3, 4096, 100, &occ);
+        assert_eq!(congested.cycles, (base.cycles as f64 * 2.0).ceil() as u64);
+        // Energy is untouched by congestion.
+        assert_eq!(
+            congested.total_energy_pj().to_bits(),
+            base.total_energy_pj().to_bits()
+        );
+        // Epoch 2 start: epoch 1 is empty -> back to base.
+        assert_eq!(model.transport(&f, 0, 3, 4096, 200, &occ).cycles, base.cycles);
+    }
+
+    #[test]
+    fn congestion_factor_caps() {
+        let model = VaryingCost::congestion(10, CongestionKnobs { alpha: 1.0, cap: 3.0 });
+        let mut occ = Occupancy::new(10);
+        for _ in 0..50 {
+            occ.add_transfer(0, 10);
+        }
+        assert_eq!(model.congestion_factor(10, &occ), 3.0);
+    }
+
+    #[test]
+    fn dvfs_throttles_hot_tiles_with_discrete_levels() {
+        let f = fabric();
+        let knobs = DvfsKnobs {
+            window: 2,
+            warm_frac: 0.5,
+            hot_frac: 0.9,
+            warm_scale: 0.8,
+            hot_scale: 0.5,
+        };
+        let model = VaryingCost::dvfs(100, knobs);
+        let mut occ = Occupancy::new(100);
+        let c = Compute::MatMul { m: 8, k: 8, n: 8 };
+        let base = f.tiles[0].execute(&c, Precision::Int8).unwrap().metrics.cycles;
+        // Cold tile: full speed.
+        assert_eq!(model.dvfs_scale(0, 250, &occ), 1.0);
+        // Tile 0 fully busy through epochs 0 and 1 -> hot at epoch 2.
+        occ.add_tile_busy(0, 0, 200);
+        assert_eq!(model.dvfs_scale(0, 250, &occ), 0.5);
+        let throttled =
+            model.execute(&f, 0, &c, Precision::Int8, 250, &occ).unwrap().metrics.cycles;
+        assert_eq!(throttled, (base as f64 / 0.5).ceil() as u64);
+        // Half busy -> warm level; other tiles unaffected.
+        occ.remove_tile_busy(0, 0, 200);
+        occ.add_tile_busy(0, 0, 100);
+        assert_eq!(model.dvfs_scale(0, 250, &occ), 0.8);
+        assert_eq!(model.dvfs_scale(1, 250, &occ), 1.0);
+        // Epoch 0 has no elapsed history at all.
+        assert_eq!(model.dvfs_scale(0, 50, &occ), 1.0);
+    }
+
+    #[test]
+    fn model_from_config_selects_and_rejects() {
+        let mut cfg = CostConfig::default();
+        assert_eq!(model_from_config(&cfg).unwrap().name(), "invariant");
+        cfg.model = "congestion".into();
+        let m = model_from_config(&cfg).unwrap();
+        assert_eq!(m.name(), "congestion");
+        assert_eq!(m.time_dependence().epoch(), Some(cfg.epoch_cycles));
+        cfg.model = "dvfs".into();
+        assert_eq!(model_from_config(&cfg).unwrap().name(), "dvfs");
+        cfg.model = "congestion_dvfs".into();
+        assert_eq!(model_from_config(&cfg).unwrap().name(), "congestion_dvfs");
+        cfg.model = "quantum".into();
+        assert!(model_from_config(&cfg).is_err());
+    }
+}

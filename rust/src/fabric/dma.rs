@@ -21,14 +21,9 @@ impl Default for Dma {
 }
 
 impl Dma {
-    /// Start-time-aware transfer hook (event-driven co-sim contract):
-    /// delegates to [`Dma::transfer`] bit-for-bit today; `_start` is the
-    /// seam for TCDM-contention-aware staging models.
-    pub fn transfer_at(&self, bytes: u64, _start: Cycle) -> Metrics {
-        self.transfer(bytes)
-    }
-
-    /// Cost of one transfer of `bytes`.
+    /// Cost of one transfer of `bytes`. Time-invariant primitive — a
+    /// TCDM-contention-aware staging model would wrap the tile execute
+    /// path in [`super::cost::CostModel`] rather than hook here.
     pub fn transfer(&self, bytes: u64) -> Metrics {
         let mut m = Metrics::new();
         if bytes == 0 {

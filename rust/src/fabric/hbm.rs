@@ -28,16 +28,11 @@ impl Hbm {
         self.channels as f64 * self.gbs_per_channel
     }
 
-    /// Start-time-aware access hook for the event-driven co-simulator:
-    /// the analytic channel model is time-invariant, so this delegates to
-    /// [`Hbm::access`] bit-for-bit. `_start` is where a queue-depth- or
-    /// refresh-aware model would read the clock.
-    pub fn access_at(&self, bytes: u64, _start: crate::sim::Cycle) -> Metrics {
-        self.access(bytes)
-    }
-
     /// Cost of reading/writing `bytes` (channel-striped), at a 1 GHz
-    /// fabric reference clock.
+    /// fabric reference clock. Time-invariant primitive: queue-depth /
+    /// congestion awareness lives in [`super::cost::CostModel`]
+    /// (e.g. [`super::VaryingCost`] stretches the feed latency by the
+    /// previous epoch's resident-transfer integral).
     pub fn access(&self, bytes: u64) -> Metrics {
         let mut m = Metrics::new();
         if bytes == 0 {

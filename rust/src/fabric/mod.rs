@@ -12,14 +12,20 @@
 //!   work, at higher control overhead and TCDM banking contention.
 
 mod cluster;
+pub mod cost;
 mod dma;
 mod hbm;
 mod tile;
 
 pub use cluster::PulpCluster;
+pub use cost::{
+    CongestionKnobs, CostModel, DvfsKnobs, InvariantCost, Occupancy, TimeDependence, VaryingCost,
+};
 pub use dma::Dma;
 pub use hbm::Hbm;
-pub use tile::{Template, Tile};
+pub use tile::{Template, Tile, TileCost};
+
+use std::sync::Arc;
 
 use anyhow::bail;
 
@@ -27,10 +33,11 @@ use crate::accel::{Accelerator, CpuCore, CrossbarNvm, DigitalNpu, Neuromorphic, 
 use crate::config::FabricConfig;
 use crate::metrics::{Area, Category, Metrics};
 use crate::noc::{NodeId, Topology};
-use crate::sim::Cycle;
 use crate::Result;
 
-/// A built fabric instance: topology + placed tiles + memory.
+/// A built fabric instance: topology + placed tiles + memory, plus the
+/// configured [`CostModel`] every start-time-aware resource query of the
+/// co-simulation stack routes through (`[fabric.cost]`).
 pub struct Fabric {
     pub cfg: FabricConfig,
     pub topo: Topology,
@@ -38,6 +45,8 @@ pub struct Fabric {
     pub hbm: Hbm,
     /// NoC node hosting the HBM controller / host bridge.
     pub hbm_node: NodeId,
+    /// Configured cost model (engines may override per run/session).
+    cost: Arc<dyn CostModel>,
 }
 
 /// Construct the accelerator model for a config kind string.
@@ -79,7 +88,16 @@ impl Fabric {
             }
         }
         let hbm = Hbm::new(cfg.hbm_channels, cfg.hbm_bandwidth_gbps, cfg.hbm_energy_pj_per_byte);
-        Ok(Fabric { cfg, topo, tiles, hbm, hbm_node: 0 })
+        let cost = cost::model_from_config(&cfg.cost)?;
+        Ok(Fabric { cfg, topo, tiles, hbm, hbm_node: 0, cost })
+    }
+
+    /// The configured cost model (`[fabric.cost]`; [`InvariantCost`] by
+    /// default). Engines price through this unless handed an explicit
+    /// model (`coordinator::exec::cosim_with`,
+    /// `coordinator::admit::CosimSession::with_model`).
+    pub fn cost_model(&self) -> &Arc<dyn CostModel> {
+        &self.cost
     }
 
     /// Total silicon area (tiles + NoC routers at 0.05 mm² each + HBM phy).
@@ -92,8 +110,12 @@ impl Fabric {
 
     /// Analytic NoC transport cost for `bytes` from node `src` to `dst`:
     /// serialization at link bandwidth + per-hop pipeline latency, energy
-    /// per bit-hop (FlooNoC-calibrated). The coordinator uses this fast
-    /// path; E2 cross-checks it against the flit-level simulator.
+    /// per bit-hop (FlooNoC-calibrated). This is the **time-invariant
+    /// pricing primitive**: the mapper estimates with it directly, and
+    /// [`InvariantCost`] delegates to it bit-for-bit. Start-time-aware
+    /// pricing lives one layer up, in [`cost::CostModel`] — the engines
+    /// never call this directly anymore. E2 cross-checks the constants
+    /// against the flit-level simulator.
     pub fn transport(&self, src: NodeId, dst: NodeId, bytes: u64) -> Metrics {
         let mut m = Metrics::new();
         if src == dst || bytes == 0 {
@@ -116,33 +138,11 @@ impl Fabric {
         m
     }
 
-    /// Start-time-aware transport hook for the event-driven co-simulator
-    /// and the multi-program admission engine (`coordinator::admit`,
-    /// which prices every step at its true multi-program start cycle —
-    /// the first caller for which `start` carries real cross-program
-    /// congestion information). The analytic model is time-invariant
-    /// today, so this delegates to [`Fabric::transport`] bit-for-bit —
-    /// that invariance is load-bearing: it is what makes incremental
-    /// re-simulation's re-priced steps bit-identical to a from-scratch
-    /// run, and `tests/admission_golden.rs` pins it. A congestion- or
-    /// DVFS-aware model plugs in here without an engine signature
-    /// change, at the cost of widening the admission invalidation rule
-    /// (a time-varying model must invalidate everything scheduled after
-    /// the perturbation, not just the structural closure).
-    pub fn transport_at(&self, src: NodeId, dst: NodeId, bytes: u64, _start: Cycle) -> Metrics {
-        self.transport(src, dst, bytes)
-    }
-
-    /// Transport from HBM to a tile.
+    /// Transport from HBM to a tile (channel access + NoC leg) — the
+    /// time-invariant feed primitive ([`InvariantCost`] delegates here).
     pub fn feed(&self, tile: usize, bytes: u64) -> Metrics {
-        self.feed_at(tile, bytes, 0)
-    }
-
-    /// Start-time-aware HBM feed (see [`Fabric::transport_at`] for the
-    /// contract); routes through the start-aware HBM and transport hooks.
-    pub fn feed_at(&self, tile: usize, bytes: u64, start: Cycle) -> Metrics {
-        let mut m = self.hbm.access_at(bytes, start);
-        let t = self.transport_at(self.hbm_node, self.tiles[tile].node, bytes, start);
+        let mut m = self.hbm.access(bytes);
+        let t = self.transport(self.hbm_node, self.tiles[tile].node, bytes);
         // HBM access and NoC transfer pipeline: latency = max + overlap
         // fudge (serial command, streamed data) — we take the sum of
         // fixed latencies and the max of the streaming parts, which the

@@ -97,7 +97,11 @@ impl Tile {
         ((dev_cycles as f64) * self.fabric_ghz / self.accel.freq_ghz()).ceil() as u64
     }
 
-    /// Execute one compute op on this tile.
+    /// Execute one compute op on this tile — the **time-invariant
+    /// pricing primitive** (the start-time-aware seam moved up into
+    /// [`super::cost::CostModel::execute`], where a DVFS/thermal model
+    /// like [`super::VaryingCost`] stretches this base cost by the
+    /// tile's windowed busy integral).
     ///
     /// * Template A: every operand (weights included) streams over the
     ///   NoC, no overlap: latency = ctrl + transfer-in-accel-out serial.
@@ -109,16 +113,6 @@ impl Tile {
     /// * Template C: as B; elementwise ops run on the cluster cores
     ///   instead of the accelerator.
     pub fn execute(&self, c: &Compute, p: Precision) -> Result<TileCost> {
-        self.execute_at(c, p, 0)
-    }
-
-    /// Start-time-aware execute hook for the event-driven co-simulator:
-    /// `start` is the fabric cycle the invocation launches. The cost
-    /// model is time-invariant today (only the DMA staging hook sees the
-    /// clock, and it delegates too), so this is bit-identical to
-    /// [`Tile::execute`] — the parameter is the seam for DVFS/thermal-
-    /// aware accelerator models.
-    pub fn execute_at(&self, c: &Compute, p: Precision, start: crate::sim::Cycle) -> Result<TileCost> {
         let run_on_cluster = matches!(c, Compute::Elementwise { .. }) && self.cluster.is_some();
         if !run_on_cluster && !self.accel.supports(p) {
             bail!(
@@ -155,7 +149,7 @@ impl Tile {
             Template::B | Template::C => {
                 let weights_resident = (weights as usize) <= self.tcdm_bytes / 2;
                 let stream = if weights_resident { io } else { io + weights };
-                let dma = self.dma.transfer_at(stream, start);
+                let dma = self.dma.transfer(stream);
                 out.absorb_parallel(&dma.with_cycles(0));
                 // Double buffering: DMA overlaps compute.
                 (stream, accel_fabric_cycles.max(dma.cycles))

@@ -1,0 +1,408 @@
+//! Differential golden tests for the cost-model layer (`fabric::cost`).
+//!
+//! Contracts pinned here:
+//!
+//! * **Invariant bit-parity** — under [`InvariantCost`] (explicit or the
+//!   `[fabric.cost]` default), `cosim`, `cosim_with`, `cosim_ref`,
+//!   `cosim_ref_with` and a `CosimSession` all reproduce the
+//!   pre-cost-layer reports bit for bit across the full
+//!   mlp/vit × RoundRobin/Greedy/Ilp × edge16/homogeneous matrix.
+//! * **Cross-engine fixed-point agreement** — under congestion/DVFS
+//!   models, the event engine's single self-consistent pass, the
+//!   iterated (Jacobi) list scheduler and the admission session's
+//!   horizon-invalidation + settle loop reach the *same* unique fixed
+//!   point, bit for bit.
+//! * **Incremental ≡ from-scratch** — random admit/replace/partial-drain
+//!   interleavings under time-varying models bit-match a session built
+//!   from scratch with the same final programs and times (the horizon
+//!   invalidation rule's exactness), including under the Priority
+//!   policy.
+//! * **TOML plumbing** — `configs/edge16_loaded.toml` builds the
+//!   congestion+DVFS model and prices through it end to end.
+
+use archytas::accel::{Compute, Precision};
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::compiler::{FabricProgram, Step};
+use archytas::coordinator::{
+    cosim, cosim_ref, cosim_ref_with, cosim_with, AdmitMeta, AdmitPolicy, CosimSession, ExecReport,
+};
+use archytas::fabric::{
+    CongestionKnobs, CostModel, DvfsKnobs, Fabric, InvariantCost, VaryingCost,
+};
+use archytas::sim::{Cycle, Rng};
+use archytas::testutil::{bundled_fabric, prop};
+use archytas::workloads;
+
+const CONFIGS: [&str; 2] = ["edge16.toml", "homogeneous_npu.toml"];
+const STRATEGIES: [MapStrategy; 3] =
+    [MapStrategy::RoundRobin, MapStrategy::Greedy, MapStrategy::Ilp];
+
+fn workload(name: &str) -> archytas::ir::Graph {
+    match name {
+        "mlp" => workloads::mlp(4, 64, &[32], 10, 7).unwrap(),
+        "vit" => {
+            let p = workloads::VitParams {
+                batch: 2,
+                tokens: 8,
+                dim: 32,
+                depth: 1,
+                mlp_ratio: 2,
+                patch_dim: 16,
+                classes: 10,
+            };
+            workloads::vit(&p, 3).unwrap()
+        }
+        other => panic!("unknown workload {other}"),
+    }
+}
+
+fn lowered(fabric: &Fabric, wname: &str, strategy: MapStrategy) -> FabricProgram {
+    let g = workload(wname);
+    let m = map_graph(&g, fabric, strategy, Precision::Int8).unwrap();
+    lower(&g, fabric, &m).unwrap()
+}
+
+/// The three time-varying model shapes, on a deliberately short epoch so
+/// the small test workloads cross many epoch boundaries.
+fn varying_models() -> Vec<(&'static str, VaryingCost)> {
+    let cong = CongestionKnobs { alpha: 0.5, cap: 4.0 };
+    let dvfs = DvfsKnobs {
+        window: 3,
+        warm_frac: 0.4,
+        hot_frac: 0.8,
+        warm_scale: 0.75,
+        hot_scale: 0.5,
+    };
+    vec![
+        ("congestion", VaryingCost::congestion(256, cong)),
+        ("dvfs", VaryingCost::dvfs(256, dvfs)),
+        ("congestion_dvfs", VaryingCost::congestion_dvfs(256, cong, dvfs)),
+    ]
+}
+
+fn assert_identical(a: &ExecReport, b: &ExecReport, tag: &str) {
+    assert_eq!(a.cycles, b.cycles, "{tag}: makespan");
+    assert_eq!(a.step_done, b.step_done, "{tag}: step_done");
+    assert_eq!(a.tile_busy, b.tile_busy, "{tag}: tile_busy");
+    assert_eq!(
+        a.metrics.total_energy_pj().to_bits(),
+        b.metrics.total_energy_pj().to_bits(),
+        "{tag}: energy bits"
+    );
+    assert!(a.bit_identical(b), "{tag}: bit_identical contract");
+}
+
+/// (a) Invariant bit-parity: the explicit-model entry points and the
+/// session must all match the default paths bit for bit across the full
+/// golden matrix — the refactor moved the pricing seam without moving a
+/// single bit.
+#[test]
+fn invariant_model_bit_parity_across_matrix() {
+    let model = InvariantCost;
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        assert_eq!(fabric.cost_model().name(), "invariant", "{cfg}: default model");
+        for wname in ["mlp", "vit"] {
+            for strategy in STRATEGIES {
+                let tag = format!("{cfg}/{wname}/{strategy:?}");
+                let prog = lowered(&fabric, wname, strategy);
+                let base = cosim(&fabric, &prog).unwrap();
+                assert_identical(
+                    &cosim_with(&fabric, &prog, &model).unwrap(),
+                    &base,
+                    &format!("{tag}: cosim_with(invariant)"),
+                );
+                assert_identical(
+                    &cosim_ref(&fabric, &prog).unwrap(),
+                    &base,
+                    &format!("{tag}: cosim_ref"),
+                );
+                assert_identical(
+                    &cosim_ref_with(&fabric, &prog, &model).unwrap(),
+                    &base,
+                    &format!("{tag}: cosim_ref_with(invariant)"),
+                );
+                let mut s = CosimSession::with_model(&fabric, std::sync::Arc::new(InvariantCost));
+                s.admit_at(&prog, 0).unwrap();
+                assert_identical(
+                    &s.report().unwrap(),
+                    &base,
+                    &format!("{tag}: session(invariant)"),
+                );
+            }
+        }
+    }
+}
+
+/// (b) Cross-engine fixed-point agreement at t=0: three engines with
+/// three different iteration strategies must land on identical bits —
+/// the unique self-consistent schedule of the strictly-earlier-epoch
+/// contract.
+#[test]
+fn varying_models_agree_across_engines_at_t0() {
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        for (wname, strategy) in [("mlp", MapStrategy::Greedy), ("vit", MapStrategy::RoundRobin)] {
+            let prog = lowered(&fabric, wname, strategy);
+            for (mname, model) in varying_models() {
+                let tag = format!("{cfg}/{wname}/{mname}");
+                let ev = cosim_with(&fabric, &prog, &model).unwrap();
+                let re = cosim_ref_with(&fabric, &prog, &model).unwrap();
+                assert_identical(&ev, &re, &format!("{tag}: event vs iterated-list"));
+                let mut s = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+                s.admit_at(&prog, 0).unwrap();
+                let se = s.report().unwrap();
+                assert_identical(&se, &ev, &format!("{tag}: session vs event"));
+            }
+        }
+    }
+}
+
+/// Sanity: the models actually bite, on schedules built to force it.
+/// A serial HBM load chain keeps a transfer resident in every epoch, so
+/// congestion must stretch every post-epoch-0 load; a serial exec chain
+/// keeps its tile ~100% busy, so DVFS must throttle it. Ops/bytes stay
+/// schedule-invariant — only time moves.
+#[test]
+fn varying_models_actually_change_schedules() {
+    let fabric = bundled_fabric("edge16.toml");
+    // 10 back-to-back 64 KiB loads: each takes >100 cycles (HBM latency
+    // floor), so with a 128-cycle epoch some load is resident in every
+    // epoch of the chain.
+    let load_chain = FabricProgram {
+        steps: (0..10)
+            .map(|i| Step::Load {
+                tile: 0,
+                bytes: 64 * 1024,
+                node: 0,
+                deps: if i == 0 { vec![] } else { vec![i - 1] },
+            })
+            .collect(),
+        producer: Vec::new(),
+    };
+    // 10 back-to-back matmuls on tile 0: >=300 control cycles each, so
+    // the tile busy fraction saturates the DVFS window.
+    let exec_chain = FabricProgram {
+        steps: (0..10)
+            .map(|i| Step::Exec {
+                tile: 0,
+                node: 0,
+                compute: Compute::MatMul { m: 16, k: 64, n: 32 },
+                precision: Precision::Int8,
+                deps: if i == 0 { vec![] } else { vec![i - 1] },
+            })
+            .collect(),
+        producer: Vec::new(),
+    };
+    let run = |prog: &FabricProgram, model: Option<VaryingCost>| {
+        let mut s = match model {
+            Some(m) => CosimSession::with_model(&fabric, std::sync::Arc::new(m)),
+            None => CosimSession::new(&fabric),
+        };
+        s.admit_at(prog, 0).unwrap();
+        s.report().unwrap()
+    };
+    let base_load = run(&load_chain, None);
+    let congested = run(
+        &load_chain,
+        Some(VaryingCost::congestion(128, CongestionKnobs { alpha: 1.0, cap: 8.0 })),
+    );
+    assert!(
+        congested.cycles > base_load.cycles,
+        "congestion must stretch the load chain: {} vs {}",
+        congested.cycles,
+        base_load.cycles
+    );
+    let base_exec = run(&exec_chain, None);
+    let throttled = run(
+        &exec_chain,
+        Some(VaryingCost::dvfs(
+            128,
+            DvfsKnobs { window: 4, warm_frac: 0.2, hot_frac: 0.5, warm_scale: 0.8, hot_scale: 0.4 },
+        )),
+    );
+    assert!(
+        throttled.cycles > base_exec.cycles,
+        "DVFS must throttle the hot tile: {} vs {}",
+        throttled.cycles,
+        base_exec.cycles
+    );
+    // Ops/bytes are schedule-invariant; only time moved.
+    assert_eq!(congested.metrics.ops, base_load.metrics.ops);
+    assert_eq!(congested.metrics.bytes_moved, base_load.metrics.bytes_moved);
+    assert_eq!(throttled.metrics.ops, base_exec.metrics.ops);
+    assert_eq!(throttled.metrics.bytes_moved, base_exec.metrics.bytes_moved);
+}
+
+/// Random synthetic DAG program over `nt` tiles (forward deps only),
+/// mirroring the admission property generator.
+fn random_program(rng: &mut Rng, nt: usize) -> FabricProgram {
+    let n = rng.below(12) + 1;
+    let mut steps = Vec::new();
+    for i in 0..n {
+        let mut deps: Vec<usize> = Vec::new();
+        if i > 0 {
+            for _ in 0..rng.below(3) {
+                deps.push(rng.below(i));
+            }
+        }
+        let step = match rng.below(3) {
+            0 => Step::Load {
+                tile: rng.below(nt),
+                bytes: (rng.below(4000) + 1) as u64,
+                node: 0,
+                deps,
+            },
+            1 => Step::Transfer {
+                from: rng.below(nt),
+                to: rng.below(nt),
+                bytes: (rng.below(4000) + 1) as u64,
+                node: 0,
+                deps,
+            },
+            _ => Step::Exec {
+                tile: rng.below(nt),
+                node: 0,
+                compute: Compute::MatMul {
+                    m: rng.below(8) + 1,
+                    k: rng.below(8) + 1,
+                    n: rng.below(8) + 1,
+                },
+                precision: Precision::Int8,
+                deps,
+            },
+        };
+        steps.push(step);
+    }
+    FabricProgram { steps, producer: Vec::new() }
+}
+
+fn small_fabric() -> Fabric {
+    Fabric::build(
+        archytas::config::FabricConfig::from_toml(
+            "[noc]\nwidth = 3\nheight = 3\n\
+             [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+/// (c) Random-perturbation property sweep: incremental sessions under
+/// every time-varying model — admissions at random times (including the
+/// simulated past), replaces and partial drains — must bit-match a
+/// from-scratch session with the same final programs and times. This is
+/// the horizon-invalidation + settle exactness contract.
+#[test]
+fn prop_varying_incremental_matches_from_scratch() {
+    let fabric = small_fabric();
+    let nt = fabric.tile_count();
+    for (mname, model) in varying_models() {
+        prop::check(15, |rng| {
+            let mut inc = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+            let mut current: Vec<(FabricProgram, Cycle)> = Vec::new();
+            let mut handles = Vec::new();
+            for _ in 0..rng.below(6) + 1 {
+                let roll = rng.below(10);
+                if roll < 5 || current.is_empty() {
+                    let p = random_program(rng, nt);
+                    let at = rng.below(3000) as Cycle;
+                    handles.push(inc.admit_at(&p, at).map_err(|e| e.to_string())?);
+                    current.push((p, at));
+                } else if roll < 7 {
+                    let slot = rng.below(current.len());
+                    let p = random_program(rng, nt);
+                    let at = rng.below(3000) as Cycle;
+                    inc.replace(handles[slot], &p, at).map_err(|e| e.to_string())?;
+                    current[slot] = (p, at);
+                } else if roll < 9 {
+                    inc.run_to_drain().map_err(|e| e.to_string())?;
+                } else {
+                    inc.run_until(rng.below(4000) as Cycle).map_err(|e| e.to_string())?;
+                }
+            }
+            let got = inc.report().map_err(|e| e.to_string())?;
+            let mut fresh = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+            for (p, at) in &current {
+                fresh.admit_at(p, *at).map_err(|e| e.to_string())?;
+            }
+            let want = fresh.report().map_err(|e| e.to_string())?;
+            if !got.bit_identical(&want) {
+                return Err(format!(
+                    "{mname}: incremental diverged: cycles {} vs {}, steps {:?} vs {:?}",
+                    got.cycles, want.cycles, got.step_done, want.step_done
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+/// The same exactness under a non-FIFO queue key: Priority policy with
+/// random priorities, time-varying pricing, incremental vs from-scratch.
+#[test]
+fn prop_priority_policy_varying_matches_from_scratch() {
+    let fabric = small_fabric();
+    let nt = fabric.tile_count();
+    let model = VaryingCost::congestion(256, CongestionKnobs { alpha: 0.5, cap: 4.0 });
+    prop::check(10, |rng| {
+        let mut inc = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+        inc.set_policy(AdmitPolicy::Priority).map_err(|e| e.to_string())?;
+        let mut current: Vec<(FabricProgram, Cycle, AdmitMeta)> = Vec::new();
+        for _ in 0..rng.below(5) + 1 {
+            let p = random_program(rng, nt);
+            let at = rng.below(2000) as Cycle;
+            let meta = AdmitMeta { priority: rng.below(4) as u32, ..Default::default() };
+            inc.admit_with(&p, at, meta).map_err(|e| e.to_string())?;
+            if rng.below(2) == 0 {
+                inc.run_until(rng.below(3000) as Cycle).map_err(|e| e.to_string())?;
+            }
+            current.push((p, at, meta));
+        }
+        let got = inc.report().map_err(|e| e.to_string())?;
+        let mut fresh = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+        fresh.set_policy(AdmitPolicy::Priority).map_err(|e| e.to_string())?;
+        for (p, at, meta) in &current {
+            fresh.admit_with(p, *at, *meta).map_err(|e| e.to_string())?;
+        }
+        let want = fresh.report().map_err(|e| e.to_string())?;
+        if !got.bit_identical(&want) {
+            return Err(format!(
+                "priority+varying diverged: cycles {} vs {}",
+                got.cycles, want.cycles
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// (d) TOML plumbing: the bundled loaded config builds the combined
+/// model, `cosim` prices through it implicitly, and the knobs round-trip
+/// (an explicitly constructed model with the same knobs reproduces the
+/// bits).
+#[test]
+fn loaded_config_prices_through_the_configured_model() {
+    let fabric = bundled_fabric("edge16_loaded.toml");
+    assert_eq!(fabric.cost_model().name(), "congestion_dvfs");
+    let prog = lowered(&fabric, "vit", MapStrategy::Greedy);
+    let implicit = cosim(&fabric, &prog).unwrap();
+    let explicit = VaryingCost::congestion_dvfs(
+        512,
+        CongestionKnobs { alpha: 0.5, cap: 4.0 },
+        DvfsKnobs { window: 4, warm_frac: 0.5, hot_frac: 0.85, warm_scale: 0.75, hot_scale: 0.5 },
+    );
+    assert_identical(
+        &cosim_with(&fabric, &prog, &explicit).unwrap(),
+        &implicit,
+        "edge16_loaded: TOML knobs vs explicit model",
+    );
+    // And the invariant floor is never slower than the loaded pricing.
+    let floor = cosim_with(&fabric, &prog, &InvariantCost).unwrap();
+    assert!(implicit.cycles >= floor.cycles);
+    // The session default follows the fabric config too.
+    let mut s = CosimSession::new(&fabric);
+    assert_eq!(s.cost_model().name(), "congestion_dvfs");
+    s.admit_at(&prog, 0).unwrap();
+    assert_identical(&s.report().unwrap(), &implicit, "edge16_loaded: session default model");
+}
