@@ -1,0 +1,371 @@
+//! E-FAULT — fault-injection overhead and recovery-policy comparison.
+//!
+//! Three sections, golden-checked the same way `bench_admission` is
+//! (panic on any bit divergence, so CI fails loudly):
+//!
+//! * **empty-plan overhead**: a K-program staggered stream through a
+//!   plain `CosimSession` vs a `FaultySession` carrying an empty
+//!   `FaultPlan` — the robustness layer's zero-cost claim, bit-checked
+//!   (`tests/fault_golden.rs` pins the same contract across the matrix);
+//! * **recovery policies**: the same stream under a seeded fault trace
+//!   (transients, deaths, link/HBM pricing) for each `RecoveryPolicy`,
+//!   reporting wall time plus the degradation telemetry per policy;
+//! * **replay**: the seeded trace admitted incrementally (pause before
+//!   each arrival) vs a from-scratch oracle fed everything upfront —
+//!   the incremental ≡ from-scratch determinism contract under time.
+//!
+//! Besides the human table the bench emits `BENCH_faults.json` next to
+//! the crate manifest: a machine-checkable evidence bundle (golden
+//! verdicts + timings + degradation reports + stamp) so the
+//! perf/robustness trajectory is diffable across commits.
+
+#[path = "util.rs"]
+mod util;
+
+use std::sync::Arc;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::compiler::FabricProgram;
+use archytas::coordinator::{
+    CosimSession, DegradationReport, ExecReport, FaultySession, RecoveryPolicy,
+};
+use archytas::fabric::Fabric;
+use archytas::sim::{Cycle, FaultConfig, FaultPlan};
+use archytas::testutil::bundled_fabric;
+use archytas::workloads;
+
+const CONFIG: &str = "edge16.toml";
+const K: usize = 32;
+/// Inter-arrival gap of the request stream (cycles).
+const GAP: Cycle = 300;
+
+const POLICIES: [RecoveryPolicy; 4] = [
+    RecoveryPolicy::Retry,
+    RecoveryPolicy::Remap,
+    RecoveryPolicy::DeadlineAware,
+    RecoveryPolicy::Shed,
+];
+
+/// K small heterogeneous requests (three mlp shapes cycled, the
+/// `bench_admission` stream) with staggered arrivals.
+fn request_stream(fabric: &Fabric, k: usize) -> Vec<(FabricProgram, Cycle)> {
+    let shapes: Vec<FabricProgram> = [(4usize, 64usize, 32usize), (8, 32, 16), (2, 48, 24)]
+        .iter()
+        .enumerate()
+        .map(|(i, &(b, inp, hid))| {
+            let g = workloads::mlp(b, inp, &[hid], 10, i as u64 + 1).unwrap();
+            let m = map_graph(&g, fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+            lower(&g, fabric, &m).unwrap()
+        })
+        .collect();
+    (0..k)
+        .map(|i| (shapes[i % shapes.len()].clone(), i as Cycle * GAP))
+        .collect()
+}
+
+/// The seeded trace every faulty row replays: behavioral faults
+/// (transients + deaths) and pricing faults (link degrade/fail, HBM
+/// brownout) over a horizon covering the whole staggered stream.
+fn seeded_cfg() -> FaultConfig {
+    FaultConfig {
+        seed: 42,
+        horizon: 1 << 15,
+        window: 1024,
+        p_transient: 0.02,
+        p_death: 0.005,
+        p_link_degrade: 0.01,
+        p_link_fail: 0.002,
+        p_hbm_brownout: 0.01,
+        p_crossbar_drift: 0.02,
+        ..FaultConfig::default()
+    }
+}
+
+fn golden_check(ok: bool, tag: &str) {
+    println!("  golden match ({tag}): {}", if ok { "ok" } else { "MISMATCH" });
+    assert!(ok, "{tag}: diverged");
+}
+
+/// Empty-plan overhead: both sessions get the identical call sequence
+/// (admit everything upfront, one drain) and must produce identical
+/// bits. Returns (fault-free secs, empty-plan secs).
+fn overhead_row(fabric: &Fabric, progs: &[(FabricProgram, Cycle)]) -> (f64, f64) {
+    let iters = 5;
+    let mut base_rep = None;
+    let base = util::time_avg(iters, || {
+        let mut s = CosimSession::new(fabric);
+        for (p, at) in progs {
+            s.admit_at(p, *at).unwrap();
+        }
+        base_rep = Some(s.report().unwrap());
+    });
+    let mut empty_rep = None;
+    let empty = util::time_avg(iters, || {
+        let mut s = FaultySession::with_plan(
+            fabric,
+            FaultPlan::empty(),
+            &FaultConfig::default(),
+            RecoveryPolicy::Retry,
+        )
+        .unwrap();
+        assert!(
+            Arc::ptr_eq(s.cost_model(), fabric.cost_model()),
+            "an empty plan must not wrap the cost model"
+        );
+        for (p, at) in progs {
+            s.admit_at(p, *at).unwrap();
+        }
+        empty_rep = Some(s.report().unwrap());
+    });
+
+    println!("\n-- empty-plan overhead: {CONFIG}, {K} staggered programs --");
+    println!(
+        "  fault-free session: {:>10}/stream  =  {:>9.0} programs/sec",
+        util::fmt_time(base),
+        K as f64 / base
+    );
+    println!(
+        "  empty-plan faulty:  {:>10}/stream  =  {:>9.0} programs/sec  ({:.2}x fault-free)",
+        util::fmt_time(empty),
+        K as f64 / empty,
+        empty / base
+    );
+    let identical = empty_rep.unwrap().bit_identical(&base_rep.unwrap());
+    golden_check(identical, "empty plan vs fault-free");
+    (base, empty)
+}
+
+/// One timed episode per recovery policy under the seeded trace.
+fn policy_rows(
+    fabric: &Fabric,
+    progs: &[(FabricProgram, Cycle)],
+    cfg: &FaultConfig,
+    base: f64,
+) -> Vec<(RecoveryPolicy, f64, ExecReport, DegradationReport)> {
+    println!("\n-- recovery policies under the seeded trace (seed {}, horizon {}) --", cfg.seed, cfg.horizon);
+    println!(
+        "  {:<14} {:>10} {:>9}  {:>4} {:>4} {:>4} {:>5}  {:>4} {:>4} {:>4} {:>5}  {:>6}",
+        "policy", "time", "prog/s", "done", "shed", "rmap", "retry", "inj", "eff", "mask", "price", "avail"
+    );
+    let iters = 3;
+    let mut rows = Vec::new();
+    for policy in POLICIES {
+        let mut out = None;
+        let secs = util::time_avg(iters, || {
+            let mut s = FaultySession::new(fabric, cfg, policy).unwrap();
+            for (p, at) in progs {
+                s.admit_at(p, *at).unwrap();
+            }
+            let rep = s.report().unwrap();
+            let deg = s.degradation(&rep);
+            out = Some((rep, deg));
+        });
+        let (rep, deg) = out.unwrap();
+        // Structural invariants of the telemetry (the episode-specific
+        // values are data, not assertions — seeds change across PRs).
+        assert_eq!(deg.completed + deg.shed, deg.programs, "{policy:?}: request conservation");
+        assert_eq!(
+            deg.faults_masked + deg.faults_effective + deg.pricing_events,
+            deg.faults_injected,
+            "{policy:?}: fault conservation"
+        );
+        println!(
+            "  {:<14} {:>10} {:>9.0}  {:>4} {:>4} {:>4} {:>5}  {:>4} {:>4} {:>4} {:>5}  {:>6.3}",
+            format!("{policy:?}"),
+            util::fmt_time(secs),
+            K as f64 / secs,
+            deg.completed,
+            deg.shed,
+            deg.remapped,
+            deg.transient_retries,
+            deg.faults_injected,
+            deg.faults_effective,
+            deg.faults_masked,
+            deg.pricing_events,
+            deg.availability
+        );
+        rows.push((policy, secs, rep, deg));
+    }
+    println!("  (seeded overhead vs fault-free: {:.2}x .. {:.2}x)",
+        rows.iter().map(|r| r.1 / base).fold(f64::INFINITY, f64::min),
+        rows.iter().map(|r| r.1 / base).fold(0.0, f64::max));
+    rows
+}
+
+/// Incremental replay vs from-scratch oracle on the seeded trace:
+/// the bit-identity contract of `tests/fault_golden.rs`, timed.
+fn replay_row(fabric: &Fabric, progs: &[(FabricProgram, Cycle)], cfg: &FaultConfig) -> (f64, f64) {
+    let iters = 3;
+    let mut oracle_out = None;
+    let oracle = util::time_avg(iters, || {
+        let mut s = FaultySession::new(fabric, cfg, RecoveryPolicy::Retry).unwrap();
+        for (p, at) in progs {
+            s.admit_at(p, *at).unwrap();
+        }
+        let rep = s.report().unwrap();
+        let deg = s.degradation(&rep);
+        oracle_out = Some((rep, deg));
+    });
+    let mut inc_out = None;
+    let incremental = util::time_avg(iters, || {
+        let mut s = FaultySession::new(fabric, cfg, RecoveryPolicy::Retry).unwrap();
+        // Drain to just before each arrival, then admit: fault events due
+        // by then are applied mid-stream, never past the next admission
+        // (the fault floor stays below every arrival by construction).
+        for (p, at) in progs {
+            s.run_until(at.saturating_sub(1)).unwrap();
+            s.admit_at(p, *at).unwrap();
+        }
+        let rep = s.report().unwrap();
+        let deg = s.degradation(&rep);
+        inc_out = Some((rep, deg));
+    });
+
+    println!("\n-- incremental fault replay vs from-scratch oracle (Retry) --");
+    println!(
+        "  from-scratch: {:>10}/stream  =  {:>9.0} programs/sec",
+        util::fmt_time(oracle),
+        K as f64 / oracle
+    );
+    println!(
+        "  incremental:  {:>10}/stream  =  {:>9.0} programs/sec",
+        util::fmt_time(incremental),
+        K as f64 / incremental
+    );
+    let (orep, odeg) = oracle_out.unwrap();
+    let (irep, ideg) = inc_out.unwrap();
+    golden_check(
+        irep.bit_identical(&orep) && ideg == odeg,
+        "incremental vs from-scratch (report + degradation)",
+    );
+    (oracle, incremental)
+}
+
+fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string() // JSON has no Infinity/NaN
+    }
+}
+
+fn report_json(r: &ExecReport) -> String {
+    format!(
+        "{{\"cycles\":{},\"exec_steps\":{},\"energy_pj\":{},\"mean_utilization\":{}}}",
+        r.cycles,
+        r.exec_steps,
+        jf(r.metrics.total_energy_pj()),
+        jf(r.mean_utilization())
+    )
+}
+
+fn degradation_json(d: &DegradationReport) -> String {
+    format!(
+        concat!(
+            "{{\"programs\":{},\"completed\":{},\"retried\":{},\"remapped\":{},",
+            "\"shed\":{},\"deadline_violated\":{},\"transient_retries\":{},",
+            "\"faults_injected\":{},\"faults_masked\":{},\"faults_effective\":{},",
+            "\"pricing_events\":{},\"availability\":{},",
+            "\"mean_cycles_between_effective\":{}}}"
+        ),
+        d.programs,
+        d.completed,
+        d.retried,
+        d.remapped,
+        d.shed,
+        d.deadline_violated,
+        d.transient_retries,
+        d.faults_injected,
+        d.faults_masked,
+        d.faults_effective,
+        d.pricing_events,
+        jf(d.availability),
+        jf(d.mean_cycles_between_effective)
+    )
+}
+
+/// The archsim-style evidence bundle: golden verdicts + timings +
+/// per-policy reports + a stamp tying the numbers to their inputs.
+fn write_bundle(
+    cfg: &FaultConfig,
+    base: f64,
+    empty: f64,
+    rows: &[(RecoveryPolicy, f64, ExecReport, DegradationReport)],
+    oracle: f64,
+    incremental: f64,
+) {
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let policies: Vec<String> = rows
+        .iter()
+        .map(|(policy, secs, rep, deg)| {
+            format!(
+                concat!(
+                    "    {{\"policy\":\"{:?}\",\"secs\":{},\"programs_per_sec\":{},",
+                    "\"overhead_vs_fault_free\":{},\"report\":{},\"degradation\":{}}}"
+                ),
+                policy,
+                jf(*secs),
+                jf(K as f64 / secs),
+                jf(secs / base),
+                report_json(rep),
+                degradation_json(deg)
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"archytas.bench_faults.v1\",\n",
+            "  \"stamp\": {{\"unix_secs\":{},\"config\":\"{}\",\"programs\":{},",
+            "\"arrival_gap_cycles\":{},\"fault_seed\":{},\"horizon\":{},\"window\":{}}},\n",
+            "  \"golden\": {{\"empty_plan_bit_identical\":true,",
+            "\"incremental_matches_from_scratch\":true}},\n",
+            "  \"fault_free\": {{\"secs\":{},\"programs_per_sec\":{}}},\n",
+            "  \"empty_plan\": {{\"secs\":{},\"programs_per_sec\":{},\"overhead\":{}}},\n",
+            "  \"policies\": [\n{}\n  ],\n",
+            "  \"replay\": {{\"from_scratch_secs\":{},\"incremental_secs\":{}}}\n",
+            "}}\n"
+        ),
+        stamp,
+        CONFIG,
+        K,
+        GAP,
+        cfg.seed,
+        cfg.horizon,
+        cfg.window,
+        jf(base),
+        jf(K as f64 / base),
+        jf(empty),
+        jf(K as f64 / empty),
+        jf(empty / base),
+        policies.join(",\n"),
+        jf(oracle),
+        jf(incremental)
+    );
+    let path = archytas::repo_root().join("BENCH_faults.json");
+    std::fs::write(&path, json).expect("writing BENCH_faults.json");
+    println!("\nwrote {}", path.display());
+}
+
+fn main() {
+    util::banner(
+        "E-FAULT",
+        "fault-injection overhead + recovery policies (golden-checked)",
+    );
+    let fabric = bundled_fabric(CONFIG);
+    let progs = request_stream(&fabric, K);
+    let cfg = seeded_cfg();
+    let (base, empty) = overhead_row(&fabric, &progs);
+    let rows = policy_rows(&fabric, &progs, &cfg, base);
+    let (oracle, incremental) = replay_row(&fabric, &progs, &cfg);
+    write_bundle(&cfg, base, empty, &rows, oracle, incremental);
+    println!("\nexpected shape: the empty plan rides the plain session's code path");
+    println!("(same bits, ~1x wall time); a seeded trace pays for retraction +");
+    println!("re-pricing on each behavioral fault; incremental replay bit-matches");
+    println!("the from-scratch oracle, so fault episodes are replayable evidence.");
+}

@@ -115,7 +115,10 @@ impl Default for CostConfig {
 }
 
 impl CostConfig {
-    fn validate(&self) -> Result<()> {
+    /// Range/NaN validation, with messages naming the `[fabric.cost]`
+    /// key at fault. Public so `fabric::cost::model_from_config` can
+    /// re-check hand-built configs that never passed the TOML loader.
+    pub fn validate(&self) -> Result<()> {
         let known = ["invariant", "congestion", "dvfs", "congestion_dvfs"];
         if !known.contains(&self.model.as_str()) {
             bail!(
@@ -131,10 +134,14 @@ impl CostConfig {
                 self.epoch_cycles
             );
         }
-        // Spelled so a NaN knob is rejected too (NaN compares false).
-        let ge = |x: f64, lo: f64| x.partial_cmp(&lo).is_some_and(std::cmp::Ordering::is_ge);
-        if !ge(self.alpha, 0.0) || !ge(self.cap, 1.0) {
-            bail!("fabric.cost: alpha must be >= 0 and cap >= 1");
+        // is_finite() rejects NaN and the infinities a hand-built config
+        // could carry (the loader already refuses non-finite literals).
+        let ge = |x: f64, lo: f64| x.is_finite() && x >= lo;
+        if !ge(self.alpha, 0.0) {
+            bail!("fabric.cost.alpha must be finite and >= 0, got {}", self.alpha);
+        }
+        if !ge(self.cap, 1.0) {
+            bail!("fabric.cost.cap must be finite and >= 1, got {}", self.cap);
         }
         if self.window_epochs == 0 || self.window_epochs > 4096 {
             bail!(
@@ -149,6 +156,97 @@ impl CostConfig {
         let scale_ok = |s: f64| s > 0.0 && s <= 1.0;
         if !scale_ok(self.warm_scale) || !scale_ok(self.hot_scale) {
             bail!("fabric.cost: throttle scales must lie in (0, 1]");
+        }
+        Ok(())
+    }
+}
+
+/// TOML half of [`crate::sim::FaultConfig`] (`[fault]` section): parsing
+/// and validation live here with the rest of the schema code; the type
+/// itself is defined in `sim::fault` next to the generator it seeds.
+/// The section is opt-in — an absent `[fault]` is the inert default
+/// (zero horizon, zero rates: no faults, and the co-sim stack takes the
+/// exact fault-free code path).
+impl crate::sim::FaultConfig {
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            seed: doc.get_int("fault.seed", d.seed as i64) as u64,
+            horizon: doc.get_int("fault.horizon_cycles", d.horizon as i64) as u64,
+            window: doc.get_int("fault.window_cycles", d.window as i64) as u64,
+            p_transient: doc.get_float("fault.p_transient", d.p_transient),
+            p_death: doc.get_float("fault.p_death", d.p_death),
+            p_link_degrade: doc.get_float("fault.p_link_degrade", d.p_link_degrade),
+            p_link_fail: doc.get_float("fault.p_link_fail", d.p_link_fail),
+            p_hbm_brownout: doc.get_float("fault.p_hbm_brownout", d.p_hbm_brownout),
+            p_crossbar_drift: doc.get_float("fault.p_crossbar_drift", d.p_crossbar_drift),
+            p_photonic_thermal: doc
+                .get_float("fault.p_photonic_thermal", d.p_photonic_thermal),
+            degrade_factor: doc.get_float("fault.degrade_factor", d.degrade_factor),
+            degrade_cycles: doc.get_int("fault.degrade_cycles", d.degrade_cycles as i64) as u64,
+            brownout_factor: doc.get_float("fault.brownout_factor", d.brownout_factor),
+            brownout_cycles: doc.get_int("fault.brownout_cycles", d.brownout_cycles as i64)
+                as u64,
+            drift_factor: doc.get_float("fault.drift_factor", d.drift_factor),
+            drift_cycles: doc.get_int("fault.drift_cycles", d.drift_cycles as i64) as u64,
+            thermal_factor: doc.get_float("fault.thermal_factor", d.thermal_factor),
+            thermal_cycles: doc.get_int("fault.thermal_cycles", d.thermal_cycles as i64) as u64,
+            detect_cycles: doc.get_int("fault.detect_cycles", d.detect_cycles as i64) as u64,
+            max_retries: doc.get_int("fault.max_retries", d.max_retries as i64) as u32,
+            backoff_base: doc.get_int("fault.backoff_base", d.backoff_base as i64) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Range/NaN validation, messages naming the `[fault]` key at fault.
+    pub fn validate(&self) -> Result<()> {
+        for (key, p) in [
+            ("fault.p_transient", self.p_transient),
+            ("fault.p_death", self.p_death),
+            ("fault.p_link_degrade", self.p_link_degrade),
+            ("fault.p_link_fail", self.p_link_fail),
+            ("fault.p_hbm_brownout", self.p_hbm_brownout),
+            ("fault.p_crossbar_drift", self.p_crossbar_drift),
+            ("fault.p_photonic_thermal", self.p_photonic_thermal),
+        ] {
+            // contains() is false for NaN, so a NaN rate is rejected too.
+            if !(0.0..=1.0).contains(&p) {
+                bail!("{key} must lie in [0, 1], got {p}");
+            }
+        }
+        for (key, f) in [
+            ("fault.degrade_factor", self.degrade_factor),
+            ("fault.brownout_factor", self.brownout_factor),
+            ("fault.drift_factor", self.drift_factor),
+            ("fault.thermal_factor", self.thermal_factor),
+        ] {
+            if !(f.is_finite() && (1.0..=1.0e6).contains(&f)) {
+                bail!("{key} must be finite and lie in [1, 1e6], got {f}");
+            }
+        }
+        // Upper bounds also catch negative TOML values wrapping through
+        // the i64 -> u64 cast into huge counts (the noc.threads lesson).
+        if self.window == 0 || self.window > 1_000_000_000 {
+            bail!("fault.window_cycles must be in 1..=1e9, got {}", self.window);
+        }
+        if self.horizon > 1_000_000_000_000 {
+            bail!("fault.horizon_cycles must be <= 1e12, got {}", self.horizon);
+        }
+        for (key, c) in [
+            ("fault.degrade_cycles", self.degrade_cycles),
+            ("fault.brownout_cycles", self.brownout_cycles),
+            ("fault.drift_cycles", self.drift_cycles),
+            ("fault.thermal_cycles", self.thermal_cycles),
+            ("fault.detect_cycles", self.detect_cycles),
+            ("fault.backoff_base", self.backoff_base),
+        ] {
+            if c > 1_000_000_000 {
+                bail!("{key} must be <= 1e9 cycles, got {c}");
+            }
+        }
+        if self.max_retries > 1_000_000 {
+            bail!("fault.max_retries must be <= 1e6, got {}", self.max_retries);
         }
         Ok(())
     }
@@ -170,6 +268,8 @@ pub struct FabricConfig {
     pub hbm_energy_pj_per_byte: f64,
     /// Cost-model selection (`[fabric.cost]`).
     pub cost: CostConfig,
+    /// Fault-injection plan seed (`[fault]`; inert by default).
+    pub fault: crate::sim::FaultConfig,
 }
 
 impl Default for FabricConfig {
@@ -183,6 +283,7 @@ impl Default for FabricConfig {
             hbm_bandwidth_gbps: 64.0,
             hbm_energy_pj_per_byte: 3.9,
             cost: CostConfig::default(),
+            fault: crate::sim::FaultConfig::default(),
         }
     }
 }
@@ -243,6 +344,8 @@ impl FabricConfig {
             hbm_energy_pj_per_byte: doc
                 .get_float("hbm.energy_pj_per_byte", d.hbm_energy_pj_per_byte),
             cost,
+            fault: crate::sim::FaultConfig::from_document(doc)
+                .context("parsing [fault] section")?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -284,6 +387,7 @@ impl FabricConfig {
             );
         }
         self.cost.validate()?;
+        self.fault.validate()?;
         Ok(())
     }
 
@@ -470,6 +574,42 @@ cluster_cores = 4
             "[fabric.cost]\nhot_scale = 1.5\n",
         ] {
             assert!(FabricConfig::from_toml(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn fault_section_parses_and_defaults() {
+        let cfg = FabricConfig::from_toml(
+            "[fault]\nseed = 9\nhorizon_cycles = 4096\np_transient = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fault.seed, 9);
+        assert_eq!(cfg.fault.horizon, 4096);
+        assert_eq!(cfg.fault.p_transient, 0.1);
+        // Unset knobs keep their defaults.
+        assert_eq!(cfg.fault.window, crate::sim::FaultConfig::default().window);
+        assert!(!cfg.fault.is_inert());
+        // And an absent section is the inert (no-fault) default.
+        assert!(FabricConfig::from_toml("").unwrap().fault.is_inert());
+    }
+
+    #[test]
+    fn fault_section_rejects_bad_values_naming_the_key() {
+        for (bad, key) in [
+            ("[fault]\np_death = 1.5\n", "fault.p_death"),
+            ("[fault]\np_transient = -0.1\n", "fault.p_transient"),
+            ("[fault]\ndegrade_factor = 0.5\n", "fault.degrade_factor"),
+            ("[fault]\nbrownout_factor = -2.0\n", "fault.brownout_factor"),
+            ("[fault]\nwindow_cycles = 0\n", "fault.window_cycles"),
+            // Negative values must not wrap through the u64/u32 casts.
+            ("[fault]\nwindow_cycles = -1\n", "fault.window_cycles"),
+            ("[fault]\ndetect_cycles = -5\n", "fault.detect_cycles"),
+            ("[fault]\nmax_retries = -1\n", "fault.max_retries"),
+            ("[fault]\nbackoff_base = -1\n", "fault.backoff_base"),
+        ] {
+            let e = FabricConfig::from_toml(bad).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(msg.contains(key), "error for {bad:?} must name {key}: {msg}");
         }
     }
 

@@ -197,6 +197,12 @@ fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
         return Ok(Value::Int(i));
     }
     if let Ok(f) = text.replace('_', "").parse::<f64>() {
+        // Rust's f64 parser accepts "nan"/"inf"/"-inf"; none of them is
+        // a meaningful config knob, and letting one through poisons every
+        // downstream range check (NaN compares false with everything).
+        if !f.is_finite() {
+            return err(line, format!("non-finite float {text:?} not allowed"));
+        }
         return Ok(Value::Float(f));
     }
     err(line, format!("cannot parse value {text:?}"))
@@ -308,6 +314,17 @@ mod tests {
         assert_eq!(doc.get_int("a", 0), -5);
         assert_eq!(doc.get_float("b", 0.0), -0.25);
         assert_eq!(doc.get_float("c", 0.0), 1000.0);
+    }
+
+    #[test]
+    fn non_finite_floats_rejected_with_line() {
+        for (text, line) in
+            [("x = nan\n", 1), ("ok = 1\ny = inf\n", 2), ("z = -inf\n", 1), ("w = 1e999\n", 1)]
+        {
+            let e = parse_document(text).unwrap_err();
+            assert_eq!(e.line, line, "{text:?}");
+            assert!(e.msg.contains("non-finite"), "{text:?}: {}", e.msg);
+        }
     }
 
     #[test]

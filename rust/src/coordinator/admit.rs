@@ -117,6 +117,53 @@
 //! each step's true multi-program start cycle with the live occupancy
 //! aggregates — this layer is the first caller for which the cost seam
 //! carries real cross-program congestion information.
+//!
+//! # Fault injection and graceful degradation
+//!
+//! [`FaultySession`] is the *recovery* half of the robustness layer
+//! (injection: [`crate::sim::fault`]; pricing:
+//! [`crate::fabric::DegradedCost`]). It wraps a [`CosimSession`] and a
+//! seeded [`FaultPlan`], processing fault events strictly in the plan's
+//! canonical order, each applied after draining the session to the
+//! event's cycle — so the machine state a fault observes is a
+//! deterministic function of (admissions, plan), never of pause
+//! granularity or call order. Behavioral faults recover by
+//! **whole-request restart**: the afflicted program's steps (including
+//! in-flight ones, retracted via the stamped calendar) are replaced in
+//! place, either with the same content later (transient retry with
+//! exponential backoff), with content re-mapped off dead silicon
+//! (first alive same-accelerator-kind tile by ascending index), or
+//! with an empty program (shedding). The [`RecoveryPolicy`] selects
+//! among these; pricing faults act purely through the pre-materialized
+//! `DegradedCost` wrapper and need no runtime action.
+//!
+//! **Incremental ≡ from-scratch, with faults.** The fault layer keeps
+//! the session's replay contract: any interleaving of admissions and
+//! `run_until` pauses produces bit-identical reports to a fresh
+//! `FaultySession` given the same admissions up front, pinned by
+//! `tests/fault_golden.rs`. Three mechanisms carry the proof:
+//!
+//! 1. events apply at plan-determined instants against drained state,
+//!    so extra pauses change nothing;
+//! 2. the **fault floor** (the last processed event's cycle) rejects
+//!    admissions arriving earlier *and* admissions whose invalidation
+//!    closure would displace any step scheduled before it, so the
+//!    history every already-applied fault observed stays frozen;
+//! 3. a late admission **replays the processed death prefix** at
+//!    admit time — walking processed `TileDeath` events in order and
+//!    re-mapping/shedding exactly as the event loop would have, with
+//!    restart time `max(arrival, death + detect)` — so admitting after
+//!    a death equals having been admitted before it.
+//!
+//! Recovery retraction may legitimately re-flow *unafflicted* programs
+//! (freed resources pull queued steps earlier); a quarantine sweep
+//! after every recovery re-checks all dead tiles and re-maps any
+//! program whose uncompleted work landed on one, so no final schedule
+//! keeps live work on dead silicon. Under a time-varying base model
+//! the same caveat as plain sessions applies: mid-flight prices are
+//! provisional until the next full drain settles the fixed point, and
+//! the fixed point's uniqueness is what makes the final bits
+//! path-independent.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -124,9 +171,9 @@ use std::sync::Arc;
 use anyhow::ensure;
 
 use crate::compiler::{FabricProgram, Step};
-use crate::fabric::{CostModel, Fabric, Occupancy};
+use crate::fabric::{CostModel, DegradedCost, Fabric, Occupancy};
 use crate::metrics::{Category, Metrics};
-use crate::sim::{Cycle, StampedCalendar};
+use crate::sim::{Cycle, FaultConfig, FaultEvent, FaultKind, FaultPlan, StampedCalendar};
 use crate::Result;
 
 use super::exec::{ExecReport, ProgramSpan};
@@ -232,6 +279,10 @@ struct Prog {
     span_cache: Option<ProgramSpan>,
     /// Queue entries removed + id range recycled; frozen history.
     pruned: bool,
+    /// Per-step history (`steps`/`rec`/CSR) dropped at prune time
+    /// ([`CosimSession::set_discard_pruned`]); the span cache is the
+    /// only surviving telemetry.
+    discarded: bool,
 }
 
 /// A resource's wake queue: step ids in `(program key, step idx)` order.
@@ -280,6 +331,9 @@ pub struct CosimSession<'f> {
     admit_floor: Cycle,
     /// Recycled global-id ranges from pruned programs: `(base, len)`.
     free_ranges: Vec<(usize, usize)>,
+    /// Drop pruned programs' per-step history (see
+    /// [`CosimSession::set_discard_pruned`]).
+    discard_pruned: bool,
 }
 
 /// Price one step starting at `start` through the cost model: returns
@@ -344,6 +398,7 @@ impl<'f> CosimSession<'f> {
             dirty_from: None,
             admit_floor: 0,
             free_ranges: Vec::new(),
+            discard_pruned: false,
         }
     }
 
@@ -391,6 +446,25 @@ impl<'f> CosimSession<'f> {
     pub fn queue_footprint(&self) -> (usize, usize) {
         let longest = self.res.iter().map(|r| r.steps.len()).max().unwrap_or(0);
         (longest, self.id_map.len())
+    }
+
+    /// Opt in to dropping pruned programs' per-step history (`steps`,
+    /// `rec`, the CSR successor arrays) at
+    /// [`CosimSession::prune_completed_before`] time, bounding long-run
+    /// serving memory: with discarding on, retained history is
+    /// proportional to the live window rather than to every request ever
+    /// served. The span cache survives, so [`CosimSession::span`] stays
+    /// exact for discarded programs; [`CosimSession::report`], whose
+    /// merged energy fold needs every per-step record, errors once any
+    /// program has been discarded.
+    pub fn set_discard_pruned(&mut self, on: bool) {
+        self.discard_pruned = on;
+    }
+
+    /// Retained per-step history across all programs (steps + records) —
+    /// the footprint probe for the discard-pruned regression test.
+    pub fn history_footprint(&self) -> usize {
+        self.progs.iter().map(|p| p.steps.len() + p.rec.len()).sum()
     }
 
     /// Admit `prog` into the live calendar at simulated cycle `at` with
@@ -484,6 +558,11 @@ impl<'f> CosimSession<'f> {
     /// t=0 reproduce `cosim` of the concatenated program.
     pub fn report(&mut self) -> Result<ExecReport> {
         self.run_to_drain()?;
+        ensure!(
+            self.progs.iter().all(|p| !p.discarded),
+            "report() needs per-step history, but pruned programs were \
+             discarded (set_discard_pruned); use span() per program instead"
+        );
         let nt = self.fabric.tile_count();
         let mut total = Metrics::new();
         let mut tile_busy = vec![0 as Cycle; nt];
@@ -744,6 +823,7 @@ impl<'f> CosimSession<'f> {
             remaining: n,
             span_cache: None,
             pruned: false,
+            discarded: false,
         };
         if n == 0 {
             built.span_cache = Some(Self::compute_span(&built));
@@ -1214,6 +1294,18 @@ impl<'f> CosimSession<'f> {
                 if !pr.rec.is_empty() {
                     self.free_ranges.push((pr.base, pr.rec.len()));
                 }
+                if self.discard_pruned {
+                    // The span cache is primed (the program completed a
+                    // full drain), so span() keeps serving exact
+                    // telemetry; only report()'s merged fold loses its
+                    // inputs, and report() checks for that.
+                    debug_assert!(pr.span_cache.is_some());
+                    pr.discarded = true;
+                    pr.steps = Vec::new();
+                    pr.rec = Vec::new();
+                    pr.succ_off = Vec::new();
+                    pr.succ = Vec::new();
+                }
             }
         }
         Ok(removed)
@@ -1260,6 +1352,657 @@ impl AdmissionQueue {
             handles.push(session.admit_with(&prog, at, meta)?);
         }
         Ok(handles)
+    }
+}
+
+/// How the recovery engine responds to a behavioral fault (see the
+/// module docs' fault section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Transients retry in place with exponential backoff; permanent
+    /// tile death escalates to re-mapping (there is nowhere to retry).
+    #[default]
+    Retry,
+    /// Pessimistic: a transient also re-maps off the suspect tile (if a
+    /// same-kind alternative exists), treating glitching silicon as
+    /// about to fail.
+    Remap,
+    /// Like [`RecoveryPolicy::Retry`], but a restart that cannot meet
+    /// the request's [`AdmitMeta::deadline`] is shed instead of
+    /// rescheduled.
+    DeadlineAware,
+    /// Any behavioral fault sheds the afflicted request immediately.
+    Shed,
+}
+
+/// Per-request recovery outcome, surfaced by the serving layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RequestOutcome {
+    /// Transient faults absorbed (each adds a detect + backoff delay).
+    pub attempts: u32,
+    /// At least one transient retry was scheduled.
+    pub retried: bool,
+    /// Content was re-mapped off dead/suspect silicon at least once.
+    pub remapped: bool,
+    /// Dropped: replaced by an empty program, producing no output.
+    pub shed: bool,
+}
+
+/// Aggregate degradation telemetry for one faulty episode. Every field
+/// is path-independent: an incremental session and a from-scratch
+/// replay of the same admissions produce equal reports
+/// (`tests/fault_golden.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradationReport {
+    /// Requests admitted (shed ones included).
+    pub programs: usize,
+    /// Requests that produced output (not shed).
+    pub completed: usize,
+    /// Requests that absorbed at least one transient retry.
+    pub retried: usize,
+    /// Requests re-mapped off dead/suspect silicon.
+    pub remapped: usize,
+    /// Requests dropped by policy or for lack of healthy silicon.
+    pub shed: usize,
+    /// Requests with a finite deadline that was missed (shed counts as
+    /// missed).
+    pub deadline_violated: usize,
+    /// Total transient retry attempts across all requests.
+    pub transient_retries: u64,
+    /// Plan events processed (behavioral + pricing).
+    pub faults_injected: usize,
+    /// Behavioral events that found no afflicted work (idle silicon).
+    pub faults_masked: usize,
+    /// Behavioral events that afflicted at least one request.
+    pub faults_effective: usize,
+    /// Pricing events processed (materialized in the cost wrapper).
+    pub pricing_events: usize,
+    /// completed / programs (1.0 for an empty episode).
+    pub availability: f64,
+    /// MTTF-style aggregate: episode cycles per effective behavioral
+    /// fault (infinite when none hit).
+    pub mean_cycles_between_effective: f64,
+}
+
+/// Recovery bookkeeping for one admitted request.
+#[derive(Debug, Clone)]
+struct ReqState {
+    /// Original admission cycle (restarts re-admit no earlier).
+    arrival: Cycle,
+    meta: AdmitMeta,
+    /// Current content (tracks re-maps; empty once shed).
+    steps: Vec<Step>,
+    attempts: u32,
+    retried: bool,
+    remapped: bool,
+    shed: bool,
+}
+
+/// The tile ids a step references (execution site or transfer
+/// endpoints) — the death-affliction predicate's footprint.
+fn step_tiles(s: &Step) -> [Option<usize>; 2] {
+    match s {
+        Step::Load { tile, .. } | Step::Exec { tile, .. } => [Some(*tile), None],
+        Step::Transfer { from, to, .. } => [Some(*from), Some(*to)],
+    }
+}
+
+/// True when any step references a tile marked in `avoid`
+/// (`avoid[t] != Cycle::MAX`).
+fn references_avoided(steps: &[Step], avoid: &[Cycle]) -> bool {
+    steps
+        .iter()
+        .any(|s| step_tiles(s).iter().flatten().any(|&t| avoid[t] != Cycle::MAX))
+}
+
+/// Re-map every step off the avoided tiles: an avoided execution site or
+/// transfer endpoint moves to the first non-avoided tile of the same
+/// accelerator kind (ascending tile index — deterministic); `None` when
+/// some needed kind has no healthy tile left. Only fabric tile indices
+/// are rewritten — `node` fields are IR graph-node ids and ride along.
+fn remap_steps(steps: &[Step], avoid: &[Cycle], fabric: &Fabric) -> Option<Vec<Step>> {
+    let target = |t: usize| -> Option<usize> {
+        if avoid[t] == Cycle::MAX {
+            return Some(t);
+        }
+        let kind = fabric.tiles[t].accel.name();
+        (0..fabric.tile_count())
+            .find(|&c| avoid[c] == Cycle::MAX && fabric.tiles[c].accel.name() == kind)
+    };
+    let mut out = Vec::with_capacity(steps.len());
+    for s in steps {
+        out.push(match s {
+            Step::Load { tile, bytes, node, deps } => Step::Load {
+                tile: target(*tile)?,
+                bytes: *bytes,
+                node: *node,
+                deps: deps.clone(),
+            },
+            Step::Transfer { from, to, bytes, node, deps } => Step::Transfer {
+                from: target(*from)?,
+                to: target(*to)?,
+                bytes: *bytes,
+                node: *node,
+                deps: deps.clone(),
+            },
+            Step::Exec { tile, node, compute, precision, deps } => Step::Exec {
+                tile: target(*tile)?,
+                node: *node,
+                compute: compute.clone(),
+                precision: *precision,
+                deps: deps.clone(),
+            },
+        });
+    }
+    Some(out)
+}
+
+/// A [`CosimSession`] under a seeded [`FaultPlan`]: the graceful-
+/// degradation engine. See the module docs' fault section for the event
+/// model, the [`RecoveryPolicy`] semantics and the determinism
+/// contract. Error handling matches the inner session: a rejected
+/// admission or recovery action leaves the pair in an unspecified (but
+/// memory-safe) state.
+pub struct FaultySession<'f> {
+    inner: CosimSession<'f>,
+    plan: FaultPlan,
+    policy: RecoveryPolicy,
+    /// Detection latency: restarts land at `fault + detect` earliest.
+    detect: Cycle,
+    /// Transient attempts beyond this shed the request.
+    max_retries: u32,
+    /// Exponential backoff base for transient retries.
+    backoff: Cycle,
+    /// Next unprocessed plan event.
+    next_ev: usize,
+    /// Cycle of the last processed event: the frozen-history floor.
+    fault_floor: Cycle,
+    /// Death cycle per tile (`Cycle::MAX` = alive), processed events
+    /// only — the behavioral twin of the cost wrapper's timeline.
+    dead_at: Vec<Cycle>,
+    /// Per-plan-event "afflicted at least one request" flags.
+    hit: Vec<bool>,
+    /// Parallel to the inner session's program slots.
+    reqs: Vec<ReqState>,
+}
+
+impl<'f> FaultySession<'f> {
+    /// Generate the plan from `cfg` over `fabric`'s tile kinds and wrap
+    /// the fabric's configured cost model. `cfg` is validated; recovery
+    /// knobs (`detect_cycles`, `max_retries`, `backoff_base`) are read
+    /// from it.
+    pub fn new(fabric: &'f Fabric, cfg: &FaultConfig, policy: RecoveryPolicy) -> Result<Self> {
+        let kinds: Vec<&str> = fabric.tiles.iter().map(|t| t.accel.name()).collect();
+        let plan = FaultPlan::generate(cfg, &kinds);
+        Self::with_model(fabric, fabric.cost_model().clone(), plan, cfg, policy)
+    }
+
+    /// Wrap an explicit (recorded / hand-written) plan over the fabric's
+    /// configured cost model.
+    pub fn with_plan(
+        fabric: &'f Fabric,
+        plan: FaultPlan,
+        cfg: &FaultConfig,
+        policy: RecoveryPolicy,
+    ) -> Result<Self> {
+        Self::with_model(fabric, fabric.cost_model().clone(), plan, cfg, policy)
+    }
+
+    /// Wrap an explicit plan over an explicit base cost model. When the
+    /// plan needs no pricing (only transients, or empty), the base model
+    /// is used untouched — the same `Arc`, so an empty-plan session is
+    /// the fault-free session, bit for bit; otherwise the base is
+    /// wrapped in a [`DegradedCost`] materialized from the plan.
+    pub fn with_model(
+        fabric: &'f Fabric,
+        base: Arc<dyn CostModel>,
+        plan: FaultPlan,
+        cfg: &FaultConfig,
+        policy: RecoveryPolicy,
+    ) -> Result<Self> {
+        let nt = fabric.tile_count();
+        for ev in plan.events() {
+            let ok = match ev.kind {
+                FaultKind::TileTransient { tile }
+                | FaultKind::TileDeath { tile }
+                | FaultKind::CrossbarDrift { tile, .. }
+                | FaultKind::PhotonicThermal { tile, .. } => tile < nt,
+                FaultKind::LinkDegrade { from, to, .. }
+                | FaultKind::LinkFail { from, to, .. } => from < nt && to < nt,
+                FaultKind::HbmBrownout { .. } => true,
+            };
+            ensure!(ok, "fault plan references a tile outside the fabric: {:?}", ev.kind);
+        }
+        // Dead-tile quarantine pricing needs the wrapper too, so only a
+        // purely-transient (or empty) plan skips it.
+        let needs_wrapper =
+            plan.events().iter().any(|e| !matches!(e.kind, FaultKind::TileTransient { .. }));
+        let model: Arc<dyn CostModel> = if needs_wrapper {
+            Arc::new(DegradedCost::from_plan(base, fabric, &plan))
+        } else {
+            base
+        };
+        Ok(FaultySession {
+            inner: CosimSession::with_model(fabric, model),
+            hit: vec![false; plan.len()],
+            dead_at: vec![Cycle::MAX; nt],
+            plan,
+            policy,
+            detect: cfg.detect_cycles,
+            max_retries: cfg.max_retries,
+            backoff: cfg.backoff_base.max(1),
+            next_ev: 0,
+            fault_floor: 0,
+            reqs: Vec::new(),
+        })
+    }
+
+    /// The wrapped session (reports, spans, footprint probes).
+    pub fn session(&self) -> &CosimSession<'f> {
+        &self.inner
+    }
+
+    /// The session's effective cost model (the degraded wrapper when the
+    /// plan prices anything, the base model otherwise).
+    pub fn cost_model(&self) -> &Arc<dyn CostModel> {
+        self.inner.cost_model()
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn recovery_policy(&self) -> RecoveryPolicy {
+        self.policy
+    }
+
+    /// Plan events processed so far.
+    pub fn faults_processed(&self) -> usize {
+        self.next_ev
+    }
+
+    /// Cycle of the last processed event: admissions may not arrive
+    /// before it (the frozen-history floor of the determinism contract).
+    pub fn fault_floor(&self) -> Cycle {
+        self.fault_floor
+    }
+
+    /// Number of admitted requests.
+    pub fn programs(&self) -> usize {
+        self.reqs.len()
+    }
+
+    /// Per-request recovery outcome.
+    pub fn outcome(&self, h: ProgramHandle) -> RequestOutcome {
+        let r = &self.reqs[h.0];
+        RequestOutcome {
+            attempts: r.attempts,
+            retried: r.retried,
+            remapped: r.remapped,
+            shed: r.shed,
+        }
+    }
+
+    /// Forwarded to [`CosimSession::set_policy`] (before any admission).
+    pub fn set_policy(&mut self, policy: AdmitPolicy) -> Result<()> {
+        self.inner.set_policy(policy)
+    }
+
+    /// Admit at `at` with default metadata (see
+    /// [`FaultySession::admit_with`]).
+    pub fn admit_at(&mut self, prog: &FabricProgram, at: Cycle) -> Result<ProgramHandle> {
+        self.admit_with(prog, at, AdmitMeta::default())
+    }
+
+    /// Admit `prog` at simulated cycle `at`. Admissions may not arrive
+    /// before the fault floor (the last processed event's cycle) nor
+    /// displace any step scheduled before it — the history every
+    /// already-applied fault observed is frozen. The processed
+    /// `TileDeath` prefix is replayed against the new content (re-map or
+    /// shed per policy, restart no earlier than `death + detect`), so
+    /// admitting after a death is equivalent to having been admitted
+    /// before it — the mechanism behind incremental ≡ from-scratch.
+    pub fn admit_with(
+        &mut self,
+        prog: &FabricProgram,
+        at: Cycle,
+        meta: AdmitMeta,
+    ) -> Result<ProgramHandle> {
+        ensure!(
+            at >= self.fault_floor,
+            "admission at cycle {at} lies before already-processed faults (floor {})",
+            self.fault_floor
+        );
+        let mut steps = prog.steps.clone();
+        let mut restart_at = at;
+        let mut remapped = false;
+        let mut shed = false;
+        let mut dead = vec![Cycle::MAX; self.inner.fabric.tile_count()];
+        for i in 0..self.next_ev {
+            let ev = self.plan.events()[i];
+            let FaultKind::TileDeath { tile } = ev.kind else { continue };
+            dead[tile] = dead[tile].min(ev.at);
+            if shed || !references_avoided(&steps, &dead) {
+                continue;
+            }
+            // This death would have afflicted the request had it been
+            // admitted before the event — replay the same recovery.
+            self.hit[i] = true;
+            let t2 = restart_at.max(ev.at.saturating_add(self.detect));
+            match self.policy {
+                RecoveryPolicy::Shed => shed = true,
+                RecoveryPolicy::DeadlineAware if t2 > meta.deadline => shed = true,
+                _ => match remap_steps(&steps, &dead, self.inner.fabric) {
+                    Some(s2) => {
+                        steps = s2;
+                        restart_at = t2;
+                        remapped = true;
+                    }
+                    None => shed = true,
+                },
+            }
+        }
+        let (content, admit_time) = if shed {
+            (FabricProgram::default(), at)
+        } else {
+            (FabricProgram { steps, producer: Vec::new() }, restart_at)
+        };
+        // Frozen-history guard: raise the inner admission floor to the
+        // fault floor for the duration of this install, so its existing
+        // closure check rejects any admission whose invalidation would
+        // displace a step some processed fault already observed.
+        // (Recovery restarts run *without* the raise: they legitimately
+        // perturb below the current event, identically on every path.)
+        let saved = self.inner.admit_floor;
+        self.inner.admit_floor = saved.max(self.fault_floor);
+        let installed = self.inner.admit_with(&content, admit_time, meta);
+        self.inner.admit_floor = saved;
+        let h = installed?;
+        debug_assert_eq!(h.0, self.reqs.len(), "request table tracks inner slots");
+        self.reqs.push(ReqState {
+            arrival: at,
+            meta,
+            steps: content.steps,
+            attempts: 0,
+            retried: false,
+            remapped,
+            shed,
+        });
+        Ok(h)
+    }
+
+    /// Drain to simulated cycle `t`, applying due fault events in plan
+    /// order along the way.
+    pub fn run_until(&mut self, t: Cycle) -> Result<()> {
+        self.process_events(Some(t))?;
+        self.inner.run_until(t)
+    }
+
+    /// Drain all admitted work to completion, applying fault events in
+    /// plan order along the way. Events are processed *lazily*: once no
+    /// completion is pending, later plan events are left for a future
+    /// admission's drain (they would only hit idle silicon now, and
+    /// deferring them keeps the fault floor from outrunning the served
+    /// timeline). The same lazy rule governs [`FaultySession::run_until`]
+    /// so the processed-event count is path-independent.
+    pub fn run_to_drain(&mut self) -> Result<()> {
+        self.process_events(None)?;
+        self.inner.run_to_drain()
+    }
+
+    /// Drain ([`FaultySession::run_to_drain`]) and fold the inner
+    /// session's merged report.
+    pub fn report(&mut self) -> Result<ExecReport> {
+        self.process_events(None)?;
+        self.inner.report()
+    }
+
+    /// Per-request span (inner session cache; exact for shed requests
+    /// too — an empty program's span is zero-length at its arrival).
+    pub fn span(&self, h: ProgramHandle) -> ProgramSpan {
+        self.inner.span(h)
+    }
+
+    /// Degradation telemetry for the episode (pass the report the
+    /// episode folded — its spans supply per-request finish times).
+    pub fn degradation(&self, exec: &ExecReport) -> DegradationReport {
+        let programs = self.reqs.len();
+        let mut completed = 0usize;
+        let mut retried = 0usize;
+        let mut remapped = 0usize;
+        let mut shed = 0usize;
+        let mut deadline_violated = 0usize;
+        let mut transient_retries = 0u64;
+        for (p, r) in self.reqs.iter().enumerate() {
+            if r.shed {
+                shed += 1;
+            } else {
+                completed += 1;
+            }
+            if r.retried {
+                retried += 1;
+            }
+            if r.remapped {
+                remapped += 1;
+            }
+            transient_retries += u64::from(r.attempts);
+            if r.meta.deadline != Cycle::MAX
+                && (r.shed
+                    || exec.programs.get(p).is_none_or(|s| s.finished_at > r.meta.deadline))
+            {
+                deadline_violated += 1;
+            }
+        }
+        let behavioral = self.plan.events()[..self.next_ev]
+            .iter()
+            .filter(|e| e.kind.is_behavioral())
+            .count();
+        let effective = self.hit[..self.next_ev].iter().filter(|&&h| h).count();
+        DegradationReport {
+            programs,
+            completed,
+            retried,
+            remapped,
+            shed,
+            deadline_violated,
+            transient_retries,
+            faults_injected: self.next_ev,
+            faults_masked: behavioral - effective,
+            faults_effective: effective,
+            pricing_events: self.next_ev - behavioral,
+            availability: if programs == 0 { 1.0 } else { completed as f64 / programs as f64 },
+            mean_cycles_between_effective: if effective == 0 {
+                f64::INFINITY
+            } else {
+                exec.cycles as f64 / effective as f64
+            },
+        }
+    }
+
+    /// Apply plan events in canonical order: each event waits for the
+    /// session to drain to its cycle, observes the machine state there,
+    /// and recovers per policy. Events are applied *lazily* — an event
+    /// observing a quiescent calendar (no pending completions at all)
+    /// is deferred, not consumed. Laziness is part of the determinism
+    /// contract: whether the calendar is quiescent after draining to
+    /// `ev.at` is a pure function of the admitted set, so every
+    /// admission/pause interleaving makes the same processed/deferred
+    /// decision per event, and `faults_processed` / the degradation
+    /// counters are path-independent. (A deferred event re-attempts on
+    /// the next run; an admission landing before a deferred event is
+    /// legal — the event then afflicts it exactly as a from-scratch
+    /// replay would.)
+    fn process_events(&mut self, until: Option<Cycle>) -> Result<()> {
+        while self.next_ev < self.plan.len() {
+            let ev = self.plan.events()[self.next_ev];
+            if until.is_some_and(|t| ev.at > t) {
+                break;
+            }
+            self.inner.run_until(ev.at)?;
+            if self.inner.is_quiescent() {
+                break;
+            }
+            self.apply_event(self.next_ev, ev)?;
+            self.fault_floor = self.fault_floor.max(ev.at);
+            self.next_ev += 1;
+        }
+        Ok(())
+    }
+
+    fn apply_event(&mut self, i: usize, ev: FaultEvent) -> Result<()> {
+        match ev.kind {
+            FaultKind::TileTransient { tile } => {
+                if let Some(p) = self.executing_on(tile, ev.at) {
+                    self.hit[i] = true;
+                    self.recover_transient(p, tile, ev.at)?;
+                    // A retry's retraction can re-flow other programs
+                    // onto previously-dead silicon — re-check.
+                    self.quarantine_sweep(ev.at)?;
+                }
+            }
+            FaultKind::TileDeath { tile } => {
+                self.dead_at[tile] = self.dead_at[tile].min(ev.at);
+                if self.quarantine_sweep(ev.at)? {
+                    self.hit[i] = true;
+                }
+            }
+            // Pricing kinds are pre-materialized in the cost wrapper.
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// The request whose step occupies `tile` at the fault instant:
+    /// started strictly before `at` (so a request admitted later —
+    /// necessarily at/after the fault floor — can never be afflicted,
+    /// on any admission path), still uncompleted after draining to
+    /// `at`. At most one exists: a resource runs one step at a time.
+    fn executing_on(&self, tile: usize, at: Cycle) -> Option<usize> {
+        for (p, req) in self.reqs.iter().enumerate() {
+            if req.shed {
+                continue;
+            }
+            for rec in &self.inner.progs[p].rec {
+                if rec.res as usize == tile && rec.started && !rec.completed && rec.start < at {
+                    return Some(p);
+                }
+            }
+        }
+        None
+    }
+
+    /// Lowest-handle request with an uncompleted step referencing a
+    /// dead tile (execution site or transfer endpoint).
+    fn find_afflicted(&self) -> Option<usize> {
+        for (p, req) in self.reqs.iter().enumerate() {
+            if req.shed {
+                continue;
+            }
+            let pr = &self.inner.progs[p];
+            for (s, rec) in pr.steps.iter().zip(&pr.rec) {
+                if !rec.completed
+                    && step_tiles(s).iter().flatten().any(|&t| self.dead_at[t] != Cycle::MAX)
+                {
+                    return Some(p);
+                }
+            }
+        }
+        None
+    }
+
+    /// Re-map (or shed) every request with uncompleted work on dead
+    /// silicon, to a fixed point: each recovery's retraction may re-flow
+    /// other programs, but a recovered request never re-references dead
+    /// tiles, so the sweep acts at most once per request. Returns
+    /// whether any request was afflicted.
+    fn quarantine_sweep(&mut self, at: Cycle) -> Result<bool> {
+        if self.dead_at.iter().all(|&d| d == Cycle::MAX) {
+            return Ok(false);
+        }
+        let mut acted = false;
+        while let Some(p) = self.find_afflicted() {
+            acted = true;
+            self.recover_death(p, at)?;
+        }
+        Ok(acted)
+    }
+
+    /// Whole-request restart after tile death: re-map off the current
+    /// dead set at `max(arrival, at + detect)`, or shed per policy.
+    fn recover_death(&mut self, p: usize, at: Cycle) -> Result<()> {
+        let t2 = self.reqs[p].arrival.max(at.saturating_add(self.detect));
+        let shed = match self.policy {
+            RecoveryPolicy::Shed => true,
+            RecoveryPolicy::DeadlineAware => t2 > self.reqs[p].meta.deadline,
+            _ => false,
+        };
+        if shed {
+            return self.shed(p);
+        }
+        match remap_steps(&self.reqs[p].steps, &self.dead_at, self.inner.fabric) {
+            Some(steps) => self.restart(p, steps, t2, true),
+            None => self.shed(p),
+        }
+    }
+
+    /// Whole-request restart after a transient on `tile`: retry with
+    /// exponential backoff (re-mapped off the suspect tile under
+    /// [`RecoveryPolicy::Remap`]), shedding beyond `max_retries` or on a
+    /// busted deadline under [`RecoveryPolicy::DeadlineAware`].
+    fn recover_transient(&mut self, p: usize, tile: usize, at: Cycle) -> Result<()> {
+        self.reqs[p].attempts += 1;
+        let attempts = self.reqs[p].attempts;
+        if matches!(self.policy, RecoveryPolicy::Shed) || attempts > self.max_retries {
+            return self.shed(p);
+        }
+        let backoff = self.backoff.saturating_mul(1u64 << u64::from(attempts - 1).min(32));
+        let t2 = at.saturating_add(self.detect).saturating_add(backoff);
+        if matches!(self.policy, RecoveryPolicy::DeadlineAware) && t2 > self.reqs[p].meta.deadline
+        {
+            return self.shed(p);
+        }
+        let (steps, moved) = if matches!(self.policy, RecoveryPolicy::Remap) {
+            let mut avoid = self.dead_at.clone();
+            avoid[tile] = avoid[tile].min(at);
+            match remap_steps(&self.reqs[p].steps, &avoid, self.inner.fabric) {
+                Some(s) => {
+                    let touched = references_avoided(&self.reqs[p].steps, &avoid);
+                    (s, touched)
+                }
+                // No healthy same-kind alternative: retry in place (the
+                // tile still works — the fault was transient).
+                None => (self.reqs[p].steps.clone(), false),
+            }
+        } else {
+            (self.reqs[p].steps.clone(), false)
+        };
+        self.reqs[p].retried = true;
+        self.restart(p, steps, t2, moved)
+    }
+
+    /// Replace request `p` in the live calendar: retracts its in-flight
+    /// steps (generation-stamped calendar entries), re-prices the
+    /// invalidation closure, and re-admits the new content at `at`.
+    fn restart(&mut self, p: usize, steps: Vec<Step>, at: Cycle, remapped: bool) -> Result<()> {
+        let content = FabricProgram { steps, producer: Vec::new() };
+        let meta = self.reqs[p].meta;
+        self.inner.replace_with(ProgramHandle(p), &content, at, meta)?;
+        self.reqs[p].steps = content.steps;
+        if remapped {
+            self.reqs[p].remapped = true;
+        }
+        Ok(())
+    }
+
+    /// Drop request `p`: its slot is replaced by an empty program at the
+    /// original arrival (zero-length span, no output).
+    fn shed(&mut self, p: usize) -> Result<()> {
+        let meta = self.reqs[p].meta;
+        let at = self.reqs[p].arrival;
+        self.inner.replace_with(ProgramHandle(p), &FabricProgram::default(), at, meta)?;
+        self.reqs[p].steps = Vec::new();
+        self.reqs[p].shed = true;
+        Ok(())
     }
 }
 
@@ -1585,5 +2328,253 @@ mod tests {
         // Spans of pruned programs are still served (from the cache).
         assert_eq!(got.programs[0].admitted_at, 0);
         assert!(pruned.span(early).bit_identical(&got.programs[0]));
+    }
+
+    #[test]
+    fn discard_pruned_bounds_history_and_keeps_spans() {
+        let f = fabric();
+        let prog = program(&f, 31);
+        let solo = cosim(&f, &prog).unwrap();
+        let gap = solo.cycles + 50;
+        let rounds = 12usize;
+        let mut plain = CosimSession::new(&f);
+        for k in 0..rounds {
+            plain.admit_at(&prog, k as Cycle * gap).unwrap();
+            plain.run_to_drain().unwrap();
+        }
+        let want = plain.report().unwrap();
+        let per_prog = 2 * prog.steps.len(); // steps + recs
+        assert_eq!(plain.history_footprint(), rounds * per_prog, "baseline grows with history");
+        // Discarding session: prune + drop history after every round.
+        let mut discard = CosimSession::new(&f);
+        discard.set_discard_pruned(true);
+        let mut max_hist = 0usize;
+        for k in 0..rounds {
+            let at = k as Cycle * gap;
+            discard.admit_at(&prog, at).unwrap();
+            discard.run_to_drain().unwrap();
+            discard.prune_completed_before(at).unwrap();
+            max_hist = max_hist.max(discard.history_footprint());
+        }
+        // Bounded: never more than ~2 live programs' history, however
+        // long the run.
+        assert!(max_hist <= 2 * per_prog, "history grew with the run: {max_hist}");
+        // Spans of discarded programs are still exact (span cache).
+        for k in 0..rounds {
+            assert!(
+                discard.span(ProgramHandle(k)).bit_identical(&want.programs[k]),
+                "span {k} diverged after discard"
+            );
+        }
+        // The merged report needs the per-step history and must say so.
+        let err = discard.report().unwrap_err().to_string();
+        assert!(err.contains("discarded"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn faulty_session_with_empty_plan_is_bitwise_noop() {
+        let f = fabric();
+        let p1 = program(&f, 1);
+        let p2 = program(&f, 2);
+        let mut plain = CosimSession::new(&f);
+        plain.admit_at(&p1, 0).unwrap();
+        plain.admit_at(&p2, 37).unwrap();
+        let want = plain.report().unwrap();
+        let cfg = FaultConfig::default();
+        let mut faulty =
+            FaultySession::with_plan(&f, FaultPlan::empty(), &cfg, RecoveryPolicy::Retry).unwrap();
+        // An inert plan must not even wrap the cost model.
+        assert!(Arc::ptr_eq(faulty.cost_model(), f.cost_model()));
+        let h1 = faulty.admit_at(&p1, 0).unwrap();
+        faulty.admit_at(&p2, 37).unwrap();
+        let got = faulty.report().unwrap();
+        assert!(got.bit_identical(&want), "empty plan changed the bits");
+        let deg = faulty.degradation(&got);
+        assert_eq!(
+            (deg.programs, deg.completed, deg.faults_injected, deg.shed),
+            (2, 2, 0, 0)
+        );
+        assert_eq!(deg.availability, 1.0);
+        assert!(deg.mean_cycles_between_effective.is_infinite());
+        assert!(!faulty.outcome(h1).retried);
+    }
+
+    /// A one-step program: a long matmul on `tile`, so fault timing is
+    /// under test control (starts at admission, runs for its full
+    /// duration).
+    fn one_exec(tile: usize) -> FabricProgram {
+        FabricProgram {
+            steps: vec![Step::Exec {
+                tile,
+                node: 0,
+                compute: crate::accel::Compute::MatMul { m: 64, k: 64, n: 64 },
+                precision: Precision::Int8,
+                deps: Vec::new(),
+            }],
+            producer: Vec::new(),
+        }
+    }
+
+    fn transient(at: Cycle, tile: usize) -> crate::sim::FaultEvent {
+        crate::sim::FaultEvent { at, kind: FaultKind::TileTransient { tile } }
+    }
+
+    #[test]
+    fn transient_retries_with_exponential_backoff() {
+        let f = fabric();
+        let prog = one_exec(0);
+        let base = cosim(&f, &prog).unwrap().cycles;
+        assert!(base > 200, "test premise: the step is long ({base})");
+        let cfg = FaultConfig::default(); // detect 16, retries 2, backoff 32
+        let plan = FaultPlan::from_events(vec![transient(1, 0)]);
+        let mut s = FaultySession::with_plan(&f, plan, &cfg, RecoveryPolicy::Retry).unwrap();
+        let h = s.admit_at(&prog, 0).unwrap();
+        let rep = s.report().unwrap();
+        // Restart at fault(1) + detect(16) + backoff(32) = 49.
+        assert_eq!(rep.programs[0].finished_at, 49 + base);
+        let out = s.outcome(h);
+        assert!(out.retried && !out.shed && !out.remapped);
+        assert_eq!(out.attempts, 1);
+        let deg = s.degradation(&rep);
+        assert_eq!((deg.faults_effective, deg.faults_masked, deg.transient_retries), (1, 0, 1));
+    }
+
+    #[test]
+    fn transient_storm_sheds_after_max_retries() {
+        let f = fabric();
+        let prog = one_exec(0);
+        let base = cosim(&f, &prog).unwrap().cycles;
+        assert!(base > 200);
+        let cfg = FaultConfig::default();
+        // Restarts land at 49 and then 60+16+64 = 140; each later fault
+        // strikes the re-run strictly after its start.
+        let plan =
+            FaultPlan::from_events(vec![transient(1, 0), transient(60, 0), transient(150, 0)]);
+        let mut s = FaultySession::with_plan(&f, plan, &cfg, RecoveryPolicy::Retry).unwrap();
+        let h = s.admit_at(&prog, 0).unwrap();
+        let rep = s.report().unwrap();
+        let out = s.outcome(h);
+        assert!(out.shed, "third strike exceeds max_retries = 2");
+        assert_eq!(out.attempts, 3);
+        // A shed program is an empty slot at its arrival: zero span.
+        assert_eq!(s.span(h).makespan(), 0);
+        let deg = s.degradation(&rep);
+        assert_eq!((deg.programs, deg.completed, deg.shed), (1, 0, 1));
+        assert_eq!(deg.transient_retries, 3);
+        assert_eq!(deg.availability, 0.0);
+    }
+
+    #[test]
+    fn remap_policy_moves_off_the_suspect_tile() {
+        let f = fabric();
+        let prog = one_exec(0);
+        let base = cosim(&f, &prog).unwrap().cycles;
+        let cfg = FaultConfig::default();
+        let plan = FaultPlan::from_events(vec![transient(1, 0)]);
+        let mut s = FaultySession::with_plan(&f, plan, &cfg, RecoveryPolicy::Remap).unwrap();
+        let h = s.admit_at(&prog, 0).unwrap();
+        let rep = s.report().unwrap();
+        let out = s.outcome(h);
+        assert!(out.retried && out.remapped && !out.shed);
+        // Homogeneous npu fabric: same duration on the new tile.
+        assert_eq!(rep.programs[0].finished_at, 49 + base);
+        // The re-run landed on tile 1; the aborted attempt on the
+        // suspect tile was retracted, so tile 0 folds no busy time.
+        assert_eq!(rep.tile_busy[0], 0);
+        assert_eq!(rep.tile_busy[1], base);
+    }
+
+    #[test]
+    fn deadline_aware_sheds_when_restart_busts_the_deadline() {
+        let f = fabric();
+        let prog = one_exec(0);
+        let cfg = FaultConfig::default();
+        let plan = FaultPlan::from_events(vec![transient(1, 0)]);
+        let mut s =
+            FaultySession::with_plan(&f, plan, &cfg, RecoveryPolicy::DeadlineAware).unwrap();
+        // Restart would land at 49 > deadline 40.
+        let meta = AdmitMeta { deadline: 40, ..AdmitMeta::default() };
+        let h = s.admit_with(&prog, 0, meta).unwrap();
+        let rep = s.report().unwrap();
+        assert!(s.outcome(h).shed);
+        let deg = s.degradation(&rep);
+        assert_eq!((deg.shed, deg.deadline_violated), (1, 1));
+    }
+
+    #[test]
+    fn tile_death_remaps_and_incremental_matches_from_scratch() {
+        let f = fabric();
+        let p1 = program(&f, 1);
+        let p2 = program(&f, 2);
+        let solo = cosim(&f, &p1).unwrap();
+        let mid = solo.cycles / 2;
+        // Kill the tile running p1's final layer: its work is certainly
+        // still uncompleted halfway through the episode.
+        let victim = p1
+            .steps
+            .iter()
+            .rev()
+            .find_map(|s| match s {
+                Step::Exec { tile, .. } => Some(*tile),
+                _ => None,
+            })
+            .unwrap();
+        let plan = FaultPlan::from_events(vec![crate::sim::FaultEvent {
+            at: mid,
+            kind: FaultKind::TileDeath { tile: victim },
+        }]);
+        let cfg = FaultConfig::default();
+        let late = mid + 1_000;
+        // From-scratch oracle: both programs admitted up front.
+        let mut oracle =
+            FaultySession::with_plan(&f, plan.clone(), &cfg, RecoveryPolicy::Retry).unwrap();
+        oracle.admit_at(&p1, 0).unwrap();
+        oracle.admit_at(&p2, late).unwrap();
+        let want = oracle.report().unwrap();
+        let want_deg = oracle.degradation(&want);
+        // Incremental: drain past the death, then admit the second
+        // program (its processed-death replay must re-map it too).
+        let mut inc = FaultySession::with_plan(&f, plan, &cfg, RecoveryPolicy::Retry).unwrap();
+        let h1 = inc.admit_at(&p1, 0).unwrap();
+        inc.run_until(mid + 1).unwrap();
+        assert_eq!(inc.fault_floor(), mid);
+        let h2 = inc.admit_at(&p2, late).unwrap();
+        let got = inc.report().unwrap();
+        let got_deg = inc.degradation(&got);
+        assert!(got.bit_identical(&want), "incremental diverged from the oracle");
+        assert_eq!(got_deg, want_deg);
+        // The death really afflicted the in-flight program.
+        assert!(inc.outcome(h1).remapped);
+        assert!(!inc.outcome(h1).shed && !inc.outcome(h2).shed);
+        assert_eq!(got_deg.availability, 1.0);
+        // No finished work sits on the dead tile after the death: its
+        // busy time is strictly less than a fault-free run's.
+        let free = {
+            let mut s = CosimSession::new(&f);
+            s.admit_at(&p1, 0).unwrap();
+            s.admit_at(&p2, late).unwrap();
+            s.report().unwrap()
+        };
+        assert!(got.tile_busy[victim] < free.tile_busy[victim]);
+    }
+
+    #[test]
+    fn admissions_below_the_fault_floor_are_rejected() {
+        let f = fabric();
+        let prog = one_exec(0);
+        let cfg = FaultConfig::default();
+        let plan = FaultPlan::from_events(vec![crate::sim::FaultEvent {
+            at: 100,
+            kind: FaultKind::TileDeath { tile: 3 },
+        }]);
+        let mut s = FaultySession::with_plan(&f, plan, &cfg, RecoveryPolicy::Retry).unwrap();
+        s.admit_at(&prog, 0).unwrap();
+        s.run_to_drain().unwrap();
+        assert_eq!(s.faults_processed(), 1);
+        let err = s.admit_at(&prog, 50).unwrap_err().to_string();
+        assert!(err.contains("already-processed"), "unhelpful error: {err}");
+        // At the floor itself is fine.
+        s.admit_at(&prog, 100).unwrap();
+        s.run_to_drain().unwrap();
     }
 }

@@ -29,6 +29,14 @@
 //!   ([`serve::CosimExecutor`]), so the batch server can report fabric
 //!   latencies for every batch it forms.
 //!
+//! The robustness layer threads through all of it: [`admit`]'s
+//! `FaultySession` processes a seeded [`crate::sim::FaultPlan`] against
+//! the live calendar (retry / re-map / shed per `RecoveryPolicy`),
+//! [`serve::DegradedExecutor`] serves batches through it and surfaces
+//! per-request [`admit::RequestOutcome`]s plus an episode-level
+//! [`admit::DegradationReport`]; `tests/fault_golden.rs` pins the
+//! empty-plan no-op and the incremental ≡ from-scratch replay.
+//!
 //! The end-to-end driver (examples/uav_vision.rs) runs both: PJRT for the
 //! numbers, the co-simulator for latency/energy.
 
@@ -37,7 +45,10 @@ pub mod exec;
 pub mod refexec;
 pub mod serve;
 
-pub use admit::{AdmissionQueue, AdmitMeta, AdmitPolicy, CosimSession, ProgramHandle};
+pub use admit::{
+    AdmissionQueue, AdmitMeta, AdmitPolicy, CosimSession, DegradationReport, FaultySession,
+    ProgramHandle, RecoveryPolicy, RequestOutcome,
+};
 pub use exec::{cosim, cosim_with, ExecReport, ProgramSpan};
 pub use refexec::{cosim_ref, cosim_ref_with};
-pub use serve::{BatchServer, BatchStats, CosimExecutor, Request as ServeRequest};
+pub use serve::{BatchServer, BatchStats, CosimExecutor, DegradedExecutor, Request as ServeRequest};

@@ -499,9 +499,228 @@ impl CostModel for VaryingCost {
     }
 }
 
+/// Exec-latency penalty factor a dead tile prices at. Large but
+/// **finite**: while a fault's afflicted programs are being re-mapped
+/// one at a time, the invalidation machinery may transiently re-price a
+/// not-yet-re-mapped step on the dead tile — that price must exist (it
+/// is always retracted before the schedule settles), it just must never
+/// look attractive.
+pub const DEAD_TILE_FACTOR: f64 = 1.0e6;
+
+/// Latency factor of a failed (rerouting) link while the failure window
+/// is active.
+pub const LINK_FAIL_FACTOR: f64 = 8.0;
+
+/// Default occupancy epoch a [`DegradedCost`] declares when its inner
+/// model is time-invariant (any positive value is correct — degraded
+/// pricing reads `start` only, never occupancy; the epoch merely sizes
+/// the session's invalidation grid).
+pub const DEGRADED_DEFAULT_EPOCH: Cycle = 256;
+
+/// Fault-degraded pricing: wraps any [`CostModel`] and stretches
+/// latencies according to a pre-materialized fault timeline (the pricing
+/// half of [`crate::sim::FaultPlan`] — link degradation/failure, HBM
+/// brownout, accelerator wear, dead-tile quarantine).
+///
+/// Every modifier is keyed by the step's **start** cycle: a step
+/// starting inside an active window is stretched, a step merely spanning
+/// one is not. That keeps the degraded price a pure function of
+/// `(fabric, step, start, inner model)`, so the cost seam's purity and
+/// strictly-earlier-epoch contracts hold exactly as for the inner model,
+/// and the admission session's settle loop converges unchanged. Energy
+/// is left unscaled (degradation stretches time in this model family,
+/// matching [`VaryingCost`]'s convention).
+///
+/// Dead tiles are *quarantined by price*: any exec starting at/after the
+/// death instant is stretched by [`DEAD_TILE_FACTOR`] — a safety net
+/// under the recovery layer, which re-maps work off dead tiles anyway.
+pub struct DegradedCost {
+    inner: Arc<dyn CostModel>,
+    /// Occupancy epoch declared when any modifier exists.
+    epoch: Cycle,
+    /// Per-tile death cycle (`Cycle::MAX` = alive).
+    dead_at: Vec<Cycle>,
+    /// Per-tile exec stretch windows `(start, end, factor)`.
+    exec_mods: Vec<Vec<(Cycle, Cycle, f64)>>,
+    /// Directional NoC-node-pair stretch windows
+    /// `(src node, dst node, start, end, factor)` — directional because
+    /// the admission session's link resources are ordered pairs.
+    link_mods: Vec<(NodeId, NodeId, Cycle, Cycle, f64)>,
+    /// HBM feed stretch windows `(start, end, factor)`.
+    hbm_mods: Vec<(Cycle, Cycle, f64)>,
+}
+
+impl DegradedCost {
+    /// Materialize `plan`'s pricing timeline over `fabric`, wrapping
+    /// `inner`. The declared epoch is the inner model's (occupancy grids
+    /// must agree), or [`DEGRADED_DEFAULT_EPOCH`] over an invariant
+    /// inner model.
+    pub fn from_plan(
+        inner: Arc<dyn CostModel>,
+        fabric: &Fabric,
+        plan: &crate::sim::FaultPlan,
+    ) -> Self {
+        let nt = fabric.tile_count();
+        let epoch = inner.time_dependence().epoch().unwrap_or(DEGRADED_DEFAULT_EPOCH);
+        let mut dead_at = vec![Cycle::MAX; nt];
+        let mut exec_mods = vec![Vec::new(); nt];
+        let mut link_mods = Vec::new();
+        let mut hbm_mods = Vec::new();
+        for ev in plan.events() {
+            match ev.kind {
+                crate::sim::FaultKind::TileTransient { .. } => {}
+                crate::sim::FaultKind::TileDeath { tile } => {
+                    dead_at[tile] = dead_at[tile].min(ev.at);
+                }
+                crate::sim::FaultKind::LinkDegrade { from, to, factor, duration } => {
+                    link_mods.push((
+                        fabric.tiles[from].node,
+                        fabric.tiles[to].node,
+                        ev.at,
+                        ev.at.saturating_add(duration),
+                        factor,
+                    ));
+                }
+                crate::sim::FaultKind::LinkFail { from, to, duration } => {
+                    link_mods.push((
+                        fabric.tiles[from].node,
+                        fabric.tiles[to].node,
+                        ev.at,
+                        ev.at.saturating_add(duration),
+                        LINK_FAIL_FACTOR,
+                    ));
+                }
+                crate::sim::FaultKind::HbmBrownout { factor, duration } => {
+                    hbm_mods.push((ev.at, ev.at.saturating_add(duration), factor));
+                }
+                crate::sim::FaultKind::CrossbarDrift { tile, factor, duration }
+                | crate::sim::FaultKind::PhotonicThermal { tile, factor, duration } => {
+                    exec_mods[tile].push((ev.at, ev.at.saturating_add(duration), factor));
+                }
+            }
+        }
+        DegradedCost { inner, epoch, dead_at, exec_mods, link_mods, hbm_mods }
+    }
+
+    /// The wrapped model.
+    pub fn inner(&self) -> &Arc<dyn CostModel> {
+        &self.inner
+    }
+
+    /// Death cycle of `tile` (`Cycle::MAX` = never dies in this plan).
+    pub fn dead_at(&self, tile: usize) -> Cycle {
+        self.dead_at[tile]
+    }
+
+    fn has_mods(&self) -> bool {
+        !self.link_mods.is_empty()
+            || !self.hbm_mods.is_empty()
+            || self.exec_mods.iter().any(|m| !m.is_empty())
+            || self.dead_at.iter().any(|&d| d != Cycle::MAX)
+    }
+
+    /// Product of the factors of every window containing `start`.
+    fn window_factor(mods: &[(Cycle, Cycle, f64)], start: Cycle) -> f64 {
+        let mut f = 1.0;
+        for &(lo, hi, fac) in mods {
+            if start >= lo && start < hi {
+                f *= fac;
+            }
+        }
+        f
+    }
+
+    /// Exec-latency factor of `tile` at `start` (wear windows × dead
+    /// quarantine).
+    pub fn exec_factor(&self, tile: usize, start: Cycle) -> f64 {
+        let mut f = Self::window_factor(&self.exec_mods[tile], start);
+        if start >= self.dead_at[tile] {
+            f *= DEAD_TILE_FACTOR;
+        }
+        f
+    }
+
+    /// Transport-latency factor of the ordered node pair at `start`.
+    pub fn link_factor(&self, src: NodeId, dst: NodeId, start: Cycle) -> f64 {
+        let mut f = 1.0;
+        for &(a, b, lo, hi, fac) in &self.link_mods {
+            if a == src && b == dst && start >= lo && start < hi {
+                f *= fac;
+            }
+        }
+        f
+    }
+
+    /// HBM feed-latency factor at `start`.
+    pub fn hbm_factor(&self, start: Cycle) -> f64 {
+        Self::window_factor(&self.hbm_mods, start)
+    }
+}
+
+impl CostModel for DegradedCost {
+    fn time_dependence(&self) -> TimeDependence {
+        if self.has_mods() {
+            TimeDependence::VaryingAfter(self.epoch)
+        } else {
+            // Nothing prices differently: behave exactly as the inner
+            // model (an inert wrapper must not force horizon
+            // invalidation on an invariant session).
+            self.inner.time_dependence()
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "degraded"
+    }
+
+    fn transport(
+        &self,
+        fabric: &Fabric,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Metrics {
+        let mut m = self.inner.transport(fabric, src, dst, bytes, start, occ);
+        m.cycles = stretch(m.cycles, self.link_factor(src, dst, start));
+        m
+    }
+
+    fn feed(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        bytes: u64,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Metrics {
+        let mut m = self.inner.feed(fabric, tile, bytes, start, occ);
+        m.cycles = stretch(m.cycles, self.hbm_factor(start));
+        m
+    }
+
+    fn execute(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        c: &Compute,
+        p: Precision,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Result<TileCost> {
+        let mut cost = self.inner.execute(fabric, tile, c, p, start, occ)?;
+        cost.metrics.cycles = stretch(cost.metrics.cycles, self.exec_factor(tile, start));
+        Ok(cost)
+    }
+}
+
 /// Build the configured cost model (`[fabric.cost]`, see
-/// [`crate::config::CostConfig`]).
+/// [`crate::config::CostConfig`]). Re-validates the knobs so a
+/// hand-built config cannot smuggle NaN/out-of-range values past the
+/// TOML loader's checks.
 pub fn model_from_config(cfg: &CostConfig) -> Result<Arc<dyn CostModel>> {
+    cfg.validate()?;
     let cong = CongestionKnobs { alpha: cfg.alpha, cap: cfg.cap };
     let dvfs = DvfsKnobs {
         window: cfg.window_epochs,
@@ -656,6 +875,116 @@ mod tests {
         assert_eq!(model.dvfs_scale(1, 250, &occ), 1.0);
         // Epoch 0 has no elapsed history at all.
         assert_eq!(model.dvfs_scale(0, 50, &occ), 1.0);
+    }
+
+    #[test]
+    fn degraded_with_empty_plan_is_bit_transparent() {
+        let f = fabric();
+        let plan = crate::sim::FaultPlan::empty();
+        let d = DegradedCost::from_plan(Arc::new(InvariantCost), &f, &plan);
+        // Inert wrapper: declares the inner model's time dependence.
+        assert_eq!(d.time_dependence(), TimeDependence::Invariant);
+        let occ = Occupancy::disabled();
+        let a = d.transport(&f, 0, 3, 4096, 77, &occ);
+        let b = InvariantCost.transport(&f, 0, 3, 4096, 77, &occ);
+        assert_eq!(a, b);
+        assert_eq!(a.total_energy_pj().to_bits(), b.total_energy_pj().to_bits());
+        let a = d.feed(&f, 1, 4096, 77, &occ);
+        let b = InvariantCost.feed(&f, 1, 4096, 77, &occ);
+        assert_eq!(a, b);
+        let c = Compute::MatMul { m: 8, k: 8, n: 8 };
+        let a = d.execute(&f, 0, &c, Precision::Int8, 77, &occ).unwrap();
+        let b = InvariantCost.execute(&f, 0, &c, Precision::Int8, 77, &occ).unwrap();
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    #[test]
+    fn degraded_windows_stretch_only_starts_inside() {
+        use crate::sim::{FaultEvent, FaultKind, FaultPlan};
+        let f = fabric();
+        let plan = FaultPlan::from_events(vec![
+            FaultEvent { at: 1000, kind: FaultKind::HbmBrownout { factor: 1.5, duration: 500 } },
+            FaultEvent {
+                at: 2000,
+                kind: FaultKind::LinkDegrade { from: 0, to: 1, factor: 2.0, duration: 100 },
+            },
+        ]);
+        let d = DegradedCost::from_plan(Arc::new(InvariantCost), &f, &plan);
+        assert_eq!(d.time_dependence(), TimeDependence::VaryingAfter(DEGRADED_DEFAULT_EPOCH));
+        let occ = Occupancy::disabled();
+        let base_feed = f.feed(1, 4096);
+        // Before, inside, at-end, after the brownout window.
+        assert_eq!(d.feed(&f, 1, 4096, 999, &occ).cycles, base_feed.cycles);
+        assert_eq!(
+            d.feed(&f, 1, 4096, 1000, &occ).cycles,
+            (base_feed.cycles as f64 * 1.5).ceil() as u64
+        );
+        assert_eq!(d.feed(&f, 1, 4096, 1500, &occ).cycles, base_feed.cycles);
+        // Energy untouched.
+        assert_eq!(
+            d.feed(&f, 1, 4096, 1200, &occ).total_energy_pj().to_bits(),
+            base_feed.total_energy_pj().to_bits()
+        );
+        // Link mod is directional and node-pair keyed.
+        let (s, t) = (f.tiles[0].node, f.tiles[1].node);
+        let base = f.transport(s, t, 1024);
+        assert_eq!(
+            d.transport(&f, s, t, 1024, 2050, &occ).cycles,
+            (base.cycles as f64 * 2.0).ceil() as u64
+        );
+        let rev = f.transport(t, s, 1024);
+        assert_eq!(d.transport(&f, t, s, 1024, 2050, &occ).cycles, rev.cycles);
+        assert_eq!(d.transport(&f, s, t, 1024, 2100, &occ).cycles, base.cycles);
+    }
+
+    #[test]
+    fn degraded_quarantines_dead_tiles_with_finite_penalty() {
+        use crate::sim::{FaultEvent, FaultKind, FaultPlan};
+        let f = fabric();
+        let plan = FaultPlan::from_events(vec![FaultEvent {
+            at: 500,
+            kind: FaultKind::TileDeath { tile: 2 },
+        }]);
+        let d = DegradedCost::from_plan(Arc::new(InvariantCost), &f, &plan);
+        assert_eq!(d.dead_at(2), 500);
+        assert_eq!(d.dead_at(0), Cycle::MAX);
+        let occ = Occupancy::disabled();
+        let c = Compute::MatMul { m: 4, k: 4, n: 4 };
+        let base = d.execute(&f, 2, &c, Precision::Int8, 499, &occ).unwrap().metrics.cycles;
+        let dead = d.execute(&f, 2, &c, Precision::Int8, 500, &occ).unwrap().metrics.cycles;
+        assert_eq!(dead, (base as f64 * DEAD_TILE_FACTOR).ceil() as u64);
+        assert!(dead < Cycle::MAX / 1024, "penalty must stay far from overflow");
+        // Other tiles price normally.
+        let other = d.execute(&f, 0, &c, Precision::Int8, 500, &occ).unwrap().metrics.cycles;
+        assert_eq!(other, base);
+    }
+
+    #[test]
+    fn degraded_wear_compounds_overlapping_windows() {
+        use crate::sim::{FaultEvent, FaultKind, FaultPlan};
+        let f = fabric();
+        let plan = FaultPlan::from_events(vec![
+            FaultEvent {
+                at: 0,
+                kind: FaultKind::CrossbarDrift { tile: 1, factor: 1.25, duration: 1000 },
+            },
+            FaultEvent {
+                at: 500,
+                kind: FaultKind::PhotonicThermal { tile: 1, factor: 1.5, duration: 1000 },
+            },
+        ]);
+        let d = DegradedCost::from_plan(Arc::new(InvariantCost), &f, &plan);
+        assert_eq!(d.exec_factor(1, 250), 1.25);
+        assert_eq!(d.exec_factor(1, 750), 1.25 * 1.5);
+        assert_eq!(d.exec_factor(1, 1200), 1.5);
+        assert_eq!(d.exec_factor(1, 1500), 1.0);
+    }
+
+    #[test]
+    fn model_from_config_rejects_bad_knobs() {
+        let cfg = CostConfig { alpha: f64::NAN, model: "congestion".into(), ..CostConfig::default() };
+        let err = model_from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("alpha"), "error must name the key: {err}");
     }
 
     #[test]

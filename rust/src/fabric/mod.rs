@@ -19,7 +19,8 @@ mod tile;
 
 pub use cluster::PulpCluster;
 pub use cost::{
-    CongestionKnobs, CostModel, DvfsKnobs, InvariantCost, Occupancy, TimeDependence, VaryingCost,
+    CongestionKnobs, CostModel, DegradedCost, DvfsKnobs, InvariantCost, Occupancy,
+    TimeDependence, VaryingCost,
 };
 pub use dma::Dma;
 pub use hbm::Hbm;

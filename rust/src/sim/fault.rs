@@ -1,0 +1,502 @@
+//! Deterministic fault injection: seeded [`FaultPlan`]s over the shared
+//! simulated timeline.
+//!
+//! ARCHYTAS targets platforms (UAVs, maritime/space systems) where
+//! radiation transients, device wear and thermal drift are operating
+//! conditions, not tail events — and the post-CMOS accelerator kinds
+//! bring their own failure physics (NVM crossbar conductance drift,
+//! photonic thermal excursions). This module is the *injection* half of
+//! the robustness layer: it decides **what breaks when**. The *recovery*
+//! half (retraction, re-mapping, shedding) lives in `coordinator::admit`
+//! ([`crate::coordinator::admit`]'s `FaultySession`), and the *pricing*
+//! half (how a degraded resource costs) in `fabric::cost::DegradedCost`.
+//!
+//! # Fault model
+//!
+//! A [`FaultPlan`] is a time-sorted list of [`FaultEvent`]s drawn from
+//! seven kinds:
+//!
+//! * [`FaultKind::TileTransient`] — a soft upset (SEU-style) on a tile:
+//!   whatever step is executing there at the fault instant produced
+//!   garbage and must be re-run. No lasting damage.
+//! * [`FaultKind::TileDeath`] — permanent tile loss: the tile never
+//!   executes again; in-flight and future work must move elsewhere.
+//! * [`FaultKind::LinkDegrade`] — a (from, to) tile pair's traffic is
+//!   stretched by `factor` for `duration` cycles (marginal SerDes lane,
+//!   ECC retries).
+//! * [`FaultKind::LinkFail`] — the pair's traffic reroutes for
+//!   `duration` cycles at a fixed large penalty.
+//! * [`FaultKind::HbmBrownout`] — HBM feeds are stretched by `factor`
+//!   for `duration` cycles (channel power droop / refresh storm).
+//! * [`FaultKind::CrossbarDrift`] — conductance drift on an
+//!   `nvm-crossbar` tile: executes stretched by `factor` for `duration`
+//!   cycles (re-programming / verify overhead).
+//! * [`FaultKind::PhotonicThermal`] — thermal excursion on a `photonic`
+//!   tile: ring resonators need re-locking; executes stretched by
+//!   `factor` for `duration` cycles.
+//!
+//! The first two are *behavioral* (they afflict in-flight work and force
+//! recovery); the rest are *pricing* faults, materialized into a
+//! `DegradedCost` wrapper so every step **starting** inside an active
+//! window is stretched. A step that starts before a window and merely
+//! spans it is unaffected — the model prices at start time, which keeps
+//! pricing a pure function of `(step, start)` and preserves the cost
+//! seam's strictly-earlier-epoch purity contract.
+//!
+//! # Determinism contract
+//!
+//! Generation draws through [`super::CounterRng`], the counter-based RNG
+//! the parallel-phase determinism contract prescribes: every draw is a
+//! pure function of `(seed, kind, window, resource)` — never of call
+//! order, thread schedule, or how often the plan is regenerated. Two
+//! plans built from the same [`FaultConfig`] and fabric shape are equal
+//! element for element; replaying a recorded trace through
+//! [`FaultPlan::from_events`] reproduces the same sorted order. Events
+//! are sorted by `(time, kind rank, resource)`, so same-cycle faults
+//! apply in one canonical order everywhere.
+//!
+//! An **empty plan is a no-op by construction**: no events, no cost
+//! wrapper, nothing on the calendar — `tests/fault_golden.rs` pins
+//! empty-plan sessions bit-identical to fault-free ones across the
+//! golden matrix.
+
+use super::{CounterRng, Cycle};
+
+/// Draw categories: the first `at3` coordinate of every generation draw.
+/// Distinct constants keep the per-kind streams independent.
+const CAT_TRANSIENT: u64 = 1;
+const CAT_DEATH: u64 = 2;
+const CAT_LINK_DEGRADE: u64 = 3;
+const CAT_LINK_FAIL: u64 = 4;
+const CAT_HBM: u64 = 5;
+const CAT_DRIFT: u64 = 6;
+const CAT_THERMAL: u64 = 7;
+/// Offset mixed into the category for the independent "when in the
+/// window" / "which partner tile" sub-draws.
+const SUB_OFFSET: u64 = 0x100;
+const SUB_PARTNER: u64 = 0x200;
+
+/// Map a raw 64-bit draw to [0, 1) (same 53-bit construction as
+/// [`super::CounterRng::uniform_at`], applied to an `at3` draw).
+#[inline]
+fn u01(draw: u64) -> f64 {
+    (draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// What broke. Tile/link indices refer to fabric tile ids (the
+/// coordinator's resource model); durations/factors ride along so a
+/// recorded trace is self-contained and replayable without its config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Soft upset: the step in flight on `tile` must re-run.
+    TileTransient { tile: usize },
+    /// Permanent loss of `tile`.
+    TileDeath { tile: usize },
+    /// Traffic `from -> to` stretched by `factor` for `duration` cycles.
+    LinkDegrade { from: usize, to: usize, factor: f64, duration: Cycle },
+    /// Traffic `from -> to` rerouted (fixed penalty) for `duration`.
+    LinkFail { from: usize, to: usize, duration: Cycle },
+    /// HBM feeds stretched by `factor` for `duration` cycles.
+    HbmBrownout { factor: f64, duration: Cycle },
+    /// NVM crossbar conductance drift on `tile`.
+    CrossbarDrift { tile: usize, factor: f64, duration: Cycle },
+    /// Photonic thermal excursion on `tile`.
+    PhotonicThermal { tile: usize, factor: f64, duration: Cycle },
+}
+
+impl FaultKind {
+    /// Canonical same-cycle ordering rank (behavioral faults first, so a
+    /// death at `t` is processed before pricing events at `t`).
+    pub fn rank(&self) -> u8 {
+        match self {
+            FaultKind::TileDeath { .. } => 0,
+            FaultKind::TileTransient { .. } => 1,
+            FaultKind::LinkFail { .. } => 2,
+            FaultKind::LinkDegrade { .. } => 3,
+            FaultKind::HbmBrownout { .. } => 4,
+            FaultKind::CrossbarDrift { .. } => 5,
+            FaultKind::PhotonicThermal { .. } => 6,
+        }
+    }
+
+    /// Primary resource index for the canonical sort (tile id, or the
+    /// folded pair for links; 0 for HBM).
+    pub fn resource(&self) -> usize {
+        match self {
+            FaultKind::TileTransient { tile }
+            | FaultKind::TileDeath { tile }
+            | FaultKind::CrossbarDrift { tile, .. }
+            | FaultKind::PhotonicThermal { tile, .. } => *tile,
+            FaultKind::LinkDegrade { from, to, .. } | FaultKind::LinkFail { from, to, .. } => {
+                from * 65_536 + to
+            }
+            FaultKind::HbmBrownout { .. } => 0,
+        }
+    }
+
+    /// The afflicted tile, for the behavioral kinds.
+    pub fn tile(&self) -> Option<usize> {
+        match self {
+            FaultKind::TileTransient { tile } | FaultKind::TileDeath { tile } => Some(*tile),
+            _ => None,
+        }
+    }
+
+    /// True for the kinds that afflict in-flight work (transient/death);
+    /// false for the purely pricing kinds.
+    pub fn is_behavioral(&self) -> bool {
+        matches!(self, FaultKind::TileTransient { .. } | FaultKind::TileDeath { .. })
+    }
+}
+
+/// One fault at an absolute simulated cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: Cycle,
+    pub kind: FaultKind,
+}
+
+/// Knobs of a seeded fault plan plus the recovery parameters the
+/// coordinator's recovery layer reads. All probabilities are
+/// *per-window, per-resource* Bernoulli rates; the default config has
+/// every rate at zero (and a zero horizon), i.e. **no faults** — the
+/// `[fault]` TOML section opts in explicitly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the counter-based draw stream.
+    pub seed: u64,
+    /// Faults are drawn for windows covering `[0, horizon)` cycles.
+    pub horizon: Cycle,
+    /// Window width in cycles (one Bernoulli trial per kind × resource
+    /// × window).
+    pub window: Cycle,
+    pub p_transient: f64,
+    pub p_death: f64,
+    pub p_link_degrade: f64,
+    pub p_link_fail: f64,
+    pub p_hbm_brownout: f64,
+    /// Drawn only for `nvm-crossbar` tiles.
+    pub p_crossbar_drift: f64,
+    /// Drawn only for `photonic` tiles.
+    pub p_photonic_thermal: f64,
+    pub degrade_factor: f64,
+    pub degrade_cycles: Cycle,
+    pub brownout_factor: f64,
+    pub brownout_cycles: Cycle,
+    pub drift_factor: f64,
+    pub drift_cycles: Cycle,
+    pub thermal_factor: f64,
+    pub thermal_cycles: Cycle,
+    /// Detection latency: recovery restarts no earlier than
+    /// `fault time + detect_cycles`.
+    pub detect_cycles: Cycle,
+    /// Transient retries beyond this many attempts shed the request.
+    pub max_retries: u32,
+    /// Exponential backoff base: attempt `k` waits `backoff_base << (k-1)`.
+    pub backoff_base: Cycle,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            horizon: 0,
+            window: 1024,
+            p_transient: 0.0,
+            p_death: 0.0,
+            p_link_degrade: 0.0,
+            p_link_fail: 0.0,
+            p_hbm_brownout: 0.0,
+            p_crossbar_drift: 0.0,
+            p_photonic_thermal: 0.0,
+            degrade_factor: 2.0,
+            degrade_cycles: 2048,
+            brownout_factor: 1.5,
+            brownout_cycles: 2048,
+            drift_factor: 1.25,
+            drift_cycles: 4096,
+            thermal_factor: 1.5,
+            thermal_cycles: 1024,
+            detect_cycles: 16,
+            max_retries: 2,
+            backoff_base: 32,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when this config can never generate an event.
+    pub fn is_inert(&self) -> bool {
+        self.horizon == 0
+            || [
+                self.p_transient,
+                self.p_death,
+                self.p_link_degrade,
+                self.p_link_fail,
+                self.p_hbm_brownout,
+                self.p_crossbar_drift,
+                self.p_photonic_thermal,
+            ]
+            .iter()
+            .all(|&p| p <= 0.0)
+    }
+}
+
+/// A materialized, time-sorted fault trace. Pure data: generating,
+/// recording and replaying all meet in this one representation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The no-fault plan.
+    pub fn empty() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Wrap a recorded/hand-written trace, restoring the canonical
+    /// `(time, kind rank, resource)` order so replays are deterministic
+    /// regardless of how the trace was assembled.
+    pub fn from_events(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| (e.at, e.kind.rank(), e.kind.resource()));
+        FaultPlan { events }
+    }
+
+    /// Generate the plan for a fabric with the given per-tile
+    /// accelerator kind names (`fabric.tiles[t].accel.name()` order).
+    /// Pure in `(cfg, tile_kinds)`: every draw is position-keyed.
+    ///
+    /// A tile that dies stops drawing tile-targeted faults in later
+    /// windows (dead silicon cannot glitch again); link and HBM draws
+    /// are independent of tile liveness.
+    pub fn generate(cfg: &FaultConfig, tile_kinds: &[&str]) -> Self {
+        if cfg.is_inert() || tile_kinds.is_empty() {
+            return FaultPlan::empty();
+        }
+        let rng = CounterRng::new(cfg.seed);
+        let window = cfg.window.max(1);
+        let windows = cfg.horizon.div_ceil(window);
+        let nt = tile_kinds.len();
+        let mut dead = vec![false; nt];
+        let mut events = Vec::new();
+        let offset = |cat: u64, w: u64, r: u64| rng.at3(cat + SUB_OFFSET, w, r) % window;
+        for w in 0..windows {
+            let wstart = w * window;
+            for (t, kind) in tile_kinds.iter().enumerate() {
+                if dead[t] {
+                    continue;
+                }
+                let tu = t as u64;
+                if u01(rng.at3(CAT_TRANSIENT, w, tu)) < cfg.p_transient {
+                    events.push(FaultEvent {
+                        at: wstart + offset(CAT_TRANSIENT, w, tu),
+                        kind: FaultKind::TileTransient { tile: t },
+                    });
+                }
+                if u01(rng.at3(CAT_DEATH, w, tu)) < cfg.p_death {
+                    events.push(FaultEvent {
+                        at: wstart + offset(CAT_DEATH, w, tu),
+                        kind: FaultKind::TileDeath { tile: t },
+                    });
+                    dead[t] = true;
+                }
+                if *kind == "nvm-crossbar" && u01(rng.at3(CAT_DRIFT, w, tu)) < cfg.p_crossbar_drift
+                {
+                    events.push(FaultEvent {
+                        at: wstart + offset(CAT_DRIFT, w, tu),
+                        kind: FaultKind::CrossbarDrift {
+                            tile: t,
+                            factor: cfg.drift_factor,
+                            duration: cfg.drift_cycles,
+                        },
+                    });
+                }
+                if *kind == "photonic" && u01(rng.at3(CAT_THERMAL, w, tu)) < cfg.p_photonic_thermal
+                {
+                    events.push(FaultEvent {
+                        at: wstart + offset(CAT_THERMAL, w, tu),
+                        kind: FaultKind::PhotonicThermal {
+                            tile: t,
+                            factor: cfg.thermal_factor,
+                            duration: cfg.thermal_cycles,
+                        },
+                    });
+                }
+            }
+            if nt >= 2 {
+                // One candidate link fault per window and kind: pick a
+                // deterministic (from, to) tile pair.
+                for (cat, fail) in [(CAT_LINK_DEGRADE, false), (CAT_LINK_FAIL, true)] {
+                    if u01(rng.at3(cat, w, 0)) >= if fail { cfg.p_link_fail } else { cfg.p_link_degrade }
+                    {
+                        continue;
+                    }
+                    let from = (rng.at3(cat + SUB_PARTNER, w, 0) % nt as u64) as usize;
+                    let to =
+                        (from + 1 + (rng.at3(cat + SUB_PARTNER, w, 1) % (nt as u64 - 1)) as usize)
+                            % nt;
+                    let at = wstart + offset(cat, w, 0);
+                    let kind = if fail {
+                        FaultKind::LinkFail { from, to, duration: cfg.degrade_cycles }
+                    } else {
+                        FaultKind::LinkDegrade {
+                            from,
+                            to,
+                            factor: cfg.degrade_factor,
+                            duration: cfg.degrade_cycles,
+                        }
+                    };
+                    events.push(FaultEvent { at, kind });
+                }
+            }
+            if u01(rng.at3(CAT_HBM, w, 0)) < cfg.p_hbm_brownout {
+                events.push(FaultEvent {
+                    at: wstart + offset(CAT_HBM, w, 0),
+                    kind: FaultKind::HbmBrownout {
+                        factor: cfg.brownout_factor,
+                        duration: cfg.brownout_cycles,
+                    },
+                });
+            }
+        }
+        FaultPlan::from_events(events)
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// True when no event prices differently (only behavioral kinds, or
+    /// no events at all) — such a plan needs no cost wrapper.
+    pub fn is_pricing_inert(&self) -> bool {
+        self.events.iter().all(|e| e.kind.is_behavioral())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_all(seed: u64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            horizon: 16 * 1024,
+            window: 1024,
+            p_transient: 0.2,
+            p_death: 0.05,
+            p_link_degrade: 0.3,
+            p_link_fail: 0.1,
+            p_hbm_brownout: 0.2,
+            p_crossbar_drift: 0.4,
+            p_photonic_thermal: 0.4,
+            ..FaultConfig::default()
+        }
+    }
+
+    const KINDS: [&str; 5] =
+        ["digital-npu", "digital-npu", "nvm-crossbar", "photonic", "riscv-cpu"];
+
+    #[test]
+    fn empty_and_inert_configs_generate_nothing() {
+        assert!(FaultPlan::generate(&FaultConfig::default(), &KINDS).is_empty());
+        let zero_horizon = FaultConfig { horizon: 0, ..cfg_all(1) };
+        assert!(FaultPlan::generate(&zero_horizon, &KINDS).is_empty());
+        assert!(FaultPlan::generate(&cfg_all(1), &[]).is_empty());
+        assert!(FaultPlan::empty().is_pricing_inert());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::generate(&cfg_all(7), &KINDS);
+        let b = FaultPlan::generate(&cfg_all(7), &KINDS);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "rates this high must draw something");
+        let c = FaultPlan::generate(&cfg_all(8), &KINDS);
+        assert_ne!(a, c, "different seeds must give different traces");
+    }
+
+    #[test]
+    fn events_are_canonically_sorted_and_in_horizon() {
+        let plan = FaultPlan::generate(&cfg_all(3), &KINDS);
+        let keys: Vec<_> =
+            plan.events().iter().map(|e| (e.at, e.kind.rank(), e.kind.resource())).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        assert!(plan.events().iter().all(|e| e.at < 16 * 1024));
+    }
+
+    #[test]
+    fn kind_specific_wear_targets_matching_tiles_only() {
+        let plan = FaultPlan::generate(&cfg_all(5), &KINDS);
+        for e in plan.events() {
+            match e.kind {
+                FaultKind::CrossbarDrift { tile, .. } => assert_eq!(KINDS[tile], "nvm-crossbar"),
+                FaultKind::PhotonicThermal { tile, .. } => assert_eq!(KINDS[tile], "photonic"),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn dead_tiles_draw_no_further_tile_faults() {
+        let cfg = FaultConfig { p_death: 1.0, p_transient: 1.0, ..cfg_all(9) };
+        let plan = FaultPlan::generate(&cfg, &KINDS);
+        for t in 0..KINDS.len() {
+            let deaths =
+                plan.events().iter().filter(|e| e.kind == FaultKind::TileDeath { tile: t });
+            assert_eq!(deaths.count(), 1, "exactly one death per tile");
+            let death_window = plan
+                .events()
+                .iter()
+                .find(|e| e.kind == FaultKind::TileDeath { tile: t })
+                .map(|e| e.at / cfg.window)
+                .unwrap();
+            for e in plan.events() {
+                if e.kind.tile() == Some(t) || matches!(e.kind, FaultKind::CrossbarDrift { tile, .. } | FaultKind::PhotonicThermal { tile, .. } if tile == t)
+                {
+                    assert!(
+                        e.at / cfg.window <= death_window,
+                        "tile {t} drew a fault after its death window"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_events_restores_canonical_order() {
+        let ev = |at, tile| FaultEvent { at, kind: FaultKind::TileTransient { tile } };
+        let death = FaultEvent { at: 5, kind: FaultKind::TileDeath { tile: 9 } };
+        let plan = FaultPlan::from_events(vec![ev(9, 1), death, ev(5, 0), ev(1, 2)]);
+        let ats: Vec<_> = plan.events().iter().map(|e| e.at).collect();
+        assert_eq!(ats, [1, 5, 5, 9]);
+        // Same-cycle: the death (rank 0) precedes the transient (rank 1).
+        assert_eq!(plan.events()[1].kind, FaultKind::TileDeath { tile: 9 });
+    }
+
+    #[test]
+    fn link_pairs_are_distinct_and_in_range() {
+        let cfg = FaultConfig { p_link_degrade: 1.0, p_link_fail: 1.0, ..cfg_all(2) };
+        let plan = FaultPlan::generate(&cfg, &KINDS);
+        let mut saw_link = false;
+        for e in plan.events() {
+            if let FaultKind::LinkDegrade { from, to, .. } | FaultKind::LinkFail { from, to, .. } =
+                e.kind
+            {
+                saw_link = true;
+                assert!(from < KINDS.len() && to < KINDS.len() && from != to);
+            }
+        }
+        assert!(saw_link);
+    }
+}

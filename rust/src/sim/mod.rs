@@ -23,12 +23,18 @@
 //! * [`CounterRng`] — counter-based (stateless) draws that depend only on
 //!   (key, position), never on call order: the RNG contract parallel
 //!   simulation phases must use (see `noc/sim.rs` determinism docs).
+//! * [`FaultPlan`] ([`fault`]) — seeded, position-keyed fault traces
+//!   (transients, tile death, link/HBM degradation, accelerator wear):
+//!   the deterministic injection half of the robustness layer, consumed
+//!   by `coordinator::admit`'s recovery engine and `fabric::cost`'s
+//!   `DegradedCost` pricing wrapper.
 //! * [`WorkerPool`] — persistent scoped worker pool (std-only) behind the
 //!   NoC's shard-parallel stepping.
 
 mod calendar;
 mod event;
 mod event_wheel;
+pub mod fault;
 mod pool;
 mod rng;
 mod stats;
@@ -36,6 +42,7 @@ mod stats;
 pub use calendar::{Calendar, StampedCalendar};
 pub use event::EventQueue;
 pub use event_wheel::EventWheel;
+pub use fault::{FaultConfig, FaultEvent, FaultKind, FaultPlan};
 pub use pool::{Scope, WorkerPool};
 pub use rng::{CounterRng, Rng};
 pub use stats::StreamingHist;

@@ -16,6 +16,30 @@
 //! disjoint state and emit cross-shard side effects into per-job scratch
 //! buffers that the caller merges sequentially in a fixed order after
 //! `scoped` returns.
+//!
+//! # Panic contract
+//!
+//! A panicking job must not take the pool down with it — a wedged or
+//! poisoned pool would turn one bad shard into a hang of every later
+//! simulation phase. The contract:
+//!
+//! * Workers catch job unwinds ([`std::panic::catch_unwind`]), so a
+//!   panicking job still decrements the pending count and the
+//!   completion barrier **always** releases — no deadlock, ever.
+//! * The panic is re-raised from the *same* [`WorkerPool::scoped`] call
+//!   (message `"WorkerPool: a scoped job panicked"`), after every
+//!   submitted job of the region has finished. Multiple panicking jobs
+//!   fold into that one re-raise.
+//! * The pool survives: workers stay alive (the unwind never crosses
+//!   the worker loop), the panic flag is cleared at the start of every
+//!   region, and later `scoped` regions run unaffected — including the
+//!   case where the *closure* unwound (from the re-entrant panic of a
+//!   nested region or its own bug) and the flag would otherwise leak.
+//! * Side effects of jobs that completed before/alongside the panicking
+//!   one are retained (they ran to completion behind the barrier);
+//!   the panicking job's partial writes are whatever it made them —
+//!   callers treat a panicked region's output as garbage and must not
+//!   merge it.
 
 use std::collections::VecDeque;
 use std::marker::PhantomData;
@@ -257,5 +281,50 @@ mod tests {
         let mut x = 0u32;
         pool.scoped(|scope| scope.execute(|| x = 7));
         assert_eq!(x, 7);
+    }
+
+    #[test]
+    fn many_panicking_jobs_fold_into_one_reraise_and_surviving_work_lands() {
+        let mut pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                for i in 0..16 {
+                    scope.execute(|| {
+                        if i % 4 == 0 {
+                            panic!("shard {i} boom");
+                        }
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }));
+        assert!(r.is_err(), "at least one job panic must surface");
+        // The barrier ran every job: the 12 healthy shards all landed
+        // even though 4 of their siblings panicked.
+        assert_eq!(counter.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn pool_is_not_corrupted_by_repeated_panics() {
+        let mut pool = WorkerPool::new(2);
+        for round in 0..5u64 {
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.scoped(|scope| {
+                    scope.execute(move || panic!("round {round}"));
+                });
+            }));
+            assert!(r.is_err());
+            // A clean region immediately after each panic: the flag was
+            // reset, all workers are alive, the barrier still holds.
+            let mut parts = [0u64; 2];
+            pool.scoped(|scope| {
+                let (a, b) = parts.split_at_mut(1);
+                scope.execute(move || a[0] = round + 1);
+                scope.execute(move || b[0] = round + 2);
+            });
+            assert_eq!(parts, [round + 1, round + 2]);
+        }
+        assert_eq!(pool.workers(), 2, "no worker thread died");
     }
 }

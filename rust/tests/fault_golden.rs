@@ -1,0 +1,535 @@
+//! Differential golden tests for the fault-injection / graceful-
+//! degradation layer (`sim::fault` + `coordinator::FaultySession`).
+//!
+//! Contracts pinned here:
+//!
+//! * **Empty-plan bit-identity** — a `FaultySession` carrying an empty
+//!   [`FaultPlan`] is the fault-free stack bit for bit, across the
+//!   golden mlp/vit × strategy × config matrix and under the
+//!   time-varying cost models — and it does not even wrap the cost
+//!   model (`Arc::ptr_eq` with the fabric's configured model).
+//! * **Incremental ≡ from-scratch** — replaying a fault trace
+//!   incrementally (admissions and `run_until` pauses interleaved with
+//!   the events) bit-matches a from-scratch session admitting the same
+//!   programs up front: `ExecReport::bit_identical` plus full
+//!   [`DegradationReport`] and per-request [`RequestOutcome`] equality,
+//!   deterministically and under every recovery policy.
+//! * **Plan determinism** — [`FaultPlan::generate`] is a pure function
+//!   of (config, tile kinds); recording and replaying through
+//!   [`FaultPlan::from_events`] is the identity; events come out in
+//!   canonical `(time, rank, resource)` order and respect the per-kind
+//!   tile gating (drift only on crossbars, thermal only on photonics).
+//! * **TOML plumbing** — a `[fault]` section parses into
+//!   `FabricConfig::fault` and seeds `FaultySession::new`; an absent
+//!   section is inert and keeps the exact fault-free code path.
+
+use std::sync::Arc;
+
+use archytas::accel::{Compute, Precision};
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::compiler::{FabricProgram, Step};
+use archytas::config::FabricConfig;
+use archytas::coordinator::{
+    cosim, AdmitMeta, CosimSession, ExecReport, FaultySession, RecoveryPolicy,
+};
+use archytas::fabric::Fabric;
+use archytas::prop_assert;
+use archytas::sim::{Cycle, FaultConfig, FaultEvent, FaultKind, FaultPlan, Rng};
+use archytas::testutil::{bundled_fabric, prop};
+use archytas::workloads;
+
+const CONFIGS: [&str; 2] = ["edge16.toml", "homogeneous_npu.toml"];
+const STRATEGIES: [MapStrategy; 3] =
+    [MapStrategy::RoundRobin, MapStrategy::Greedy, MapStrategy::Ilp];
+const POLICIES: [RecoveryPolicy; 4] = [
+    RecoveryPolicy::Retry,
+    RecoveryPolicy::Remap,
+    RecoveryPolicy::DeadlineAware,
+    RecoveryPolicy::Shed,
+];
+
+fn workload(name: &str) -> archytas::ir::Graph {
+    match name {
+        "mlp" => workloads::mlp(4, 64, &[32], 10, 7).unwrap(),
+        "vit" => {
+            let p = workloads::VitParams {
+                batch: 2,
+                tokens: 8,
+                dim: 32,
+                depth: 1,
+                mlp_ratio: 2,
+                patch_dim: 16,
+                classes: 10,
+            };
+            workloads::vit(&p, 3).unwrap()
+        }
+        other => panic!("unknown workload {other}"),
+    }
+}
+
+fn lowered(fabric: &Fabric, wname: &str, strategy: MapStrategy) -> FabricProgram {
+    let g = workload(wname);
+    let m = map_graph(&g, fabric, strategy, Precision::Int8).unwrap();
+    lower(&g, fabric, &m).unwrap()
+}
+
+fn assert_identical(a: &ExecReport, b: &ExecReport, tag: &str) {
+    assert_eq!(a.cycles, b.cycles, "{tag}: makespan");
+    assert_eq!(a.step_done, b.step_done, "{tag}: step_done");
+    assert_eq!(a.tile_busy, b.tile_busy, "{tag}: tile_busy");
+    assert!(a.bit_identical(b), "{tag}: bit_identical contract");
+}
+
+/// Tile executing the program's final Exec step — work that is
+/// certainly still uncompleted halfway through a solo episode.
+fn last_exec_tile(prog: &FabricProgram) -> usize {
+    prog.steps
+        .iter()
+        .rev()
+        .find_map(|s| match s {
+            Step::Exec { tile, .. } => Some(*tile),
+            _ => None,
+        })
+        .expect("lowered program has an Exec step")
+}
+
+/// (a) Empty-plan bit-identity across the full golden matrix: the
+/// fault layer threaded through admission must not move a single bit
+/// when no faults are planned — and must not even wrap the cost model.
+#[test]
+fn empty_plan_is_bitwise_fault_free_across_the_matrix() {
+    let cfg = FaultConfig::default();
+    assert!(cfg.is_inert(), "the default fault config must be inert");
+    for cname in CONFIGS {
+        let fabric = bundled_fabric(cname);
+        for wname in ["mlp", "vit"] {
+            for strategy in STRATEGIES {
+                let tag = format!("{cname}/{wname}/{strategy:?}");
+                let prog = lowered(&fabric, wname, strategy);
+                let base = cosim(&fabric, &prog).unwrap();
+                let mut fs =
+                    FaultySession::with_plan(&fabric, FaultPlan::empty(), &cfg, RecoveryPolicy::Retry)
+                        .unwrap();
+                assert!(
+                    Arc::ptr_eq(fs.cost_model(), fabric.cost_model()),
+                    "{tag}: empty plan must not wrap the cost model"
+                );
+                let h = fs.admit_at(&prog, 0).unwrap();
+                let got = fs.report().unwrap();
+                assert_identical(&got, &base, &tag);
+                let deg = fs.degradation(&got);
+                assert_eq!(
+                    (deg.programs, deg.completed, deg.shed, deg.faults_injected),
+                    (1, 1, 0, 0),
+                    "{tag}: degradation counters"
+                );
+                assert_eq!(deg.availability, 1.0, "{tag}");
+                assert_eq!(fs.outcome(h), Default::default(), "{tag}: outcome");
+            }
+        }
+    }
+}
+
+/// With no faults the recovery policy is dead code: every policy
+/// produces the same bits as the fault-free run.
+#[test]
+fn empty_plan_is_recovery_policy_invariant() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, "mlp", MapStrategy::Greedy);
+    let base = cosim(&fabric, &prog).unwrap();
+    for policy in POLICIES {
+        let mut fs =
+            FaultySession::with_plan(&fabric, FaultPlan::empty(), &FaultConfig::default(), policy)
+                .unwrap();
+        fs.admit_at(&prog, 0).unwrap();
+        assert_identical(&fs.report().unwrap(), &base, &format!("{policy:?}"));
+    }
+}
+
+/// Empty-plan bit-identity under the time-varying configured model
+/// (`edge16_loaded.toml` → congestion+DVFS), with staggered admissions
+/// and a mid-episode pause on both sides.
+#[test]
+fn empty_plan_is_noop_under_time_varying_models() {
+    let fabric = bundled_fabric("edge16_loaded.toml");
+    assert_eq!(fabric.cost_model().name(), "congestion_dvfs");
+    let mlp = lowered(&fabric, "mlp", MapStrategy::Greedy);
+    let vit = lowered(&fabric, "vit", MapStrategy::RoundRobin);
+    let mut plain = CosimSession::new(&fabric);
+    plain.admit_at(&mlp, 0).unwrap();
+    plain.admit_at(&vit, 777).unwrap();
+    plain.run_until(1_500).unwrap();
+    plain.admit_at(&mlp, 3_000).unwrap();
+    let want = plain.report().unwrap();
+    let mut faulty = FaultySession::with_plan(
+        &fabric,
+        FaultPlan::empty(),
+        &FaultConfig::default(),
+        RecoveryPolicy::DeadlineAware,
+    )
+    .unwrap();
+    assert!(Arc::ptr_eq(faulty.cost_model(), fabric.cost_model()));
+    faulty.admit_at(&mlp, 0).unwrap();
+    faulty.admit_at(&vit, 777).unwrap();
+    faulty.run_until(1_500).unwrap();
+    faulty.admit_at(&mlp, 3_000).unwrap();
+    let got = faulty.report().unwrap();
+    assert_identical(&got, &want, "edge16_loaded/varying");
+    let deg = faulty.degradation(&got);
+    assert_eq!((deg.programs, deg.completed, deg.faults_injected), (3, 3, 0));
+}
+
+/// The cost-model wrapping rule: purely-transient plans price nothing
+/// and keep the base model's very `Arc`; any other kind (a death needs
+/// quarantine pricing) swaps in the degraded wrapper.
+#[test]
+fn only_pricing_relevant_plans_wrap_the_cost_model() {
+    let fabric = bundled_fabric("edge16.toml");
+    let cfg = FaultConfig::default();
+    let transients = FaultPlan::from_events(vec![
+        FaultEvent { at: 10, kind: FaultKind::TileTransient { tile: 0 } },
+        FaultEvent { at: 500, kind: FaultKind::TileTransient { tile: 3 } },
+    ]);
+    assert!(transients.is_pricing_inert());
+    let s = FaultySession::with_plan(&fabric, transients, &cfg, RecoveryPolicy::Retry).unwrap();
+    assert!(Arc::ptr_eq(s.cost_model(), fabric.cost_model()));
+    let death = FaultPlan::from_events(vec![FaultEvent {
+        at: 100,
+        kind: FaultKind::TileDeath { tile: 0 },
+    }]);
+    let s = FaultySession::with_plan(&fabric, death, &cfg, RecoveryPolicy::Retry).unwrap();
+    assert!(!Arc::ptr_eq(s.cost_model(), fabric.cost_model()));
+    assert_eq!(s.cost_model().name(), "degraded");
+    // Out-of-fabric tile indices are rejected up front.
+    let bogus = FaultPlan::from_events(vec![FaultEvent {
+        at: 1,
+        kind: FaultKind::TileDeath { tile: fabric.tile_count() },
+    }]);
+    assert!(FaultySession::with_plan(&fabric, bogus, &cfg, RecoveryPolicy::Retry).is_err());
+}
+
+/// (c) Plan generation: deterministic in (config, kinds), seed-
+/// sensitive, canonically ordered, kind-gated, record/replay-closed.
+#[test]
+fn generated_plans_are_deterministic_seeded_and_gated() {
+    let fabric = bundled_fabric("edge16.toml");
+    let kinds: Vec<&str> = fabric.tiles.iter().map(|t| t.accel.name()).collect();
+    let cfg = FaultConfig {
+        seed: 42,
+        horizon: 1 << 16,
+        window: 1024,
+        p_transient: 0.02,
+        p_death: 0.005,
+        p_link_degrade: 0.01,
+        p_link_fail: 0.004,
+        p_hbm_brownout: 0.01,
+        p_crossbar_drift: 0.05,
+        p_photonic_thermal: 0.05,
+        ..FaultConfig::default()
+    };
+    let a = FaultPlan::generate(&cfg, &kinds);
+    assert!(!a.is_empty(), "premise: these rates over this horizon draw events");
+    // Pure function of (config, kinds).
+    assert_eq!(a, FaultPlan::generate(&cfg, &kinds));
+    // Seed sensitivity.
+    let b = FaultPlan::generate(&FaultConfig { seed: 43, ..cfg.clone() }, &kinds);
+    assert_ne!(a, b, "seed must steer the draw stream");
+    // Canonical (time, rank, resource) order — the replay order.
+    for w in a.events().windows(2) {
+        let key = |e: &FaultEvent| (e.at, e.kind.rank(), e.kind.resource());
+        assert!(key(&w[0]) <= key(&w[1]), "events out of canonical order: {w:?}");
+    }
+    // Recording and replaying is the identity.
+    assert_eq!(FaultPlan::from_events(a.events().to_vec()), a);
+    // Bounds and per-kind tile gating.
+    for ev in a.events() {
+        assert!(ev.at < cfg.horizon, "{ev:?} beyond the horizon");
+        match ev.kind {
+            FaultKind::CrossbarDrift { tile, .. } => {
+                assert_eq!(kinds[tile], "nvm-crossbar", "drift gated to crossbars: {ev:?}")
+            }
+            FaultKind::PhotonicThermal { tile, .. } => {
+                assert_eq!(kinds[tile], "photonic", "thermal gated to photonics: {ev:?}")
+            }
+            FaultKind::TileTransient { tile } | FaultKind::TileDeath { tile } => {
+                assert!(tile < kinds.len())
+            }
+            FaultKind::LinkDegrade { from, to, .. } | FaultKind::LinkFail { from, to, .. } => {
+                assert!(from < kinds.len() && to < kinds.len() && from != to)
+            }
+            FaultKind::HbmBrownout { .. } => {}
+        }
+    }
+    // edge16 has no photonic tiles, so the gate means zero thermal events.
+    assert!(kinds.iter().all(|&k| k != "photonic"));
+    assert!(
+        a.events()
+            .iter()
+            .all(|e| !matches!(e.kind, FaultKind::PhotonicThermal { .. })),
+        "thermal events on a photonic-free fabric"
+    );
+    // The inert default generates nothing.
+    assert!(FaultPlan::generate(&FaultConfig::default(), &kinds).is_empty());
+}
+
+/// (b) Incremental ≡ from-scratch at golden scale: a mixed trace
+/// (transient + death + HBM brownout + link degrade) over lowered
+/// mlp/vit programs on the heterogeneous fabric. The incremental
+/// session pauses twice mid-episode and admits the second program after
+/// every event is processed; the oracle admits everything up front.
+/// Reports, degradation telemetry and per-request outcomes must agree
+/// bit for bit under every recovery policy.
+#[test]
+fn seeded_trace_incremental_matches_from_scratch() {
+    let fabric = bundled_fabric("edge16.toml");
+    let mlp = lowered(&fabric, "mlp", MapStrategy::Greedy);
+    let vit = lowered(&fabric, "vit", MapStrategy::Greedy);
+    let solo = cosim(&fabric, &mlp).unwrap();
+    let mid = solo.cycles / 2;
+    let victim = last_exec_tile(&mlp);
+    let plan = FaultPlan::from_events(vec![
+        FaultEvent { at: 5, kind: FaultKind::TileTransient { tile: victim } },
+        FaultEvent { at: 10, kind: FaultKind::LinkDegrade { from: 0, to: 1, factor: 2.0, duration: mid } },
+        FaultEvent { at: mid / 2, kind: FaultKind::HbmBrownout { factor: 1.5, duration: mid } },
+        FaultEvent { at: mid, kind: FaultKind::TileDeath { tile: victim } },
+    ]);
+    let cfg = FaultConfig::default();
+    let late = solo.cycles * 2;
+    for policy in POLICIES {
+        let tag = format!("{policy:?}");
+        let mut oracle = FaultySession::with_plan(&fabric, plan.clone(), &cfg, policy).unwrap();
+        let o1 = oracle.admit_at(&mlp, 0).unwrap();
+        let o2 = oracle.admit_at(&vit, late).unwrap();
+        let want = oracle.report().unwrap();
+        let want_deg = oracle.degradation(&want);
+
+        let mut inc = FaultySession::with_plan(&fabric, plan.clone(), &cfg, policy).unwrap();
+        let h1 = inc.admit_at(&mlp, 0).unwrap();
+        inc.run_until(mid / 4).unwrap();
+        inc.run_until(mid + 1).unwrap();
+        let h2 = inc.admit_at(&vit, late).unwrap();
+        inc.run_until(late + 10).unwrap();
+        let got = inc.report().unwrap();
+        let got_deg = inc.degradation(&got);
+
+        assert_identical(&got, &want, &tag);
+        assert_eq!(got_deg, want_deg, "{tag}: degradation telemetry diverged");
+        assert_eq!(inc.outcome(h1), oracle.outcome(o1), "{tag}: outcome 1");
+        assert_eq!(inc.outcome(h2), oracle.outcome(o2), "{tag}: outcome 2");
+        // The trace must actually bite: the death lands mid-flight.
+        assert!(got_deg.faults_effective >= 1, "{tag}: trace was fully masked");
+        if policy == RecoveryPolicy::Shed {
+            assert!(got_deg.shed >= 1, "{tag}: shed policy must shed the afflicted request");
+        }
+        if policy == RecoveryPolicy::Retry {
+            // Both events before `late` were processed live; all four
+            // plan events (2 behavioral + 2 pricing) were injected.
+            assert_eq!(got_deg.faults_injected, 4, "{tag}");
+            assert_eq!(got_deg.pricing_events, 2, "{tag}");
+            // Remapped off the dead tile, nothing shed.
+            assert_eq!((got_deg.shed, got_deg.availability), (0, 1.0), "{tag}");
+            assert!(inc.outcome(h1).remapped, "{tag}");
+        }
+    }
+}
+
+/// Random synthetic DAG program over `nt` tiles (forward deps only) —
+/// the admission property generator's shape.
+fn random_program(rng: &mut Rng, nt: usize) -> FabricProgram {
+    let n = rng.below(12) + 1;
+    let mut steps = Vec::new();
+    for i in 0..n {
+        let mut deps: Vec<usize> = Vec::new();
+        if i > 0 {
+            for _ in 0..rng.below(3) {
+                deps.push(rng.below(i));
+            }
+        }
+        let step = match rng.below(3) {
+            0 => Step::Load {
+                tile: rng.below(nt),
+                bytes: (rng.below(4000) + 1) as u64,
+                node: 0,
+                deps,
+            },
+            1 => Step::Transfer {
+                from: rng.below(nt),
+                to: rng.below(nt),
+                bytes: (rng.below(4000) + 1) as u64,
+                node: 0,
+                deps,
+            },
+            _ => Step::Exec {
+                tile: rng.below(nt),
+                node: 0,
+                compute: Compute::MatMul {
+                    m: rng.below(8) + 1,
+                    k: rng.below(8) + 1,
+                    n: rng.below(8) + 1,
+                },
+                precision: Precision::Int8,
+                deps,
+            },
+        };
+        steps.push(step);
+    }
+    FabricProgram { steps, producer: Vec::new() }
+}
+
+fn small_fabric() -> Fabric {
+    Fabric::build(
+        FabricConfig::from_toml(
+            "[noc]\nwidth = 3\nheight = 3\n\
+             [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+/// (b') Random-perturbation property sweep: random programs, random
+/// fault traces, random recovery policy and random `run_until` pause
+/// granularity — the incremental session must bit-match the pause-free
+/// from-scratch oracle, including the degradation telemetry (the lazy
+/// event rule is path-independent).
+#[test]
+fn prop_faulty_incremental_matches_from_scratch() {
+    let fabric = small_fabric();
+    let nt = fabric.tile_count();
+    prop::check(15, |rng| {
+        let mut events = Vec::new();
+        for _ in 0..rng.below(5) {
+            let at = (rng.below(4000) + 1) as Cycle;
+            let kind = match rng.below(4) {
+                // Deaths spare tiles nt-2.. so a same-kind re-map target
+                // always exists (shed-for-lack-of-silicon is covered
+                // deterministically elsewhere).
+                0 => FaultKind::TileDeath { tile: rng.below(nt - 2) },
+                1 => FaultKind::TileTransient { tile: rng.below(nt) },
+                2 => FaultKind::HbmBrownout { factor: 1.5, duration: 2_000 },
+                _ => {
+                    let from = rng.below(nt);
+                    FaultKind::LinkDegrade {
+                        from,
+                        to: (from + 1 + rng.below(nt - 1)) % nt,
+                        factor: 2.0,
+                        duration: 1_500,
+                    }
+                }
+            };
+            events.push(FaultEvent { at, kind });
+        }
+        let plan = FaultPlan::from_events(events);
+        let policy = POLICIES[rng.below(POLICIES.len())];
+        let cfg = FaultConfig::default();
+        let mut admissions = Vec::new();
+        for _ in 0..rng.below(4) + 1 {
+            let p = random_program(rng, nt);
+            let at = rng.below(3000) as Cycle;
+            let deadline = if rng.below(3) == 0 {
+                2_000 + rng.below(20_000) as Cycle
+            } else {
+                Cycle::MAX
+            };
+            admissions.push((p, at, AdmitMeta { priority: 0, deadline }));
+        }
+        let mut inc =
+            FaultySession::with_plan(&fabric, plan.clone(), &cfg, policy).map_err(|e| e.to_string())?;
+        let mut handles = Vec::new();
+        for (p, at, meta) in &admissions {
+            handles.push(inc.admit_with(p, *at, *meta).map_err(|e| e.to_string())?);
+        }
+        for _ in 0..rng.below(4) {
+            inc.run_until(rng.below(6000) as Cycle).map_err(|e| e.to_string())?;
+        }
+        let got = inc.report().map_err(|e| e.to_string())?;
+        let got_deg = inc.degradation(&got);
+        let mut fresh =
+            FaultySession::with_plan(&fabric, plan, &cfg, policy).map_err(|e| e.to_string())?;
+        let mut oracle_handles = Vec::new();
+        for (p, at, meta) in &admissions {
+            oracle_handles.push(fresh.admit_with(p, *at, *meta).map_err(|e| e.to_string())?);
+        }
+        let want = fresh.report().map_err(|e| e.to_string())?;
+        let want_deg = fresh.degradation(&want);
+        prop_assert!(
+            got.bit_identical(&want),
+            "{policy:?}: incremental diverged: cycles {} vs {}, steps {:?} vs {:?}",
+            got.cycles,
+            want.cycles,
+            got.step_done,
+            want.step_done
+        );
+        prop_assert!(
+            got_deg == want_deg,
+            "{policy:?}: degradation diverged: {got_deg:?} vs {want_deg:?}"
+        );
+        for (h, o) in handles.iter().zip(&oracle_handles) {
+            prop_assert!(
+                inc.outcome(*h) == fresh.outcome(*o),
+                "{policy:?}: outcome diverged: {:?} vs {:?}",
+                inc.outcome(*h),
+                fresh.outcome(*o)
+            );
+        }
+        Ok(())
+    });
+}
+
+/// (d) TOML plumbing: a `[fault]` section reaches `FabricConfig::fault`,
+/// seeds a deterministic plan through `FaultySession::new`, and the
+/// absent-section default stays on the exact fault-free path.
+#[test]
+fn fault_section_plumbs_from_toml() {
+    let cfg = FabricConfig::from_toml(
+        "[noc]\nwidth = 3\nheight = 3\n\
+         [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n\
+         [fault]\n\
+         seed = 9\n\
+         horizon_cycles = 65536\n\
+         window_cycles = 512\n\
+         p_transient = 0.05\n\
+         p_death = 0.01\n\
+         detect_cycles = 24\n\
+         max_retries = 3\n\
+         backoff_base = 64\n",
+    )
+    .unwrap();
+    assert!(!cfg.fault.is_inert());
+    assert_eq!((cfg.fault.seed, cfg.fault.window), (9, 512));
+    assert_eq!((cfg.fault.detect_cycles, cfg.fault.max_retries, cfg.fault.backoff_base), (24, 3, 64));
+    let fabric = Fabric::build(cfg).unwrap();
+    let mut s = FaultySession::new(&fabric, &fabric.cfg.fault, RecoveryPolicy::Retry).unwrap();
+    assert!(!s.plan().is_empty(), "a seeded section must generate a plan");
+    // Pure function of the config: a second session sees the same plan.
+    let s2 = FaultySession::new(&fabric, &fabric.cfg.fault, RecoveryPolicy::Retry).unwrap();
+    assert_eq!(s.plan(), s2.plan());
+    // The seeded session serves an episode without violating the
+    // degradation-accounting invariants.
+    let prog = FabricProgram {
+        steps: vec![Step::Exec {
+            tile: 0,
+            node: 0,
+            compute: Compute::MatMul { m: 64, k: 64, n: 64 },
+            precision: Precision::Int8,
+            deps: Vec::new(),
+        }],
+        producer: Vec::new(),
+    };
+    s.admit_at(&prog, 0).unwrap();
+    let rep = s.report().unwrap();
+    let deg = s.degradation(&rep);
+    assert_eq!(deg.completed + deg.shed, deg.programs);
+    assert_eq!(deg.faults_masked + deg.faults_effective + deg.pricing_events, deg.faults_injected);
+    // Absent section: inert config, empty plan, unwrapped model.
+    let inert = FabricConfig::from_toml(
+        "[noc]\nwidth = 3\nheight = 3\n[[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+    )
+    .unwrap();
+    assert!(inert.fault.is_inert());
+    let f2 = Fabric::build(inert).unwrap();
+    let s3 = FaultySession::new(&f2, &f2.cfg.fault, RecoveryPolicy::Retry).unwrap();
+    assert!(s3.plan().is_empty());
+    assert!(Arc::ptr_eq(s3.cost_model(), f2.cost_model()));
+}

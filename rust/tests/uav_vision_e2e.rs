@@ -1,0 +1,189 @@
+//! Tier-1 promotion of the UAV-vision scenario (examples/uav_vision.rs,
+//! paper Sec. I use case): the ViT-tiny pipeline on the heterogeneous
+//! edge-16 fabric, as an end-to-end test — fault-free golden first,
+//! then a seeded-fault variant asserting the degradation report.
+//!
+//! The example's PJRT half needs the external XLA runtime (`pjrt`
+//! feature) and stays in the example; everything the co-simulation half
+//! computes — per-precision compilation, timing/energy, batched serving
+//! through the dynamic batcher, and degraded serving on a fabric that
+//! loses a tile mid-stream — is pinned here so `cargo test` exercises
+//! the full stack the example demos.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, node_compute, MapStrategy};
+use archytas::compiler::{FabricProgram, Step};
+use archytas::coordinator::{
+    cosim, BatchServer, CosimExecutor, CosimSession, DegradedExecutor, FaultySession,
+    RecoveryPolicy, ServeRequest,
+};
+use archytas::fabric::Fabric;
+use archytas::runtime::Tensor;
+use archytas::sim::{FaultConfig, FaultEvent, FaultKind, FaultPlan};
+use archytas::testutil::bundled_fabric;
+use archytas::workloads;
+
+/// The example's frame/classifier shape: 16x16 RGB frames, 10 classes.
+const FRAME: usize = 16 * 16 * 3;
+const CLASSES: usize = 10;
+
+fn vit_graph() -> archytas::ir::Graph {
+    workloads::vit(&workloads::VitParams::default(), 0).unwrap()
+}
+
+fn lowered(fabric: &Fabric, p: Precision) -> FabricProgram {
+    let g = vit_graph();
+    let m = map_graph(&g, fabric, MapStrategy::Greedy, p).unwrap();
+    lower(&g, fabric, &m).unwrap()
+}
+
+/// Fault-free golden: the example's co-simulation table. Every
+/// precision variant compiles onto the edge fabric, schedules every
+/// compute node, produces a plausible timing/energy report — and the
+/// whole pipeline is deterministic (two runs, identical bits) and
+/// engine-consistent (one-shot co-sim ≡ admission session at t=0).
+#[test]
+fn uav_vision_cosim_golden() {
+    let fabric = bundled_fabric("edge16.toml");
+    let g = vit_graph();
+    let compute_nodes =
+        (0..g.len()).filter(|&id| node_compute(&g, id).is_some()).count();
+    for p in [Precision::F32, Precision::Int8, Precision::Analog] {
+        let tag = format!("{p:?}");
+        let prog = lowered(&fabric, p);
+        // The compiler scheduled every layer (the example's sanity tie).
+        assert_eq!(prog.exec_steps(), compute_nodes, "{tag}: exec steps vs compute nodes");
+        let rep = cosim(&fabric, &prog).unwrap();
+        assert!(rep.cycles > 0, "{tag}");
+        assert!(rep.metrics.total_energy_pj() > 0.0, "{tag}");
+        let util = rep.mean_utilization();
+        assert!(util > 0.0 && util <= 1.0, "{tag}: utilization {util}");
+        // Deterministic: the same compile + co-sim reproduces the bits.
+        assert!(cosim(&fabric, &lowered(&fabric, p)).unwrap().bit_identical(&rep), "{tag}");
+        // Engine-consistent: t=0 admission folds to the same report.
+        let mut s = CosimSession::new(&fabric);
+        s.admit_at(&prog, 0).unwrap();
+        assert!(s.report().unwrap().bit_identical(&rep), "{tag}: session vs cosim");
+    }
+}
+
+/// Pre-queue `n` frame requests (deterministic synthetic frames) and
+/// return the receiver plus the reply channels.
+fn queue_frames(n: usize) -> (mpsc::Receiver<ServeRequest>, Vec<mpsc::Receiver<Vec<f32>>>) {
+    let (tx, rx) = mpsc::channel::<ServeRequest>();
+    let mut replies = Vec::new();
+    for i in 0..n {
+        let mut rng = archytas::sim::Rng::new(7919 + i as u64);
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(ServeRequest {
+            sample: (0..FRAME).map(|_| rng.normal() as f32).collect(),
+            reply: rtx,
+            submitted: Instant::now(),
+        })
+        .unwrap();
+        replies.push(rrx);
+    }
+    (rx, replies)
+}
+
+/// Mock classifier standing in for the PJRT artifact: row -> its first
+/// `CLASSES` elements (deterministic, shape-correct).
+fn mock_classifier(input: &Tensor) -> archytas::Result<Tensor> {
+    let b = input.dims()[0];
+    let s = input.dims()[1];
+    let mut out = Vec::with_capacity(b * CLASSES);
+    for i in 0..b {
+        out.extend_from_slice(&input.data()[i * s..i * s + CLASSES]);
+    }
+    Tensor::new(vec![b, CLASSES], out)
+}
+
+/// Fault-free serving golden: frames stream through the dynamic
+/// batcher with the ViT program as the per-batch timing model. Every
+/// request is answered with the mock classifier's exact output, and
+/// every formed batch gets a positive simulated fabric makespan.
+#[test]
+fn uav_vision_serves_frames_with_simulated_latency() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, Precision::Int8);
+    let solo = cosim(&fabric, &prog).unwrap();
+    let mut sim = CosimExecutor::new(&fabric, prog, solo.cycles / 4);
+    let (rx, replies) = queue_frames(10);
+    let server = BatchServer::new(FRAME, CLASSES, 4);
+    let stats = server.run_cosim(rx, mock_classifier, &mut sim).unwrap();
+    assert_eq!(stats.requests, 10);
+    assert!(stats.batches >= 3, "max_batch 4 over 10 frames");
+    assert_eq!(stats.sim_cycles.len(), stats.batches);
+    assert!(stats.sim_cycles.iter().all(|&c| c > 0));
+    // Overlapping arrivals queue on shared tiles: later batches can
+    // only be as fast as a solo run or slower.
+    assert!(stats.sim_cycles.iter().all(|&c| c >= solo.cycles));
+    for r in replies {
+        let out = r.recv().unwrap();
+        assert_eq!(out.len(), CLASSES);
+    }
+    let rep = sim.session_mut().report().unwrap();
+    assert_eq!(rep.programs.len(), stats.batches);
+}
+
+/// Seeded-fault variant: the tile running the ViT head dies while the
+/// first batch is in flight. Under the retry policy every batch
+/// re-maps onto surviving silicon, nothing is shed, and the
+/// degradation report quantifies exactly one effective fault.
+#[test]
+fn uav_vision_degrades_gracefully_when_a_tile_dies() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, Precision::Int8);
+    let solo = cosim(&fabric, &prog).unwrap();
+    let victim = prog
+        .steps
+        .iter()
+        .rev()
+        .find_map(|s| match s {
+            Step::Exec { tile, .. } => Some(*tile),
+            _ => None,
+        })
+        .expect("vit program has exec steps");
+    let plan = FaultPlan::from_events(vec![FaultEvent {
+        at: solo.cycles / 2,
+        kind: FaultKind::TileDeath { tile: victim },
+    }]);
+    let cfg = FaultConfig::default();
+    let session = FaultySession::with_plan(&fabric, plan, &cfg, RecoveryPolicy::Retry).unwrap();
+    let mut sim = DegradedExecutor::with_session(session, prog, solo.cycles / 4);
+    let (rx, replies) = queue_frames(10);
+    let server = BatchServer::new(FRAME, CLASSES, 4);
+    let stats = server.run_degraded(rx, mock_classifier, &mut sim).unwrap();
+    assert_eq!(stats.requests, 10);
+    assert_eq!(stats.sim_cycles.len(), stats.batches);
+    // Functionally nothing is lost: every frame still gets its answer.
+    for r in replies {
+        assert_eq!(r.recv().unwrap().len(), CLASSES);
+    }
+    // Recovery telemetry: every batch survived by re-mapping off the
+    // dead tile; none were shed, none retried in place.
+    let outcomes = sim.outcomes();
+    assert_eq!(outcomes.len(), stats.batches);
+    assert!(outcomes.iter().all(|o| o.remapped), "every batch used the dead tile");
+    assert!(outcomes.iter().all(|o| !o.shed), "retry policy must not shed");
+    assert!(stats.sim_cycles.iter().all(|&c| c > 0), "no shed batch, no zero makespan");
+    let (rep, deg) = sim.report_degraded().unwrap();
+    assert_eq!(
+        (deg.programs, deg.completed, deg.shed),
+        (stats.batches, stats.batches, 0)
+    );
+    assert_eq!(deg.availability, 1.0);
+    assert_eq!((deg.faults_injected, deg.faults_effective, deg.faults_masked), (1, 1, 0));
+    assert!(deg.mean_cycles_between_effective.is_finite());
+    assert!(deg.mean_cycles_between_effective > 0.0);
+    // Nothing completed on dead silicon.
+    assert_eq!(rep.tile_busy[victim], 0, "retained work on the dead tile");
+    // The degraded stream is still a valid serving run: one span per
+    // batch, all finishing after the death.
+    assert_eq!(rep.programs.len(), stats.batches);
+    assert!(rep.programs.iter().all(|p| p.finished_at > solo.cycles / 2));
+}
