@@ -13,6 +13,12 @@
 //!   request — incremental re-simulation prices only the new program;
 //! * **batched admit**: `AdmissionQueue::admit_all` + one drain — the
 //!   burst path.
+//!
+//! It then runs the shard-parallel threads sweep (1/2/4/8 worker
+//! threads over one time-varying stream, every report bit-checked
+//! against the sequential engine) and writes the whole evidence bundle —
+//! timings, golden verdicts, stamp — to `rust/BENCH_admission.json`,
+//! which CI greps alongside `BENCH_faults.json`.
 
 #[path = "util.rs"]
 mod util;
@@ -29,6 +35,8 @@ use archytas::sim::Cycle;
 use archytas::testutil::{bundled_fabric, merge_programs};
 use archytas::workloads;
 
+const SWEEP_THREADS: [usize; 4] = [1, 2, 4, 8];
+
 fn golden_check(a: &ExecReport, b: &ExecReport, tag: &str) {
     let merged_ok = a.cycles == b.cycles
         && a.step_done == b.step_done
@@ -41,9 +49,9 @@ fn golden_check(a: &ExecReport, b: &ExecReport, tag: &str) {
     assert!(merged_ok, "{tag}: admission engine diverged");
 }
 
-fn burst_row(fabric: &Fabric, cfg: &str, k: usize) {
-    // K small heterogeneous requests (three mlp shapes cycled).
-    let shapes: Vec<FabricProgram> = [(4usize, 64usize, 32usize), (8, 32, 16), (2, 48, 24)]
+/// K small heterogeneous requests (three mlp shapes cycled).
+fn request_shapes(fabric: &Fabric) -> Vec<FabricProgram> {
+    [(4usize, 64usize, 32usize), (8, 32, 16), (2, 48, 24)]
         .iter()
         .enumerate()
         .map(|(i, &(b, inp, hid))| {
@@ -51,7 +59,21 @@ fn burst_row(fabric: &Fabric, cfg: &str, k: usize) {
             let m = map_graph(&g, fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
             lower(&g, fabric, &m).unwrap()
         })
-        .collect();
+        .collect()
+}
+
+/// The congestion+DVFS pricing model the time-varying rows share.
+fn varying_model() -> Arc<dyn CostModel> {
+    Arc::new(VaryingCost::congestion_dvfs(
+        512,
+        CongestionKnobs { alpha: 0.5, cap: 4.0 },
+        DvfsKnobs { window: 4, warm_frac: 0.5, hot_frac: 0.85, warm_scale: 0.75, hot_scale: 0.5 },
+    ))
+}
+
+/// Returns (rebuild, sequential, batched) seconds per burst.
+fn burst_row(fabric: &Fabric, cfg: &str, k: usize) -> (f64, f64, f64) {
+    let shapes = request_shapes(fabric);
     let progs: Vec<FabricProgram> =
         (0..k).map(|i| shapes[i % shapes.len()].clone()).collect();
     let total_steps: usize = progs.iter().map(|p| p.steps.len()).sum();
@@ -121,6 +143,7 @@ fn burst_row(fabric: &Fabric, cfg: &str, k: usize) {
         batch_rep.bit_identical(&seq_rep),
         "batched and sequential admission diverged (spans included)"
     );
+    (rebuild, seq, batched)
 }
 
 /// Time-varying row: a staggered K-request stream priced by the
@@ -128,21 +151,10 @@ fn burst_row(fabric: &Fabric, cfg: &str, k: usize) {
 /// invalidation + settle fixed point, incremental) against rebuilding a
 /// fresh session per arrival (the calendar-less baseline), golden-checked
 /// bit-for-bit — the `tests/costmodel_golden.rs` contract under load.
-fn varying_row(fabric: &Fabric, cfg: &str, k: usize) {
-    let model: Arc<dyn CostModel> = Arc::new(VaryingCost::congestion_dvfs(
-        512,
-        CongestionKnobs { alpha: 0.5, cap: 4.0 },
-        DvfsKnobs { window: 4, warm_frac: 0.5, hot_frac: 0.85, warm_scale: 0.75, hot_scale: 0.5 },
-    ));
-    let shapes: Vec<FabricProgram> = [(4usize, 64usize, 32usize), (8, 32, 16), (2, 48, 24)]
-        .iter()
-        .enumerate()
-        .map(|(i, &(b, inp, hid))| {
-            let g = workloads::mlp(b, inp, &[hid], 10, i as u64 + 1).unwrap();
-            let m = map_graph(&g, fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
-            lower(&g, fabric, &m).unwrap()
-        })
-        .collect();
+/// Returns (rebuild, incremental) seconds per stream.
+fn varying_row(fabric: &Fabric, cfg: &str, k: usize) -> (f64, f64) {
+    let model = varying_model();
+    let shapes = request_shapes(fabric);
     let progs: Vec<(FabricProgram, Cycle)> = (0..k)
         .map(|i| (shapes[i % shapes.len()].clone(), i as Cycle * 400))
         .collect();
@@ -201,6 +213,159 @@ fn varying_row(fabric: &Fabric, cfg: &str, k: usize) {
         inc_rep.bit_identical(&rebuild_rep),
         "time-varying incremental session diverged from the from-scratch oracle (spans included)"
     );
+    (rebuild, incremental)
+}
+
+/// Shard-parallel sweep: one staggered time-varying stream simulated at
+/// 1/2/4/8 worker threads. Every parallel report is bit-checked against
+/// the sequential one (panic on divergence — the tentpole contract), and
+/// the row reports simulated cycles/sec per thread count. Returns the
+/// stream's simulated cycle count and the per-thread-count seconds.
+fn threads_row(fabric: &Fabric, cfg: &str, k: usize) -> (Cycle, Vec<(usize, f64)>) {
+    let model = varying_model();
+    let shapes = request_shapes(fabric);
+    let progs: Vec<(FabricProgram, Cycle)> = (0..k)
+        .map(|i| (shapes[i % shapes.len()].clone(), i as Cycle * 400))
+        .collect();
+    let total_steps: usize = progs.iter().map(|(p, _)| p.steps.len()).sum();
+
+    println!(
+        "\n-- shard-parallel admission (threads sweep): {cfg}, {k} programs ({total_steps} steps) --"
+    );
+    let iters = 3;
+    let mut base_rep: Option<ExecReport> = None;
+    let mut base_secs = f64::NAN;
+    let mut rows = Vec::new();
+    for threads in SWEEP_THREADS {
+        let mut rep = None;
+        let secs = util::time_avg(iters, || {
+            let mut s = CosimSession::with_model(fabric, model.clone());
+            s.set_threads(threads);
+            if threads == 1 {
+                // The acceptance contract: threads = 1 keeps the model
+                // Arc itself (no wrapping on the sequential hot path).
+                assert!(Arc::ptr_eq(s.cost_model(), &model));
+            }
+            for (p, at) in &progs {
+                s.admit_at(p, *at).unwrap();
+            }
+            s.run_to_drain().unwrap();
+            rep = Some(s.report().unwrap());
+        });
+        let rep = rep.unwrap();
+        match &base_rep {
+            None => {
+                base_secs = secs;
+                base_rep = Some(rep);
+            }
+            Some(base) => {
+                assert!(
+                    rep.bit_identical(base),
+                    "threads={threads} diverged from the sequential engine"
+                );
+            }
+        }
+        let cycles = base_rep.as_ref().unwrap().cycles;
+        println!(
+            "  threads={threads}:  {:>10}/stream  =  {:>12.0} cycles/sec  ({:.2}x threads=1)",
+            util::fmt_time(secs),
+            cycles as f64 / secs,
+            base_secs / secs
+        );
+        rows.push((threads, secs));
+    }
+    golden_check(
+        base_rep.as_ref().unwrap(),
+        base_rep.as_ref().unwrap(),
+        "threads sweep bit-identical at 1/2/4/8",
+    );
+    (base_rep.unwrap().cycles, rows)
+}
+
+fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string() // JSON has no Infinity/NaN
+    }
+}
+
+/// The archsim-style evidence bundle: timings + golden verdicts + a
+/// stamp tying the numbers to their inputs (CI cats this next to
+/// `BENCH_faults.json`). Golden fields are literal `true` because every
+/// row panics on divergence — reaching the write means they all held.
+fn write_bundle(
+    bursts: &[(String, usize, f64, f64, f64)],
+    varying: (f64, f64),
+    sweep_cycles: Cycle,
+    sweep_rows: &[(usize, f64)],
+    sweep_programs: usize,
+) {
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let burst_rows: Vec<String> = bursts
+        .iter()
+        .map(|(cfg, k, rebuild, seq, batched)| {
+            format!(
+                concat!(
+                    "    {{\"config\":\"{}\",\"programs\":{},\"rebuild_secs\":{},",
+                    "\"sequential_secs\":{},\"batched_secs\":{},",
+                    "\"batched_speedup_vs_rebuild\":{}}}"
+                ),
+                cfg,
+                k,
+                jf(*rebuild),
+                jf(*seq),
+                jf(*batched),
+                jf(rebuild / batched)
+            )
+        })
+        .collect();
+    let base = sweep_rows[0].1;
+    let thread_rows: Vec<String> = sweep_rows
+        .iter()
+        .map(|(threads, secs)| {
+            format!(
+                concat!(
+                    "      {{\"threads\":{},\"secs\":{},\"cycles_per_sec\":{},",
+                    "\"speedup_vs_sequential\":{}}}"
+                ),
+                threads,
+                jf(*secs),
+                jf(sweep_cycles as f64 / secs),
+                jf(base / secs)
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"archytas.bench_admission.v1\",\n",
+            "  \"stamp\": {{\"unix_secs\":{},\"sweep_programs\":{},\"sweep_sim_cycles\":{}}},\n",
+            "  \"golden\": {{\"burst_bit_identical\":true,",
+            "\"varying_bit_identical\":true,",
+            "\"threads_sweep_bit_identical\":true}},\n",
+            "  \"burst\": [\n{}\n  ],\n",
+            "  \"varying\": {{\"rebuild_secs\":{},\"incremental_secs\":{},\"speedup\":{}}},\n",
+            "  \"threads_sweep\": {{\n",
+            "    \"rows\": [\n{}\n    ]\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        stamp,
+        sweep_programs,
+        sweep_cycles,
+        burst_rows.join(",\n"),
+        jf(varying.0),
+        jf(varying.1),
+        jf(varying.0 / varying.1),
+        thread_rows.join(",\n")
+    );
+    let path = archytas::repo_root().join("BENCH_admission.json");
+    std::fs::write(&path, json).expect("writing BENCH_admission.json");
+    println!("\nwrote {}", path.display());
 }
 
 fn main() {
@@ -208,18 +373,25 @@ fn main() {
         "E-ADMIT",
         "batched vs sequential admission vs rebuild-the-world (golden-checked)",
     );
+    let mut bursts = Vec::new();
     for cfg in ["edge16.toml", "homogeneous_npu.toml"] {
         let fabric = bundled_fabric(cfg);
         for k in [16, 64] {
-            burst_row(&fabric, cfg, k);
+            let (rebuild, seq, batched) = burst_row(&fabric, cfg, k);
+            bursts.push((cfg.to_string(), k, rebuild, seq, batched));
         }
     }
     // Time-varying pricing: smaller K (the rebuild baseline is O(K^2)
     // with settle passes on top).
     let fabric = bundled_fabric("edge16.toml");
-    varying_row(&fabric, "edge16.toml", 16);
+    let varying = varying_row(&fabric, "edge16.toml", 16);
+    // Shard-parallel drains: the 1/2/4/8-thread cycles/sec table.
+    let sweep_programs = 24;
+    let (sweep_cycles, sweep_rows) = threads_row(&fabric, "edge16.toml", sweep_programs);
+    write_bundle(&bursts, varying, sweep_cycles, &sweep_rows, sweep_programs);
     println!("\nexpected shape: sequential admission beats rebuild-world by ~K/2");
     println!("(it prices each step once); batching removes the per-request drain");
     println!("bookkeeping on top. All modes are bit-identical to the merged oracle,");
-    println!("and the time-varying row bit-matches its from-scratch oracle too.");
+    println!("the time-varying row bit-matches its from-scratch oracle, and the");
+    println!("threads sweep bit-matches the sequential engine at every count.");
 }

@@ -252,6 +252,21 @@ impl crate::sim::FaultConfig {
     }
 }
 
+/// Admission-session knobs (`[session]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionConfig {
+    /// Worker threads for shard-parallel calendar-epoch execution in
+    /// `coordinator::admit` (1 = the exact sequential drain; any value
+    /// is bit-identical — see the admit module docs).
+    pub threads: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { threads: 1 }
+    }
+}
+
 /// Whole-fabric configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
@@ -270,6 +285,8 @@ pub struct FabricConfig {
     pub cost: CostConfig,
     /// Fault-injection plan seed (`[fault]`; inert by default).
     pub fault: crate::sim::FaultConfig,
+    /// Admission-session knobs (`[session]`).
+    pub session: SessionConfig,
 }
 
 impl Default for FabricConfig {
@@ -284,6 +301,7 @@ impl Default for FabricConfig {
             hbm_energy_pj_per_byte: 3.9,
             cost: CostConfig::default(),
             fault: crate::sim::FaultConfig::default(),
+            session: SessionConfig::default(),
         }
     }
 }
@@ -346,6 +364,9 @@ impl FabricConfig {
             cost,
             fault: crate::sim::FaultConfig::from_document(doc)
                 .context("parsing [fault] section")?,
+            session: SessionConfig {
+                threads: doc.get_int("session.threads", d.session.threads as i64) as usize,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -368,6 +389,12 @@ impl FabricConfig {
             bail!(
                 "noc.threads must be in 1..=1024 (1 = sequential stepping), got {}",
                 self.noc.threads
+            );
+        }
+        if self.session.threads == 0 || self.session.threads > 1024 {
+            bail!(
+                "session.threads must be in 1..=1024 (1 = sequential drains), got {}",
+                self.session.threads
             );
         }
         let known = ["mesh", "torus", "ring", "star", "fattree"];
@@ -574,6 +601,24 @@ cluster_cores = 4
             "[fabric.cost]\nhot_scale = 1.5\n",
         ] {
             assert!(FabricConfig::from_toml(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn session_section_parses_and_validates() {
+        let cfg = FabricConfig::from_toml("[session]\nthreads = 4\n").unwrap();
+        assert_eq!(cfg.session.threads, 4);
+        // Absent section = sequential drains (the exact PR 5 path).
+        assert_eq!(FabricConfig::from_toml("").unwrap().session, SessionConfig::default());
+        assert_eq!(SessionConfig::default().threads, 1);
+        for bad in [
+            "[session]\nthreads = 0\n",
+            "[session]\nthreads = 2000\n",
+            // Negative values must not wrap through the usize cast.
+            "[session]\nthreads = -1\n",
+        ] {
+            let e = FabricConfig::from_toml(bad).unwrap_err();
+            assert!(format!("{e:#}").contains("session.threads"), "{bad:?}: {e:#}");
         }
     }
 

@@ -97,6 +97,55 @@
 //! program engines) under congestion/DVFS models —
 //! `tests/costmodel_golden.rs` pins all of it.
 //!
+//! # Shard-parallel epoch execution (the PR 3 contract, one layer up)
+//!
+//! With `threads > 1` (config `[session] threads`, or
+//! [`CosimSession::set_threads`]) the drain loop executes each calendar
+//! batch — all completions due at one simulated instant, the session's
+//! *epoch barrier* — in three phases instead of one sequential pass:
+//!
+//! 1. **Bookkeeping (sequential, canonical order).** Completions are
+//!    applied and dependency successors decremented in exactly the
+//!    sequential order; every wake whose fire condition holds (idle
+//!    resource, dependency-ready head) is *staged*: its start cycle
+//!    `max(ready, free)` is final at stage time — a firing head has
+//!    `pending == 0`, so every dependency (including same-batch ones)
+//!    already contributed to `ready_at`, and a resource fires at most
+//!    once per batch (it turns busy) — but its pricing is deferred.
+//! 2. **Pricing (shard-parallel).** Resources are partitioned into
+//!    contiguous index ranges (*shards*); each shard prices its staged
+//!    fires on the [`crate::sim::WorkerPool`] against the batch-start
+//!    occupancy snapshot, holding a disjoint `&mut` view of its own
+//!    [`ResQueue`] slice (it advances `free`) and buffering `(cost,
+//!    duration)` — and any pricing error — in per-shard scratch. The
+//!    snapshot read is sound because cost models read occupancy of
+//!    **strictly earlier epochs** only (the `fabric::cost` purity
+//!    contract): a same-batch predecessor fire can only perturb this
+//!    fire's price if it starts in a *strictly earlier* epoch.
+//! 3. **Merge (sequential, canonical order).** Fires commit in staging
+//!    order — the exact order the sequential loop would have priced
+//!    them — writing records, registering occupancy, and re-pushing
+//!    completions, so the calendar's FIFO tie-breaks (and hence every
+//!    later batch's order, every `ExecReport`/`ProgramSpan` bit, and
+//!    the f64 energy fold order) replay the sequential schedule
+//!    exactly. The one case where the snapshot price could differ —
+//!    an already-committed fire of this batch starting in a strictly
+//!    earlier epoch than the committing fire — is detected by tracking
+//!    the minimum committed start epoch and re-priced inline against
+//!    the live occupancy, which at that point equals the sequential
+//!    loop's occupancy state bit for bit. A pricing error surfaces at
+//!    its canonical fire position (earlier fires commit, the session
+//!    stays memory-safe-but-unspecified, as documented above).
+//!
+//! `threads = 1` (the default) takes the pre-parallel sequential path
+//! verbatim — no per-epoch allocation, no pool, same cost-model `Arc`.
+//! The partition is exposed to property tests via
+//! [`CosimSession::set_shards`]; `tests/admission_golden.rs` and
+//! `tests/fault_golden.rs` pin threads ∈ {1, 2, 4, 8} and adversarial
+//! partitions bit-identical across the golden matrix. Install/settle
+//! wakes stay sequential — only drain batches fan out, which is where
+//! O(active resources) work per instant lives.
+//!
 //! # Pruning and the admission floor
 //!
 //! Drained programs stay in the shared resource queues, so an unbounded
@@ -165,7 +214,7 @@
 //! the fixed point's uniqueness is what makes the final bits
 //! path-independent.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::ensure;
@@ -173,7 +222,7 @@ use anyhow::ensure;
 use crate::compiler::{FabricProgram, Step};
 use crate::fabric::{CostModel, DegradedCost, Fabric, Occupancy};
 use crate::metrics::{Category, Metrics};
-use crate::sim::{Cycle, FaultConfig, FaultEvent, FaultKind, FaultPlan, StampedCalendar};
+use crate::sim::{Cycle, FaultConfig, FaultEvent, FaultKind, FaultPlan, StampedCalendar, WorkerPool};
 use crate::Result;
 
 use super::exec::{ExecReport, ProgramSpan};
@@ -297,6 +346,34 @@ struct ResQueue {
     busy: bool,
 }
 
+/// One staged wake of the parallel drain's bookkeeping phase: resource
+/// `res` fires step `id` at `start`; pricing is deferred to the shard
+/// phase (see the module docs' shard-parallel section).
+#[derive(Debug, Clone, Copy)]
+struct Fire {
+    /// Global step id.
+    id: usize,
+    /// Resource the step fires on (selects the shard).
+    res: u32,
+    /// `max(ready_at, free)` — final at staging time.
+    start: Cycle,
+}
+
+/// Per-shard scratch of the parallel pricing phase (reused across
+/// batches; cross-shard effects live here until the sequential merge).
+#[derive(Debug, Default)]
+struct PriceScratch {
+    /// This shard's fires, as ascending indices into the batch fire list.
+    fires: Vec<u32>,
+    /// `(cost, duration)` per entry of `fires` (a prefix on error).
+    out: Vec<(Metrics, Cycle)>,
+    /// Merge cursor into `out`.
+    taken: usize,
+    /// First pricing error: (fire-list index, error). Surfaced by the
+    /// merge at its canonical position.
+    err: Option<(u32, anyhow::Error)>,
+}
+
 /// A live multi-program co-simulation over one fabric: the admission
 /// engine. See the module docs for the determinism, invalidation and
 /// settle contracts.
@@ -334,6 +411,27 @@ pub struct CosimSession<'f> {
     /// Drop pruned programs' per-step history (see
     /// [`CosimSession::set_discard_pruned`]).
     discard_pruned: bool,
+    /// Worker threads for shard-parallel drains (1 = the exact
+    /// sequential path; see the module docs' shard-parallel section).
+    threads: usize,
+    /// Explicit shard partition for property tests
+    /// ([`CosimSession::set_shards`]); `None` = equal split.
+    shard_override: Option<Vec<usize>>,
+    /// Effective shard bounds of the current parallel drain (reused).
+    shard_bounds: Vec<usize>,
+    /// Persistent workers (shards − 1; shard 0 runs on the caller),
+    /// spawned lazily on the first multi-shard drain.
+    pool: Option<WorkerPool>,
+    /// Reusable staged-fire list of the parallel drain.
+    fires: Vec<Fire>,
+    /// Reusable per-shard pricing scratch.
+    price_scratch: Vec<PriceScratch>,
+    /// Start-ordered `(start, global id)` index over *started* steps,
+    /// maintained only under a time-varying model: makes horizon-seed
+    /// collection and the settle re-price scan O(affected · log n)
+    /// instead of O(world) (PR 5 follow-up (h)). Invariant-model
+    /// sessions never touch it.
+    start_index: BTreeSet<(Cycle, usize)>,
 }
 
 /// Price one step starting at `start` through the cost model: returns
@@ -365,6 +463,41 @@ fn price(
             (cost.metrics.with_cycles(0), cyc)
         }
     })
+}
+
+/// Price one shard's staged fires against the batch-start occupancy
+/// snapshot (parallel drain, phase 2): advance `free` through the
+/// shard's disjoint queue view (`queues` covers resources `r0..`),
+/// buffer `(cost, duration)` in fire order for the sequential merge,
+/// and stop at the first pricing error (recorded with its fire index so
+/// the merge surfaces it at its canonical position). Runs on pool
+/// workers — everything it reads is shared-immutable for the phase.
+#[allow(clippy::too_many_arguments)]
+fn price_shard(
+    scr: &mut PriceScratch,
+    queues: &mut [ResQueue],
+    r0: usize,
+    fires: &[Fire],
+    model: &dyn CostModel,
+    fabric: &Fabric,
+    occ: &Occupancy,
+    progs: &[Prog],
+    id_map: &[(u32, u32)],
+) {
+    for &fk in &scr.fires {
+        let f = fires[fk as usize];
+        let (p, i) = id_map[f.id];
+        match price(model, fabric, &progs[p as usize].steps[i as usize], f.start, occ) {
+            Ok((cost, dur)) => {
+                queues[f.res as usize - r0].free = f.start + dur;
+                scr.out.push((cost, dur));
+            }
+            Err(e) => {
+                scr.err = Some((fk, e));
+                return;
+            }
+        }
+    }
 }
 
 impl<'f> CosimSession<'f> {
@@ -399,7 +532,68 @@ impl<'f> CosimSession<'f> {
             admit_floor: 0,
             free_ranges: Vec::new(),
             discard_pruned: false,
+            threads: fabric.cfg.session.threads.max(1),
+            shard_override: None,
+            shard_bounds: Vec::new(),
+            pool: None,
+            fires: Vec::new(),
+            price_scratch: Vec::new(),
+            start_index: BTreeSet::new(),
         }
+    }
+
+    /// Worker threads used by shard-parallel drains (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Set the drain parallelism. `1` (the default, also configurable as
+    /// `[session] threads`) restores the exact sequential hot path; any
+    /// value is bit-identical to it (module docs, shard-parallel
+    /// section). May be called at any time between drains.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+        if self.threads == 1 {
+            self.pool = None;
+        }
+    }
+
+    /// Override the resource-shard partition used by parallel drains —
+    /// the property-test seam for partition invariance. `bounds` are
+    /// ascending resource-index fences `[0, b1, .., res_count]`; each
+    /// consecutive pair is one shard. New resources appearing after the
+    /// call (links materialize on first use) join the last shard. Any
+    /// valid partition is bit-identical to any other and to the
+    /// sequential engine. Pass `None` to restore the default equal
+    /// split over `min(threads, resources)` shards.
+    pub fn set_shards(&mut self, bounds: Option<&[usize]>) -> Result<()> {
+        match bounds {
+            None => self.shard_override = None,
+            Some(b) => {
+                ensure!(
+                    b.len() >= 2 && b[0] == 0,
+                    "shard bounds must start at 0 and name at least one shard"
+                );
+                ensure!(
+                    b.windows(2).all(|w| w[0] < w[1]),
+                    "shard bounds must be strictly increasing"
+                );
+                ensure!(
+                    *b.last().unwrap() <= self.res.len(),
+                    "shard bound {} exceeds resource count {}",
+                    b.last().unwrap(),
+                    self.res.len()
+                );
+                self.shard_override = Some(b.to_vec());
+            }
+        }
+        Ok(())
+    }
+
+    /// Current resource count (tiles + HBM port + materialized links) —
+    /// the domain [`CosimSession::set_shards`] fences partition.
+    pub fn resource_count(&self) -> usize {
+        self.res.len()
     }
 
     /// The session's cost model (the per-session pricing seam `serve`
@@ -931,6 +1125,9 @@ impl<'f> CosimSession<'f> {
                 if self.occ.is_tracking() {
                     self.occ.remove_step(&self.progs[slot].steps[idx], start, finish);
                 }
+                if self.epoch.is_some() {
+                    self.start_index.remove(&(start, base + idx));
+                }
             }
             if !touched.contains(&r) {
                 touched.push(r);
@@ -964,16 +1161,36 @@ impl<'f> CosimSession<'f> {
 
     /// True when every step of `pr` is known to lie strictly before
     /// `from` — a fully-completed program whose cached span finished
-    /// earlier (starts <= finishes < from). Lets the horizon/settle
-    /// scans skip drained history instead of walking O(world) steps.
+    /// earlier (starts <= finishes < from). Lets the oracle seed scan
+    /// skip drained history instead of walking O(world) steps; the live
+    /// paths now serve the same question from `start_index`.
+    #[cfg(test)]
     fn finished_before(pr: &Prog, from: Cycle) -> bool {
         pr.span_cache.as_ref().is_some_and(|c| c.finished_at < from)
     }
 
     /// Push every started, unpruned step with start >= `from` (skipping
     /// program `skip`) — the horizon seed set of a time-varying
-    /// perturbation at `from`.
+    /// perturbation at `from`. Served from the start-ordered index in
+    /// O(affected · log n) instead of scanning the world (PR 5
+    /// follow-up (h)); the closure a seed set produces is independent
+    /// of seed order, so swapping the program-major scan for start
+    /// order changes no bit (`prop_horizon_seed_index_matches_scan`
+    /// pins the sets equal).
     fn collect_horizon_seeds(&self, from: Cycle, skip: usize, out: &mut Vec<usize>) {
+        debug_assert!(self.epoch.is_some(), "horizon seeds exist only under time-varying models");
+        for &(_, id) in self.start_index.range((from, 0)..) {
+            if self.id_map[id].0 as usize == skip {
+                continue;
+            }
+            out.push(id);
+        }
+    }
+
+    /// The pre-index O(world) seed scan, kept as the differential
+    /// oracle for the index (see the property tests).
+    #[cfg(test)]
+    fn collect_horizon_seeds_scan(&self, from: Cycle, skip: usize, out: &mut Vec<usize>) {
         for (pi, pr) in self.progs.iter().enumerate() {
             if pi == skip || pr.pruned || Self::finished_before(pr, from) {
                 continue;
@@ -1028,6 +1245,9 @@ impl<'f> CosimSession<'f> {
                 }
                 if self.occ.is_tracking() {
                     self.occ.remove_step(&self.progs[p].steps[i], start, finish);
+                }
+                if self.epoch.is_some() {
+                    self.start_index.remove(&(start, id));
                 }
             }
             if completed {
@@ -1140,6 +1360,9 @@ impl<'f> CosimSession<'f> {
         if self.occ.is_tracking() {
             self.occ.add_step(&self.progs[p].steps[i], start, start + dur);
         }
+        if self.epoch.is_some() {
+            self.start_index.insert((start, id));
+        }
         let rq = &mut self.res[r];
         rq.free = start + dur;
         rq.busy = true;
@@ -1148,8 +1371,23 @@ impl<'f> CosimSession<'f> {
         Ok(())
     }
 
-    /// Drain completion batches in time order (bounded by `until`).
+    /// Drain completion batches in time order (bounded by `until`):
+    /// dispatch to the sequential path (threads = 1, the exact
+    /// pre-parallel loop) or the shard-parallel path (module docs,
+    /// shard-parallel section). An explicit [`CosimSession::set_shards`]
+    /// partition forces the parallel structure even at one shard, so
+    /// property tests cover the staged path itself.
     fn drain(&mut self, until: Option<Cycle>) -> Result<()> {
+        if self.threads <= 1 && self.shard_override.is_none() {
+            self.drain_seq(until)
+        } else {
+            self.drain_parallel(until)
+        }
+    }
+
+    /// The sequential drain loop (threads = 1): wake and price inline,
+    /// in canonical batch order.
+    fn drain_seq(&mut self, until: Option<Cycle>) -> Result<()> {
         let mut batch = std::mem::take(&mut self.batch);
         while let Some(t) = self.cal.take_due_until(until, &mut batch) {
             for &id in &batch {
@@ -1192,6 +1430,242 @@ impl<'f> CosimSession<'f> {
         Ok(())
     }
 
+    /// Effective shard fences for this drain: the explicit override
+    /// (its last fence raised to cover link resources that materialized
+    /// after [`CosimSession::set_shards`]) or an equal split of the
+    /// resource range over `min(threads, resources)` shards.
+    fn refresh_shard_bounds(&mut self) {
+        self.shard_bounds.clear();
+        if let Some(b) = &self.shard_override {
+            self.shard_bounds.extend_from_slice(b);
+            *self.shard_bounds.last_mut().unwrap() = self.res.len();
+        } else {
+            let n = self.res.len();
+            let shards = self.threads.min(n).max(1);
+            self.shard_bounds.extend((0..=shards).map(|s| n * s / shards));
+        }
+        debug_assert!(self.shard_bounds.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    /// Bookkeeping-phase twin of [`CosimSession::wake_head`]: evaluate
+    /// the fire condition at the same point in the canonical order and
+    /// claim the resource, but defer pricing (and everything derived
+    /// from the duration — `finish`, `free`, occupancy, the completion
+    /// push) to the shard phase + merge. The staged `start` is final:
+    /// a firing head has `pending == 0`, so every dependency already
+    /// contributed to `ready_at`, and the resource fires at most once
+    /// per batch (`busy` blocks re-entry until the merge).
+    fn stage_wake(&mut self, r: usize, fires: &mut Vec<Fire>) {
+        let rq = &self.res[r];
+        if rq.busy || rq.cursor >= rq.steps.len() {
+            return;
+        }
+        let id = rq.steps[rq.cursor];
+        let (p, i) = self.id_map[id];
+        let (p, i) = (p as usize, i as usize);
+        if self.progs[p].rec[i].pending != 0 {
+            return;
+        }
+        let start = self.progs[p].rec[i].ready_at.max(rq.free);
+        {
+            let rec = &mut self.progs[p].rec[i];
+            rec.started = true;
+            rec.start = start;
+        }
+        let rq = &mut self.res[r];
+        rq.busy = true;
+        rq.cursor += 1;
+        fires.push(Fire { id, res: r as u32, start });
+    }
+
+    /// The shard-parallel drain (module docs, shard-parallel section):
+    /// per batch, sequential bookkeeping stages fires in canonical
+    /// order, shards price them in parallel against the batch-start
+    /// occupancy snapshot through disjoint `&mut` queue views, and a
+    /// sequential merge commits in staging order — bit-identical to
+    /// [`CosimSession::drain_seq`] at every thread count and partition.
+    fn drain_parallel(&mut self, until: Option<Cycle>) -> Result<()> {
+        self.refresh_shard_bounds();
+        let nshards = self.shard_bounds.len() - 1;
+        if self.price_scratch.len() < nshards {
+            self.price_scratch.resize_with(nshards, PriceScratch::default);
+        }
+        if nshards > 1
+            && self.pool.as_ref().map_or(true, |p| p.workers() < nshards - 1)
+        {
+            self.pool = Some(WorkerPool::new(nshards - 1));
+        }
+        let mut batch = std::mem::take(&mut self.batch);
+        let mut fires = std::mem::take(&mut self.fires);
+        let mut result = Ok(());
+        'batches: while let Some(t) = self.cal.take_due_until(until, &mut batch) {
+            // Phase 1 — sequential bookkeeping in canonical order.
+            fires.clear();
+            for &id in &batch {
+                let (p, i) = self.id_map[id];
+                let (p, i) = (p as usize, i as usize);
+                let (r, finished_prog) = {
+                    let pr = &mut self.progs[p];
+                    let rec = &mut pr.rec[i];
+                    debug_assert!(rec.started && !rec.completed && rec.finish == t);
+                    rec.completed = true;
+                    let r = rec.res as usize;
+                    pr.remaining -= 1;
+                    (r, pr.remaining == 0)
+                };
+                if finished_prog {
+                    let span = Self::compute_span(&self.progs[p]);
+                    self.progs[p].span_cache = Some(span);
+                }
+                self.res[r].busy = false;
+                self.stage_wake(r, &mut fires);
+                let (s0, s1) = {
+                    let pr = &self.progs[p];
+                    (pr.succ_off[i], pr.succ_off[i + 1])
+                };
+                for s in s0..s1 {
+                    let j = self.progs[p].succ[s] as usize;
+                    let wake = {
+                        let rec = &mut self.progs[p].rec[j];
+                        rec.pending -= 1;
+                        rec.ready_at = rec.ready_at.max(t);
+                        if rec.pending == 0 { Some(rec.res as usize) } else { None }
+                    };
+                    if let Some(rr) = wake {
+                        self.stage_wake(rr, &mut fires);
+                    }
+                }
+            }
+            if fires.is_empty() {
+                continue;
+            }
+
+            // Phase 2 — shard-parallel pricing against the batch-start
+            // occupancy snapshot.
+            for scr in &mut self.price_scratch[..nshards] {
+                scr.fires.clear();
+                scr.out.clear();
+                scr.taken = 0;
+                scr.err = None;
+            }
+            for (k, f) in fires.iter().enumerate() {
+                let s = self.shard_bounds.partition_point(|&b| b <= f.res as usize) - 1;
+                self.price_scratch[s].fires.push(k as u32);
+            }
+            {
+                let CosimSession {
+                    fabric,
+                    model,
+                    occ,
+                    progs,
+                    res,
+                    id_map,
+                    pool,
+                    price_scratch,
+                    shard_bounds,
+                    ..
+                } = self;
+                let fabric: &Fabric = *fabric;
+                let model: &dyn CostModel = model.as_ref();
+                let occ: &Occupancy = occ;
+                let progs: &[Prog] = progs;
+                let id_map: &[(u32, u32)] = id_map;
+                let fires_ro: &[Fire] = &fires;
+                if nshards == 1 {
+                    price_shard(&mut price_scratch[0], res, 0, fires_ro, model, fabric, occ, progs, id_map);
+                } else {
+                    let mut res_rest: &mut [ResQueue] = res;
+                    let mut scr_rest: &mut [PriceScratch] = &mut price_scratch[..nshards];
+                    let pool = pool.as_mut().expect("multi-shard drains own a worker pool");
+                    pool.scoped(|scope| {
+                        let mut own: Option<(&mut PriceScratch, &mut [ResQueue], usize)> = None;
+                        for s in 0..nshards {
+                            let width = shard_bounds[s + 1] - shard_bounds[s];
+                            let (rs, rest) = std::mem::take(&mut res_rest).split_at_mut(width);
+                            res_rest = rest;
+                            let (scr, rest) =
+                                std::mem::take(&mut scr_rest).split_first_mut().expect("scratch per shard");
+                            scr_rest = rest;
+                            if s == 0 {
+                                // Shard 0 runs on this thread below, so
+                                // N shards cost N−1 handoffs.
+                                own = Some((scr, rs, shard_bounds[s]));
+                            } else {
+                                let r0 = shard_bounds[s];
+                                scope.execute(move || {
+                                    price_shard(scr, rs, r0, fires_ro, model, fabric, occ, progs, id_map);
+                                });
+                            }
+                        }
+                        let (scr, rs, r0) = own.expect("at least one shard");
+                        price_shard(scr, rs, r0, fires_ro, model, fabric, occ, progs, id_map);
+                    });
+                }
+            }
+
+            // Phase 3 — sequential merge in staging (= canonical) order.
+            let mut err_at = u32::MAX;
+            for scr in &self.price_scratch[..nshards] {
+                if let Some((fk, _)) = &scr.err {
+                    err_at = err_at.min(*fk);
+                }
+            }
+            // Minimum committed start epoch: a later fire whose start
+            // epoch is strictly greater may read a committed fire's
+            // occupancy, so it re-prices against the live state (which
+            // right then replays the sequential loop's exactly).
+            let mut min_epoch: Option<Cycle> = None;
+            for (k, f) in fires.iter().enumerate() {
+                if k as u32 == err_at {
+                    let scr = self
+                        .price_scratch
+                        .iter_mut()
+                        .find(|s| s.err.as_ref().is_some_and(|(fk, _)| *fk == err_at))
+                        .expect("recorded error");
+                    result = Err(scr.err.take().expect("recorded error").1);
+                    break 'batches;
+                }
+                let sh = self.shard_bounds.partition_point(|&b| b <= f.res as usize) - 1;
+                let scr = &mut self.price_scratch[sh];
+                let (mut cost, mut dur) = scr.out[scr.taken].clone();
+                scr.taken += 1;
+                let (p, i) = self.id_map[f.id];
+                let (p, i) = (p as usize, i as usize);
+                if let Some(w) = self.epoch {
+                    let e = f.start / w;
+                    if min_epoch.is_some_and(|m| m < e) {
+                        match price(self.model.as_ref(), self.fabric, &self.progs[p].steps[i], f.start, &self.occ) {
+                            Ok((c2, d2)) => {
+                                cost = c2;
+                                dur = d2;
+                                self.res[f.res as usize].free = f.start + dur;
+                            }
+                            Err(e) => {
+                                result = Err(e);
+                                break 'batches;
+                            }
+                        }
+                    }
+                    min_epoch = Some(min_epoch.map_or(e, |m| m.min(e)));
+                    self.start_index.insert((f.start, f.id));
+                }
+                {
+                    let rec = &mut self.progs[p].rec[i];
+                    rec.finish = f.start + dur;
+                    rec.dur = dur;
+                    rec.cost = cost;
+                }
+                if self.occ.is_tracking() {
+                    self.occ.add_step(&self.progs[p].steps[i], f.start, f.start + dur);
+                }
+                self.cal.push(f.start + dur, f.id);
+            }
+        }
+        self.batch = batch;
+        self.fires = fires;
+        result
+    }
+
     /// The occupancy fixed point (time-varying models only; see the
     /// module docs for the convergence argument): re-price every settled
     /// step with start >= the dirty horizon against the final occupancy;
@@ -1201,26 +1675,22 @@ impl<'f> CosimSession<'f> {
         let Some(mut from) = self.dirty_from.take() else { return Ok(()) };
         let mut passes = 0usize;
         loop {
+            // Walk settled steps in ascending start order via the index
+            // (PR 5 follow-up (h)): the first divergence IS the minimum
+            // divergent start, so the re-price scan stops there instead
+            // of pricing the whole world per pass.
             let mut div: Option<Cycle> = None;
-            for pr in self
-                .progs
-                .iter()
-                .filter(|p| !p.pruned && !Self::finished_before(p, from))
-            {
-                for (i, rec) in pr.rec.iter().enumerate() {
-                    if !rec.started || rec.start < from {
-                        continue;
-                    }
-                    let (cost, dur) = price(
-                        self.model.as_ref(),
-                        self.fabric,
-                        &pr.steps[i],
-                        rec.start,
-                        &self.occ,
-                    )?;
-                    if dur != rec.dur || cost != rec.cost {
-                        div = Some(div.map_or(rec.start, |d| d.min(rec.start)));
-                    }
+            for &(s, id) in self.start_index.range((from, 0)..) {
+                let (p, i) = self.id_map[id];
+                let (p, i) = (p as usize, i as usize);
+                let pr = &self.progs[p];
+                debug_assert!(pr.rec[i].started && pr.rec[i].start == s && !pr.pruned);
+                let rec = &pr.rec[i];
+                let (cost, dur) =
+                    price(self.model.as_ref(), self.fabric, &pr.steps[i], rec.start, &self.occ)?;
+                if dur != rec.dur || cost != rec.cost {
+                    div = Some(rec.start);
+                    break;
                 }
             }
             let Some(t) = div else { return Ok(()) };
@@ -1293,6 +1763,15 @@ impl<'f> CosimSession<'f> {
                 pr.pruned = true;
                 if !pr.rec.is_empty() {
                     self.free_ranges.push((pr.base, pr.rec.len()));
+                }
+                // Frozen history leaves the start index (its id range
+                // may be recycled; pruned steps must never seed a
+                // horizon again).
+                if self.epoch.is_some() {
+                    for (idx, rec) in pr.rec.iter().enumerate() {
+                        debug_assert!(rec.started && rec.completed);
+                        self.start_index.remove(&(rec.start, pr.base + idx));
+                    }
                 }
                 if self.discard_pruned {
                     // The span cache is primed (the program completed a
@@ -1600,6 +2079,18 @@ impl<'f> FaultySession<'f> {
     /// The wrapped session (reports, spans, footprint probes).
     pub fn session(&self) -> &CosimSession<'f> {
         &self.inner
+    }
+
+    /// Forward of [`CosimSession::set_threads`] — faulty replay is
+    /// pinned bit-identical across thread counts by
+    /// `tests/fault_golden.rs` like the plain session.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.inner.set_threads(threads);
+    }
+
+    /// Forward of [`CosimSession::set_shards`].
+    pub fn set_shards(&mut self, bounds: Option<&[usize]>) -> Result<()> {
+        self.inner.set_shards(bounds)
     }
 
     /// The session's effective cost model (the degraded wrapper when the
@@ -2014,6 +2505,7 @@ mod tests {
     use crate::compiler::mapper::{map_graph, MapStrategy};
     use crate::config::FabricConfig;
     use crate::coordinator::{cosim, cosim_ref};
+    use crate::prop_assert;
     use crate::workloads;
 
     fn fabric() -> Fabric {
@@ -2576,5 +3068,131 @@ mod tests {
         // At the floor itself is fine.
         s.admit_at(&prog, 100).unwrap();
         s.run_to_drain().unwrap();
+    }
+
+    /// Shard-parallel drains must replay the sequential engine's bits at
+    /// every thread count, including the forced single-shard staged path
+    /// (time-invariant model; the time-varying twin is below).
+    #[test]
+    fn parallel_drain_matches_sequential_bits() {
+        let f = fabric();
+        let progs: Vec<_> = (0..4).map(|k| program(&f, 40 + k)).collect();
+        let times: [Cycle; 4] = [0, 150, 300, 450];
+        let run = |threads: usize, shards: Option<&[usize]>| {
+            let mut s = CosimSession::new(&f);
+            s.set_threads(threads);
+            if let Some(b) = shards {
+                s.set_shards(Some(b)).unwrap();
+            }
+            for (p, &t) in progs.iter().zip(&times) {
+                s.admit_at(p, t).unwrap();
+            }
+            s.run_to_drain().unwrap();
+            s.report().unwrap()
+        };
+        let want = run(1, None);
+        for threads in [2, 4, 8] {
+            let got = run(threads, None);
+            assert!(got.bit_identical(&want), "threads = {threads}");
+        }
+        // threads = 1 with an explicit partition forces the
+        // stage/price/merge structure itself through the golden.
+        let got = run(1, Some(&[0, 1]));
+        assert!(got.bit_identical(&want), "forced single-shard staged path");
+    }
+
+    /// The time-varying twin: staggered + retroactive admissions under a
+    /// congestion/DVFS model, so parallel drains run inside settle
+    /// fixed-point passes and across epoch-crossing batches too.
+    #[test]
+    fn parallel_drain_matches_sequential_time_varying() {
+        use crate::fabric::{CongestionKnobs, DvfsKnobs, VaryingCost};
+        let f = fabric();
+        let cong = CongestionKnobs { alpha: 0.5, cap: 4.0 };
+        let dvfs = DvfsKnobs {
+            window: 3,
+            warm_frac: 0.4,
+            hot_frac: 0.8,
+            warm_scale: 0.75,
+            hot_scale: 0.5,
+        };
+        let progs: Vec<_> = (0..4).map(|k| program(&f, 50 + k)).collect();
+        let run = |threads: usize| {
+            let model: Arc<dyn CostModel> =
+                Arc::new(VaryingCost::congestion_dvfs(256, cong, dvfs));
+            let mut s = CosimSession::with_model(&f, model);
+            s.set_threads(threads);
+            s.admit_at(&progs[0], 0).unwrap();
+            s.run_until(200).unwrap();
+            for (k, p) in progs.iter().enumerate().skip(1) {
+                // k = 1 lands at 120 < 200: a retroactive admission, so
+                // horizon invalidation and settle run under the parallel
+                // drain as well.
+                s.admit_at(p, 120 * k as Cycle).unwrap();
+            }
+            s.run_to_drain().unwrap();
+            s.report().unwrap()
+        };
+        let want = run(1);
+        for threads in [2, 4, 8] {
+            let got = run(threads);
+            assert!(got.bit_identical(&want), "threads = {threads}");
+        }
+    }
+
+    /// PR 5 follow-up (h): the start-ordered index must produce exactly
+    /// the seed set of the retired O(world) scan at every horizon, under
+    /// live sessions that admit, partially run, prune and re-admit
+    /// (recycled-id aliasing included).
+    #[test]
+    fn prop_horizon_seed_index_matches_scan() {
+        use crate::fabric::{CongestionKnobs, DvfsKnobs, VaryingCost};
+        let f = fabric();
+        let cong = CongestionKnobs { alpha: 0.5, cap: 4.0 };
+        let dvfs = DvfsKnobs {
+            window: 3,
+            warm_frac: 0.4,
+            hot_frac: 0.8,
+            warm_scale: 0.75,
+            hot_scale: 0.5,
+        };
+        crate::testutil::prop::check(10, |rng| {
+            let model: Arc<dyn CostModel> =
+                Arc::new(VaryingCost::congestion_dvfs(256, cong, dvfs));
+            let mut s = CosimSession::with_model(&f, model);
+            let n = 3 + rng.below(3);
+            let mut last: Cycle = 0;
+            for k in 0..n {
+                let at = last + rng.below(400) as Cycle;
+                last = at;
+                s.admit_at(&program(&f, 60 + k as u64), at).unwrap();
+                if rng.below(2) == 0 {
+                    s.run_until(at + rng.below(500) as Cycle).unwrap();
+                }
+            }
+            s.run_to_drain().unwrap();
+            if rng.below(2) == 0 {
+                // Prune strictly below the last admission, then admit one
+                // more program so its steps recycle pruned global ids —
+                // the aliasing case the index's prune hook guards.
+                s.prune_completed_before(last / 2).unwrap();
+                s.admit_at(&program(&f, 99), last + 100).unwrap();
+                s.run_to_drain().unwrap();
+            }
+            for _ in 0..8 {
+                let from = rng.below(6000) as Cycle;
+                let skip = if rng.below(2) == 0 { usize::MAX } else { rng.below(n) };
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                s.collect_horizon_seeds(from, skip, &mut a);
+                s.collect_horizon_seeds_scan(from, skip, &mut b);
+                a.sort_unstable();
+                b.sort_unstable();
+                prop_assert!(
+                    a == b,
+                    "seed sets diverge at from = {from}, skip = {skip}: {a:?} vs {b:?}"
+                );
+            }
+            Ok(())
+        });
     }
 }

@@ -52,10 +52,14 @@
 //! Why event-driven at all, when the one-pass list scheduler is already
 //! O(n)? Because a calendar admits what a single pass cannot: incremental
 //! re-simulation (re-enqueue only invalidated steps), batched admission
-//! of new programs mid-flight (the serving path), and interleaving with
-//! the flit-level NoC / bank-level DRAM event streams — the ROADMAP's
-//! parallel-stepping and million-request serving items all want this
-//! substrate.
+//! of new programs mid-flight (the serving path), interleaving with
+//! the flit-level NoC / bank-level DRAM event streams — and shard-
+//! parallel batch execution: the admission session fans each calendar
+//! epoch's fires out over resource shards and merges them back in
+//! canonical order, reproducing this engine's reports bit-for-bit at
+//! every thread count (see `coordinator::admit`'s determinism-contract
+//! docs; this single-program engine stays sequential and serves as the
+//! oracle).
 //!
 //! # Admission / invalidation contract (the multi-program layer)
 //!

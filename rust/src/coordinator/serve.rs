@@ -158,6 +158,14 @@ impl<'f> CosimExecutor<'f> {
         self.session.cost_model()
     }
 
+    /// Worker threads for the session's shard-parallel calendar drains
+    /// (default: the fabric's `[session] threads`; 1 = sequential).
+    /// Reports are bit-identical at every thread count — see the
+    /// determinism contract in [`CosimSession`]'s module docs.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.session.set_threads(threads);
+    }
+
     /// Admit the next batch at its arrival cycle, simulate to
     /// quiescence, and return the batch's simulated makespan
     /// (admission-to-completion, queueing included).
@@ -215,6 +223,12 @@ impl<'f> DegradedExecutor<'f> {
     /// model, pre-set admission policy).
     pub fn with_session(session: FaultySession<'f>, prog: FabricProgram, gap: Cycle) -> Self {
         DegradedExecutor { session, prog, gap, next_at: 0, handles: Vec::new() }
+    }
+
+    /// Worker threads for the inner session's shard-parallel calendar
+    /// drains (1 = sequential; bit-identical at every thread count).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.session.set_threads(threads);
     }
 
     /// Admit the next batch, simulate to quiescence (applying due fault

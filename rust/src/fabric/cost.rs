@@ -55,6 +55,17 @@
 //! loop would still terminate or error, but the differential goldens
 //! would catch the divergence.
 //!
+//! The same rule is also the *parallelism* lever: because a price at
+//! start `s` reads only epochs `< s / w`, every fire in one calendar
+//! batch whose starts share an epoch can be priced against a frozen
+//! batch-start occupancy snapshot, on any thread, and still produce the
+//! sequential bits. The shard-parallel admission drain
+//! (`coordinator::admit`, module docs) exploits exactly this — models
+//! are `Send + Sync` and pricing is a pure read, so a `&dyn CostModel`
+//! plus an `&Occupancy` snapshot cross worker threads with no locking.
+//! Nothing in this module needed to change for that: purity *is* the
+//! shard-safety property.
+//!
 //! # Shipped models
 //!
 //! * [`InvariantCost`] — delegates to the analytic fabric models

@@ -492,7 +492,8 @@ impl NocSim {
     /// pass with direct effect application — the exact pre-parallel hot
     /// loop. Sharded: parallel per-node phases into per-shard scratches,
     /// then the sequential node-order merge. Both end with event
-    /// delivery.
+    /// delivery, itself fanned out by destination node range in the
+    /// sharded mode ([`NocSim::deliver_events`]).
     pub fn step(&mut self) {
         let now_next = self.now + 1;
         if self.shard_bounds.len() - 1 == 1 {
@@ -681,21 +682,73 @@ impl NocSim {
         self.scratch = scratch;
     }
 
-    /// Phase 3: deliver events due at the end of this cycle.
+    /// Phase 3: deliver events due at the end of this cycle. Multi-shard
+    /// sims fan delivery out by destination node range so it stops being
+    /// a sequential tail of the parallel step: each worker scans both due
+    /// lists and applies only the entries landing in its own node range,
+    /// through the same disjoint buffer/credit/occupancy views the step
+    /// phases use. Arrivals and credit returns touch disjoint state
+    /// (input buffers + occupancy vs. credit counters), and per-queue
+    /// application order equals the due-list order in every shard, so the
+    /// result is bit-identical to the sequential delivery loop (pinned by
+    /// the tests/noc_golden.rs threads sweeps).
     fn deliver_events(&mut self, now_next: Cycle) {
         let vcs = self.params.vcs;
         let due = self.arrivals.take_due(now_next);
-        for &(_, a) in &due {
-            let q = self.qbase[a.node] + a.port * vcs + a.flit.vc;
-            self.bufs.push_back(q, a.flit);
-            self.occ[a.node] += 1;
+        let due_credits = self.credit_returns.take_due(now_next);
+        if self.shard_bounds.len() - 1 > 1 && !(due.is_empty() && due_credits.is_empty()) {
+            self.deliver_sharded(&due, &due_credits);
+        } else {
+            // Single-shard fast path: the exact pre-parallel delivery
+            // loop (and the no-op path when nothing is due).
+            for &(_, a) in &due {
+                let q = self.qbase[a.node] + a.port * vcs + a.flit.vc;
+                self.bufs.push_back(q, a.flit);
+                self.occ[a.node] += 1;
+            }
+            for &(_, c) in &due_credits {
+                self.credits[self.qbase[c.node] + c.out_port * vcs + c.vc] += 1;
+            }
         }
         self.arrivals.recycle(due);
-        let due = self.credit_returns.take_due(now_next);
-        for &(_, c) in &due {
-            self.credits[self.qbase[c.node] + c.out_port * vcs + c.vc] += 1;
-        }
-        self.credit_returns.recycle(due);
+        self.credit_returns.recycle(due_credits);
+    }
+
+    /// Shard-parallel delivery: every worker filters the shared due lists
+    /// down to its node range and applies them to its disjoint views. The
+    /// stepping thread runs shard 0 — see [`NocSim::deliver_events`].
+    fn deliver_sharded(&mut self, due: &[(Cycle, Arrival)], due_credits: &[(Cycle, CreditReturn)]) {
+        let nshards = self.shard_bounds.len() - 1;
+        let vcs = self.params.vcs;
+        let NocSim { bufs, credits, occ, qbase, shard_bounds, shard_qbounds, pool, .. } = self;
+        let qbase: &[usize] = qbase;
+        let mut bufs_shards = bufs.shard_views(shard_qbounds);
+        let mut credits_r = &mut credits[..];
+        let mut occ_r = &mut occ[..];
+        let pool = pool.as_mut().expect("multi-shard sims own a worker pool");
+        pool.scoped(|scope| {
+            let mut first = None;
+            for i in 0..nshards {
+                let bufs_sh = bufs_shards.next().expect("one view per shard");
+                let (n0, n1) = (shard_bounds[i], shard_bounds[i + 1]);
+                let (q0, q1) = (shard_qbounds[i], shard_qbounds[i + 1]);
+                let (c, rest) = std::mem::take(&mut credits_r).split_at_mut(q1 - q0);
+                credits_r = rest;
+                let (oc, rest) = std::mem::take(&mut occ_r).split_at_mut(n1 - n0);
+                occ_r = rest;
+                if i == 0 {
+                    first = Some((bufs_sh, c, oc, n0, n1, q0));
+                } else {
+                    scope.execute(move || {
+                        deliver_range(bufs_sh, c, oc, qbase, n0, n1, q0, vcs, due, due_credits)
+                    });
+                }
+            }
+            // The stepping thread works too instead of idling at the
+            // barrier.
+            let (bufs_sh, c, oc, n0, n1, q0) = first.expect("at least one shard");
+            deliver_range(bufs_sh, c, oc, qbase, n0, n1, q0, vcs, due, due_credits);
+        });
     }
 
     /// True when no flits remain anywhere.
@@ -775,6 +828,40 @@ fn partition_by_queues(qbase: &[usize], total_q: usize, nodes: usize, shards: us
     }
     bounds.push(nodes);
     bounds
+}
+
+/// Apply the due arrivals / credit returns that land in node range
+/// `[n0, n1)` to one shard's disjoint views. `bufs` is addressed by
+/// global queue id (it subtracts its own offset); `credits` / `occ` are
+/// the shard's slices, offset by `q0` / `n0`. Filtering preserves the
+/// due-list order per queue, so sharded delivery replays the sequential
+/// loop exactly — see [`NocSim::deliver_events`].
+#[allow(clippy::too_many_arguments)]
+fn deliver_range(
+    mut bufs: FlitQueuesShard<'_>,
+    credits: &mut [u32],
+    occ: &mut [usize],
+    qbase: &[usize],
+    n0: usize,
+    n1: usize,
+    q0: usize,
+    vcs: usize,
+    due: &[(Cycle, Arrival)],
+    due_credits: &[(Cycle, CreditReturn)],
+) {
+    for &(_, a) in due {
+        if a.node < n0 || a.node >= n1 {
+            continue;
+        }
+        bufs.push_back(qbase[a.node] + a.port * vcs + a.flit.vc, a.flit);
+        occ[a.node - n0] += 1;
+    }
+    for &(_, c) in due_credits {
+        if c.node < n0 || c.node >= n1 {
+            continue;
+        }
+        credits[qbase[c.node] + c.out_port * vcs + c.vc - q0] += 1;
+    }
 }
 
 impl<E: Effects> ShardCtx<'_, E> {

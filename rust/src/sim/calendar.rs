@@ -14,6 +14,19 @@
 //! the wheel's O(1); `take_next` pops one heap entry per event at the due
 //! cycle and drains exactly one wheel bucket. FIFO tie-break within a
 //! cycle is inherited from the wheel, so runs replay bit-identically.
+//!
+//! # Batches as epoch barriers
+//!
+//! A [`StampedCalendar::take_due_until`] batch — every live event due at
+//! one cycle, in push order — is the unit the shard-parallel admission
+//! drain fans out over (`coordinator::admit`, module docs there). The
+//! contract this type contributes is ordering: batches surface strictly
+//! time-ascending, and within a batch the key order is exactly the push
+//! order, cancelled entries skipped without perturbing the survivors.
+//! The parallel drain preserves it by re-pushing follow-up events in the
+//! same canonical order the sequential loop would, so every later batch
+//! drains identically and the calendar never observes which thread count
+//! produced it.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

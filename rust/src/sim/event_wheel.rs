@@ -21,6 +21,12 @@
 //!   later laps. Laps cost one compare per co-resident event and are
 //!   impossible when the horizon covers the maximum delay (the NoC sizes
 //!   its wheel from `router_latency`, so its fast path never laps).
+//!
+//! The FIFO-per-cycle guarantee is what the shard-parallel engines lean
+//! on: a due bucket taken whole is a deterministic work list whose order
+//! is independent of thread count, so both the NoC's sharded delivery
+//! and the admission drain's epoch batches (via [`super::Calendar`])
+//! fan out over `take_due` results and merge back without reordering.
 
 use super::Cycle;
 

@@ -15,14 +15,17 @@
 //! * incremental re-simulation after a program/cost change (`replace`)
 //!   is bit-identical to a from-scratch oracle run.
 
+use std::sync::Arc;
+
 use archytas::accel::Precision;
 use archytas::compiler::lowering::lower;
 use archytas::compiler::mapper::{map_graph, MapStrategy};
 use archytas::compiler::FabricProgram;
 use archytas::coordinator::{cosim, cosim_ref, CosimSession, ExecReport};
-use archytas::fabric::Fabric;
+use archytas::fabric::{CongestionKnobs, CostModel, DvfsKnobs, Fabric, VaryingCost};
+use archytas::prop_assert;
 use archytas::sim::Cycle;
-use archytas::testutil::{bundled_fabric, merge_programs};
+use archytas::testutil::{bundled_fabric, merge_programs, prop};
 use archytas::workloads;
 
 const CONFIGS: [&str; 2] = ["edge16.toml", "homogeneous_npu.toml"];
@@ -231,4 +234,123 @@ fn invalidate_reprices_to_identical_bits() {
     s.invalidate(h1).unwrap();
     let after = s.report().unwrap();
     assert_reports_identical(&before, &after, "invalidate/noop");
+}
+
+/// The time-varying model family used by the parallel-drain sweeps: a
+/// short epoch so the test workloads cross many epoch boundaries, both
+/// congestion and DVFS mechanisms live.
+fn varying_model() -> Arc<dyn CostModel> {
+    let cong = CongestionKnobs { alpha: 0.5, cap: 4.0 };
+    let dvfs = DvfsKnobs {
+        window: 4,
+        warm_frac: 0.5,
+        hot_frac: 0.85,
+        warm_scale: 0.75,
+        hot_scale: 0.5,
+    };
+    Arc::new(VaryingCost::congestion_dvfs(512, cong, dvfs))
+}
+
+/// One staggered serving episode (mid-flight pause + retroactive
+/// admission) at the given thread count / partition, on either the
+/// invariant (`varying = false`) or congestion/DVFS model.
+fn sweep_episode(
+    fabric: &Fabric,
+    progs: &[FabricProgram],
+    varying: bool,
+    threads: usize,
+    shards: Option<&[usize]>,
+) -> ExecReport {
+    let mut s = if varying {
+        CosimSession::with_model(fabric, varying_model())
+    } else {
+        CosimSession::new(fabric)
+    };
+    s.set_threads(threads);
+    if let Some(b) = shards {
+        s.set_shards(Some(b)).unwrap();
+    }
+    s.admit_at(&progs[0], 0).unwrap();
+    s.run_until(400).unwrap();
+    for (k, p) in progs.iter().enumerate().skip(1) {
+        s.admit_at(p, 250 * k as Cycle).unwrap();
+    }
+    s.run_to_drain().unwrap();
+    s.report().unwrap()
+}
+
+/// The tentpole golden: threads ∈ {1, 2, 4, 8} shard-parallel sessions
+/// are bit-identical to the sequential engine across both configs, mixed
+/// workloads/strategies, and both the invariant and the congestion/DVFS
+/// time-varying models — every `ExecReport` field and every
+/// `ProgramSpan`, including the f64 energy fold bits.
+#[test]
+fn threads_sweep_bit_identical_across_matrix() {
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        let progs = [
+            lowered(&fabric, "mlp", MapStrategy::Greedy),
+            lowered(&fabric, "vit", MapStrategy::RoundRobin),
+            lowered(&fabric, "mlp", MapStrategy::RoundRobin),
+            lowered(&fabric, "vit", MapStrategy::Greedy),
+        ];
+        for varying in [false, true] {
+            let want = sweep_episode(&fabric, &progs, varying, 1, None);
+            for threads in [2, 4, 8] {
+                let got = sweep_episode(&fabric, &progs, varying, threads, None);
+                assert_reports_identical(
+                    &got,
+                    &want,
+                    &format!("{cfg}/varying={varying}/threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Shard-partition invariance: per-resource fences, a single forced
+/// shard, and random uneven partitions must all reproduce the sequential
+/// bits — the determinism contract holds for *every* valid partition,
+/// not just the balanced default.
+#[test]
+fn prop_shard_partition_invariance() {
+    let fabric = bundled_fabric("edge16.toml");
+    let progs = [
+        lowered(&fabric, "mlp", MapStrategy::Greedy),
+        lowered(&fabric, "vit", MapStrategy::RoundRobin),
+        lowered(&fabric, "mlp", MapStrategy::RoundRobin),
+    ];
+    for varying in [false, true] {
+        let want = sweep_episode(&fabric, &progs, varying, 1, None);
+        // The initial resource domain (tiles + HBM; links join the last
+        // shard as they materialize).
+        let nres = if varying {
+            CosimSession::with_model(&fabric, varying_model()).resource_count()
+        } else {
+            CosimSession::new(&fabric).resource_count()
+        };
+        // Per-resource fences: one shard per initial resource.
+        let per_res: Vec<usize> = (0..=nres).collect();
+        let got = sweep_episode(&fabric, &progs, varying, 4, Some(&per_res));
+        assert_reports_identical(&got, &want, &format!("varying={varying}/per-resource"));
+        // Single forced shard: the staged path at one shard.
+        let got = sweep_episode(&fabric, &progs, varying, 1, Some(&[0, nres]));
+        assert_reports_identical(&got, &want, &format!("varying={varying}/single-shard"));
+        // Random uneven partitions.
+        prop::check(6, |rng| {
+            let mut bounds = vec![0usize];
+            let mut at = 0usize;
+            while at < nres {
+                at = (at + 1 + rng.below(nres.div_ceil(2))).min(nres);
+                bounds.push(at);
+            }
+            let threads = 1 + rng.below(8);
+            let got = sweep_episode(&fabric, &progs, varying, threads, Some(&bounds));
+            prop_assert!(
+                got.bit_identical(&want),
+                "varying={varying}: partition {bounds:?} at {threads} threads diverged"
+            );
+            Ok(())
+        });
+    }
 }

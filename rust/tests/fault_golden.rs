@@ -533,3 +533,77 @@ fn fault_section_plumbs_from_toml() {
     assert!(s3.plan().is_empty());
     assert!(Arc::ptr_eq(s3.cost_model(), f2.cost_model()));
 }
+
+/// Threads-sweep leg for the fault layer: a FaultySession replay at
+/// threads ∈ {2, 4, 8} must bit-match the sequential session — the
+/// `ExecReport`, the `DegradationReport` and every per-request outcome.
+/// Faults exercise the parallel drain's retraction path too: recovery
+/// invalidates and re-prices mid-calendar, and that work drains through
+/// the same staged shards.
+#[test]
+fn prop_faulty_replay_is_thread_count_invariant() {
+    let fabric = small_fabric();
+    let nt = fabric.tile_count();
+    prop::check(8, |rng| {
+        let mut events = Vec::new();
+        for _ in 0..rng.below(5) {
+            let at = (rng.below(4000) + 1) as Cycle;
+            let kind = match rng.below(4) {
+                0 => FaultKind::TileDeath { tile: rng.below(nt - 2) },
+                1 => FaultKind::TileTransient { tile: rng.below(nt) },
+                2 => FaultKind::HbmBrownout { factor: 1.5, duration: 2_000 },
+                _ => {
+                    let from = rng.below(nt);
+                    FaultKind::LinkDegrade {
+                        from,
+                        to: (from + 1 + rng.below(nt - 1)) % nt,
+                        factor: 2.0,
+                        duration: 1_500,
+                    }
+                }
+            };
+            events.push(FaultEvent { at, kind });
+        }
+        let plan = FaultPlan::from_events(events);
+        let policy = POLICIES[rng.below(POLICIES.len())];
+        let cfg = FaultConfig::default();
+        let mut admissions = Vec::new();
+        for _ in 0..rng.below(3) + 1 {
+            let p = random_program(rng, nt);
+            let at = rng.below(3000) as Cycle;
+            admissions.push((p, at));
+        }
+        let episode = |threads: usize| -> Result<_, String> {
+            let mut s = FaultySession::with_plan(&fabric, plan.clone(), &cfg, policy)
+                .map_err(|e| e.to_string())?;
+            s.set_threads(threads);
+            let mut handles = Vec::new();
+            for (p, at) in &admissions {
+                handles.push(s.admit_at(p, *at).map_err(|e| e.to_string())?);
+            }
+            let rep = s.report().map_err(|e| e.to_string())?;
+            let deg = s.degradation(&rep);
+            let outs: Vec<_> = handles.iter().map(|&h| s.outcome(h)).collect();
+            Ok((rep, deg, outs))
+        };
+        let (want, want_deg, want_outs) = episode(1)?;
+        for threads in [2usize, 4, 8] {
+            let (got, got_deg, got_outs) = episode(threads)?;
+            prop_assert!(
+                got.bit_identical(&want),
+                "{policy:?}: threads {threads} diverged: cycles {} vs {}",
+                got.cycles,
+                want.cycles
+            );
+            prop_assert!(
+                got_deg == want_deg,
+                "{policy:?}: threads {threads} degradation diverged: {got_deg:?} vs {want_deg:?}"
+            );
+            prop_assert!(
+                got_outs == want_outs,
+                "{policy:?}: threads {threads} outcomes diverged"
+            );
+        }
+        Ok(())
+    });
+}
