@@ -29,7 +29,7 @@ use archytas::accel::Precision;
 use archytas::compiler::lowering::lower;
 use archytas::compiler::mapper::{map_graph, MapStrategy};
 use archytas::compiler::FabricProgram;
-use archytas::coordinator::{cosim, AdmissionQueue, CosimSession, ExecReport};
+use archytas::coordinator::{cosim, AdmissionQueue, CosimSession, ExecReport, StraddleStats};
 use archytas::fabric::{CongestionKnobs, CostModel, DvfsKnobs, Fabric, VaryingCost};
 use archytas::sim::Cycle;
 use archytas::testutil::{bundled_fabric, merge_programs};
@@ -219,9 +219,12 @@ fn varying_row(fabric: &Fabric, cfg: &str, k: usize) -> (f64, f64) {
 /// Shard-parallel sweep: one staggered time-varying stream simulated at
 /// 1/2/4/8 worker threads. Every parallel report is bit-checked against
 /// the sequential one (panic on divergence — the tentpole contract), and
-/// the row reports simulated cycles/sec per thread count. Returns the
-/// stream's simulated cycle count and the per-thread-count seconds.
-fn threads_row(fabric: &Fabric, cfg: &str, k: usize) -> (Cycle, Vec<(usize, f64)>) {
+/// the row reports simulated cycles/sec per thread count plus the
+/// epoch-boundary-straddle telemetry (how often the phase-3 merge had to
+/// re-price fires live — the sequential residue of the parallel drain).
+/// Returns the stream's simulated cycle count and the per-thread-count
+/// (seconds, straddle counters) rows.
+fn threads_row(fabric: &Fabric, cfg: &str, k: usize) -> (Cycle, Vec<(usize, f64, StraddleStats)>) {
     let model = varying_model();
     let shapes = request_shapes(fabric);
     let progs: Vec<(FabricProgram, Cycle)> = (0..k)
@@ -238,6 +241,7 @@ fn threads_row(fabric: &Fabric, cfg: &str, k: usize) -> (Cycle, Vec<(usize, f64)
     let mut rows = Vec::new();
     for threads in SWEEP_THREADS {
         let mut rep = None;
+        let mut straddle = StraddleStats::default();
         let secs = util::time_avg(iters, || {
             let mut s = CosimSession::with_model(fabric, model.clone());
             s.set_threads(threads);
@@ -251,6 +255,8 @@ fn threads_row(fabric: &Fabric, cfg: &str, k: usize) -> (Cycle, Vec<(usize, f64)
             }
             s.run_to_drain().unwrap();
             rep = Some(s.report().unwrap());
+            // Deterministic per fresh session, so last iteration == all.
+            straddle = s.straddle_stats();
         });
         let rep = rep.unwrap();
         match &base_rep {
@@ -267,12 +273,19 @@ fn threads_row(fabric: &Fabric, cfg: &str, k: usize) -> (Cycle, Vec<(usize, f64)
         }
         let cycles = base_rep.as_ref().unwrap().cycles;
         println!(
-            "  threads={threads}:  {:>10}/stream  =  {:>12.0} cycles/sec  ({:.2}x threads=1)",
+            concat!(
+                "  threads={}:  {:>10}/stream  =  {:>12.0} cycles/sec  ",
+                "({:.2}x threads=1)  straddled {}/{} batches, {} fires re-priced"
+            ),
+            threads,
             util::fmt_time(secs),
             cycles as f64 / secs,
-            base_secs / secs
+            base_secs / secs,
+            straddle.straddled_batches,
+            straddle.batches,
+            straddle.repriced_fires
         );
-        rows.push((threads, secs));
+        rows.push((threads, secs, straddle));
     }
     golden_check(
         base_rep.as_ref().unwrap(),
@@ -298,7 +311,7 @@ fn write_bundle(
     bursts: &[(String, usize, f64, f64, f64)],
     varying: (f64, f64),
     sweep_cycles: Cycle,
-    sweep_rows: &[(usize, f64)],
+    sweep_rows: &[(usize, f64, StraddleStats)],
     sweep_programs: usize,
 ) {
     let stamp = std::time::SystemTime::now()
@@ -326,16 +339,20 @@ fn write_bundle(
     let base = sweep_rows[0].1;
     let thread_rows: Vec<String> = sweep_rows
         .iter()
-        .map(|(threads, secs)| {
+        .map(|(threads, secs, straddle)| {
             format!(
                 concat!(
                     "      {{\"threads\":{},\"secs\":{},\"cycles_per_sec\":{},",
-                    "\"speedup_vs_sequential\":{}}}"
+                    "\"speedup_vs_sequential\":{},\"parallel_batches\":{},",
+                    "\"straddled_batches\":{},\"repriced_fires\":{}}}"
                 ),
                 threads,
                 jf(*secs),
                 jf(sweep_cycles as f64 / secs),
-                jf(base / secs)
+                jf(base / secs),
+                straddle.batches,
+                straddle.straddled_batches,
+                straddle.repriced_fires
             )
         })
         .collect();

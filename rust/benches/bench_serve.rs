@@ -1,0 +1,237 @@
+//! E-SERVE — sharded steady-state serving throughput.
+//!
+//! The serving tentpole: a `ShardedServer` replicates whole admission
+//! sessions across N shards behind a deterministic seeded request
+//! router and drives them with open-loop arrival streams. This bench
+//! sweeps shards ∈ {1, 2, 4, 8} × arrival process ∈ {Poisson,
+//! trace-driven with diurnal bursts} over one edge16 request stream and
+//! reports, per row: admitted programs/sec (wall), simulated cycles/sec
+//! (span over wall), and the p50/p99/p999 sojourn tail in fabric
+//! cycles.
+//!
+//! Two goldens panic on divergence (the `tests/serve_golden.rs`
+//! contract, re-checked here so CI's bench run pins it too):
+//!
+//! * **1-shard differential** — a 1-shard server fed the uniform trace
+//!   `0, gap, 2·gap, …` must replay `CosimExecutor`'s open-loop
+//!   admit/drain sequence request-for-request;
+//! * **replay invariance** — every row's parallel fan-out must produce
+//!   the byte-identical `ServeReport` of a sequential shard walk.
+//!
+//! The evidence bundle — rows, golden verdicts, stamp — lands in
+//! `rust/BENCH_serve.json`, which CI cats next to
+//! `BENCH_admission.json`.
+
+#[path = "util.rs"]
+mod util;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::compiler::FabricProgram;
+use archytas::coordinator::{CosimExecutor, ServeReport, ShardExec, ShardedServer};
+use archytas::fabric::Fabric;
+use archytas::sim::{ArrivalGen, ArrivalProcess, Cycle};
+use archytas::testutil::bundled_fabric;
+use archytas::workloads;
+
+const SWEEP_SHARDS: [usize; 4] = [1, 2, 4, 8];
+const ROUTER_SEED: u64 = 11;
+const REQUESTS: usize = 48;
+
+/// The per-request program every arrival admits (one mlp inference).
+fn request_program(fabric: &Fabric) -> FabricProgram {
+    let g = workloads::mlp(4, 64, &[32], 10, 7).unwrap();
+    let m = map_graph(&g, fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+    lower(&g, fabric, &m).unwrap()
+}
+
+/// Golden 1: the 1-shard server fed uniform pacing IS the open-loop
+/// executor — same admit/drain sequence, same sojourn and makespan per
+/// request (panic on any divergence).
+fn one_shard_golden(fabric: &Fabric, prog: &FabricProgram) {
+    let gap = 1_000;
+    let k = 16;
+    let mut gen = ArrivalGen::new(ArrivalProcess::Uniform { gap }, 0);
+    let arrivals = gen.take_trace(k);
+    let mut srv = ShardedServer::new(fabric, 1);
+    let rep = srv.serve_trace(prog, &arrivals).unwrap();
+    let mut exec = CosimExecutor::new(fabric, prog.clone(), gap);
+    for (i, r) in rep.records.iter().enumerate() {
+        let (makespan, sojourn) = exec.execute_batch_open_loop().unwrap();
+        assert_eq!(r.sojourn, sojourn.unwrap(), "request {i}: sojourn diverged");
+        assert_eq!(
+            r.finished_at - r.admitted_at,
+            makespan,
+            "request {i}: makespan diverged"
+        );
+    }
+    assert_eq!(rep.admitted, k, "uniform pacing must admit everything");
+    println!("  golden match (1 shard ≡ CosimExecutor open loop): ok");
+}
+
+/// One sweep row: time the parallel fan-out over a fixed arrival trace,
+/// then golden-check its merged report against a sequential shard walk
+/// (panic on divergence — serving determinism leg 2/3). Returns wall
+/// seconds and the (replay-checked) report.
+fn serve_row(
+    fabric: &Fabric,
+    prog: &FabricProgram,
+    arrivals: &[Cycle],
+    shards: usize,
+) -> (f64, ServeReport) {
+    let iters = 3;
+    let mut rep = None;
+    let secs = util::time_avg(iters, || {
+        let mut srv = ShardedServer::new(fabric, shards);
+        srv.set_seed(ROUTER_SEED).unwrap();
+        rep = Some(srv.serve_trace(prog, arrivals).unwrap());
+    });
+    let rep = rep.unwrap();
+    let mut seq = ShardedServer::new(fabric, shards);
+    seq.set_seed(ROUTER_SEED).unwrap();
+    seq.set_shard_exec(ShardExec::Sequential);
+    let seq_rep = seq.serve_trace(prog, arrivals).unwrap();
+    assert!(
+        rep == seq_rep,
+        "shards={shards}: parallel fan-out diverged from the sequential shard walk"
+    );
+    (secs, rep)
+}
+
+/// Flattened row for the bundle.
+struct RowOut {
+    arrival: &'static str,
+    shards: usize,
+    secs: f64,
+    speedup: f64,
+    rep: ServeReport,
+}
+
+fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string() // JSON has no Infinity/NaN
+    }
+}
+
+/// The archsim-style evidence bundle: per-row serving metrics + golden
+/// verdicts + a stamp. Golden fields are literal `true` because every
+/// row panics on divergence — reaching the write means they all held.
+fn write_bundle(rows: &[RowOut]) {
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let row_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "    {{\"arrival\":\"{}\",\"shards\":{},\"requests\":{},",
+                    "\"secs\":{},\"admitted\":{},\"shed\":{},\"degraded\":{},",
+                    "\"admitted_per_sec\":{},\"sim_cycles_per_sec\":{},",
+                    "\"p50_sojourn_cycles\":{},\"p99_sojourn_cycles\":{},",
+                    "\"p999_sojourn_cycles\":{},\"speedup_vs_one_shard\":{}}}"
+                ),
+                r.arrival,
+                r.shards,
+                r.rep.records.len(),
+                jf(r.secs),
+                r.rep.admitted,
+                r.rep.shed,
+                r.rep.degraded,
+                jf(r.rep.admitted as f64 / r.secs),
+                jf(r.rep.span_cycles() as f64 / r.secs),
+                jf(r.rep.p50_sojourn_cycles()),
+                jf(r.rep.p99_sojourn_cycles()),
+                jf(r.rep.p999_sojourn_cycles()),
+                jf(r.speedup)
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"archytas.bench_serve.v1\",\n",
+            "  \"stamp\": {{\"unix_secs\":{},\"config\":\"edge16.toml\",",
+            "\"requests_per_row\":{},\"router_seed\":{}}},\n",
+            "  \"golden\": {{\"one_shard_bit_identical_to_cosim_executor\":true,",
+            "\"parallel_sequential_replay\":true}},\n",
+            "  \"rows\": [\n{}\n  ]\n",
+            "}}\n"
+        ),
+        stamp,
+        REQUESTS,
+        ROUTER_SEED,
+        row_json.join(",\n")
+    );
+    let path = archytas::repo_root().join("BENCH_serve.json");
+    std::fs::write(&path, json).expect("writing BENCH_serve.json");
+    println!("\nwrote {}", path.display());
+}
+
+fn main() {
+    util::banner(
+        "E-SERVE",
+        "sharded steady-state serving: shards x arrival-process sweep (golden-checked)",
+    );
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = request_program(&fabric);
+
+    println!("\n-- serving determinism goldens --");
+    one_shard_golden(&fabric, &prog);
+
+    // The two open-loop streams every shard count serves: memoryless
+    // Poisson, and a recorded bursty trace under diurnal modulation.
+    let poisson: Vec<Cycle> = ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 900 }, 42)
+        .take(REQUESTS)
+        .collect();
+    let trace: Vec<Cycle> = ArrivalGen::new(
+        ArrivalProcess::Trace { gaps: vec![0, 400, 2_500, 100, 1_200, 0, 800] },
+        7,
+    )
+    .with_diurnal(60_000, 0.6)
+    .take(REQUESTS)
+    .collect();
+
+    let mut rows = Vec::new();
+    for (arrival, arrivals) in [("poisson", &poisson), ("trace_diurnal", &trace)] {
+        println!(
+            "\n-- open-loop serving: edge16.toml, {arrival}, {} requests --",
+            arrivals.len()
+        );
+        let mut base_secs = f64::NAN;
+        for shards in SWEEP_SHARDS {
+            let (secs, rep) = serve_row(&fabric, &prog, arrivals, shards);
+            if shards == 1 {
+                base_secs = secs;
+            }
+            let speedup = base_secs / secs;
+            println!(
+                concat!(
+                    "  shards={}:  {:>10}/stream  =  {:>8.0} admitted/sec,  ",
+                    "{:>12.0} sim cycles/sec,  p50/p99/p999 sojourn = {:.0}/{:.0}/{:.0} cyc  ",
+                    "({:.2}x 1 shard)"
+                ),
+                shards,
+                util::fmt_time(secs),
+                rep.admitted as f64 / secs,
+                rep.span_cycles() as f64 / secs,
+                rep.p50_sojourn_cycles(),
+                rep.p99_sojourn_cycles(),
+                rep.p999_sojourn_cycles(),
+                speedup
+            );
+            rows.push(RowOut { arrival, shards, secs, speedup, rep });
+        }
+        println!("  golden match (parallel ≡ sequential shard walk, all counts): ok");
+    }
+    write_bundle(&rows);
+    println!("\nexpected shape: replicated shards split the stream, so wall time per");
+    println!("request drops roughly with the shard count while per-request sojourn");
+    println!("falls too (each shard queues only its slice). Every row's parallel");
+    println!("fan-out is bit-identical to a sequential walk of the same shards, and");
+    println!("one shard replays the single-session open-loop executor exactly.");
+}

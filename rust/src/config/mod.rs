@@ -10,6 +10,8 @@ mod schema;
 mod toml;
 mod value;
 
-pub use schema::{CostConfig, CuConfig, FabricConfig, NocConfig, SessionConfig, WorkloadConfig};
+pub use schema::{
+    CostConfig, CuConfig, FabricConfig, NocConfig, ServeConfig, SessionConfig, WorkloadConfig,
+};
 pub use toml::{parse_document, ParseError};
 pub use value::{table_get, Document, Item, Table, Value};

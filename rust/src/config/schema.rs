@@ -267,6 +267,150 @@ impl Default for SessionConfig {
     }
 }
 
+/// Sharded-serving knobs (`[serve]`): shard count, router seed,
+/// open-loop arrival process and overload policy for
+/// `coordinator::shard::ShardedServer` /
+/// `coordinator::shard::arrival_gen_from_config`. Each shard's session
+/// additionally inherits `[session] threads` for its internal calendar
+/// drains — the serving side of ROADMAP follow-up (n).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Replicated fabric sessions behind the request router.
+    pub shards: usize,
+    /// Arrival process: `uniform | poisson | trace`.
+    pub arrival: String,
+    /// Mean inter-arrival gap, cycles (`uniform`: the exact gap;
+    /// `poisson`: the exponential mean; ignored for `trace`).
+    pub mean_gap_cycles: u64,
+    /// Seed shared by the request router and the arrival generator
+    /// (their draw streams are domain-separated — see shard.rs docs).
+    pub seed: u64,
+    /// Overload policy: `queue | shed | degrade`.
+    pub overload: String,
+    /// Backlog cap, cycles, past which the overload policy triggers
+    /// (0 = unbounded; only legal for `queue`).
+    pub queue_cap_cycles: u64,
+    /// Diurnal burst-modulation period, cycles (0 = off).
+    pub diurnal_period_cycles: u64,
+    /// Diurnal rate amplitude in `[0, 1)`.
+    pub diurnal_amplitude: f64,
+    /// Base gap sequence for `arrival = "trace"`, replayed cyclically.
+    pub trace_gaps: Vec<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 1,
+            arrival: "uniform".into(),
+            mean_gap_cycles: 1_000,
+            seed: 0,
+            overload: "queue".into(),
+            queue_cap_cycles: 0,
+            diurnal_period_cycles: 0,
+            diurnal_amplitude: 0.0,
+            trace_gaps: Vec::new(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let d = Self::default();
+        let mut trace_gaps = Vec::new();
+        if let Some(v) = doc.get("serve.trace_gaps") {
+            let arr = v
+                .as_array()
+                .ok_or_else(|| anyhow!("serve.trace_gaps must be an array of integers"))?;
+            for (i, g) in arr.iter().enumerate() {
+                let g = g
+                    .as_int()
+                    .ok_or_else(|| anyhow!("serve.trace_gaps[{i}] must be an integer"))?;
+                if !(0..=1_000_000_000).contains(&g) {
+                    bail!("serve.trace_gaps[{i}] must be in 0..=1e9 cycles, got {g}");
+                }
+                trace_gaps.push(g as u64);
+            }
+        }
+        let cfg = ServeConfig {
+            shards: doc.get_int("serve.shards", d.shards as i64) as usize,
+            arrival: doc.get_str("serve.arrival", &d.arrival).to_string(),
+            mean_gap_cycles: doc.get_int("serve.mean_gap_cycles", d.mean_gap_cycles as i64)
+                as u64,
+            seed: doc.get_int("serve.seed", d.seed as i64) as u64,
+            overload: doc.get_str("serve.overload", &d.overload).to_string(),
+            queue_cap_cycles: doc.get_int("serve.queue_cap_cycles", d.queue_cap_cycles as i64)
+                as u64,
+            diurnal_period_cycles: doc
+                .get_int("serve.diurnal_period_cycles", d.diurnal_period_cycles as i64)
+                as u64,
+            diurnal_amplitude: doc.get_float("serve.diurnal_amplitude", d.diurnal_amplitude),
+            trace_gaps,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Range/NaN validation, messages naming the `[serve]` key at fault.
+    pub fn validate(&self) -> Result<()> {
+        // Upper bounds also catch negative TOML values wrapping through
+        // the i64 -> u64/usize casts into huge counts.
+        if self.shards == 0 || self.shards > 4096 {
+            bail!("serve.shards must be in 1..=4096, got {}", self.shards);
+        }
+        let arrivals = ["uniform", "poisson", "trace"];
+        if !arrivals.contains(&self.arrival.as_str()) {
+            bail!(
+                "unknown serve.arrival {:?} (expected one of {arrivals:?})",
+                self.arrival
+            );
+        }
+        if self.mean_gap_cycles == 0 || self.mean_gap_cycles > 1_000_000_000 {
+            bail!(
+                "serve.mean_gap_cycles must be in 1..=1e9 cycles, got {}",
+                self.mean_gap_cycles
+            );
+        }
+        let policies = ["queue", "shed", "degrade"];
+        if !policies.contains(&self.overload.as_str()) {
+            bail!(
+                "unknown serve.overload {:?} (expected one of {policies:?})",
+                self.overload
+            );
+        }
+        if self.queue_cap_cycles > 1_000_000_000_000 {
+            bail!(
+                "serve.queue_cap_cycles must be <= 1e12 cycles, got {}",
+                self.queue_cap_cycles
+            );
+        }
+        if self.overload != "queue" && self.queue_cap_cycles == 0 {
+            bail!(
+                "serve.overload = {:?} needs serve.queue_cap_cycles > 0 (a cap-less policy never triggers)",
+                self.overload
+            );
+        }
+        if self.diurnal_period_cycles > 1_000_000_000_000 {
+            bail!(
+                "serve.diurnal_period_cycles must be <= 1e12 cycles, got {}",
+                self.diurnal_period_cycles
+            );
+        }
+        // is_finite() rejects NaN; contains() keeps the amplitude below
+        // 1 so the modulated arrival rate never reaches zero.
+        if !self.diurnal_amplitude.is_finite() || !(0.0..1.0).contains(&self.diurnal_amplitude) {
+            bail!(
+                "serve.diurnal_amplitude must be finite and lie in [0, 1), got {}",
+                self.diurnal_amplitude
+            );
+        }
+        if self.arrival == "trace" && self.trace_gaps.is_empty() {
+            bail!("serve.arrival = \"trace\" needs a non-empty serve.trace_gaps");
+        }
+        Ok(())
+    }
+}
+
 /// Whole-fabric configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
@@ -287,6 +431,8 @@ pub struct FabricConfig {
     pub fault: crate::sim::FaultConfig,
     /// Admission-session knobs (`[session]`).
     pub session: SessionConfig,
+    /// Sharded-serving knobs (`[serve]`).
+    pub serve: ServeConfig,
 }
 
 impl Default for FabricConfig {
@@ -302,6 +448,7 @@ impl Default for FabricConfig {
             cost: CostConfig::default(),
             fault: crate::sim::FaultConfig::default(),
             session: SessionConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -367,6 +514,7 @@ impl FabricConfig {
             session: SessionConfig {
                 threads: doc.get_int("session.threads", d.session.threads as i64) as usize,
             },
+            serve: ServeConfig::from_document(doc).context("parsing [serve] section")?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -415,6 +563,7 @@ impl FabricConfig {
         }
         self.cost.validate()?;
         self.fault.validate()?;
+        self.serve.validate()?;
         Ok(())
     }
 
@@ -619,6 +768,60 @@ cluster_cores = 4
         ] {
             let e = FabricConfig::from_toml(bad).unwrap_err();
             assert!(format!("{e:#}").contains("session.threads"), "{bad:?}: {e:#}");
+        }
+    }
+
+    #[test]
+    fn serve_section_parses_and_defaults() {
+        let cfg = FabricConfig::from_toml(
+            "[serve]\nshards = 4\narrival = \"poisson\"\nmean_gap_cycles = 500\nseed = 9\n\
+             overload = \"shed\"\nqueue_cap_cycles = 2000\ndiurnal_period_cycles = 10000\n\
+             diurnal_amplitude = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.shards, 4);
+        assert_eq!(cfg.serve.arrival, "poisson");
+        assert_eq!(cfg.serve.mean_gap_cycles, 500);
+        assert_eq!(cfg.serve.seed, 9);
+        assert_eq!(cfg.serve.overload, "shed");
+        assert_eq!(cfg.serve.queue_cap_cycles, 2_000);
+        assert_eq!(cfg.serve.diurnal_period_cycles, 10_000);
+        assert_eq!(cfg.serve.diurnal_amplitude, 0.5);
+        // Trace arrivals carry their gap list through.
+        let cfg = FabricConfig::from_toml(
+            "[serve]\narrival = \"trace\"\ntrace_gaps = [100, 0, 800]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.trace_gaps, vec![100, 0, 800]);
+        // Absent section = 1 unsharded queue-policy shard.
+        assert_eq!(FabricConfig::from_toml("").unwrap().serve, ServeConfig::default());
+        assert_eq!(ServeConfig::default().shards, 1);
+    }
+
+    #[test]
+    fn serve_section_rejects_bad_values_naming_the_key() {
+        for (bad, key) in [
+            ("[serve]\nshards = 0\n", "serve.shards"),
+            // Negative values must not wrap through the usize/u64 casts.
+            ("[serve]\nshards = -1\n", "serve.shards"),
+            ("[serve]\narrival = \"fractal\"\n", "serve.arrival"),
+            ("[serve]\nmean_gap_cycles = 0\n", "serve.mean_gap_cycles"),
+            ("[serve]\nmean_gap_cycles = -5\n", "serve.mean_gap_cycles"),
+            ("[serve]\noverload = \"explode\"\n", "serve.overload"),
+            ("[serve]\nqueue_cap_cycles = -1\n", "serve.queue_cap_cycles"),
+            // A cap-less shed/degrade policy would never trigger.
+            ("[serve]\noverload = \"shed\"\n", "serve.queue_cap_cycles"),
+            ("[serve]\noverload = \"degrade\"\nqueue_cap_cycles = 0\n", "serve.queue_cap_cycles"),
+            ("[serve]\ndiurnal_period_cycles = -1\n", "serve.diurnal_period_cycles"),
+            // Amplitude 1 would zero the arrival rate at the trough.
+            ("[serve]\ndiurnal_amplitude = 1.0\n", "serve.diurnal_amplitude"),
+            ("[serve]\ndiurnal_amplitude = -0.2\n", "serve.diurnal_amplitude"),
+            ("[serve]\narrival = \"trace\"\n", "serve.trace_gaps"),
+            ("[serve]\narrival = \"trace\"\ntrace_gaps = [10, -3]\n", "serve.trace_gaps"),
+        ] {
+            let e = FabricConfig::from_toml(bad).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(msg.contains(key), "error for {bad:?} must name {key}: {msg}");
         }
     }
 

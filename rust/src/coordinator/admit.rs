@@ -144,7 +144,15 @@
 //! `tests/fault_golden.rs` pin threads ∈ {1, 2, 4, 8} and adversarial
 //! partitions bit-identical across the golden matrix. Install/settle
 //! wakes stay sequential — only drain batches fan out, which is where
-//! O(active resources) work per instant lives.
+//! O(active resources) work per instant lives. How often the merge's
+//! live re-price fires on real streams is telemetry now:
+//! [`StraddleStats`] / [`CosimSession::straddle_stats`], surfaced per
+//! thread count by `bench_admission`. One layer further up,
+//! [`super::shard`] replicates whole sessions — each shard an
+//! independent `CosimSession`/[`FaultySession`] with its own `threads`
+//! — behind a deterministic request router; its serving determinism
+//! contract (hash routing, canonical merge order, replay guarantee)
+//! composes with, and is documented alongside, this one.
 //!
 //! # Pruning and the admission floor
 //!
@@ -384,6 +392,30 @@ struct PriceScratch {
 /// programs through the compiler, which only emits supported steps. The
 /// same applies to perturbations rejected for reaching below the pruned
 /// admission floor.
+/// Epoch-boundary-straddle telemetry of the shard-parallel drain
+/// (ROADMAP PR 7 follow-up (m)). Phase 2 prices every staged fire
+/// against the batch-start occupancy snapshot; when a batch's fires
+/// straddle an epoch boundary, the later-epoch fires may legally read
+/// occupancy committed earlier in the same batch, so the phase-3 merge
+/// re-prices them against live state. That re-price is correct but
+/// sequential — if it dominates, the parallel drain degrades toward the
+/// sequential engine, and the remedy would be splitting batches at
+/// epoch fences up front. These counters make that call data:
+/// `bench_admission` surfaces them per thread count in its table and in
+/// `BENCH_admission.json`.
+///
+/// Counters accumulate over the session's lifetime and only the
+/// parallel drain path updates them (`threads == 1` leaves them zero).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StraddleStats {
+    /// Parallel batches executed (batches with at least one staged fire).
+    pub batches: u64,
+    /// Batches in which at least one fire was re-priced live at merge.
+    pub straddled_batches: u64,
+    /// Total fires re-priced live at merge.
+    pub repriced_fires: u64,
+}
+
 pub struct CosimSession<'f> {
     fabric: &'f Fabric,
     /// The pricing seam: every resource query routes through this.
@@ -432,6 +464,8 @@ pub struct CosimSession<'f> {
     /// instead of O(world) (PR 5 follow-up (h)). Invariant-model
     /// sessions never touch it.
     start_index: BTreeSet<(Cycle, usize)>,
+    /// Epoch-boundary-straddle telemetry of the parallel drain.
+    straddle: StraddleStats,
 }
 
 /// Price one step starting at `start` through the cost model: returns
@@ -539,7 +573,14 @@ impl<'f> CosimSession<'f> {
             fires: Vec::new(),
             price_scratch: Vec::new(),
             start_index: BTreeSet::new(),
+            straddle: StraddleStats::default(),
         }
+    }
+
+    /// Epoch-boundary-straddle counters of the parallel drain (see
+    /// [`StraddleStats`]); zero while `threads == 1`.
+    pub fn straddle_stats(&self) -> StraddleStats {
+        self.straddle
     }
 
     /// Worker threads used by shard-parallel drains (1 = sequential).
@@ -1539,6 +1580,8 @@ impl<'f> CosimSession<'f> {
             if fires.is_empty() {
                 continue;
             }
+            self.straddle.batches += 1;
+            let mut repriced_here = 0u64;
 
             // Phase 2 — shard-parallel pricing against the batch-start
             // occupancy snapshot.
@@ -1639,6 +1682,7 @@ impl<'f> CosimSession<'f> {
                                 cost = c2;
                                 dur = d2;
                                 self.res[f.res as usize].free = f.start + dur;
+                                repriced_here += 1;
                             }
                             Err(e) => {
                                 result = Err(e);
@@ -1659,6 +1703,10 @@ impl<'f> CosimSession<'f> {
                     self.occ.add_step(&self.progs[p].steps[i], f.start, f.start + dur);
                 }
                 self.cal.push(f.start + dur, f.id);
+            }
+            if repriced_here > 0 {
+                self.straddle.straddled_batches += 1;
+                self.straddle.repriced_fires += repriced_here;
             }
         }
         self.batch = batch;
@@ -2091,6 +2139,45 @@ impl<'f> FaultySession<'f> {
     /// Forward of [`CosimSession::set_shards`].
     pub fn set_shards(&mut self, bounds: Option<&[usize]>) -> Result<()> {
         self.inner.set_shards(bounds)
+    }
+
+    /// Forward of [`CosimSession::straddle_stats`].
+    pub fn straddle_stats(&self) -> StraddleStats {
+        self.inner.straddle_stats()
+    }
+
+    /// Forward of [`CosimSession::set_discard_pruned`] — the long-run
+    /// serving knob works identically through the fault layer.
+    pub fn set_discard_pruned(&mut self, on: bool) {
+        self.inner.set_discard_pruned(on)
+    }
+
+    /// Forward of [`CosimSession::queue_footprint`].
+    pub fn queue_footprint(&self) -> (usize, usize) {
+        self.inner.queue_footprint()
+    }
+
+    /// Retained per-step history including this layer's per-request
+    /// recovery copies (the steady-state footprint probe; see
+    /// [`CosimSession::history_footprint`]).
+    pub fn history_footprint(&self) -> usize {
+        self.inner.history_footprint()
+            + self.reqs.iter().map(|r| r.steps.len()).sum::<usize>()
+    }
+
+    /// Forward of [`CosimSession::prune_completed_before`], additionally
+    /// releasing pruned requests' retained recovery content: a pruned
+    /// request completed strictly before `t`, so no future fault can
+    /// afflict it (the affliction scans skip completed records) and its
+    /// `steps` copy is dead weight in a steady-state serving run.
+    pub fn prune_completed_before(&mut self, t: Cycle) -> Result<usize> {
+        let removed = self.inner.prune_completed_before(t)?;
+        for (p, req) in self.reqs.iter_mut().enumerate() {
+            if self.inner.progs[p].pruned && !req.steps.is_empty() {
+                req.steps = Vec::new();
+            }
+        }
+        Ok(removed)
     }
 
     /// The session's effective cost model (the degraded wrapper when the

@@ -28,6 +28,14 @@
 //!   session plugs in as a simulated-latency executor
 //!   ([`serve::CosimExecutor`]), so the batch server can report fabric
 //!   latencies for every batch it forms.
+//! * [`shard`] — **scale-out**: [`shard::ShardedServer`] replicates
+//!   whole sessions across N shards behind a deterministic seeded
+//!   request router, drives them with open-loop arrival processes
+//!   ([`crate::sim::ArrivalGen`]) under overload admission control
+//!   (queue / shed / degrade via the existing policy keys), and merges
+//!   per-request records in canonical order — replay-invariant across
+//!   OS scheduling and shard execution order, pinned by
+//!   `tests/serve_golden.rs` and `bench_serve`.
 //!
 //! The robustness layer threads through all of it: [`admit`]'s
 //! `FaultySession` processes a seeded [`crate::sim::FaultPlan`] against
@@ -44,11 +52,16 @@ pub mod admit;
 pub mod exec;
 pub mod refexec;
 pub mod serve;
+pub mod shard;
 
 pub use admit::{
     AdmissionQueue, AdmitMeta, AdmitPolicy, CosimSession, DegradationReport, FaultySession,
-    ProgramHandle, RecoveryPolicy, RequestOutcome,
+    ProgramHandle, RecoveryPolicy, RequestOutcome, StraddleStats,
 };
 pub use exec::{cosim, cosim_with, ExecReport, ProgramSpan};
 pub use refexec::{cosim_ref, cosim_ref_with};
 pub use serve::{BatchServer, BatchStats, CosimExecutor, DegradedExecutor, Request as ServeRequest};
+pub use shard::{
+    arrival_gen_from_config, AdmitDecision, OverloadPolicy, RequestRecord, ServeReport, ShardExec,
+    ShardedServer,
+};

@@ -26,6 +26,23 @@
 //! [`RequestOutcome`]s (retries, backoff-delayed restarts, re-maps,
 //! sheds) and the episode's [`DegradationReport`] quantify how
 //! gracefully the configured [`RecoveryPolicy`] degrades.
+//!
+//! **Open-loop latency accounting**: two clocks, kept separate. The
+//! wall-clock side ([`BatchStats::latencies_us`], measured from
+//! `Request::submitted` `Instant`s) times the *host* loop; the simulated
+//! side times the *fabric*. For the fabric, queueing delay must be
+//! measured from the request's **simulated arrival cycle**, not from the
+//! wall-clock instant it crossed the channel: both executors expose
+//! `execute_batch_open_loop`, which returns the batch's simulated
+//! sojourn (completion − open-loop arrival, so a fault-floor bump or an
+//! overload backlog shows up as queueing delay; `None` for a shed
+//! batch), recorded in [`BatchStats::sim_sojourn_cycles`] with
+//! p50/p99/p999 accessors. Sharded steady-state serving — N replicated
+//! sessions behind a deterministic request router driven by
+//! [`crate::sim::ArrivalGen`] open-loop arrival processes — lives one
+//! module over in [`super::shard`], which documents the serving
+//! determinism contract (hash routing, canonical merge order, replay
+//! guarantee).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -63,6 +80,13 @@ pub struct BatchStats {
     /// Per-batch simulated fabric makespan, cycles (populated by
     /// [`BatchServer::run_cosim`]; empty in plain wall-clock mode).
     pub sim_cycles: Vec<Cycle>,
+    /// Per-batch simulated sojourn, cycles: completion − open-loop
+    /// arrival, so simulated queueing delay (fault-floor bumps, overload
+    /// backlog) is included — unlike [`BatchStats::sim_cycles`], which
+    /// starts the clock at admission. Shed batches are excluded (they
+    /// never complete). Populated by the simulated-latency serving
+    /// modes; empty in plain wall-clock mode.
+    pub sim_sojourn_cycles: Vec<Cycle>,
 }
 
 impl BatchStats {
@@ -80,6 +104,10 @@ impl BatchStats {
 
     pub fn p99_latency_us(&self) -> f64 {
         percentile(&self.latencies_us, 0.99)
+    }
+
+    pub fn p999_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 0.999)
     }
 
     pub fn throughput_rps(&self, wall_s: f64) -> f64 {
@@ -105,9 +133,28 @@ impl BatchStats {
         let v: Vec<f64> = self.sim_cycles.iter().map(|&c| c as f64).collect();
         percentile(&v, 0.99)
     }
+
+    /// Simulated sojourn percentile in fabric cycles (arrival-anchored;
+    /// see [`BatchStats::sim_sojourn_cycles`]).
+    pub fn sim_sojourn_percentile(&self, q: f64) -> f64 {
+        let v: Vec<f64> = self.sim_sojourn_cycles.iter().map(|&c| c as f64).collect();
+        percentile(&v, q)
+    }
+
+    pub fn p50_sim_sojourn_cycles(&self) -> f64 {
+        self.sim_sojourn_percentile(0.50)
+    }
+
+    pub fn p99_sim_sojourn_cycles(&self) -> f64 {
+        self.sim_sojourn_percentile(0.99)
+    }
+
+    pub fn p999_sim_sojourn_cycles(&self) -> f64 {
+        self.sim_sojourn_percentile(0.999)
+    }
 }
 
-fn percentile(xs: &[f64], q: f64) -> f64 {
+pub(crate) fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
@@ -170,10 +217,21 @@ impl<'f> CosimExecutor<'f> {
     /// quiescence, and return the batch's simulated makespan
     /// (admission-to-completion, queueing included).
     pub fn execute_batch(&mut self) -> Result<Cycle> {
+        self.execute_batch_open_loop().map(|(m, _)| m)
+    }
+
+    /// Like [`CosimExecutor::execute_batch`], additionally returning the
+    /// batch's simulated *sojourn* — completion − open-loop arrival.
+    /// A plain session admits exactly at the arrival cycle, so sojourn
+    /// equals makespan here; the distinction matters for
+    /// [`DegradedExecutor::execute_batch_open_loop`], where the
+    /// admission clock can be bumped past the arrival.
+    pub fn execute_batch_open_loop(&mut self) -> Result<(Cycle, Option<Cycle>)> {
         let h = self.session.admit_at(&self.prog, self.next_at)?;
         self.next_at += self.gap;
         self.session.run_to_drain()?;
-        Ok(self.session.span(h).makespan())
+        let makespan = self.session.span(h).makespan();
+        Ok((makespan, Some(makespan)))
     }
 
     /// The underlying session (e.g. for a merged
@@ -197,6 +255,9 @@ pub struct DegradedExecutor<'f> {
     gap: Cycle,
     next_at: Cycle,
     handles: Vec<ProgramHandle>,
+    /// Actual admission cycle of each batch (arrival after any
+    /// fault-floor bump), in batch order.
+    admissions: Vec<Cycle>,
 }
 
 impl<'f> DegradedExecutor<'f> {
@@ -216,13 +277,21 @@ impl<'f> DegradedExecutor<'f> {
             gap,
             next_at: 0,
             handles: Vec::new(),
+            admissions: Vec::new(),
         })
     }
 
     /// Wrap an explicitly-built session (recorded plan, explicit base
     /// model, pre-set admission policy).
     pub fn with_session(session: FaultySession<'f>, prog: FabricProgram, gap: Cycle) -> Self {
-        DegradedExecutor { session, prog, gap, next_at: 0, handles: Vec::new() }
+        DegradedExecutor {
+            session,
+            prog,
+            gap,
+            next_at: 0,
+            handles: Vec::new(),
+            admissions: Vec::new(),
+        }
     }
 
     /// Worker threads for the inner session's shard-parallel calendar
@@ -237,12 +306,41 @@ impl<'f> DegradedExecutor<'f> {
     /// processed fault) is bumped to the floor — the serving clock
     /// cannot admit into frozen fault history.
     pub fn execute_batch(&mut self) -> Result<Cycle> {
-        let at = self.next_at.max(self.session.fault_floor());
+        self.execute_batch_open_loop().map(|(m, _)| m)
+    }
+
+    /// Like [`DegradedExecutor::execute_batch`], additionally returning
+    /// the batch's simulated sojourn measured from its *pre-bump*
+    /// open-loop arrival: a fault-floor bump is queueing delay the
+    /// request experienced, so it belongs in the latency percentiles
+    /// even though the makespan clock only starts at admission. A shed
+    /// batch never completes — its sojourn is `None`, not zero (a zero
+    /// would deflate the percentiles exactly when the fabric is at its
+    /// worst).
+    pub fn execute_batch_open_loop(&mut self) -> Result<(Cycle, Option<Cycle>)> {
+        let arrival = self.next_at;
+        let at = arrival.max(self.session.fault_floor());
         self.next_at = at + self.gap;
         let h = self.session.admit_at(&self.prog, at)?;
         self.handles.push(h);
+        self.admissions.push(at);
         self.session.run_to_drain()?;
-        Ok(self.session.span(h).makespan())
+        let span = self.session.span(h);
+        let sojourn = if self.session.outcome(h).shed {
+            None
+        } else {
+            Some(span.finished_at - arrival)
+        };
+        Ok((span.makespan(), sojourn))
+    }
+
+    /// Actual admission cycles in batch order — the open-loop arrival
+    /// trace that replays this closed-loop episode exactly (feeding it
+    /// to a 1-shard [`super::shard::ShardedServer`] makes every
+    /// fault-floor bump a no-op; `tests/serve_golden.rs` builds its
+    /// degraded differential on this).
+    pub fn admissions(&self) -> &[Cycle] {
+        &self.admissions
     }
 
     /// Recovery outcome of batch `i` (admission order).
@@ -297,20 +395,22 @@ impl BatchServer {
 
     /// Serve like [`BatchServer::run`], additionally driving the co-sim
     /// session as the timing executor: every formed batch is admitted to
-    /// `sim`'s shared calendar and its simulated makespan recorded in
-    /// [`BatchStats::sim_cycles`].
+    /// `sim`'s shared calendar, its simulated makespan recorded in
+    /// [`BatchStats::sim_cycles`] and its arrival-anchored sojourn in
+    /// [`BatchStats::sim_sojourn_cycles`].
     pub fn run_cosim(
         &self,
         rx: mpsc::Receiver<Request>,
         exec: impl FnMut(&Tensor) -> Result<Tensor>,
         sim: &mut CosimExecutor,
     ) -> Result<BatchStats> {
-        self.run_inner(rx, exec, |_| sim.execute_batch().map(Some))
+        self.run_inner(rx, exec, |_| sim.execute_batch_open_loop().map(Some))
     }
 
     /// Serve like [`BatchServer::run_cosim`], but through the
     /// fault-injected timing executor. Shed batches record a zero
-    /// simulated makespan in [`BatchStats::sim_cycles`]; query the
+    /// simulated makespan in [`BatchStats::sim_cycles`] and no sojourn
+    /// (see [`DegradedExecutor::execute_batch_open_loop`]); query the
     /// executor's [`DegradedExecutor::outcomes`] and
     /// [`DegradedExecutor::report_degraded`] afterwards for the
     /// recovery telemetry.
@@ -320,14 +420,14 @@ impl BatchServer {
         exec: impl FnMut(&Tensor) -> Result<Tensor>,
         sim: &mut DegradedExecutor,
     ) -> Result<BatchStats> {
-        self.run_inner(rx, exec, |_| sim.execute_batch().map(Some))
+        self.run_inner(rx, exec, |_| sim.execute_batch_open_loop().map(Some))
     }
 
     fn run_inner(
         &self,
         rx: mpsc::Receiver<Request>,
         mut exec: impl FnMut(&Tensor) -> Result<Tensor>,
-        mut on_batch: impl FnMut(usize) -> Result<Option<Cycle>>,
+        mut on_batch: impl FnMut(usize) -> Result<Option<(Cycle, Option<Cycle>)>>,
     ) -> Result<BatchStats> {
         let mut stats = BatchStats::default();
         let mut pending: Vec<Request> = Vec::new();
@@ -374,8 +474,11 @@ impl BatchServer {
             stats.requests += batch.len();
             stats.batches += 1;
             stats.batch_sizes.push(batch.len());
-            if let Some(cycles) = on_batch(batch.len())? {
+            if let Some((cycles, sojourn)) = on_batch(batch.len())? {
                 stats.sim_cycles.push(cycles);
+                if let Some(s) = sojourn {
+                    stats.sim_sojourn_cycles.push(s);
+                }
             }
         }
         Ok(stats)
@@ -739,6 +842,189 @@ mod tests {
             assert_eq!(deg.availability, 1.0);
             assert_eq!((deg.faults_injected, deg.faults_effective), (1, 1));
             assert_eq!(rep.tile_busy[victim], 0, "no retained work on dead silicon");
+        }
+
+        #[test]
+        fn open_loop_sojourn_equals_makespan_on_a_plain_session() {
+            let fabric = Fabric::build(
+                FabricConfig::from_toml(
+                    "[noc]\nwidth = 3\nheight = 3\n\
+                     [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+            let g = workloads::mlp(4, 32, &[16], 8, 1).unwrap();
+            let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+            let prog = lower(&g, &fabric, &m).unwrap();
+            let mut sim = CosimExecutor::new(&fabric, prog, 1_000);
+
+            let (tx, rx) = mpsc::channel::<Request>();
+            let mut replies = Vec::new();
+            for i in 0..6 {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request {
+                    sample: vec![i as f32, 0.0],
+                    reply: rtx,
+                    submitted: Instant::now(),
+                })
+                .unwrap();
+                replies.push(rrx);
+            }
+            drop(tx);
+            let server = BatchServer::new(2, 1, 2);
+            let stats = server
+                .run_cosim(
+                    rx,
+                    |input| {
+                        let b = input.dims()[0];
+                        Tensor::new(
+                            vec![b, 1],
+                            (0..b).map(|i| input.data()[i * 2]).collect(),
+                        )
+                    },
+                    &mut sim,
+                )
+                .unwrap();
+            for r in replies {
+                r.recv().unwrap();
+            }
+            // A plain session admits exactly at each arrival, so the
+            // arrival-anchored sojourn series is the makespan series.
+            assert_eq!(stats.sim_sojourn_cycles, stats.sim_cycles);
+            assert!(stats.p999_sim_sojourn_cycles() >= stats.p50_sim_sojourn_cycles());
+            assert!(stats.p999_latency_us() >= stats.p99_latency_us());
+        }
+
+        #[test]
+        fn degraded_sojourn_charges_the_fault_floor_bump_as_queueing() {
+            use crate::compiler::Step;
+            use crate::sim::{FaultConfig, FaultEvent, FaultKind, FaultPlan};
+            let fabric = Fabric::build(
+                FabricConfig::from_toml(
+                    "[noc]\nwidth = 3\nheight = 3\n\
+                     [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+            let g = workloads::mlp(4, 32, &[16], 8, 1).unwrap();
+            let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+            let prog = lower(&g, &fabric, &m).unwrap();
+            let victim = prog
+                .steps
+                .iter()
+                .rev()
+                .find_map(|s| match s {
+                    Step::Exec { tile, .. } => Some(*tile),
+                    _ => None,
+                })
+                .unwrap();
+            let plan = FaultPlan::from_events(vec![FaultEvent {
+                at: 50,
+                kind: FaultKind::TileDeath { tile: victim },
+            }]);
+            let cfg = FaultConfig::default();
+            let session =
+                FaultySession::with_plan(&fabric, plan, &cfg, RecoveryPolicy::Retry).unwrap();
+            // Gap 10 ≪ the death cycle: batch 1's open-loop arrival lands
+            // below the fault floor and gets bumped.
+            let mut sim = DegradedExecutor::with_session(session, prog, 10);
+            let mut rows = Vec::new();
+            let mut arrivals = Vec::new();
+            let mut arrival = 0;
+            for _ in 0..4 {
+                arrivals.push(arrival);
+                rows.push(sim.execute_batch_open_loop().unwrap());
+                arrival = *sim.admissions().last().unwrap() + 10;
+            }
+            // Sojourn = makespan + the bump (admission − arrival): the
+            // delay a request spends waiting out frozen fault history is
+            // queueing it experienced, so it belongs in the percentiles.
+            let mut bumped = 0;
+            for (i, &(makespan, sojourn)) in rows.iter().enumerate() {
+                let bump = sim.admissions()[i] - arrivals[i];
+                assert_eq!(sojourn, Some(makespan + bump), "batch {i}");
+                if bump > 0 {
+                    bumped += 1;
+                }
+            }
+            assert!(bumped > 0, "no batch ever waited out the fault floor");
+        }
+
+        #[test]
+        fn shed_batches_are_excluded_from_sojourn_percentiles() {
+            use crate::compiler::Step;
+            use crate::sim::{FaultConfig, FaultEvent, FaultKind, FaultPlan};
+            let fabric = Fabric::build(
+                FabricConfig::from_toml(
+                    "[noc]\nwidth = 3\nheight = 3\n\
+                     [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+                )
+                .unwrap(),
+            )
+            .unwrap();
+            let g = workloads::mlp(4, 32, &[16], 8, 1).unwrap();
+            let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+            let prog = lower(&g, &fabric, &m).unwrap();
+            let victim = prog
+                .steps
+                .iter()
+                .rev()
+                .find_map(|s| match s {
+                    Step::Exec { tile, .. } => Some(*tile),
+                    _ => None,
+                })
+                .unwrap();
+            let plan = FaultPlan::from_events(vec![FaultEvent {
+                at: 50,
+                kind: FaultKind::TileDeath { tile: victim },
+            }]);
+            let cfg = FaultConfig::default();
+            let session =
+                FaultySession::with_plan(&fabric, plan, &cfg, RecoveryPolicy::Shed).unwrap();
+            let mut sim = DegradedExecutor::with_session(session, prog, 1_000);
+
+            let (tx, rx) = mpsc::channel::<Request>();
+            let mut replies = Vec::new();
+            for i in 0..8 {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request {
+                    sample: vec![i as f32, 0.0],
+                    reply: rtx,
+                    submitted: Instant::now(),
+                })
+                .unwrap();
+                replies.push(rrx);
+            }
+            drop(tx);
+            let server = BatchServer::new(2, 1, 4);
+            let stats = server
+                .run_degraded(
+                    rx,
+                    |input| {
+                        let b = input.dims()[0];
+                        Tensor::new(
+                            vec![b, 1],
+                            (0..b).map(|i| input.data()[i * 2]).collect(),
+                        )
+                    },
+                    &mut sim,
+                )
+                .unwrap();
+            for r in replies {
+                r.recv().unwrap();
+            }
+            // Every batch references the dead tile and the policy sheds:
+            // makespans record zeros (one per batch) while the sojourn
+            // series stays empty — a shed request never completes, and a
+            // zero would deflate the tail exactly when the fabric is at
+            // its worst.
+            let shed = sim.outcomes().iter().filter(|o| o.shed).count();
+            assert_eq!(shed, stats.batches, "shed policy must shed every batch here");
+            assert_eq!(stats.sim_cycles.len(), stats.batches);
+            assert!(stats.sim_sojourn_cycles.is_empty());
+            assert_eq!(stats.p999_sim_sojourn_cycles(), 0.0);
         }
 
         #[test]

@@ -1,0 +1,949 @@
+//! Sharded steady-state serving: N replicated fabric sessions behind a
+//! deterministic request router.
+//!
+//! [`super::serve::BatchServer`] drives exactly one
+//! [`CosimSession`]/[`FaultySession`] on one thread. This module grows
+//! that toward the production shape: a [`ShardedServer`] owns N
+//! *replicated* fabric sessions (each its own session over the shared
+//! `&Fabric`, optionally multi-threaded internally via `[session]
+//! threads` — each shard inherits the fabric default and
+//! [`ShardedServer::set_threads`] overrides it), a load-balancing front
+//! end routes every request to a shard, each shard simulates its slice
+//! of the open-loop stream ([`crate::sim::ArrivalGen`]), and the
+//! per-request results merge back in canonical request order.
+//!
+//! # The serving determinism contract
+//!
+//! Replay invariance is layered on three legs, each independent of OS
+//! scheduling and shard execution order:
+//!
+//! 1. **Hash routing.** Request `seq` goes to shard
+//!    `CounterRng::at3(ROUTE_DOMAIN, seq, 0) % N`: a pure function of
+//!    (router seed, request sequence number), never of worker timing.
+//!    The domain constant separates the router's draw stream from the
+//!    arrival generator's, so shard choice never correlates with gap
+//!    length even under a shared seed.
+//! 2. **Independent shards.** Each shard owns its whole session; no
+//!    state is shared between shards during a serve call, and a shard
+//!    processes its requests in ascending `seq` order. A shard's
+//!    records are therefore a pure function of (its request subset, its
+//!    session history) — identical whether shards run on the
+//!    [`crate::sim::WorkerPool`], sequentially, or sequentially in
+//!    reverse ([`ShardExec`] is the property-test seam).
+//! 3. **Canonical merge.** Records merge by ascending `seq`, and every
+//!    [`ServeReport`] field is integer-valued, so report equality is
+//!    bitwise.
+//!
+//! Consequences, pinned by `tests/serve_golden.rs` and `bench_serve`
+//! (which panics on divergence in CI):
+//!
+//! * **N=1 differential**: a 1-shard server fed the uniform arrival
+//!   trace `0, gap, 2·gap, …` performs the exact admit/drain sequence
+//!   of [`super::serve::CosimExecutor`] — every `ExecReport`,
+//!   `ProgramSpan` and energy bit pattern identical, same cost-model
+//!   `Arc`. Fed a [`super::serve::DegradedExecutor::admissions`] trace,
+//!   a 1-shard degraded server replays `run_degraded` outcome-for-
+//!   outcome (the recorded trace makes every fault-floor bump a no-op).
+//! * **N>1 replay**: same seed/config ⇒ identical merged report and
+//!   identical per-shard `ExecReport`s at any thread count and any
+//!   [`ShardExec`] order.
+//!
+//! # Overload admission control
+//!
+//! A shard's *backlog* at a request's arrival is `busy_until −
+//! arrival`: how far the shard's last completion outruns the open-loop
+//! clock. When a backlog cap is set ([`ShardedServer::set_overload`])
+//! and exceeded, the [`OverloadPolicy`] decides:
+//!
+//! * [`OverloadPolicy::Queue`] — admit anyway (unbounded queueing; the
+//!   default, and the cap only classifies).
+//! * [`OverloadPolicy::Shed`] — drop the request before admission; it
+//!   never touches the session, reports a [`AdmitDecision::Shed`]
+//!   record, and is excluded from the sojourn percentiles (a zero
+//!   would deflate the tail exactly when the fabric is at its worst).
+//! * [`OverloadPolicy::Degrade`] — admit as *background* work through
+//!   the session's existing Deadline queue keys: the server runs its
+//!   sessions under [`AdmitPolicy::Deadline`], normal requests get
+//!   `deadline = arrival + cap` (EDF over those is FIFO, since the
+//!   deadline is monotone in arrival), and overload arrivals get
+//!   `deadline = Cycle::MAX` — they sort after every normal request,
+//!   so later normal arrivals preempt them on the shared queues.
+//!
+//! # Long-run steady state
+//!
+//! [`ShardedServer::set_prune`] prunes each shard at horizon cadence
+//! (`prune_completed_before(arrival − horizon)`, optionally discarding
+//! pruned history) so an unbounded serving run retains state
+//! proportional to the live window, not to every request ever served —
+//! the footprint regression in `tests/serve_golden.rs` holds the probes
+//! bounded over ≥10× the horizon under a bursty diurnal trace.
+
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use super::admit::{
+    AdmitMeta, AdmitPolicy, CosimSession, FaultySession, ProgramHandle, RecoveryPolicy,
+    RequestOutcome,
+};
+use super::exec::{ExecReport, ProgramSpan};
+use super::serve::percentile;
+use crate::compiler::FabricProgram;
+use crate::config::ServeConfig;
+use crate::fabric::{CostModel, Fabric};
+use crate::sim::{
+    ArrivalGen, ArrivalProcess, CounterRng, Cycle, FaultConfig, FaultPlan, WorkerPool,
+};
+use crate::Result;
+
+/// Domain constant separating the router's counter-RNG stream from the
+/// arrival generator's (which draws at plain positions): shard choice
+/// must not correlate with gap length under a shared seed.
+const ROUTE_DOMAIN: u64 = 0x5EBD_17E0_4A7C_3B21;
+
+/// What to do with a request arriving into an over-cap backlog (module
+/// docs, overload section).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Admit anyway — unbounded queueing (default).
+    #[default]
+    Queue,
+    /// Drop before admission.
+    Shed,
+    /// Admit as background work via `deadline = Cycle::MAX`.
+    Degrade,
+}
+
+/// Shard execution order — the replay-invariance property-test seam.
+/// Every variant produces bit-identical reports (module docs, leg 2).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ShardExec {
+    /// Fan shards out on the worker pool (shard 0 inline on the
+    /// caller, like the admission drain).
+    #[default]
+    Parallel,
+    /// Run shards 0..N in order on the calling thread.
+    Sequential,
+    /// Run shards N..0 in reverse on the calling thread.
+    SequentialReversed,
+}
+
+/// Front-end admission decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Admitted normally.
+    Served,
+    /// Admitted as background work under [`OverloadPolicy::Degrade`].
+    Degraded,
+    /// Dropped before admission under [`OverloadPolicy::Shed`].
+    Shed,
+}
+
+/// Per-request serving record, merged in canonical `seq` order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestRecord {
+    /// Global request sequence number (the routing key).
+    pub seq: u64,
+    /// Shard the router assigned.
+    pub shard: usize,
+    /// Open-loop arrival cycle.
+    pub arrival: Cycle,
+    /// Actual admission cycle (arrival, bumped past any fault floor;
+    /// equals `arrival` for shed requests, which are never admitted).
+    pub admitted_at: Cycle,
+    pub decision: AdmitDecision,
+    /// Completion cycle (= `arrival` for overload-shed requests).
+    pub finished_at: Cycle,
+    /// `finished_at − arrival`: simulated queueing + service, anchored
+    /// at the open-loop arrival (0 for overload-shed requests —
+    /// excluded from percentiles, not counted as zero).
+    pub sojourn: Cycle,
+    /// Recovery outcome (fault-injected shards only; `None` on plain
+    /// shards and for overload-shed requests).
+    pub outcome: Option<RequestOutcome>,
+}
+
+impl RequestRecord {
+    /// Did the fabric complete this request? False for overload sheds
+    /// and fault-policy sheds alike.
+    pub fn completed(&self) -> bool {
+        !matches!(self.decision, AdmitDecision::Shed)
+            && !self.outcome.is_some_and(|o| o.shed)
+    }
+}
+
+/// Merged serving telemetry of one [`ShardedServer::serve_trace`] call.
+/// All fields are integer-valued, so `==` is bitwise replay equality.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeReport {
+    /// One record per request, ascending `seq`.
+    pub records: Vec<RequestRecord>,
+    /// Requests admitted normally.
+    pub admitted: usize,
+    /// Requests shed by the overload policy (never admitted).
+    pub shed: usize,
+    /// Requests admitted as background work.
+    pub degraded: usize,
+    /// Requests shed by a shard's fault-recovery policy after admission.
+    pub fault_shed: usize,
+    /// First open-loop arrival of the trace.
+    pub first_arrival: Cycle,
+    /// Last completion over all completed requests.
+    pub last_finish: Cycle,
+}
+
+impl ServeReport {
+    /// Requests the fabric completed (admitted or degraded, minus
+    /// fault-policy sheds).
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.completed()).count()
+    }
+
+    /// Simulated span of the episode: last completion − first arrival.
+    pub fn span_cycles(&self) -> Cycle {
+        self.last_finish.saturating_sub(self.first_arrival)
+    }
+
+    /// Sojourn percentile over *completed* requests, fabric cycles.
+    pub fn sojourn_percentile(&self, q: f64) -> f64 {
+        let v: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.completed())
+            .map(|r| r.sojourn as f64)
+            .collect();
+        percentile(&v, q)
+    }
+
+    pub fn p50_sojourn_cycles(&self) -> f64 {
+        self.sojourn_percentile(0.50)
+    }
+
+    pub fn p99_sojourn_cycles(&self) -> f64 {
+        self.sojourn_percentile(0.99)
+    }
+
+    pub fn p999_sojourn_cycles(&self) -> f64 {
+        self.sojourn_percentile(0.999)
+    }
+}
+
+/// One shard's replicated session: plain or fault-injected.
+enum Engine<'f> {
+    Plain(CosimSession<'f>),
+    Faulty(FaultySession<'f>),
+}
+
+impl<'f> Engine<'f> {
+    fn set_policy(&mut self, p: AdmitPolicy) -> Result<()> {
+        match self {
+            Engine::Plain(s) => s.set_policy(p),
+            Engine::Faulty(s) => s.set_policy(p),
+        }
+    }
+
+    fn set_threads(&mut self, t: usize) {
+        match self {
+            Engine::Plain(s) => s.set_threads(t),
+            Engine::Faulty(s) => s.set_threads(t),
+        }
+    }
+
+    fn admit_with(&mut self, prog: &FabricProgram, at: Cycle, meta: AdmitMeta) -> Result<ProgramHandle> {
+        match self {
+            Engine::Plain(s) => s.admit_with(prog, at, meta),
+            Engine::Faulty(s) => s.admit_with(prog, at, meta),
+        }
+    }
+
+    fn run_to_drain(&mut self) -> Result<()> {
+        match self {
+            Engine::Plain(s) => s.run_to_drain(),
+            Engine::Faulty(s) => s.run_to_drain(),
+        }
+    }
+
+    fn span(&self, h: ProgramHandle) -> ProgramSpan {
+        match self {
+            Engine::Plain(s) => s.span(h),
+            Engine::Faulty(s) => s.span(h),
+        }
+    }
+
+    fn fault_floor(&self) -> Cycle {
+        match self {
+            Engine::Plain(_) => 0,
+            Engine::Faulty(s) => s.fault_floor(),
+        }
+    }
+
+    fn outcome(&self, h: ProgramHandle) -> Option<RequestOutcome> {
+        match self {
+            Engine::Plain(_) => None,
+            Engine::Faulty(s) => Some(s.outcome(h)),
+        }
+    }
+
+    fn report(&mut self) -> Result<ExecReport> {
+        match self {
+            Engine::Plain(s) => s.report(),
+            Engine::Faulty(s) => s.report(),
+        }
+    }
+
+    fn cost_model(&self) -> &Arc<dyn CostModel> {
+        match self {
+            Engine::Plain(s) => s.cost_model(),
+            Engine::Faulty(s) => s.cost_model(),
+        }
+    }
+
+    fn prune_completed_before(&mut self, t: Cycle) -> Result<usize> {
+        match self {
+            Engine::Plain(s) => s.prune_completed_before(t),
+            Engine::Faulty(s) => s.prune_completed_before(t),
+        }
+    }
+
+    fn set_discard_pruned(&mut self, on: bool) {
+        match self {
+            Engine::Plain(s) => s.set_discard_pruned(on),
+            Engine::Faulty(s) => s.set_discard_pruned(on),
+        }
+    }
+
+    fn queue_footprint(&self) -> (usize, usize) {
+        match self {
+            Engine::Plain(s) => s.queue_footprint(),
+            Engine::Faulty(s) => s.queue_footprint(),
+        }
+    }
+
+    fn history_footprint(&self) -> usize {
+        match self {
+            Engine::Plain(s) => s.history_footprint(),
+            Engine::Faulty(s) => s.history_footprint(),
+        }
+    }
+}
+
+struct ShardSlot<'f> {
+    engine: Engine<'f>,
+    /// Last completion cycle of this shard's completed requests — the
+    /// backlog anchor for overload detection.
+    busy_until: Cycle,
+    /// Last pruning cutoff (prune runs at horizon cadence).
+    last_prune: Cycle,
+}
+
+/// Routed request: global sequence number + open-loop arrival.
+#[derive(Debug, Clone, Copy)]
+struct WorkItem {
+    seq: u64,
+    arrival: Cycle,
+}
+
+/// Per-serve-call knobs shared with every shard run.
+#[derive(Clone, Copy)]
+struct RunCfg {
+    overload: OverloadPolicy,
+    cap: Cycle,
+    prune: Cycle,
+}
+
+/// The sharded steady-state serving layer (module docs).
+pub struct ShardedServer<'f> {
+    shards: Vec<ShardSlot<'f>>,
+    rng: CounterRng,
+    overload: OverloadPolicy,
+    cap: Cycle,
+    exec: ShardExec,
+    prune_horizon: Cycle,
+    pool: Option<WorkerPool>,
+    /// Next global request sequence number (the routing key).
+    seq: u64,
+    last_arrival: Cycle,
+}
+
+impl<'f> ShardedServer<'f> {
+    /// `nshards` replicated plain sessions pricing through the fabric's
+    /// configured cost model; router seed 0 (see
+    /// [`ShardedServer::set_seed`]). Each shard inherits the fabric's
+    /// `[session] threads` for its internal calendar drains.
+    pub fn new(fabric: &'f Fabric, nshards: usize) -> Self {
+        Self::build(nshards, |_| Engine::Plain(CosimSession::new(fabric)))
+    }
+
+    /// Replicated plain sessions pricing through an explicit cost model
+    /// — every shard shares the same `Arc` (pinned by the goldens).
+    pub fn with_model(fabric: &'f Fabric, nshards: usize, model: Arc<dyn CostModel>) -> Self {
+        Self::build(nshards, |_| {
+            Engine::Plain(CosimSession::with_model(fabric, model.clone()))
+        })
+    }
+
+    /// Replicated fault-injected sessions: each shard generates its own
+    /// plan from `cfg` — [`FaultPlan::generate`] is deterministic per
+    /// config, so every shard faces the identical fault timeline.
+    pub fn degraded(
+        fabric: &'f Fabric,
+        nshards: usize,
+        cfg: &FaultConfig,
+        policy: RecoveryPolicy,
+    ) -> Result<Self> {
+        let mut engines = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            engines.push(Engine::Faulty(FaultySession::new(fabric, cfg, policy)?));
+        }
+        Ok(Self::from_engines(engines))
+    }
+
+    /// Replicated fault-injected sessions over an explicit plan (each
+    /// shard gets a clone).
+    pub fn degraded_with_plan(
+        fabric: &'f Fabric,
+        nshards: usize,
+        plan: &FaultPlan,
+        cfg: &FaultConfig,
+        policy: RecoveryPolicy,
+    ) -> Result<Self> {
+        let mut engines = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            engines.push(Engine::Faulty(FaultySession::with_plan(
+                fabric,
+                plan.clone(),
+                cfg,
+                policy,
+            )?));
+        }
+        Ok(Self::from_engines(engines))
+    }
+
+    /// Build from the fabric's validated `[serve]` section: shard
+    /// count, router seed, overload policy + backlog cap. (Arrival
+    /// generation is the caller's side of the open loop — pair with
+    /// [`arrival_gen_from_config`].) Always builds plain sessions;
+    /// degraded serving is an explicit choice via
+    /// [`ShardedServer::degraded`].
+    pub fn from_config(fabric: &'f Fabric) -> Result<Self> {
+        let cfg = &fabric.cfg.serve;
+        let mut srv = Self::new(fabric, cfg.shards);
+        srv.set_seed(cfg.seed)?;
+        let overload = match cfg.overload.as_str() {
+            "queue" => OverloadPolicy::Queue,
+            "shed" => OverloadPolicy::Shed,
+            "degrade" => OverloadPolicy::Degrade,
+            other => anyhow::bail!("serve.overload: unknown policy {other:?}"),
+        };
+        srv.set_overload(overload, cfg.queue_cap_cycles)?;
+        Ok(srv)
+    }
+
+    fn build(nshards: usize, mut make: impl FnMut(usize) -> Engine<'f>) -> Self {
+        let engines = (0..nshards).map(&mut make).collect();
+        Self::from_engines(engines)
+    }
+
+    fn from_engines(engines: Vec<Engine<'f>>) -> Self {
+        assert!(!engines.is_empty(), "a sharded server needs at least one shard");
+        ShardedServer {
+            shards: engines
+                .into_iter()
+                .map(|engine| ShardSlot { engine, busy_until: 0, last_prune: 0 })
+                .collect(),
+            rng: CounterRng::new(0),
+            overload: OverloadPolicy::default(),
+            cap: 0,
+            exec: ShardExec::default(),
+            prune_horizon: 0,
+            pool: None,
+            seq: 0,
+            last_arrival: 0,
+        }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Re-seed the request router. Must precede the first request — the
+    /// routing of already-served requests is history.
+    pub fn set_seed(&mut self, seed: u64) -> Result<()> {
+        ensure!(self.seq == 0, "router seed must be set before the first request");
+        self.rng = CounterRng::new(seed);
+        Ok(())
+    }
+
+    /// Select the overload policy and backlog cap (cycles). Must
+    /// precede the first request: [`OverloadPolicy::Degrade`] switches
+    /// every shard session to [`AdmitPolicy::Deadline`], and queue keys
+    /// are baked in at admission. `cap = 0` means unbounded (only legal
+    /// for [`OverloadPolicy::Queue`] — a cap-less shed/degrade policy
+    /// would never trigger).
+    pub fn set_overload(&mut self, policy: OverloadPolicy, cap: Cycle) -> Result<()> {
+        ensure!(self.seq == 0, "overload policy must be set before the first request");
+        if !matches!(policy, OverloadPolicy::Queue) {
+            ensure!(cap > 0, "shed/degrade overload policies need a backlog cap");
+        }
+        let admit = if matches!(policy, OverloadPolicy::Degrade) {
+            AdmitPolicy::Deadline
+        } else {
+            AdmitPolicy::Fifo
+        };
+        for s in &mut self.shards {
+            s.engine.set_policy(admit)?;
+        }
+        self.overload = policy;
+        self.cap = cap;
+        Ok(())
+    }
+
+    /// Shard execution order (replay-invariant; default parallel).
+    pub fn set_shard_exec(&mut self, exec: ShardExec) {
+        self.exec = exec;
+    }
+
+    /// Worker threads for every shard's *internal* calendar drains
+    /// (orthogonal to shard fan-out; bit-identical at any count).
+    pub fn set_threads(&mut self, threads: usize) {
+        for s in &mut self.shards {
+            s.engine.set_threads(threads);
+        }
+    }
+
+    /// Enable steady-state pruning: every shard prunes
+    /// `completed_before(arrival − horizon)` at horizon cadence;
+    /// `discard` additionally drops pruned per-step history
+    /// ([`CosimSession::set_discard_pruned`]). `horizon = 0` disables.
+    pub fn set_prune(&mut self, horizon: Cycle, discard: bool) {
+        self.prune_horizon = horizon;
+        for s in &mut self.shards {
+            s.engine.set_discard_pruned(discard);
+        }
+    }
+
+    /// Shard `s`'s cost model (the same `Arc` across shards for
+    /// [`ShardedServer::with_model`] servers).
+    pub fn shard_cost_model(&self, s: usize) -> &Arc<dyn CostModel> {
+        self.shards[s].engine.cost_model()
+    }
+
+    /// Shard `s`'s merged execution report (errors if that shard
+    /// discarded pruned history).
+    pub fn shard_report(&mut self, s: usize) -> Result<ExecReport> {
+        self.shards[s].engine.report()
+    }
+
+    /// Every shard's merged execution report, shard order.
+    pub fn shard_reports(&mut self) -> Result<Vec<ExecReport>> {
+        (0..self.shards.len()).map(|s| self.shard_report(s)).collect()
+    }
+
+    /// Worst-shard queue footprint `(longest resource queue, id-table
+    /// length)` — the steady-state regression probe.
+    pub fn queue_footprint(&self) -> (usize, usize) {
+        let mut worst = (0, 0);
+        for s in &self.shards {
+            let (q, ids) = s.engine.queue_footprint();
+            worst = (worst.0.max(q), worst.1.max(ids));
+        }
+        worst
+    }
+
+    /// Total retained per-step history across shards.
+    pub fn history_footprint(&self) -> usize {
+        self.shards.iter().map(|s| s.engine.history_footprint()).sum()
+    }
+
+    /// Serve `n` arrivals drawn from the open-loop generator.
+    pub fn serve(
+        &mut self,
+        prog: &FabricProgram,
+        gen: &mut ArrivalGen,
+        n: usize,
+    ) -> Result<ServeReport> {
+        let arrivals = gen.take_trace(n);
+        self.serve_trace(prog, &arrivals)
+    }
+
+    /// Serve an explicit nondecreasing arrival trace (each request one
+    /// instance of `prog`): route, execute every shard's slice, merge
+    /// records in canonical `seq` order. Arrival times are global
+    /// simulated cycles and must not regress across calls.
+    pub fn serve_trace(&mut self, prog: &FabricProgram, arrivals: &[Cycle]) -> Result<ServeReport> {
+        ensure!(
+            arrivals.windows(2).all(|w| w[0] <= w[1]),
+            "open-loop arrivals must be nondecreasing"
+        );
+        if let Some(&first) = arrivals.first() {
+            ensure!(
+                first >= self.last_arrival,
+                "arrival {first} regresses behind already-served cycle {}",
+                self.last_arrival
+            );
+        }
+        let n = self.shards.len();
+        let mut work: Vec<Vec<WorkItem>> = vec![Vec::new(); n];
+        for &arrival in arrivals {
+            let seq = self.seq;
+            self.seq += 1;
+            let shard = (self.rng.at3(ROUTE_DOMAIN, seq, 0) % n as u64) as usize;
+            work[shard].push(WorkItem { seq, arrival });
+            self.last_arrival = arrival;
+        }
+        let cfg = RunCfg { overload: self.overload, cap: self.cap, prune: self.prune_horizon };
+
+        let mut outs: Vec<Option<Result<Vec<RequestRecord>>>> = Vec::with_capacity(n);
+        outs.resize_with(n, || None);
+        match self.exec {
+            ShardExec::Sequential => {
+                for (s, slot) in self.shards.iter_mut().enumerate() {
+                    outs[s] = Some(run_shard(slot, s, prog, &work[s], cfg));
+                }
+            }
+            ShardExec::SequentialReversed => {
+                for (s, slot) in self.shards.iter_mut().enumerate().rev() {
+                    outs[s] = Some(run_shard(slot, s, prog, &work[s], cfg));
+                }
+            }
+            ShardExec::Parallel => {
+                if n == 1 {
+                    outs[0] = Some(run_shard(&mut self.shards[0], 0, prog, &work[0], cfg));
+                } else {
+                    if self.pool.as_ref().map_or(true, |p| p.workers() < n - 1) {
+                        self.pool = Some(WorkerPool::new(n - 1));
+                    }
+                    let pool = self.pool.as_mut().expect("multi-shard serve owns a pool");
+                    let work_ro: &[Vec<WorkItem>] = &work;
+                    let mut slots: &mut [ShardSlot] = &mut self.shards;
+                    let mut outs_rest: &mut [Option<Result<Vec<RequestRecord>>>] = &mut outs;
+                    pool.scoped(|scope| {
+                        let mut own = None;
+                        for s in 0..n {
+                            let (slot, rest) =
+                                std::mem::take(&mut slots).split_first_mut().expect("slot per shard");
+                            slots = rest;
+                            let (out, rest) = std::mem::take(&mut outs_rest)
+                                .split_first_mut()
+                                .expect("out per shard");
+                            outs_rest = rest;
+                            if s == 0 {
+                                // Shard 0 runs on this thread below —
+                                // N shards cost N−1 handoffs.
+                                own = Some((slot, out));
+                            } else {
+                                scope.execute(move || {
+                                    *out = Some(run_shard(slot, s, prog, &work_ro[s], cfg));
+                                });
+                            }
+                        }
+                        let (slot, out) = own.expect("at least one shard");
+                        *out = Some(run_shard(slot, 0, prog, &work_ro[0], cfg));
+                    });
+                }
+            }
+        }
+
+        // Canonical merge: lowest-shard error surfaces first (a pure
+        // function of the routing, not of execution order); records
+        // sort by global sequence number.
+        let mut records = Vec::with_capacity(arrivals.len());
+        for out in outs {
+            records.extend(out.expect("every shard ran")?);
+        }
+        records.sort_unstable_by_key(|r| r.seq);
+
+        let mut report = ServeReport {
+            admitted: 0,
+            shed: 0,
+            degraded: 0,
+            fault_shed: 0,
+            first_arrival: arrivals.first().copied().unwrap_or(0),
+            last_finish: 0,
+            records,
+        };
+        for r in &report.records {
+            match r.decision {
+                AdmitDecision::Served => report.admitted += 1,
+                AdmitDecision::Degraded => report.degraded += 1,
+                AdmitDecision::Shed => report.shed += 1,
+            }
+            if r.outcome.is_some_and(|o| o.shed) {
+                report.fault_shed += 1;
+            }
+            if r.completed() {
+                report.last_finish = report.last_finish.max(r.finished_at);
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// One shard's slice of the trace, in ascending `seq` order: overload
+/// classification against the shard backlog, admission (bumped past any
+/// fault floor), drain to quiescence, and horizon-cadence pruning.
+fn run_shard(
+    slot: &mut ShardSlot<'_>,
+    shard: usize,
+    prog: &FabricProgram,
+    work: &[WorkItem],
+    cfg: RunCfg,
+) -> Result<Vec<RequestRecord>> {
+    let mut out = Vec::with_capacity(work.len());
+    for w in work {
+        let backlog = slot.busy_until.saturating_sub(w.arrival);
+        let overloaded = cfg.cap > 0 && backlog > cfg.cap;
+        if overloaded && matches!(cfg.overload, OverloadPolicy::Shed) {
+            out.push(RequestRecord {
+                seq: w.seq,
+                shard,
+                arrival: w.arrival,
+                admitted_at: w.arrival,
+                decision: AdmitDecision::Shed,
+                finished_at: w.arrival,
+                sojourn: 0,
+                outcome: None,
+            });
+            continue;
+        }
+        let degraded = overloaded && matches!(cfg.overload, OverloadPolicy::Degrade);
+        let meta = if matches!(cfg.overload, OverloadPolicy::Degrade) {
+            // Deadline keys carry the policy: normal requests are EDF ≡
+            // FIFO (deadline monotone in arrival), background requests
+            // sort after every finite deadline.
+            AdmitMeta {
+                priority: 0,
+                deadline: if degraded { Cycle::MAX } else { w.arrival.saturating_add(cfg.cap) },
+            }
+        } else {
+            AdmitMeta::default()
+        };
+        let at = w.arrival.max(slot.engine.fault_floor());
+        let h = slot.engine.admit_with(prog, at, meta)?;
+        slot.engine.run_to_drain()?;
+        let span = slot.engine.span(h);
+        let outcome = slot.engine.outcome(h);
+        let fault_shed = outcome.is_some_and(|o| o.shed);
+        if !fault_shed {
+            slot.busy_until = slot.busy_until.max(span.finished_at);
+        }
+        out.push(RequestRecord {
+            seq: w.seq,
+            shard,
+            arrival: w.arrival,
+            admitted_at: at,
+            decision: if degraded { AdmitDecision::Degraded } else { AdmitDecision::Served },
+            finished_at: span.finished_at,
+            sojourn: span.finished_at.saturating_sub(w.arrival),
+            outcome,
+        });
+        if cfg.prune > 0 {
+            let cutoff = w.arrival.saturating_sub(cfg.prune);
+            if cutoff > slot.last_prune.saturating_add(cfg.prune) {
+                slot.engine.prune_completed_before(cutoff)?;
+                slot.last_prune = cutoff;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Build the open-loop arrival generator a validated `[serve]` section
+/// describes (the caller's half of [`ShardedServer::from_config`]).
+pub fn arrival_gen_from_config(cfg: &ServeConfig) -> Result<ArrivalGen> {
+    let process = match cfg.arrival.as_str() {
+        "uniform" => ArrivalProcess::Uniform { gap: cfg.mean_gap_cycles },
+        "poisson" => ArrivalProcess::Poisson { mean_gap: cfg.mean_gap_cycles },
+        "trace" => ArrivalProcess::Trace { gaps: cfg.trace_gaps.clone() },
+        other => anyhow::bail!("serve.arrival: unknown process {other:?}"),
+    };
+    let mut gen = ArrivalGen::new(process, cfg.seed);
+    if cfg.diurnal_period_cycles > 0 {
+        gen = gen.with_diurnal(cfg.diurnal_period_cycles, cfg.diurnal_amplitude);
+    }
+    Ok(gen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Precision;
+    use crate::compiler::lowering::lower;
+    use crate::compiler::mapper::{map_graph, MapStrategy};
+    use crate::config::FabricConfig;
+    use crate::coordinator::serve::CosimExecutor;
+    use crate::testutil::prop;
+    use crate::workloads;
+
+    fn fabric() -> Fabric {
+        Fabric::build(
+            FabricConfig::from_toml(
+                "[noc]\nwidth = 3\nheight = 3\n\
+                 [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n",
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn program(fabric: &Fabric) -> FabricProgram {
+        let g = workloads::mlp(4, 32, &[16], 8, 1).unwrap();
+        let m = map_graph(&g, fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+        lower(&g, fabric, &m).unwrap()
+    }
+
+    #[test]
+    fn router_is_reasonably_balanced() {
+        let rng = CounterRng::new(7);
+        for n in [2usize, 4, 8] {
+            let mut counts = vec![0usize; n];
+            let total = 4_000u64;
+            for seq in 0..total {
+                counts[(rng.at3(ROUTE_DOMAIN, seq, 0) % n as u64) as usize] += 1;
+            }
+            let expect = total as usize / n;
+            for (s, &c) in counts.iter().enumerate() {
+                assert!(
+                    c > expect / 2 && c < expect * 2,
+                    "shard {s}/{n} got {c} of {total} (expected ~{expect})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn router_replays_and_decorrelates_from_arrivals() {
+        prop::check(32, |rng| {
+            let seed = rng.next_u64();
+            let n = 2 + (rng.next_u64() % 7) as usize;
+            let a = CounterRng::new(seed);
+            let b = CounterRng::new(seed);
+            for seq in 0..256u64 {
+                prop_assert!(
+                    a.at3(ROUTE_DOMAIN, seq, 0) % n as u64
+                        == b.at3(ROUTE_DOMAIN, seq, 0) % n as u64,
+                    "router must replay"
+                );
+            }
+            // Domain separation: the router draw differs from the plain
+            // positional draw the arrival generator consumes.
+            let mut distinct = false;
+            for seq in 0..64u64 {
+                if a.at3(ROUTE_DOMAIN, seq, 0) != a.at(seq) {
+                    distinct = true;
+                    break;
+                }
+            }
+            prop_assert!(distinct, "router stream must not alias the arrival stream");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn one_shard_uniform_trace_matches_the_closed_loop_executor() {
+        let fab = fabric();
+        let prog = program(&fab);
+        let gap = 1_000;
+        let k = 6;
+        let mut srv = ShardedServer::new(&fab, 1);
+        let arrivals: Vec<Cycle> = (0..k).map(|i| i as Cycle * gap).collect();
+        let rep = srv.serve_trace(&prog, &arrivals).unwrap();
+        let mut exec = CosimExecutor::new(&fab, prog, gap);
+        for (i, r) in rep.records.iter().enumerate() {
+            let (makespan, sojourn) = exec.execute_batch_open_loop().unwrap();
+            assert_eq!(r.sojourn, sojourn.unwrap(), "request {i}");
+            assert_eq!(r.finished_at - r.admitted_at, makespan, "request {i}");
+        }
+        assert_eq!(rep.admitted, k);
+        assert_eq!((rep.shed, rep.degraded, rep.fault_shed), (0, 0, 0));
+    }
+
+    #[test]
+    fn overload_shed_drops_and_excludes_from_percentiles() {
+        let fab = fabric();
+        let prog = program(&fab);
+        let mut srv = ShardedServer::new(&fab, 1);
+        // Measure one service time, then pick a cap smaller than it so
+        // a back-to-back burst overloads immediately.
+        let probe = srv.serve_trace(&prog, &[0]).unwrap();
+        let service = probe.records[0].sojourn;
+        assert!(service > 0);
+        let cap = service / 2;
+        let mut srv = ShardedServer::new(&fab, 1);
+        srv.set_overload(OverloadPolicy::Shed, cap).unwrap();
+        // A same-instant burst: request 0 is served; by the time the
+        // burst tail arrives (still cycle 0) the backlog exceeds the
+        // cap, so late burst requests shed. A request arriving after
+        // the backlog clears is served again — the edge case where a
+        // request arrives *during* shedding and one arrives after.
+        let burst = vec![0, 0, 0, 0];
+        let rep = srv.serve_trace(&prog, &burst).unwrap();
+        assert_eq!(rep.records[0].decision, AdmitDecision::Served);
+        let shed: Vec<u64> = rep
+            .records
+            .iter()
+            .filter(|r| r.decision == AdmitDecision::Shed)
+            .map(|r| r.seq)
+            .collect();
+        assert!(!shed.is_empty(), "burst never overloaded (cap {cap})");
+        // Shed requests: zero sojourn recorded, excluded from stats.
+        for r in rep.records.iter().filter(|r| r.decision == AdmitDecision::Shed) {
+            assert_eq!((r.sojourn, r.finished_at), (0, r.arrival));
+            assert!(r.outcome.is_none());
+        }
+        let served = rep.records.iter().filter(|r| r.completed()).count();
+        assert_eq!(served + rep.shed, 4);
+        assert!(rep.p50_sojourn_cycles() > 0.0, "sheds must not drag the p50 to zero");
+        // The fabric drains; a much later arrival is served normally.
+        let clear = srv.serve_trace(&prog, &[rep.last_finish + cap + 1]).unwrap();
+        assert_eq!(clear.records[0].decision, AdmitDecision::Served);
+        assert_eq!(clear.shed, 0);
+    }
+
+    #[test]
+    fn overload_degrade_backgrounds_the_burst_tail() {
+        let fab = fabric();
+        let prog = program(&fab);
+        let mut probe = ShardedServer::new(&fab, 1);
+        let service = probe.serve_trace(&prog, &[0]).unwrap().records[0].sojourn;
+        let cap = service / 2;
+        let mut srv = ShardedServer::new(&fab, 1);
+        srv.set_overload(OverloadPolicy::Degrade, cap).unwrap();
+        let rep = srv.serve_trace(&prog, &[0, 0, 0, 0]).unwrap();
+        assert!(rep.degraded > 0, "burst never overloaded (cap {cap})");
+        assert_eq!(rep.shed, 0, "degrade admits instead of dropping");
+        assert_eq!(rep.completed(), 4, "background work still completes");
+        // Background requests finish no earlier than normal ones: their
+        // MAX deadline sorts them after every normal queue key.
+        let max_norm = rep
+            .records
+            .iter()
+            .filter(|r| r.decision == AdmitDecision::Served)
+            .map(|r| r.finished_at)
+            .max()
+            .unwrap();
+        for r in rep.records.iter().filter(|r| r.decision == AdmitDecision::Degraded) {
+            assert!(r.finished_at >= max_norm, "background {} outran normal {max_norm}", r.finished_at);
+        }
+    }
+
+    #[test]
+    fn knobs_are_frozen_after_the_first_request() {
+        let fab = fabric();
+        let prog = program(&fab);
+        let mut srv = ShardedServer::new(&fab, 2);
+        srv.serve_trace(&prog, &[0]).unwrap();
+        assert!(srv.set_seed(1).is_err());
+        assert!(srv.set_overload(OverloadPolicy::Shed, 10).is_err());
+        assert!(srv.serve_trace(&prog, &[5, 3]).is_err(), "regressing trace");
+    }
+
+    #[test]
+    fn capless_shed_is_rejected() {
+        let fab = fabric();
+        let mut srv = ShardedServer::new(&fab, 1);
+        assert!(srv.set_overload(OverloadPolicy::Shed, 0).is_err());
+        assert!(srv.set_overload(OverloadPolicy::Degrade, 0).is_err());
+        assert!(srv.set_overload(OverloadPolicy::Queue, 0).is_ok());
+    }
+}

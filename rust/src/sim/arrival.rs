@@ -1,0 +1,248 @@
+//! Open-loop arrival processes for steady-state serving.
+//!
+//! The serving layer (`coordinator::shard`) replaces fixed closed-loop
+//! batches with *open-loop* request streams: arrival times are exogenous
+//! — they do not wait on the fabric — so queueing delay under overload
+//! is visible instead of being absorbed by the driver's pacing. This
+//! module generates those streams deterministically.
+//!
+//! # Determinism contract
+//!
+//! Every draw is position-keyed through [`CounterRng`]: arrival `i`'s
+//! inter-arrival gap is a pure function of `(seed, i, current time)`,
+//! never of sampling order or thread interleaving. Two generators built
+//! from the same `(process, seed, diurnal)` configuration emit the same
+//! trace cycle-for-cycle, which is the first leg of the serving replay
+//! guarantee (the other two — hash routing and canonical merge order —
+//! live in `coordinator::shard`).
+//!
+//! Three processes:
+//!
+//! * [`ArrivalProcess::Uniform`] — fixed gaps. With no diurnal
+//!   modulation this reproduces the closed-loop pacing of
+//!   [`crate::coordinator::CosimExecutor`] exactly (arrivals at `0, g,
+//!   2g, …`), which is what pins the 1-shard server bit-identical to
+//!   `BatchServer::run_cosim` in `tests/serve_golden.rs`.
+//! * [`ArrivalProcess::Poisson`] — exponential inter-arrival gaps via
+//!   inverse-CDF sampling of position-keyed uniforms (memoryless open
+//!   loop; mean gap = `mean_gap`).
+//! * [`ArrivalProcess::Trace`] — a recorded base gap sequence replayed
+//!   cyclically (trace-driven load).
+//!
+//! Any process composes with *diurnal burst modulation*: a sinusoidal
+//! rate multiplier `m(t) = 1 + A·sin(2πt/P)` divides the raw gap, so the
+//! peak of each period packs arrivals `1+A` times denser (bursts) and
+//! the trough stretches them out (lulls). `A` must lie in `[0, 1)` so
+//! the rate never reaches zero; `[serve]` validation enforces the same
+//! range on `serve.diurnal_amplitude`.
+
+use super::rng::CounterRng;
+use super::Cycle;
+
+/// The inter-arrival law of an open-loop request stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Fixed `gap` cycles between arrivals (closed-loop-compatible).
+    Uniform { gap: Cycle },
+    /// Exponential gaps with the given mean (Poisson arrivals).
+    Poisson { mean_gap: Cycle },
+    /// Recorded base gaps, replayed cyclically.
+    Trace { gaps: Vec<Cycle> },
+}
+
+/// Deterministic open-loop arrival generator: an infinite iterator of
+/// nondecreasing arrival cycles, starting at 0. See the module docs for
+/// the determinism contract.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: CounterRng,
+    /// Diurnal modulation period in cycles (0 = off).
+    period: Cycle,
+    /// Diurnal amplitude in `[0, 1)`.
+    amplitude: f64,
+    next_at: Cycle,
+    idx: u64,
+}
+
+impl ArrivalGen {
+    /// A generator for `process`, drawing position-keyed randomness from
+    /// `seed` (only [`ArrivalProcess::Poisson`] consumes draws; the
+    /// others are seed-independent).
+    pub fn new(process: ArrivalProcess, seed: u64) -> Self {
+        if let ArrivalProcess::Trace { gaps } = &process {
+            assert!(!gaps.is_empty(), "a trace arrival process needs at least one gap");
+        }
+        ArrivalGen { process, rng: CounterRng::new(seed), period: 0, amplitude: 0.0, next_at: 0, idx: 0 }
+    }
+
+    /// Add diurnal burst modulation: rate multiplier
+    /// `1 + amplitude·sin(2πt/period)`. `period = 0` disables it;
+    /// `amplitude` must lie in `[0, 1)`.
+    pub fn with_diurnal(mut self, period: Cycle, amplitude: f64) -> Self {
+        assert!(
+            amplitude.is_finite() && (0.0..1.0).contains(&amplitude),
+            "diurnal amplitude must lie in [0, 1), got {amplitude}"
+        );
+        self.period = period;
+        self.amplitude = amplitude;
+        self.next_at = 0;
+        self.idx = 0;
+        self
+    }
+
+    /// Arrival index of the next emitted arrival (the position key of
+    /// its gap draw) — also the count emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.idx
+    }
+
+    /// Collect the next `n` arrival cycles.
+    pub fn take_trace(&mut self, n: usize) -> Vec<Cycle> {
+        (0..n).map(|_| self.next_arrival()).collect()
+    }
+
+    /// Emit the next arrival cycle and advance.
+    pub fn next_arrival(&mut self) -> Cycle {
+        let t = self.next_at;
+        let raw = match &self.process {
+            ArrivalProcess::Uniform { gap } => *gap as f64,
+            ArrivalProcess::Poisson { mean_gap } => {
+                // Inverse-CDF exponential: u ∈ [0, 1) so 1-u ∈ (0, 1]
+                // and the log is finite. Keyed by arrival index — the
+                // draw replays identically from any resume point.
+                let u = self.rng.uniform_at(self.idx);
+                -(1.0 - u).ln() * *mean_gap as f64
+            }
+            ArrivalProcess::Trace { gaps } => gaps[self.idx as usize % gaps.len()] as f64,
+        };
+        // Diurnal rate multiplier at the current time: bursts (m > 1)
+        // compress gaps, lulls (m < 1) stretch them. amplitude < 1
+        // keeps m > 0.
+        let m = if self.period > 0 {
+            let phase = (t % self.period) as f64 / self.period as f64;
+            1.0 + self.amplitude * (std::f64::consts::TAU * phase).sin()
+        } else {
+            1.0
+        };
+        let gap = (raw / m).round().max(0.0) as Cycle;
+        self.idx += 1;
+        self.next_at = t + gap;
+        t
+    }
+}
+
+impl Iterator for ArrivalGen {
+    type Item = Cycle;
+
+    fn next(&mut self) -> Option<Cycle> {
+        Some(self.next_arrival())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_and_config_replays_the_exact_trace() {
+        for process in [
+            ArrivalProcess::Uniform { gap: 700 },
+            ArrivalProcess::Poisson { mean_gap: 900 },
+            ArrivalProcess::Trace { gaps: vec![100, 50, 800, 5] },
+        ] {
+            let mut a = ArrivalGen::new(process.clone(), 42).with_diurnal(10_000, 0.6);
+            let mut b = ArrivalGen::new(process, 42).with_diurnal(10_000, 0.6);
+            assert_eq!(a.take_trace(500), b.take_trace(500));
+        }
+    }
+
+    #[test]
+    fn different_seeds_decorrelate_poisson_traces() {
+        let mut a = ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 500 }, 1);
+        let mut b = ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 500 }, 2);
+        assert_ne!(a.take_trace(64), b.take_trace(64));
+    }
+
+    #[test]
+    fn uniform_without_diurnal_is_exact_closed_loop_pacing() {
+        let mut g = ArrivalGen::new(ArrivalProcess::Uniform { gap: 1_000 }, 7);
+        let trace = g.take_trace(32);
+        for (i, &t) in trace.iter().enumerate() {
+            assert_eq!(t, i as Cycle * 1_000);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_from_zero() {
+        let mut g =
+            ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 300 }, 9).with_diurnal(5_000, 0.9);
+        let trace = g.take_trace(2_000);
+        assert_eq!(trace[0], 0);
+        assert!(trace.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn poisson_moments_are_sane() {
+        // Exponential gaps: mean ≈ mean_gap, coefficient of variation
+        // ≈ 1 (the memoryless signature a Uniform process fails).
+        let mean_gap = 1_000.0;
+        let mut g = ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 1_000 }, 1234);
+        let trace = g.take_trace(20_001);
+        let gaps: Vec<f64> =
+            trace.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+        let n = gaps.len() as f64;
+        let mean = gaps.iter().sum::<f64>() / n;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / n;
+        let cv = var.sqrt() / mean;
+        assert!((mean - mean_gap).abs() < 0.05 * mean_gap, "mean {mean}");
+        assert!((cv - 1.0).abs() < 0.05, "cv {cv}");
+    }
+
+    #[test]
+    fn diurnal_modulation_bursts_and_lulls() {
+        // With a pure Uniform base, gaps near the sine peak must be
+        // shorter than gaps near the trough — and both differ from the
+        // unmodulated gap.
+        let period = 100_000;
+        let mut g = ArrivalGen::new(ArrivalProcess::Uniform { gap: 1_000 }, 0)
+            .with_diurnal(period, 0.8);
+        let trace = g.take_trace(1_000);
+        let gap_at = |t: Cycle| -> bool {
+            let phase = (t % period) as f64 / period as f64;
+            (0.15..0.35).contains(&phase) // around the sine peak
+        };
+        let mut burst = Vec::new();
+        let mut lull = Vec::new();
+        for w in trace.windows(2) {
+            let phase = (w[0] % period) as f64 / period as f64;
+            if gap_at(w[0]) {
+                burst.push(w[1] - w[0]);
+            } else if (0.65..0.85).contains(&phase) {
+                lull.push(w[1] - w[0]);
+            }
+        }
+        assert!(!burst.is_empty() && !lull.is_empty());
+        let bmax = burst.iter().max().unwrap();
+        let lmin = lull.iter().min().unwrap();
+        assert!(bmax < lmin, "burst gaps {bmax} must undercut lull gaps {lmin}");
+    }
+
+    #[test]
+    fn trace_process_cycles_through_base_gaps() {
+        let mut g = ArrivalGen::new(ArrivalProcess::Trace { gaps: vec![10, 20, 30] }, 0);
+        assert_eq!(g.take_trace(7), vec![0, 10, 30, 60, 70, 90, 120]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one gap")]
+    fn empty_trace_is_rejected() {
+        let _ = ArrivalGen::new(ArrivalProcess::Trace { gaps: vec![] }, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "amplitude must lie in [0, 1)")]
+    fn saturating_amplitude_is_rejected() {
+        let _ = ArrivalGen::new(ArrivalProcess::Uniform { gap: 10 }, 0).with_diurnal(100, 1.0);
+    }
+}

@@ -30,7 +30,13 @@
 //!   `DegradedCost` pricing wrapper.
 //! * [`WorkerPool`] — persistent scoped worker pool (std-only) behind the
 //!   NoC's shard-parallel stepping.
+//! * [`ArrivalGen`] ([`arrival`]) — deterministic open-loop arrival
+//!   processes (uniform / Poisson / trace-driven, with diurnal burst
+//!   modulation) feeding the sharded serving layer
+//!   (`coordinator::shard`); position-keyed via [`CounterRng`], so
+//!   arrival traces replay bit-identically.
 
+pub mod arrival;
 mod calendar;
 mod event;
 mod event_wheel;
@@ -39,6 +45,7 @@ mod pool;
 mod rng;
 mod stats;
 
+pub use arrival::{ArrivalGen, ArrivalProcess};
 pub use calendar::{Calendar, StampedCalendar};
 pub use event::EventQueue;
 pub use event_wheel::EventWheel;

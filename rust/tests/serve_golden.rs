@@ -1,0 +1,382 @@
+//! Differential golden tests for the sharded steady-state serving layer
+//! (`coordinator::shard`), pinning the serving determinism contract:
+//!
+//! * a 1-shard [`ShardedServer`] fed the uniform arrival trace is
+//!   bit-identical to the closed-loop [`CosimExecutor`] /
+//!   [`BatchServer::run_cosim`] path — every `ExecReport`, every
+//!   `ProgramSpan`, the energy bits, and the cost-model `Arc` identity;
+//! * a 1-shard degraded server fed a [`DegradedExecutor::admissions`]
+//!   trace replays `run_degraded` outcome-for-outcome;
+//! * N ∈ {2, 4, 8} shard runs are replay-invariant: same seed/config ⇒
+//!   identical merged [`ServeReport`] and identical per-shard
+//!   `ExecReport`s across shard execution order and thread count;
+//! * long-run serving under pruning holds its memory footprint bounded
+//!   over ≥ 10× the pruning horizon (the steady-state regression).
+
+use std::sync::Arc;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, MapStrategy};
+use archytas::compiler::{FabricProgram, Step};
+use archytas::coordinator::{
+    BatchServer, CosimExecutor, DegradedExecutor, ExecReport, FaultySession, RecoveryPolicy,
+    ServeRequest, ShardExec, ShardedServer,
+};
+use archytas::fabric::{CongestionKnobs, CostModel, Fabric, VaryingCost};
+use archytas::prop_assert;
+use archytas::runtime::Tensor;
+use archytas::sim::{
+    ArrivalGen, ArrivalProcess, Cycle, FaultConfig, FaultEvent, FaultKind, FaultPlan,
+};
+use archytas::testutil::{bundled_fabric, prop};
+use archytas::workloads;
+
+const CONFIGS: [&str; 2] = ["edge16.toml", "homogeneous_npu.toml"];
+
+fn lowered(fabric: &Fabric, strategy: MapStrategy) -> FabricProgram {
+    let g = workloads::mlp(4, 64, &[32], 10, 7).unwrap();
+    let m = map_graph(&g, fabric, strategy, Precision::Int8).unwrap();
+    lower(&g, fabric, &m).unwrap()
+}
+
+fn assert_reports_identical(a: &ExecReport, b: &ExecReport, tag: &str) {
+    assert_eq!(a.cycles, b.cycles, "{tag}: makespan");
+    assert_eq!(a.step_done, b.step_done, "{tag}: step_done");
+    assert_eq!(a.tile_busy, b.tile_busy, "{tag}: tile_busy");
+    assert_eq!(a.transfer_cycles, b.transfer_cycles, "{tag}: transfer_cycles");
+    assert_eq!(a.exec_steps, b.exec_steps, "{tag}: exec_steps");
+    assert_eq!(
+        a.metrics.total_energy_pj().to_bits(),
+        b.metrics.total_energy_pj().to_bits(),
+        "{tag}: energy bits"
+    );
+    assert!(a.bit_identical(b), "{tag}: bit_identical contract");
+}
+
+/// N=1 differential, half 1: a 1-shard server on the uniform trace
+/// `0, gap, 2·gap, …` performs the exact admit/drain sequence of the
+/// closed-loop [`CosimExecutor`] — per-request sojourns and makespans,
+/// and the final session report, bit for bit — on both bundled configs.
+#[test]
+fn one_shard_uniform_trace_is_bit_identical_to_cosim_executor() {
+    for cfg in CONFIGS {
+        let fabric = bundled_fabric(cfg);
+        let prog = lowered(&fabric, MapStrategy::Greedy);
+        let gap: Cycle = 1_000;
+        let k = 8;
+
+        let mut srv = ShardedServer::new(&fabric, 1);
+        let arrivals: Vec<Cycle> = (0..k).map(|i| i as Cycle * gap).collect();
+        let rep = srv.serve_trace(&prog, &arrivals).unwrap();
+
+        let mut exec = CosimExecutor::new(&fabric, prog, gap);
+        for (i, r) in rep.records.iter().enumerate() {
+            let (makespan, sojourn) = exec.execute_batch_open_loop().unwrap();
+            assert_eq!(r.sojourn, sojourn.unwrap(), "{cfg}: request {i} sojourn");
+            assert_eq!(r.finished_at - r.admitted_at, makespan, "{cfg}: request {i} makespan");
+            assert_eq!(r.admitted_at, r.arrival, "{cfg}: plain shard admits at arrival");
+        }
+        assert_eq!(rep.admitted, k);
+        assert_eq!((rep.shed, rep.degraded, rep.fault_shed), (0, 0, 0));
+        let got = srv.shard_report(0).unwrap();
+        let want = exec.session_mut().report().unwrap();
+        assert_reports_identical(&got, &want, &format!("{cfg}/one-shard-uniform"));
+    }
+}
+
+/// N=1 differential, half 2: the full [`BatchServer::run_cosim`] serving
+/// loop (one request per batch, so one admission per formed batch) and
+/// the 1-shard server report the same simulated series — and with an
+/// explicit cost model, both stacks hold the same `Arc` (pinned
+/// identity, not just equal pricing).
+#[test]
+fn one_shard_matches_batch_server_run_cosim_and_shares_the_model_arc() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, MapStrategy::Greedy);
+    let gap: Cycle = 1_000;
+    let k = 6;
+    let model: Arc<dyn CostModel> =
+        Arc::new(VaryingCost::congestion(512, CongestionKnobs { alpha: 0.5, cap: 4.0 }));
+
+    let mut srv = ShardedServer::with_model(&fabric, 1, model.clone());
+    assert!(
+        Arc::ptr_eq(srv.shard_cost_model(0), &model),
+        "the shard must hold the caller's model Arc, not a rebuild"
+    );
+    let arrivals: Vec<Cycle> = (0..k).map(|i| i as Cycle * gap).collect();
+    let rep = srv.serve_trace(&prog, &arrivals).unwrap();
+
+    let mut exec = CosimExecutor::with_model(&fabric, prog, gap, model.clone());
+    assert!(Arc::ptr_eq(exec.cost_model(), &model));
+    let (tx, rx) = mpsc::channel::<ServeRequest>();
+    let mut replies = Vec::new();
+    for i in 0..k {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(ServeRequest {
+            sample: vec![i as f32, 0.0],
+            reply: rtx,
+            submitted: Instant::now(),
+        })
+        .unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    // max_batch = 1: every request forms its own batch, so the server
+    // admits exactly one program per request — the sharded trace shape.
+    let server = BatchServer::new(2, 1, 1);
+    let stats = server
+        .run_cosim(
+            rx,
+            |input| {
+                let b = input.dims()[0];
+                Tensor::new(vec![b, 1], (0..b).map(|i| input.data()[i * 2]).collect())
+            },
+            &mut exec,
+        )
+        .unwrap();
+    for r in replies {
+        r.recv().unwrap();
+    }
+    assert_eq!(stats.batches, k);
+    let sojourns: Vec<Cycle> = rep.records.iter().map(|r| r.sojourn).collect();
+    assert_eq!(sojourns, stats.sim_sojourn_cycles, "sojourn series");
+    let makespans: Vec<Cycle> =
+        rep.records.iter().map(|r| r.finished_at - r.admitted_at).collect();
+    assert_eq!(makespans, stats.sim_cycles, "makespan series");
+    let got = srv.shard_report(0).unwrap();
+    let want = exec.session_mut().report().unwrap();
+    assert_reports_identical(&got, &want, "one-shard vs run_cosim");
+}
+
+/// N=1 degraded differential: feeding a 1-shard degraded server the
+/// *recorded admission trace* of a closed-loop [`DegradedExecutor`]
+/// episode (which makes every fault-floor bump a no-op) replays it
+/// outcome-for-outcome, span-for-span, report-for-report.
+#[test]
+fn one_shard_degraded_replays_run_degraded_from_the_admission_trace() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, MapStrategy::Greedy);
+    // Kill the tile running the program's final layer mid-episode, with
+    // a gap far below the death cycle so fault-floor bumps actually
+    // happen in the closed-loop run.
+    let victim = prog
+        .steps
+        .iter()
+        .rev()
+        .find_map(|s| match s {
+            Step::Exec { tile, .. } => Some(*tile),
+            _ => None,
+        })
+        .unwrap();
+    let plan = FaultPlan::from_events(vec![FaultEvent {
+        at: 50,
+        kind: FaultKind::TileDeath { tile: victim },
+    }]);
+    let cfg = FaultConfig::default();
+    let session =
+        FaultySession::with_plan(&fabric, plan.clone(), &cfg, RecoveryPolicy::Retry).unwrap();
+    let mut exec = DegradedExecutor::with_session(session, prog.clone(), 10);
+    let mut rows = Vec::new();
+    for _ in 0..6 {
+        rows.push(exec.execute_batch_open_loop().unwrap());
+    }
+    let admissions = exec.admissions().to_vec();
+    assert!(
+        admissions.windows(2).all(|w| w[0] <= w[1]),
+        "recorded admissions must be a valid arrival trace"
+    );
+
+    let mut srv =
+        ShardedServer::degraded_with_plan(&fabric, 1, &plan, &cfg, RecoveryPolicy::Retry).unwrap();
+    let rep = srv.serve_trace(&prog, &admissions).unwrap();
+    let outcomes = exec.outcomes();
+    for (i, r) in rep.records.iter().enumerate() {
+        assert_eq!(r.arrival, admissions[i], "request {i} arrival");
+        assert_eq!(r.admitted_at, admissions[i], "request {i}: bump must be a no-op");
+        assert_eq!(r.finished_at - r.admitted_at, rows[i].0, "request {i} makespan");
+        assert_eq!(r.outcome, Some(outcomes[i]), "request {i} recovery outcome");
+    }
+    assert_eq!(rep.fault_shed, 0, "retry policy never sheds here");
+    let got = srv.shard_report(0).unwrap();
+    let want = exec.session_mut().report().unwrap();
+    assert_reports_identical(&got, &want, "one-shard degraded vs run_degraded");
+}
+
+/// One serving episode at the given shard execution order / thread
+/// count, from identical seed and arrivals.
+fn episode(
+    fabric: &Fabric,
+    prog: &FabricProgram,
+    nshards: usize,
+    arrivals: &[Cycle],
+    exec: ShardExec,
+    threads: usize,
+) -> (archytas::coordinator::ServeReport, Vec<ExecReport>) {
+    let mut srv = ShardedServer::new(fabric, nshards);
+    srv.set_seed(5).unwrap();
+    srv.set_shard_exec(exec);
+    srv.set_threads(threads);
+    let rep = srv.serve_trace(prog, arrivals).unwrap();
+    let shards = srv.shard_reports().unwrap();
+    (rep, shards)
+}
+
+/// The tentpole golden: N ∈ {2, 4, 8} shard runs from the same seed and
+/// arrival trace are replay-invariant — identical merged report (all
+/// integer fields, so `==` is bitwise) and bit-identical per-shard
+/// `ExecReport`s — whether shards run sequentially, in reverse, or on
+/// the worker pool, at 1 or 2 internal session threads.
+#[test]
+fn multi_shard_replay_is_invariant_across_exec_order_and_threads() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, MapStrategy::Greedy);
+    let mut gen = ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 900 }, 42)
+        .with_diurnal(50_000, 0.6);
+    let arrivals = gen.take_trace(24);
+    for nshards in [2usize, 4, 8] {
+        let (want, want_shards) =
+            episode(&fabric, &prog, nshards, &arrivals, ShardExec::Sequential, 1);
+        assert_eq!(want.records.len(), 24);
+        assert_eq!(want.admitted, 24);
+        for (exec, threads) in [
+            (ShardExec::Sequential, 1), // run-twice determinism
+            (ShardExec::SequentialReversed, 1),
+            (ShardExec::Parallel, 1),
+            (ShardExec::Parallel, 2),
+        ] {
+            let tag = format!("shards={nshards}/{exec:?}/threads={threads}");
+            let (got, got_shards) = episode(&fabric, &prog, nshards, &arrivals, exec, threads);
+            assert_eq!(got, want, "{tag}: merged ServeReport");
+            assert_eq!(got_shards.len(), want_shards.len());
+            for (s, (a, b)) in got_shards.iter().zip(&want_shards).enumerate() {
+                assert_reports_identical(a, b, &format!("{tag}: shard {s}"));
+            }
+        }
+    }
+}
+
+/// Property: any (seed, shard count) pair replays — parallel execution
+/// reproduces the sequential merged report exactly, and every request
+/// routes inside the shard range.
+#[test]
+fn prop_random_seeds_replay_across_parallel_execution() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, MapStrategy::Greedy);
+    prop::check(6, |rng| {
+        let seed = rng.next_u64();
+        let nshards = 2 + rng.below(7);
+        let mut gen = ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 1_100 }, seed);
+        let arrivals = gen.take_trace(10);
+        let mut run = |exec: ShardExec| {
+            let mut srv = ShardedServer::new(&fabric, nshards);
+            srv.set_seed(seed).unwrap();
+            srv.set_shard_exec(exec);
+            srv.serve_trace(&prog, &arrivals)
+        };
+        let seq = run(ShardExec::Sequential).map_err(|e| e.to_string())?;
+        let par = run(ShardExec::Parallel).map_err(|e| e.to_string())?;
+        prop_assert!(seq == par, "seed {seed} x {nshards} shards diverged");
+        prop_assert!(
+            seq.records.iter().all(|r| r.shard < nshards),
+            "routing escaped the shard range"
+        );
+        Ok(())
+    });
+}
+
+/// The `[serve]` config path builds the same server the explicit API
+/// does: `from_config` + `arrival_gen_from_config` serve the same report
+/// as a hand-assembled twin.
+#[test]
+fn from_config_matches_the_hand_built_server() {
+    use archytas::config::FabricConfig;
+    use archytas::coordinator::{arrival_gen_from_config, OverloadPolicy};
+    let fabric = Fabric::build(
+        FabricConfig::from_toml(
+            "[noc]\nwidth = 3\nheight = 3\n\
+             [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n\
+             [serve]\nshards = 2\nseed = 11\narrival = \"poisson\"\n\
+             mean_gap_cycles = 800\noverload = \"shed\"\nqueue_cap_cycles = 5000\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let g = workloads::mlp(4, 32, &[16], 8, 1).unwrap();
+    let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Int8).unwrap();
+    let prog = lower(&g, &fabric, &m).unwrap();
+
+    let mut gen = arrival_gen_from_config(&fabric.cfg.serve).unwrap();
+    let mut srv = ShardedServer::from_config(&fabric).unwrap();
+    let rep = srv.serve(&prog, &mut gen, 12).unwrap();
+
+    let mut twin_gen = ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 800 }, 11);
+    let mut twin = ShardedServer::new(&fabric, 2);
+    twin.set_seed(11).unwrap();
+    twin.set_overload(OverloadPolicy::Shed, 5_000).unwrap();
+    let want = twin.serve(&prog, &mut twin_gen, 12).unwrap();
+    assert_eq!(rep, want, "config-built server diverged from the explicit build");
+    assert_eq!(rep.records.len(), 12);
+}
+
+/// Steady-state footprint regression: under a bursty diurnal trace run
+/// for ≥ 10× the pruning horizon, a pruning server's retained history
+/// stays bounded (late-run footprint ≈ mid-run footprint) while the
+/// unpruned twin grows without bound.
+#[test]
+fn long_run_footprint_stays_bounded_under_pruning() {
+    let fabric = bundled_fabric("edge16.toml");
+    let prog = lowered(&fabric, MapStrategy::Greedy);
+    let horizon: Cycle = 30_000;
+    // Bursty base gaps (back-to-back spikes then lulls) with diurnal
+    // modulation on top.
+    let mut gen = ArrivalGen::new(
+        ArrivalProcess::Trace { gaps: vec![0, 0, 4_000, 200, 6_000, 0, 3_000] },
+        3,
+    )
+    .with_diurnal(40_000, 0.7);
+
+    let mut pruned = ShardedServer::new(&fabric, 2);
+    pruned.set_seed(9).unwrap();
+    pruned.set_prune(horizon, true);
+    let mut unpruned = ShardedServer::new(&fabric, 2);
+    unpruned.set_seed(9).unwrap();
+
+    let chunks = 10;
+    let per_chunk = 20;
+    let mut footprints = Vec::new();
+    let mut last_arrival = 0;
+    for _ in 0..chunks {
+        let arrivals = gen.take_trace(per_chunk);
+        last_arrival = *arrivals.last().unwrap();
+        let a = pruned.serve_trace(&prog, &arrivals).unwrap();
+        let b = unpruned.serve_trace(&prog, &arrivals).unwrap();
+        // Pruning is a memory policy, not a scheduling policy: the
+        // merged serving records are identical.
+        assert_eq!(a, b, "pruning changed the serving results");
+        footprints.push(pruned.history_footprint());
+    }
+    assert!(
+        last_arrival >= 10 * horizon,
+        "trace too short for the regression: {last_arrival} < 10 x {horizon}"
+    );
+    let mid = footprints[chunks / 2];
+    let last = *footprints.last().unwrap();
+    assert!(mid > 0, "probe never observed retained history");
+    assert!(
+        last <= 2 * mid,
+        "pruned footprint kept growing: mid {mid} -> last {last}"
+    );
+    assert!(
+        2 * last < unpruned.history_footprint(),
+        "pruning retained most of the history: {} vs {}",
+        last,
+        unpruned.history_footprint()
+    );
+    // The id table stays window-sized too, on every shard.
+    let (_, ids) = pruned.queue_footprint();
+    let (_, ids_unpruned) = unpruned.queue_footprint();
+    assert!(ids < ids_unpruned, "pruned id table did not shrink: {ids} vs {ids_unpruned}");
+}
