@@ -8,12 +8,27 @@
 //!   awareness (the production default).
 //! * `Ilp` — makespan-minimizing MILP over the matmul nodes (ArchEx-style
 //!   exact reference for small graphs).
+//!
+//! # The cost-model seam
+//!
+//! Every placement estimate routes through a
+//! [`crate::fabric::CostModel`] at `start = 0` with a disabled
+//! occupancy: [`map_graph`] uses the fabric's configured model,
+//! [`map_graph_with`] takes an explicit one. At that evaluation point
+//! every kind-blind model (invariant, congestion, DVFS — their factors
+//! are exactly 1.0 at epoch 0) reproduces the direct fabric-primitive
+//! estimates bit-for-bit, so placements are unchanged for existing
+//! configs; a kind-aware model ([`crate::fabric::KindCost`]) feeds
+//! accelerator affinity (photonic cold-start, crossbar interface
+//! overhead, PIM feed discounts) into the placement decision —
+//! `tests/kindcost_golden.rs` pins that it actually moves placements on
+//! the mixed-kind config.
 
 use anyhow::{bail, ensure};
 
 use crate::accel::{Compute, Precision};
 use crate::dse::milp::{Milp, Sense};
-use crate::fabric::Fabric;
+use crate::fabric::{CostModel, Fabric, Occupancy};
 use crate::ir::{Graph, OpKind};
 use crate::Result;
 
@@ -72,22 +87,40 @@ fn pick_precision(fabric: &Fabric, tile: usize, c: &Compute, prefer: Precision)
     chain.iter().copied().find(|&p| t.accel.supports(p))
 }
 
-/// Map the graph onto the fabric.
+/// Map the graph onto the fabric, estimating through the fabric's
+/// configured cost model (module docs, cost-model seam).
 pub fn map_graph(
     g: &Graph,
     fabric: &Fabric,
     strategy: MapStrategy,
     prefer: Precision,
 ) -> Result<Mapping> {
+    map_graph_with(g, fabric, strategy, prefer, fabric.cost_model().as_ref())
+}
+
+/// Map the graph onto the fabric, estimating through an explicit cost
+/// model at `start = 0` with a disabled occupancy.
+pub fn map_graph_with(
+    g: &Graph,
+    fabric: &Fabric,
+    strategy: MapStrategy,
+    prefer: Precision,
+    model: &dyn CostModel,
+) -> Result<Mapping> {
     ensure!(fabric.tile_count() > 0, "empty fabric");
     match strategy {
-        MapStrategy::RoundRobin => round_robin(g, fabric, prefer),
-        MapStrategy::Greedy => greedy(g, fabric, prefer),
-        MapStrategy::Ilp => ilp(g, fabric, prefer),
+        MapStrategy::RoundRobin => round_robin(g, fabric, prefer, model),
+        MapStrategy::Greedy => greedy(g, fabric, prefer, model),
+        MapStrategy::Ilp => ilp(g, fabric, prefer, model),
     }
 }
 
-fn round_robin(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
+fn round_robin(
+    g: &Graph,
+    fabric: &Fabric,
+    prefer: Precision,
+    model: &dyn CostModel,
+) -> Result<Mapping> {
     let mut assign = vec![None; g.len()];
     let mut precision = vec![Precision::F32; g.len()];
     let mut next = 0usize;
@@ -109,11 +142,17 @@ fn round_robin(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping>
             bail!("no tile can run node {} ({})", id, g.nodes[id].name);
         }
     }
-    let (cy, en) = estimate(g, fabric, &assign, &precision)?;
+    let (cy, en) = estimate(g, fabric, &assign, &precision, model)?;
     Ok(Mapping { assign, precision, est_cycles: cy, est_energy_pj: en })
 }
 
-fn greedy(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
+fn greedy(
+    g: &Graph,
+    fabric: &Fabric,
+    prefer: Precision,
+    model: &dyn CostModel,
+) -> Result<Mapping> {
+    let occ = Occupancy::disabled();
     let mut assign = vec![None; g.len()];
     let mut precision = vec![Precision::F32; g.len()];
     let mut tile_free = vec![0u64; fabric.tile_count()];
@@ -134,7 +173,7 @@ fn greedy(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
         let mut best: Option<(u64, usize, Precision)> = None;
         for t in 0..fabric.tile_count() {
             let Some(p) = pick_precision(fabric, t, &c, prefer) else { continue };
-            let cost = fabric.tiles[t].execute(&c, p)?;
+            let cost = model.execute(fabric, t, &c, p, 0, &occ)?;
             // Transport from the producing tile (or HBM) of the largest
             // input.
             let src = g.nodes[id]
@@ -143,7 +182,7 @@ fn greedy(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
                 .filter_map(|&i| ready[i].1)
                 .last();
             let src_node = src.map(|s| fabric.tiles[s].node).unwrap_or(fabric.hbm_node);
-            let tr = fabric.transport(src_node, fabric.tiles[t].node, cost.noc_bytes);
+            let tr = model.transport(fabric, src_node, fabric.tiles[t].node, cost.noc_bytes, 0, &occ);
             let start = inputs_ready.max(tile_free[t]);
             let finish = start + tr.cycles + cost.metrics.cycles;
             if best.map_or(true, |(f, _, _)| finish < f) {
@@ -158,11 +197,12 @@ fn greedy(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
         tile_free[t] = finish;
         ready[id] = (finish, Some(t));
     }
-    let (cy, en) = estimate(g, fabric, &assign, &precision)?;
+    let (cy, en) = estimate(g, fabric, &assign, &precision, model)?;
     Ok(Mapping { assign, precision, est_cycles: cy, est_energy_pj: en })
 }
 
-fn ilp(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
+fn ilp(g: &Graph, fabric: &Fabric, prefer: Precision, model: &dyn CostModel) -> Result<Mapping> {
+    let occ = Occupancy::disabled();
     // Exact makespan assignment for the matmul nodes (elementwise nodes
     // follow their producer's tile afterwards): min T s.t. per-tile
     // summed cycles <= T, each matmul on exactly one capable tile.
@@ -181,8 +221,8 @@ fn ilp(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
         let c = node_compute(g, id).unwrap();
         for t in 0..fabric.tile_count() {
             if let Some(p) = pick_precision(fabric, t, &c, prefer) {
-                let cost = fabric.tiles[t].execute(&c, p)?;
-                let tr = fabric.feed(t, cost.noc_bytes);
+                let cost = model.execute(fabric, t, &c, p, 0, &occ)?;
+                let tr = model.feed(fabric, t, cost.noc_bytes, 0, &occ);
                 x[mi][t] = Some(m.add_var(0.0, 1.0, 0.0, true));
                 costs[mi][t] = (cost.metrics.cycles + tr.cycles) as f64;
                 precs[mi][t] = p;
@@ -260,7 +300,7 @@ fn ilp(g: &Graph, fabric: &Fabric, prefer: Precision) -> Result<Mapping> {
         assign[id] = Some(t);
         precision[id] = pick_precision(fabric, t, &c, prefer).unwrap();
     }
-    let (cy, en) = estimate(g, fabric, &assign, &precision)?;
+    let (cy, en) = estimate(g, fabric, &assign, &precision, model)?;
     Ok(Mapping { assign, precision, est_cycles: cy, est_energy_pj: en })
 }
 
@@ -271,17 +311,19 @@ fn estimate(
     fabric: &Fabric,
     assign: &[Option<usize>],
     precision: &[Precision],
+    model: &dyn CostModel,
 ) -> Result<(u64, f64)> {
+    let occ = Occupancy::disabled();
     let mut cycles = 0u64;
     let mut energy = 0.0f64;
     let mut loc: Vec<Option<usize>> = vec![None; g.len()];
     for id in 0..g.len() {
         let Some(t) = assign[id] else { continue };
         let c = node_compute(g, id).unwrap();
-        let cost = fabric.tiles[t].execute(&c, precision[id])?;
+        let cost = model.execute(fabric, t, &c, precision[id], 0, &occ)?;
         let src = g.nodes[id].inputs.iter().filter_map(|&i| loc[i]).last();
         let src_node = src.map(|s| fabric.tiles[s].node).unwrap_or(fabric.hbm_node);
-        let tr = fabric.transport(src_node, fabric.tiles[t].node, cost.noc_bytes);
+        let tr = model.transport(fabric, src_node, fabric.tiles[t].node, cost.noc_bytes, 0, &occ);
         cycles += cost.metrics.cycles + tr.cycles;
         energy += cost.metrics.total_energy_pj() + tr.total_energy_pj();
         loc[id] = Some(t);
@@ -413,6 +455,34 @@ count = 1
         }
         // 8 matmuls over 15 equal tiles: optimum spreads them out.
         assert!(used.len() >= 4, "{used:?}");
+    }
+
+    #[test]
+    fn cost_model_seam_preserves_kind_blind_placements() {
+        // map_graph routes estimates through the fabric's cost model at
+        // start 0 with occupancy disabled: for every kind-blind model
+        // that point prices exactly like the direct fabric primitives,
+        // so the mapping (assignment, precisions, estimates) is
+        // bit-identical to an explicit InvariantCost walk.
+        use crate::fabric::{CongestionKnobs, DvfsKnobs, InvariantCost, VaryingCost};
+        let g = workloads::mlp(4, 64, &[32], 10, 5).unwrap();
+        let f = fabric();
+        for s in [MapStrategy::RoundRobin, MapStrategy::Greedy, MapStrategy::Ilp] {
+            let base = map_graph_with(&g, &f, s, Precision::Int8, &InvariantCost).unwrap();
+            let via_default = map_graph(&g, &f, s, Precision::Int8).unwrap();
+            let varying = VaryingCost::congestion_dvfs(
+                512,
+                CongestionKnobs::default(),
+                DvfsKnobs::default(),
+            );
+            let via_varying = map_graph_with(&g, &f, s, Precision::Int8, &varying).unwrap();
+            for m in [&via_default, &via_varying] {
+                assert_eq!(m.assign, base.assign, "{s:?}");
+                assert_eq!(m.precision, base.precision, "{s:?}");
+                assert_eq!(m.est_cycles, base.est_cycles, "{s:?}");
+                assert_eq!(m.est_energy_pj.to_bits(), base.est_energy_pj.to_bits(), "{s:?}");
+            }
+        }
     }
 
     #[test]

@@ -20,4 +20,4 @@ pub mod quantize;
 pub mod sparsify;
 
 pub use lowering::{FabricProgram, Step};
-pub use mapper::{MapStrategy, Mapping};
+pub use mapper::{map_graph, map_graph_with, MapStrategy, Mapping};

@@ -119,7 +119,7 @@ impl CostConfig {
     /// key at fault. Public so `fabric::cost::model_from_config` can
     /// re-check hand-built configs that never passed the TOML loader.
     pub fn validate(&self) -> Result<()> {
-        let known = ["invariant", "congestion", "dvfs", "congestion_dvfs"];
+        let known = ["invariant", "congestion", "dvfs", "congestion_dvfs", "kind"];
         if !known.contains(&self.model.as_str()) {
             bail!(
                 "unknown fabric.cost.model {:?} (expected one of {known:?})",

@@ -87,12 +87,12 @@ use super::admit::{
     RequestOutcome,
 };
 use super::exec::{ExecReport, ProgramSpan};
-use super::serve::percentile;
 use crate::compiler::FabricProgram;
 use crate::config::ServeConfig;
 use crate::fabric::{CostModel, Fabric};
 use crate::sim::{
-    ArrivalGen, ArrivalProcess, CounterRng, Cycle, FaultConfig, FaultPlan, WorkerPool,
+    ArrivalGen, ArrivalProcess, CounterRng, Cycle, FaultConfig, FaultPlan, StreamingHist,
+    WorkerPool,
 };
 use crate::Result;
 
@@ -190,6 +190,12 @@ pub struct ServeReport {
     pub first_arrival: Cycle,
     /// Last completion over all completed requests.
     pub last_finish: Cycle,
+    /// Exact histogram of *completed* sojourns, recorded per shard
+    /// during the run and merged O(1) per shard at report time —
+    /// percentile queries are O(range), not O(n log n) per call.
+    /// Histogram equality is multiset equality, so report `==` stays
+    /// bitwise replay equality.
+    pub sojourn_hist: StreamingHist,
 }
 
 impl ServeReport {
@@ -205,14 +211,21 @@ impl ServeReport {
     }
 
     /// Sojourn percentile over *completed* requests, fabric cycles.
+    ///
+    /// Answered as a k-th order statistic over the pre-merged
+    /// [`ServeReport::sojourn_hist`] with the exact index rule of
+    /// `serve::percentile` (`k = round((n-1)·q)`), so the result is
+    /// bit-identical to collecting and sorting the completed sojourns —
+    /// pinned by `sojourn_percentiles_match_sorted_vec_bitwise` below —
+    /// without the per-call O(n log n) sort the old path paid 3× per
+    /// report.
     pub fn sojourn_percentile(&self, q: f64) -> f64 {
-        let v: Vec<f64> = self
-            .records
-            .iter()
-            .filter(|r| r.completed())
-            .map(|r| r.sojourn as f64)
-            .collect();
-        percentile(&v, q)
+        let n = self.sojourn_hist.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let k = ((n - 1) as f64 * q).round() as u64;
+        self.sojourn_hist.kth(k).expect("percentile index in range") as f64
     }
 
     pub fn p50_sojourn_cycles(&self) -> f64 {
@@ -422,12 +435,27 @@ impl<'f> ShardedServer<'f> {
     /// Build from the fabric's validated `[serve]` section: shard
     /// count, router seed, overload policy + backlog cap. (Arrival
     /// generation is the caller's side of the open loop — pair with
-    /// [`arrival_gen_from_config`].) Always builds plain sessions;
-    /// degraded serving is an explicit choice via
-    /// [`ShardedServer::degraded`].
+    /// [`arrival_gen_from_config`].)
+    ///
+    /// When the config also carries a live `[fault]` section
+    /// (non-inert: positive horizon and at least one positive
+    /// probability), every shard is a [`FaultySession`] under the
+    /// default [`RecoveryPolicy`] — the TOML pair `[serve]` + `[fault]`
+    /// means *degraded serving*, not silently-plain sessions. Both
+    /// sections are re-validated here so hand-built configs get the
+    /// same schema errors as loaded ones. Explicit policies or plans
+    /// go through [`ShardedServer::degraded`] /
+    /// [`ShardedServer::degraded_with_plan`].
     pub fn from_config(fabric: &'f Fabric) -> Result<Self> {
         let cfg = &fabric.cfg.serve;
-        let mut srv = Self::new(fabric, cfg.shards);
+        cfg.validate()?;
+        let fault = &fabric.cfg.fault;
+        let mut srv = if fault.is_inert() {
+            Self::new(fabric, cfg.shards)
+        } else {
+            fault.validate()?;
+            Self::degraded(fabric, cfg.shards, fault, RecoveryPolicy::default())?
+        };
         srv.set_seed(cfg.seed)?;
         let overload = match cfg.overload.as_str() {
             "queue" => OverloadPolicy::Queue,
@@ -593,7 +621,7 @@ impl<'f> ShardedServer<'f> {
         }
         let cfg = RunCfg { overload: self.overload, cap: self.cap, prune: self.prune_horizon };
 
-        let mut outs: Vec<Option<Result<Vec<RequestRecord>>>> = Vec::with_capacity(n);
+        let mut outs: Vec<Option<Result<ShardOut>>> = Vec::with_capacity(n);
         outs.resize_with(n, || None);
         match self.exec {
             ShardExec::Sequential => {
@@ -616,7 +644,7 @@ impl<'f> ShardedServer<'f> {
                     let pool = self.pool.as_mut().expect("multi-shard serve owns a pool");
                     let work_ro: &[Vec<WorkItem>] = &work;
                     let mut slots: &mut [ShardSlot] = &mut self.shards;
-                    let mut outs_rest: &mut [Option<Result<Vec<RequestRecord>>>] = &mut outs;
+                    let mut outs_rest: &mut [Option<Result<ShardOut>>] = &mut outs;
                     pool.scoped(|scope| {
                         let mut own = None;
                         for s in 0..n {
@@ -646,10 +674,14 @@ impl<'f> ShardedServer<'f> {
 
         // Canonical merge: lowest-shard error surfaces first (a pure
         // function of the routing, not of execution order); records
-        // sort by global sequence number.
+        // sort by global sequence number; per-shard sojourn histograms
+        // merge by count addition (order-independent).
         let mut records = Vec::with_capacity(arrivals.len());
+        let mut sojourn_hist = StreamingHist::new();
         for out in outs {
-            records.extend(out.expect("every shard ran")?);
+            let shard_out = out.expect("every shard ran")?;
+            records.extend(shard_out.records);
+            sojourn_hist.merge(&shard_out.sojourns);
         }
         records.sort_unstable_by_key(|r| r.seq);
 
@@ -661,6 +693,7 @@ impl<'f> ShardedServer<'f> {
             first_arrival: arrivals.first().copied().unwrap_or(0),
             last_finish: 0,
             records,
+            sojourn_hist,
         };
         for r in &report.records {
             match r.decision {
@@ -679,6 +712,23 @@ impl<'f> ShardedServer<'f> {
     }
 }
 
+/// One shard's contribution to the merged report: its records plus a
+/// shard-local histogram of completed sojourns, built as records are
+/// produced so report time merges histograms instead of re-sorting.
+struct ShardOut {
+    records: Vec<RequestRecord>,
+    sojourns: StreamingHist,
+}
+
+impl ShardOut {
+    fn push(&mut self, rec: RequestRecord) {
+        if rec.completed() {
+            self.sojourns.record(rec.sojourn);
+        }
+        self.records.push(rec);
+    }
+}
+
 /// One shard's slice of the trace, in ascending `seq` order: overload
 /// classification against the shard backlog, admission (bumped past any
 /// fault floor), drain to quiescence, and horizon-cadence pruning.
@@ -688,8 +738,11 @@ fn run_shard(
     prog: &FabricProgram,
     work: &[WorkItem],
     cfg: RunCfg,
-) -> Result<Vec<RequestRecord>> {
-    let mut out = Vec::with_capacity(work.len());
+) -> Result<ShardOut> {
+    let mut out = ShardOut {
+        records: Vec::with_capacity(work.len()),
+        sojourns: StreamingHist::new(),
+    };
     for w in work {
         let backlog = slot.busy_until.saturating_sub(w.arrival);
         let overloaded = cfg.cap > 0 && backlog > cfg.cap;
@@ -945,5 +998,77 @@ mod tests {
         assert!(srv.set_overload(OverloadPolicy::Shed, 0).is_err());
         assert!(srv.set_overload(OverloadPolicy::Degrade, 0).is_err());
         assert!(srv.set_overload(OverloadPolicy::Queue, 0).is_ok());
+    }
+
+    #[test]
+    fn sojourn_percentiles_match_sorted_vec_bitwise() {
+        use crate::coordinator::serve::percentile;
+        let fab = fabric();
+        let prog = program(&fab);
+        let mut probe = ShardedServer::new(&fab, 1);
+        let service = probe.serve_trace(&prog, &[0]).unwrap().records[0].sojourn;
+        // A bursty 3-shard trace under a shedding cap: some requests
+        // queue, some shed — the histogram must cover exactly the
+        // completed records and reproduce the replaced sort-per-call
+        // path bit-for-bit at every quantile.
+        let mut srv = ShardedServer::new(&fab, 3);
+        srv.set_overload(OverloadPolicy::Shed, service / 2).unwrap();
+        let arrivals: Vec<Cycle> =
+            (0..48).map(|i| (i as Cycle / 4) * (service / 3).max(1)).collect();
+        let rep = srv.serve_trace(&prog, &arrivals).unwrap();
+        assert!(rep.shed > 0, "trace never overloaded");
+        let sojourns: Vec<f64> = rep
+            .records
+            .iter()
+            .filter(|r| r.completed())
+            .map(|r| r.sojourn as f64)
+            .collect();
+        assert_eq!(rep.sojourn_hist.count() as usize, sojourns.len());
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(
+                rep.sojourn_percentile(q).to_bits(),
+                percentile(&sojourns, q).to_bits(),
+                "quantile {q}"
+            );
+        }
+        // Replay: a fresh server over the same trace reproduces the
+        // report — including the embedded histogram — bit-for-bit.
+        let mut again = ShardedServer::new(&fab, 3);
+        again.set_overload(OverloadPolicy::Shed, service / 2).unwrap();
+        assert_eq!(again.serve_trace(&prog, &arrivals).unwrap(), rep);
+    }
+
+    #[test]
+    fn from_config_wires_fault_sections_into_degraded_shards() {
+        let base = "[noc]\nwidth = 3\nheight = 3\n\
+                    [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 4\n\
+                    [serve]\nshards = 2\nseed = 9\n";
+        // No [fault] section: plain sessions, no recovery outcomes.
+        let fab = Fabric::build(FabricConfig::from_toml(base).unwrap()).unwrap();
+        let prog = program(&fab);
+        let mut srv = ShardedServer::from_config(&fab).unwrap();
+        let rep = srv.serve_trace(&prog, &[0, 1_000]).unwrap();
+        assert!(rep.records.iter().all(|r| r.outcome.is_none()));
+
+        // A live [fault] section: every shard must be a fault-injected
+        // session — recovery outcomes on every admitted record.
+        let faulty =
+            format!("{base}[fault]\nhorizon = 2000000\nwindow = 1024\np_transient = 0.01\n");
+        let fab = Fabric::build(FabricConfig::from_toml(&faulty).unwrap()).unwrap();
+        let prog = program(&fab);
+        let mut srv = ShardedServer::from_config(&fab).unwrap();
+        let rep = srv.serve_trace(&prog, &[0, 1_000]).unwrap();
+        assert!(
+            rep.records.iter().all(|r| r.outcome.is_some()),
+            "[serve] + live [fault] must build FaultySession shards"
+        );
+
+        // An inert [fault] section (all probabilities zero) stays plain.
+        let inert = format!("{base}[fault]\nhorizon = 2000000\n");
+        let fab = Fabric::build(FabricConfig::from_toml(&inert).unwrap()).unwrap();
+        let prog = program(&fab);
+        let mut srv = ShardedServer::from_config(&fab).unwrap();
+        let rep = srv.serve_trace(&prog, &[0, 1_000]).unwrap();
+        assert!(rep.records.iter().all(|r| r.outcome.is_none()));
     }
 }

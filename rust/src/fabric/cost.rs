@@ -81,6 +81,67 @@
 //!     so the fixed point settles in few passes). Energy is left
 //!     unscaled: congestion and throttling stretch time, they do not
 //!     move more bits or switch more gates in this model family.
+//! * [`KindCost`] — kind-aware accelerator pricing (`model = "kind"`):
+//!   the first model that consults [`TileKind`], making the paper's
+//!   heterogeneous post-CMOS device classes first-class in the pricing
+//!   layer instead of generic resources.
+//!
+//! # Kind-aware pricing rules (`KindCost`)
+//!
+//! Every kind-specific modifier obeys the same contract clauses as the
+//! generic models — the kinds change *what* is priced, never *how* the
+//! occupancy is read:
+//!
+//! * **Photonic warm-up** — a photonic tile is *warm* when its busy
+//!   fraction over a trailing window of fully elapsed epochs (the same
+//!   aggregates the DVFS throttle reads) is at/above
+//!   [`KindKnobs::photonic_warm_frac`]; a cold start pays
+//!   [`KindKnobs::photonic_warmup_cycles`] of laser ramp-up /
+//!   ring-resonator thermal tuning plus
+//!   [`KindKnobs::photonic_tuning_pj`] of [`Category::Laser`] energy.
+//!   Epoch 0 (and a disabled occupancy) is always cold — warm state is
+//!   history, and there is none yet.
+//! * **Crossbar wear** — an NVM crossbar's program/erase wear counter is
+//!   the tile's *cumulative* busy integral over all strictly earlier
+//!   epochs, so the wear factor `min(cap, 1 + alpha · busy/epoch)` is
+//!   **monotone nondecreasing in start** within any fixed schedule:
+//!   wear only ever accumulates. It stretches both latency and the
+//!   per-access ADC/DAC overhead energy ([`Category::Adc`], priced per
+//!   operand byte crossing the analog boundary).
+//! * **Neuromorphic spike rate** — event-driven energy scales with the
+//!   step's op/byte mix: arithmetic intensity at/below
+//!   [`KindKnobs::neuro_sparse_intensity`] prices compute + leakage
+//!   energy at the sparse scale (idle neurons gate off), above it at
+//!   the dense scale (spike storms). Pure function of the step — no
+//!   occupancy read, no time dependence.
+//! * **PIM offload vs. DRAM contention** — a `pim_dram` tile's HBM feed
+//!   burns less DRAM energy ([`KindKnobs::pim_offload_scale`]: operands
+//!   are already in the DRAM die), but its executes contend with
+//!   transfer traffic for banks: the previous epoch's resident-transfer
+//!   integral stretches exec latency exactly like the congestion factor.
+//!
+//! All of warm-up, wear and contention read **strictly earlier epochs
+//! only**, so the unique-fixed-point argument above applies unchanged
+//! and `tests/kindcost_golden.rs` pins incremental ≡ from-scratch ≡
+//! cross-engine bit-identity on the mixed-kind config.
+//!
+//! Every kind modifier is a time **tax or par** — photonic warm-up
+//! adds, crossbar wear and PIM contention stretch by factors ≥ 1,
+//! neuromorphic and PIM offload touch energy only. With fixed step →
+//! tile assignments, finish times are monotone in step durations, so
+//! the invariant estimate of any program is a *cycles floor* for its
+//! kind-aware price (also pinned in `tests/kindcost_golden.rs`).
+//!
+//! # The mapper-feedback seam
+//!
+//! `compiler::mapper::map_graph` routes its placement estimates through
+//! [`Fabric::cost_model`] (the `map_graph_with` seam) at `start = 0`
+//! with a disabled occupancy. For every kind-blind model this is
+//! bit-identical to the old direct-primitive estimates (congestion and
+//! DVFS factors are exactly 1.0 at epoch 0), so existing placements are
+//! preserved; under `KindCost` the mapper sees cold-start photonic
+//! penalties and crossbar interface overheads, and placement moves on
+//! mixed fabrics (pinned in `tests/kindcost_golden.rs`).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -90,12 +151,12 @@ use anyhow::bail;
 use crate::accel::{Compute, Precision};
 use crate::compiler::Step;
 use crate::config::CostConfig;
-use crate::metrics::Metrics;
+use crate::metrics::{Category, Metrics};
 use crate::noc::NodeId;
 use crate::sim::Cycle;
 use crate::Result;
 
-use super::{Fabric, TileCost};
+use super::{Fabric, TileCost, TileKind};
 
 /// Self-declared time dependence of a [`CostModel`] (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -726,6 +787,252 @@ impl CostModel for DegradedCost {
     }
 }
 
+/// Kind-aware pricing knobs (module docs, kind-aware pricing rules).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KindKnobs {
+    /// Laser ramp-up + thermal-tuning latency a cold photonic tile pays.
+    pub photonic_warmup_cycles: Cycle,
+    /// Thermal-tuning energy of a cold start ([`Category::Laser`]).
+    pub photonic_tuning_pj: f64,
+    /// Trailing warm-state window, in epochs (the DVFS aggregates).
+    pub photonic_window: u64,
+    /// Busy fraction at/above which a photonic tile counts as warm.
+    pub photonic_warm_frac: f64,
+    /// Fixed ADC/DAC conversion latency per crossbar access.
+    pub crossbar_access_cycles: Cycle,
+    /// ADC/DAC conversion energy per operand byte crossing the analog
+    /// boundary.
+    pub crossbar_adc_pj_per_byte: f64,
+    /// Wear slope per epoch-normalized cumulative busy integral.
+    pub crossbar_wear_alpha: f64,
+    /// Ceiling on the wear factor.
+    pub crossbar_wear_cap: f64,
+    /// Arithmetic intensity (ops/byte) at/below which a neuromorphic
+    /// step prices as sparse.
+    pub neuro_sparse_intensity: f64,
+    /// Compute/leakage energy scale of a sparse spiking step.
+    pub neuro_sparse_scale: f64,
+    /// Compute/leakage energy scale of a dense spiking step.
+    pub neuro_dense_scale: f64,
+    /// HBM-feed [`Category::Dram`] energy scale of a `pim_dram` tile
+    /// (< 1: the operands already live in the DRAM die; feed *time* is
+    /// unchanged — bank bandwidth is not improved by proximity).
+    pub pim_offload_scale: f64,
+    /// DRAM-bank contention slope per average resident transfer.
+    pub pim_contention_alpha: f64,
+    /// Ceiling on the PIM contention factor.
+    pub pim_contention_cap: f64,
+}
+
+impl Default for KindKnobs {
+    fn default() -> Self {
+        KindKnobs {
+            photonic_warmup_cycles: 2_000,
+            photonic_tuning_pj: 50_000.0,
+            photonic_window: 4,
+            photonic_warm_frac: 0.25,
+            crossbar_access_cycles: 32,
+            crossbar_adc_pj_per_byte: 2.0,
+            crossbar_wear_alpha: 0.05,
+            crossbar_wear_cap: 3.0,
+            neuro_sparse_intensity: 2.0,
+            neuro_sparse_scale: 0.75,
+            neuro_dense_scale: 1.25,
+            pim_offload_scale: 0.6,
+            pim_contention_alpha: 0.25,
+            pim_contention_cap: 4.0,
+        }
+    }
+}
+
+/// Rebuild `m` with each energy category scaled by `f(cat)` (the energy
+/// map is append-only, so scaling below 1.0 needs a rebuild). Category
+/// iteration is `BTreeMap` order and each category appears once, so the
+/// result is deterministic.
+fn scale_energy(m: &Metrics, f: impl Fn(Category) -> f64) -> Metrics {
+    let mut out = Metrics::new();
+    out.cycles = m.cycles;
+    out.ops = m.ops;
+    out.bytes_moved = m.bytes_moved;
+    for (cat, pj) in m.breakdown() {
+        out.add_energy(cat, pj * f(cat));
+    }
+    out
+}
+
+/// Kind-aware accelerator pricing (`[fabric.cost] model = "kind"`): the
+/// per-device-class modifiers of the module docs' kind-aware pricing
+/// rules, layered on the analytic fabric primitives. `npu` and `cpu`
+/// tiles price exactly as [`InvariantCost`]; the post-CMOS kinds get
+/// photonic warm-up, crossbar ADC/DAC + wear, neuromorphic spike-rate
+/// energy, and PIM offload/contention pricing.
+#[derive(Debug, Clone, Copy)]
+pub struct KindCost {
+    /// Occupancy epoch length, cycles.
+    pub epoch: Cycle,
+    pub knobs: KindKnobs,
+}
+
+impl KindCost {
+    pub fn new(epoch: Cycle, knobs: KindKnobs) -> Self {
+        assert!(epoch > 0, "kind-aware cost epoch must be positive");
+        KindCost { epoch, knobs }
+    }
+
+    /// Build from a validated `[fabric.cost]` section: the shared
+    /// epoch/window/threshold knobs come from the config, the per-kind
+    /// constants keep their defaults.
+    pub fn from_config(cfg: &CostConfig) -> Self {
+        let knobs = KindKnobs {
+            photonic_window: cfg.window_epochs,
+            photonic_warm_frac: cfg.warm_frac,
+            pim_contention_alpha: cfg.alpha,
+            pim_contention_cap: cfg.cap,
+            ..KindKnobs::default()
+        };
+        KindCost::new(cfg.epoch_cycles, knobs)
+    }
+
+    /// Is the photonic `tile` warm at `start`? Busy fraction over the
+    /// trailing window of fully elapsed epochs, at/above the warm
+    /// threshold. Epoch 0 / untracked occupancy is always cold.
+    pub fn photonic_warm(&self, tile: usize, start: Cycle, occ: &Occupancy) -> bool {
+        let e = start / self.epoch;
+        if e == 0 || !occ.is_tracking() || self.knobs.photonic_window == 0 {
+            return false;
+        }
+        let w = self.knobs.photonic_window.min(e);
+        let busy: u64 = (e - w..e).map(|j| occ.tile_busy_cycles(tile, j)).sum();
+        let frac = busy as f64 / (w * self.epoch) as f64;
+        frac >= self.knobs.photonic_warm_frac
+    }
+
+    /// Crossbar wear factor at `start`: cumulative busy integral over
+    /// **all** strictly earlier epochs (wear never heals), normalized by
+    /// the epoch length — monotone nondecreasing in `start` for a fixed
+    /// schedule.
+    pub fn crossbar_wear_factor(&self, tile: usize, start: Cycle, occ: &Occupancy) -> f64 {
+        let e = start / self.epoch;
+        if e == 0 || !occ.is_tracking() {
+            return 1.0;
+        }
+        let busy: u64 = (0..e).map(|j| occ.tile_busy_cycles(tile, j)).sum();
+        let wear = busy as f64 / self.epoch as f64;
+        (1.0 + self.knobs.crossbar_wear_alpha * wear).min(self.knobs.crossbar_wear_cap)
+    }
+
+    /// DRAM-bank contention factor a `pim_dram` exec pays at `start`:
+    /// the previous epoch's resident-transfer integral, shaped exactly
+    /// like [`VaryingCost::congestion_factor`].
+    pub fn pim_contention_factor(&self, start: Cycle, occ: &Occupancy) -> f64 {
+        let e = start / self.epoch;
+        if e == 0 || !occ.is_tracking() {
+            return 1.0;
+        }
+        let resident = occ.transfer_cycles(e - 1) as f64 / self.epoch as f64;
+        (1.0 + self.knobs.pim_contention_alpha * resident).min(self.knobs.pim_contention_cap)
+    }
+
+    /// Spike-rate energy scale of one step: ops/byte at/below the sparse
+    /// threshold gates idle neurons off, above it spike storms dominate.
+    pub fn neuro_energy_scale(&self, c: &Compute, p: Precision) -> f64 {
+        let intensity = c.ops() as f64 / c.io_bytes(p).max(1) as f64;
+        if intensity <= self.knobs.neuro_sparse_intensity {
+            self.knobs.neuro_sparse_scale
+        } else {
+            self.knobs.neuro_dense_scale
+        }
+    }
+}
+
+impl CostModel for KindCost {
+    fn time_dependence(&self) -> TimeDependence {
+        TimeDependence::VaryingAfter(self.epoch)
+    }
+
+    fn name(&self) -> &'static str {
+        "kind"
+    }
+
+    fn transport(
+        &self,
+        fabric: &Fabric,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        _start: Cycle,
+        _occ: &Occupancy,
+    ) -> Metrics {
+        fabric.transport(src, dst, bytes)
+    }
+
+    fn feed(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        bytes: u64,
+        _start: Cycle,
+        _occ: &Occupancy,
+    ) -> Metrics {
+        let m = fabric.feed(tile, bytes);
+        if fabric.tiles[tile].kind != TileKind::PimDram {
+            return m;
+        }
+        // PIM offload: the feed's streaming half stays in the DRAM die,
+        // so its DRAM energy is discounted. Time is untouched — bank
+        // bandwidth is what it is, and keeping every kind modifier a
+        // time *tax or par* is what makes the invariant estimate a
+        // cycles floor (pinned in `tests/kindcost_golden.rs`).
+        let scale = self.knobs.pim_offload_scale;
+        scale_energy(&m, |cat| if cat == Category::Dram { scale } else { 1.0 })
+    }
+
+    fn execute(
+        &self,
+        fabric: &Fabric,
+        tile: usize,
+        c: &Compute,
+        p: Precision,
+        start: Cycle,
+        occ: &Occupancy,
+    ) -> Result<TileCost> {
+        let mut cost = fabric.tiles[tile].execute(c, p)?;
+        match fabric.tiles[tile].kind {
+            TileKind::Npu | TileKind::Cpu => {}
+            TileKind::Photonic => {
+                if !self.photonic_warm(tile, start, occ) {
+                    cost.metrics.cycles += self.knobs.photonic_warmup_cycles;
+                    cost.metrics.add_energy(Category::Laser, self.knobs.photonic_tuning_pj);
+                }
+            }
+            TileKind::Crossbar => {
+                let wear = self.crossbar_wear_factor(tile, start, occ);
+                cost.metrics.cycles =
+                    stretch(cost.metrics.cycles + self.knobs.crossbar_access_cycles, wear);
+                cost.metrics.add_energy(
+                    Category::Adc,
+                    c.io_bytes(p) as f64 * self.knobs.crossbar_adc_pj_per_byte * wear,
+                );
+            }
+            TileKind::Neuromorphic => {
+                let scale = self.neuro_energy_scale(c, p);
+                cost.metrics = scale_energy(&cost.metrics, |cat| {
+                    if matches!(cat, Category::Compute | Category::Leakage) {
+                        scale
+                    } else {
+                        1.0
+                    }
+                });
+            }
+            TileKind::PimDram => {
+                cost.metrics.cycles =
+                    stretch(cost.metrics.cycles, self.pim_contention_factor(start, occ));
+            }
+        }
+        Ok(cost)
+    }
+}
+
 /// Build the configured cost model (`[fabric.cost]`, see
 /// [`crate::config::CostConfig`]). Re-validates the knobs so a
 /// hand-built config cannot smuggle NaN/out-of-range values past the
@@ -747,6 +1054,7 @@ pub fn model_from_config(cfg: &CostConfig) -> Result<Arc<dyn CostModel>> {
         "congestion_dvfs" => {
             Arc::new(VaryingCost::congestion_dvfs(cfg.epoch_cycles, cong, dvfs))
         }
+        "kind" => Arc::new(KindCost::from_config(cfg)),
         other => bail!("unknown cost model {other:?}"),
     })
 }
@@ -1010,7 +1318,163 @@ mod tests {
         assert_eq!(model_from_config(&cfg).unwrap().name(), "dvfs");
         cfg.model = "congestion_dvfs".into();
         assert_eq!(model_from_config(&cfg).unwrap().name(), "congestion_dvfs");
+        cfg.model = "kind".into();
+        let m = model_from_config(&cfg).unwrap();
+        assert_eq!(m.name(), "kind");
+        assert_eq!(m.time_dependence().epoch(), Some(cfg.epoch_cycles));
         cfg.model = "quantum".into();
         assert!(model_from_config(&cfg).is_err());
+    }
+
+    /// One tile of every config kind on a 3x3 mesh (tile index order:
+    /// npu, crossbar, photonic, neuromorphic, pim_dram, cpu).
+    fn mixed_fabric() -> Fabric {
+        Fabric::build(
+            FabricConfig::from_toml(
+                "[noc]\nwidth = 3\nheight = 3\n\
+                 [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = 1\n\
+                 [[cu]]\nkind = \"crossbar\"\ntemplate = \"A\"\ncount = 1\n\
+                 [[cu]]\nkind = \"photonic\"\ntemplate = \"A\"\ncount = 1\n\
+                 [[cu]]\nkind = \"neuromorphic\"\ntemplate = \"A\"\ncount = 1\n\
+                 [[cu]]\nkind = \"pim_dram\"\ntemplate = \"A\"\ncount = 1\n\
+                 [[cu]]\nkind = \"cpu\"\ntemplate = \"C\"\ncount = 1\n",
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn kind_photonic_cold_start_pays_warmup_then_warms_up() {
+        let f = mixed_fabric();
+        let model = KindCost::new(100, KindKnobs::default());
+        let c = Compute::MatMul { m: 8, k: 8, n: 8 };
+        let base = f.tiles[2].execute(&c, Precision::Analog).unwrap().metrics;
+        let mut occ = Occupancy::new(100);
+        // No history: cold at every epoch, warm-up latency + tuning energy.
+        let cold = model.execute(&f, 2, &c, Precision::Analog, 500, &occ).unwrap().metrics;
+        assert_eq!(cold.cycles, base.cycles + model.knobs.photonic_warmup_cycles);
+        assert_eq!(
+            cold.energy(Category::Laser).to_bits(),
+            (base.energy(Category::Laser) + model.knobs.photonic_tuning_pj).to_bits()
+        );
+        // Epoch 0 is cold by definition even with a tracking occupancy.
+        assert!(!model.photonic_warm(2, 50, &occ));
+        // Recent busy history above the warm fraction: base price, bitwise.
+        occ.add_tile_busy(2, 100, 400);
+        let warm = model.execute(&f, 2, &c, Precision::Analog, 500, &occ).unwrap().metrics;
+        assert_eq!(warm, base);
+        assert_eq!(warm.total_energy_pj().to_bits(), base.total_energy_pj().to_bits());
+        // Other kinds never read the photonic warm state.
+        assert!(!model.photonic_warm(2, 500, &Occupancy::disabled()));
+    }
+
+    #[test]
+    fn kind_crossbar_wear_is_monotone_and_prices_adc() {
+        let f = mixed_fabric();
+        let model = KindCost::new(100, KindKnobs::default());
+        let c = Compute::MatMul { m: 8, k: 8, n: 8 };
+        let base = f.tiles[1].execute(&c, Precision::Analog).unwrap().metrics;
+        let occ0 = Occupancy::new(100);
+        // Fresh device: access overhead + per-byte ADC energy, no wear.
+        let fresh = model.execute(&f, 1, &c, Precision::Analog, 500, &occ0).unwrap().metrics;
+        assert_eq!(fresh.cycles, base.cycles + model.knobs.crossbar_access_cycles);
+        let io = c.io_bytes(Precision::Analog) as f64;
+        assert_eq!(
+            fresh.energy(Category::Adc).to_bits(),
+            (base.energy(Category::Adc) + io * model.knobs.crossbar_adc_pj_per_byte).to_bits()
+        );
+        // Wear accumulates over *all* earlier epochs and never heals:
+        // the factor is nondecreasing in start for a fixed schedule.
+        let mut occ = Occupancy::new(100);
+        occ.add_tile_busy(1, 0, 600);
+        let mut last = 1.0;
+        for e in 1..8u64 {
+            let w = model.crossbar_wear_factor(1, e * 100, &occ);
+            assert!(w >= last, "wear healed: {w} < {last} at epoch {e}");
+            last = w;
+        }
+        assert!(last > 1.0, "wear never bit");
+        assert!(last <= model.knobs.crossbar_wear_cap);
+        let worn = model.execute(&f, 1, &c, Precision::Analog, 700, &occ).unwrap().metrics;
+        assert!(worn.cycles > fresh.cycles, "wear must stretch latency");
+        assert!(
+            worn.energy(Category::Adc) > fresh.energy(Category::Adc),
+            "wear must degrade energy too"
+        );
+    }
+
+    #[test]
+    fn kind_neuromorphic_prices_spike_rate_from_op_byte_mix() {
+        let f = mixed_fabric();
+        let model = KindCost::new(100, KindKnobs::default());
+        let occ = Occupancy::disabled();
+        // intensity = ops/io_bytes = 8 * activity for a spiking layer.
+        let sparse_c = Compute::SpikingLayer { synapses: 64 * 1024, activity: 0.1 };
+        let dense_c = Compute::SpikingLayer { synapses: 64 * 1024, activity: 0.9 };
+        assert_eq!(model.neuro_energy_scale(&sparse_c, Precision::Analog), 0.75);
+        assert_eq!(model.neuro_energy_scale(&dense_c, Precision::Analog), 1.25);
+        let base = f.tiles[3].execute(&sparse_c, Precision::Analog).unwrap().metrics;
+        let sparse = model.execute(&f, 3, &sparse_c, Precision::Analog, 0, &occ).unwrap().metrics;
+        // Time untouched; compute energy gated down, the rest unchanged.
+        assert_eq!(sparse.cycles, base.cycles);
+        assert_eq!(
+            sparse.energy(Category::Compute).to_bits(),
+            (base.energy(Category::Compute) * 0.75).to_bits()
+        );
+        assert_eq!(sparse.energy(Category::Noc).to_bits(), base.energy(Category::Noc).to_bits());
+        let dense_base = f.tiles[3].execute(&dense_c, Precision::Analog).unwrap().metrics;
+        let dense = model.execute(&f, 3, &dense_c, Precision::Analog, 0, &occ).unwrap().metrics;
+        assert_eq!(
+            dense.energy(Category::Compute).to_bits(),
+            (dense_base.energy(Category::Compute) * 1.25).to_bits()
+        );
+    }
+
+    #[test]
+    fn kind_pim_discounts_feed_and_prices_bank_contention() {
+        let f = mixed_fabric();
+        let model = KindCost::new(100, KindKnobs::default());
+        let occ = Occupancy::new(100);
+        // Feed discount: PIM tile saves DRAM energy (time untouched —
+        // the invariant cycles floor), non-PIM tiles delegate bitwise.
+        let base = f.feed(4, 4096);
+        let pim = model.feed(&f, 4, 4096, 0, &occ);
+        assert_eq!(pim.cycles, base.cycles);
+        assert_eq!(
+            pim.energy(Category::Dram).to_bits(),
+            (base.energy(Category::Dram) * model.knobs.pim_offload_scale).to_bits()
+        );
+        assert_eq!(pim.energy(Category::Noc).to_bits(), base.energy(Category::Noc).to_bits());
+        assert_eq!(model.feed(&f, 0, 4096, 0, &occ), f.feed(0, 4096));
+        // Exec contention: previous epoch's transfer residency stretches
+        // PIM exec latency, congestion-factor shape.
+        let mut busy = Occupancy::new(100);
+        busy.add_transfer(0, 100);
+        busy.add_transfer(0, 100);
+        let c = Compute::MatMul { m: 8, k: 8, n: 8 };
+        let calm = model.execute(&f, 4, &c, Precision::Analog, 0, &busy).unwrap().metrics;
+        let contended = model.execute(&f, 4, &c, Precision::Analog, 100, &busy).unwrap().metrics;
+        assert_eq!(contended.cycles, (calm.cycles as f64 * 1.5).ceil() as u64);
+        assert_eq!(model.pim_contention_factor(200, &busy), 1.0, "epoch 1 is empty");
+    }
+
+    #[test]
+    fn kind_model_leaves_digital_tiles_invariant() {
+        let f = mixed_fabric();
+        let model = KindCost::new(100, KindKnobs::default());
+        let mut occ = Occupancy::new(100);
+        occ.add_tile_busy(0, 0, 500);
+        occ.add_tile_busy(5, 0, 500);
+        occ.add_transfer(0, 500);
+        let c = Compute::MatMul { m: 8, k: 8, n: 8 };
+        for t in [0usize, 5] {
+            let base = f.tiles[t].execute(&c, Precision::Int8).unwrap().metrics;
+            let priced = model.execute(&f, t, &c, Precision::Int8, 900, &occ).unwrap().metrics;
+            assert_eq!(priced, base);
+            assert_eq!(priced.total_energy_pj().to_bits(), base.total_energy_pj().to_bits());
+        }
+        // Transport is kind-blind in this family.
+        assert_eq!(model.transport(&f, 0, 3, 4096, 900, &occ), f.transport(0, 3, 4096));
     }
 }

@@ -19,12 +19,12 @@ mod tile;
 
 pub use cluster::PulpCluster;
 pub use cost::{
-    CongestionKnobs, CostModel, DegradedCost, DvfsKnobs, InvariantCost, Occupancy,
-    TimeDependence, VaryingCost,
+    CongestionKnobs, CostModel, DegradedCost, DvfsKnobs, InvariantCost, KindCost, KindKnobs,
+    Occupancy, TimeDependence, VaryingCost,
 };
 pub use dma::Dma;
 pub use hbm::Hbm;
-pub use tile::{Template, Tile, TileCost};
+pub use tile::{Template, Tile, TileCost, TileKind};
 
 use std::sync::Arc;
 
@@ -76,11 +76,14 @@ impl Fabric {
                     bail!("ran out of NoC nodes placing CUs");
                 }
                 let accel = make_accelerator(&group.kind)?;
+                let kind = TileKind::from_config_str(&group.kind)
+                    .ok_or_else(|| anyhow::anyhow!("unknown CU kind {:?}", group.kind))?;
                 let template = Template::from_char(group.template)?;
                 tiles.push(Tile::new(
                     tiles.len(),
                     node,
                     accel,
+                    kind,
                     template,
                     group.tcdm_kb * 1024,
                     group.cluster_cores,
@@ -199,6 +202,9 @@ cluster_cores = 8
         let nodes: std::collections::HashSet<_> = f.tiles.iter().map(|t| t.node).collect();
         assert_eq!(nodes.len(), 7, "one tile per node");
         assert!(f.total_area().mm2 > 0.0);
+        assert_eq!(f.tiles[0].kind, TileKind::Npu);
+        assert_eq!(f.tiles[4].kind, TileKind::Crossbar);
+        assert_eq!(f.tiles[6].kind, TileKind::Cpu);
     }
 
     #[test]

@@ -57,11 +57,55 @@ pub struct TileCost {
     pub noc_bytes: u64,
 }
 
+/// The config-level accelerator kind a tile was built from. Distinct
+/// from `accel.name()` (the *device model* name): `"crossbar"` and
+/// `"pim_dram"` both instantiate [`crate::accel::CrossbarNvm`], but a
+/// PIM tile sits in the DRAM die and prices differently
+/// ([`super::KindCost`]). Fault plans key on device names, not on this
+/// enum, so adding kinds never perturbs existing fault timelines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TileKind {
+    Npu,
+    Crossbar,
+    Photonic,
+    Neuromorphic,
+    PimDram,
+    Cpu,
+}
+
+impl TileKind {
+    /// Parse a `[[cu]] kind` config string (the `CU_KINDS` vocabulary).
+    pub fn from_config_str(s: &str) -> Option<Self> {
+        Some(match s {
+            "npu" => TileKind::Npu,
+            "crossbar" => TileKind::Crossbar,
+            "photonic" => TileKind::Photonic,
+            "neuromorphic" => TileKind::Neuromorphic,
+            "pim_dram" => TileKind::PimDram,
+            "cpu" => TileKind::Cpu,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TileKind::Npu => "npu",
+            TileKind::Crossbar => "crossbar",
+            TileKind::Photonic => "photonic",
+            TileKind::Neuromorphic => "neuromorphic",
+            TileKind::PimDram => "pim_dram",
+            TileKind::Cpu => "cpu",
+        }
+    }
+}
+
 /// One placed Compute Unit.
 pub struct Tile {
     pub id: usize,
     pub node: NodeId,
     pub accel: Box<dyn Accelerator>,
+    /// Config kind the tile was instantiated from (pricing dimension).
+    pub kind: TileKind,
     pub template: Template,
     pub tcdm_bytes: usize,
     pub cluster: Option<PulpCluster>,
@@ -75,6 +119,7 @@ impl Tile {
         id: usize,
         node: NodeId,
         accel: Box<dyn Accelerator>,
+        kind: TileKind,
         template: Template,
         tcdm_bytes: usize,
         cluster_cores: usize,
@@ -83,7 +128,17 @@ impl Tile {
             Template::C => Some(PulpCluster::new(cluster_cores)),
             _ => None,
         };
-        Tile { id, node, accel, template, tcdm_bytes, cluster, dma: Dma::default(), fabric_ghz: 1.0 }
+        Tile {
+            id,
+            node,
+            accel,
+            kind,
+            template,
+            tcdm_bytes,
+            cluster,
+            dma: Dma::default(),
+            fabric_ghz: 1.0,
+        }
     }
 
     /// Does this tile's accelerator run precision `p`?
@@ -183,7 +238,24 @@ mod tests {
     use crate::accel::DigitalNpu;
 
     fn tile(template: Template) -> Tile {
-        Tile::new(0, 1, Box::new(DigitalNpu::default()), template, 256 * 1024, 8)
+        Tile::new(
+            0,
+            1,
+            Box::new(DigitalNpu::default()),
+            TileKind::Npu,
+            template,
+            256 * 1024,
+            8,
+        )
+    }
+
+    #[test]
+    fn kind_round_trips_the_config_vocabulary() {
+        for s in ["npu", "crossbar", "photonic", "neuromorphic", "pim_dram", "cpu"] {
+            let k = TileKind::from_config_str(s).unwrap();
+            assert_eq!(k.as_str(), s);
+        }
+        assert!(TileKind::from_config_str("tpu").is_none());
     }
 
     fn mm() -> Compute {

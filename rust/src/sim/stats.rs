@@ -20,7 +20,14 @@ use super::Cycle;
 const DENSE_LIMIT: usize = 1 << 12;
 
 /// Exact streaming histogram of `u64` samples.
-#[derive(Debug, Clone, Default)]
+///
+/// Derived equality is multiset equality: the dense front's length is
+/// `next_power_of_two` of the largest dense value ever recorded (resize
+/// on record and on merge use the same rule), so two histograms built
+/// from the same samples in any record/merge order compare equal — which
+/// lets report types embedding a histogram keep bitwise `==` replay
+/// semantics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StreamingHist {
     /// counts[v] = occurrences of value v, for v < DENSE_LIMIT. Grown
     /// lazily in powers of two up to the limit.

@@ -7,8 +7,9 @@
 //!   `cosim_ref_with` and a `CosimSession` all reproduce the
 //!   pre-cost-layer reports bit for bit across the full
 //!   mlp/vit × RoundRobin/Greedy/Ilp × edge16/homogeneous matrix.
-//! * **Cross-engine fixed-point agreement** — under congestion/DVFS
-//!   models, the event engine's single self-consistent pass, the
+//! * **Cross-engine fixed-point agreement** — under the congestion/DVFS
+//!   and kind-aware models, the event engine's single self-consistent
+//!   pass, the
 //!   iterated (Jacobi) list scheduler and the admission session's
 //!   horizon-invalidation + settle loop reach the *same* unique fixed
 //!   point, bit for bit.
@@ -27,8 +28,10 @@ use archytas::compiler::{FabricProgram, Step};
 use archytas::coordinator::{
     cosim, cosim_ref, cosim_ref_with, cosim_with, AdmitMeta, AdmitPolicy, CosimSession, ExecReport,
 };
+use std::sync::Arc;
+
 use archytas::fabric::{
-    CongestionKnobs, CostModel, DvfsKnobs, Fabric, InvariantCost, VaryingCost,
+    CongestionKnobs, CostModel, DvfsKnobs, Fabric, InvariantCost, KindCost, KindKnobs, VaryingCost,
 };
 use archytas::sim::{Cycle, Rng};
 use archytas::testutil::{bundled_fabric, prop};
@@ -63,9 +66,13 @@ fn lowered(fabric: &Fabric, wname: &str, strategy: MapStrategy) -> FabricProgram
     lower(&g, fabric, &m).unwrap()
 }
 
-/// The three time-varying model shapes, on a deliberately short epoch so
-/// the small test workloads cross many epoch boundaries.
-fn varying_models() -> Vec<(&'static str, VaryingCost)> {
+/// The time-varying model shapes, on a deliberately short epoch so the
+/// small test workloads cross many epoch boundaries. The kind-aware
+/// model joins the sweep with default knobs: its occupancy feedback
+/// (photonic warm-up, crossbar wear, PIM contention) obeys the same
+/// strictly-earlier-epoch contract, so every engine/incremental golden
+/// below must hold for it verbatim.
+fn varying_models() -> Vec<(&'static str, Arc<dyn CostModel>)> {
     let cong = CongestionKnobs { alpha: 0.5, cap: 4.0 };
     let dvfs = DvfsKnobs {
         window: 3,
@@ -75,9 +82,10 @@ fn varying_models() -> Vec<(&'static str, VaryingCost)> {
         hot_scale: 0.5,
     };
     vec![
-        ("congestion", VaryingCost::congestion(256, cong)),
-        ("dvfs", VaryingCost::dvfs(256, dvfs)),
-        ("congestion_dvfs", VaryingCost::congestion_dvfs(256, cong, dvfs)),
+        ("congestion", Arc::new(VaryingCost::congestion(256, cong))),
+        ("dvfs", Arc::new(VaryingCost::dvfs(256, dvfs))),
+        ("congestion_dvfs", Arc::new(VaryingCost::congestion_dvfs(256, cong, dvfs))),
+        ("kind", Arc::new(KindCost::new(256, KindKnobs::default()))),
     ]
 }
 
@@ -147,10 +155,10 @@ fn varying_models_agree_across_engines_at_t0() {
             let prog = lowered(&fabric, wname, strategy);
             for (mname, model) in varying_models() {
                 let tag = format!("{cfg}/{wname}/{mname}");
-                let ev = cosim_with(&fabric, &prog, &model).unwrap();
-                let re = cosim_ref_with(&fabric, &prog, &model).unwrap();
+                let ev = cosim_with(&fabric, &prog, model.as_ref()).unwrap();
+                let re = cosim_ref_with(&fabric, &prog, model.as_ref()).unwrap();
                 assert_identical(&ev, &re, &format!("{tag}: event vs iterated-list"));
-                let mut s = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+                let mut s = CosimSession::with_model(&fabric, model.clone());
                 s.admit_at(&prog, 0).unwrap();
                 let se = s.report().unwrap();
                 assert_identical(&se, &ev, &format!("{tag}: session vs event"));
@@ -300,7 +308,7 @@ fn prop_varying_incremental_matches_from_scratch() {
     let nt = fabric.tile_count();
     for (mname, model) in varying_models() {
         prop::check(15, |rng| {
-            let mut inc = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+            let mut inc = CosimSession::with_model(&fabric, model.clone());
             let mut current: Vec<(FabricProgram, Cycle)> = Vec::new();
             let mut handles = Vec::new();
             for _ in 0..rng.below(6) + 1 {
@@ -323,7 +331,7 @@ fn prop_varying_incremental_matches_from_scratch() {
                 }
             }
             let got = inc.report().map_err(|e| e.to_string())?;
-            let mut fresh = CosimSession::with_model(&fabric, std::sync::Arc::new(model));
+            let mut fresh = CosimSession::with_model(&fabric, model.clone());
             for (p, at) in &current {
                 fresh.admit_at(p, *at).map_err(|e| e.to_string())?;
             }

@@ -1,0 +1,317 @@
+//! Differential golden tests for the kind-aware cost model
+//! (`[fabric.cost] model = "kind"`, `fabric::cost::KindCost`) and the
+//! mapper's cost-model seam (`map_graph_with`).
+//!
+//! Contracts pinned here:
+//!
+//! * **Kind-blind bit-parity** — on every bundled config, the default
+//!   `map_graph` (which now estimates through the fabric's configured
+//!   cost model) reproduces the invariant-model mapping bit for bit:
+//!   congestion/DVFS factors are exactly 1.0 at `start = 0` with a
+//!   disabled occupancy, so threading the model through the mapper moves
+//!   no bits until a model actually prices kinds differently. Sessions
+//!   keep sharing the fabric's `Arc` (pointer identity, not a clone).
+//! * **Kind-aware placements move** — on the mixed post-CMOS config the
+//!   kind model's cold-photonic warm-up and crossbar conversion taxes
+//!   change at least one golden workload's placement vs the invariant
+//!   estimate, and the pricing actually bites end to end (cold photonic
+//!   execs pay warm-up cycles + laser tuning energy).
+//! * **Cross-engine fixed-point agreement** — the event engine, the
+//!   iterated list scheduler and the admission session agree bit for bit
+//!   under the kind model on the mixed fabric at t = 0.
+//! * **Incremental ≡ from-scratch** — random admit/drain interleavings
+//!   on the mixed fabric under `threads ∈ {1, 2, 4, 8}` bit-match a
+//!   from-scratch session: the kind model's occupancy feedback obeys the
+//!   strictly-earlier-epoch contract, so the horizon-invalidation rule
+//!   stays exact and the shard-parallel drains deterministic.
+//! * **TOML plumbing** — `configs/hetero_mixed.toml` builds the kind
+//!   model, `cosim` prices through it implicitly, and the shared knobs
+//!   (`window_epochs`/`warm_frac`/`alpha`/`cap`) round-trip against an
+//!   explicitly constructed model.
+
+use std::sync::Arc;
+
+use archytas::accel::Precision;
+use archytas::compiler::lowering::lower;
+use archytas::compiler::mapper::{map_graph, map_graph_with, MapStrategy};
+use archytas::compiler::FabricProgram;
+use archytas::coordinator::{cosim, cosim_ref_with, cosim_with, CosimSession, ExecReport};
+use archytas::fabric::{CostModel, Fabric, InvariantCost, KindCost, KindKnobs, TileKind};
+use archytas::metrics::Category;
+use archytas::sim::Cycle;
+use archytas::testutil::{bundled_fabric, prop};
+use archytas::workloads;
+
+const STRATEGIES: [MapStrategy; 3] =
+    [MapStrategy::RoundRobin, MapStrategy::Greedy, MapStrategy::Ilp];
+
+fn workload(name: &str) -> archytas::ir::Graph {
+    match name {
+        "mlp" => workloads::mlp(4, 64, &[32], 10, 7).unwrap(),
+        "vit" => {
+            let p = workloads::VitParams {
+                batch: 2,
+                tokens: 8,
+                dim: 32,
+                depth: 1,
+                mlp_ratio: 2,
+                patch_dim: 16,
+                classes: 10,
+            };
+            workloads::vit(&p, 3).unwrap()
+        }
+        other => panic!("unknown workload {other}"),
+    }
+}
+
+/// The mixed config's model with its TOML knobs, built explicitly.
+fn mixed_model() -> KindCost {
+    KindCost::new(
+        512,
+        KindKnobs {
+            photonic_window: 4,
+            photonic_warm_frac: 0.25,
+            pim_contention_alpha: 0.25,
+            pim_contention_cap: 4.0,
+            ..KindKnobs::default()
+        },
+    )
+}
+
+fn assert_identical(a: &ExecReport, b: &ExecReport, tag: &str) {
+    assert_eq!(a.cycles, b.cycles, "{tag}: makespan");
+    assert_eq!(a.step_done, b.step_done, "{tag}: step_done");
+    assert_eq!(
+        a.metrics.total_energy_pj().to_bits(),
+        b.metrics.total_energy_pj().to_bits(),
+        "{tag}: energy bits"
+    );
+    assert!(a.bit_identical(b), "{tag}: bit_identical contract");
+}
+
+/// (a) Kind-blind bit-parity: on every bundled config — including the
+/// loaded one whose default model is congestion+DVFS — the default
+/// `map_graph` equals `map_graph_with(InvariantCost)` bit for bit, so
+/// the mapper seam alone reproduces the pre-seam placements. Sessions
+/// keep sharing the fabric's model `Arc` rather than cloning it.
+#[test]
+fn kind_blind_mapping_is_bit_identical_across_configs() {
+    for cfg in ["edge16.toml", "edge16_loaded.toml", "homogeneous_npu.toml"] {
+        let fabric = bundled_fabric(cfg);
+        for wname in ["mlp", "vit"] {
+            let g = workload(wname);
+            for strategy in STRATEGIES {
+                for prefer in [Precision::Int8, Precision::Analog] {
+                    let tag = format!("{cfg}/{wname}/{strategy:?}/{prefer:?}");
+                    let dflt = map_graph(&g, &fabric, strategy, prefer).unwrap();
+                    let inv =
+                        map_graph_with(&g, &fabric, strategy, prefer, &InvariantCost).unwrap();
+                    assert_eq!(dflt.assign, inv.assign, "{tag}: assign");
+                    assert_eq!(dflt.precision, inv.precision, "{tag}: precision");
+                    assert_eq!(dflt.est_cycles, inv.est_cycles, "{tag}: est_cycles");
+                    assert_eq!(
+                        dflt.est_energy_pj.to_bits(),
+                        inv.est_energy_pj.to_bits(),
+                        "{tag}: est_energy bits"
+                    );
+                }
+            }
+        }
+        let fabric = bundled_fabric(cfg);
+        let s = CosimSession::new(&fabric);
+        assert!(
+            Arc::ptr_eq(s.cost_model(), fabric.cost_model()),
+            "{cfg}: session must share the fabric's model Arc"
+        );
+    }
+}
+
+/// (b) Kind-aware placements move: pricing the cold-photonic warm-up and
+/// crossbar conversion taxes through the mapper changes at least one
+/// golden workload's placement on the mixed config — the ROADMAP's
+/// "mapper can prefer a warmed-up tile" seam, pinned.
+#[test]
+fn kind_aware_mapping_moves_placements_on_the_mixed_config() {
+    let fabric = bundled_fabric("hetero_mixed.toml");
+    let model = mixed_model();
+    let mut moved = Vec::new();
+    for wname in ["mlp", "vit"] {
+        let g = workload(wname);
+        for strategy in [MapStrategy::Greedy, MapStrategy::Ilp] {
+            let kind = map_graph_with(&g, &fabric, strategy, Precision::Analog, &model).unwrap();
+            let inv =
+                map_graph_with(&g, &fabric, strategy, Precision::Analog, &InvariantCost).unwrap();
+            if kind.assign != inv.assign {
+                moved.push(format!("{wname}/{strategy:?}"));
+            }
+            // Cold photonic tiles pay 2k cycles per exec under the kind
+            // estimate: a mapping that still uses them must never price
+            // below the invariant estimate of the *same* assignment.
+            let photonic_execs = kind
+                .assign
+                .iter()
+                .flatten()
+                .filter(|&&t| fabric.tiles[t].kind == TileKind::Photonic)
+                .count();
+            let inv_photonic = inv
+                .assign
+                .iter()
+                .flatten()
+                .filter(|&&t| fabric.tiles[t].kind == TileKind::Photonic)
+                .count();
+            assert!(
+                photonic_execs <= inv_photonic,
+                "{wname}/{strategy:?}: kind-aware mapping placed more execs on cold \
+                 photonic tiles ({photonic_execs}) than the blind one ({inv_photonic})"
+            );
+        }
+    }
+    assert!(
+        !moved.is_empty(),
+        "kind-aware pricing moved no placement on any golden workload"
+    );
+}
+
+/// The pricing bites end to end: a program mapped onto the mixed fabric
+/// at Analog preference prices strictly higher in cycles under the kind
+/// model than under the invariant floor (cold photonic warm-up, crossbar
+/// conversion latency), and the warm-up's laser tuning energy lands in
+/// the `Laser` category.
+#[test]
+fn kind_pricing_bites_on_the_mixed_config() {
+    let fabric = bundled_fabric("hetero_mixed.toml");
+    let g = workload("vit");
+    let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Analog).unwrap();
+    let prog = lower(&g, &fabric, &m).unwrap();
+    let kind = cosim(&fabric, &prog).unwrap();
+    let floor = cosim_with(&fabric, &prog, &InvariantCost).unwrap();
+    assert!(kind.cycles >= floor.cycles, "kind pricing can never beat the invariant floor");
+    let uses_photonic = m
+        .assign
+        .iter()
+        .flatten()
+        .any(|&t| fabric.tiles[t].kind == TileKind::Photonic);
+    if uses_photonic {
+        assert!(
+            kind.metrics.energy(Category::Laser) > floor.metrics.energy(Category::Laser),
+            "cold photonic execs must burn thermal-tuning laser energy"
+        );
+    }
+    // Ops and bytes are schedule-invariant: the kind model moves time
+    // and energy, never the work.
+    assert_eq!(kind.metrics.ops, floor.metrics.ops);
+    assert_eq!(kind.metrics.bytes_moved, floor.metrics.bytes_moved);
+}
+
+/// (c) Cross-engine fixed-point agreement at t = 0 on the mixed fabric:
+/// the event engine's single self-consistent pass, the iterated list
+/// scheduler and the admission session must land on identical bits under
+/// the kind model — its occupancy reads are strictly earlier-epoch, so
+/// the fixed point is unique.
+#[test]
+fn kind_model_agrees_across_engines_on_the_mixed_config() {
+    let fabric = bundled_fabric("hetero_mixed.toml");
+    assert_eq!(fabric.cost_model().name(), "kind");
+    for (wname, strategy) in [("mlp", MapStrategy::Greedy), ("vit", MapStrategy::RoundRobin)] {
+        let tag = format!("hetero_mixed/{wname}");
+        let g = workload(wname);
+        let m = map_graph(&g, &fabric, strategy, Precision::Analog).unwrap();
+        let prog = lower(&g, &fabric, &m).unwrap();
+        let ev = cosim(&fabric, &prog).unwrap();
+        let re = cosim_ref_with(&fabric, &prog, fabric.cost_model().as_ref()).unwrap();
+        assert_identical(&ev, &re, &format!("{tag}: event vs iterated-list"));
+        let mut s = CosimSession::new(&fabric);
+        s.admit_at(&prog, 0).unwrap();
+        assert_identical(&s.report().unwrap(), &ev, &format!("{tag}: session vs event"));
+    }
+}
+
+/// (d) Incremental ≡ from-scratch on the mixed fabric under the kind
+/// model, across the session thread sweep: random interleavings of
+/// admissions (at random times) and partial drains must bit-match a
+/// from-scratch session with the same final programs — at every
+/// `threads ∈ {1, 2, 4, 8}`.
+#[test]
+fn kind_incremental_matches_from_scratch_across_threads() {
+    let fabric = bundled_fabric("hetero_mixed.toml");
+    // A small pool of lowered programs to admit repeatedly.
+    let progs: Vec<FabricProgram> = [
+        ("mlp", MapStrategy::Greedy),
+        ("vit", MapStrategy::RoundRobin),
+        ("mlp", MapStrategy::RoundRobin),
+    ]
+    .into_iter()
+    .map(|(wname, strategy)| {
+        let g = workload(wname);
+        let m = map_graph(&g, &fabric, strategy, Precision::Analog).unwrap();
+        lower(&g, &fabric, &m).unwrap()
+    })
+    .collect();
+    for threads in [1usize, 2, 4, 8] {
+        prop::check(6, |rng| {
+            let mut inc = CosimSession::new(&fabric);
+            inc.set_threads(threads);
+            let mut current: Vec<(usize, Cycle)> = Vec::new();
+            for _ in 0..rng.below(4) + 1 {
+                let roll = rng.below(10);
+                if roll < 6 || current.is_empty() {
+                    let pi = rng.below(progs.len());
+                    let at = rng.below(20_000) as Cycle;
+                    inc.admit_at(&progs[pi], at).map_err(|e| e.to_string())?;
+                    current.push((pi, at));
+                } else if roll < 8 {
+                    inc.run_to_drain().map_err(|e| e.to_string())?;
+                } else {
+                    inc.run_until(rng.below(30_000) as Cycle).map_err(|e| e.to_string())?;
+                }
+            }
+            let got = inc.report().map_err(|e| e.to_string())?;
+            let mut fresh = CosimSession::new(&fabric);
+            fresh.set_threads(threads);
+            for &(pi, at) in &current {
+                fresh.admit_at(&progs[pi], at).map_err(|e| e.to_string())?;
+            }
+            let want = fresh.report().map_err(|e| e.to_string())?;
+            if !got.bit_identical(&want) {
+                return Err(format!(
+                    "threads={threads}: incremental diverged: cycles {} vs {}",
+                    got.cycles, want.cycles
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+/// (e) TOML plumbing: `hetero_mixed.toml` builds the kind model, `cosim`
+/// prices through it implicitly, and the shared `[fabric.cost]` knobs
+/// round-trip (an explicit model with the same knobs reproduces the
+/// bits).
+#[test]
+fn mixed_config_knobs_round_trip() {
+    let fabric = bundled_fabric("hetero_mixed.toml");
+    assert_eq!(fabric.cost_model().name(), "kind");
+    let g = workload("mlp");
+    let m = map_graph(&g, &fabric, MapStrategy::Greedy, Precision::Analog).unwrap();
+    let prog = lower(&g, &fabric, &m).unwrap();
+    let implicit = cosim(&fabric, &prog).unwrap();
+    assert_identical(
+        &cosim_with(&fabric, &prog, &mixed_model()).unwrap(),
+        &implicit,
+        "hetero_mixed: TOML knobs vs explicit model",
+    );
+    // The tile kinds the config declares survive the build, in group
+    // order: 4 npu, 2 crossbar, 2 photonic, 2 neuromorphic, 2 pim_dram,
+    // 2 cpu.
+    let kinds: Vec<TileKind> = fabric.tiles.iter().map(|t| t.kind).collect();
+    let want = [
+        vec![TileKind::Npu; 4],
+        vec![TileKind::Crossbar; 2],
+        vec![TileKind::Photonic; 2],
+        vec![TileKind::Neuromorphic; 2],
+        vec![TileKind::PimDram; 2],
+        vec![TileKind::Cpu; 2],
+    ]
+    .concat();
+    assert_eq!(kinds, want, "hetero_mixed tile-kind layout");
+}
