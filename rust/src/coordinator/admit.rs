@@ -352,6 +352,14 @@ struct ResQueue {
     free: Cycle,
     /// A started-but-uncompleted step occupies the resource.
     busy: bool,
+    /// Historical pricing mass: cycles of step duration priced on this
+    /// resource over the session's lifetime (monotone — invalidated
+    /// steps keep their contribution; re-prices add again). Purely a
+    /// load *heuristic* feeding [`CosimSession::refresh_shard_bounds`]'s
+    /// load-aware fences; never read by the simulation itself, so its
+    /// drift across code paths cannot perturb results (any fence
+    /// partition is bit-identical by the shard contract).
+    load: u64,
 }
 
 /// One staged wake of the parallel drain's bookkeeping phase: resource
@@ -451,6 +459,8 @@ pub struct CosimSession<'f> {
     shard_override: Option<Vec<usize>>,
     /// Effective shard bounds of the current parallel drain (reused).
     shard_bounds: Vec<usize>,
+    /// Reusable per-resource weight scratch for the load-aware fences.
+    load_scratch: Vec<u64>,
     /// Persistent workers (shards − 1; shard 0 runs on the caller),
     /// spawned lazily on the first multi-shard drain.
     pool: Option<WorkerPool>,
@@ -523,7 +533,9 @@ fn price_shard(
         let (p, i) = id_map[f.id];
         match price(model, fabric, &progs[p as usize].steps[i as usize], f.start, occ) {
             Ok((cost, dur)) => {
-                queues[f.res as usize - r0].free = f.start + dur;
+                let q = &mut queues[f.res as usize - r0];
+                q.free = f.start + dur;
+                q.load = q.load.saturating_add(dur);
                 scr.out.push((cost, dur));
             }
             Err(e) => {
@@ -569,6 +581,7 @@ impl<'f> CosimSession<'f> {
             threads: fabric.cfg.session.threads.max(1),
             shard_override: None,
             shard_bounds: Vec::new(),
+            load_scratch: Vec::new(),
             pool: None,
             fires: Vec::new(),
             price_scratch: Vec::new(),
@@ -656,6 +669,69 @@ impl<'f> CosimSession<'f> {
             "admission policy must be set before the first admission"
         );
         self.policy = policy;
+        Ok(())
+    }
+
+    /// Swap the session's cost model **in place**, invalidating and
+    /// repricing every admitted step under the new model — the
+    /// incremental-DSE primitive (`dse::sweep`): the fabric, the
+    /// resource queues, the admitted programs and their dependency
+    /// structure all survive, so stepping a sweep's model axis costs one
+    /// full reprice instead of rebuild-world (fabric build + mapping +
+    /// lowering + re-admission).
+    ///
+    /// Semantics: afterwards the session is observationally identical —
+    /// bit for bit, spans and reports — to a fresh
+    /// [`CosimSession::with_model`] over the new model with the same
+    /// programs admitted at the same times (pinned by the in-module
+    /// equivalence tests and `tests/dse_golden.rs`). This holds across
+    /// time-dependence changes in either direction: occupancy aggregates
+    /// and the start-ordered index are rebuilt for the new model's
+    /// epoch, and the settle fixed point is re-seeded from the earliest
+    /// admission.
+    ///
+    /// Rejected after [`CosimSession::prune_completed_before`]: pruned
+    /// programs froze history priced under the old model that can no
+    /// longer be repriced.
+    pub fn set_model(&mut self, model: Arc<dyn CostModel>) -> Result<()> {
+        ensure!(
+            self.admit_floor == 0 && self.progs.iter().all(|p| !p.pruned),
+            "set_model on a pruned session: frozen history cannot be repriced"
+        );
+        // Invalidate the whole world under the OLD model/occupancy (the
+        // closure retracts calendar events, occupancy spans and
+        // start-index entries priced under it).
+        let seeds: Vec<usize> =
+            self.progs.iter().flat_map(|p| p.base..p.base + p.steps.len()).collect();
+        let mut affected = Vec::new();
+        if !seeds.is_empty() {
+            self.invalidate_closure(seeds, &mut affected);
+        }
+        // Swap the pricing world: model, epoch, fresh occupancy.
+        self.epoch = model.time_dependence().epoch();
+        self.occ = match self.epoch {
+            Some(w) => Occupancy::new(w),
+            None => Occupancy::disabled(),
+        };
+        self.model = model;
+        self.start_index.clear();
+        debug_assert!(self.cal.is_empty(), "full invalidation left calendar events");
+        // Settle horizon for the new model: everything is dirty from the
+        // earliest admission (time-varying models only; the settle loop
+        // converges to the unique fixed point from any floor <= it).
+        self.dirty_from = if self.epoch.is_some() {
+            self.progs.iter().filter(|p| !p.steps.is_empty()).map(|p| p.admit_at).min()
+        } else {
+            None
+        };
+        // Restart execution exactly as a fresh install would: re-derive
+        // the affected resources' queue state, then wake their heads
+        // (priced under the NEW model).
+        affected.sort_unstable();
+        self.rebuild_resource_state(&affected);
+        for r in affected {
+            self.wake_head(r)?;
+        }
         Ok(())
     }
 
@@ -1408,6 +1484,7 @@ impl<'f> CosimSession<'f> {
         rq.free = start + dur;
         rq.busy = true;
         rq.cursor += 1;
+        rq.load = rq.load.saturating_add(dur);
         self.cal.push(start + dur, id);
         Ok(())
     }
@@ -1473,8 +1550,16 @@ impl<'f> CosimSession<'f> {
 
     /// Effective shard fences for this drain: the explicit override
     /// (its last fence raised to cover link resources that materialized
-    /// after [`CosimSession::set_shards`]) or an equal split of the
-    /// resource range over `min(threads, resources)` shards.
+    /// after [`CosimSession::set_shards`]), or a *load-aware* split of
+    /// the resource range over `min(threads, resources)` shards (ROADMAP
+    /// follow-up (l)): fences cut by the historical pricing mass each
+    /// resource accumulated ([`ResQueue::load`], via
+    /// [`crate::sim::pool::load_fences`]), so a hot HBM or link queue no
+    /// longer serializes a shard. A cold session (all-zero history)
+    /// reproduces the old uniform count split exactly, and fence
+    /// placement never affects results — every valid partition is
+    /// bit-identical by the shard contract (pinned by the
+    /// partition-invariance property tests).
     fn refresh_shard_bounds(&mut self) {
         self.shard_bounds.clear();
         if let Some(b) = &self.shard_override {
@@ -1483,9 +1568,29 @@ impl<'f> CosimSession<'f> {
         } else {
             let n = self.res.len();
             let shards = self.threads.min(n).max(1);
-            self.shard_bounds.extend((0..=shards).map(|s| n * s / shards));
+            if shards <= 1 {
+                self.shard_bounds.extend([0, n]);
+            } else {
+                self.load_scratch.clear();
+                self.load_scratch.extend(self.res.iter().map(|r| r.load));
+                self.shard_bounds
+                    .extend(crate::sim::pool::load_fences(&self.load_scratch, shards));
+            }
         }
         debug_assert!(self.shard_bounds.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    /// Test probe: the fences the next parallel drain would use.
+    #[cfg(test)]
+    fn current_fences_for_test(&mut self) -> Vec<usize> {
+        self.refresh_shard_bounds();
+        self.shard_bounds.clone()
+    }
+
+    /// Test probe: per-resource accumulated pricing mass.
+    #[cfg(test)]
+    fn resource_loads_for_test(&self) -> Vec<u64> {
+        self.res.iter().map(|r| r.load).collect()
     }
 
     /// Bookkeeping-phase twin of [`CosimSession::wake_head`]: evaluate
@@ -3281,5 +3386,141 @@ mod tests {
             }
             Ok(())
         });
+    }
+    /// The `dse::sweep` primitive: swapping the cost model in place must
+    /// be observationally identical to a fresh session under the new
+    /// model with the same admissions — bit for bit, across
+    /// time-dependence changes in both directions and repeated swaps.
+    #[test]
+    fn set_model_matches_fresh_session_bitwise() {
+        use crate::fabric::{CongestionKnobs, DvfsKnobs, InvariantCost, VaryingCost};
+        let f = fabric();
+        let cong = CongestionKnobs { alpha: 0.5, cap: 4.0 };
+        let dvfs = DvfsKnobs {
+            window: 3,
+            warm_frac: 0.4,
+            hot_frac: 0.8,
+            warm_scale: 0.75,
+            hot_scale: 0.5,
+        };
+        let invariant = || -> Arc<dyn CostModel> { Arc::new(InvariantCost) };
+        let varying = || -> Arc<dyn CostModel> {
+            Arc::new(VaryingCost::congestion_dvfs(256, cong, dvfs))
+        };
+        let progs: Vec<_> = (0..3).map(|k| program(&f, 70 + k)).collect();
+        let admit_all = |s: &mut CosimSession| {
+            for (k, p) in progs.iter().enumerate() {
+                s.admit_at(p, 300 * k as Cycle).unwrap();
+            }
+        };
+        // Invariant -> varying -> invariant: each hop checked against a
+        // from-scratch oracle under the then-current model.
+        let mut s = CosimSession::with_model(&f, invariant());
+        admit_all(&mut s);
+        s.run_to_drain().unwrap();
+        for (hop, model) in
+            [(1, varying()), (2, invariant()), (3, varying())]
+        {
+            s.set_model(model.clone()).unwrap();
+            let got = s.report().unwrap();
+            let mut fresh = CosimSession::with_model(&f, model);
+            admit_all(&mut fresh);
+            let want = fresh.report().unwrap();
+            assert!(got.bit_identical(&want), "hop {hop} diverged from fresh session");
+        }
+    }
+
+    /// `set_model` on a partially drained session (events in flight),
+    /// followed by further admissions, still converges to the fresh
+    /// oracle — the swap must cancel in-flight completions cleanly.
+    #[test]
+    fn set_model_mid_flight_then_admit_matches_fresh() {
+        use crate::fabric::{CongestionKnobs, DvfsKnobs, VaryingCost};
+        let f = fabric();
+        let cong = CongestionKnobs { alpha: 0.5, cap: 4.0 };
+        let dvfs = DvfsKnobs {
+            window: 3,
+            warm_frac: 0.4,
+            hot_frac: 0.8,
+            warm_scale: 0.75,
+            hot_scale: 0.5,
+        };
+        let varying: Arc<dyn CostModel> =
+            Arc::new(VaryingCost::congestion_dvfs(256, cong, dvfs));
+        let p1 = program(&f, 80);
+        let p2 = program(&f, 81);
+        let full = {
+            let mut s2 = CosimSession::new(&f);
+            s2.admit_at(&p1, 0).unwrap();
+            s2.report().unwrap().cycles
+        };
+        let mut s = CosimSession::new(&f);
+        s.admit_at(&p1, 0).unwrap();
+        s.run_until(full / 2).unwrap();
+        assert!(!s.is_quiescent(), "steps must still be in flight");
+        s.set_model(varying.clone()).unwrap();
+        s.admit_at(&p2, 400).unwrap();
+        let got = s.report().unwrap();
+        let mut fresh = CosimSession::with_model(&f, varying);
+        fresh.admit_at(&p1, 0).unwrap();
+        fresh.admit_at(&p2, 400).unwrap();
+        let want = fresh.report().unwrap();
+        assert!(got.bit_identical(&want));
+    }
+
+    #[test]
+    fn set_model_rejected_after_prune() {
+        use crate::fabric::InvariantCost;
+        let f = fabric();
+        let mut s = CosimSession::new(&f);
+        s.admit_at(&program(&f, 82), 0).unwrap();
+        let end = s.report().unwrap().cycles;
+        s.admit_at(&program(&f, 83), end + 1000).unwrap();
+        s.run_to_drain().unwrap();
+        assert!(s.prune_completed_before(end + 500).unwrap() > 0);
+        let err = s.set_model(Arc::new(InvariantCost)).unwrap_err().to_string();
+        assert!(err.contains("pruned"), "error must explain the rejection: {err}");
+    }
+
+    /// ROADMAP follow-up (l): after a drain the default fences follow
+    /// the accumulated pricing mass (hot resources get isolated) while
+    /// staying a valid partition — and, per the shard contract, the
+    /// parallel results stay bit-identical to sequential under them.
+    #[test]
+    fn load_aware_fences_partition_by_mass_and_preserve_results() {
+        let f = fabric();
+        let progs: Vec<_> = (0..4).map(|k| program(&f, 90 + k)).collect();
+        let run = |threads: usize| {
+            let mut s = CosimSession::new(&f);
+            s.set_threads(threads);
+            for (k, p) in progs.iter().enumerate() {
+                s.admit_at(p, 200 * k as Cycle).unwrap();
+            }
+            s.run_to_drain().unwrap();
+            let rep = s.report().unwrap();
+            (rep, s.current_fences_for_test())
+        };
+        let (want, _) = run(1);
+        for threads in [2, 4, 8] {
+            let (got, fences) = run(threads);
+            assert!(got.bit_identical(&want), "threads = {threads}");
+            let n = fences.last().copied().unwrap();
+            assert_eq!(fences[0], 0);
+            assert!(fences.windows(2).all(|w| w[0] < w[1]), "{fences:?}");
+            assert_eq!(fences.len() - 1, threads.min(n));
+        }
+        // Wiring check: after a full drain the default fences are exactly
+        // the load-aware partition of the accumulated per-resource mass
+        // (not the old uniform count split), and mass was accumulated.
+        let mut s = CosimSession::new(&f);
+        s.set_threads(4);
+        for (k, p) in progs.iter().enumerate() {
+            s.admit_at(p, 200 * k as Cycle).unwrap();
+        }
+        s.run_to_drain().unwrap();
+        let loads = s.resource_loads_for_test();
+        assert!(loads.iter().sum::<u64>() > 0, "a drained session must carry mass");
+        let fences = s.current_fences_for_test();
+        assert_eq!(fences, crate::sim::pool::load_fences(&loads, 4));
     }
 }

@@ -18,11 +18,25 @@
 //! global constraints only ever delay legality: an early wake simply
 //! retries `try_issue` and re-arms at the freshly computed ready time
 //! (early-wake-retry, per ROADMAP).
+//!
+//! # Shard contract (repo determinism contract, ROADMAP (k))
+//!
+//! The arbiter's bank scans follow the same shard discipline as the NoC
+//! stepper and the admission drains: [`DramSim::set_threads`] splits the
+//! banks into disjoint ranges (fenced by queue occupancy via
+//! [`crate::sim::load_fences`]), each shard scans its range **purely**
+//! against a snapshot of the global frame (`now`, `last_col`, the
+//! tRRD/tFAW floor) into a per-shard candidate buffer, and a sequential
+//! merge takes the minimum sequence number. Sub-command seqs are unique,
+//! so the merged winner equals the sequential scan's winner bit for bit
+//! at every thread count and every fence partition; all *effects*
+//! (issues, energy, queue pops) stay sequential in the caller. The
+//! optional command trace ([`DramSim::record_trace`]) pins exactly that.
 
 use std::collections::VecDeque;
 
 use crate::metrics::{Category, Metrics};
-use crate::sim::{Calendar, Cycle};
+use crate::sim::{load_fences, Calendar, Cycle, WorkerPool};
 
 use super::bank::{Bank, BankState};
 use super::pim::{PimCommand, PimConfig};
@@ -64,6 +78,95 @@ struct SubCmd {
     row: u64,
     write: bool,
     pim: Option<PimCommand>,
+}
+
+/// DRAM command class, for trace-equivalence tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmdKind {
+    Read,
+    Write,
+    Pim,
+    Act,
+    Pre,
+}
+
+/// One issued command ([`DramSim::record_trace`]): the shard-contract
+/// goldens compare full traces across thread counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCmd {
+    pub at: Cycle,
+    pub bank: usize,
+    pub kind: CmdKind,
+}
+
+/// Issue candidates from one bank-range scan — pure reads; the caller
+/// applies effects after the merge (see the module's shard contract).
+#[derive(Debug, Clone, Copy, Default)]
+struct ShardCand {
+    /// Oldest ready column/PIM command on an open row: (seq, bank, qi).
+    hit: Option<(u64, usize, usize)>,
+    /// Oldest front entry that could drive PRE/ACT: (seq, bank, is_act).
+    fcfs: Option<(u64, usize, bool)>,
+}
+
+/// Scan the disjoint bank range `[b0, b0 + banks.len())` for issue
+/// candidates. Every global input (`now`, `last_col`, `act_at`) is a
+/// caller snapshot, so shards share one frame and the min-seq merge of
+/// their results equals the sequential whole-array scan bit for bit.
+fn scan_shard(
+    banks: &[Bank],
+    queues: &[VecDeque<SubCmd>],
+    b0: usize,
+    t: &DramTiming,
+    now: Cycle,
+    last_col: Cycle,
+    act_at: Cycle,
+) -> ShardCand {
+    let mut out = ShardCand::default();
+    for (i, bank) in banks.iter().enumerate() {
+        let b = b0 + i;
+        let q = &queues[i];
+        // FR candidate: oldest hit in this bank's reorder window.
+        if let Some(open) = bank.open_row() {
+            if bank.col_ok_at(t) <= now {
+                for (qi, sc) in q.iter().take(FR_WINDOW).enumerate() {
+                    if sc.row != open {
+                        continue;
+                    }
+                    // Non-PIM bursts also need the data bus.
+                    if sc.pim.is_none() && now < last_col + t.t_burst {
+                        continue;
+                    }
+                    if out.hit.is_none_or(|(s, _, _)| sc.seq < s) {
+                        out.hit = Some((sc.seq, b, qi));
+                    }
+                    break; // oldest hit in this bank found
+                }
+            }
+        }
+        // FCFS candidate: the front entry drives PRE or ACT.
+        let Some(sc) = q.front() else { continue };
+        match bank.state {
+            BankState::Idle => {
+                if act_at <= now
+                    && bank.act_ok_at(t) <= now
+                    && out.fcfs.is_none_or(|(s, _, _)| sc.seq < s)
+                {
+                    out.fcfs = Some((sc.seq, b, true));
+                }
+            }
+            BankState::Active(open) if open != sc.row => {
+                if !q.iter().take(FR_WINDOW).any(|w| w.row == open)
+                    && bank.pre_ok_at(t) <= now
+                    && out.fcfs.is_none_or(|(s, _, _)| sc.seq < s)
+                {
+                    out.fcfs = Some((sc.seq, b, false));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
 }
 
 /// Aggregate results.
@@ -196,6 +299,11 @@ pub struct DramSim {
     lat_sum: f64,
     /// Reporting baseline for per-episode stats (see [`EpisodeMark`]).
     ep: EpisodeMark,
+    /// Bank-scan parallelism (1 = exact sequential hot path).
+    threads: usize,
+    pool: Option<WorkerPool>,
+    /// Issued-command recorder ([`DramSim::record_trace`]).
+    trace: Option<Vec<TraceCmd>>,
 }
 
 impl DramSim {
@@ -226,6 +334,36 @@ impl DramSim {
             done_count: 0,
             lat_sum: 0.0,
             ep: EpisodeMark::default(),
+            threads: 1,
+            pool: None,
+            trace: None,
+        }
+    }
+
+    /// Worker threads for the shard-parallel bank scans (1 = the exact
+    /// sequential hot path). Results and command traces are bit-identical
+    /// at every value — see the module's shard contract.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+        if self.threads == 1 {
+            self.pool = None;
+        }
+    }
+
+    /// Start recording every issued command (cleared on each call).
+    pub fn record_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Commands issued since [`DramSim::record_trace`] (empty when not
+    /// recording).
+    pub fn trace(&self) -> &[TraceCmd] {
+        self.trace.as_deref().unwrap_or(&[])
+    }
+
+    fn record(&mut self, bank: usize, kind: CmdKind) {
+        if let Some(tr) = &mut self.trace {
+            tr.push(TraceCmd { at: self.now, bank, kind });
         }
     }
 
@@ -294,92 +432,122 @@ impl DramSim {
         t0
     }
 
-    /// Whether any queued command in `bank`'s window wants `row`.
-    fn row_wanted(&self, bank: usize, row: u64) -> bool {
-        self.queues[bank].iter().take(FR_WINDOW).any(|sc| sc.row == row)
+    /// Run the two scan passes over the banks, sequentially or
+    /// shard-parallel per the module's shard contract.
+    fn scan_banks(&mut self, act_at: Cycle) -> ShardCand {
+        let n = self.banks.len();
+        let shards = self.threads.clamp(1, n);
+        if shards <= 1 {
+            return scan_shard(
+                &self.banks,
+                &self.queues,
+                0,
+                &self.t,
+                self.now,
+                self.last_col,
+                act_at,
+            );
+        }
+        // Load-aware fences over queue occupancy: empty banks cost
+        // nothing to scan, so mass follows the queued commands.
+        let weights: Vec<u64> = self.queues.iter().map(|q| q.len() as u64).collect();
+        let fences = load_fences(&weights, shards);
+        let mut out: Vec<ShardCand> = vec![ShardCand::default(); fences.len() - 1];
+        if self.pool.as_ref().is_none_or(|p| p.workers() != shards - 1) {
+            self.pool = Some(WorkerPool::new(shards - 1));
+        }
+        let mut pool = self.pool.take().expect("pool just ensured");
+        {
+            let (t, now, last_col) = (&self.t, self.now, self.last_col);
+            // Disjoint bank-range views, cut at the fences.
+            let mut bank_tail: &[Bank] = &self.banks;
+            let mut queue_tail: &[VecDeque<SubCmd>] = &self.queues;
+            let mut views = Vec::with_capacity(out.len());
+            for w in fences.windows(2) {
+                let (bs, br) = bank_tail.split_at(w[1] - w[0]);
+                let (qs, qr) = queue_tail.split_at(w[1] - w[0]);
+                bank_tail = br;
+                queue_tail = qr;
+                views.push((w[0], bs, qs));
+            }
+            pool.scoped(|scope| {
+                let mut it = views.into_iter().zip(out.iter_mut());
+                let head = it.next();
+                for ((b0, bs, qs), slot) in it {
+                    scope.execute(move || {
+                        *slot = scan_shard(bs, qs, b0, t, now, last_col, act_at);
+                    });
+                }
+                if let Some(((b0, bs, qs), slot)) = head {
+                    *slot = scan_shard(bs, qs, b0, t, now, last_col, act_at);
+                }
+            });
+        }
+        self.pool = Some(pool);
+        // Sequential merge in shard order; seqs are unique, so the
+        // min-seq winner is partition-independent.
+        let mut m = ShardCand::default();
+        for s in out {
+            if let Some(h) = s.hit {
+                if m.hit.is_none_or(|(x, _, _)| h.0 < x) {
+                    m.hit = Some(h);
+                }
+            }
+            if let Some(f) = s.fcfs {
+                if m.fcfs.is_none_or(|(x, _, _)| f.0 < x) {
+                    m.fcfs = Some(f);
+                }
+            }
+        }
+        m
     }
 
     /// Issue the best command at `now` if any; returns the issuing bank,
     /// or `None` if nothing was issuable this cycle (caller jumps time).
+    /// Pass 1 (FR): oldest ready column/PIM command on an open row,
+    /// searched within each bank's reorder window. Pass 2 (FCFS): oldest
+    /// front entry drives PRE or ACT. Both passes are pure scans (the
+    /// shard seam); all effects happen here, sequentially.
     fn try_issue(&mut self) -> Option<usize> {
-        // Pass 1 (FR): oldest ready column/PIM command on an open row,
-        // searched within each bank's reorder window.
-        let mut best: Option<(u64, usize, usize)> = None; // (seq, bank, qi)
-        for b in 0..self.banks.len() {
-            let Some(open) = self.banks[b].open_row() else { continue };
-            if self.banks[b].col_ok_at(&self.t) > self.now {
-                continue;
-            }
-            for (qi, sc) in self.queues[b].iter().take(FR_WINDOW).enumerate() {
-                if sc.row != open {
-                    continue;
-                }
-                // Non-PIM bursts also need the data bus.
-                if sc.pim.is_none() && self.now < self.last_col + self.t.t_burst {
-                    continue;
-                }
-                if best.map_or(true, |(s, _, _)| sc.seq < s) {
-                    best = Some((sc.seq, b, qi));
-                }
-                break; // oldest hit in this bank found
-            }
-        }
-        if let Some((_, b, qi)) = best {
+        let act_at = self.act_legal_at();
+        let cand = self.scan_banks(act_at);
+        if let Some((_, b, qi)) = cand.hit {
             let sc = self.queues[b].remove(qi).unwrap();
             self.queued -= 1;
             let done = if let Some(cmd) = sc.pim {
                 let dur = cmd.duration(&self.pim_cfg, &self.t);
                 self.energy.add_energy(Category::Dram, cmd.energy_pj(&self.pim_cfg));
                 self.pim_macs += cmd.macs();
+                self.record(b, CmdKind::Pim);
                 self.banks[b].issue_pim(self.now, dur, &self.t)
             } else if sc.write {
                 self.energy.add_energy(Category::Dram, self.t.e_wr_pj);
                 self.last_col = self.now;
                 self.bytes += self.t.burst_bytes as u64;
+                self.record(b, CmdKind::Write);
                 self.banks[b].issue_wr(self.now, &self.t)
             } else {
                 self.energy.add_energy(Category::Dram, self.t.e_rd_pj);
                 self.last_col = self.now;
                 self.bytes += self.t.burst_bytes as u64;
+                self.record(b, CmdKind::Read);
                 self.banks[b].issue_rd(self.now, &self.t)
             };
             self.complete(sc.req, done);
             return Some(b);
         }
-        // Pass 2 (FCFS): oldest front entry drives PRE or ACT.
-        let act_at = self.act_legal_at();
-        let mut cand: Option<(u64, usize, bool)> = None; // (seq, bank, is_act)
-        for b in 0..self.banks.len() {
-            let Some(sc) = self.queues[b].front() else { continue };
-            match self.banks[b].state {
-                BankState::Idle => {
-                    if act_at <= self.now && self.banks[b].act_ok_at(&self.t) <= self.now
-                        && cand.map_or(true, |(s, _, _)| sc.seq < s)
-                    {
-                        cand = Some((sc.seq, b, true));
-                    }
-                }
-                BankState::Active(open) if open != sc.row => {
-                    if !self.row_wanted(b, open)
-                        && self.banks[b].pre_ok_at(&self.t) <= self.now
-                        && cand.map_or(true, |(s, _, _)| sc.seq < s)
-                    {
-                        cand = Some((sc.seq, b, false));
-                    }
-                }
-                _ => {}
-            }
-        }
-        if let Some((_, b, is_act)) = cand {
+        if let Some((_, b, is_act)) = cand.fcfs {
             if is_act {
                 let row = self.queues[b].front().unwrap().row;
                 self.banks[b].issue_act(self.now, row, &self.t);
                 self.energy.add_energy(Category::Dram, self.t.e_act_pj);
                 self.recent_acts.push(self.now);
+                self.record(b, CmdKind::Act);
             } else {
                 self.banks[b].issue_pre(self.now, &self.t);
                 self.banks[b].row_misses += 1;
                 self.energy.add_energy(Category::Dram, self.t.e_pre_pj);
+                self.record(b, CmdKind::Pre);
             }
             return Some(b);
         }
@@ -834,6 +1002,59 @@ mod tests {
             (st.cycles, st.bytes, st.metrics.total_energy_pj().to_bits())
         };
         assert_eq!(run(), run());
+    }
+
+    /// Shard contract (ROADMAP (k)): bank scans over disjoint bank-range
+    /// views with a sequential min-seq merge — stats, completion times
+    /// and full command traces bit-identical at every thread count.
+    #[test]
+    fn shard_parallel_scan_is_bit_identical() {
+        let run = |threads: usize| {
+            let mut s = sim();
+            s.set_threads(threads);
+            s.record_trace();
+            let mut rng = crate::sim::Rng::new(9);
+            for _ in 0..300 {
+                let addr = (rng.below(1 << 22)) as u64 & !63;
+                if rng.chance(0.25) {
+                    s.enqueue(Request::write(addr, 64));
+                } else if rng.chance(0.1) {
+                    s.enqueue(Request::pim(addr, PimCommand::BankMac { macs: 64 }));
+                } else {
+                    s.enqueue(Request::read(addr, 128));
+                }
+            }
+            let st = s.run_to_drain();
+            (
+                st.cycles,
+                st.bytes,
+                st.metrics.total_energy_pj().to_bits(),
+                s.req_done.clone(),
+                s.trace().to_vec(),
+            )
+        };
+        let base = run(1);
+        assert!(!base.4.is_empty(), "trace recorder must capture commands");
+        assert!(base.4.iter().any(|c| c.kind == CmdKind::Pim));
+        for threads in [2, 3, 4, 8] {
+            assert_eq!(run(threads), base, "threads={threads}");
+        }
+    }
+
+    /// Oversized thread counts clamp to the bank count and stay exact.
+    #[test]
+    fn shard_threads_clamp_to_banks() {
+        let t = DramTiming::new(DramKind::Ddr4_2400);
+        let run = |threads: usize| {
+            let mut s = sim();
+            s.set_threads(threads);
+            for i in 0..64u64 {
+                s.enqueue(Request::read(i * 4096, 128));
+            }
+            let st = s.run_to_drain();
+            (st.cycles, st.metrics.total_energy_pj().to_bits())
+        };
+        assert_eq!(run(1), run(t.banks * 4));
     }
 
     #[test]

@@ -20,6 +20,6 @@ mod pim;
 mod timing;
 
 pub use bank::{Bank, BankState};
-pub use controller::{DramSim, DramStats, Request};
+pub use controller::{CmdKind, DramSim, DramStats, Request, TraceCmd};
 pub use pim::{PimCommand, PimConfig};
 pub use timing::{DramKind, DramTiming};

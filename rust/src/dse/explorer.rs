@@ -11,10 +11,19 @@
 //!    latency tightens the solver's constraint set ("deduce constraints
 //!    to guide the solver to the optimal solution more quickly").
 
+use std::collections::HashSet;
+
 use anyhow::ensure;
 
+use crate::accel::Precision;
+use crate::compiler::lowering::lower;
+use crate::compiler::mapper::{map_graph_with, MapStrategy};
+use crate::config::FabricConfig;
+use crate::coordinator::cosim_with;
+use crate::fabric::Fabric;
 use crate::noc::{traffic, Floorplan, NocParams, NocSim, Topology};
 use crate::sim::Rng;
+use crate::workloads;
 use crate::Result;
 
 use super::milp::{Milp, Sense};
@@ -37,8 +46,30 @@ pub struct Candidate {
     pub energy_per_kib: f64,
     pub max_radix: usize,
     pub wirelength: usize,
-    /// Measured latency from the flit simulator (filled by refinement).
+    /// Measured latency from the configured [`SimEngine`] (filled by
+    /// refinement): mean packet latency in cycles under
+    /// [`SimEngine::Flit`], end-to-end workload makespan cycles under
+    /// [`SimEngine::Cosim`].
     pub sim_latency: Option<f64>,
+    /// Measured workload energy, pJ — [`SimEngine::Cosim`] only (the
+    /// flit engine measures latency, not program energy).
+    pub sim_energy_pj: Option<f64>,
+}
+
+/// The measurement engine behind `IterativeSim` refinement — the DSE
+/// engine seam (see `dse` module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimEngine {
+    /// The seed path, byte-stable: cold-start flit-level `NocSim` +
+    /// synthetic uniform traffic (latency only).
+    #[default]
+    Flit,
+    /// The fast engines: build a [`Fabric`] over the candidate topology
+    /// ([`Fabric::build_with_topology`]), map a probe workload through
+    /// the fabric's configured cost model (`map_graph_with` — kind-aware
+    /// when the config selects `model = "kind"`), and measure latency
+    /// *and* energy with the event-driven co-sim (`cosim_with`).
+    Cosim,
 }
 
 /// Exploration budgets + workload.
@@ -53,9 +84,17 @@ pub struct ExploreConfig {
     /// Offered load for the traffic model (packets/node/cycle).
     pub rate: f64,
     pub packet_bytes: usize,
-    /// Candidates refined with the flit simulator.
+    /// Candidates refined with the measurement engine.
     pub sim_top_k: usize,
     pub seed: u64,
+    /// Measurement engine for refinement ([`SimEngine::Flit`] keeps the
+    /// seed behavior byte for byte).
+    pub engine: SimEngine,
+    /// Fabric parameters for [`SimEngine::Cosim`] (tile mix, cost model,
+    /// link constants; the `[noc]` topology fields are ignored — the
+    /// candidate topology replaces them). `None` = a small homogeneous
+    /// NPU fabric sized to `min_nodes`.
+    pub fabric: Option<FabricConfig>,
 }
 
 impl Default for ExploreConfig {
@@ -68,6 +107,8 @@ impl Default for ExploreConfig {
             packet_bytes: 64,
             sim_top_k: 3,
             seed: 7,
+            engine: SimEngine::Flit,
+            fabric: None,
         }
     }
 }
@@ -107,11 +148,16 @@ pub fn candidates_for(nodes: usize) -> Vec<(String, Topology)> {
             }
         }
     };
-    // Meshes / tori around the target size.
+    // Meshes / tori around the target size. A w×h grid is isomorphic to
+    // its h×w transpose (identical distances, degrees, floorplan), so
+    // the dimension set is deduped on the sorted pair — the square loop
+    // used to emit e.g. mesh4x5 AND mesh5x4 as distinct candidates,
+    // double-counting them in every solver and the Pareto front.
     let side = (nodes as f64).sqrt().ceil() as usize;
+    let mut seen_dims: HashSet<(usize, usize)> = HashSet::new();
     for w in [side, side + 1] {
         for h in [side.max(1), side + 1] {
-            if w * h >= nodes {
+            if w * h >= nodes && seen_dims.insert((w.min(h), w.max(h))) {
                 push(format!("mesh{w}x{h}"), Topology::mesh(w, h));
                 push(format!("torus{w}x{h}"), Topology::torus(w, h));
             }
@@ -122,12 +168,16 @@ pub fn candidates_for(nodes: usize) -> Vec<(String, Topology)> {
     let down = (nodes as f64).sqrt().ceil() as usize;
     push(format!("fattree{down}"), Topology::fattree(down));
     // Low-radix custom: ring + evenly spaced chords (express links).
+    // Membership via a normalized hash set — the old `edges.contains`
+    // pair scan was O(n²) over the growing edge list.
     if nodes >= 8 {
         let mut edges: Vec<(usize, usize)> = (0..nodes).map(|i| (i, (i + 1) % nodes)).collect();
+        let mut have: HashSet<(usize, usize)> =
+            edges.iter().map(|&(a, b)| (a.min(b), a.max(b))).collect();
         let stride = nodes / 4;
         for i in (0..nodes).step_by(2) {
             let j = (i + stride) % nodes;
-            if i != j && !edges.contains(&(i, j)) && !edges.contains(&(j, i)) {
+            if i != j && have.insert((i.min(j), i.max(j))) {
                 edges.push((i, j));
             }
         }
@@ -167,6 +217,7 @@ pub fn score(name: &str, topo: Topology, cfg: &ExploreConfig) -> Candidate {
         area,
         energy_per_kib,
         sim_latency: None,
+        sim_energy_pj: None,
     }
 }
 
@@ -183,6 +234,48 @@ fn simulate_latency(c: &Candidate, cfg: &ExploreConfig) -> f64 {
     );
     let rep = traffic::drive(&mut sim, inj, 3_000_000);
     rep.avg_latency
+}
+
+/// Fabric parameters for [`SimEngine::Cosim`] when the caller supplied
+/// none: a homogeneous NPU fabric sized so its tiles (+ the HBM bridge
+/// on node 0) fit every candidate with at least `min_nodes` nodes.
+fn default_cosim_fabric(min_nodes: usize) -> Result<FabricConfig> {
+    let tiles = min_nodes.saturating_sub(1).clamp(1, 12);
+    let mut side = 2usize;
+    while side * side < tiles + 1 {
+        side += 1;
+    }
+    FabricConfig::from_toml(&format!(
+        "[noc]\nwidth = {side}\nheight = {side}\n\
+         [[cu]]\nkind = \"npu\"\ntemplate = \"B\"\ncount = {tiles}\n"
+    ))
+}
+
+/// Measure one candidate on the fast engines: fabric over the candidate
+/// topology, probe MLP mapped through the fabric's configured cost model
+/// (kind-aware under `model = "kind"`), event-driven co-sim. Returns
+/// (makespan cycles, total energy pJ) from the measured `ExecReport`.
+fn measure_cosim(c: &Candidate, cfg: &ExploreConfig) -> Result<(f64, f64)> {
+    let base = match &cfg.fabric {
+        Some(f) => f.clone(),
+        None => default_cosim_fabric(cfg.min_nodes)?,
+    };
+    let fabric = Fabric::build_with_topology(base, c.topo.clone())?;
+    let g = workloads::mlp(4, 128, &[64], 10, cfg.seed)?;
+    let model = fabric.cost_model().clone();
+    let m = map_graph_with(&g, &fabric, MapStrategy::Greedy, Precision::Analog, model.as_ref())?;
+    let prog = lower(&g, &fabric, &m)?;
+    let rep = cosim_with(&fabric, &prog, model.as_ref())?;
+    Ok((rep.cycles as f64, rep.metrics.total_energy_pj()))
+}
+
+/// Engine dispatch for refinement: measured latency plus (co-sim only)
+/// measured energy.
+fn measure(c: &Candidate, cfg: &ExploreConfig) -> Result<(f64, Option<f64>)> {
+    match cfg.engine {
+        SimEngine::Flit => Ok((simulate_latency(c, cfg), None)),
+        SimEngine::Cosim => measure_cosim(c, cfg).map(|(lat, en)| (lat, Some(en))),
+    }
 }
 
 fn feasible(c: &Candidate, cfg: &ExploreConfig) -> bool {
@@ -288,8 +381,9 @@ pub fn explore(cfg: &ExploreConfig, method: ExploreMethod) -> Result<ExploreResu
                 cands[a].est_latency.partial_cmp(&cands[b].est_latency).unwrap()
             });
             for &i in order.iter().take(cfg.sim_top_k) {
-                let lat = simulate_latency(&cands[i], cfg);
+                let (lat, energy) = measure(&cands[i], cfg)?;
                 cands[i].sim_latency = Some(lat);
+                cands[i].sim_energy_pj = energy;
                 sim_evals += 1;
             }
             solver_evals = order.len();
@@ -307,11 +401,30 @@ pub fn explore(cfg: &ExploreConfig, method: ExploreMethod) -> Result<ExploreResu
         }
     };
     let best = best.ok_or_else(|| anyhow::anyhow!("no feasible topology under budgets"))?;
-    let points: Vec<Vec<f64>> = cands
-        .iter()
-        .map(|c| vec![c.est_latency, c.area, c.energy_per_kib])
+    let measured: Vec<usize> = (0..cands.len())
+        .filter(|&i| cands[i].sim_latency.is_some() && cands[i].sim_energy_pj.is_some())
         .collect();
-    let front = pareto_front(&points);
+    let front = if cfg.engine == SimEngine::Cosim && !measured.is_empty() {
+        // Measured-only front: measured workload pJ and analytic pJ/KiB
+        // are different units, so mixing them in one domination check is
+        // meaningless. The front is computed over the co-sim-measured
+        // subset and mapped back to candidate indices; the flit engine
+        // keeps the analytic front byte for byte.
+        let points: Vec<Vec<f64>> = measured
+            .iter()
+            .map(|&i| {
+                let c = &cands[i];
+                vec![c.sim_latency.unwrap(), c.area, c.sim_energy_pj.unwrap()]
+            })
+            .collect();
+        pareto_front(&points).into_iter().map(|k| measured[k]).collect()
+    } else {
+        let points: Vec<Vec<f64>> = cands
+            .iter()
+            .map(|c| vec![c.est_latency, c.area, c.energy_per_kib])
+            .collect();
+        pareto_front(&points)
+    };
     Ok(ExploreResult { candidates: cands, best, front, solver_evals, sim_evals })
 }
 
@@ -381,5 +494,70 @@ mod tests {
     fn infeasible_budget_errors() {
         let cfg = ExploreConfig { max_area: 0.001, ..Default::default() };
         assert!(explore(&cfg, ExploreMethod::Exhaustive).is_err());
+    }
+
+    #[test]
+    fn grid_candidates_are_deduped_on_transposition() {
+        // 20 nodes: side 5, dims {5,6}² — 5x6 and 6x5 are isomorphic and
+        // only one may survive.
+        for nodes in [16, 20, 27] {
+            let cands = candidates_for(nodes);
+            let mut seen: HashSet<(char, usize, usize)> = HashSet::new();
+            for (name, _) in &cands {
+                if let Some(dims) = name
+                    .strip_prefix("mesh")
+                    .map(|d| ('m', d))
+                    .or_else(|| name.strip_prefix("torus").map(|d| ('t', d)))
+                {
+                    let (fam, d) = dims;
+                    let (w, h) = d.split_once('x').unwrap();
+                    let (w, h): (usize, usize) = (w.parse().unwrap(), h.parse().unwrap());
+                    assert!(
+                        seen.insert((fam, w.min(h), w.max(h))),
+                        "transposed duplicate {name} at {nodes} nodes"
+                    );
+                }
+            }
+        }
+        let names: Vec<String> = candidates_for(20).into_iter().map(|(n, _)| n).collect();
+        assert!(names.iter().any(|n| n == "mesh5x6"));
+        assert!(!names.iter().any(|n| n == "mesh6x5"));
+    }
+
+    #[test]
+    fn cosim_engine_measures_latency_and_energy() {
+        let cfg = ExploreConfig {
+            min_nodes: 9,
+            max_area: 40.0,
+            sim_top_k: 2,
+            engine: SimEngine::Cosim,
+            ..Default::default()
+        };
+        let r = explore(&cfg, ExploreMethod::IterativeSim).unwrap();
+        assert_eq!(r.sim_evals, 2);
+        let best = &r.candidates[r.best];
+        assert!(best.sim_latency.unwrap() > 0.0);
+        assert!(best.sim_energy_pj.unwrap() > 0.0);
+        // Under Cosim the front is restricted to measured candidates.
+        assert!(!r.front.is_empty());
+        for &i in &r.front {
+            assert!(r.candidates[i].sim_energy_pj.is_some());
+        }
+        // Bit-identical replay.
+        let r2 = explore(&cfg, ExploreMethod::IterativeSim).unwrap();
+        assert_eq!(r.best, r2.best);
+        assert_eq!(best.sim_latency, r2.candidates[r2.best].sim_latency);
+        assert_eq!(best.sim_energy_pj, r2.candidates[r2.best].sim_energy_pj);
+    }
+
+    #[test]
+    fn flit_engine_keeps_the_analytic_front() {
+        // The seed behavior: refinement under Flit never changes the
+        // analytic Pareto front.
+        let screen = explore(&ExploreConfig::default(), ExploreMethod::Exhaustive).unwrap();
+        let refined =
+            explore(&ExploreConfig::default(), ExploreMethod::IterativeSim).unwrap();
+        assert_eq!(screen.front, refined.front);
+        assert!(refined.candidates.iter().all(|c| c.sim_energy_pj.is_none()));
     }
 }

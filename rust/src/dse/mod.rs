@@ -11,13 +11,52 @@
 //! * [`explorer`] — NoC topology DSE: analytic screening, MILP/SMT
 //!   candidate selection, iterative simulation-in-the-loop refinement.
 //! * [`pareto`] — Pareto-front extraction for the cost/performance plots.
+//! * [`sweep`] — batched incremental sweeps over full candidate fabrics
+//!   `{topology × tile mix × cost model × admission policy}` on the fast
+//!   engines (session reuse + parallel groups).
+//!
+//! # DSE evaluation contract
+//!
+//! Three evaluation tiers, cheapest first, each pinned against the next:
+//!
+//! 1. **Analytic screening** (`explorer::score`) — closed-form distance
+//!    / bisection / floorplan estimates. No simulation; used to rank and
+//!    to prune. This path is frozen: it must stay byte-identical across
+//!    refactors because the solver goldens and the Pareto plots are
+//!    pinned to it.
+//! 2. **Flit-level refinement** ([`SimEngine::Flit`]) — the seed
+//!    `IterativeSim` behavior: a cold `NocSim` measures mean packet
+//!    latency under synthetic traffic for the analytic top-k.
+//! 3. **Fast-engine measurement** ([`SimEngine::Cosim`] and the
+//!    [`sweep`] layer) — candidates are built into real fabrics
+//!    ([`crate::fabric::Fabric::build_with_topology`]), a probe workload
+//!    is mapped through the fabric's cost model (kind-aware under
+//!    `model = "kind"`), and the event-driven co-sim measures latency
+//!    *and* energy. Under `Cosim` the Pareto front is computed over the
+//!    measured subset only — measured workload pJ and analytic pJ/KiB
+//!    are different units and must never meet in one domination check.
+//!
+//! Every measured tier obeys the repo determinism contract: results are
+//! pure functions of (spec, seed), bit-identical at every thread count
+//! and shard partition. Incremental evaluation (session reuse via
+//! `CosimSession::set_model`) must be bit-identical to rebuilding the
+//! world from scratch — `sweep::sweep_rebuild` is the differential
+//! oracle, and `tests/dse_golden.rs` + `bench_dse` enforce the
+//! equivalence on every run.
 
 pub mod explorer;
 pub mod milp;
 pub mod pareto;
 pub mod smt;
+pub mod sweep;
 
-pub use explorer::{explore, Candidate, ExploreConfig, ExploreMethod, ExploreResult};
+pub use explorer::{
+    explore, Candidate, ExploreConfig, ExploreMethod, ExploreResult, SimEngine,
+};
 pub use milp::{Constraint, Milp, Sense, Solution as MilpSolution};
 pub use pareto::pareto_front;
 pub use smt::{DiffConstraint, Lit, SmtSolver};
+pub use sweep::{
+    sweep, sweep_rebuild, CandidateEval, MixVariant, PolicyVariant, SweepResult, SweepSpec,
+    TopoVariant,
+};

@@ -1,0 +1,644 @@
+//! Batched incremental DSE on the fast engines: thousands of candidate
+//! fabrics per second via session reuse and parallel sweeps.
+//!
+//! A **sweep** evaluates the cross product
+//! `{topology} × {tile mix} × {cost model} × {admission policy}`
+//! through the event-driven co-sim — not the analytic screening model.
+//! The naive way rebuilds the world per candidate: fabric placement,
+//! mapping, lowering, session construction, then a drain. Most of that
+//! work is identical between neighbouring candidates, so the sweep
+//! shares it:
+//!
+//! * **Structure sharing** — candidates with the same (topology, mix)
+//!   share one [`Fabric`], one mapping and one lowered program set
+//!   (probe MLPs mapped through the *base* cost model, so every
+//!   candidate in a group prices the identical step structure).
+//! * **Session reuse** — per (topology, mix, policy) one persistent
+//!   [`CosimSession`] is admitted once; the cost-model axis is walked
+//!   with [`CosimSession::set_model`], which maps the config diff onto
+//!   the PR 5 invalidation machinery (retract every priced step, keep
+//!   programs/queues/DAG state) instead of a rebuild. Policy cannot be
+//!   diffed — it reorders frozen admission keys — so it stays a session
+//!   axis.
+//! * **Parallel fan-out** — (topology, mix) groups are independent, so
+//!   they fan out across a [`WorkerPool`], chunked by
+//!   [`load_fences`] over a deterministic per-group weight. Each worker
+//!   writes into disjoint result slots; the merge walks candidates in
+//!   canonical order.
+//!
+//! # Determinism contract
+//!
+//! The canonical candidate index is
+//! `((t·M + m)·P + p)·C + c` for topology `t`, mix `m`, policy `p`,
+//! model `c`. [`sweep`] returns evaluations in exactly that order and
+//! is **bit-identical at every thread count**: each candidate's result
+//! is a pure function of the spec (workers share nothing mutable), and
+//! the merge order is the canonical order, never completion order.
+//! Errors are surfaced deterministically too — the failing group with
+//! the lowest canonical index wins, regardless of which worker hit it
+//! first.
+//!
+//! [`sweep_rebuild`] is the differential oracle: the same candidates
+//! evaluated the slow way (fresh world per candidate). The golden tests
+//! and `bench_dse` hold `sweep ≡ sweep_rebuild` bit-for-bit; the bench
+//! reports the throughput ratio.
+
+use anyhow::{anyhow, bail, ensure, Context, Error};
+
+use crate::accel::Precision;
+use crate::compiler::lowering::lower;
+use crate::compiler::mapper::{map_graph_with, MapStrategy};
+use crate::compiler::FabricProgram;
+use crate::config::{parse_document, CuConfig, Document, FabricConfig};
+use crate::coordinator::{AdmitMeta, AdmitPolicy, CosimSession, ProgramSpan};
+use crate::fabric::{cost::model_variant, make_accelerator, Fabric};
+use crate::noc::Topology;
+use crate::sim::{load_fences, Cycle, WorkerPool};
+use crate::workloads;
+use crate::Result;
+
+/// One topology axis point: the raw spec string (kept as the label) and
+/// the built shape.
+#[derive(Debug, Clone)]
+pub struct TopoVariant {
+    pub name: String,
+    pub topo: Topology,
+}
+
+/// One tile-mix axis point: the raw spec string and the CU groups it
+/// expands to (template/TCDM defaults from [`CuConfig`]).
+#[derive(Debug, Clone)]
+pub struct MixVariant {
+    pub name: String,
+    pub cus: Vec<CuConfig>,
+}
+
+/// One admission-policy axis point.
+#[derive(Debug, Clone)]
+pub struct PolicyVariant {
+    pub name: String,
+    pub policy: AdmitPolicy,
+}
+
+/// A parsed sweep: base fabric parameters plus the four candidate axes.
+///
+/// TOML shape (`[sweep]` rides in the same document as the base fabric
+/// config; the base `[noc]` width×height must fit the largest mix):
+///
+/// ```toml
+/// [sweep]
+/// topologies = ["mesh:8x8", "torus:8x8", "ring:24"]
+/// mixes      = ["npu:12", "npu:8+crossbar:4"]
+/// models     = ["invariant", "congestion", "dvfs", "kind"]
+/// policies   = ["fifo", "priority"]
+/// programs   = 2
+/// seed       = 7
+/// threads    = 4
+/// ```
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub base: FabricConfig,
+    pub topologies: Vec<TopoVariant>,
+    pub mixes: Vec<MixVariant>,
+    pub models: Vec<String>,
+    pub policies: Vec<PolicyVariant>,
+    /// Probe programs admitted per session (distinct seeds, staggered
+    /// priorities/deadlines so the policy axis actually reorders work).
+    pub programs: usize,
+    pub seed: u64,
+    /// Worker threads for the group fan-out (results are bit-identical
+    /// at every value).
+    pub threads: usize,
+}
+
+/// One evaluated candidate fabric (canonical order; see module docs).
+#[derive(Debug, Clone)]
+pub struct CandidateEval {
+    /// Canonical index `((t·M + m)·P + p)·C + c`.
+    pub index: usize,
+    pub topology: String,
+    pub mix: String,
+    pub model: String,
+    pub policy: String,
+    /// Measured makespan across the probe programs, fabric cycles.
+    pub makespan: Cycle,
+    pub energy_pj: f64,
+    pub bytes_moved: u64,
+    /// Per-program spans in admission order.
+    pub spans: Vec<ProgramSpan>,
+}
+
+impl CandidateEval {
+    /// Bit-level equality (energy compared by f64 bit pattern) — the
+    /// incremental-vs-rebuild and thread-invariance goldens.
+    pub fn bit_identical(&self, other: &CandidateEval) -> bool {
+        self.index == other.index
+            && self.topology == other.topology
+            && self.mix == other.mix
+            && self.model == other.model
+            && self.policy == other.policy
+            && self.makespan == other.makespan
+            && self.energy_pj.to_bits() == other.energy_pj.to_bits()
+            && self.bytes_moved == other.bytes_moved
+            && self.spans.len() == other.spans.len()
+            && self.spans.iter().zip(&other.spans).all(|(a, b)| a.bit_identical(b))
+    }
+}
+
+/// Sweep output: evaluations in canonical candidate order plus the
+/// session-economy counters the bench reports.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub evals: Vec<CandidateEval>,
+    /// Sessions constructed (`groups × policies` for the incremental
+    /// path, one per candidate for the rebuild oracle).
+    pub sessions: usize,
+    /// `set_model` re-prices performed (0 for the rebuild oracle).
+    pub reprices: usize,
+}
+
+impl SweepResult {
+    /// Index of the best candidate: minimum makespan, ties broken by
+    /// canonical index (deterministic).
+    pub fn best(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.evals.iter().enumerate() {
+            if best.is_none_or(|b| e.makespan < self.evals[b].makespan) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+}
+
+fn parse_topology(s: &str) -> Result<TopoVariant> {
+    let (family, dims) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("topology {s:?} must be \"family:dims\""))?;
+    let topo = match family.trim() {
+        fam @ ("mesh" | "torus") => {
+            let (w, h) = dims
+                .split_once('x')
+                .ok_or_else(|| anyhow!("{fam} dims {dims:?} must be \"WxH\""))?;
+            let w: usize = w.trim().parse().with_context(|| format!("topology {s:?}"))?;
+            let h: usize = h.trim().parse().with_context(|| format!("topology {s:?}"))?;
+            if fam == "mesh" {
+                Topology::mesh(w, h)?
+            } else {
+                Topology::torus(w, h)?
+            }
+        }
+        fam @ ("ring" | "star" | "fattree") => {
+            let n: usize = dims.trim().parse().with_context(|| format!("topology {s:?}"))?;
+            match fam {
+                "ring" => Topology::ring(n)?,
+                "star" => Topology::star(n)?,
+                _ => Topology::fattree(n)?,
+            }
+        }
+        other => bail!("unknown topology family {other:?} in {s:?}"),
+    };
+    ensure!(topo.is_connected(), "topology {s:?} is disconnected");
+    Ok(TopoVariant { name: s.to_string(), topo })
+}
+
+fn parse_mix(s: &str) -> Result<MixVariant> {
+    let mut cus = Vec::new();
+    for part in s.split('+') {
+        let (kind, count) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow!("mix component {part:?} must be \"kind:count\""))?;
+        let kind = kind.trim();
+        let count: usize = count.trim().parse().with_context(|| format!("mix {s:?}"))?;
+        ensure!(count > 0, "mix {s:?}: zero-count component {part:?}");
+        make_accelerator(kind).with_context(|| format!("mix {s:?}"))?;
+        cus.push(CuConfig { kind: kind.to_string(), count, ..CuConfig::default() });
+    }
+    ensure!(!cus.is_empty(), "empty mix spec");
+    Ok(MixVariant { name: s.to_string(), cus })
+}
+
+fn parse_policy(s: &str) -> Result<PolicyVariant> {
+    let policy = match s {
+        "fifo" => AdmitPolicy::Fifo,
+        "priority" => AdmitPolicy::Priority,
+        "deadline" => AdmitPolicy::Deadline,
+        other => bail!("unknown admission policy {other:?}"),
+    };
+    Ok(PolicyVariant { name: s.to_string(), policy })
+}
+
+impl SweepSpec {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse_document(text).context("parsing sweep config")?;
+        Self::from_document(&doc)
+    }
+
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let base = FabricConfig::from_document(doc)?;
+        let axis = |key: &str, default: &[&str]| -> Result<Vec<String>> {
+            match doc.get(key) {
+                None => Ok(default.iter().map(|s| s.to_string()).collect()),
+                Some(v) => v
+                    .as_str_array()
+                    .map(|v| v.iter().map(|s| s.to_string()).collect())
+                    .ok_or_else(|| anyhow!("{key} must be an array of strings")),
+            }
+        };
+        let topologies = axis("sweep.topologies", &["mesh:4x4"])?
+            .iter()
+            .map(|s| parse_topology(s))
+            .collect::<Result<Vec<_>>>()?;
+        let mixes = axis("sweep.mixes", &["npu:4"])?
+            .iter()
+            .map(|s| parse_mix(s))
+            .collect::<Result<Vec<_>>>()?;
+        let models = axis("sweep.models", &["invariant"])?;
+        for m in &models {
+            model_variant(&base.cost, m).with_context(|| format!("sweep model {m:?}"))?;
+        }
+        let policies = axis("sweep.policies", &["fifo"])?
+            .iter()
+            .map(|s| parse_policy(s))
+            .collect::<Result<Vec<_>>>()?;
+        let spec = SweepSpec {
+            base,
+            topologies,
+            mixes,
+            models,
+            policies,
+            programs: doc.get_int("sweep.programs", 2) as usize,
+            seed: doc.get_int("sweep.seed", 7) as u64,
+            threads: doc.get_int("sweep.threads", 1) as usize,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.topologies.is_empty(), "sweep needs at least one topology");
+        ensure!(!self.mixes.is_empty(), "sweep needs at least one mix");
+        ensure!(!self.models.is_empty(), "sweep needs at least one cost model");
+        ensure!(!self.policies.is_empty(), "sweep needs at least one policy");
+        ensure!(
+            (1..=64).contains(&self.programs),
+            "sweep.programs must be in 1..=64, got {}",
+            self.programs
+        );
+        ensure!(
+            (1..=1024).contains(&self.threads),
+            "sweep.threads must be in 1..=1024, got {}",
+            self.threads
+        );
+        for m in &self.mixes {
+            let tiles: usize = m.cus.iter().map(|c| c.count).sum();
+            for t in &self.topologies {
+                ensure!(
+                    tiles < t.topo.nodes(),
+                    "mix {:?} ({} tiles + HBM) does not fit topology {:?} ({} nodes)",
+                    m.name,
+                    tiles,
+                    t.name,
+                    t.topo.nodes()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total candidates in the sweep.
+    pub fn candidates(&self) -> usize {
+        self.topologies.len() * self.mixes.len() * self.policies.len() * self.models.len()
+    }
+}
+
+/// Per-group scaffold shared by every candidate in the group: the built
+/// fabric plus the probe programs mapped/lowered **once** through the
+/// base cost model (structure sharing — see module docs).
+struct GroupWorld<'s> {
+    fabric: Fabric,
+    progs: Vec<FabricProgram>,
+    spec: &'s SweepSpec,
+}
+
+impl<'s> GroupWorld<'s> {
+    fn build(spec: &'s SweepSpec, t: usize, m: usize) -> Result<Self> {
+        let topo = &spec.topologies[t];
+        let mix = &spec.mixes[m];
+        let mut cfg = spec.base.clone();
+        cfg.cus = mix.cus.clone();
+        let fabric = Fabric::build_with_topology(cfg, topo.topo.clone())
+            .with_context(|| format!("candidate fabric {} / {}", topo.name, mix.name))?;
+        let mut progs = Vec::with_capacity(spec.programs);
+        for k in 0..spec.programs {
+            let g = workloads::mlp(4, 64, &[48], 10, spec.seed.wrapping_add(k as u64))?;
+            let map = map_graph_with(
+                &g,
+                &fabric,
+                MapStrategy::Greedy,
+                Precision::Int8,
+                fabric.cost_model().as_ref(),
+            )?;
+            progs.push(lower(&g, &fabric, &map)?);
+        }
+        Ok(GroupWorld { fabric, progs, spec })
+    }
+
+    /// Admit the probe programs into `sess` with policy-discriminating
+    /// metadata: all at cycle 0, later programs more urgent (priority)
+    /// and earlier-deadlined (EDF), so Fifo / Priority / Deadline each
+    /// order the contention differently.
+    fn admit_probes(&self, sess: &mut CosimSession<'_>) -> Result<()> {
+        for (k, prog) in self.progs.iter().enumerate() {
+            let meta = AdmitMeta {
+                priority: (k + 1) as u32,
+                deadline: (self.spec.programs - k) as Cycle * 100_000,
+            };
+            sess.admit_with(prog, 0, meta)?;
+        }
+        Ok(())
+    }
+
+    fn eval(&self, sess: &mut CosimSession<'_>, t: usize, m: usize, p: usize, c: usize)
+        -> Result<CandidateEval> {
+        let spec = self.spec;
+        let rep = sess.report()?;
+        let (mn, pn, cn) = (spec.mixes.len(), spec.policies.len(), spec.models.len());
+        Ok(CandidateEval {
+            index: ((t * mn + m) * pn + p) * cn + c,
+            topology: spec.topologies[t].name.clone(),
+            mix: spec.mixes[m].name.clone(),
+            model: spec.models[c].clone(),
+            policy: spec.policies[p].name.clone(),
+            makespan: rep.cycles,
+            energy_pj: rep.metrics.total_energy_pj(),
+            bytes_moved: rep.metrics.bytes_moved,
+            spans: rep.programs,
+        })
+    }
+}
+
+/// Evaluate one (topology, mix) group incrementally, writing the
+/// `policies × models` candidates into `out` (slot `p·C + c`).
+fn eval_group(spec: &SweepSpec, g: usize, out: &mut [Option<CandidateEval>]) -> Result<()> {
+    let mn = spec.mixes.len();
+    let (t, m) = (g / mn, g % mn);
+    let world = GroupWorld::build(spec, t, m)?;
+    let cn = spec.models.len();
+    for (p, pol) in spec.policies.iter().enumerate() {
+        let mut sess =
+            CosimSession::with_model(&world.fabric, model_variant(&spec.base.cost, &spec.models[0])?);
+        sess.set_threads(1);
+        sess.set_policy(pol.policy)?;
+        world.admit_probes(&mut sess)?;
+        for c in 0..cn {
+            if c > 0 {
+                sess.set_model(model_variant(&spec.base.cost, &spec.models[c])?)?;
+            }
+            out[p * cn + c] = Some(world.eval(&mut sess, t, m, p, c)?);
+        }
+    }
+    Ok(())
+}
+
+/// Deterministic per-group cost proxy for [`load_fences`]: pricing work
+/// scales with the candidate count and (through BFS transport queries)
+/// the node count; structure work with the tile count.
+fn group_weight(spec: &SweepSpec, g: usize) -> u64 {
+    let mn = spec.mixes.len();
+    let (t, m) = (g / mn, g % mn);
+    let tiles: usize = spec.mixes[m].cus.iter().map(|c| c.count).sum();
+    let per_group = spec.policies.len() * spec.models.len();
+    (spec.topologies[t].topo.nodes() + 4 * tiles) as u64 * per_group as u64
+}
+
+/// Run the sweep incrementally (session reuse + parallel groups). See
+/// the module docs for the determinism contract.
+pub fn sweep(spec: &SweepSpec) -> Result<SweepResult> {
+    spec.validate()?;
+    let (mn, pn, cn) = (spec.mixes.len(), spec.policies.len(), spec.models.len());
+    let groups = spec.topologies.len() * mn;
+    let per_group = pn * cn;
+    let mut slots: Vec<Option<CandidateEval>> = (0..groups * per_group).map(|_| None).collect();
+    let mut gerrs: Vec<Option<Error>> = (0..groups).map(|_| None).collect();
+    let threads = spec.threads.clamp(1, groups);
+    if threads <= 1 {
+        for (g, err) in gerrs.iter_mut().enumerate() {
+            let out = &mut slots[g * per_group..(g + 1) * per_group];
+            if let Err(e) = eval_group(spec, g, out) {
+                *err = Some(e);
+            }
+        }
+    } else {
+        let weights: Vec<u64> = (0..groups).map(|g| group_weight(spec, g)).collect();
+        let fences = load_fences(&weights, threads);
+        // Disjoint per-chunk views over the slot and error arrays, cut at
+        // group boundaries; chunk 0 runs on the calling thread.
+        let mut chunks: Vec<(usize, &mut [Option<CandidateEval>], &mut [Option<Error>])> =
+            Vec::with_capacity(fences.len() - 1);
+        let mut slot_tail: &mut [Option<CandidateEval>] = &mut slots;
+        let mut err_tail: &mut [Option<Error>] = &mut gerrs;
+        for w in fences.windows(2) {
+            let gcount = w[1] - w[0];
+            let (s, sr) = std::mem::take(&mut slot_tail).split_at_mut(gcount * per_group);
+            let (e, er) = std::mem::take(&mut err_tail).split_at_mut(gcount);
+            slot_tail = sr;
+            err_tail = er;
+            chunks.push((w[0], s, e));
+        }
+        let mut pool = WorkerPool::new(threads - 1);
+        let run_chunk = |g0: usize, s: &mut [Option<CandidateEval>], e: &mut [Option<Error>]| {
+            for (gi, err) in e.iter_mut().enumerate() {
+                let out = &mut s[gi * per_group..(gi + 1) * per_group];
+                if let Err(x) = eval_group(spec, g0 + gi, out) {
+                    *err = Some(x);
+                }
+            }
+        };
+        let mut it = chunks.into_iter();
+        let head = it.next();
+        pool.scoped(|scope| {
+            for (g0, s, e) in it {
+                scope.execute(move || run_chunk(g0, s, e));
+            }
+            if let Some((g0, s, e)) = head {
+                run_chunk(g0, s, e);
+            }
+        });
+    }
+    // Deterministic merge: the lowest-indexed failing group wins; else
+    // every slot is filled and already in canonical order.
+    for (g, err) in gerrs.iter_mut().enumerate() {
+        if let Some(e) = err.take() {
+            let (t, m) = (g / mn, g % mn);
+            return Err(e.context(format!(
+                "sweep group {g} ({} / {})",
+                spec.topologies[t].name, spec.mixes[m].name
+            )));
+        }
+    }
+    let evals: Vec<CandidateEval> =
+        slots.into_iter().map(|s| s.expect("unfilled sweep slot")).collect();
+    Ok(SweepResult {
+        evals,
+        sessions: groups * pn,
+        reprices: groups * pn * (cn - 1),
+    })
+}
+
+/// The rebuild-world oracle: every candidate gets a fresh fabric,
+/// mapping, lowering and session (no sharing, sequential). Bit-identical
+/// to [`sweep`] by the incremental-evaluation contract; the throughput
+/// gap between the two is what `bench_dse` measures.
+pub fn sweep_rebuild(spec: &SweepSpec) -> Result<SweepResult> {
+    spec.validate()?;
+    let (mn, pn, cn) = (spec.mixes.len(), spec.policies.len(), spec.models.len());
+    let mut evals = Vec::with_capacity(spec.candidates());
+    for t in 0..spec.topologies.len() {
+        for m in 0..mn {
+            for p in 0..pn {
+                for c in 0..cn {
+                    let world = GroupWorld::build(spec, t, m)?;
+                    let mut sess = CosimSession::with_model(
+                        &world.fabric,
+                        model_variant(&spec.base.cost, &spec.models[c])?,
+                    );
+                    sess.set_threads(1);
+                    sess.set_policy(spec.policies[p].policy)?;
+                    world.admit_probes(&mut sess)?;
+                    evals.push(world.eval(&mut sess, t, m, p, c)?);
+                }
+            }
+        }
+    }
+    let sessions = evals.len();
+    Ok(SweepResult { evals, sessions, reprices: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_toml() -> &'static str {
+        r#"
+[noc]
+width = 3
+height = 3
+
+[[cu]]
+kind = "npu"
+count = 4
+
+[sweep]
+topologies = ["mesh:3x3", "ring:10"]
+mixes = ["npu:4", "npu:2+crossbar:2"]
+models = ["invariant", "congestion"]
+policies = ["fifo", "priority"]
+programs = 2
+seed = 11
+"#
+    }
+
+    #[test]
+    fn spec_parses_axes_and_defaults() {
+        let spec = SweepSpec::from_toml(spec_toml()).unwrap();
+        assert_eq!(spec.topologies.len(), 2);
+        assert_eq!(spec.topologies[1].topo.nodes(), 10);
+        assert_eq!(spec.mixes[1].cus.len(), 2);
+        assert_eq!(spec.mixes[1].cus[1].kind, "crossbar");
+        assert_eq!(spec.models, vec!["invariant", "congestion"]);
+        assert_eq!(spec.policies[1].policy, AdmitPolicy::Priority);
+        assert_eq!(spec.programs, 2);
+        assert_eq!(spec.threads, 1);
+        assert_eq!(spec.candidates(), 16);
+        // Bare fabric config (no [sweep]) still parses, with defaults.
+        let d = SweepSpec::from_toml("[noc]\nwidth = 3\nheight = 3\n[[cu]]\ncount = 4\n")
+            .unwrap();
+        assert_eq!(d.candidates(), 1);
+        assert_eq!(d.topologies[0].name, "mesh:4x4");
+    }
+
+    #[test]
+    fn bad_axis_strings_rejected() {
+        let bad = |patch: &str| {
+            let text = spec_toml().replace("topologies = [\"mesh:3x3\", \"ring:10\"]", patch);
+            SweepSpec::from_toml(&text)
+        };
+        assert!(bad("topologies = [\"hypercube:4\"]").is_err());
+        assert!(bad("topologies = [\"mesh:9\"]").is_err());
+        assert!(bad("topologies = [\"ring:3\"]").is_err(), "mix no longer fits");
+        let text = spec_toml().replace("\"npu:2+crossbar:2\"", "\"npu:0\"");
+        assert!(SweepSpec::from_toml(&text).is_err());
+        let text = spec_toml().replace("\"congestion\"", "\"quantum\"");
+        assert!(SweepSpec::from_toml(&text).is_err());
+        let text = spec_toml().replace("\"priority\"", "\"lifo\"");
+        assert!(SweepSpec::from_toml(&text).is_err());
+    }
+
+    #[test]
+    fn incremental_matches_rebuild_bitwise() {
+        let spec = SweepSpec::from_toml(spec_toml()).unwrap();
+        let inc = sweep(&spec).unwrap();
+        let reb = sweep_rebuild(&spec).unwrap();
+        assert_eq!(inc.evals.len(), 16);
+        assert_eq!(reb.evals.len(), 16);
+        for (a, b) in inc.evals.iter().zip(&reb.evals) {
+            assert!(a.bit_identical(b), "candidate {} diverged: {a:?} vs {b:?}", a.index);
+        }
+        // Session economy: 4 groups × 2 policies vs one world per
+        // candidate; one re-price per extra model.
+        assert_eq!(inc.sessions, 8);
+        assert_eq!(inc.reprices, 8);
+        assert_eq!(reb.sessions, 16);
+        assert_eq!(reb.reprices, 0);
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        let base = SweepSpec::from_toml(spec_toml()).unwrap();
+        let one = sweep(&base).unwrap();
+        for threads in [2, 4, 8] {
+            let spec = SweepSpec { threads, ..base.clone() };
+            let many = sweep(&spec).unwrap();
+            for (a, b) in one.evals.iter().zip(&many.evals) {
+                assert!(a.bit_identical(b), "threads={threads} diverged at {}", a.index);
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_order_and_best_are_deterministic() {
+        let spec = SweepSpec::from_toml(spec_toml()).unwrap();
+        let r = sweep(&spec).unwrap();
+        for (i, e) in r.evals.iter().enumerate() {
+            assert_eq!(e.index, i);
+            assert_eq!(e.spans.len(), 2);
+            assert!(e.makespan > 0);
+            assert!(e.energy_pj > 0.0);
+        }
+        // Axis labels cycle in canonical order: model fastest, then
+        // policy, then mix, then topology.
+        assert_eq!(r.evals[0].model, "invariant");
+        assert_eq!(r.evals[1].model, "congestion");
+        assert_eq!(r.evals[2].policy, "priority");
+        assert_eq!(r.evals[4].mix, "npu:2+crossbar:2");
+        assert_eq!(r.evals[8].topology, "ring:10");
+        let best = r.best().unwrap();
+        assert!(r.evals.iter().all(|e| e.makespan >= r.evals[best].makespan));
+        let first_min =
+            r.evals.iter().position(|e| e.makespan == r.evals[best].makespan).unwrap();
+        assert_eq!(best, first_min, "ties must resolve to the lowest index");
+    }
+
+    #[test]
+    fn group_failure_is_surfaced_with_context() {
+        // Parse-time validation catches bad model names, so break the
+        // spec after parsing: every group fails, and the merge must
+        // surface the lowest-indexed group with its labels attached.
+        let mut spec = SweepSpec::from_toml(spec_toml()).unwrap();
+        spec.models[1] = "no-such-model".into();
+        let err = format!("{:#}", sweep(&spec).unwrap_err());
+        assert!(err.contains("sweep group 0"), "missing group context: {err}");
+        assert!(err.contains("mesh:3x3"), "missing topology label: {err}");
+    }
+}

@@ -1033,6 +1033,18 @@ impl CostModel for KindCost {
     }
 }
 
+/// Build a *variant* of a configured cost model: same knobs
+/// (epoch/congestion/DVFS/kind constants), different `model` selector.
+/// This is the DSE sweep's model axis (`dse::sweep`): every candidate
+/// shares the fabric's tuned constants and varies only the pricing
+/// family, so rankings compare models rather than accidental knob
+/// drift. Validates like [`model_from_config`].
+pub fn model_variant(base: &CostConfig, model: &str) -> Result<Arc<dyn CostModel>> {
+    let mut cfg = base.clone();
+    cfg.model = model.to_string();
+    model_from_config(&cfg)
+}
+
 /// Build the configured cost model (`[fabric.cost]`, see
 /// [`crate::config::CostConfig`]). Re-validates the knobs so a
 /// hand-built config cannot smuggle NaN/out-of-range values past the
@@ -1297,6 +1309,16 @@ mod tests {
         assert_eq!(d.exec_factor(1, 750), 1.25 * 1.5);
         assert_eq!(d.exec_factor(1, 1200), 1.5);
         assert_eq!(d.exec_factor(1, 1500), 1.0);
+    }
+
+    #[test]
+    fn model_variant_shares_knobs_and_validates() {
+        let base = CostConfig { epoch_cycles: 512, ..CostConfig::default() };
+        let m = model_variant(&base, "congestion").unwrap();
+        assert_eq!(m.name(), "congestion");
+        assert_eq!(m.time_dependence().epoch(), Some(512), "knobs must carry over");
+        assert_eq!(model_variant(&base, "invariant").unwrap().name(), "invariant");
+        assert!(model_variant(&base, "nonsense").is_err());
     }
 
     #[test]

@@ -68,6 +68,25 @@ impl Fabric {
     pub fn build(cfg: FabricConfig) -> Result<Self> {
         cfg.validate()?;
         let topo = Topology::from_config(&cfg.noc)?;
+        Self::assemble(cfg, topo)
+    }
+
+    /// Build over an **explicit** topology — the DSE engine seam
+    /// (`dse::explorer`'s co-sim refinement): candidate topologies may
+    /// be shapes a `[noc]` section cannot express (rings, fat-trees,
+    /// chordal customs), so `cfg.noc` contributes only link/router
+    /// parameters here and the topology object is taken as-is. The
+    /// config is still structurally validated; capacity is checked
+    /// against the real node count during placement.
+    pub fn build_with_topology(cfg: FabricConfig, topo: Topology) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(topo.is_connected(), "candidate topology is disconnected");
+        Self::assemble(cfg, topo)
+    }
+
+    /// Shared placement tail of the two builders: tiles round-robin on
+    /// nodes 1.., node 0 hosts the HBM bridge.
+    fn assemble(cfg: FabricConfig, topo: Topology) -> Result<Self> {
         let mut tiles = Vec::new();
         let mut node = 1usize;
         for group in &cfg.cus {
@@ -229,5 +248,19 @@ cluster_cores = 8
     #[test]
     fn unknown_kind_rejected() {
         assert!(make_accelerator("tpu-v7").is_err());
+    }
+
+    #[test]
+    fn build_with_topology_places_on_custom_shapes() {
+        // A chordal ring is inexpressible as [noc]; the explicit-topology
+        // builder must place the same tiles on it, and reject shapes too
+        // small for the CU set.
+        let ring = Topology::ring(16).unwrap();
+        let f = Fabric::build_with_topology(cfg(), ring).unwrap();
+        assert_eq!(f.tile_count(), 7);
+        assert!(f.tiles.iter().all(|t| t.node != f.hbm_node));
+        assert_eq!(f.topo.nodes(), 16);
+        let tiny = Topology::ring(4).unwrap();
+        assert!(Fabric::build_with_topology(cfg(), tiny).is_err());
     }
 }

@@ -50,7 +50,7 @@ pub use calendar::{Calendar, StampedCalendar};
 pub use event::EventQueue;
 pub use event_wheel::EventWheel;
 pub use fault::{FaultConfig, FaultEvent, FaultKind, FaultPlan};
-pub use pool::{Scope, WorkerPool};
+pub use pool::{load_fences, Scope, WorkerPool};
 pub use rng::{CounterRng, Rng};
 pub use stats::StreamingHist;
 

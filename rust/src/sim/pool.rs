@@ -205,6 +205,61 @@ impl<'scope> Scope<'_, 'scope> {
     }
 }
 
+/// Contiguous shard fences `[0, f1, .., n]` over `weights`, splitting
+/// `weights.len()` items into at most `shards` non-empty ranges of
+/// roughly equal mass. This is the *load-aware* partitioner behind the
+/// shard-parallel engines (ROADMAP follow-up (l)): fences cut by
+/// accumulated weight instead of uniform item count, so one hot resource
+/// (an HBM queue, a busy DSE candidate group) no longer serializes its
+/// shard while the others idle.
+///
+/// Properties callers rely on:
+/// * fences are strictly increasing (every shard is non-empty), start at
+///   0 and end at `weights.len()`;
+/// * exactly `min(shards, weights.len())` ranges are produced — the same
+///   shard count the old uniform split gave, so thread fan-out never
+///   shrinks under a skewed history;
+/// * each weight is padded by +1 mass, so an all-zero history degrades
+///   to the old uniform count split instead of one giant shard;
+/// * the cut is greedy left-to-right: a range closes once its mass
+///   reaches its fair share of the mass still unassigned, or when the
+///   items left are exactly enough to give each remaining range one.
+///
+/// Determinism note: the *choice* of fences never affects simulation
+/// results — the shard contract guarantees bit-identical output for
+/// every valid partition (pinned by the partition-invariance property
+/// tests) — so callers may feed approximate, even stale, weights.
+pub fn load_fences(weights: &[u64], shards: usize) -> Vec<usize> {
+    let n = weights.len();
+    assert!(n > 0, "load_fences needs at least one item");
+    let shards = shards.clamp(1, n);
+    // u128 accumulators: n * (u64::MAX + 1) cannot overflow.
+    let mut rem: u128 = weights.iter().map(|&w| w as u128 + 1).sum();
+    let mut fences = Vec::with_capacity(shards + 1);
+    fences.push(0usize);
+    let mut acc: u128 = 0;
+    for (i, &w) in weights.iter().enumerate() {
+        let m = w as u128 + 1;
+        acc += m;
+        rem -= m;
+        let closed = fences.len() - 1;
+        // Ranges still to emit, counting the one currently open.
+        let open = (shards - closed) as u128;
+        let items_left = n - (i + 1);
+        let ranges_left = shards - closed - 1;
+        if closed + 1 < shards
+            && items_left >= ranges_left
+            && (acc * open >= acc + rem || items_left == ranges_left)
+        {
+            fences.push(i + 1);
+            acc = 0;
+        }
+    }
+    fences.push(n);
+    debug_assert!(fences.windows(2).all(|w| w[0] < w[1]));
+    fences
+}
+
 fn worker_loop(sh: &Shared) {
     loop {
         // Spin-then-park gate (module docs): the lock is taken only to
@@ -394,6 +449,47 @@ mod tests {
                 }
             });
             assert_eq!(counter.load(Ordering::SeqCst), round * 4);
+        }
+    }
+
+    #[test]
+    fn load_fences_uniform_when_history_is_cold() {
+        // All-zero weights (+1 padding) reduce to the old count split.
+        assert_eq!(load_fences(&[0; 8], 4), vec![0, 2, 4, 6, 8]);
+        assert_eq!(load_fences(&[0; 5], 2), vec![0, 3, 5]); // ceil-ish halves
+        assert_eq!(load_fences(&[0; 3], 1), vec![0, 3]);
+        // More shards than items: every item its own range, no empties.
+        assert_eq!(load_fences(&[0; 2], 8), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn load_fences_isolate_a_hot_item() {
+        // One item carries ~all the mass: it gets its own shard and the
+        // cold tail is shared out instead of serializing behind it.
+        let mut w = vec![0u64; 8];
+        w[0] = 1_000_000;
+        let f = load_fences(&w, 4);
+        assert_eq!(f[0], 0);
+        assert_eq!(f[1], 1, "hot head must be cut off immediately: {f:?}");
+        assert_eq!(*f.last().unwrap(), 8);
+        assert!(f.windows(2).all(|p| p[0] < p[1]), "non-empty shards: {f:?}");
+    }
+
+    #[test]
+    fn load_fences_are_always_a_valid_partition() {
+        // Adversarial shapes: hot tail, alternating, huge weights.
+        let cases: Vec<(Vec<u64>, usize)> = vec![
+            ((0..16).map(|i| if i == 15 { u64::MAX } else { 0 }).collect(), 4),
+            ((0..9).map(|i| (i % 2) * 1000).collect(), 3),
+            (vec![u64::MAX; 4], 4),
+            (vec![7], 5),
+        ];
+        for (w, shards) in cases {
+            let f = load_fences(&w, shards);
+            assert_eq!(f[0], 0);
+            assert_eq!(*f.last().unwrap(), w.len());
+            assert_eq!(f.len() - 1, shards.min(w.len()), "{f:?} vs {shards} shards");
+            assert!(f.windows(2).all(|p| p[0] < p[1]), "{f:?}");
         }
     }
 

@@ -1,0 +1,172 @@
+//! Golden tests for batched incremental DSE on the fast engines
+//! (`dse::sweep`) and the explorer's measurement-engine seam
+//! (`dse::explorer::SimEngine`).
+//!
+//! Contracts pinned here:
+//!
+//! * **Incremental ≡ rebuild-world** — on the golden sweep config
+//!   (`configs/dse_sweep.toml`, 96 candidate fabrics), the session-reuse
+//!   sweep (`dse::sweep`) is bit-identical to the rebuild-world oracle
+//!   (`dse::sweep_rebuild`): every makespan, every energy bit, every
+//!   per-program span. Config-diffs mapped onto `CosimSession::set_model`
+//!   invalidation move no bits vs a fresh world.
+//! * **Thread invariance** — the sweep's group fan-out returns the same
+//!   bits at every worker count (results merge in canonical candidate
+//!   order, never completion order).
+//! * **Method agreement** — with `sim_top_k = 1`, Exhaustive, MILP, SMT
+//!   and IterativeSim land on the same analytic optimum (compared by
+//!   `est_latency`, which is tie-safe where winner *names* are not), and
+//!   IterativeSim's winner carries a measurement.
+//! * **Analytic vs measured ranking sanity** — on the mixed post-CMOS
+//!   config (`configs/hetero_mixed.toml`, kind-aware cost model), the
+//!   co-sim engine fills latency *and* energy for the refined top-k, the
+//!   measured ranking is internally consistent, the Pareto front is
+//!   measured-only, and replay is bit-identical.
+
+use archytas::config::FabricConfig;
+use archytas::dse::{
+    explore, sweep, sweep_rebuild, ExploreConfig, ExploreMethod, SimEngine, SweepSpec,
+};
+
+fn golden_spec() -> SweepSpec {
+    let path = archytas::repo_root().join("configs/dse_sweep.toml");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    SweepSpec::from_toml(&text).expect("golden sweep config must parse")
+}
+
+#[test]
+fn incremental_sweep_matches_rebuild_oracle_bitwise() {
+    let spec = golden_spec();
+    assert_eq!(spec.candidates(), 96, "golden sweep shape drifted");
+    let inc = sweep(&spec).expect("incremental sweep");
+    let reb = sweep_rebuild(&spec).expect("rebuild-world oracle");
+    assert_eq!(inc.evals.len(), 96);
+    assert_eq!(reb.evals.len(), 96);
+    for (a, b) in inc.evals.iter().zip(&reb.evals) {
+        assert!(
+            a.bit_identical(b),
+            "candidate {} ({}/{}/{}/{}) diverged from the rebuild oracle:\n  inc {:?}\n  reb {:?}",
+            a.index,
+            a.topology,
+            a.mix,
+            a.model,
+            a.policy,
+            (a.makespan, a.energy_pj, a.bytes_moved),
+            (b.makespan, b.energy_pj, b.bytes_moved),
+        );
+    }
+    // Session economy: 12 groups × 2 policies vs 96 worlds; 3 re-prices
+    // per session walk the 4-model axis.
+    assert_eq!(inc.sessions, 24);
+    assert_eq!(inc.reprices, 72);
+    assert_eq!(reb.sessions, 96);
+    // Both pick the same winner, deterministically.
+    assert_eq!(inc.best(), reb.best());
+    // Every candidate actually simulated something.
+    for e in &inc.evals {
+        assert!(e.makespan > 0, "{}: empty makespan", e.index);
+        assert!(e.energy_pj.is_finite() && e.energy_pj > 0.0, "{}: bad energy", e.index);
+        assert_eq!(e.spans.len(), spec.programs, "{}: span count", e.index);
+    }
+}
+
+#[test]
+fn sweep_is_thread_invariant() {
+    let base = golden_spec();
+    let one = sweep(&base).expect("threads=1");
+    for threads in [2, 4, 8] {
+        let spec = SweepSpec { threads, ..base.clone() };
+        let many = sweep(&spec).expect("parallel sweep");
+        assert_eq!(many.evals.len(), one.evals.len());
+        for (a, b) in one.evals.iter().zip(&many.evals) {
+            assert!(
+                a.bit_identical(b),
+                "threads={threads}: candidate {} diverged",
+                a.index
+            );
+        }
+    }
+}
+
+#[test]
+fn explore_methods_agree_with_top1_refinement() {
+    let cfg = ExploreConfig { sim_top_k: 1, ..ExploreConfig::default() };
+    let ex = explore(&cfg, ExploreMethod::Exhaustive).unwrap();
+    let milp = explore(&cfg, ExploreMethod::Milp).unwrap();
+    let smt = explore(&cfg, ExploreMethod::Smt).unwrap();
+    let iter = explore(&cfg, ExploreMethod::IterativeSim).unwrap();
+    // Tie-safe agreement: compare the winning estimate, not the name —
+    // distinct families can score identically, and the solvers are free
+    // to break exact ties differently.
+    let lat = |r: &archytas::dse::ExploreResult| r.candidates[r.best].est_latency;
+    assert_eq!(lat(&ex).to_bits(), lat(&milp).to_bits(), "MILP winner estimate");
+    assert_eq!(lat(&ex).to_bits(), lat(&smt).to_bits(), "SMT winner estimate");
+    // With k = 1 IterativeSim refines exactly the analytic front-runner.
+    assert_eq!(lat(&ex).to_bits(), lat(&iter).to_bits(), "IterativeSim winner estimate");
+    assert_eq!(iter.sim_evals, 1);
+    assert!(iter.candidates[iter.best].sim_latency.is_some());
+    // The flit engine measures latency only; the analytic front stands.
+    assert!(iter.candidates[iter.best].sim_energy_pj.is_none());
+    assert_eq!(iter.front, ex.front);
+}
+
+#[test]
+fn cosim_engine_ranking_sanity_on_hetero_mixed() {
+    let path = archytas::repo_root().join("configs/hetero_mixed.toml");
+    let fabric_cfg = FabricConfig::from_toml(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let cfg = ExploreConfig {
+        min_nodes: 16,
+        max_area: 40.0,
+        sim_top_k: 3,
+        engine: SimEngine::Cosim,
+        fabric: Some(fabric_cfg),
+        ..ExploreConfig::default()
+    };
+    let r = explore(&cfg, ExploreMethod::IterativeSim).unwrap();
+    assert_eq!(r.sim_evals, 3, "three candidates must be co-sim measured");
+    let measured: Vec<_> =
+        r.candidates.iter().filter(|c| c.sim_latency.is_some()).collect();
+    assert_eq!(measured.len(), 3);
+    for c in &measured {
+        let lat = c.sim_latency.unwrap();
+        let en = c.sim_energy_pj.unwrap();
+        assert!(lat.is_finite() && lat > 0.0, "{}: bad measured latency {lat}", c.name);
+        assert!(en.is_finite() && en > 0.0, "{}: bad measured energy {en}", c.name);
+    }
+    // Measured ranking is internally consistent: the winner has the
+    // minimum measured latency among the refined set.
+    let best = &r.candidates[r.best];
+    assert!(measured
+        .iter()
+        .all(|c| c.sim_latency.unwrap() >= best.sim_latency.unwrap()));
+    // Under the co-sim engine the Pareto front mixes no analytic energy:
+    // every front member is a measured candidate.
+    assert!(!r.front.is_empty());
+    for &i in &r.front {
+        assert!(
+            r.candidates[i].sim_energy_pj.is_some(),
+            "front member {} is unmeasured",
+            r.candidates[i].name
+        );
+    }
+    // Bit-identical replay: measurement goes through the deterministic
+    // co-sim, so the full result reproduces exactly.
+    let r2 = explore(&cfg, ExploreMethod::IterativeSim).unwrap();
+    assert_eq!(r.best, r2.best);
+    assert_eq!(r.front, r2.front);
+    for (a, b) in r.candidates.iter().zip(&r2.candidates) {
+        assert_eq!(
+            a.sim_latency.map(f64::to_bits),
+            b.sim_latency.map(f64::to_bits),
+            "{}: latency replay",
+            a.name
+        );
+        assert_eq!(
+            a.sim_energy_pj.map(f64::to_bits),
+            b.sim_energy_pj.map(f64::to_bits),
+            "{}: energy replay",
+            a.name
+        );
+    }
+}
